@@ -1,0 +1,89 @@
+//! End-to-end serving driver (DESIGN.md §7): start the threaded server on
+//! the real trained model, submit batched requests dense and GLASS-sparse
+//! over TCP, and report latency/throughput + quality spot checks.
+//!
+//!     make artifacts && cargo run --release --example edge_serving
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+use glass::engine::Engine;
+use glass::server::client::{request, Client};
+use glass::server::protocol::Request;
+use glass::server::Server;
+use glass::util::stats::summarize;
+use glass::util::table::{fnum, Table};
+
+const N_REQUESTS: usize = 24;
+const MAX_TOKENS: usize = 48;
+
+fn main() -> Result<()> {
+    let engine = Engine::load(Path::new("artifacts"))?;
+    let server = Server::start(engine, "127.0.0.1:0", 4)?;
+    println!("server up at {}\n", server.addr);
+
+    let prompts = [
+        "once there was a red fox",
+        "the blue owl is",
+        "every morning the wolf",
+        "once there was a golden otter",
+        "the grey cat is quiet and",
+        "every dusk the raven",
+    ];
+
+    let mut table = Table::new(
+        "edge serving: batched requests over TCP (this host, 1 core)",
+        &[
+            "strategy",
+            "n",
+            "p50 latency ms",
+            "p95 latency ms",
+            "req/s",
+            "tok/s",
+        ],
+    );
+
+    let mut sample_outputs: Vec<(String, String)> = Vec::new();
+    for strategy in ["dense", "griffin", "i-glass"] {
+        let mut client = Client::connect(&server.addr)?;
+        let reqs: Vec<Request> = (0..N_REQUESTS)
+            .map(|i| {
+                let mut r =
+                    request(prompts[i % prompts.len()], strategy, 0.5);
+                r.max_tokens = MAX_TOKENS;
+                r
+            })
+            .collect();
+        let t0 = Instant::now();
+        let out = client.call_many(reqs)?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        let lat_ms: Vec<f64> = out
+            .iter()
+            .map(|(_, l)| l.as_secs_f64() * 1e3)
+            .collect();
+        let s = summarize(&lat_ms);
+        let total_tokens: usize = out.iter().map(|(r, _)| r.tokens).sum();
+        for (r, _) in &out {
+            assert!(r.error.is_none(), "{strategy}: {:?}", r.error);
+        }
+        table.row(vec![
+            strategy.to_string(),
+            format!("{N_REQUESTS}"),
+            fnum(s.p50, 1),
+            fnum(s.p95, 1),
+            fnum(N_REQUESTS as f64 / wall, 2),
+            fnum(total_tokens as f64 / wall, 1),
+        ]);
+        sample_outputs.push((strategy.to_string(), out[0].0.text.clone()));
+    }
+    println!("{}", table.to_ascii());
+
+    println!("sample outputs (same prompt, different strategies):");
+    for (strategy, text) in &sample_outputs {
+        println!("  {strategy:8} -> {:?}", &text[..text.len().min(70)]);
+    }
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Long-generation study: the paper's headline experiment (Tab. 2) on a
+//! configurable sample budget, printing per-strategy deviation PPL/KLD
+//! plus a worked sample showing trajectory drift.
+//!
+//!     cargo run --release --example long_generation_study -- [n_samples]
+
+use std::path::Path;
+
+use anyhow::Result;
+use glass::engine::Engine;
+use glass::glass::{GlobalPrior, PriorKind, Strategy};
+use glass::harness::lgeval::{eval_strategies, prepare_batch};
+use glass::harness::lg_prompts;
+use glass::util::table::{fnum, improvement_pct, mean_std, Table};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    let engine = Engine::load(Path::new("artifacts"))?;
+    let prompts = lg_prompts(&engine, n)?;
+    println!(
+        "LG study: {} short prompts, {} generated tokens each\n",
+        prompts.len(),
+        engine.spec().gen_len
+    );
+
+    let a_nps = GlobalPrior::load(&engine.rt, PriorKind::ANps)?;
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+    let strategies = vec![
+        ("GRIFFIN (local-only)".to_string(), Strategy::LocalOnly, None),
+        ("Global-only".to_string(), Strategy::GlobalOnly, Some(&a_nps)),
+        (
+            "A-GLASS (λ=0.5)".to_string(),
+            Strategy::Glass { lambda: 0.5 },
+            Some(&a_nps),
+        ),
+        (
+            "I-GLASS (λ=0.5)".to_string(),
+            Strategy::Glass { lambda: 0.5 },
+            Some(&i_nps),
+        ),
+        ("Oracle (post-hoc)".to_string(), Strategy::Oracle, None),
+        ("Random".to_string(), Strategy::Random { seed: 1 }, None),
+    ];
+    let results =
+        eval_strategies(&engine, &prompts, 4, &strategies, 0.5, 100)?;
+
+    let grif_ppl = results[0].1.ppl.mean;
+    let grif_kld = results[0].1.kld.mean;
+    let mut t = Table::new(
+        "deviation from dense @ 50% FFN sparsity",
+        &["strategy", "PPL (sem)", "vs GRIFFIN", "KLD (sem)", "vs GRIFFIN"],
+    );
+    for (name, m, _) in &results {
+        t.row(vec![
+            name.clone(),
+            mean_std(m.ppl.mean, m.ppl.sem(), 4),
+            format!("{:+.1}%", improvement_pct(grif_ppl, m.ppl.mean)),
+            mean_std(m.kld.mean, m.kld.sem(), 4),
+            format!("{:+.1}%", improvement_pct(grif_kld, m.kld.mean)),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+
+    // worked sample: show the dense trajectory and where sparse drifts
+    let batch = prepare_batch(&engine, &prompts[..1], 4)?;
+    let n_gen = batch.n_gen;
+    let dense_text =
+        engine.decode_text(&batch.dense.tokens.data[..n_gen]);
+    println!("worked sample:");
+    println!("  prompt:  {:?}", prompts[0]);
+    println!(
+        "  dense:   {:?}",
+        &dense_text[..dense_text.len().min(90)]
+    );
+    println!(
+        "\nper-strategy mean Jaccard of layer-0 masks to the oracle set:"
+    );
+    let oracle = glass::harness::lgeval::batch_masks(
+        &engine,
+        &batch,
+        &Strategy::Oracle,
+        None,
+        0.5,
+    )?;
+    for (name, strat, prior) in [
+        ("local", Strategy::LocalOnly, None),
+        ("global", Strategy::GlobalOnly, Some(&a_nps)),
+        ("fused", Strategy::Glass { lambda: 0.5 }, Some(&a_nps)),
+    ] {
+        let masks = glass::harness::lgeval::batch_masks(
+            &engine, &batch, &strat, prior, 0.5,
+        )?;
+        println!(
+            "  {name:7} {}",
+            fnum(masks[0].jaccard_mean(&oracle[0]), 3)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! On-device decode simulation (Fig. 5 / §4.5): replay the paper's three
+//! phone workloads across edge-device profiles and show where the
+//! residency transition produces the order-of-magnitude speedup.
+//!
+//!     cargo run --release --example ondevice_sim
+
+use anyhow::Result;
+use glass::harness::fig5::paper_workloads;
+use glass::memsim::{decode_speedup, simulate_decode, DeviceProfile};
+use glass::util::table::{fnum, Table};
+
+fn main() -> Result<()> {
+    for dev in DeviceProfile::all() {
+        let mut t = Table::new(
+            &format!(
+                "{} — decode @ 50% FFN density (RAM budget {:.1} GB)",
+                dev.name,
+                dev.ram_budget_bytes as f64 / 1e9
+            ),
+            &[
+                "workload",
+                "dense tok/s",
+                "GLASS tok/s",
+                "speedup",
+                "dense fits RAM",
+                "GLASS fits RAM",
+            ],
+        );
+        for (model, tokens, _paper) in paper_workloads() {
+            let (dense, sparse, speedup) =
+                decode_speedup(&dev, &model, 0.5, tokens);
+            t.row(vec![
+                model.name.clone(),
+                fnum(dense.tokens_per_s, 1),
+                fnum(sparse.tokens_per_s, 1),
+                format!("{speedup:.2}x"),
+                format!("{}", dense.resident),
+                format!("{}", sparse.resident),
+            ]);
+        }
+        println!("{}", t.to_ascii());
+    }
+
+    // density sweep on the headline case: watch the cliff where the
+    // working set crosses the RAM budget
+    let dev = DeviceProfile::galaxy_s25_ultra();
+    let gemma = &paper_workloads()[2].0;
+    let mut sweep = Table::new(
+        "gemma-7b-bf16 on galaxy-s25-ultra: density sweep",
+        &["FFN density %", "tok/s", "resident", "paging ms/tok"],
+    );
+    for d10 in (1..=10).rev() {
+        let d = d10 as f64 / 10.0;
+        let r = simulate_decode(&dev, gemma, d, 64);
+        sweep.row(vec![
+            format!("{:.0}", d * 100.0),
+            fnum(r.tokens_per_s, 1),
+            format!("{}", r.resident),
+            fnum(r.paging_s / r.tokens as f64 * 1e3, 2),
+        ]);
+    }
+    println!("{}", sweep.to_ascii());
+    println!(
+        "note: the jump where `resident` flips is the paper's ~11x case —\n\
+         static 50% FFN masking shrinks the working set under the RAM\n\
+         budget and per-token flash paging disappears."
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: load the artifact bundle, run one prompt dense and with
+//! I-GLASS at 50% FFN sparsity, and compare.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use glass::engine::session::{run_dense_batch, run_sparse_batch};
+use glass::engine::Engine;
+use glass::glass::{GlobalPrior, PriorKind, Strategy};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let engine = Engine::load(Path::new("artifacts"))?;
+    let spec = engine.spec().clone();
+    println!(
+        "loaded model: {} layers, d={}, ffn_m={}, {:.1} MB weights\n",
+        spec.n_layers,
+        spec.d_model,
+        spec.ffn_m,
+        engine.rt.weight_bytes() as f64 / 1e6
+    );
+
+    let prompt = "once there was a red fox".to_string();
+    println!("prompt: {prompt:?}\n");
+
+    // dense reference
+    let t0 = std::time::Instant::now();
+    let dense = run_dense_batch(&engine, &[prompt.clone()], 1)?;
+    let n = dense.tokens.shape[1];
+    let dense_text = engine.decode_text(&dense.tokens.data[..n]);
+    println!(
+        "dense   ({:5.1} ms): {dense_text:?}",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // GLASS: prefill -> local stats -> rank-fuse with the NPS prior ->
+    // static 50% mask -> sparse decode
+    let prior = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+    let t1 = std::time::Instant::now();
+    let sparse = run_sparse_batch(
+        &engine,
+        &[prompt.clone()],
+        &Strategy::Glass { lambda: 0.5 },
+        Some(&prior),
+        0.5,
+        1,
+    )?;
+    println!(
+        "i-glass ({:5.1} ms): {:?}",
+        t1.elapsed().as_secs_f64() * 1e3,
+        sparse.texts[0]
+    );
+    println!(
+        "\nmask: {:.0}% of FFN neurons kept per layer (k={} of m={})",
+        sparse.masks[0].density() * 100.0,
+        sparse.masks[0].layers[0].len(),
+        spec.ffn_m
+    );
+    let same = dense_text
+        .chars()
+        .zip(sparse.texts[0].chars())
+        .take_while(|(a, b)| a == b)
+        .count();
+    println!(
+        "dense/sparse agree on the first {same} characters of {}",
+        dense_text.len().min(sparse.texts[0].len())
+    );
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT export: lower every L2 graph to HLO text + write the artifact bundle.
+
+Python runs ONCE (`make artifacts`); the Rust binary is self-contained
+afterwards. Interchange is HLO *text* — the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids); the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifact bundle (artifacts/):
+  manifest.json        — executable I/O contracts + param layout + paths
+  model.json           — ModelConfig
+  params.bin           — f32 raw little-endian, leaves in flatten order
+  *.hlo.txt            — one per executable variant
+  priors/*.bin         — A^g / I^g global priors (NPS + corpus), [L, m] f32
+  data/*.json          — benchmark sets
+  train_log.json       — build-time training curve
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import nps as nps_mod
+from . import train as train_mod
+from .model import (
+    ModelConfig,
+    apply_decode,
+    apply_decode_topk,
+    apply_generate,
+    apply_prefill,
+    apply_score,
+    flatten_params,
+    param_spec,
+)
+
+BATCH_SIZES = (1, 4)
+TOPK_K = 256  # 50% of ffn_m — the paper's headline operating point
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_of(x):
+    return [int(s) for s in x.shape]
+
+
+def build_executables(cfg: ModelConfig):
+    """Return {name: (fn, operand_specs, operand_names, output_names)}.
+
+    Every fn takes (params, *operands); lowering flattens params into the
+    leading HLO parameters (flatten order == manifest param order).
+    """
+    L, m, T = cfg.n_layers, cfg.ffn_m, cfg.max_seq
+    H, Dh, V = cfg.n_heads, cfg.head_dim, cfg.vocab
+    S, SS, K = cfg.prefill_len, cfg.score_len, TOPK_K
+    exes = {}
+
+    for b in BATCH_SIZES:
+        kv = _spec((L, b, H, T, Dh))
+        exes[f"prefill_b{b}"] = (
+            lambda p, t, ln: apply_prefill(cfg, p, t, ln),
+            [_spec((b, S), jnp.int32), _spec((b,), jnp.int32)],
+            ["tokens", "lens"],
+            ["logits", "k", "v", "stats"],
+        )
+        exes[f"decode_b{b}"] = (
+            lambda p, t, pos, k, v, msk: apply_decode(cfg, p, t, pos, k, v,
+                                                      msk),
+            [_spec((b,), jnp.int32), _spec((b,), jnp.int32), kv, kv,
+             _spec((b, L, m))],
+            ["token", "pos", "k", "v", "mask"],
+            ["logits", "k", "v", "stats"],
+        )
+        exes[f"decode_topk_b{b}"] = (
+            lambda p, t, pos, k, v, idx: apply_decode_topk(cfg, p, t, pos,
+                                                           k, v, idx),
+            [_spec((b,), jnp.int32), _spec((b,), jnp.int32), kv, kv,
+             _spec((b, L, K), jnp.int32)],
+            ["token", "pos", "k", "v", "idx"],
+            ["logits", "k", "v", "gstats"],
+        )
+        exes[f"score_b{b}"] = (
+            lambda p, t, w, msk: apply_score(cfg, p, t, w, msk),
+            [_spec((b, SS), jnp.int32), _spec((b, SS)), _spec((b, L, m))],
+            ["tokens", "stats_w", "mask"],
+            ["logits", "stats"],
+        )
+        exes[f"generate_b{b}"] = (
+            lambda p, t, ln, msk: apply_generate(cfg, p, t, ln, msk),
+            [_spec((b, S), jnp.int32), _spec((b,), jnp.int32),
+             _spec((b, L, m))],
+            ["tokens", "lens", "mask"],
+            ["gen_tokens", "gen_logits", "gen_stats"],
+        )
+    return exes
+
+
+def lower_all(cfg: ModelConfig, art_dir: str, only=None):
+    from .model import init_params
+
+    spec = param_spec(cfg)
+    pspecs = [_spec(s) for _, s in spec]
+    treedef = jax.tree_util.tree_structure(
+        jax.eval_shape(lambda: init_params(cfg))
+    )
+    params_tree = jax.tree_util.tree_unflatten(treedef, pspecs)
+    manifest_exes = {}
+    for name, (fn, ospecs, onames, outnames) in build_executables(cfg).items():
+        if only and name not in only:
+            continue
+        path = os.path.join(art_dir, f"{name}.hlo.txt")
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(params_tree, *ospecs)
+        outs = jax.eval_shape(fn, params_tree, *ospecs)
+        outs_flat = jax.tree_util.tree_leaves(outs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_exes[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": (
+                [{"name": n, "shape": list(s), "dtype": "f32"}
+                 for n, s in spec]
+                + [{"name": n, "shape": _shape_of(o),
+                    "dtype": "i32" if o.dtype == jnp.int32 else "f32"}
+                   for n, o in zip(onames, ospecs)]
+            ),
+            "n_params": len(spec),
+            "outputs": [
+                {"name": n, "shape": _shape_of(o),
+                 "dtype": "i32" if o.dtype == jnp.int32 else "f32"}
+                for n, o in zip(outnames, outs_flat)
+            ],
+        }
+        print(f"[aot]   wrote {path} ({len(text)} chars)")
+    return manifest_exes, spec
+
+
+def write_params_bin(art_dir, params, spec):
+    leaves = flatten_params(params)
+    assert len(leaves) == len(spec)
+    offsets = []
+    off = 0
+    with open(os.path.join(art_dir, "params.bin"), "wb") as f:
+        for (name, shape), leaf in zip(spec, leaves):
+            arr = np.asarray(leaf, dtype="<f4")
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            offsets.append({"name": name, "shape": list(shape),
+                            "offset": off, "numel": int(arr.size)})
+            f.write(arr.tobytes())
+            off += arr.size * 4
+    return offsets
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="manifest output path (default artifacts/manifest.json)")
+    ap.add_argument("--art-dir", default=None)
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="lower only these executables")
+    args = ap.parse_args()
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+    art_dir = args.art_dir or os.path.join(root, "artifacts")
+    os.makedirs(art_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    with open(os.path.join(art_dir, "model.json"), "w") as f:
+        f.write(cfg.to_json())
+
+    params = train_mod.ensure_trained(cfg, art_dir, steps=args.train_steps)
+    priors = nps_mod.compute_priors(cfg, params, art_dir)
+    del priors
+    data_mod.write_datasets(art_dir)
+
+    exes, spec = lower_all(cfg, art_dir, only=args.only)
+    param_layout = write_params_bin(art_dir, params, spec)
+
+    manifest = {
+        "version": 1,
+        "model": dataclasses.asdict(cfg),
+        "topk_k": TOPK_K,
+        "params_file": "params.bin",
+        "params": param_layout,
+        "executables": exes,
+        "priors": {
+            n: f"priors/{n}.bin"
+            for n in ["a_nps", "i_nps", "a_corpus", "i_corpus"]
+        },
+        "data": {"lg": "data/lg.json", "cls": "data/cls.json",
+                 "sg": "data/sg.json"},
+    }
+    out = args.out or os.path.join(art_dir, "manifest.json")
+    with open(out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

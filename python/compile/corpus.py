@@ -1,0 +1,204 @@
+"""Deterministic grammar-world corpus generator.
+
+Substitute for the paper's natural-language corpora (WikiText for priors,
+Alpaca for the LG benchmark). A small templated grammar over a fixed
+"world" of entities/attributes/relations produces English-like text with
+enough structure for a ~1M-param byte-level LM to learn non-trivial
+next-token statistics — which is all GLASS's activation-statistics
+machinery needs. Everything is seeded and reproducible.
+
+Splits (disjoint by construction, via seed domains):
+  train   — LM training text
+  prior   — "corpus prior" estimation text (WikiText substitute, Tab. 3)
+  oracle  — held-out text for the oracle-overlap analysis (Tab. 5 / Fig. 1)
+  eval    — source of LG/classification/short-gen benchmark items
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------- world ---
+
+ANIMALS = [
+    "fox", "dog", "cat", "owl", "wolf", "bear", "hare", "crow", "deer",
+    "frog", "mouse", "horse", "lynx", "otter", "raven", "swan",
+]
+COLORS = [
+    "red", "blue", "green", "grey", "black", "white", "brown", "golden",
+    "silver", "amber",
+]
+TRAITS = [
+    "quick", "lazy", "clever", "quiet", "brave", "gentle", "hungry",
+    "sleepy", "curious", "careful", "proud", "shy",
+]
+PLACES = [
+    "river", "forest", "meadow", "hill", "lake", "valley", "garden",
+    "bridge", "cave", "shore",
+]
+WEATHERS = ["sunny", "rainy", "windy", "cloudy", "snowy", "foggy", "clear"]
+TIMES = ["morning", "noon", "evening", "night", "dawn", "dusk"]
+VERBS = [
+    "runs", "jumps", "sleeps", "hunts", "sings", "swims", "hides",
+    "watches", "waits", "plays", "rests", "drinks",
+]
+NUMBER_WORDS = [
+    "zero", "one", "two", "three", "four", "five", "six", "seven",
+    "eight", "nine", "ten", "eleven", "twelve",
+]
+
+
+def number_word(n: int) -> str:
+    return NUMBER_WORDS[n]
+
+
+# ---------------------------------------------------------- sentence fns ---
+
+
+def _s_scene(rng: random.Random) -> str:
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    t = rng.choice(TRAITS)
+    v = rng.choice(VERBS)
+    p = rng.choice(PLACES)
+    return f"the {c} {a} is {t} and {v} near the {p}."
+
+
+def _s_weather(rng: random.Random) -> str:
+    w = rng.choice(WEATHERS)
+    tm = rng.choice(TIMES)
+    return f"in the {tm} the weather is {w}."
+
+
+def _s_relation(rng: random.Random) -> str:
+    a1, a2 = rng.sample(ANIMALS, 2)
+    v = rng.choice(VERBS)
+    p = rng.choice(PLACES)
+    return f"the {a1} {v} beside the {a2} at the {p}."
+
+
+def _s_arith(rng: random.Random) -> str:
+    x = rng.randint(0, 6)
+    y = rng.randint(0, 6)
+    return f"{number_word(x)} plus {number_word(y)} is {number_word(x + y)}."
+
+
+def _s_count(rng: random.Random) -> str:
+    n = rng.randint(2, 9)
+    a = rng.choice(ANIMALS)
+    p = rng.choice(PLACES)
+    return f"{number_word(n)} {a}s live by the {p}."
+
+
+def _s_qa_color(rng: random.Random) -> str:
+    # context-bound QA: answer is derivable from the context sentence, so
+    # the LM learns to copy from context (CoQA/QASPER substitute skill).
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    v = rng.choice(VERBS)
+    p = rng.choice(PLACES)
+    return (f"the {c} {a} {v} near the {p}. "
+            f"Q: what color is the {a}? A: {c}.")
+
+
+def _s_qa_place(rng: random.Random) -> str:
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    p = rng.choice(PLACES)
+    v = rng.choice(VERBS)
+    return (f"the {c} {a} {v} near the {p}. "
+            f"Q: where is the {a}? A: near the {p}.")
+
+
+def _s_bool(rng: random.Random) -> str:
+    # BoolQ substitute: yes/no grounded in the context sentence.
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    if rng.random() < 0.5:
+        c2, ans = c, "yes"
+    else:
+        c2 = rng.choice([x for x in COLORS if x != c])
+        ans = "no"
+    return f"the {a} is {c}. Q: is the {a} {c2}? A: {ans}."
+
+
+def _s_summary(rng: random.Random) -> str:
+    # XSum/CNN-DM substitute: short passage followed by a one-line summary
+    # in a fixed format the LM can learn to produce. Kept under ~80 bytes
+    # so eval prompts fit the prefill window.
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    t = rng.choice(TRAITS)
+    p = rng.choice(PLACES)
+    tm = rng.choice(TIMES)
+    v1 = rng.choice(VERBS)
+    passage = f"the {c} {a} who was very {t} {v1} near the {p} every {tm}."
+    return f"{passage} summary: the {t} {c} {a} stayed near the {p}."
+
+
+def _s_story(rng: random.Random) -> str:
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    t = rng.choice(TRAITS)
+    p = rng.choice(PLACES)
+    w = rng.choice(WEATHERS)
+    tm = rng.choice(TIMES)
+    v1, v2 = rng.sample(VERBS, 2)
+    return (
+        f"once there was a {c} {a} who was very {t}. "
+        f"every {tm} the {a} {v1} near the {p}. "
+        f"when the weather turned {w}, the {a} {v2} until the next {tm}."
+    )
+
+
+SENTENCE_FNS = [
+    (_s_scene, 4),
+    (_s_weather, 2),
+    (_s_relation, 3),
+    (_s_arith, 2),
+    (_s_count, 2),
+    (_s_qa_color, 2),
+    (_s_qa_place, 2),
+    (_s_bool, 2),
+    (_s_summary, 2),
+    (_s_story, 3),
+]
+
+_FNS = [f for f, w in SENTENCE_FNS for _ in range(w)]
+
+
+@dataclass
+class CorpusConfig:
+    seed: int = 0
+    n_chars: int = 400_000
+
+
+SPLIT_SEEDS = {"train": 1000, "prior": 2000, "oracle": 3000, "eval": 4000}
+
+
+def generate_text(split: str, n_chars: int, seed: int = 0) -> str:
+    """Generate `split` text of at least n_chars characters."""
+    if split not in SPLIT_SEEDS:
+        raise ValueError(f"unknown split {split!r}")
+    rng = random.Random(SPLIT_SEEDS[split] + seed * 17)
+    parts: list[str] = []
+    total = 0
+    while total < n_chars:
+        s = rng.choice(_FNS)(rng)
+        parts.append(s)
+        total += len(s) + 1
+    return " ".join(parts)
+
+
+def story_prompt(rng: random.Random) -> str:
+    """Short LG-benchmark prompt (Alpaca substitute): <=32 bytes-ish."""
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    return f"once there was a {c} {a}"
+
+
+if __name__ == "__main__":
+    for split in SPLIT_SEEDS:
+        t = generate_text(split, 2000)
+        print(split, len(t), repr(t[:120]))

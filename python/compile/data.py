@@ -1,0 +1,258 @@
+"""Benchmark-set generators (evaluation-data substitutes, DESIGN.md §3).
+
+Emits artifacts/data/*.json consumed by the Rust eval harness:
+
+  lg.json   — Long-Generation benchmark (Alpaca substitute): short story
+              prompts; the dense model's greedy continuation defines the
+              reference trajectory (PPL/KLD protocol of Sec. 4 / App. B.2).
+  cls.json  — six MCQ families mapped to the paper's classification
+              benchmarks (HellaSwag/PIQA/COPA/ARC-E/ARC-C/BoolQ):
+              0-shot unnormalized logprob scoring.
+  sg.json   — short-form generation (XSum/CNN-DM/CoQA/QASPER substitutes):
+              summarization (ROUGE-1/2/L) and extractive QA (F1/EM).
+
+All items are drawn from the *eval* seed domain — disjoint from the
+training, prior, and oracle splits.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import random
+
+from .corpus import (
+    ANIMALS,
+    COLORS,
+    NUMBER_WORDS,
+    PLACES,
+    TIMES,
+    TRAITS,
+    VERBS,
+    number_word,
+)
+
+EVAL_SEED = 991
+
+
+# ----------------------------------------------------------------- LG ----
+
+
+def gen_lg(n: int, rng: random.Random):
+    """Short prompts (<=48 bytes) for long-form generation.
+
+    Deliberately spans ALL the grammar's task families (stories, QA,
+    arithmetic, yes/no, summaries, weather, counting) — mirroring why the
+    paper picked Alpaca: prompt diversity is what makes the local signal
+    informative and a static global mask unreliable (App. C.1's variance
+    observation).
+    """
+    prompts = []
+    seen = set()
+    while len(prompts) < n:
+        a = rng.choice(ANIMALS)
+        c = rng.choice(COLORS)
+        t = rng.choice(TRAITS)
+        p_ = rng.choice(PLACES)
+        tm = rng.choice(TIMES)
+        v = rng.choice(VERBS)
+        style = rng.randrange(8)
+        if style == 0:
+            p = f"once there was a {c} {a}"
+        elif style == 1:
+            p = f"the {c} {a} is"
+        elif style == 2:
+            p = f"every {tm} the {a}"
+        elif style == 3:
+            p = f"the {c} {a} {v} near the {p_}. Q:"
+        elif style == 4:
+            x, y = rng.randrange(7), rng.randrange(7)
+            p = (f"{number_word(x)} plus {number_word(y)} is "
+                 f"{number_word(x + y)}. {number_word(rng.randrange(7))}")
+        elif style == 5:
+            p = f"the {a} is {c}. Q: is the {a}"
+        elif style == 6:
+            p = f"the {c} {a} who was very {t}"
+        else:
+            p = f"in the {tm} the weather is"
+        if p in seen or len(p) > 60:
+            continue
+        seen.add(p)
+        prompts.append(p)
+    return {"name": "lg_alpaca_sub", "prompts": prompts}
+
+
+# -------------------------------------------------------- classification --
+
+
+def _cls_hellaswag(rng):
+    """Continuation plausibility: pick the in-grammar ending."""
+    a, c, t, v, p = (rng.choice(ANIMALS), rng.choice(COLORS),
+                     rng.choice(TRAITS), rng.choice(VERBS),
+                     rng.choice(PLACES))
+    ctx = f"the {c} {a} is {t} and"
+    good = f" {v} near the {p}."
+    bads = [
+        f" the {rng.choice(PLACES)} {rng.choice(COLORS)} plus.",
+        f" {number_word(rng.randrange(9))} weather {rng.choice(ANIMALS)}.",
+        f" is is near {rng.choice(TRAITS)} the.",
+    ]
+    opts = [good] + bads
+    order = list(range(4))
+    rng.shuffle(order)
+    return {"family": "hellaswag", "context": ctx,
+            "options": [opts[i] for i in order],
+            "answer": order.index(0)}
+
+
+def _cls_piqa(rng):
+    """Physical plausibility: animals drink at water places."""
+    a = rng.choice(ANIMALS)
+    water = rng.choice(["river", "lake", "shore"])
+    dry = rng.choice(["hill", "cave", "bridge"])
+    ctx = f"the {a} is hungry and drinks at the"
+    opts = [f" {water}.", f" {dry}."]
+    order = [0, 1] if rng.random() < 0.5 else [1, 0]
+    return {"family": "piqa", "context": ctx,
+            "options": [opts[i] for i in order],
+            "answer": order.index(0)}
+
+
+def _cls_copa(rng):
+    """Cause/effect: grammar-consistent consequence."""
+    a = rng.choice(ANIMALS)
+    tm = rng.choice(TIMES)
+    ctx = f"in the {tm} the weather is rainy. the {a}"
+    good = f" hides near the {rng.choice(PLACES)}."
+    bad = f" {number_word(rng.randrange(9))} plus the {rng.choice(COLORS)}."
+    order = [0, 1] if rng.random() < 0.5 else [1, 0]
+    opts = [good, bad]
+    return {"family": "copa", "context": ctx,
+            "options": [opts[i] for i in order],
+            "answer": order.index(0)}
+
+
+def _cls_arc_e(rng):
+    """Arithmetic (easy: distant distractor)."""
+    x, y = rng.randrange(5), rng.randrange(5)
+    s = x + y
+    wrong = (s + rng.randrange(3, 6)) % 13
+    ctx = f"{number_word(x)} plus {number_word(y)} is"
+    opts = [f" {number_word(s)}.", f" {number_word(wrong)}."]
+    order = [0, 1] if rng.random() < 0.5 else [1, 0]
+    return {"family": "arc_e", "context": ctx,
+            "options": [opts[i] for i in order],
+            "answer": order.index(0)}
+
+
+def _cls_arc_c(rng):
+    """Arithmetic (challenge: 4 close distractors)."""
+    # keep s >= 3 so that {s-2..s+2}\{s} always has >= 3 distinct values
+    x, y = rng.randrange(1, 6), rng.randrange(2, 6)
+    s = x + y
+    cands = {s}
+    while len(cands) < 4:
+        cands.add(max(0, min(12, s + rng.choice([-2, -1, 1, 2]))))
+    cands = list(cands)
+    rng.shuffle(cands)
+    ctx = f"{number_word(x)} plus {number_word(y)} is"
+    return {"family": "arc_c", "context": ctx,
+            "options": [f" {number_word(c)}." for c in cands],
+            "answer": cands.index(s)}
+
+
+def _cls_boolq(rng):
+    a = rng.choice(ANIMALS)
+    c = rng.choice(COLORS)
+    if rng.random() < 0.5:
+        c2, ans = c, 0
+    else:
+        c2, ans = rng.choice([x for x in COLORS if x != c]), 1
+    ctx = f"the {a} is {c}. Q: is the {a} {c2}? A:"
+    return {"family": "boolq", "context": ctx,
+            "options": [" yes.", " no."], "answer": ans}
+
+
+CLS_FAMILIES = {
+    "hellaswag": _cls_hellaswag,
+    "piqa": _cls_piqa,
+    "copa": _cls_copa,
+    "arc_e": _cls_arc_e,
+    "arc_c": _cls_arc_c,
+    "boolq": _cls_boolq,
+}
+
+
+def gen_cls(n_per_family: int, rng: random.Random):
+    items = []
+    for fam, fn in CLS_FAMILIES.items():
+        for _ in range(n_per_family):
+            items.append(fn(rng))
+    return {"name": "cls_sub", "items": items}
+
+
+# ------------------------------------------------------------------ SG ----
+
+
+def _sg_sum(rng, family):
+    a, c, t, p, tm = (rng.choice(ANIMALS), rng.choice(COLORS),
+                      rng.choice(TRAITS), rng.choice(PLACES),
+                      rng.choice(TIMES))
+    v1 = rng.choice(VERBS)
+    # short passage (fits the prefill window incl. BOS; mirrors the
+    # corpus _s_summary pattern so the LM knows the format)
+    passage = f"the {c} {a} who was very {t} {v1} near the {p} every {tm}."
+    prompt = f"{passage} summary:"
+    ref = f"the {t} {c} {a} stayed near the {p}."
+    return {"family": family, "prompt": prompt, "reference": ref,
+            "metric": "rouge"}
+
+
+def _sg_qa_color(rng, family):
+    a, c, v, p = (rng.choice(ANIMALS), rng.choice(COLORS),
+                  rng.choice(VERBS), rng.choice(PLACES))
+    prompt = (f"the {c} {a} {v} near the {p}. "
+              f"Q: what color is the {a}? A:")
+    return {"family": family, "prompt": prompt, "reference": c,
+            "metric": "qa"}
+
+
+def _sg_qa_place(rng, family):
+    a, c, v, p = (rng.choice(ANIMALS), rng.choice(COLORS),
+                  rng.choice(VERBS), rng.choice(PLACES))
+    prompt = (f"the {c} {a} {v} near the {p}. "
+              f"Q: where is the {a}? A:")
+    return {"family": family, "prompt": prompt, "reference": f"near the {p}",
+            "metric": "qa"}
+
+
+def gen_sg(n_per_family: int, rng: random.Random):
+    items = []
+    for _ in range(n_per_family):
+        items.append(_sg_sum(rng, "xsum"))
+    for _ in range(n_per_family):
+        items.append(_sg_sum(rng, "cnndm"))
+    for _ in range(n_per_family):
+        items.append(_sg_qa_color(rng, "coqa"))
+    for _ in range(n_per_family):
+        items.append(_sg_qa_place(rng, "qasper"))
+    return {"name": "sg_sub", "items": items}
+
+
+# ---------------------------------------------------------------- driver --
+
+
+def write_datasets(art_dir: str, n_lg=256, n_cls=40, n_sg=32):
+    ddir = os.path.join(art_dir, "data")
+    os.makedirs(ddir, exist_ok=True)
+    rng = random.Random(EVAL_SEED)
+    sets = {
+        "lg.json": gen_lg(n_lg, rng),
+        "cls.json": gen_cls(n_cls, rng),
+        "sg.json": gen_sg(n_sg, rng),
+    }
+    for fname, obj in sets.items():
+        with open(os.path.join(ddir, fname), "w") as f:
+            json.dump(obj, f, indent=1)
+        print(f"[data] wrote {fname}")
+    return sets

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle implementations for the L1 kernels.
+
+Everything here is straight-line jnp with no Pallas, no tiling, no
+accumulation tricks — the reference semantics the kernels must match.
+pytest/hypothesis sweep shapes and dtypes against these (python/tests/).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gated_ffn_ref(x, w_up, w_gate, w_down):
+    """Dense gated FFN (paper Eq. 1 with phi_u = id, phi_g = silu)."""
+    h = (x @ w_up) * jax.nn.silu(x @ w_gate)
+    return h @ w_down, h
+
+
+def masked_ffn_ref(x, mask, w_up, w_gate, w_down):
+    """Multiplicative-mask FFN: h_j zeroed where mask_j == 0 (Eq. 2-3)."""
+    h = (x @ w_up) * jax.nn.silu(x @ w_gate) * mask
+    return h @ w_down
+
+
+def sparse_ffn_ref(x, idx, w_up, w_gate, w_down):
+    """Gathered FFN over index set idx: [B, K].
+
+    Returns (y [B, d], habs [B, K] = ℓ2-normalized |h| of gathered units).
+    Semantically equal to masked_ffn_ref with a 0/1 mask built from idx
+    (when idx has no duplicates).
+    """
+    wu = jnp.take(w_up, idx, axis=1)  # [d, B, K] -> move batch out
+    wu = jnp.moveaxis(wu, 1, 0)  # [B, d, K]
+    wg = jnp.moveaxis(jnp.take(w_gate, idx, axis=1), 1, 0)
+    wd = jnp.take(w_down, idx, axis=0)  # [B, K, d]
+    zu = jnp.einsum("bd,bdk->bk", x, wu)
+    zg = jnp.einsum("bd,bdk->bk", x, wg)
+    h = zu * jax.nn.silu(zg)
+    y = jnp.einsum("bk,bkd->bd", h, wd)
+    habs = jnp.abs(h) / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
+    return y, habs
+
+
+def mask_from_idx(idx, m):
+    """0/1 mask [B, m] from index set [B, K] (assumes unique ids)."""
+    b, _ = idx.shape
+    mask = jnp.zeros((b, m), jnp.float32)
+    return mask.at[jnp.arange(b)[:, None], idx].set(1.0)

@@ -1,0 +1,141 @@
+"""L1 — Pallas kernel: gathered gated FFN over a static top-k neuron set.
+
+This is the compute hot-spot of GLASS's decode phase. Given the per-request
+critical-neuron index set ``idx`` (built by the L3 rank-aggregation step),
+the kernel computes only the k selected hidden units:
+
+    h_k = (x @ W_up[:, idx]) * silu(x @ W_gate[:, idx])
+    y   = h_k @ W_down[idx, :]
+
+so FLOPs and FFN weight traffic scale with k instead of m — the paper's
+"compact FFN subset" realized as computation.
+
+Hardware adaptation (DESIGN.md §4): the paper's on-device numbers come from
+a phone runtime; on TPU the natural shape is k-tiled panels staged
+HBM→VMEM and fed to the MXU as dense [d, k_tile] matmuls. The grid below
+is (batch, k/block_k): each step gathers one k-panel of the three weight
+matrices and accumulates the down-projection. With ``interpret=True``
+(mandatory on this CPU-only image — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute) the same schedule runs as
+plain XLA ops; VMEM/MXU behaviour is estimated analytically in DESIGN.md §8.
+
+Correctness is pinned to ``ref.sparse_ffn_ref`` by pytest + hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+
+
+def sparse_ffn_pallas(x, idx, w_up, w_gate, w_down, *, block_k=DEFAULT_BLOCK_K):
+    """Gathered gated FFN.
+
+    x:      [B, d]   f32 input activations
+    idx:    [B, K]   i32 neuron ids (any order; need not be sorted)
+    w_up:   [d, m]   f32
+    w_gate: [d, m]   f32
+    w_down: [m, d]   f32
+    Returns (y [B, d], habs [B, K]) where habs are the ℓ2-normalized
+    magnitudes of the gathered hidden units (stats for drift monitoring).
+    """
+    b, d = x.shape
+    k = idx.shape[1]
+    if k % block_k != 0:
+        block_k = k  # tiny shapes (tests): single panel
+    nk = k // block_k
+
+    def kernel(x_ref, idx_ref, wu_ref, wg_ref, wd_ref, y_ref, h_ref):
+        # one (batch row, k-panel) step
+        xv = x_ref[...]  # [1, d]
+        ids = idx_ref[...][0]  # [block_k]
+        wu = wu_ref[...][:, ids]  # gather panel [d, block_k]
+        wg = wg_ref[...][:, ids]
+        wd = wd_ref[...][ids, :]  # [block_k, d]
+        zu = xv @ wu
+        zg = xv @ wg
+        h = zu * jax.nn.sigmoid(zg) * zg  # silu(zg) = zg*sigmoid(zg)
+        h_ref[...] = h
+        contrib = h @ wd
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            y_ref[...] = jnp.zeros_like(y_ref)
+
+        y_ref[...] += contrib
+
+    grid = (b, nk)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (i, j)),
+            pl.BlockSpec((d, w_up.shape[1]), lambda i, j: (0, 0)),
+            pl.BlockSpec((d, w_gate.shape[1]), lambda i, j: (0, 0)),
+            pl.BlockSpec((w_down.shape[0], d), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=True,
+    )(x, idx, w_up, w_gate, w_down)
+    # h currently holds raw gathered h; normalize magnitudes per token.
+    habs = jnp.abs(h) / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
+    return y, habs
+
+
+def masked_ffn_pallas(x, mask, w_up, w_gate, w_down, *, block_m=128):
+    """Masked (multiplicative) gated FFN as a Pallas kernel.
+
+    Kept for kernel-level parity tests and TPU schedule experiments; the
+    production masked path uses the fused XLA version in model.py (faster
+    under interpret-mode lowering).
+
+    x: [B, d]; mask: [B, m]; returns y [B, d].
+    """
+    b, d = x.shape
+    m = mask.shape[1]
+    if m % block_m != 0:
+        block_m = m
+    nm = m // block_m
+
+    def kernel(x_ref, mask_ref, wu_ref, wg_ref, wd_ref, y_ref):
+        xv = x_ref[...]  # [1, d]
+        mk = mask_ref[...]  # [1, block_m]
+        wu = wu_ref[...]  # [d, block_m]
+        wg = wg_ref[...]
+        wd = wd_ref[...]  # [block_m, d]
+        zu = xv @ wu
+        zg = xv @ wg
+        h = zu * jax.nn.sigmoid(zg) * zg * mk
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            y_ref[...] = jnp.zeros_like(y_ref)
+
+        y_ref[...] += h @ wd
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, nm),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_m), lambda i, j: (i, j)),
+            pl.BlockSpec((d, block_m), lambda i, j: (0, j)),
+            pl.BlockSpec((d, block_m), lambda i, j: (0, j)),
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(x, mask, w_up, w_gate, w_down)
+    return y

@@ -1,0 +1,486 @@
+"""L2 — JAX model: byte-level SwiGLU transformer with GLASS FFN variants.
+
+This is the build-time half of the three-layer stack: every function here is
+lowered once by ``aot.py`` to HLO text and executed from the Rust runtime
+(L3). Nothing in this module runs on the request path.
+
+The FFN follows the paper's gated structure (Eq. 1):
+
+    h = (x @ W_up) * silu(x @ W_gate)        # a_u ⊙ a_g, phi_u = id
+    y = h @ W_down
+
+GLASS sparsification masks/gathers the hidden units ``h`` (Eq. 2-3). Three
+FFN variants exist:
+
+  * dense   — mask of ones (baseline)
+  * masked  — multiplicative 0/1 mask input  (used by all quality evals;
+              any density with one executable)
+  * topk    — gathered computation over a static-k index set, implemented
+              by the L1 Pallas kernel (``kernels.sparse_ffn``); this is the
+              variant that actually removes FLOPs/weight traffic.
+
+Every forward also emits the ℓ2-normalized per-token activation magnitudes
+``hhat = |h| / (||h||_2 + eps)`` aggregated per layer — the statistic the
+paper uses for local importance A^l (Eq. 4), the NPS global prior A^g, and
+the post-hoc oracle sets (App. C.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.sparse_ffn import sparse_ffn_pallas
+
+EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (mirrored in artifacts/model.json)."""
+
+    vocab: int = 260  # 256 bytes + BOS(256) + PAD(257) + 2 unused
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    ffn_m: int = 512
+    max_seq: int = 224  # KV-cache length T
+    prefill_len: int = 96  # S for prefill/generate executables
+    score_len: int = 224  # S for the teacher-forced scorer
+    gen_len: int = 96  # N decode steps inside the fused generator
+    rope_base: float = 10000.0
+    bos_id: int = 256
+    pad_id: int = 257
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+
+# ------------------------------------------------------------------ params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Random init. Stacked per-layer arrays (leading n_layers dim) so the
+    forward pass can scan over layers -> compact HLO."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 12)
+    d, m, L = cfg.d_model, cfg.ffn_m, cfg.n_layers
+    sd = d**-0.5
+    sm = m**-0.5
+
+    def nrm(key, shape, scale):
+        return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+    return {
+        "embed": nrm(ks[0], (cfg.vocab, d), 1.0),
+        "head": nrm(ks[1], (d, cfg.vocab), sd),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": {
+            "ln1": jnp.ones((L, d), jnp.float32),
+            "ln2": jnp.ones((L, d), jnp.float32),
+            "wq": nrm(ks[2], (L, d, d), sd),
+            "wk": nrm(ks[3], (L, d, d), sd),
+            "wv": nrm(ks[4], (L, d, d), sd),
+            "wo": nrm(ks[5], (L, d, d), sd),
+            "w_up": nrm(ks[6], (L, d, m), sd),
+            "w_gate": nrm(ks[7], (L, d, m), sd),
+            "w_down": nrm(ks[8], (L, m, d), sm),
+        },
+    }
+
+
+def param_spec(cfg: ModelConfig):
+    """Flattened (path, shape) list in jax tree_flatten order — the contract
+    with the Rust weight store (artifacts/manifest.json)."""
+    params = jax.eval_shape(lambda: init_params(cfg))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    spec = []
+    for path, leaf in leaves_with_path:
+        name = "/".join(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        spec.append((name, tuple(int(s) for s in leaf.shape)))
+    return spec
+
+
+def flatten_params(params):
+    return jax.tree_util.tree_leaves(params)
+
+
+def unflatten_params(cfg: ModelConfig, leaves):
+    shape = jax.eval_shape(lambda: init_params(cfg))
+    treedef = jax.tree_util.tree_structure(shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ------------------------------------------------------------------- util
+
+
+def rmsnorm(x, w):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def _rope_angles(cfg: ModelConfig, pos):
+    """pos: [...] int32 -> cos/sin of shape [..., head_dim//2]."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., head_dim]; cos/sin broadcastable [..., head_dim//2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def hhat(h):
+    """ℓ2-normalized activation magnitude per token (paper Eq. 4)."""
+    return jnp.abs(h) / (jnp.linalg.norm(h, axis=-1, keepdims=True) + EPS)
+
+
+def _split_heads(cfg, x):
+    # [B, S, d] -> [B, H, S, Dh]
+    b, s, _ = x.shape
+    return x.reshape(b, s, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+# ------------------------------------------------ full-sequence forward
+
+
+def _layer_full(cfg: ModelConfig, x, lw, pos, attn_mask, ffn_mask):
+    """One transformer layer over a full sequence.
+
+    x: [B,S,d]; lw: per-layer weights (unstacked); pos: [S];
+    attn_mask: [B,1,S,S] additive; ffn_mask: [B,m] (0/1 or ones).
+    Returns (x', k, v, hh) with k/v: [B,H,S,Dh], hh: [B,S,m] per-token hhat.
+    """
+    xin = rmsnorm(x, lw["ln1"])
+    q = _split_heads(cfg, xin @ lw["wq"])
+    k = _split_heads(cfg, xin @ lw["wk"])
+    v = _split_heads(cfg, xin @ lw["wv"])
+    cos, sin = _rope_angles(cfg, pos)  # [S, Dh/2]
+    cos, sin = cos[None, None], sin[None, None]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (cfg.head_dim**-0.5)
+    scores = scores + attn_mask
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    b, _, s, _ = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+    x = x + out @ lw["wo"]
+
+    xin2 = rmsnorm(x, lw["ln2"])
+    h = (xin2 @ lw["w_up"]) * jax.nn.silu(xin2 @ lw["w_gate"])
+    h = h * ffn_mask[:, None, :]
+    x = x + h @ lw["w_down"]
+    return x, k, v, hhat(h)
+
+
+def forward_full(cfg: ModelConfig, params, tokens, pos, attn_mask, ffn_mask,
+                 stats_w):
+    """Full-sequence forward shared by prefill/score/generate.
+
+    tokens: [B,S] i32; pos: [S]; attn_mask: [B,1,S,S] additive;
+    ffn_mask: [B,L,m]; stats_w: [B,S] aggregation weights for stats.
+    Returns (logits[B,S,V], k[L,B,H,S,Dh], v[L,...], stats[B,L,m]).
+    """
+    x = params["embed"][tokens]
+
+    def body(x, lw_and_mask):
+        lw, fmask = lw_and_mask
+        x, k, v, hh = _layer_full(cfg, x, lw, pos, attn_mask, fmask)
+        stats = jnp.einsum("bs,bsm->bm", stats_w, hh)
+        return x, (k, v, stats)
+
+    masks = jnp.swapaxes(ffn_mask, 0, 1)  # [L,B,m]
+    x, (k, v, stats) = jax.lax.scan(body, x, (params["layers"], masks))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"]
+    return logits, k, v, jnp.swapaxes(stats, 0, 1)  # stats -> [B,L,m]
+
+
+# --------------------------------------------------------------- prefill
+
+
+def causal_mask(cfg, lens, s):
+    """[B,1,S,S] additive mask: causal AND key-position < len."""
+    i = jnp.arange(s)
+    causal = i[None, :, None] >= i[None, None, :]  # [1,S,S] q >= k
+    valid = i[None, None, :] < lens[:, None, None]  # [B,1,S]
+    ok = causal & valid
+    return jnp.where(ok[:, None], 0.0, -1e9).astype(jnp.float32)
+
+
+def _pad_kv(cfg, k, v, s):
+    pad = cfg.max_seq - s
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    return k, v
+
+
+def apply_prefill(cfg: ModelConfig, params, tokens, lens):
+    """tokens: [B,S] (PAD beyond lens), lens: [B] i32.
+
+    Returns (logits[B,V] at position lens-1,
+             k[L,B,H,T,Dh], v[L,B,H,T,Dh]  (zero beyond S),
+             stats[B,L,m]  mean hhat over valid prompt tokens  = A^l).
+    """
+    b, s = tokens.shape
+    amask = causal_mask(cfg, lens, s)
+    valid = (jnp.arange(s)[None, :] < lens[:, None]).astype(jnp.float32)
+    stats_w = valid / jnp.maximum(valid.sum(-1, keepdims=True), 1.0)
+    ones = jnp.ones((b, cfg.n_layers, cfg.ffn_m), jnp.float32)
+    logits, k, v, stats = forward_full(
+        cfg, params, tokens, jnp.arange(s), amask, ones, stats_w
+    )
+    last = jnp.take_along_axis(logits, (lens - 1)[:, None, None], 1)[:, 0]
+    k, v = _pad_kv(cfg, k, v, s)
+    return last, k, v, stats
+
+
+# ----------------------------------------------------------------- score
+
+
+def apply_score(cfg: ModelConfig, params, tokens, stats_w, ffn_mask):
+    """Teacher-forced scorer: full logits under a static FFN mask.
+
+    tokens: [B,S]; stats_w: [B,S] (arbitrary non-neg aggregation weights —
+    select prompt region, generation region, ...); ffn_mask: [B,L,m].
+    Returns (logits[B,S,V], stats[B,L,m] = sum_s stats_w * hhat).
+    """
+    b, s = tokens.shape
+    lens = jnp.full((b,), s, jnp.int32)
+    amask = causal_mask(cfg, lens, s)
+    logits, _, _, stats = forward_full(
+        cfg, params, tokens, jnp.arange(s), amask, ffn_mask, stats_w
+    )
+    return logits, stats
+
+
+# ---------------------------------------------------------------- decode
+
+
+def _layer_decode(cfg: ModelConfig, x, lw, kc, vc, pos, ffn_h_fn):
+    """Single-token decode for one layer.
+
+    x: [B,d]; kc/vc: [B,H,T,Dh]; pos: [B] i32 (write position);
+    ffn_h_fn: fn(xin2[B,d], lw) -> (ffn_out[B,d], stats[B,?]).
+    Returns (x', kc', vc', stats).
+    """
+    b = x.shape[0]
+    xin = rmsnorm(x, lw["ln1"])
+    q = (xin @ lw["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (xin @ lw["wk"]).reshape(b, cfg.n_heads, cfg.head_dim)
+    v = (xin @ lw["wv"]).reshape(b, cfg.n_heads, cfg.head_dim)
+    cos, sin = _rope_angles(cfg, pos)  # [B, Dh/2]
+    q = apply_rope(q, cos[:, None], sin[:, None])
+    k = apply_rope(k, cos[:, None], sin[:, None])
+
+    oh = jax.nn.one_hot(pos, cfg.max_seq, dtype=jnp.float32)  # [B,T]
+    ohk = oh[:, None, :, None]
+    kc = kc * (1.0 - ohk) + k[:, :, None, :] * ohk
+    vc = vc * (1.0 - ohk) + v[:, :, None, :] * ohk
+
+    scores = jnp.einsum("bhd,bhtd->bht", q, kc) * (cfg.head_dim**-0.5)
+    tpos = jnp.arange(cfg.max_seq)[None, :]
+    scores = jnp.where(tpos[:, None] <= pos[:, None, None], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bht,bhtd->bhd", att, vc).reshape(b, cfg.d_model)
+    x = x + out @ lw["wo"]
+
+    xin2 = rmsnorm(x, lw["ln2"])
+    y, stats = ffn_h_fn(xin2, lw)
+    x = x + y
+    return x, kc, vc, stats
+
+
+def _decode_core(cfg, params, token, pos, k, v, ffn_h_fn, extras):
+    """extras: [L, ...] per-layer extra FFN input (mask or index set)."""
+    x = params["embed"][token]  # [B,d]
+
+    def body(x, lw_kv):
+        lw, kc, vc, extra = lw_kv
+        x, kc, vc, stats = _layer_decode(
+            cfg, x, lw, kc, vc, pos, partial(ffn_h_fn, extra)
+        )
+        return x, (kc, vc, stats)
+
+    x, (k, v, stats) = jax.lax.scan(body, x, (params["layers"], k, v, extras))
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["head"], k, v, stats
+
+
+def apply_decode(cfg: ModelConfig, params, token, pos, k, v, ffn_mask):
+    """One masked decode step.
+
+    token: [B] i32; pos: [B] i32 (per-slot position — continuous batching);
+    k/v: [L,B,H,T,Dh]; ffn_mask: [B,L,m].
+    Returns (logits[B,V], k', v', stats[B,L,m] = hhat of this token).
+    """
+
+    def ffn(mask, xin2, lw):
+        h = (xin2 @ lw["w_up"]) * jax.nn.silu(xin2 @ lw["w_gate"])
+        h = h * mask
+        return h @ lw["w_down"], hhat(h)
+
+    extras = jnp.swapaxes(ffn_mask, 0, 1)  # [L,B,m]
+    logits, k, v, stats = _decode_core(cfg, params, token, pos, k, v, ffn,
+                                       extras)
+    return logits, k, v, jnp.swapaxes(stats, 0, 1)
+
+
+def apply_decode_topk(cfg: ModelConfig, params, token, pos, k, v, idx):
+    """One gathered-sparse decode step (L1 Pallas kernel on the FFN).
+
+    idx: [B,L,K] i32 — per-slot per-layer critical-neuron indices.
+    Returns (logits[B,V], k', v', gstats[B,L,K] = hhat over gathered units).
+    """
+
+    def ffn(ids, xin2, lw):
+        y, habs = sparse_ffn_pallas(
+            xin2, ids, lw["w_up"], lw["w_gate"], lw["w_down"]
+        )
+        return y, habs
+
+    extras = jnp.swapaxes(idx, 0, 1)  # [L,B,K]
+    logits, k, v, stats = _decode_core(cfg, params, token, pos, k, v, ffn,
+                                       extras)
+    return logits, k, v, jnp.swapaxes(stats, 0, 1)
+
+
+# -------------------------------------------------------- fused generator
+
+
+def apply_generate(cfg: ModelConfig, params, tokens, lens, ffn_mask):
+    """Fused prefill + N-step greedy decode under a static FFN mask.
+
+    The whole decode loop runs inside one XLA program (lax.scan), so the
+    KV cache never crosses the host boundary — this is the L2-optimized
+    path used for dense-trajectory generation and sparse generation evals.
+
+    tokens: [B,S] prompt (PAD beyond lens); lens: [B]; ffn_mask: [B,L,m].
+    Returns (gen_tokens[B,N] i32,
+             gen_logits[B,N,V]  next-token logits after each generated tok,
+             gen_stats[B,L,m]   mean hhat over the N generated tokens —
+                                the paper's post-hoc decoding-time oracle
+                                statistic when run dense).
+    """
+    b, s = tokens.shape
+    amask = causal_mask(cfg, lens, s)
+    valid = (jnp.arange(s)[None, :] < lens[:, None]).astype(jnp.float32)
+    stats_w = valid / jnp.maximum(valid.sum(-1, keepdims=True), 1.0)
+    logits0, kc, vc, _ = forward_full(
+        cfg, params, tokens, jnp.arange(s), amask, ffn_mask, stats_w
+    )
+    last = jnp.take_along_axis(logits0, (lens - 1)[:, None, None], 1)[:, 0]
+    kc, vc = _pad_kv(cfg, kc, vc, s)
+
+    tok0 = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    pos0 = lens.astype(jnp.int32)
+
+    def step(carry, _):
+        tok, pos, k, v = carry
+        logits, k, v, stats = apply_decode(cfg, params, tok, pos, k, v,
+                                           ffn_mask)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, pos + 1, k, v), (tok, logits, stats)
+
+    # step i consumes generated token t_i and emits the distribution over
+    # t_{i+1}: gen_tokens[:, i] = t_i, gen_logits[:, i] = p(. | ..., t_i).
+    _, (toks, glogits, gstats) = jax.lax.scan(
+        step, (tok0, pos0, kc, vc), None, length=cfg.gen_len
+    )
+    gen_tokens = jnp.swapaxes(toks, 0, 1)  # [B,N]
+    gen_logits = jnp.swapaxes(glogits, 0, 1)  # [B,N,V]
+    gen_stats = jnp.mean(gstats, axis=0)  # [B,L,m]
+    return gen_tokens, gen_logits, gen_stats
+
+
+# ----------------------------------------------- loss / impact (I^g) path
+
+
+def loss_with_h_probe(cfg: ModelConfig, params, probe, tokens, labels, wmask):
+    """Cross-entropy with an additive zero 'probe' on every FFN hidden
+    vector h — grad w.r.t. the probe equals dL/dh, giving the paper's
+    I^g = E|h_j * dL/dh_j| (Eq. 5-6) without a hand-written backward pass.
+
+    probe: [L,B,S,m] (zeros); tokens/labels: [B,S]; wmask: [B,S] valid
+    next-token positions. Returns (scalar loss, h values [L,B,S,m]).
+    """
+    b, s = tokens.shape
+    lens = jnp.full((b,), s, jnp.int32)
+    amask = causal_mask(cfg, lens, s)
+    pos = jnp.arange(s)
+    x = params["embed"][tokens]
+
+    def body(x, lw_probe):
+        lw, pr = lw_probe
+        xin = rmsnorm(x, lw["ln1"])
+        q = _split_heads(cfg, xin @ lw["wq"])
+        k = _split_heads(cfg, xin @ lw["wk"])
+        v = _split_heads(cfg, xin @ lw["wv"])
+        cos, sin = _rope_angles(cfg, pos)
+        q = apply_rope(q, cos[None, None], sin[None, None])
+        k = apply_rope(k, cos[None, None], sin[None, None])
+        sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (cfg.head_dim**-0.5)
+        att = jax.nn.softmax(sc + amask, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + out @ lw["wo"]
+        xin2 = rmsnorm(x, lw["ln2"])
+        h = (xin2 @ lw["w_up"]) * jax.nn.silu(xin2 @ lw["w_gate"])
+        h = h + pr
+        x = x + h @ lw["w_down"]
+        return x, h
+
+    x, hs = jax.lax.scan(body, x, (params["layers"], probe))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    loss = (nll * wmask).sum() / jnp.maximum(wmask.sum(), 1.0)
+    return loss, hs
+
+
+def impact_and_activation(cfg: ModelConfig, params, tokens, labels, wmask):
+    """Per-layer I^g and A^g contributions for one batch of sequences.
+
+    Returns (i_stats[L,m] = sum over valid tokens |h * dL/dh|,
+             a_stats[L,m] = sum over valid tokens hhat,
+             n_tokens scalar).
+    """
+    b, s = tokens.shape
+    probe = jnp.zeros((cfg.n_layers, b, s, cfg.ffn_m), jnp.float32)
+    grads, hs = jax.grad(
+        lambda pr: loss_with_h_probe(cfg, params, pr, tokens, labels, wmask),
+        has_aux=True,
+    )(probe)
+    w = wmask[None, :, :, None]
+    i_stats = jnp.sum(jnp.abs(hs * grads) * w, axis=(1, 2))
+    a_stats = jnp.sum(hhat(hs) * w, axis=(1, 2))
+    return i_stats, a_stats, wmask.sum()
+
+
+# ------------------------------------------------------------- LM training
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, labels, wmask):
+    """Plain next-token CE used by train.py (no probe, no stats)."""
+    b, s = tokens.shape
+    lens = jnp.full((b,), s, jnp.int32)
+    amask = causal_mask(cfg, lens, s)
+    ones = jnp.ones((b, cfg.n_layers, cfg.ffn_m), jnp.float32)
+    stats_w = jnp.zeros((b, s), jnp.float32)
+    logits, _, _, _ = forward_full(
+        cfg, params, tokens, jnp.arange(s), amask, ones, stats_w
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    return (nll * wmask).sum() / jnp.maximum(wmask.sum(), 1.0)

@@ -1,0 +1,196 @@
+"""Null-Prompt Stimulation (NPS) and global-prior computation (Sec. 3.1-3.3).
+
+Computes the four global priors used by the experiments:
+
+  a_nps    — A^g from NPS self-generated text            (A-GLASS, NPS)
+  i_nps    — I^g from NPS + teacher-forced replay        (I-GLASS, NPS)
+  a_corpus — A^g from a held-out external corpus slice   (Tab. 3 "Wiki")
+  i_corpus — I^g from the same corpus slice              (Tab. 3 "Wiki")
+
+NPS sampling schedule follows App. B.3, scaled to model size (Tab. 4
+substitution in DESIGN.md): first 10 tokens at temperature 1.5 with a
+bigram repetition penalty, then temperature 1.0 without penalty; top-k=20
+throughout. Each self-generated sequence is replayed with teacher forcing
+and its own next tokens as pseudo-labels to obtain gradients for I^g.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from .model import (
+    ModelConfig,
+    apply_decode,
+    apply_prefill,
+    impact_and_activation,
+)
+from .train import encode_bytes
+
+NPS_TEMP_HOT = 1.5
+NPS_TEMP = 1.0
+NPS_HOT_TOKENS = 10
+NPS_TOP_K = 20
+NPS_BIGRAM_PENALTY = 2.5  # divisor on logits of seen bigram continuations
+
+
+def nps_generate(
+    cfg: ModelConfig,
+    params,
+    n_seqs: int = 64,
+    seq_len: int = 160,
+    batch: int = 16,
+    seed: int = 0,
+):
+    """Sample sequences from the model given only BOS ("null prompt").
+
+    Returns (tokens [n_seqs, seq_len] int32 — generated ids only,
+             a_stats [L, m] — mean hhat over all generated tokens).
+    Sampling runs host-side (numpy) on jitted single-step logits; this is
+    build-time code, not the request path.
+    """
+    L, m = cfg.n_layers, cfg.ffn_m
+    decode = jax.jit(
+        lambda p, t, pos, k, v, mask: apply_decode(cfg, p, t, pos, k, v, mask)
+    )
+    prefill = jax.jit(lambda p, t, l: apply_prefill(cfg, p, t, l))
+
+    rng = np.random.default_rng(seed)
+    all_tokens = []
+    a_sum = np.zeros((L, m), np.float64)
+    n_tok = 0
+
+    for b0 in range(0, n_seqs, batch):
+        bs = min(batch, n_seqs - b0)
+        prompt = np.full((bs, cfg.prefill_len), cfg.pad_id, np.int32)
+        prompt[:, 0] = cfg.bos_id
+        lens = np.ones((bs,), np.int32)
+        logits, k, v, _ = prefill(params, jnp.asarray(prompt),
+                                  jnp.asarray(lens))
+        logits = np.asarray(logits)
+        mask = jnp.ones((bs, L, m), jnp.float32)
+
+        toks = np.zeros((bs, seq_len), np.int32)
+        last = np.zeros((bs,), np.int32)
+        seen_bigrams = [set() for _ in range(bs)]
+        pos = np.ones((bs,), np.int32)  # BOS at 0; first gen token at 1
+
+        for t in range(seq_len):
+            hot = t < NPS_HOT_TOKENS
+            temp = NPS_TEMP_HOT if hot else NPS_TEMP
+            step_logits = logits / temp
+            for i in range(bs):
+                if hot and t > 0:
+                    for nxt in range(cfg.vocab):
+                        if (last[i], nxt) in seen_bigrams[i]:
+                            step_logits[i, nxt] /= NPS_BIGRAM_PENALTY
+            # top-k sampling
+            chosen = np.zeros((bs,), np.int32)
+            for i in range(bs):
+                row = step_logits[i]
+                topk = np.argpartition(row, -NPS_TOP_K)[-NPS_TOP_K:]
+                p = np.exp(row[topk] - row[topk].max())
+                p /= p.sum()
+                chosen[i] = topk[rng.choice(NPS_TOP_K, p=p)]
+                if t > 0:
+                    seen_bigrams[i].add((last[i], int(chosen[i])))
+            toks[:, t] = chosen
+            last = chosen
+
+            lg, k, v, stats = decode(
+                params, jnp.asarray(chosen), jnp.asarray(pos), k, v, mask
+            )
+            logits = np.asarray(lg)
+            a_sum += np.asarray(stats).sum(axis=0)  # [L,m] over batch
+            n_tok += bs
+            pos += 1
+        all_tokens.append(toks)
+
+    a_stats = (a_sum / max(n_tok, 1)).astype(np.float32)
+    return np.concatenate(all_tokens, axis=0), a_stats
+
+
+def replay_impact(cfg: ModelConfig, params, sequences, batch=8,
+                  prepend_bos=True):
+    """Teacher-forced replay: I^g and A^g over token sequences [N, S].
+
+    Each sequence's own next token is the pseudo-label (App. B.3).
+    Returns (i_stats [L,m], a_stats [L,m]) — token-mean statistics.
+    """
+    imp = jax.jit(
+        lambda p, t, l, w: impact_and_activation(cfg, p, t, l, w)
+    )
+    L, m = cfg.n_layers, cfg.ffn_m
+    i_sum = np.zeros((L, m), np.float64)
+    a_sum = np.zeros((L, m), np.float64)
+    n_tok = 0.0
+    n, s = sequences.shape
+    for b0 in range(0, n, batch):
+        seqs = sequences[b0 : b0 + batch]
+        if prepend_bos:
+            bos = np.full((len(seqs), 1), 256, np.int32)
+            seqs = np.concatenate([bos, seqs], axis=1)
+        toks = seqs[:, :-1]
+        labs = seqs[:, 1:]
+        wmask = np.ones_like(labs, np.float32)
+        i_s, a_s, nt = imp(
+            params, jnp.asarray(toks), jnp.asarray(labs), jnp.asarray(wmask)
+        )
+        i_sum += np.asarray(i_s)
+        a_sum += np.asarray(a_s)
+        n_tok += float(nt)
+    return (
+        (i_sum / max(n_tok, 1)).astype(np.float32),
+        (a_sum / max(n_tok, 1)).astype(np.float32),
+    )
+
+
+def corpus_sequences(cfg: ModelConfig, n_seqs=64, seq_len=160, seed=0,
+                     split="prior"):
+    """Fixed-length byte sequences from a corpus split (WikiText stand-in)."""
+    text = corpus_mod.generate_text(split, n_seqs * seq_len + seq_len, seed)
+    data = encode_bytes(text)
+    return np.stack(
+        [data[i * seq_len : (i + 1) * seq_len] for i in range(n_seqs)]
+    ).astype(np.int32)
+
+
+def compute_priors(cfg: ModelConfig, params, art_dir: str,
+                   n_seqs=64, seq_len=160, seed=0):
+    """Compute-or-load all four priors; saves artifacts/priors.npz and raw
+    .bin files (f32, row-major [L, m]) for the Rust loader."""
+    path = os.path.join(art_dir, "priors.npz")
+    if os.path.exists(path):
+        print(f"[nps] cached priors at {path}")
+        return dict(np.load(path))
+
+    print("[nps] generating null-prompt stimulation set ...")
+    nps_toks, a_nps_gen = nps_generate(cfg, params, n_seqs, seq_len,
+                                       seed=seed)
+    print("[nps] replaying NPS sequences for I^g ...")
+    i_nps, a_nps = replay_impact(cfg, params, nps_toks)
+    # Use the replay-based A^g (same token weighting as I^g); the
+    # generation-time accumulation is kept as a cross-check.
+    print("[nps] corpus (WikiText stand-in) priors ...")
+    corp = corpus_sequences(cfg, n_seqs, seq_len, seed)
+    i_corpus, a_corpus = replay_impact(cfg, params, corp)
+
+    priors = {
+        "a_nps": a_nps,
+        "i_nps": i_nps,
+        "a_corpus": a_corpus,
+        "i_corpus": i_corpus,
+        "a_nps_gen": a_nps_gen,
+    }
+    os.makedirs(art_dir, exist_ok=True)
+    np.savez(path, **priors)
+    pdir = os.path.join(art_dir, "priors")
+    os.makedirs(pdir, exist_ok=True)
+    for name in ["a_nps", "i_nps", "a_corpus", "i_corpus"]:
+        priors[name].astype("<f4").tofile(os.path.join(pdir, f"{name}.bin"))
+    np.save(os.path.join(art_dir, "nps_tokens.npy"), nps_toks)
+    return priors

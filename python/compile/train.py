@@ -1,0 +1,148 @@
+"""Build-time LM training on the grammar-world corpus.
+
+Produces the base model every experiment runs on (substitute for the
+paper's pretrained 7B checkpoints — see DESIGN.md §3). Runs once; the
+result is cached at artifacts/params.npz and reused until deleted.
+
+Plain Adam + cosine schedule, next-byte objective, seq 128 / batch 16.
+The loss curve is logged to artifacts/train_log.json and summarized in
+EXPERIMENTS.md (end-to-end training evidence).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, flatten_params, init_params, lm_loss
+
+
+def encode_bytes(text: str) -> np.ndarray:
+    return np.frombuffer(text.encode("utf-8"), dtype=np.uint8).astype(np.int32)
+
+
+def make_batches(data: np.ndarray, seq: int, batch: int, steps: int, seed=0):
+    rng = np.random.default_rng(seed)
+    n = len(data) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        toks = np.stack([data[s : s + seq] for s in starts])
+        labs = np.stack([data[s + 1 : s + seq + 1] for s in starts])
+        yield toks, labs
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(
+        lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree_util.tree_map(
+        lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+    params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(
+    cfg: ModelConfig,
+    steps: int = 300,
+    batch: int = 16,
+    seq: int = 128,
+    base_lr: float = 3e-3,
+    corpus_chars: int = 400_000,
+    seed: int = 0,
+    log_every: int = 25,
+):
+    text = corpus.generate_text("train", corpus_chars, seed)
+    data = encode_bytes(text)
+    params = init_params(cfg, seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, labs, lr):
+        wmask = jnp.ones_like(labs, jnp.float32)
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, toks, labs, wmask)
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for i, (toks, labs) in enumerate(
+        make_batches(data, seq, batch, steps, seed)
+    ):
+        lr = base_lr * 0.5 * (1 + np.cos(np.pi * i / steps))
+        params, opt, loss = step_fn(
+            params, opt, jnp.asarray(toks), jnp.asarray(labs),
+            jnp.float32(lr),
+        )
+        if i % log_every == 0 or i == steps - 1:
+            lv = float(loss)
+            log.append({"step": i, "loss": lv, "lr": float(lr),
+                        "elapsed_s": round(time.time() - t0, 1)})
+            print(f"[train] step {i:4d} loss {lv:.4f} lr {lr:.2e} "
+                  f"({time.time() - t0:.0f}s)")
+    return params, log
+
+
+def heldout_loss(cfg, params, n_chars=20_000, seq=128, seed=0):
+    text = corpus.generate_text("eval", n_chars, seed)
+    data = encode_bytes(text)
+    nb = min(8, (len(data) - seq - 1) // seq)
+    toks = np.stack([data[i * seq : i * seq + seq] for i in range(nb)])
+    labs = np.stack([data[i * seq + 1 : i * seq + seq + 1] for i in range(nb)])
+    wmask = jnp.ones_like(jnp.asarray(labs), jnp.float32)
+    return float(lm_loss(cfg, params, jnp.asarray(toks), jnp.asarray(labs),
+                         wmask))
+
+
+def save_params(path: str, params):
+    leaves = flatten_params(params)
+    np.savez(path, *[np.asarray(p) for p in leaves])
+
+
+def load_params(cfg: ModelConfig, path: str):
+    from .model import unflatten_params
+
+    z = np.load(path)
+    leaves = [jnp.asarray(z[f"arr_{i}"]) for i in range(len(z.files))]
+    return unflatten_params(cfg, leaves)
+
+
+def ensure_trained(cfg: ModelConfig, art_dir: str, steps: int = 300):
+    """Train-or-load: the `make artifacts` entry point."""
+    path = os.path.join(art_dir, "params.npz")
+    if os.path.exists(path):
+        print(f"[train] cached params at {path}")
+        return load_params(cfg, path)
+    params, log = train(cfg, steps=steps)
+    hl = heldout_loss(cfg, params)
+    print(f"[train] heldout loss {hl:.4f}")
+    os.makedirs(art_dir, exist_ok=True)
+    save_params(path, params)
+    with open(os.path.join(art_dir, "train_log.json"), "w") as f:
+        json.dump({"log": log, "heldout_loss": hl,
+                   "steps": steps}, f, indent=2)
+    return params
+
+
+if __name__ == "__main__":
+    cfg = ModelConfig()
+    ensure_trained(cfg, os.path.join(os.path.dirname(__file__), "..", "..",
+                                     "artifacts"))

@@ -1,0 +1,34 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                "..")))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, init_params
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """Small config: fast to trace, exercises every code path."""
+    return ModelConfig(n_layers=2, d_model=64, n_heads=2, head_dim=32,
+                       ffn_m=128, max_seq=32, prefill_len=16, score_len=32,
+                       gen_len=6)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return init_params(tiny_cfg, seed=1)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand_tokens(cfg, b, s, rng, lo=0, hi=256):
+    return jnp.asarray(rng.integers(lo, hi, size=(b, s)), jnp.int32)

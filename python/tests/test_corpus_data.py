@@ -1,0 +1,90 @@
+"""Corpus generator + benchmark-set generator properties."""
+
+import json
+import random
+
+import pytest
+
+from compile import corpus, data
+
+
+def test_splits_deterministic():
+    a = corpus.generate_text("train", 5000)
+    b = corpus.generate_text("train", 5000)
+    assert a == b
+
+
+def test_splits_differ():
+    texts = {s: corpus.generate_text(s, 5000) for s in corpus.SPLIT_SEEDS}
+    vals = list(texts.values())
+    for i in range(len(vals)):
+        for j in range(i + 1, len(vals)):
+            assert vals[i][:2000] != vals[j][:2000]
+
+
+def test_corpus_is_ascii_lowercase_ish():
+    t = corpus.generate_text("train", 10_000)
+    assert all(ord(c) < 128 for c in t)
+    assert len(t) >= 10_000
+
+
+def test_corpus_contains_all_pattern_kinds():
+    t = corpus.generate_text("train", 60_000)
+    for marker in ["Q: what color", "Q: is the", "summary:", "plus",
+                   "once there was", "the weather is"]:
+        assert marker in t, marker
+
+
+def test_story_prompt_short():
+    rng = random.Random(0)
+    for _ in range(50):
+        assert len(corpus.story_prompt(rng)) <= 40
+
+
+def test_lg_items_unique_and_short():
+    rng = random.Random(0)
+    lg = data.gen_lg(64, rng)
+    assert len(set(lg["prompts"])) == 64
+    assert all(len(p) <= 60 for p in lg["prompts"])
+
+
+def test_cls_items_well_formed():
+    rng = random.Random(1)
+    cls = data.gen_cls(10, rng)
+    fams = {}
+    for it in cls["items"]:
+        assert 0 <= it["answer"] < len(it["options"])
+        assert all(o and o[0] == " " for o in it["options"])
+        assert len(set(it["options"])) == len(it["options"])
+        fams[it["family"]] = fams.get(it["family"], 0) + 1
+    assert set(fams) == set(data.CLS_FAMILIES)
+    assert all(v == 10 for v in fams.values())
+
+
+def test_cls_answers_not_positionally_biased():
+    rng = random.Random(2)
+    cls = data.gen_cls(60, rng)
+    two_opt = [it for it in cls["items"] if len(it["options"]) == 2]
+    frac0 = sum(1 for it in two_opt if it["answer"] == 0) / len(two_opt)
+    assert 0.3 < frac0 < 0.7
+
+
+def test_sg_items_well_formed():
+    rng = random.Random(3)
+    sg = data.gen_sg(8, rng)
+    for it in sg["items"]:
+        assert it["prompt"]
+        assert it["reference"]
+        assert it["metric"] in ("rouge", "qa")
+        if it["family"] in ("xsum", "cnndm"):
+            assert it["prompt"].endswith("summary:")
+            # +BOS must fit the prefill window (ModelConfig.prefill_len)
+            assert len(it["prompt"]) < 95
+
+
+def test_write_datasets(tmp_path):
+    sets = data.write_datasets(str(tmp_path), n_lg=8, n_cls=2, n_sg=2)
+    for fname in ["lg.json", "cls.json", "sg.json"]:
+        with open(tmp_path / "data" / fname) as f:
+            obj = json.load(f)
+        assert obj["name"]

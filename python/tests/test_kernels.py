@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/seeds; every property asserts allclose against the
+reference — this is the core correctness signal for the sparse FFN hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    gated_ffn_ref,
+    mask_from_idx,
+    masked_ffn_ref,
+    sparse_ffn_ref,
+)
+from compile.kernels.sparse_ffn import masked_ffn_pallas, sparse_ffn_pallas
+
+ATOL = 2e-5
+
+
+def _weights(d, m, seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    return (
+        jax.random.normal(k1, (d, m)) * d**-0.5,
+        jax.random.normal(k2, (d, m)) * d**-0.5,
+        jax.random.normal(k3, (m, d)) * m**-0.5,
+    )
+
+
+def _x(b, d, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed + 777), (b, d))
+
+
+def _idx(b, m, k, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        np.stack([rng.permutation(m)[:k] for _ in range(b)]), jnp.int32
+    )
+
+
+# ------------------------------------------------------------ sparse_ffn
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    d=st.sampled_from([8, 32, 128]),
+    m=st.sampled_from([64, 256]),
+    kfrac=st.sampled_from([0.25, 0.5, 1.0]),
+    seed=st.integers(0, 10_000),
+)
+def test_sparse_ffn_matches_ref(b, d, m, kfrac, seed):
+    k = max(1, int(m * kfrac))
+    wu, wg, wd = _weights(d, m, seed)
+    x = _x(b, d, seed)
+    idx = _idx(b, m, k, seed)
+    y_ref, h_ref = sparse_ffn_ref(x, idx, wu, wg, wd)
+    y_pal, h_pal = sparse_ffn_pallas(x, idx, wu, wg, wd)
+    np.testing.assert_allclose(y_pal, y_ref, atol=ATOL, rtol=1e-4)
+    np.testing.assert_allclose(h_pal, h_ref, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+    block_k=st.sampled_from([32, 64, 128]),
+)
+def test_sparse_ffn_block_size_invariance(b, seed, block_k):
+    """Result must not depend on the VMEM panel size (pure schedule knob)."""
+    d, m, k = 32, 256, 128
+    wu, wg, wd = _weights(d, m, seed)
+    x = _x(b, d, seed)
+    idx = _idx(b, m, k, seed)
+    y1, h1 = sparse_ffn_pallas(x, idx, wu, wg, wd, block_k=block_k)
+    y2, h2 = sparse_ffn_pallas(x, idx, wu, wg, wd, block_k=k)
+    np.testing.assert_allclose(y1, y2, atol=ATOL, rtol=1e-4)
+    np.testing.assert_allclose(h1, h2, atol=ATOL, rtol=1e-4)
+
+
+def test_sparse_equals_masked_when_idx_full():
+    """Gathering ALL units must equal the dense FFN."""
+    d, m, b = 16, 64, 3
+    wu, wg, wd = _weights(d, m, 5)
+    x = _x(b, d, 5)
+    idx = jnp.tile(jnp.arange(m, dtype=jnp.int32)[None], (b, 1))
+    y, _ = sparse_ffn_pallas(x, idx, wu, wg, wd)
+    y_dense, _ = gated_ffn_ref(x, wu, wg, wd)
+    np.testing.assert_allclose(y, y_dense, atol=ATOL, rtol=1e-4)
+
+
+def test_sparse_equals_masked_ref():
+    """idx-gather semantics == multiplicative 0/1 mask semantics (Eq. 2)."""
+    d, m, k, b = 32, 128, 64, 2
+    wu, wg, wd = _weights(d, m, 9)
+    x = _x(b, d, 9)
+    idx = _idx(b, m, k, 9)
+    y_sparse, _ = sparse_ffn_ref(x, idx, wu, wg, wd)
+    y_masked = masked_ffn_ref(x, mask_from_idx(idx, m), wu, wg, wd)
+    np.testing.assert_allclose(y_sparse, y_masked, atol=ATOL, rtol=1e-4)
+
+
+def test_sparse_ffn_permutation_invariance():
+    """Order of the index set must not change the output."""
+    d, m, k, b = 16, 64, 32, 2
+    wu, wg, wd = _weights(d, m, 3)
+    x = _x(b, d, 3)
+    idx = _idx(b, m, k, 3)
+    perm = np.random.default_rng(1).permutation(k)
+    y1, _ = sparse_ffn_pallas(x, idx, wu, wg, wd)
+    y2, _ = sparse_ffn_pallas(x, idx[:, perm], wu, wg, wd)
+    np.testing.assert_allclose(y1, y2, atol=ATOL, rtol=1e-4)
+
+
+def test_sparse_habs_normalized():
+    """habs rows are ℓ2-normalized |h| — squared norms sum to ~1."""
+    d, m, k, b = 32, 128, 64, 3
+    wu, wg, wd = _weights(d, m, 11)
+    x = _x(b, d, 11) * 3.0
+    idx = _idx(b, m, k, 11)
+    _, habs = sparse_ffn_pallas(x, idx, wu, wg, wd)
+    sq = np.asarray((habs**2).sum(-1))
+    assert np.all(habs >= 0)
+    np.testing.assert_allclose(sq, np.ones_like(sq), atol=1e-3)
+
+
+# ------------------------------------------------------------ masked_ffn
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    d=st.sampled_from([8, 64]),
+    m=st.sampled_from([64, 256]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 10_000),
+)
+def test_masked_ffn_matches_ref(b, d, m, density, seed):
+    wu, wg, wd = _weights(d, m, seed)
+    x = _x(b, d, seed)
+    rng = np.random.default_rng(seed)
+    mask = jnp.asarray((rng.random((b, m)) < density).astype(np.float32))
+    y_ref = masked_ffn_ref(x, mask, wu, wg, wd)
+    y_pal = masked_ffn_pallas(x, mask, wu, wg, wd)
+    np.testing.assert_allclose(y_pal, y_ref, atol=ATOL, rtol=1e-4)
+
+
+def test_masked_ffn_zero_mask_is_zero():
+    d, m, b = 16, 64, 2
+    wu, wg, wd = _weights(d, m, 2)
+    x = _x(b, d, 2)
+    y = masked_ffn_pallas(x, jnp.zeros((b, m)), wu, wg, wd)
+    np.testing.assert_allclose(y, np.zeros((b, d)), atol=1e-7)
+
+
+def test_kernels_jit_compatible():
+    """Kernels must trace under jit (the AOT path requirement)."""
+    d, m, k, b = 16, 64, 32, 2
+    wu, wg, wd = _weights(d, m, 4)
+    x = _x(b, d, 4)
+    idx = _idx(b, m, k, 4)
+    y1, _ = jax.jit(sparse_ffn_pallas)(x, idx, wu, wg, wd)
+    y2, _ = sparse_ffn_pallas(x, idx, wu, wg, wd)
+    np.testing.assert_allclose(y1, y2, atol=ATOL, rtol=1e-4)

@@ -1,0 +1,263 @@
+"""L2 model invariants: prefill/decode/score consistency, masks, stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    apply_decode,
+    apply_decode_topk,
+    apply_generate,
+    apply_prefill,
+    apply_score,
+    causal_mask,
+    hhat,
+    impact_and_activation,
+    lm_loss,
+)
+from .conftest import rand_tokens
+
+ATOL = 5e-4  # logits-level tolerance across distinct computation paths
+
+
+def _ones_mask(cfg, b):
+    return jnp.ones((b, cfg.n_layers, cfg.ffn_m), jnp.float32)
+
+
+def test_prefill_shapes(tiny_cfg, tiny_params, rng):
+    b, s = 2, tiny_cfg.prefill_len
+    toks = rand_tokens(tiny_cfg, b, s, rng)
+    lens = jnp.array([4, s], jnp.int32)
+    logits, k, v, stats = apply_prefill(tiny_cfg, tiny_params, toks, lens)
+    assert logits.shape == (b, tiny_cfg.vocab)
+    assert k.shape == (tiny_cfg.n_layers, b, tiny_cfg.n_heads,
+                       tiny_cfg.max_seq, tiny_cfg.head_dim)
+    assert stats.shape == (b, tiny_cfg.n_layers, tiny_cfg.ffn_m)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.all(np.asarray(stats) >= 0)
+
+
+def test_prefill_ignores_padding(tiny_cfg, tiny_params, rng):
+    """Tokens beyond lens must not affect logits, KV (valid part), stats."""
+    b, s = 2, tiny_cfg.prefill_len
+    toks = rand_tokens(tiny_cfg, b, s, rng)
+    lens = jnp.array([5, 7], jnp.int32)
+    out1 = apply_prefill(tiny_cfg, tiny_params, toks, lens)
+    toks2 = np.asarray(toks).copy()
+    toks2[0, 5:] = 3
+    toks2[1, 7:] = 9
+    out2 = apply_prefill(tiny_cfg, tiny_params, jnp.asarray(toks2), lens)
+    np.testing.assert_allclose(out1[0], out2[0], atol=ATOL)
+    np.testing.assert_allclose(out1[3], out2[3], atol=ATOL)
+
+
+def test_prefill_then_decode_matches_longer_prefill(tiny_cfg, tiny_params,
+                                                    rng):
+    """THE consistency test: prefill(n) + decode(token) == prefill(n+1).
+
+    Validates RoPE positions, KV write position, causal masking, and the
+    decode-time attention over the cache — the whole L3 hot path contract.
+    """
+    cfg, params = tiny_cfg, tiny_params
+    b, s = 2, cfg.prefill_len
+    toks = rand_tokens(cfg, b, s, rng)
+    n = 6
+    lens = jnp.full((b,), n, jnp.int32)
+    _, k, v, _ = apply_prefill(cfg, params, toks, lens)
+    nxt = toks[:, n]
+    logits_step, _, _, _ = apply_decode(cfg, params, nxt, lens, k, v,
+                                        _ones_mask(cfg, b))
+    logits_full, _, _, _ = apply_prefill(cfg, params, toks,
+                                         jnp.full((b,), n + 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_step),
+                               np.asarray(logits_full), atol=ATOL)
+
+
+def test_score_matches_prefill_logits(tiny_cfg, tiny_params, rng):
+    """Teacher-forced scorer logits at position i == prefill last-logits
+    with lens=i+1 (same tokens)."""
+    cfg, params = tiny_cfg, tiny_params
+    b = 2
+    s = cfg.prefill_len
+    toks = rand_tokens(cfg, b, s, rng)
+    pad = cfg.score_len - s
+    toks_s = jnp.pad(toks, ((0, 0), (0, pad)), constant_values=cfg.pad_id)
+    w = jnp.zeros((b, cfg.score_len))
+    logits_all, _ = apply_score(cfg, params, toks_s, w, _ones_mask(cfg, b))
+    for n in [1, 3, s]:
+        lg, _, _, _ = apply_prefill(cfg, params, toks,
+                                    jnp.full((b,), n, jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits_all[:, n - 1]),
+                                   np.asarray(lg), atol=ATOL)
+
+
+def test_decode_mask_zero_vs_dense_differs(tiny_cfg, tiny_params, rng):
+    cfg, params = tiny_cfg, tiny_params
+    b = 2
+    toks = rand_tokens(cfg, b, cfg.prefill_len, rng)
+    lens = jnp.full((b,), 4, jnp.int32)
+    _, k, v, _ = apply_prefill(cfg, params, toks, lens)
+    tok = jnp.array([10, 20], jnp.int32)
+    lg1, _, _, _ = apply_decode(cfg, params, tok, lens, k, v,
+                                _ones_mask(cfg, b))
+    lg0, _, _, _ = apply_decode(cfg, params, tok, lens, k, v,
+                                _ones_mask(cfg, b) * 0.0)
+    assert float(jnp.abs(lg1 - lg0).max()) > 1e-3
+
+
+def test_decode_topk_matches_masked_decode(tiny_cfg, tiny_params, rng):
+    """Gathered (Pallas) decode == masked decode with the equivalent 0/1
+    mask — the L1/L2 cross-variant contract."""
+    cfg, params = tiny_cfg, tiny_params
+    b, kk = 2, cfg.ffn_m // 2
+    toks = rand_tokens(cfg, b, cfg.prefill_len, rng)
+    lens = jnp.full((b,), 5, jnp.int32)
+    _, k, v, _ = apply_prefill(cfg, params, toks, lens)
+    tok = jnp.array([7, 8], jnp.int32)
+    idx = jnp.asarray(
+        np.stack([np.stack([np.random.default_rng(i * 10 + l)
+                            .permutation(cfg.ffn_m)[:kk]
+                            for l in range(cfg.n_layers)])
+                  for i in range(b)]), jnp.int32)
+    mask = np.zeros((b, cfg.n_layers, cfg.ffn_m), np.float32)
+    for i in range(b):
+        for l in range(cfg.n_layers):
+            mask[i, l, np.asarray(idx)[i, l]] = 1.0
+    lg_topk, k1, v1, _ = apply_decode_topk(cfg, params, tok, lens, k, v, idx)
+    lg_mask, k2, v2, _ = apply_decode(cfg, params, tok, lens, k, v,
+                                      jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(lg_topk), np.asarray(lg_mask),
+                               atol=ATOL)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), atol=ATOL)
+
+
+def test_generate_matches_manual_loop(tiny_cfg, tiny_params, rng):
+    """Fused scan generator == prefill + explicit greedy decode loop."""
+    cfg, params = tiny_cfg, tiny_params
+    b = 2
+    toks = rand_tokens(cfg, b, cfg.prefill_len, rng)
+    lens = jnp.array([3, 5], jnp.int32)
+    mask = _ones_mask(cfg, b)
+    gt, gl, _ = apply_generate(cfg, params, toks, lens, mask)
+
+    logits, k, v, _ = apply_prefill(cfg, params, toks, lens)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = lens
+    for i in range(cfg.gen_len):
+        np.testing.assert_array_equal(np.asarray(gt[:, i]), np.asarray(tok))
+        logits, k, v, _ = apply_decode(cfg, params, tok, pos, k, v, mask)
+        np.testing.assert_allclose(np.asarray(gl[:, i]), np.asarray(logits),
+                                   atol=ATOL)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_generate_sparse_mask_changes_output(tiny_cfg, tiny_params, rng):
+    cfg, params = tiny_cfg, tiny_params
+    b = 1
+    toks = rand_tokens(cfg, b, cfg.prefill_len, rng)
+    lens = jnp.array([4], jnp.int32)
+    _, gl1, _ = apply_generate(cfg, params, toks, lens, _ones_mask(cfg, b))
+    half = np.ones((b, cfg.n_layers, cfg.ffn_m), np.float32)
+    half[:, :, ::2] = 0.0
+    _, gl2, _ = apply_generate(cfg, params, toks, lens, jnp.asarray(half))
+    assert float(jnp.abs(gl1 - gl2).max()) > 1e-3
+
+
+def test_hhat_is_l2_normalized():
+    h = jax.random.normal(jax.random.PRNGKey(0), (4, 7, 64)) * 5
+    hh = hhat(h)
+    np.testing.assert_allclose(np.asarray((hh**2).sum(-1)),
+                               np.ones((4, 7)), atol=1e-3)
+    assert np.all(np.asarray(hh) >= 0)
+
+
+def test_causal_mask_blocks_future():
+    from compile.model import ModelConfig
+
+    cfg = ModelConfig()
+    m = causal_mask(cfg, jnp.array([3, 5], jnp.int32), 6)
+    m = np.asarray(m)
+    assert m.shape == (2, 1, 6, 6)
+    assert m[0, 0, 0, 1] < -1e8  # future blocked
+    assert m[0, 0, 1, 0] == 0.0  # past visible
+    assert m[0, 0, 4, 4] < -1e8  # beyond len blocked even on diagonal? no:
+    # diagonal at position >= len is padding-query; it may attend nothing
+    # valid — key validity is what matters:
+    assert m[0, 0, 5, 3] < -1e8  # key at 3 >= len(3) blocked
+    assert m[1, 0, 5, 4] == 0.0  # len 5: key 4 visible
+
+
+def test_impact_first_order_agrees_with_ablation(tiny_cfg, tiny_params, rng):
+    """|h_j * dL/dh_j| must approximate the true loss change from ablating
+    neuron j (Eq. 5): check rank correlation > 0.5 on a sample of neurons."""
+    cfg, params = tiny_cfg, tiny_params
+    b, s = 2, 12
+    toks = rand_tokens(cfg, b, s, rng)
+    labs = rand_tokens(cfg, b, s, rng)
+    w = jnp.ones((b, s))
+    i_stats, a_stats, nt = impact_and_activation(cfg, params, toks, labs, w)
+    assert float(nt) == b * s
+    i0 = np.asarray(i_stats)[0] / (b * s)
+
+    # true ablation deltas for a handful of neurons in layer 0
+    def loss_with_unit_masked(j):
+        mask = np.ones((b, cfg.n_layers, cfg.ffn_m), np.float32)
+        mask[:, 0, j] = 0.0
+        pad = cfg.score_len - s
+        toks_s = jnp.pad(toks, ((0, 0), (0, pad)),
+                         constant_values=cfg.pad_id)
+        logits, _ = apply_score(cfg, params, toks_s, jnp.zeros(
+            (b, cfg.score_len)), jnp.asarray(mask))
+        logits = logits[:, :s]
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(logp, labs[..., None], -1)[..., 0]
+        return float(nll.mean())
+
+    base = loss_with_unit_masked(-1)  # -1: masks nothing real? use none:
+    mask_none = jnp.ones((b, cfg.n_layers, cfg.ffn_m))
+    pad = cfg.score_len - s
+    toks_s = jnp.pad(toks, ((0, 0), (0, pad)), constant_values=cfg.pad_id)
+    logits, _ = apply_score(cfg, params, toks_s,
+                            jnp.zeros((b, cfg.score_len)), mask_none)
+    logp = jax.nn.log_softmax(logits[:, :s], -1)
+    base = float((-jnp.take_along_axis(logp, labs[..., None], -1)).mean())
+
+    js = list(np.argsort(i0)[-5:]) + list(np.argsort(i0)[:5])
+    deltas = np.array([abs(loss_with_unit_masked(int(j)) - base)
+                       for j in js])
+    scores = i0[js]
+    # Spearman-ish: top-impact neurons should have larger ablation deltas
+    assert deltas[:5].mean() > deltas[5:].mean()
+    assert np.corrcoef(np.argsort(np.argsort(scores)),
+                       np.argsort(np.argsort(deltas)))[0, 1] > 0.3
+
+
+def test_lm_loss_decreases_on_memorizable_batch(tiny_cfg):
+    """One-batch sanity: a few Adam steps reduce the loss (training path)."""
+    import jax
+
+    from compile.model import init_params
+    from compile.train import adam_init, adam_update
+
+    cfg = tiny_cfg
+    params = init_params(cfg, 3)
+    opt = adam_init(params)
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, 120, (4, 16)), jnp.int32)
+    labs = jnp.asarray(rng.integers(0, 120, (4, 16)), jnp.int32)
+    w = jnp.ones((4, 16))
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, toks, labs, w))(params)
+        params, opt = adam_update(params, g, opt, 1e-2)
+        return params, opt, loss
+
+    losses = []
+    for _ in range(8):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]

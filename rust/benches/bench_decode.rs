@@ -1,0 +1,110 @@
+//! Decode-path benchmarks (§4.5 runtime claims on this host):
+//! prefill, step decode (dense / masked / top-k gathered), the fused
+//! generator, and the teacher-forced scorer.
+//!
+//!     cargo bench --bench bench_decode
+
+use std::path::Path;
+
+use glass::engine::Engine;
+use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
+use glass::tensor::TensorF;
+use glass::util::bench::Bencher;
+
+fn main() {
+    let engine = Engine::load(Path::new("artifacts")).expect(
+        "artifact bundle missing — run `make artifacts` before benching",
+    );
+    let spec = engine.spec().clone();
+    let mut b = Bencher::default();
+    b.budget_s = 2.0;
+
+    let prompts: Vec<String> = vec![
+        "once there was a red fox".into(),
+        "the blue owl is".into(),
+        "every morning the wolf".into(),
+        "the grey cat is quiet and".into(),
+    ];
+
+    // ---------------------------------------------------------- prefill
+    b.bench("prefill b=1", 1.0, || {
+        engine.prefill(&prompts[..1], 1).unwrap()
+    });
+    b.bench("prefill b=4", 4.0, || {
+        engine.prefill(&prompts, 4).unwrap()
+    });
+
+    // ------------------------------------------------------ step decode
+    let pre1 = engine.prefill(&prompts[..1], 1).unwrap();
+    let local = ImportanceMap::from_stats(&pre1.stats, 0).unwrap();
+    let k = engine.rt.manifest.topk_k;
+    let half = build_mask(&Strategy::LocalOnly, &local, None, k).unwrap();
+    let idx = pack_indices(&[&half], spec.n_layers, k).unwrap();
+    let half_t = glass::engine::session::pack_slot_masks(
+        &[half],
+        1,
+        1,
+        &spec,
+    );
+    let dense_t = engine.dense_mask(1);
+    let tok = [65i32];
+    let pos = [pre1.lens[0] as i32];
+
+    let mut kv = pre1.kv.clone();
+    b.bench("decode step b=1 dense", 1.0, || {
+        engine.decode_step(&mut kv, &tok, &pos, &dense_t).unwrap()
+    });
+    let mut kv = pre1.kv.clone();
+    b.bench("decode step b=1 masked50", 1.0, || {
+        engine.decode_step(&mut kv, &tok, &pos, &half_t).unwrap()
+    });
+    let mut kv = pre1.kv.clone();
+    b.bench("decode step b=1 topk50 (pallas)", 1.0, || {
+        engine
+            .decode_step_topk(&mut kv, &tok, &pos, &idx)
+            .unwrap()
+    });
+
+    // batched step decode
+    let pre4 = engine.prefill(&prompts, 4).unwrap();
+    let dense4 = engine.dense_mask(4);
+    let tok4 = [65i32, 66, 67, 68];
+    let pos4: Vec<i32> = pre4.lens.iter().map(|&l| l as i32).collect();
+    let mut kv4 = pre4.kv.clone();
+    b.bench("decode step b=4 dense", 4.0, || {
+        engine
+            .decode_step(&mut kv4, &tok4, &pos4, &dense4)
+            .unwrap()
+    });
+
+    // --------------------------------------------- fused generate loop
+    let n_gen = spec.gen_len as f64;
+    b.bench("generate b=1 (fused scan)", n_gen, || {
+        engine
+            .generate(&prompts[..1], &engine.dense_mask(1), 1)
+            .unwrap()
+    });
+    b.bench("generate b=4 (fused scan)", 4.0 * n_gen, || {
+        engine.generate(&prompts, &engine.dense_mask(4), 4).unwrap()
+    });
+
+    // ------------------------------------------------------------ score
+    let batch =
+        glass::harness::lgeval::prepare_batch(&engine, &prompts, 4)
+            .unwrap();
+    let w = TensorF::zeros(&[4, spec.score_len]);
+    b.bench("score b=4 (teacher-forced)", 4.0 * n_gen, || {
+        engine
+            .score(&batch.score_tokens, &w, &dense4)
+            .unwrap()
+    });
+
+    println!("\n{}", b.report());
+    // headline comparisons for EXPERIMENTS.md §Perf
+    let step_per_tok = b.results[2].mean_s; // b=1 dense step
+    let fused_per_tok = b.results[6].mean_s / n_gen;
+    println!(
+        "fused-scan speedup over step decode (b=1): {:.1}x per token",
+        step_per_tok / fused_per_tok
+    );
+}

@@ -1,0 +1,76 @@
+//! GLASS core hot-path micro-benchmarks: the mask-selection work that
+//! runs between prefill and the first decode step. Target: orders of
+//! magnitude below one decode step (DESIGN.md §8).
+//!
+//!     cargo bench --bench bench_glass_core
+
+use glass::glass::{
+    build_mask, fuse_and_select, pack_masks, rank_ascending, GlobalPrior,
+    ImportanceMap, Strategy,
+};
+use glass::util::bench::Bencher;
+use glass::util::prng::Prng;
+
+fn main() {
+    let mut b = Bencher::default();
+    b.budget_s = 1.5;
+    let mut rng = Prng::new(7);
+
+    for m in [512usize, 4096, 14336] {
+        // 14336 = Llama-3-8B FFN width: paper-scale per-layer cost
+        let local: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        let global: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+        b.bench(&format!("rank_ascending m={m}"), m as f64, || {
+            rank_ascending(&local)
+        });
+        b.bench(&format!("fuse_and_select m={m} k=m/2"), m as f64, || {
+            fuse_and_select(&local, &global, 0.5, m / 2)
+        });
+    }
+
+    // full per-request mask build at our model scale and paper scale
+    for (l, m) in [(4usize, 512usize), (32, 14336)] {
+        let local = ImportanceMap::from_layers(
+            (0..l).map(|_| (0..m).map(|_| rng.f32()).collect()).collect(),
+        )
+        .unwrap();
+        let prior = GlobalPrior::new(
+            "bench",
+            (0..l).map(|_| (0..m).map(|_| rng.f32()).collect()).collect(),
+        )
+        .unwrap();
+        b.bench(
+            &format!("build_mask glass L={l} m={m}"),
+            (l * m) as f64,
+            || {
+                build_mask(
+                    &Strategy::Glass { lambda: 0.5 },
+                    &local,
+                    Some(&prior),
+                    m / 2,
+                )
+                .unwrap()
+            },
+        );
+        let mask = build_mask(
+            &Strategy::Glass { lambda: 0.5 },
+            &local,
+            Some(&prior),
+            m / 2,
+        )
+        .unwrap();
+        b.bench(
+            &format!("pack_masks b=4 L={l} m={m}"),
+            (4 * l * m) as f64,
+            || {
+                pack_masks(
+                    &[Some(&mask), Some(&mask), Some(&mask), Some(&mask)],
+                    l,
+                    m,
+                )
+            },
+        );
+    }
+
+    println!("\n{}", b.report());
+}

@@ -1,0 +1,94 @@
+//! Memory-simulator benchmarks + Fig. 5 sensitivity analysis: the
+//! residency-transition speedup must be robust to ±2× on every device
+//! constant (DESIGN.md §3 justification for the substitution).
+//!
+//!     cargo bench --bench bench_memsim
+
+use glass::harness::fig5::paper_workloads;
+use glass::memsim::{decode_speedup, simulate_decode, DeviceProfile};
+use glass::util::bench::Bencher;
+use glass::util::table::{fnum, Table};
+
+fn main() {
+    let mut b = Bencher::default();
+    b.budget_s = 1.0;
+    let dev = DeviceProfile::galaxy_s25_ultra();
+    let gemma = &paper_workloads()[2].0;
+
+    b.bench("simulate_decode 256 tok", 256.0, || {
+        simulate_decode(&dev, gemma, 0.5, 256)
+    });
+
+    // sensitivity: scale each constant by 0.5x / 2x and re-check the
+    // Gemma-7B residency speedup stays order-of-magnitude
+    let mut t = Table::new(
+        "fig5 sensitivity: gemma-7b-bf16 speedup under perturbed device \
+         constants",
+        &["constant", "0.5x", "1x", "2x"],
+    );
+    let base = |d: &DeviceProfile| decode_speedup(d, gemma, 0.5, 64).2;
+    let nominal = base(&dev);
+    let variants: Vec<(&str, Box<dyn Fn(f64) -> DeviceProfile>)> = vec![
+        (
+            "ram_bw",
+            Box::new(|s| DeviceProfile {
+                ram_bw_bytes_s: 60e9 * s,
+                ..DeviceProfile::galaxy_s25_ultra()
+            }),
+        ),
+        (
+            "flash_bw",
+            Box::new(|s| DeviceProfile {
+                flash_bw_bytes_s: 3.5e9 * s,
+                ..DeviceProfile::galaxy_s25_ultra()
+            }),
+        ),
+        (
+            "compute",
+            Box::new(|s| DeviceProfile {
+                compute_flops_s: 2.0e12 * s,
+                ..DeviceProfile::galaxy_s25_ultra()
+            }),
+        ),
+        (
+            "flash_latency",
+            Box::new(|s| DeviceProfile {
+                flash_latency_s: 150e-6 * s,
+                ..DeviceProfile::galaxy_s25_ultra()
+            }),
+        ),
+    ];
+    let mut all_big = true;
+    for (name, make) in &variants {
+        let lo = base(&make(0.5));
+        let hi = base(&make(2.0));
+        all_big &= lo > 3.0 && hi > 3.0;
+        t.row(vec![
+            name.to_string(),
+            format!("{lo:.1}x"),
+            format!("{nominal:.1}x"),
+            format!("{hi:.1}x"),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "residency-transition speedup stays >3x under every ±2x \
+         perturbation: {all_big}"
+    );
+
+    // density cliff trace (Fig. 5 companion)
+    let mut cliff = Table::new(
+        "density cliff",
+        &["density %", "tok/s", "resident"],
+    );
+    for d10 in (1..=10).rev() {
+        let r = simulate_decode(&dev, gemma, d10 as f64 / 10.0, 64);
+        cliff.row(vec![
+            format!("{}", d10 * 10),
+            fnum(r.tokens_per_s, 1),
+            format!("{}", r.resident),
+        ]);
+    }
+    println!("{}", cliff.to_ascii());
+    println!("\n{}", b.report());
+}

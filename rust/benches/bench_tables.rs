@@ -1,0 +1,51 @@
+//! One bench per paper table/figure: runs every harness runner on a tiny
+//! sample budget and times it. This guarantees `cargo bench` exercises
+//! the full code path behind each reported table (the full-budget runs
+//! are `glass exp <id>`; see EXPERIMENTS.md).
+//!
+//!     cargo bench --bench bench_tables
+
+use std::path::Path;
+
+use glass::config::RunConfig;
+use glass::engine::Engine;
+use glass::harness::run_experiment;
+use glass::util::timer;
+
+fn main() {
+    let engine = Engine::load(Path::new("artifacts")).expect(
+        "artifact bundle missing — run `make artifacts` before benching",
+    );
+    let cfg = RunConfig {
+        lg_samples: 8,
+        sweep_samples: 4,
+        cls_samples: 4,
+        sg_samples: 4,
+        oracle_samples: 8,
+        lambda_grid: vec![0.0, 0.5, 1.0],
+        density_grid: vec![0.9, 0.5, 0.1],
+        results_dir: std::env::temp_dir().join("glass_bench_results"),
+        ..Default::default()
+    };
+
+    for id in ["table1", "table2", "table3", "table5", "table6", "fig4",
+               "fig5"] {
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, &engine, &cfg) {
+            Ok(report) => {
+                let dt = t0.elapsed().as_secs_f64();
+                println!(
+                    "bench {id:8} regenerated ({} table(s)) in {dt:6.2}s \
+                     [tiny budget]",
+                    report.tables.len()
+                );
+            }
+            Err(e) => {
+                eprintln!("bench {id}: FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("\nruntime profile over all table regenerations:");
+    println!("{}", timer::global().report());
+}

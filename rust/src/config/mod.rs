@@ -1,0 +1,217 @@
+//! Run configuration: typed experiment settings + a TOML-subset parser.
+//!
+//! Precedence (lowest to highest): built-in defaults → config file
+//! (`--config path.toml`) → CLI overrides. The defaults are sized so the
+//! full experiment suite finishes in minutes on one CPU core; the paper's
+//! full-scale settings are noted field-by-field.
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+use crate::util::cli::Args;
+
+/// Everything a harness run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact bundle directory (manifest.json, *.hlo.txt, params.bin).
+    pub artifacts_dir: PathBuf,
+    /// Where experiment reports (json + md) are written.
+    pub results_dir: PathBuf,
+    /// LG benchmark samples (paper: 3,602 Alpaca samples).
+    pub lg_samples: usize,
+    /// Samples for the density sweep, Tab. 3 (heavier: 9 densities).
+    pub sweep_samples: usize,
+    /// Classification items per family (paper: full benchmark sets).
+    pub cls_samples: usize,
+    /// Short-generation items per family.
+    pub sg_samples: usize,
+    /// Held-out sequences for the oracle-overlap analysis (paper: 100).
+    pub oracle_samples: usize,
+    /// Default sparsity density (paper headline: 0.5).
+    pub density: f64,
+    /// GLASS mixing weight λ (paper default 0.5 = equal reliability).
+    pub lambda: f64,
+    /// λ sweep grid for Fig. 4 (paper: 0..1 step 0.05).
+    pub lambda_grid: Vec<f64>,
+    /// Density grid for Tab. 3 (paper: 90%..10% step 10%).
+    pub density_grid: Vec<f64>,
+    /// Batch size used by batched harness runs (must match a compiled
+    /// executable: b1 or b4).
+    pub batch: usize,
+    /// Top-100 KLD truncation (App. B.2.2).
+    pub kld_top: usize,
+    /// Base seed for all harness randomness.
+    pub seed: u64,
+    /// Server bind address for `glass serve`.
+    pub bind: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            lg_samples: 96,
+            sweep_samples: 32,
+            cls_samples: 24,
+            sg_samples: 16,
+            oracle_samples: 48,
+            density: 0.5,
+            lambda: 0.5,
+            lambda_grid: (0..=10).map(|i| i as f64 / 10.0).collect(),
+            density_grid: vec![0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.2, 0.1],
+            batch: 4,
+            kld_top: 100,
+            seed: 0,
+            bind: "127.0.0.1:7433".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from optional TOML file then apply CLI overrides.
+    pub fn load(args: &Args) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(path) = args.get("config") {
+            cfg.apply_toml(&std::fs::read_to_string(path)?)?;
+        }
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, text: &str) -> Result<()> {
+        let doc = parse_toml(text)?;
+        let get = |k: &str| doc.get(&format!("run.{k}")).or_else(|| doc.get(k));
+        if let Some(v) = get("artifacts_dir") {
+            self.artifacts_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = get("results_dir") {
+            self.results_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = get("lg_samples") {
+            self.lg_samples = v.as_int()? as usize;
+        }
+        if let Some(v) = get("sweep_samples") {
+            self.sweep_samples = v.as_int()? as usize;
+        }
+        if let Some(v) = get("cls_samples") {
+            self.cls_samples = v.as_int()? as usize;
+        }
+        if let Some(v) = get("sg_samples") {
+            self.sg_samples = v.as_int()? as usize;
+        }
+        if let Some(v) = get("oracle_samples") {
+            self.oracle_samples = v.as_int()? as usize;
+        }
+        if let Some(v) = get("density") {
+            self.density = v.as_float()?;
+        }
+        if let Some(v) = get("lambda") {
+            self.lambda = v.as_float()?;
+        }
+        if let Some(v) = get("lambda_grid") {
+            self.lambda_grid = v.as_float_list()?;
+        }
+        if let Some(v) = get("density_grid") {
+            self.density_grid = v.as_float_list()?;
+        }
+        if let Some(v) = get("batch") {
+            self.batch = v.as_int()? as usize;
+        }
+        if let Some(v) = get("kld_top") {
+            self.kld_top = v.as_int()? as usize;
+        }
+        if let Some(v) = get("seed") {
+            self.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = get("bind") {
+            self.bind = v.as_str()?.to_string();
+        }
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = args.get("results") {
+            self.results_dir = PathBuf::from(v);
+        }
+        self.lg_samples = args.get_usize("lg-samples", self.lg_samples)?;
+        self.sweep_samples =
+            args.get_usize("sweep-samples", self.sweep_samples)?;
+        self.cls_samples = args.get_usize("cls-samples", self.cls_samples)?;
+        self.sg_samples = args.get_usize("sg-samples", self.sg_samples)?;
+        self.oracle_samples =
+            args.get_usize("oracle-samples", self.oracle_samples)?;
+        self.density = args.get_f64("density", self.density)?;
+        self.lambda = args.get_f64("lambda", self.lambda)?;
+        self.lambda_grid =
+            args.get_f64_list("lambda-grid", &self.lambda_grid)?;
+        self.density_grid =
+            args.get_f64_list("density-grid", &self.density_grid)?;
+        self.batch = args.get_usize("batch", self.batch)?;
+        self.kld_top = args.get_usize("kld-top", self.kld_top)?;
+        self.seed = args.get_usize("seed", self.seed as usize)? as u64;
+        if let Some(v) = args.get("bind") {
+            self.bind = v.to_string();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.density, 0.5);
+        assert_eq!(c.lambda, 0.5);
+        assert_eq!(c.density_grid.len(), 9);
+        assert!(c.batch == 4);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let mut c = RunConfig::default();
+        c.apply_toml(
+            "lg_samples = 10\ndensity = 0.25\nlambda_grid = [0.0, 1.0]\n\
+             bind = \"0.0.0.0:9\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.lg_samples, 10);
+        assert_eq!(c.density, 0.25);
+        assert_eq!(c.lambda_grid, vec![0.0, 1.0]);
+        assert_eq!(c.bind, "0.0.0.0:9");
+    }
+
+    #[test]
+    fn toml_section_form() {
+        let mut c = RunConfig::default();
+        c.apply_toml("[run]\nseed = 7\nbatch = 1\n").unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.batch, 1);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            &["x", "--density", "0.3", "--lambda-grid", "0.1,0.9"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.density, 0.3);
+        assert_eq!(c.lambda_grid, vec![0.1, 0.9]);
+    }
+}

@@ -1,0 +1,264 @@
+//! TOML-subset parser: `[section]` headers, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays of those. Comments with
+//! `#`. Keys are exposed flat as "section.key". Enough for run configs;
+//! not a general TOML implementation (no nested tables inline, no dates).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_float_list(&self) -> Result<Vec<f64>> {
+        match self {
+            TomlValue::Array(a) => a.iter().map(|v| v.as_float()).collect(),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: bad section", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, val) = line.split_once('=').ok_or_else(|| {
+            anyhow!("line {}: expected 'key = value'", lineno + 1)
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(val.trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.map.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<_>> = split_top_level(inner)
+            .iter()
+            .map(|p| parse_value(p.trim()))
+            .collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => bail!("bad escape \\{other:?}"),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse_toml(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\n[sec]\ne = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(doc.get("b").unwrap().as_float().unwrap(), 2.5);
+        assert_eq!(doc.get("c").unwrap().as_str().unwrap(), "hi");
+        assert!(doc.get("d").unwrap().as_bool().unwrap());
+        assert_eq!(
+            doc.get("sec.e").unwrap().as_float_list().unwrap(),
+            vec![1.0, 2.0, 3.0]
+        );
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc =
+            parse_toml("# header\na = 5 # trailing\ns = \"x # y\"\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_int().unwrap(), 5);
+        assert_eq!(doc.get("s").unwrap().as_str().unwrap(), "x # y");
+    }
+
+    #[test]
+    fn float_arrays() {
+        let doc = parse_toml("grid = [0.9, 0.5, 0.1]\n").unwrap();
+        assert_eq!(
+            doc.get("grid").unwrap().as_float_list().unwrap(),
+            vec![0.9, 0.5, 0.1]
+        );
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse_toml("x = 3\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_float().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = parse_toml("good = 1\nbad line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn escapes_in_strings() {
+        let doc = parse_toml("s = \"a\\nb\"\n").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str().unwrap(), "a\nb");
+    }
+}

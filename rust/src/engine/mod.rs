@@ -1,0 +1,311 @@
+//! Inference engine: prefill → mask selection → decode, over the AOT
+//! executables. This is the L3 hot path — pure Rust + PJRT, no Python.
+//!
+//! Two decode modes exist:
+//!  * **step mode** (`decode_step*`) — one token per call with per-slot
+//!    positions; used by the server's continuous batcher and the NPS
+//!    driver. KV round-trips the host each step (xla_extension 0.5.1
+//!    returns a single tuple buffer — see runtime docs).
+//!  * **fused mode** (`generate`) — the whole greedy decode loop runs
+//!    inside one XLA program (L2 `lax.scan`), no per-step host traffic;
+//!    used for dense-trajectory generation and batch evaluation. The
+//!    speedup of fused over step mode is quantified in bench_decode.
+
+pub mod session;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::glass::ImportanceMap;
+use crate::model::Tokenizer;
+use crate::runtime::{ModelSpec, Runtime, Value};
+use crate::tensor::{TensorF, TensorI};
+
+/// Host-side KV cache state for step-mode decode: [L, B, H, T, Dh] pair.
+#[derive(Debug, Clone)]
+pub struct KvState {
+    pub k: TensorF,
+    pub v: TensorF,
+}
+
+/// Prefill output for a batch.
+#[derive(Debug, Clone)]
+pub struct PrefillResult {
+    /// Next-token logits at each prompt's last position: [B, V].
+    pub logits: TensorF,
+    pub kv: KvState,
+    /// Local importance statistics A^l: [B, L, m] (paper Eq. 4).
+    pub stats: TensorF,
+    /// True prompt lengths per slot.
+    pub lens: Vec<usize>,
+}
+
+/// Fused-generation output for a batch.
+#[derive(Debug, Clone)]
+pub struct GenerateResult {
+    /// Generated token ids: [B, N].
+    pub tokens: TensorI,
+    /// Next-token logits after each generated token: [B, N, V].
+    pub logits: TensorF,
+    /// Mean decode-time activation statistics: [B, L, m] — the paper's
+    /// post-hoc oracle statistic when generated dense (App. C.1).
+    pub stats: TensorF,
+}
+
+/// The engine. Cheap to clone (shared runtime).
+#[derive(Clone)]
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    pub tok: Tokenizer,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        let tok = Tokenizer::from_spec(&rt.manifest.model);
+        Ok(Engine { rt, tok })
+    }
+
+    pub fn from_runtime(rt: Arc<Runtime>) -> Engine {
+        let tok = Tokenizer::from_spec(&rt.manifest.model);
+        Engine { rt, tok }
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.rt.manifest.model
+    }
+
+    /// Batch sizes with compiled executables (from the manifest).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .rt
+            .manifest
+            .executables
+            .iter()
+            .filter_map(|e| {
+                e.name
+                    .strip_prefix("decode_b")
+                    .and_then(|s| s.parse().ok())
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Pick the smallest compiled batch size that fits `n` slots.
+    pub fn pick_batch(&self, n: usize) -> Result<usize> {
+        self.batch_sizes()
+            .into_iter()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no compiled batch size fits {n} requests (have {:?})",
+                    self.batch_sizes()
+                )
+            })
+    }
+
+    /// Encode prompts into the fixed prefill frame: BOS + bytes, PAD to
+    /// prefill_len. Prompts longer than prefill_len-1 are tail-truncated
+    /// (keeps the most recent context).
+    pub fn encode_prompts(
+        &self,
+        prompts: &[String],
+        b: usize,
+    ) -> Result<(TensorI, Vec<usize>)> {
+        let spec = self.spec();
+        if prompts.len() > b {
+            bail!("{} prompts > batch {b}", prompts.len());
+        }
+        let s = spec.prefill_len;
+        let mut toks = vec![spec.pad_id; b * s];
+        let mut lens = vec![1usize; b];
+        for (i, p) in prompts.iter().enumerate() {
+            let mut ids = self.tok.encode_with_bos(p);
+            if ids.len() > s {
+                // keep BOS + most recent bytes
+                let tail = ids.split_off(ids.len() - (s - 1));
+                ids.truncate(1);
+                ids.extend(tail);
+            }
+            lens[i] = ids.len();
+            toks[i * s..i * s + ids.len()].copy_from_slice(&ids);
+        }
+        Ok((TensorI::new(vec![b, s], toks)?, lens))
+    }
+
+    // ------------------------------------------------------------ calls
+
+    pub fn prefill(
+        &self,
+        prompts: &[String],
+        b: usize,
+    ) -> Result<PrefillResult> {
+        let (tokens, lens) = self.encode_prompts(prompts, b)?;
+        let lens_t = TensorI::new(
+            vec![b],
+            lens.iter().map(|&l| l as i32).collect(),
+        )?;
+        let out = self.rt.call(
+            &format!("prefill_b{b}"),
+            &[Value::I32(tokens), Value::I32(lens_t)],
+        )?;
+        let mut it = out.into_iter();
+        let logits = it.next().unwrap().into_f32()?;
+        let k = it.next().unwrap().into_f32()?;
+        let v = it.next().unwrap().into_f32()?;
+        let stats = it.next().unwrap().into_f32()?;
+        Ok(PrefillResult {
+            logits,
+            kv: KvState { k, v },
+            stats,
+            lens,
+        })
+    }
+
+    /// One masked decode step. `tokens`/`pos` have length B; `mask` is
+    /// [B, L, m]. Returns (logits [B, V], per-token stats [B, L, m]) and
+    /// updates `kv` in place.
+    pub fn decode_step(
+        &self,
+        kv: &mut KvState,
+        tokens: &[i32],
+        pos: &[i32],
+        mask: &TensorF,
+    ) -> Result<(TensorF, TensorF)> {
+        let b = tokens.len();
+        let out = self.rt.call(
+            &format!("decode_b{b}"),
+            &[
+                Value::I32(TensorI::new(vec![b], tokens.to_vec())?),
+                Value::I32(TensorI::new(vec![b], pos.to_vec())?),
+                Value::F32(kv.k.clone()),
+                Value::F32(kv.v.clone()),
+                Value::F32(mask.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let logits = it.next().unwrap().into_f32()?;
+        kv.k = it.next().unwrap().into_f32()?;
+        kv.v = it.next().unwrap().into_f32()?;
+        let stats = it.next().unwrap().into_f32()?;
+        Ok((logits, stats))
+    }
+
+    /// One gathered-sparse decode step (L1 Pallas kernel). `idx` is
+    /// [B, L, K] with K = manifest.topk_k.
+    pub fn decode_step_topk(
+        &self,
+        kv: &mut KvState,
+        tokens: &[i32],
+        pos: &[i32],
+        idx: &TensorI,
+    ) -> Result<(TensorF, TensorF)> {
+        let b = tokens.len();
+        let out = self.rt.call(
+            &format!("decode_topk_b{b}"),
+            &[
+                Value::I32(TensorI::new(vec![b], tokens.to_vec())?),
+                Value::I32(TensorI::new(vec![b], pos.to_vec())?),
+                Value::F32(kv.k.clone()),
+                Value::F32(kv.v.clone()),
+                Value::I32(idx.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let logits = it.next().unwrap().into_f32()?;
+        kv.k = it.next().unwrap().into_f32()?;
+        kv.v = it.next().unwrap().into_f32()?;
+        let gstats = it.next().unwrap().into_f32()?;
+        Ok((logits, gstats))
+    }
+
+    /// Teacher-forced scorer: tokens [B, S_score], stats aggregation
+    /// weights [B, S_score], mask [B, L, m]. Returns (logits [B, S, V],
+    /// stats [B, L, m]).
+    pub fn score(
+        &self,
+        tokens: &TensorI,
+        stats_w: &TensorF,
+        mask: &TensorF,
+    ) -> Result<(TensorF, TensorF)> {
+        let b = tokens.shape[0];
+        let out = self.rt.call(
+            &format!("score_b{b}"),
+            &[
+                Value::I32(tokens.clone()),
+                Value::F32(stats_w.clone()),
+                Value::F32(mask.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let logits = it.next().unwrap().into_f32()?;
+        let stats = it.next().unwrap().into_f32()?;
+        Ok((logits, stats))
+    }
+
+    /// Fused prefill + greedy decode under a static mask (L2 scan; no
+    /// per-step host traffic).
+    pub fn generate(
+        &self,
+        prompts: &[String],
+        mask: &TensorF,
+        b: usize,
+    ) -> Result<GenerateResult> {
+        let (tokens, lens) = self.encode_prompts(prompts, b)?;
+        let lens_t = TensorI::new(
+            vec![b],
+            lens.iter().map(|&l| l as i32).collect(),
+        )?;
+        let out = self.rt.call(
+            &format!("generate_b{b}"),
+            &[
+                Value::I32(tokens),
+                Value::I32(lens_t),
+                Value::F32(mask.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let gen_tokens = it.next().unwrap().into_i32()?;
+        let gen_logits = it.next().unwrap().into_f32()?;
+        let gen_stats = it.next().unwrap().into_f32()?;
+        Ok(GenerateResult {
+            tokens: gen_tokens,
+            logits: gen_logits,
+            stats: gen_stats,
+        })
+    }
+
+    /// Local importance for one batch slot from prefill stats.
+    pub fn local_importance(
+        &self,
+        pre: &PrefillResult,
+        slot: usize,
+    ) -> Result<ImportanceMap> {
+        ImportanceMap::from_stats(&pre.stats, slot)
+    }
+
+    /// Decode generated ids to text, cutting at the first PAD/BOS.
+    pub fn decode_text(&self, ids: &[i32]) -> String {
+        let stop = ids
+            .iter()
+            .position(|&t| t >= 256)
+            .unwrap_or(ids.len());
+        self.tok.decode(&ids[..stop])
+    }
+
+    /// Dense ones-mask [B, L, m].
+    pub fn dense_mask(&self, b: usize) -> TensorF {
+        let spec = self.spec();
+        TensorF::ones(&[b, spec.n_layers, spec.ffn_m])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine methods need real artifacts; covered by rust/tests/
+    // integration suite. Pure helpers are tested here.
+}

@@ -1,0 +1,86 @@
+//! High-level sparse-generation sessions: the paper's full request flow
+//! (Fig. 2) — prefill, learn A^l, fuse with the global prior, build the
+//! static mask, then decode with it.
+
+use anyhow::Result;
+
+use super::{Engine, GenerateResult};
+use crate::glass::{
+    build_mask, pack_masks, GlobalPrior, ImportanceMap, MaskSet, Strategy,
+};
+use crate::tensor::TensorF;
+
+/// Everything produced by a sparse batch request.
+#[derive(Debug, Clone)]
+pub struct SparseRun {
+    pub masks: Vec<MaskSet>,
+    pub locals: Vec<ImportanceMap>,
+    pub result: GenerateResult,
+    pub texts: Vec<String>,
+}
+
+/// Run the full GLASS flow on a batch of prompts: prefill → per-slot mask
+/// via `strategy` → fused sparse generation.
+///
+/// `density` sets the per-layer budget k = round(m · density); `prior`
+/// must be supplied when the strategy needs one.
+pub fn run_sparse_batch(
+    engine: &Engine,
+    prompts: &[String],
+    strategy: &Strategy,
+    prior: Option<&GlobalPrior>,
+    density: f64,
+    b: usize,
+) -> Result<SparseRun> {
+    let spec = engine.spec().clone();
+    let k = spec.budget(density);
+
+    let pre = engine.prefill(prompts, b)?;
+    let mut locals = Vec::with_capacity(prompts.len());
+    let mut masks = Vec::with_capacity(prompts.len());
+    for slot in 0..prompts.len() {
+        let local = engine.local_importance(&pre, slot)?;
+        let mask = build_mask(strategy, &local, prior, k)?;
+        locals.push(local);
+        masks.push(mask);
+    }
+
+    let mask_t = pack_slot_masks(&masks, prompts.len(), b, &spec);
+    let result = engine.generate(prompts, &mask_t, b)?;
+    let texts = (0..prompts.len())
+        .map(|i| {
+            let n = result.tokens.shape[1];
+            engine.decode_text(&result.tokens.data[i * n..(i + 1) * n])
+        })
+        .collect();
+    Ok(SparseRun {
+        masks,
+        locals,
+        result,
+        texts,
+    })
+}
+
+/// Pack per-request masks into [B, L, m], padding unused slots dense.
+pub fn pack_slot_masks(
+    masks: &[MaskSet],
+    active: usize,
+    b: usize,
+    spec: &crate::runtime::ModelSpec,
+) -> TensorF {
+    let refs: Vec<Option<&MaskSet>> = (0..b)
+        .map(|i| if i < active { Some(&masks[i]) } else { None })
+        .collect();
+    pack_masks(&refs, spec.n_layers, spec.ffn_m)
+}
+
+/// Dense reference generation for the same prompts (the trajectory the
+/// deviation metrics condition on, App. B.2).
+pub fn run_dense_batch(
+    engine: &Engine,
+    prompts: &[String],
+    b: usize,
+) -> Result<GenerateResult> {
+    let mask = engine.dense_mask(b);
+    engine.generate(prompts, &mask, b)
+}

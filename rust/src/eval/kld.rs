@@ -1,0 +1,128 @@
+//! Top-100 Kullback-Leibler divergence (App. B.2.2).
+//!
+//! For each position, restrict both distributions to the 100 tokens with
+//! the highest probability under the *dense* reference, renormalize, and
+//! compute KL(P_dense ‖ Q_sparse). The dense model vs itself is exactly 0,
+//! so reported values quantify deviation from the dense baseline.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{log_softmax, topk_indices};
+
+/// Top-k KLD between a reference (dense) and a model (sparse) logit row.
+pub fn topk_kld(ref_logits: &[f32], model_logits: &[f32], k: usize) -> Result<f64> {
+    if ref_logits.len() != model_logits.len() {
+        bail!("vocab mismatch");
+    }
+    if k == 0 {
+        bail!("k must be positive");
+    }
+    let k = k.min(ref_logits.len());
+    let support = topk_indices(ref_logits, k);
+    let ref_lp = log_softmax(ref_logits);
+    let mod_lp = log_softmax(model_logits);
+
+    // renormalize over the support (log-domain)
+    let ref_lse = logsumexp_over(&ref_lp, &support);
+    let mod_lse = logsumexp_over(&mod_lp, &support);
+
+    let mut kld = 0.0f64;
+    for &t in &support {
+        let p = (ref_lp[t] - ref_lse) as f64; // log p
+        let q = (mod_lp[t] - mod_lse) as f64; // log q
+        kld += p.exp() * (p - q);
+    }
+    Ok(kld.max(0.0))
+}
+
+fn logsumexp_over(lp: &[f32], support: &[usize]) -> f32 {
+    let m = support
+        .iter()
+        .map(|&i| lp[i])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let s: f32 = support.iter().map(|&i| (lp[i] - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Mean top-k KLD over a sequence of (ref, model) logit row pairs.
+pub fn mean_topk_kld(
+    ref_rows: &[&[f32]],
+    model_rows: &[&[f32]],
+    k: usize,
+) -> Result<f64> {
+    if ref_rows.len() != model_rows.len() || ref_rows.is_empty() {
+        bail!("row count mismatch or empty");
+    }
+    let mut total = 0.0;
+    for (r, m) in ref_rows.iter().zip(model_rows) {
+        total += topk_kld(r, m, k)?;
+    }
+    Ok(total / ref_rows.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::{forall, UsizeGen};
+
+    #[test]
+    fn identical_distributions_zero() {
+        let logits = vec![0.3, -1.0, 2.0, 0.7, -0.2];
+        let k = topk_kld(&logits, &logits, 3).unwrap();
+        assert!(k.abs() < 1e-9);
+    }
+
+    #[test]
+    fn diverging_distributions_positive() {
+        let r = vec![5.0, 0.0, 0.0, 0.0];
+        let m = vec![0.0, 5.0, 0.0, 0.0];
+        assert!(topk_kld(&r, &m, 4).unwrap() > 1.0);
+    }
+
+    #[test]
+    fn k_clamps_to_vocab() {
+        let r = vec![1.0, 2.0];
+        assert!(topk_kld(&r, &r, 100).unwrap().abs() < 1e-9);
+    }
+
+    #[test]
+    fn restriction_uses_reference_support() {
+        // model puts mass on token 3 which is OUTSIDE the top-2 of ref;
+        // restricted KLD only sees tokens 0,1.
+        let r = vec![3.0, 2.0, -5.0, -5.0];
+        let m = vec![3.0, 2.0, -5.0, 50.0];
+        let kld = topk_kld(&r, &m, 2).unwrap();
+        assert!(kld.abs() < 1e-5, "kld={kld}");
+    }
+
+    #[test]
+    fn prop_kld_nonnegative_and_zero_on_self() {
+        forall(200, 61, &UsizeGen { lo: 2, hi: 64 }, |&v| {
+            let mut rng = Prng::new(v as u64 * 13 + 1);
+            let r: Vec<f32> =
+                (0..v).map(|_| rng.normal() as f32 * 3.0).collect();
+            let m: Vec<f32> =
+                (0..v).map(|_| rng.normal() as f32 * 3.0).collect();
+            let k = 1 + rng.below(v);
+            let kld = topk_kld(&r, &m, k).map_err(|e| e.to_string())?;
+            prop_assert!(kld >= 0.0, "negative kld {kld}");
+            prop_assert!(kld.is_finite(), "non-finite kld");
+            let self_kld =
+                topk_kld(&r, &r, k).map_err(|e| e.to_string())?;
+            prop_assert!(self_kld.abs() < 1e-6, "self kld {self_kld}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_over_rows() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 1.0];
+        let mean =
+            mean_topk_kld(&[&a, &a], &[&a, &b], 2).unwrap();
+        let single = topk_kld(&a, &b, 2).unwrap();
+        assert!((mean - single / 2.0).abs() < 1e-12);
+    }
+}

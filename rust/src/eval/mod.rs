@@ -1,0 +1,12 @@
+//! Evaluation metrics (App. B.2): deviation-from-dense PPL, top-100 KLD,
+//! ROUGE-1/2/L, token F1 / exact match, and MCQ scoring helpers.
+
+pub mod kld;
+pub mod ppl;
+pub mod rouge;
+pub mod text_metrics;
+
+pub use kld::topk_kld;
+pub use ppl::{nll_per_token, ppl_from_nll};
+pub use rouge::{rouge_l, rouge_n, RougeScores};
+pub use text_metrics::{exact_match, normalize_answer, token_f1};

@@ -1,0 +1,126 @@
+//! Deviation-from-dense perplexity (App. B.2.1).
+//!
+//! The dense model's greedy generation defines the reference trajectory;
+//! PPL measures how unlikely that trajectory is under the *sparsified*
+//! model: PPL = exp(−1/N Σ log q(x_i)). The dense model itself scores its
+//! own trajectory with low PPL by construction; higher sparse PPL =
+//! larger deviation.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{log_softmax, TensorF};
+
+/// Per-token negative log-likelihoods of `targets[i]` under
+/// `logits_rows[i]` (each row is a vocab-sized logit vector).
+pub fn nll_per_token(
+    logits: &TensorF,
+    positions: &[usize],
+    targets: &[i32],
+) -> Result<Vec<f64>> {
+    if logits.rank() != 2 {
+        bail!("nll_per_token expects [S, V] logits, got {:?}", logits.shape);
+    }
+    if positions.len() != targets.len() {
+        bail!("positions/targets length mismatch");
+    }
+    let v = logits.shape[1];
+    let mut out = Vec::with_capacity(targets.len());
+    for (&pos, &t) in positions.iter().zip(targets) {
+        if pos >= logits.shape[0] {
+            bail!("position {pos} out of range");
+        }
+        if (t as usize) >= v || t < 0 {
+            bail!("target {t} out of vocab {v}");
+        }
+        let lp = log_softmax(logits.row(pos));
+        out.push(-lp[t as usize] as f64);
+    }
+    Ok(out)
+}
+
+/// PPL from a set of per-token NLLs.
+pub fn ppl_from_nll(nll: &[f64]) -> f64 {
+    if nll.is_empty() {
+        return f64::NAN;
+    }
+    (nll.iter().sum::<f64>() / nll.len() as f64).exp()
+}
+
+/// Sum of option-token log-probabilities (0-shot unnormalized MCQ
+/// scoring, Tab. 1): logits row i predicts token i+1.
+pub fn option_logprob(
+    logits: &TensorF,
+    start: usize,
+    option_tokens: &[i32],
+) -> Result<f64> {
+    let mut total = 0.0;
+    for (i, &t) in option_tokens.iter().enumerate() {
+        let pos = start + i;
+        if pos >= logits.shape[0] {
+            bail!("option extends past scored window");
+        }
+        let lp = log_softmax(logits.row(pos));
+        total += lp[t as usize] as f64;
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_2x4() -> TensorF {
+        // row 0 strongly predicts token 2; row 1 uniform
+        TensorF::new(
+            vec![2, 4],
+            vec![0.0, 0.0, 10.0, 0.0, 1.0, 1.0, 1.0, 1.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn nll_matches_softmax() {
+        let l = logits_2x4();
+        let nll = nll_per_token(&l, &[0, 1], &[2, 0]).unwrap();
+        assert!(nll[0] < 0.01); // near-certain prediction
+        assert!((nll[1] - (4f64).ln()).abs() < 1e-5); // uniform
+    }
+
+    #[test]
+    fn ppl_of_uniform_is_vocab() {
+        let l = TensorF::new(vec![1, 4], vec![0.5; 4]).unwrap();
+        let nll = nll_per_token(&l, &[0], &[3]).unwrap();
+        assert!((ppl_from_nll(&nll) - 4.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn perfect_model_ppl_one() {
+        let mut data = vec![-30.0f32; 8];
+        data[1] = 30.0; // row 0 predicts token 1
+        data[4 + 2] = 30.0; // row 1 predicts token 2
+        let l = TensorF::new(vec![2, 4], data).unwrap();
+        let nll = nll_per_token(&l, &[0, 1], &[1, 2]).unwrap();
+        assert!((ppl_from_nll(&nll) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn option_logprob_sums() {
+        let l = logits_2x4();
+        let lp = option_logprob(&l, 0, &[2, 0]).unwrap();
+        let n = nll_per_token(&l, &[0, 1], &[2, 0]).unwrap();
+        assert!((lp + n.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let l = logits_2x4();
+        assert!(nll_per_token(&l, &[5], &[0]).is_err());
+        assert!(nll_per_token(&l, &[0], &[9]).is_err());
+        assert!(option_logprob(&l, 1, &[0, 0]).is_err());
+    }
+
+    #[test]
+    fn empty_nll_is_nan() {
+        assert!(ppl_from_nll(&[]).is_nan());
+    }
+}

@@ -1,0 +1,146 @@
+//! ROUGE-1/2/L (App. B.2.4): n-gram recall with clipped counts, and
+//! LCS-based ROUGE-L reported as an F-measure (β = 1).
+
+use std::collections::HashMap;
+
+use super::text_metrics::normalize_answer;
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RougeScores {
+    pub rouge1: f64,
+    pub rouge2: f64,
+    pub rouge_l: f64,
+}
+
+fn ngrams(tokens: &[String], n: usize) -> HashMap<Vec<&str>, usize> {
+    let mut map: HashMap<Vec<&str>, usize> = HashMap::new();
+    if tokens.len() < n {
+        return map;
+    }
+    for w in tokens.windows(n) {
+        let key: Vec<&str> = w.iter().map(|s| s.as_str()).collect();
+        *map.entry(key).or_insert(0) += 1;
+    }
+    map
+}
+
+/// ROUGE-n recall with clipped counts:
+/// Σ_g min(count_hyp(g), count_ref(g)) / Σ_g count_ref(g).
+pub fn rouge_n(hyp: &str, reference: &str, n: usize) -> f64 {
+    let h = normalize_answer(hyp);
+    let r = normalize_answer(reference);
+    let hg = ngrams(&h, n);
+    let rg = ngrams(&r, n);
+    let denom: usize = rg.values().sum();
+    if denom == 0 {
+        return 0.0;
+    }
+    let mut num = 0usize;
+    for (g, rc) in &rg {
+        let hc = hg.get(g).copied().unwrap_or(0);
+        num += hc.min(*rc);
+    }
+    num as f64 / denom as f64
+}
+
+fn lcs_len(a: &[String], b: &[String]) -> usize {
+    let mut dp = vec![0usize; b.len() + 1];
+    for x in a {
+        let mut prev = 0usize;
+        for (j, y) in b.iter().enumerate() {
+            let cur = dp[j + 1];
+            dp[j + 1] = if x == y {
+                prev + 1
+            } else {
+                dp[j + 1].max(dp[j])
+            };
+            prev = cur;
+        }
+    }
+    dp[b.len()]
+}
+
+/// ROUGE-L F-measure (β = 1): harmonic mean of LCS precision/recall.
+pub fn rouge_l(hyp: &str, reference: &str) -> f64 {
+    let h = normalize_answer(hyp);
+    let r = normalize_answer(reference);
+    if h.is_empty() || r.is_empty() {
+        return 0.0;
+    }
+    let l = lcs_len(&h, &r) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let p = l / h.len() as f64;
+    let rec = l / r.len() as f64;
+    2.0 * p * rec / (p + rec)
+}
+
+/// All three scores.
+pub fn rouge_all(hyp: &str, reference: &str) -> RougeScores {
+    RougeScores {
+        rouge1: rouge_n(hyp, reference, 1),
+        rouge2: rouge_n(hyp, reference, 2),
+        rouge_l: rouge_l(hyp, reference),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_text_scores_one() {
+        let s = "the quick fox jumps over the dog";
+        let r = rouge_all(s, s);
+        assert!((r.rouge1 - 1.0).abs() < 1e-12);
+        assert!((r.rouge2 - 1.0).abs() < 1e-12);
+        assert!((r.rouge_l - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_text_scores_zero() {
+        let r = rouge_all("alpha beta", "gamma delta");
+        assert_eq!(r.rouge1, 0.0);
+        assert_eq!(r.rouge2, 0.0);
+        assert_eq!(r.rouge_l, 0.0);
+    }
+
+    #[test]
+    fn rouge1_is_unigram_recall() {
+        // ref: {red, fox, runs} (articles dropped); hyp covers 2 of 3
+        let v = rouge_n("red fox sleeps", "the red fox runs", 1);
+        assert!((v - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge2_needs_order() {
+        let v = rouge_n("fox red", "red fox", 2);
+        assert_eq!(v, 0.0);
+        let w = rouge_n("red fox", "red fox", 2);
+        assert!((w - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_l_subsequence() {
+        // LCS("x c y d z", "c d") = "c d" (len 2); P=2/5, R=1
+        let v = rouge_l("x c y d z", "c d");
+        let p: f64 = 2.0 / 5.0;
+        let expect = 2.0 * p * 1.0 / (p + 1.0);
+        assert!((v - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clipped_counts() {
+        // hyp repeats "fox" 3x, ref has it once -> clipped to 1
+        let v = rouge_n("fox fox fox", "fox runs", 1);
+        assert!((v - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(rouge_n("", "x", 1), 0.0);
+        assert_eq!(rouge_n("x", "", 1), 0.0);
+        assert_eq!(rouge_l("", ""), 0.0);
+    }
+}

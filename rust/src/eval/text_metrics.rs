@@ -1,0 +1,99 @@
+//! Token-level F1 and exact match (App. B.2.5-6): answers are normalized
+//! (lower-case, punctuation and articles stripped) before comparison.
+
+use std::collections::HashMap;
+
+/// Normalize an answer string: lowercase, drop punctuation, drop the
+/// articles a/an/the, collapse whitespace.
+pub fn normalize_answer(s: &str) -> Vec<String> {
+    s.to_lowercase()
+        .chars()
+        .map(|c| if c.is_alphanumeric() || c.is_whitespace() { c } else { ' ' })
+        .collect::<String>()
+        .split_whitespace()
+        .filter(|w| !matches!(*w, "a" | "an" | "the"))
+        .map(|w| w.to_string())
+        .collect()
+}
+
+/// Exact match after normalization.
+pub fn exact_match(pred: &str, reference: &str) -> bool {
+    normalize_answer(pred) == normalize_answer(reference)
+}
+
+/// Token-level F1 over normalized multisets (App. B.2.6).
+pub fn token_f1(pred: &str, reference: &str) -> f64 {
+    let p = normalize_answer(pred);
+    let r = normalize_answer(reference);
+    if p.is_empty() || r.is_empty() {
+        return if p == r { 1.0 } else { 0.0 };
+    }
+    let mut counts: HashMap<&str, usize> = HashMap::new();
+    for w in &r {
+        *counts.entry(w.as_str()).or_insert(0) += 1;
+    }
+    let mut common = 0usize;
+    for w in &p {
+        if let Some(c) = counts.get_mut(w.as_str()) {
+            if *c > 0 {
+                *c -= 1;
+                common += 1;
+            }
+        }
+    }
+    if common == 0 {
+        return 0.0;
+    }
+    let precision = common as f64 / p.len() as f64;
+    let recall = common as f64 / r.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalization_rules() {
+        assert_eq!(
+            normalize_answer("The red Fox!"),
+            vec!["red".to_string(), "fox".to_string()]
+        );
+        assert_eq!(normalize_answer("a an the"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn em_ignores_case_punct_articles() {
+        assert!(exact_match("the Red fox.", "red fox"));
+        assert!(!exact_match("blue fox", "red fox"));
+    }
+
+    #[test]
+    fn f1_perfect_and_zero() {
+        assert!((token_f1("red fox", "the red fox") - 1.0).abs() < 1e-12);
+        assert_eq!(token_f1("blue dog", "red fox"), 0.0);
+    }
+
+    #[test]
+    fn f1_partial_overlap() {
+        // pred {near, lake}, ref {near, river}: common=1, P=R=0.5
+        let f1 = token_f1("near the lake", "near the river");
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_multiset_clipping() {
+        // repeated predicted tokens don't over-count
+        let f1 = token_f1("red red red", "red");
+        let p = 1.0 / 3.0;
+        let expect = 2.0 * p * 1.0 / (p + 1.0);
+        assert!((f1 - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        assert_eq!(token_f1("", ""), 1.0);
+        assert_eq!(token_f1("", "x"), 0.0);
+        assert_eq!(token_f1("the", "x"), 0.0); // normalizes to empty
+    }
+}

@@ -1,0 +1,253 @@
+//! Weighted Borda rank aggregation — the GLASS consensus rule (Sec. 3.4,
+//! Eq. 7) and its MAP interpretation (App. A).
+//!
+//! GLASS_j = (1 − λ) R_j^(l) + λ R_j^(g); keep the k neurons with the
+//! largest fused score. App. A shows this is the MAP consensus permutation
+//! of a Mallows-type model with squared Spearman distance; the property
+//! tests below verify that theorem numerically by brute force on small m.
+
+use super::ranking::{rank_ascending, rank_of_permutation, spearman_sq_distance};
+
+/// Fused GLASS scores from raw importance values (converts to ranks
+/// internally). λ ∈ [0,1]; λ=0 ≡ GRIFFIN (local-only), λ=1 ≡ static
+/// global mask (Sec. 4.3 / App. C.2 endpoints).
+pub fn glass_scores(local: &[f32], global: &[f32], lambda: f64) -> Vec<f64> {
+    assert_eq!(local.len(), global.len());
+    assert!((0.0..=1.0).contains(&lambda), "lambda out of [0,1]");
+    let rl = rank_ascending(local);
+    let rg = rank_ascending(global);
+    rl.iter()
+        .zip(&rg)
+        .map(|(&l, &g)| (1.0 - lambda) * l as f64 + lambda * g as f64)
+        .collect()
+}
+
+/// Fused scores from precomputed rank vectors (hot path — rank the global
+/// prior once per model, not once per request).
+pub fn glass_scores_from_ranks(
+    r_local: &[usize],
+    r_global: &[usize],
+    lambda: f64,
+) -> Vec<f64> {
+    assert_eq!(r_local.len(), r_global.len());
+    r_local
+        .iter()
+        .zip(r_global)
+        .map(|(&l, &g)| (1.0 - lambda) * l as f64 + lambda * g as f64)
+        .collect()
+}
+
+/// Select the top-k neurons by fused score, ties by lower index (paper's
+/// deterministic boundary rule). Returned ids are sorted ascending (the
+/// gathered kernel's preferred layout).
+///
+/// Uses O(m) partial selection instead of a full sort — at Llama-3-8B
+/// scale (m=14336) this cut per-request mask building from ~103 ms to a
+/// few ms (EXPERIMENTS.md §Perf iteration 6).
+pub fn select_topk(scores: &[f64], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    let desc = |a: &usize, b: &usize| {
+        scores[*b]
+            .partial_cmp(&scores[*a])
+            .expect("NaN fused score")
+            .then(a.cmp(b))
+    };
+    if k < idx.len() {
+        // partition so idx[..k] holds the k best under `desc` (ties by
+        // lower index are part of the comparator, so the boundary is
+        // deterministic)
+        idx.select_nth_unstable_by(k - 1, desc);
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+    idx
+}
+
+/// One-call convenience: raw importances → selected neuron ids.
+pub fn fuse_and_select(
+    local: &[f32],
+    global: &[f32],
+    lambda: f64,
+    k: usize,
+) -> Vec<usize> {
+    select_topk(&glass_scores(local, global, lambda), k)
+}
+
+/// The MAP objective of App. A Eq. 13:
+/// β_l‖r(π_l) − r(π)‖² + β_g‖r(π_g) − r(π)‖².
+/// Exposed for the theorem-verification tests.
+pub fn map_objective(
+    candidate_perm: &[usize],
+    r_local: &[usize],
+    r_global: &[usize],
+    beta_l: f64,
+    beta_g: f64,
+) -> f64 {
+    let r = rank_of_permutation(candidate_perm);
+    beta_l * spearman_sq_distance(r_local, &r)
+        + beta_g * spearman_sq_distance(r_global, &r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::{forall, PairGen, UsizeGen};
+
+    #[test]
+    fn lambda_endpoints_recover_baselines() {
+        let local = [0.9f32, 0.1, 0.5, 0.7];
+        let global = [0.1f32, 0.9, 0.7, 0.5];
+        // λ=0 -> pure local ordering
+        let s0 = glass_scores(&local, &global, 0.0);
+        assert_eq!(select_topk(&s0, 2), vec![0, 3]);
+        // λ=1 -> pure global ordering
+        let s1 = glass_scores(&local, &global, 1.0);
+        assert_eq!(select_topk(&s1, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn fusion_balances_signals() {
+        // neuron 2 is strong in both; 0 great locally only; 1 great
+        // globally only. With k=1 and λ=0.5, consensus picks neuron 2.
+        let local = [1.0f32, 0.0, 0.9, 0.1];
+        let global = [0.0f32, 1.0, 0.9, 0.1];
+        assert_eq!(fuse_and_select(&local, &global, 0.5, 1), vec![2]);
+    }
+
+    #[test]
+    fn select_topk_ties_by_index() {
+        let s = [1.0f64, 2.0, 2.0, 2.0];
+        assert_eq!(select_topk(&s, 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn selected_sorted_ascending() {
+        let s = [5.0f64, 1.0, 9.0, 3.0];
+        assert_eq!(select_topk(&s, 2), vec![0, 2]);
+    }
+
+    /// Brute-force verification of the App. A theorem: the Borda ordering
+    /// minimizes the Mallows MAP objective over ALL m! permutations.
+    #[test]
+    fn borda_is_map_minimizer_bruteforce() {
+        fn permutations(n: usize) -> Vec<Vec<usize>> {
+            if n == 0 {
+                return vec![vec![]];
+            }
+            let mut out = Vec::new();
+            for p in permutations(n - 1) {
+                for i in 0..=p.len() {
+                    let mut q = p.clone();
+                    q.insert(i, n - 1);
+                    out.push(q);
+                }
+            }
+            out
+        }
+
+        let mut rng = Prng::new(99);
+        for trial in 0..20 {
+            let m = 3 + (trial % 3); // m in {3,4,5}
+            let local: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let global: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let beta_l = 0.3 + rng.f64();
+            let beta_g = 0.2 + rng.f64();
+            let lambda = beta_g / (beta_l + beta_g);
+
+            let rl = rank_ascending(&local);
+            let rg = rank_ascending(&global);
+            // Borda consensus permutation: sort ascending by fused score
+            let s = glass_scores_from_ranks(&rl, &rg, lambda);
+            let mut borda_perm: Vec<usize> = (0..m).collect();
+            borda_perm.sort_by(|&a, &b| {
+                s[a].partial_cmp(&s[b]).unwrap().then(a.cmp(&b))
+            });
+
+            let borda_obj =
+                map_objective(&borda_perm, &rl, &rg, beta_l, beta_g);
+            for p in permutations(m) {
+                let obj = map_objective(&p, &rl, &rg, beta_l, beta_g);
+                assert!(
+                    borda_obj <= obj + 1e-9,
+                    "Borda not MAP: m={m} borda={borda_obj} perm={p:?} \
+                     obj={obj}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_topk_size_and_validity() {
+        forall(
+            300,
+            21,
+            &PairGen(
+                UsizeGen { lo: 1, hi: 64 },
+                UsizeGen { lo: 0, hi: 80 },
+            ),
+            |&(m, k)| {
+                let mut rng = Prng::new((m * 1000 + k) as u64);
+                let local: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+                let global: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+                let sel = fuse_and_select(&local, &global, 0.5, k);
+                prop_assert!(
+                    sel.len() == k.min(m),
+                    "wrong selection size {} for m={m} k={k}",
+                    sel.len()
+                );
+                prop_assert!(
+                    sel.windows(2).all(|w| w[0] < w[1]),
+                    "not sorted/unique: {sel:?}"
+                );
+                prop_assert!(
+                    sel.iter().all(|&j| j < m),
+                    "out of range: {sel:?}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_normalization_invariance() {
+        // Multiplying both β by a constant (equivalently keeping the same
+        // λ) must not change the selection (App. A Eq. 26-28).
+        forall(100, 22, &UsizeGen { lo: 2, hi: 40 }, |&m| {
+            let mut rng = Prng::new(m as u64 + 5);
+            let local: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let global: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let k = 1 + m / 2;
+            let s1 = glass_scores(&local, &global, 0.4);
+            let scaled: Vec<f64> = s1.iter().map(|x| x * 7.5).collect();
+            prop_assert!(
+                select_topk(&s1, k) == select_topk(&scaled, k),
+                "positive scaling changed selection"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_identical_signals_are_fixed_point() {
+        // When local == global, any λ yields the local-only selection.
+        forall(100, 23, &UsizeGen { lo: 1, hi: 50 }, |&m| {
+            let mut rng = Prng::new(m as u64 * 3 + 1);
+            let sc: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let k = 1 + m / 3;
+            let base = fuse_and_select(&sc, &sc, 0.0, k);
+            for lam in [0.25, 0.5, 0.75, 1.0] {
+                prop_assert!(
+                    fuse_and_select(&sc, &sc, lam, k) == base,
+                    "λ={lam} changed selection with identical signals"
+                );
+            }
+            Ok(())
+        });
+    }
+}

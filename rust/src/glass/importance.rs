@@ -1,0 +1,170 @@
+//! Importance accumulators: local prompt statistics A^l and general
+//! per-layer statistic maps ([L][m] matrices of non-negative scores).
+//!
+//! The executables emit ℓ2-normalized per-token activation magnitudes
+//! aggregated per layer ("stats" outputs, paper Eq. 4); this module holds
+//! and merges them on the host.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::TensorF;
+
+/// Per-layer importance map: scores[layer][neuron] ≥ 0.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImportanceMap {
+    pub layers: Vec<Vec<f32>>,
+}
+
+impl ImportanceMap {
+    pub fn zeros(n_layers: usize, m: usize) -> Self {
+        ImportanceMap {
+            layers: vec![vec![0.0; m]; n_layers],
+        }
+    }
+
+    pub fn from_layers(layers: Vec<Vec<f32>>) -> Result<Self> {
+        if layers.is_empty() {
+            bail!("importance map needs at least one layer");
+        }
+        let m = layers[0].len();
+        if layers.iter().any(|l| l.len() != m) {
+            bail!("ragged importance map");
+        }
+        Ok(ImportanceMap { layers })
+    }
+
+    /// Build from a stats tensor [B, L, m] for one batch slot b.
+    pub fn from_stats(stats: &TensorF, b: usize) -> Result<Self> {
+        if stats.rank() != 3 {
+            bail!("stats must be [B, L, m], got {:?}", stats.shape);
+        }
+        let (bs, l, m) = (stats.shape[0], stats.shape[1], stats.shape[2]);
+        if b >= bs {
+            bail!("batch index {b} out of range {bs}");
+        }
+        let mut layers = Vec::with_capacity(l);
+        for li in 0..l {
+            let start = (b * l + li) * m;
+            layers.push(stats.data[start..start + m].to_vec());
+        }
+        Ok(ImportanceMap { layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn m(&self) -> usize {
+        self.layers[0].len()
+    }
+
+    /// Weighted merge: self = (self*w_self + other*w_other)/(w_self+w_other)
+    /// — used when local evidence arrives in chunks (chunked prefill) or
+    /// when accumulating NPS statistics across generation steps.
+    pub fn merge(&mut self, other: &ImportanceMap, w_self: f64, w_other: f64) {
+        assert_eq!(self.n_layers(), other.n_layers());
+        assert_eq!(self.m(), other.m());
+        let tot = w_self + w_other;
+        if tot <= 0.0 {
+            return;
+        }
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x = ((*x as f64 * w_self + *y as f64 * w_other) / tot) as f32;
+            }
+        }
+    }
+
+    /// All values finite and non-negative?
+    pub fn is_well_formed(&self) -> bool {
+        self.layers
+            .iter()
+            .all(|l| l.iter().all(|x| x.is_finite() && *x >= 0.0))
+    }
+}
+
+/// Online accumulator over decode steps (used by the Rust NPS driver and
+/// the oracle statistic collection): running mean of per-token stats.
+#[derive(Debug, Clone)]
+pub struct OnlineImportance {
+    pub map: ImportanceMap,
+    pub n_tokens: u64,
+}
+
+impl OnlineImportance {
+    pub fn new(n_layers: usize, m: usize) -> Self {
+        OnlineImportance {
+            map: ImportanceMap::zeros(n_layers, m),
+            n_tokens: 0,
+        }
+    }
+
+    /// Push one token's stats [L, m] flattened (from a decode output for
+    /// a single batch slot).
+    pub fn push(&mut self, stats: &ImportanceMap) {
+        self.n_tokens += 1;
+        let w = 1.0 / self.n_tokens as f64;
+        for (acc, s) in self.map.layers.iter_mut().zip(&stats.layers) {
+            for (a, x) in acc.iter_mut().zip(s) {
+                *a = (*a as f64 * (1.0 - w) + *x as f64 * w) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_stats_extracts_slot() {
+        // B=2, L=2, m=3
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let t = TensorF::new(vec![2, 2, 3], data).unwrap();
+        let m0 = ImportanceMap::from_stats(&t, 0).unwrap();
+        assert_eq!(m0.layers, vec![vec![0.0, 1.0, 2.0], vec![3.0, 4.0, 5.0]]);
+        let m1 = ImportanceMap::from_stats(&t, 1).unwrap();
+        assert_eq!(m1.layers[0], vec![6.0, 7.0, 8.0]);
+        assert!(ImportanceMap::from_stats(&t, 2).is_err());
+    }
+
+    #[test]
+    fn merge_weighted_mean() {
+        let mut a = ImportanceMap::from_layers(vec![vec![1.0, 0.0]]).unwrap();
+        let b = ImportanceMap::from_layers(vec![vec![0.0, 1.0]]).unwrap();
+        a.merge(&b, 3.0, 1.0);
+        assert!((a.layers[0][0] - 0.75).abs() < 1e-6);
+        assert!((a.layers[0][1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn online_mean_matches_batch_mean() {
+        let mut acc = OnlineImportance::new(1, 2);
+        let samples = [[1.0f32, 2.0], [3.0, 4.0], [5.0, 6.0]];
+        for s in samples {
+            acc.push(
+                &ImportanceMap::from_layers(vec![s.to_vec()]).unwrap(),
+            );
+        }
+        assert_eq!(acc.n_tokens, 3);
+        assert!((acc.map.layers[0][0] - 3.0).abs() < 1e-5);
+        assert!((acc.map.layers[0][1] - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn well_formed_detects_nan_and_negatives() {
+        let ok = ImportanceMap::from_layers(vec![vec![0.0, 1.0]]).unwrap();
+        assert!(ok.is_well_formed());
+        let bad =
+            ImportanceMap::from_layers(vec![vec![f32::NAN, 1.0]]).unwrap();
+        assert!(!bad.is_well_formed());
+        let neg = ImportanceMap::from_layers(vec![vec![-1.0, 1.0]]).unwrap();
+        assert!(!neg.is_well_formed());
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        assert!(ImportanceMap::from_layers(vec![vec![1.0], vec![1.0, 2.0]])
+            .is_err());
+    }
+}

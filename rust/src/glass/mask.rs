@@ -1,0 +1,244 @@
+//! FFN masks: per-layer critical-neuron sets and their tensor encodings
+//! (Sec. 2.2 — "a 1D binary mask of size m for each FFN layer").
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{TensorF, TensorI};
+
+/// A static per-layer FFN mask for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskSet {
+    /// Selected (kept) neuron ids per layer, each sorted ascending.
+    pub layers: Vec<Vec<usize>>,
+    /// FFN width m.
+    pub m: usize,
+}
+
+impl MaskSet {
+    pub fn dense(n_layers: usize, m: usize) -> Self {
+        MaskSet {
+            layers: vec![(0..m).collect(); n_layers],
+            m,
+        }
+    }
+
+    pub fn from_indices(layers: Vec<Vec<usize>>, m: usize) -> Result<Self> {
+        for (li, l) in layers.iter().enumerate() {
+            if l.windows(2).any(|w| w[0] >= w[1]) {
+                bail!("layer {li}: indices must be sorted unique");
+            }
+            if l.iter().any(|&j| j >= m) {
+                bail!("layer {li}: index out of range");
+            }
+        }
+        Ok(MaskSet { layers, m })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Fraction of neurons kept, averaged over layers.
+    pub fn density(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers
+            .iter()
+            .map(|l| l.len() as f64 / self.m as f64)
+            .sum::<f64>()
+            / self.layers.len() as f64
+    }
+
+    /// 0/1 mask values for one layer.
+    pub fn layer_mask(&self, layer: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; self.m];
+        for &j in &self.layers[layer] {
+            v[j] = 1.0;
+        }
+        v
+    }
+
+    /// Jaccard similarity of the kept sets at `layer` (App. C.1).
+    pub fn jaccard_layer(&self, other: &MaskSet, layer: usize) -> f64 {
+        jaccard(&self.layers[layer], &other.layers[layer])
+    }
+
+    /// Mean Jaccard across layers.
+    pub fn jaccard_mean(&self, other: &MaskSet) -> f64 {
+        assert_eq!(self.n_layers(), other.n_layers());
+        (0..self.n_layers())
+            .map(|l| self.jaccard_layer(other, l))
+            .sum::<f64>()
+            / self.n_layers() as f64
+    }
+}
+
+/// Jaccard of two sorted index sets.
+pub fn jaccard(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let mut i = 0;
+    let mut j = 0;
+    let mut inter = 0usize;
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Pack per-slot masks into the [B, L, m] f32 tensor the masked
+/// executables take. `slots` may contain None (inactive batch slots →
+/// dense ones, harmless).
+pub fn pack_masks(
+    slots: &[Option<&MaskSet>],
+    n_layers: usize,
+    m: usize,
+) -> TensorF {
+    let b = slots.len();
+    let mut data = vec![1.0f32; b * n_layers * m];
+    for (bi, slot) in slots.iter().enumerate() {
+        if let Some(mask) = slot {
+            assert_eq!(mask.n_layers(), n_layers);
+            assert_eq!(mask.m, m);
+            for li in 0..n_layers {
+                let base = (bi * n_layers + li) * m;
+                data[base..base + m].copy_from_slice(&mask.layer_mask(li));
+            }
+        }
+    }
+    TensorF::new(vec![b, n_layers, m], data).expect("pack_masks shape")
+}
+
+/// Pack per-slot top-k index sets into the [B, L, K] i32 tensor the
+/// gathered (Pallas) executables take. Every layer must have exactly K
+/// kept neurons.
+pub fn pack_indices(
+    slots: &[&MaskSet],
+    n_layers: usize,
+    k: usize,
+) -> Result<TensorI> {
+    let b = slots.len();
+    let mut data = vec![0i32; b * n_layers * k];
+    for (bi, mask) in slots.iter().enumerate() {
+        if mask.n_layers() != n_layers {
+            bail!("slot {bi}: layer count mismatch");
+        }
+        for li in 0..n_layers {
+            let ids = &mask.layers[li];
+            if ids.len() != k {
+                bail!(
+                    "slot {bi} layer {li}: need exactly k={k} ids, got {}",
+                    ids.len()
+                );
+            }
+            let base = (bi * n_layers + li) * k;
+            for (x, &j) in data[base..base + k].iter_mut().zip(ids) {
+                *x = j as i32;
+            }
+        }
+    }
+    TensorI::new(vec![b, n_layers, k], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::{forall, UsizeGen};
+
+    #[test]
+    fn dense_mask_full_density() {
+        let m = MaskSet::dense(3, 8);
+        assert_eq!(m.density(), 1.0);
+        assert_eq!(m.layer_mask(0), vec![1.0; 8]);
+    }
+
+    #[test]
+    fn from_indices_validates() {
+        assert!(MaskSet::from_indices(vec![vec![0, 2, 1]], 4).is_err());
+        assert!(MaskSet::from_indices(vec![vec![0, 4]], 4).is_err());
+        let m = MaskSet::from_indices(vec![vec![1, 3]], 4).unwrap();
+        assert_eq!(m.layer_mask(0), vec![0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(m.density(), 0.5);
+    }
+
+    #[test]
+    fn jaccard_cases() {
+        assert_eq!(jaccard(&[0, 1], &[0, 1]), 1.0);
+        assert_eq!(jaccard(&[0, 1], &[2, 3]), 0.0);
+        assert!((jaccard(&[0, 1, 2], &[1, 2, 3]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn pack_masks_layout() {
+        let m1 = MaskSet::from_indices(vec![vec![0], vec![1]], 2).unwrap();
+        let t = pack_masks(&[Some(&m1), None], 2, 2);
+        assert_eq!(t.shape, vec![2, 2, 2]);
+        // slot 0: layer0 [1,0], layer1 [0,1]; slot 1: all ones
+        assert_eq!(t.data, vec![1., 0., 0., 1., 1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn pack_indices_layout_and_validation() {
+        let m1 =
+            MaskSet::from_indices(vec![vec![1, 3], vec![0, 2]], 4).unwrap();
+        let t = pack_indices(&[&m1], 2, 2).unwrap();
+        assert_eq!(t.shape, vec![1, 2, 2]);
+        assert_eq!(t.data, vec![1, 3, 0, 2]);
+        assert!(pack_indices(&[&m1], 2, 3).is_err());
+    }
+
+    #[test]
+    fn prop_jaccard_bounds_and_symmetry() {
+        forall(200, 31, &UsizeGen { lo: 1, hi: 64 }, |&m| {
+            let mut rng = Prng::new(m as u64 * 7 + 3);
+            let k = 1 + rng.below(m);
+            let mut a = rng.sample_indices(m, k);
+            let mut b = rng.sample_indices(m, k);
+            a.sort_unstable();
+            b.sort_unstable();
+            let jab = jaccard(&a, &b);
+            let jba = jaccard(&b, &a);
+            prop_assert!((0.0..=1.0).contains(&jab), "out of bounds");
+            prop_assert!((jab - jba).abs() < 1e-12, "asymmetric");
+            prop_assert!(
+                (jaccard(&a, &a) - 1.0).abs() < 1e-12,
+                "self-jaccard != 1"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pack_masks_density_consistent() {
+        forall(100, 32, &UsizeGen { lo: 1, hi: 32 }, |&m| {
+            let mut rng = Prng::new(m as u64 + 17);
+            let k = 1 + rng.below(m);
+            let mut ids = rng.sample_indices(m, k);
+            ids.sort_unstable();
+            let mask =
+                MaskSet::from_indices(vec![ids.clone(), ids], m).unwrap();
+            let t = pack_masks(&[Some(&mask)], 2, m);
+            let ones = t.data.iter().filter(|&&x| x == 1.0).count();
+            prop_assert!(ones == 2 * k, "mask ones {ones} != 2k");
+            prop_assert!(
+                (mask.density() - k as f64 / m as f64).abs() < 1e-12,
+                "density mismatch"
+            );
+            Ok(())
+        });
+    }
+}

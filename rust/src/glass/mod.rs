@@ -1,0 +1,17 @@
+//! The paper's core algorithm (Sec. 3): local/global neuron importance,
+//! rank conversion, weighted Borda fusion (the MAP consensus ranking of
+//! App. A), and mask selection for GLASS plus all baselines.
+
+pub mod fusion;
+pub mod importance;
+pub mod mask;
+pub mod prior;
+pub mod ranking;
+pub mod selector;
+
+pub use fusion::{fuse_and_select, glass_scores, select_topk};
+pub use importance::{ImportanceMap, OnlineImportance};
+pub use mask::{jaccard, pack_indices, pack_masks, MaskSet};
+pub use prior::{GlobalPrior, PriorKind};
+pub use ranking::rank_ascending;
+pub use selector::{build_mask, Strategy};

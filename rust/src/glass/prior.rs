@@ -1,0 +1,101 @@
+//! Global model-intrinsic priors (Sec. 3.1–3.3): A^g (activation
+//! magnitude) and I^g (Taylor impact), computed offline via NPS or a
+//! held-out corpus and loaded from the artifact bundle.
+//!
+//! The prior's rank vectors are computed ONCE at load time — only the
+//! local signal is ranked per request (hot-path optimization measured in
+//! bench_glass_core).
+
+use anyhow::Result;
+
+use super::importance::ImportanceMap;
+use super::ranking::rank_ascending;
+use crate::runtime::Runtime;
+
+/// Named prior variants matching the artifact bundle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorKind {
+    /// A^g from Null-Prompt Stimulation (A-GLASS, NPS).
+    ANps,
+    /// I^g from NPS teacher-forced replay (I-GLASS, NPS).
+    INps,
+    /// A^g from the held-out external corpus (Tab. 3's "Wiki" variant).
+    ACorpus,
+    /// I^g from the held-out external corpus.
+    ICorpus,
+}
+
+impl PriorKind {
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            PriorKind::ANps => "a_nps",
+            PriorKind::INps => "i_nps",
+            PriorKind::ACorpus => "a_corpus",
+            PriorKind::ICorpus => "i_corpus",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PriorKind::ANps => "A-GLASS (NPS)",
+            PriorKind::INps => "I-GLASS (NPS)",
+            PriorKind::ACorpus => "A-GLASS (corpus)",
+            PriorKind::ICorpus => "I-GLASS (corpus)",
+        }
+    }
+
+    pub fn all() -> [PriorKind; 4] {
+        [
+            PriorKind::ANps,
+            PriorKind::INps,
+            PriorKind::ACorpus,
+            PriorKind::ICorpus,
+        ]
+    }
+}
+
+/// A loaded global prior with precomputed per-layer rank vectors.
+#[derive(Debug, Clone)]
+pub struct GlobalPrior {
+    pub name: String,
+    pub map: ImportanceMap,
+    /// rank_ascending of each layer's scores, cached.
+    pub ranks: Vec<Vec<usize>>,
+}
+
+impl GlobalPrior {
+    pub fn new(name: &str, layers: Vec<Vec<f32>>) -> Result<GlobalPrior> {
+        let map = ImportanceMap::from_layers(layers)?;
+        let ranks = map.layers.iter().map(|l| rank_ascending(l)).collect();
+        Ok(GlobalPrior {
+            name: name.to_string(),
+            map,
+            ranks,
+        })
+    }
+
+    /// Load a prior from the artifact bundle.
+    pub fn load(rt: &Runtime, kind: PriorKind) -> Result<GlobalPrior> {
+        let layers = rt.load_prior(kind.artifact_name())?;
+        GlobalPrior::new(kind.artifact_name(), layers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_precomputed() {
+        let p =
+            GlobalPrior::new("t", vec![vec![0.3, 0.1, 0.9]]).unwrap();
+        assert_eq!(p.ranks[0], vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn kinds_map_to_artifacts() {
+        assert_eq!(PriorKind::ANps.artifact_name(), "a_nps");
+        assert_eq!(PriorKind::ICorpus.artifact_name(), "i_corpus");
+        assert_eq!(PriorKind::all().len(), 4);
+    }
+}

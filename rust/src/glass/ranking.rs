@@ -1,0 +1,190 @@
+//! Rank conversion (Sec. 3.4): importance scores → rank space.
+//!
+//! `rank_ascending` assigns rank 1 to the smallest score and rank m to the
+//! largest, with **stable deterministic tie-breaking by neuron index**
+//! (paper footnote 3 / App. A): among equal scores, the lower index gets
+//! the lower rank. This makes mask selection reproducible bit-for-bit.
+
+/// Rank vector r where r[j] ∈ {1..m} is the rank of neuron j
+/// (1 = least important). Ties broken by index (lower index → lower rank).
+pub fn rank_ascending(scores: &[f32]) -> Vec<usize> {
+    let m = scores.len();
+    let mut order: Vec<usize> = (0..m).collect();
+    // unstable sort is safe: the index tie-break makes the comparator a
+    // total order, so the result is fully deterministic (and ~2x faster
+    // at paper-scale m — EXPERIMENTS.md §Perf iteration 7)
+    order.sort_unstable_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .expect("NaN importance score")
+            .then(a.cmp(&b))
+    });
+    let mut ranks = vec![0usize; m];
+    for (pos, &j) in order.iter().enumerate() {
+        ranks[j] = pos + 1; // 1-based, paper convention
+    }
+    ranks
+}
+
+/// The permutation π (neurons ordered least→most important) induced by
+/// sorting scores ascending with the same tie rule.
+pub fn permutation_ascending(scores: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[a]
+            .partial_cmp(&scores[b])
+            .expect("NaN importance score")
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// Rank vector of a permutation: r[π[pos]] = pos + 1.
+pub fn rank_of_permutation(perm: &[usize]) -> Vec<usize> {
+    let mut r = vec![0usize; perm.len()];
+    for (pos, &j) in perm.iter().enumerate() {
+        r[j] = pos + 1;
+    }
+    r
+}
+
+/// Squared Spearman rank distance ‖r(σ1) − r(σ2)‖² (App. A) — the Mallows
+/// model's distance; used by tests to verify the MAP theorem numerically.
+pub fn spearman_sq_distance(r1: &[usize], r2: &[usize]) -> f64 {
+    assert_eq!(r1.len(), r2.len());
+    r1.iter()
+        .zip(r2)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Check that `r` is a valid rank vector (a permutation of 1..m).
+pub fn is_valid_rank_vector(r: &[usize]) -> bool {
+    let m = r.len();
+    let mut seen = vec![false; m + 1];
+    for &x in r {
+        if x == 0 || x > m || seen[x] {
+            return false;
+        }
+        seen[x] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::quickcheck::{forall, F32VecGen};
+
+    #[test]
+    fn simple_ranks() {
+        // scores: idx0=0.3 idx1=0.1 idx2=0.9 -> ranks 2,1,3
+        assert_eq!(rank_ascending(&[0.3, 0.1, 0.9]), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        // equal scores: lower index gets lower rank
+        assert_eq!(rank_ascending(&[0.5, 0.5, 0.1]), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn rank_of_permutation_inverse() {
+        let perm = vec![2, 0, 1]; // neuron 2 least important
+        let r = rank_of_permutation(&perm);
+        assert_eq!(r, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn prop_rank_is_permutation() {
+        forall(
+            300,
+            11,
+            &F32VecGen {
+                min_len: 1,
+                max_len: 64,
+                lo: -2.0,
+                hi: 2.0,
+            },
+            |scores| {
+                let r = rank_ascending(scores);
+                prop_assert!(
+                    is_valid_rank_vector(&r),
+                    "not a rank vector: {r:?}"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_rank_respects_order() {
+        forall(
+            200,
+            12,
+            &F32VecGen {
+                min_len: 2,
+                max_len: 32,
+                lo: -1.0,
+                hi: 1.0,
+            },
+            |scores| {
+                let r = rank_ascending(scores);
+                for i in 0..scores.len() {
+                    for j in 0..scores.len() {
+                        if scores[i] < scores[j] {
+                            prop_assert!(
+                                r[i] < r[j],
+                                "rank order violated at ({i},{j})"
+                            );
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone_transform_invariance() {
+        // Ranking is invariant to monotone transforms (Sec. 3.4 claim).
+        forall(
+            200,
+            13,
+            &F32VecGen {
+                min_len: 1,
+                max_len: 48,
+                lo: 0.0,
+                hi: 3.0,
+            },
+            |scores| {
+                let transformed: Vec<f32> =
+                    scores.iter().map(|x| (x * 2.0).exp()).collect();
+                prop_assert!(
+                    rank_ascending(scores) == rank_ascending(&transformed),
+                    "monotone transform changed ranks"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn permutation_and_ranks_consistent() {
+        let scores = [0.4f32, 0.1, 0.4, 0.8];
+        let perm = permutation_ascending(&scores);
+        let r = rank_of_permutation(&perm);
+        assert_eq!(r, rank_ascending(&scores));
+    }
+
+    #[test]
+    fn spearman_distance_zero_iff_equal() {
+        let r1 = vec![1, 2, 3];
+        assert_eq!(spearman_sq_distance(&r1, &r1), 0.0);
+        assert!(spearman_sq_distance(&r1, &[3, 2, 1]) > 0.0);
+    }
+}

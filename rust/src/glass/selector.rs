@@ -1,0 +1,309 @@
+//! Mask-selection strategies: GLASS (A-/I-) and every baseline the paper
+//! compares or ablates against (GRIFFIN local-only, static global-only,
+//! oracle, random, CATS-like and TDA-like threshold rules).
+//!
+//! A selector maps (local prompt statistics, global prior, budget) to a
+//! [`MaskSet`]. Selection runs on the L3 hot path between prefill and the
+//! first decode step; it is pure host code (a few µs per request —
+//! benchmarked in bench_glass_core).
+
+use anyhow::{bail, Result};
+
+use super::fusion::{glass_scores_from_ranks, select_topk};
+use super::importance::ImportanceMap;
+use super::mask::MaskSet;
+use super::prior::GlobalPrior;
+use crate::tensor::topk_indices;
+use crate::util::prng::Prng;
+
+/// Which neurons to keep, given the evidence.
+#[derive(Debug, Clone)]
+pub enum Strategy {
+    /// No pruning (the dense reference).
+    Dense,
+    /// GRIFFIN: top-k by local prompt statistics only (λ = 0).
+    LocalOnly,
+    /// Static global mask: top-k by the prior only (λ = 1).
+    GlobalOnly,
+    /// GLASS rank fusion with mixing weight λ (Sec. 3.4, Eq. 7).
+    Glass { lambda: f64 },
+    /// Uniform-random kept set (sanity floor).
+    Random { seed: u64 },
+    /// Oracle: top-k by post-hoc decoding-time statistics (App. C.1) —
+    /// the caller supplies those statistics as the "local" argument.
+    Oracle,
+    /// CATS-like: per-layer threshold at the (1-density) quantile of the
+    /// *global prior* magnitudes (offline-statistics thresholding).
+    CatsThreshold,
+    /// TDA-like: per-layer threshold at the (1-density) quantile of the
+    /// *prefill* activations (first-activations thresholding).
+    TdaThreshold,
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Dense => "dense".into(),
+            Strategy::LocalOnly => "griffin".into(),
+            Strategy::GlobalOnly => "global-only".into(),
+            Strategy::Glass { lambda } => format!("glass(λ={lambda})"),
+            Strategy::Random { .. } => "random".into(),
+            Strategy::Oracle => "oracle".into(),
+            Strategy::CatsThreshold => "cats-threshold".into(),
+            Strategy::TdaThreshold => "tda-threshold".into(),
+        }
+    }
+
+    pub fn needs_prior(&self) -> bool {
+        matches!(
+            self,
+            Strategy::GlobalOnly
+                | Strategy::Glass { .. }
+                | Strategy::CatsThreshold
+        )
+    }
+}
+
+/// Build the mask for one request.
+///
+/// * `local` — per-layer prompt statistics A^l ([L][m], from prefill); for
+///   [`Strategy::Oracle`] pass the post-hoc decode statistics instead.
+/// * `prior` — the global prior (A^g or I^g); required iff
+///   `strategy.needs_prior()`.
+/// * `k` — per-layer neuron budget.
+pub fn build_mask(
+    strategy: &Strategy,
+    local: &ImportanceMap,
+    prior: Option<&GlobalPrior>,
+    k: usize,
+) -> Result<MaskSet> {
+    let n_layers = local.n_layers();
+    let m = local.m();
+    if k == 0 || k > m {
+        bail!("budget k={k} out of range (m={m})");
+    }
+    if strategy.needs_prior() && prior.is_none() {
+        bail!("{} requires a global prior", strategy.name());
+    }
+    if let Some(p) = prior {
+        if p.map.n_layers() != n_layers || p.map.m() != m {
+            bail!("prior shape mismatch");
+        }
+    }
+
+    let layers: Vec<Vec<usize>> = match strategy {
+        Strategy::Dense => {
+            return Ok(MaskSet::dense(n_layers, m));
+        }
+        Strategy::LocalOnly | Strategy::Oracle => (0..n_layers)
+            .map(|l| sorted(topk_indices(&local.layers[l], k)))
+            .collect(),
+        Strategy::GlobalOnly => {
+            let p = prior.unwrap();
+            (0..n_layers)
+                .map(|l| sorted(topk_indices(&p.map.layers[l], k)))
+                .collect()
+        }
+        Strategy::Glass { lambda } => {
+            let p = prior.unwrap();
+            (0..n_layers)
+                .map(|l| {
+                    let rl =
+                        super::ranking::rank_ascending(&local.layers[l]);
+                    let s =
+                        glass_scores_from_ranks(&rl, &p.ranks[l], *lambda);
+                    select_topk(&s, k)
+                })
+                .collect()
+        }
+        Strategy::Random { seed } => {
+            let mut rng = Prng::new(*seed);
+            (0..n_layers)
+                .map(|_| sorted(rng.sample_indices(m, k)))
+                .collect()
+        }
+        Strategy::CatsThreshold => {
+            let p = prior.unwrap();
+            (0..n_layers)
+                .map(|l| threshold_select(&p.map.layers[l], k))
+                .collect()
+        }
+        Strategy::TdaThreshold => (0..n_layers)
+            .map(|l| threshold_select(&local.layers[l], k))
+            .collect(),
+    };
+    MaskSet::from_indices(layers, m)
+}
+
+fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+    v.sort_unstable();
+    v
+}
+
+/// Threshold selection: keep everything ≥ the value at the k-th largest
+/// position. With distinct scores this equals top-k; the threshold framing
+/// mirrors CATS/TDA semantics (ties at the boundary keep lower indices —
+/// same deterministic rule).
+fn threshold_select(scores: &[f32], k: usize) -> Vec<usize> {
+    sorted(topk_indices(scores, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glass::prior::GlobalPrior;
+    use crate::prop_assert;
+    use crate::util::quickcheck::{forall, UsizeGen};
+
+    fn imap(layers: Vec<Vec<f32>>) -> ImportanceMap {
+        ImportanceMap::from_layers(layers).unwrap()
+    }
+
+    #[test]
+    fn dense_keeps_everything() {
+        let local = imap(vec![vec![0.1, 0.2, 0.3]]);
+        let m = build_mask(&Strategy::Dense, &local, None, 1).unwrap();
+        assert_eq!(m.density(), 1.0);
+    }
+
+    #[test]
+    fn local_only_is_griffin() {
+        let local = imap(vec![vec![0.9, 0.1, 0.5, 0.7]]);
+        let m = build_mask(&Strategy::LocalOnly, &local, None, 2).unwrap();
+        assert_eq!(m.layers[0], vec![0, 3]);
+    }
+
+    #[test]
+    fn global_only_ignores_local() {
+        let local = imap(vec![vec![0.9, 0.1, 0.5, 0.7]]);
+        let prior =
+            GlobalPrior::new("g", vec![vec![0.0, 1.0, 0.9, 0.1]]).unwrap();
+        let m =
+            build_mask(&Strategy::GlobalOnly, &local, Some(&prior), 2)
+                .unwrap();
+        assert_eq!(m.layers[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn glass_lambda_endpoints_match_baselines() {
+        let local = imap(vec![vec![0.9, 0.1, 0.5, 0.7], vec![
+            0.2, 0.8, 0.6, 0.4,
+        ]]);
+        let prior = GlobalPrior::new(
+            "g",
+            vec![vec![0.0, 1.0, 0.9, 0.1], vec![0.5, 0.1, 0.9, 0.2]],
+        )
+        .unwrap();
+        let g0 = build_mask(
+            &Strategy::Glass { lambda: 0.0 },
+            &local,
+            Some(&prior),
+            2,
+        )
+        .unwrap();
+        let grif =
+            build_mask(&Strategy::LocalOnly, &local, Some(&prior), 2)
+                .unwrap();
+        assert_eq!(g0, grif);
+        let g1 = build_mask(
+            &Strategy::Glass { lambda: 1.0 },
+            &local,
+            Some(&prior),
+            2,
+        )
+        .unwrap();
+        let glob =
+            build_mask(&Strategy::GlobalOnly, &local, Some(&prior), 2)
+                .unwrap();
+        assert_eq!(g1, glob);
+    }
+
+    #[test]
+    fn missing_prior_rejected() {
+        let local = imap(vec![vec![0.1, 0.2]]);
+        assert!(build_mask(
+            &Strategy::Glass { lambda: 0.5 },
+            &local,
+            None,
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn budget_validated() {
+        let local = imap(vec![vec![0.1, 0.2]]);
+        assert!(build_mask(&Strategy::LocalOnly, &local, None, 0).is_err());
+        assert!(build_mask(&Strategy::LocalOnly, &local, None, 3).is_err());
+    }
+
+    #[test]
+    fn random_deterministic_per_seed() {
+        let local = imap(vec![vec![0.0; 16]]);
+        let a = build_mask(&Strategy::Random { seed: 5 }, &local, None, 4)
+            .unwrap();
+        let b = build_mask(&Strategy::Random { seed: 5 }, &local, None, 4)
+            .unwrap();
+        let c = build_mask(&Strategy::Random { seed: 6 }, &local, None, 4)
+            .unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn prop_all_strategies_respect_budget() {
+        forall(120, 41, &UsizeGen { lo: 2, hi: 48 }, |&m| {
+            let mut rng = Prng::new(m as u64);
+            let k = 1 + rng.below(m);
+            let local = imap(vec![
+                (0..m).map(|_| rng.f32()).collect(),
+                (0..m).map(|_| rng.f32()).collect(),
+            ]);
+            let prior = GlobalPrior::new(
+                "p",
+                vec![
+                    (0..m).map(|_| rng.f32()).collect(),
+                    (0..m).map(|_| rng.f32()).collect(),
+                ],
+            )
+            .unwrap();
+            for strat in [
+                Strategy::LocalOnly,
+                Strategy::GlobalOnly,
+                Strategy::Glass { lambda: 0.5 },
+                Strategy::Random { seed: 1 },
+                Strategy::Oracle,
+                Strategy::CatsThreshold,
+                Strategy::TdaThreshold,
+            ] {
+                let mask =
+                    build_mask(&strat, &local, Some(&prior), k).unwrap();
+                for l in 0..2 {
+                    prop_assert!(
+                        mask.layers[l].len() == k,
+                        "{} layer {l}: {} != k={k}",
+                        strat.name(),
+                        mask.layers[l].len()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn glass_consensus_prefers_agreement() {
+        // Neuron good in both signals beats neurons good in only one.
+        let local = imap(vec![vec![1.0, 0.0, 0.9, 0.1]]);
+        let prior =
+            GlobalPrior::new("g", vec![vec![0.0, 1.0, 0.9, 0.1]]).unwrap();
+        let m = build_mask(
+            &Strategy::Glass { lambda: 0.5 },
+            &local,
+            Some(&prior),
+            1,
+        )
+        .unwrap();
+        assert_eq!(m.layers[0], vec![2]);
+    }
+}

@@ -1,0 +1,81 @@
+//! Selector ablation (beyond the paper's tables): every mask-selection
+//! strategy implemented in `glass::selector` evaluated under the LG
+//! deviation protocol at one density — GLASS and GRIFFIN alongside the
+//! related-work baselines (CATS-like offline thresholding, TDA-like
+//! prefill thresholding), the post-hoc oracle upper reference, and the
+//! random floor. `glass exp ablation`.
+
+use anyhow::Result;
+
+use super::lgeval::eval_strategies;
+use super::{lg_prompts, ExpReport};
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::glass::{GlobalPrior, PriorKind, Strategy};
+use crate::util::json::Json;
+use crate::util::table::{improvement_pct, mean_std, Table};
+
+pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let prompts = lg_prompts(engine, cfg.lg_samples)?;
+    let a_nps = GlobalPrior::load(&engine.rt, PriorKind::ANps)?;
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+
+    let strategies: Vec<(String, Strategy, Option<&GlobalPrior>)> = vec![
+        ("Random (floor)".into(), Strategy::Random { seed: cfg.seed }, None),
+        ("TDA-like (prefill threshold)".into(), Strategy::TdaThreshold, None),
+        ("CATS-like (offline threshold)".into(), Strategy::CatsThreshold,
+         Some(&a_nps)),
+        ("GRIFFIN (local-only)".into(), Strategy::LocalOnly, None),
+        ("Global-only".into(), Strategy::GlobalOnly, Some(&a_nps)),
+        (
+            "A-GLASS".into(),
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(&a_nps),
+        ),
+        (
+            "I-GLASS".into(),
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(&i_nps),
+        ),
+        ("Oracle (post-hoc upper ref)".into(), Strategy::Oracle, None),
+    ];
+    let results = eval_strategies(
+        engine,
+        &prompts,
+        cfg.batch,
+        &strategies,
+        cfg.density,
+        cfg.kld_top,
+    )?;
+
+    let rand_kld = results[0].1.kld.mean;
+    let mut t = Table::new(
+        &format!(
+            "Selector ablation — LG deviation @ {:.0}% density ({} samples)",
+            cfg.density * 100.0,
+            prompts.len()
+        ),
+        &["selector", "PPL (sem)", "KLD (sem)", "KLD vs random"],
+    );
+    let mut json = Json::obj();
+    json.set("density", Json::Num(cfg.density))
+        .set("samples", Json::Num(prompts.len() as f64));
+    for (name, m, _) in &results {
+        t.row(vec![
+            name.clone(),
+            mean_std(m.ppl.mean, m.ppl.sem(), 4),
+            mean_std(m.kld.mean, m.kld.sem(), 4),
+            format!("{:+.1}%", improvement_pct(rand_kld, m.kld.mean)),
+        ]);
+        let mut o = Json::obj();
+        o.set("ppl_mean", Json::Num(m.ppl.mean))
+            .set("kld_mean", Json::Num(m.kld.mean));
+        json.set(name, o);
+    }
+
+    Ok(ExpReport {
+        name: "ablation".into(),
+        tables: vec![t],
+        json,
+    })
+}

@@ -1,0 +1,79 @@
+//! Fig. 4: λ sensitivity sweep — PPL at 50% density as the mixing weight
+//! moves from 0 (GRIFFIN) to 1 (static global mask), I-GLASS (NPS).
+
+use anyhow::Result;
+
+use super::lgeval::eval_strategies;
+use super::{lg_prompts, ExpReport};
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::glass::{GlobalPrior, PriorKind, Strategy};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let prompts = lg_prompts(engine, cfg.sweep_samples)?;
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+
+    let strategies: Vec<(String, Strategy, Option<&GlobalPrior>)> = cfg
+        .lambda_grid
+        .iter()
+        .map(|&lam| {
+            (
+                format!("λ={lam:.2}"),
+                Strategy::Glass { lambda: lam },
+                Some(&i_nps),
+            )
+        })
+        .collect();
+
+    let results = eval_strategies(
+        engine,
+        &prompts,
+        cfg.batch,
+        &strategies,
+        cfg.density,
+        cfg.kld_top,
+    )?;
+
+    let mut t = Table::new(
+        &format!(
+            "Fig. 4 — PPL vs λ @ {:.0}% density ({} samples, I-GLASS NPS)",
+            cfg.density * 100.0,
+            prompts.len()
+        ),
+        &["λ", "PPL", "KLD"],
+    );
+    let mut lambdas = Vec::new();
+    let mut ppls = Vec::new();
+    let mut klds = Vec::new();
+    let mut best = (f64::INFINITY, 0.0);
+    for (&lam, (_, m, _)) in cfg.lambda_grid.iter().zip(&results) {
+        t.row(vec![
+            format!("{lam:.2}"),
+            fnum(m.ppl.mean, 4),
+            fnum(m.kld.mean, 4),
+        ]);
+        lambdas.push(lam);
+        ppls.push(m.ppl.mean);
+        klds.push(m.kld.mean);
+        if m.ppl.mean < best.0 {
+            best = (m.ppl.mean, lam);
+        }
+    }
+    crate::info!("fig4: best λ = {:.2} (PPL {:.4})", best.1, best.0);
+
+    let mut json = Json::obj();
+    json.set("density", Json::Num(cfg.density))
+        .set("samples", Json::Num(prompts.len() as f64))
+        .set("lambda", Json::from_f64_slice(&lambdas))
+        .set("ppl", Json::from_f64_slice(&ppls))
+        .set("kld", Json::from_f64_slice(&klds))
+        .set("best_lambda", Json::Num(best.1));
+
+    Ok(ExpReport {
+        name: "fig4".into(),
+        tables: vec![t],
+        json,
+    })
+}

@@ -1,0 +1,175 @@
+//! Fig. 5 / §4.5: on-device decode speedup from 50% static FFN masking.
+//!
+//! Two parts (DESIGN.md §3 substitution):
+//!  * the edge-memory simulator replays the paper's three workloads on a
+//!    Galaxy-S25-class profile — Qwen3-4B (int4, fits RAM), Llama3-8B
+//!    (int4, fits), Gemma-7B (bf16, does NOT fit dense → residency
+//!    transition), reproducing the 20% / 42% / ~11× shape;
+//!  * real measured decode latency of our model via the bench targets
+//!    (bench_decode) complements this with actual wall-clock numbers.
+
+use anyhow::Result;
+
+use super::ExpReport;
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::memsim::{decode_speedup, DeviceProfile, SimModel};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// The paper's §4.5 workloads. ffn_fraction estimated from the public
+/// architectures (gate+up+down vs total), bytes/param from the deployment
+/// quantization that makes the paper's dense baselines runnable at all
+/// on a 12 GB phone (int4 for Qwen/Llama; Gemma-7B bf16 exceeds RAM,
+/// which is exactly the case the paper highlights).
+pub fn paper_workloads() -> Vec<(SimModel, usize, f64)> {
+    vec![
+        // (model, decode_tokens, paper_speedup)
+        (
+            SimModel::paper_workload("Qwen3 4B (int4)", 4.0, 0.5, 0.70),
+            256,
+            1.20,
+        ),
+        (
+            SimModel::paper_workload("Llama3 8B (int4)", 8.0, 0.5, 0.67),
+            256,
+            1.42,
+        ),
+        (
+            SimModel::paper_workload("Gemma 7B (bf16)", 8.5, 2.0, 0.81),
+            128,
+            11.0,
+        ),
+    ]
+}
+
+pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let dev = DeviceProfile::galaxy_s25_ultra();
+    let mut t = Table::new(
+        &format!(
+            "Fig. 5 — simulated decode speedup @ {:.0}% FFN density on {}",
+            cfg.density * 100.0,
+            dev.name
+        ),
+        &[
+            "workload",
+            "dense tok/s",
+            "GLASS tok/s",
+            "speedup",
+            "paper",
+            "dense resident",
+            "sparse resident",
+        ],
+    );
+    let mut json = Json::obj();
+    let mut rows = Vec::new();
+    for (model, tokens, paper) in paper_workloads() {
+        let (dense, sparse, speedup) =
+            decode_speedup(&dev, &model, cfg.density, tokens);
+        t.row(vec![
+            model.name.clone(),
+            fnum(dense.tokens_per_s, 1),
+            fnum(sparse.tokens_per_s, 1),
+            format!("{speedup:.2}x"),
+            format!("{paper:.2}x"),
+            format!("{}", dense.resident),
+            format!("{}", sparse.resident),
+        ]);
+        let mut o = Json::obj();
+        o.set("dense_tok_s", Json::Num(dense.tokens_per_s))
+            .set("sparse_tok_s", Json::Num(sparse.tokens_per_s))
+            .set("speedup", Json::Num(speedup))
+            .set("paper_speedup", Json::Num(paper))
+            .set("dense_resident", Json::Bool(dense.resident))
+            .set("sparse_resident", Json::Bool(sparse.resident));
+        json.set(&model.name, o);
+        rows.push(speedup);
+    }
+
+    // our real model measured through the runtime: one masked decode step
+    // dense vs 50% top-k gathered step (FLOP-reducing path)
+    let real = measure_real_decode(engine, cfg)?;
+    let mut t2 = Table::new(
+        "Fig. 5b — measured decode step latency (our model, this host)",
+        &["variant", "ms/step", "speedup vs dense"],
+    );
+    for (name, ms) in &real {
+        t2.row(vec![
+            name.clone(),
+            fnum(*ms, 3),
+            format!("{:.2}x", real[0].1 / ms),
+        ]);
+        json.set(
+            &format!("measured_{}", name.replace(' ', "_")),
+            Json::Num(*ms),
+        );
+    }
+
+    Ok(ExpReport {
+        name: "fig5".into(),
+        tables: vec![t, t2],
+        json,
+    })
+}
+
+/// Measure per-step decode latency: dense mask vs 50% masked vs top-k
+/// gathered, batch 1.
+pub fn measure_real_decode(
+    engine: &Engine,
+    _cfg: &RunConfig,
+) -> Result<Vec<(String, f64)>> {
+    use crate::glass::{build_mask, pack_indices, Strategy};
+    use crate::tensor::TensorF;
+
+    let spec = engine.spec().clone();
+    let prompts = vec!["once there was a red fox".to_string()];
+    let pre = engine.prefill(&prompts, 1)?;
+    let local = engine.local_importance(&pre, 0)?;
+    let k = engine.rt.manifest.topk_k;
+    let mask_half = build_mask(&Strategy::LocalOnly, &local, None, k)?;
+    let idx = pack_indices(&[&mask_half], spec.n_layers, k)?;
+
+    let dense_mask = engine.dense_mask(1);
+    let mut half_mask_t =
+        TensorF::zeros(&[1, spec.n_layers, spec.ffn_m]);
+    for li in 0..spec.n_layers {
+        let lm = mask_half.layer_mask(li);
+        half_mask_t.data[li * spec.ffn_m..(li + 1) * spec.ffn_m]
+            .copy_from_slice(&lm);
+    }
+
+    let reps = 30;
+    let mut out = Vec::new();
+    // warm + measure each variant
+    for (name, topk) in [
+        ("dense (mask=1)", false),
+        ("masked 50%", false),
+        ("topk 50% (pallas)", true),
+    ] {
+        let mask = if name.starts_with("dense") {
+            &dense_mask
+        } else {
+            &half_mask_t
+        };
+        let mut kv = pre.kv.clone();
+        let tok = [65i32];
+        let pos = [pre.lens[0] as i32];
+        // warmup (compile)
+        if topk {
+            engine.decode_step_topk(&mut kv, &tok, &pos, &idx)?;
+        } else {
+            engine.decode_step(&mut kv, &tok, &pos, mask)?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            if topk {
+                engine.decode_step_topk(&mut kv, &tok, &pos, &idx)?;
+            } else {
+                engine.decode_step(&mut kv, &tok, &pos, mask)?;
+            }
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        out.push((name.to_string(), ms));
+    }
+    Ok(out)
+}

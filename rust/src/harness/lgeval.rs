@@ -1,0 +1,203 @@
+//! Shared Long-Generation evaluation flow (Sec. 4 protocol, App. B.2):
+//!
+//! 1. dense greedy generation defines the reference trajectory and the
+//!    per-step reference distributions (fused `generate` executable);
+//! 2. each sparsification strategy builds its static mask from the
+//!    prefill statistics (plus prior), exactly as at deployment;
+//! 3. the sparse model is teacher-forced along the dense trajectory with
+//!    one `score` call, yielding deviation PPL and top-100 KLD.
+//!
+//! A batch's prefill and dense trajectory are computed once and shared by
+//! every strategy — the evaluation cost is one score pass per strategy.
+
+use anyhow::{bail, Result};
+
+use crate::engine::session::pack_slot_masks;
+use crate::engine::{Engine, GenerateResult, PrefillResult};
+use crate::eval::kld::topk_kld;
+use crate::eval::ppl::{nll_per_token, ppl_from_nll};
+use crate::glass::{build_mask, GlobalPrior, ImportanceMap, MaskSet, Strategy};
+use crate::tensor::{TensorF, TensorI};
+use crate::util::stats::{summarize, Summary};
+
+/// One prepared evaluation batch: prompts, prefill evidence, and the
+/// dense reference trajectory.
+pub struct LgBatch {
+    pub prompts: Vec<String>,
+    pub b: usize,
+    pub pre: PrefillResult,
+    pub dense: GenerateResult,
+    /// Teacher-forcing token frame [B, S_score] (BOS+prompt+trajectory).
+    pub score_tokens: TensorI,
+    /// Per-slot trajectory-start offset (prompt length incl. BOS).
+    pub starts: Vec<usize>,
+    /// Per-slot number of scored trajectory tokens.
+    pub n_gen: usize,
+}
+
+/// Per-sample deviation metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleMetrics {
+    pub ppl: f64,
+    pub kld: f64,
+}
+
+/// Aggregated over samples (mean + spread, reported paper-style).
+#[derive(Debug, Clone, Copy)]
+pub struct StrategyMetrics {
+    pub ppl: Summary,
+    pub kld: Summary,
+}
+
+pub fn prepare_batch(engine: &Engine, prompts: &[String], b: usize) -> Result<LgBatch> {
+    let spec = engine.spec().clone();
+    let pre = engine.prefill(prompts, b)?;
+    let dense = engine.generate(prompts, &engine.dense_mask(b), b)?;
+
+    let n_gen = dense.tokens.shape[1];
+    let s_score = spec.score_len;
+    let (prompt_toks, lens) = engine.encode_prompts(prompts, b)?;
+    let s_pre = spec.prefill_len;
+    if lens.iter().any(|&l| l + n_gen > s_score) {
+        bail!("prompt+trajectory exceeds score window");
+    }
+    let mut frame = vec![spec.pad_id; b * s_score];
+    for slot in 0..b {
+        let len = lens.get(slot).copied().unwrap_or(1);
+        // prompt part
+        for j in 0..len {
+            frame[slot * s_score + j] = prompt_toks.data[slot * s_pre + j];
+        }
+        // trajectory part
+        for i in 0..n_gen {
+            frame[slot * s_score + len + i] =
+                dense.tokens.data[slot * n_gen + i];
+        }
+    }
+    Ok(LgBatch {
+        prompts: prompts.to_vec(),
+        b,
+        starts: lens,
+        pre,
+        dense,
+        score_tokens: TensorI::new(vec![b, s_score], frame)?,
+        n_gen,
+    })
+}
+
+/// Build per-slot masks for a strategy over this batch. For
+/// [`Strategy::Oracle`] the post-hoc decode-time statistics (from the
+/// dense trajectory) are used as the ranking signal, per App. C.1.
+pub fn batch_masks(
+    engine: &Engine,
+    batch: &LgBatch,
+    strategy: &Strategy,
+    prior: Option<&GlobalPrior>,
+    density: f64,
+) -> Result<Vec<MaskSet>> {
+    let spec = engine.spec();
+    let k = spec.budget(density);
+    let n = batch.prompts.len();
+    let mut masks = Vec::with_capacity(n);
+    for slot in 0..n {
+        let signal = match strategy {
+            Strategy::Oracle => {
+                ImportanceMap::from_stats(&batch.dense.stats, slot)?
+            }
+            _ => ImportanceMap::from_stats(&batch.pre.stats, slot)?,
+        };
+        masks.push(build_mask(strategy, &signal, prior, k)?);
+    }
+    Ok(masks)
+}
+
+/// Teacher-force the masked model along the dense trajectory and compute
+/// per-sample deviation PPL + top-`kld_top` KLD.
+pub fn eval_masks(
+    engine: &Engine,
+    batch: &LgBatch,
+    masks: &[MaskSet],
+    kld_top: usize,
+) -> Result<Vec<SampleMetrics>> {
+    let spec = engine.spec().clone();
+    let b = batch.b;
+    let n = batch.prompts.len();
+    let mask_t = pack_slot_masks(masks, n, b, &spec);
+    let w = TensorF::zeros(&[b, spec.score_len]);
+    let (logits, _) = engine.score(&batch.score_tokens, &w, &mask_t)?;
+
+    let v = spec.vocab;
+    let s_score = spec.score_len;
+    let n_gen = batch.n_gen;
+    let mut out = Vec::with_capacity(n);
+    for slot in 0..n {
+        let start = batch.starts[slot];
+        // sparse logit rows for this slot as a [S, V] view
+        let slot_logits = TensorF::new(
+            vec![s_score, v],
+            logits.data[slot * s_score * v..(slot + 1) * s_score * v]
+                .to_vec(),
+        )?;
+        // PPL: target t_i predicted by row (start-1+i)
+        let positions: Vec<usize> =
+            (0..n_gen).map(|i| start - 1 + i).collect();
+        let targets: Vec<i32> = (0..n_gen)
+            .map(|i| batch.dense.tokens.data[slot * n_gen + i])
+            .collect();
+        let nll = nll_per_token(&slot_logits, &positions, &targets)?;
+        let ppl = ppl_from_nll(&nll);
+
+        // KLD: dense gen_logits[:, i] (dist after consuming t_i) vs
+        // sparse row (start + i), for i = 0..n_gen-1
+        let mut klds = Vec::with_capacity(n_gen);
+        for i in 0..n_gen {
+            let dense_row = &batch.dense.logits.data
+                [(slot * n_gen + i) * v..(slot * n_gen + i + 1) * v];
+            let sparse_row = slot_logits.row(start + i);
+            klds.push(topk_kld(dense_row, sparse_row, kld_top)?);
+        }
+        out.push(SampleMetrics {
+            ppl,
+            kld: klds.iter().sum::<f64>() / klds.len() as f64,
+        });
+    }
+    Ok(out)
+}
+
+/// Full pipeline over a prompt list: chunk into batches, prepare each
+/// once, and evaluate every (name, strategy, prior) tuple.
+pub fn eval_strategies(
+    engine: &Engine,
+    prompts: &[String],
+    b: usize,
+    strategies: &[(String, Strategy, Option<&GlobalPrior>)],
+    density: f64,
+    kld_top: usize,
+) -> Result<Vec<(String, StrategyMetrics, Vec<SampleMetrics>)>> {
+    let mut per_strategy: Vec<Vec<SampleMetrics>> =
+        vec![Vec::new(); strategies.len()];
+    for chunk in prompts.chunks(b) {
+        let batch = prepare_batch(engine, chunk, b)?;
+        for (si, (_, strat, prior)) in strategies.iter().enumerate() {
+            let masks = batch_masks(engine, &batch, strat, *prior, density)?;
+            let metrics = eval_masks(engine, &batch, &masks, kld_top)?;
+            per_strategy[si].extend(metrics);
+        }
+    }
+    Ok(strategies
+        .iter()
+        .zip(per_strategy)
+        .map(|((name, _, _), samples)| {
+            let ppls: Vec<f64> = samples.iter().map(|s| s.ppl).collect();
+            let klds: Vec<f64> = samples.iter().map(|s| s.kld).collect();
+            (
+                name.clone(),
+                StrategyMetrics {
+                    ppl: summarize(&ppls),
+                    kld: summarize(&klds),
+                },
+                samples,
+            )
+        })
+        .collect())
+}

@@ -1,0 +1,93 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §6).
+//!
+//! Every runner regenerates its table/figure from scratch through the
+//! public API (engine + glass + eval), prints the rows in the paper's
+//! layout, and writes machine-readable JSON plus a markdown table under
+//! `results/`. The EXPERIMENTS.md paper-vs-measured entries are built
+//! from those outputs.
+
+pub mod ablation;
+pub mod fig4;
+pub mod fig5;
+pub mod lgeval;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table56;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// What a runner produces.
+pub struct ExpReport {
+    pub name: String,
+    pub tables: Vec<Table>,
+    pub json: Json,
+}
+
+impl ExpReport {
+    /// Print to stdout + persist under cfg.results_dir.
+    pub fn emit(&self, cfg: &RunConfig) -> Result<()> {
+        for t in &self.tables {
+            println!("{}", t.to_ascii());
+        }
+        std::fs::create_dir_all(&cfg.results_dir)?;
+        let jpath = cfg.results_dir.join(format!("{}.json", self.name));
+        self.json.write_file(&jpath)?;
+        let mut md = String::new();
+        for t in &self.tables {
+            md.push_str(&t.to_markdown());
+            md.push('\n');
+        }
+        std::fs::write(
+            cfg.results_dir.join(format!("{}.md", self.name)),
+            md,
+        )?;
+        crate::info!("wrote results/{}.{{json,md}}", self.name);
+        Ok(())
+    }
+}
+
+/// All experiment ids, in suggested run order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table5", "table6", "fig1", "fig4",
+    "fig5", "ablation",
+];
+
+/// Dispatch one experiment by id.
+pub fn run_experiment(
+    id: &str,
+    engine: &Engine,
+    cfg: &RunConfig,
+) -> Result<ExpReport> {
+    match id {
+        "table1" => table1::run(engine, cfg),
+        "table2" => table2::run(engine, cfg),
+        "table3" => table3::run(engine, cfg),
+        // table 5 and fig 1 come from the same oracle-overlap analysis
+        "table5" | "fig1" => table56::run_oracle_overlap(engine, cfg),
+        "table6" => table56::run_ablation(engine, cfg),
+        "fig4" => fig4::run(engine, cfg),
+        "ablation" => ablation::run(engine, cfg),
+        "fig5" => fig5::run(engine, cfg),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (have: {})",
+            EXPERIMENTS.join(", ")
+        ),
+    }
+}
+
+/// Load the LG prompt list, truncated to n samples.
+pub fn lg_prompts(engine: &Engine, n: usize) -> Result<Vec<String>> {
+    let path = engine.rt.manifest.data_path("lg")?;
+    let set = crate::data::LgSet::load(Path::new(&path))?;
+    let mut prompts = set.prompts;
+    prompts.truncate(n);
+    Ok(prompts)
+}

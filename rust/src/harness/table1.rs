@@ -1,0 +1,280 @@
+//! Table 1: classification (0-shot unnormalized accuracy) and short-form
+//! generation at 50% FFN sparsity — I-GLASS vs GRIFFIN.
+//!
+//! Classification protocol: for each item, build [BOS + context + option]
+//! frames; the mask comes from *context* statistics (one dense score pass
+//! with context-weighted stats aggregation gives A^l); the masked model
+//! scores each option by summed token log-prob; prediction = argmax.
+//!
+//! Short-generation protocol: sparse generation (prefill → mask → fused
+//! generate), scored with ROUGE-1/2/L (summarization families) or
+//! token-F1 / exact match (QA families).
+
+use anyhow::Result;
+
+use super::ExpReport;
+use crate::config::RunConfig;
+use crate::data::{ClsSet, SgSet};
+use crate::engine::session::pack_slot_masks;
+use crate::engine::Engine;
+use crate::eval::ppl::option_logprob;
+use crate::eval::rouge::rouge_all;
+use crate::eval::text_metrics::{exact_match, token_f1};
+use crate::glass::{build_mask, GlobalPrior, ImportanceMap, PriorKind, Strategy};
+use crate::tensor::{TensorF, TensorI};
+use crate::util::json::Json;
+use crate::util::stats::mean;
+use crate::util::table::{fnum, Table};
+
+pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+    let methods: Vec<(&str, Strategy, Option<&GlobalPrior>)> = vec![
+        (
+            "I-GLASS",
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(&i_nps),
+        ),
+        ("GRIFFIN", Strategy::LocalOnly, None),
+    ];
+
+    // ---------------------------------------------------- classification
+    let cls = ClsSet::load(&engine.rt.manifest.data_path("cls")?)?;
+    let mut cls_table = Table::new(
+        &format!(
+            "Table 1a — classification accuracy @ {:.0}% density \
+             ({} items/family)",
+            cfg.density * 100.0,
+            cfg.cls_samples
+        ),
+        &["method", "family", "accuracy"],
+    );
+    let mut json = Json::obj();
+    let mut cls_json = Json::obj();
+    for (mname, strat, prior) in &methods {
+        let mut fam_json = Json::obj();
+        for family in cls.families() {
+            let items: Vec<_> = cls
+                .by_family(&family)
+                .into_iter()
+                .take(cfg.cls_samples)
+                .collect();
+            let mut correct = 0usize;
+            for item in &items {
+                let pred = classify_item(
+                    engine, cfg, item, strat, *prior,
+                )?;
+                if pred == item.answer {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / items.len().max(1) as f64;
+            cls_table.row(vec![
+                mname.to_string(),
+                family.clone(),
+                fnum(acc * 100.0, 2),
+            ]);
+            fam_json.set(&family, Json::Num(acc));
+        }
+        cls_json.set(mname, fam_json);
+        crate::info!("table1: classification done for {mname}");
+    }
+    json.set("classification", cls_json);
+
+    // ------------------------------------------------- short generation
+    let sg = SgSet::load(&engine.rt.manifest.data_path("sg")?)?;
+    let mut sg_table = Table::new(
+        &format!(
+            "Table 1b — short-form generation @ {:.0}% density \
+             ({} items/family)",
+            cfg.density * 100.0,
+            cfg.sg_samples
+        ),
+        &["method", "family", "metric", "score"],
+    );
+    let mut sg_json = Json::obj();
+    for (mname, strat, prior) in &methods {
+        let mut fam_json = Json::obj();
+        for family in sg.families() {
+            let items: Vec<_> = sg
+                .by_family(&family)
+                .into_iter()
+                .take(cfg.sg_samples)
+                .collect();
+            let scores = eval_sg_family(engine, cfg, &items, strat, *prior)?;
+            for (metric, vals) in &scores {
+                sg_table.row(vec![
+                    mname.to_string(),
+                    family.clone(),
+                    metric.clone(),
+                    fnum(mean(vals) * 100.0, 2),
+                ]);
+                fam_json.set(
+                    &format!("{family}.{metric}"),
+                    Json::Num(mean(vals)),
+                );
+            }
+        }
+        sg_json.set(mname, fam_json);
+        crate::info!("table1: short-generation done for {mname}");
+    }
+    json.set("short_generation", sg_json);
+
+    Ok(ExpReport {
+        name: "table1".into(),
+        tables: vec![cls_table, sg_table],
+        json,
+    })
+}
+
+/// Score one MCQ item; returns the predicted option index.
+fn classify_item(
+    engine: &Engine,
+    cfg: &RunConfig,
+    item: &crate::data::ClsItem,
+    strategy: &Strategy,
+    prior: Option<&GlobalPrior>,
+) -> Result<usize> {
+    let spec = engine.spec().clone();
+    let s = spec.score_len;
+    let b = engine.pick_batch(item.options.len().min(4))?;
+    let ctx_ids = {
+        let mut v = vec![spec.bos_id];
+        v.extend(engine.tok.encode(&item.context));
+        v.truncate(s);
+        v
+    };
+    let ctx_len = ctx_ids.len();
+
+    // frames: context + option per slot (options beyond b handled in
+    // chunks — families here have <= 4 options)
+    let n_opt = item.options.len();
+    if n_opt > b {
+        anyhow::bail!("more options than batch width");
+    }
+    let mut frame = vec![spec.pad_id; b * s];
+    let mut opt_tokens: Vec<Vec<i32>> = Vec::with_capacity(n_opt);
+    for (oi, opt) in item.options.iter().enumerate() {
+        let ids = engine.tok.encode(opt);
+        let take = ids.len().min(s - ctx_len);
+        frame[oi * s..oi * s + ctx_len].copy_from_slice(&ctx_ids);
+        frame[oi * s + ctx_len..oi * s + ctx_len + take]
+            .copy_from_slice(&ids[..take]);
+        opt_tokens.push(ids[..take].to_vec());
+    }
+    let tokens = TensorI::new(vec![b, s], frame)?;
+
+    // pass 1 (dense): context-weighted stats -> local importance A^l
+    let mut w = TensorF::zeros(&[b, s]);
+    for oi in 0..n_opt {
+        for j in 0..ctx_len {
+            w.data[oi * s + j] = 1.0 / ctx_len as f32;
+        }
+    }
+    let (_, stats) = engine.score(&tokens, &w, &engine.dense_mask(b))?;
+    // context stats are identical across option slots; use slot 0
+    let local = ImportanceMap::from_stats(&stats, 0)?;
+    let mask = build_mask(strategy, &local, prior, spec.budget(cfg.density))?;
+
+    // pass 2 (masked): option log-probs
+    let masks: Vec<_> = (0..n_opt).map(|_| mask.clone()).collect();
+    let mask_t = pack_slot_masks(&masks, n_opt, b, &spec);
+    let w0 = TensorF::zeros(&[b, s]);
+    let (logits, _) = engine.score(&tokens, &w0, &mask_t)?;
+
+    let v = spec.vocab;
+    let mut best = (f64::NEG_INFINITY, 0usize);
+    for (oi, opt_ids) in opt_tokens.iter().enumerate() {
+        let slot_logits = TensorF::new(
+            vec![s, v],
+            logits.data[oi * s * v..(oi + 1) * s * v].to_vec(),
+        )?;
+        // option token i sits at position ctx_len+i, predicted by the
+        // row at ctx_len+i-1
+        let lp = option_logprob(&slot_logits, ctx_len - 1, opt_ids)?;
+        if lp > best.0 {
+            best = (lp, oi);
+        }
+    }
+    Ok(best.1)
+}
+
+/// Sparse generation + text metrics for one SG family.
+fn eval_sg_family(
+    engine: &Engine,
+    cfg: &RunConfig,
+    items: &[&crate::data::SgItem],
+    strategy: &Strategy,
+    prior: Option<&GlobalPrior>,
+) -> Result<Vec<(String, Vec<f64>)>> {
+    let spec = engine.spec().clone();
+    let b = cfg.batch;
+    let k = spec.budget(cfg.density);
+    let mut r1 = Vec::new();
+    let mut r2 = Vec::new();
+    let mut rl = Vec::new();
+    let mut f1s = Vec::new();
+    let mut ems = Vec::new();
+
+    for chunk in items.chunks(b) {
+        let prompts: Vec<String> =
+            chunk.iter().map(|i| i.prompt.clone()).collect();
+        let pre = engine.prefill(&prompts, b)?;
+        let mut masks = Vec::with_capacity(prompts.len());
+        for slot in 0..prompts.len() {
+            let local = engine.local_importance(&pre, slot)?;
+            masks.push(build_mask(strategy, &local, prior, k)?);
+        }
+        let mask_t = pack_slot_masks(&masks, prompts.len(), b, &spec);
+        let gen = engine.generate(&prompts, &mask_t, b)?;
+        let n = gen.tokens.shape[1];
+        for (slot, item) in chunk.iter().enumerate() {
+            let text =
+                engine.decode_text(&gen.tokens.data[slot * n..(slot + 1) * n]);
+            let answer = first_sentence(&text);
+            if item.metric == "rouge" {
+                let r = rouge_all(&answer, &item.reference);
+                r1.push(r.rouge1);
+                r2.push(r.rouge2);
+                rl.push(r.rouge_l);
+            } else {
+                f1s.push(token_f1(&answer, &item.reference));
+                ems.push(if exact_match(&answer, &item.reference) {
+                    1.0
+                } else {
+                    0.0
+                });
+            }
+        }
+    }
+    let mut out = Vec::new();
+    if !r1.is_empty() {
+        out.push(("rouge1".to_string(), r1));
+        out.push(("rouge2".to_string(), r2));
+        out.push(("rougeL".to_string(), rl));
+    }
+    if !f1s.is_empty() {
+        out.push(("f1".to_string(), f1s));
+        out.push(("em".to_string(), ems));
+    }
+    Ok(out)
+}
+
+/// Generated answers end at the first period (the grammar's sentence
+/// boundary); everything after is continuation babble.
+fn first_sentence(text: &str) -> String {
+    match text.find('.') {
+        Some(i) => text[..i].trim().to_string(),
+        None => text.trim().to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::first_sentence;
+
+    #[test]
+    fn cuts_at_period() {
+        assert_eq!(first_sentence(" red. the fox"), "red");
+        assert_eq!(first_sentence("no period"), "no period");
+    }
+}

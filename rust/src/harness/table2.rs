@@ -1,0 +1,90 @@
+//! Table 2: Long-Generation deviation PPL and top-100 KLD at 50% FFN
+//! sparsity — GRIFFIN vs A-GLASS (NPS) vs I-GLASS (NPS), with the paper's
+//! "Imp%" improvement-over-GRIFFIN columns.
+
+use anyhow::Result;
+
+use super::lgeval::eval_strategies;
+use super::{lg_prompts, ExpReport};
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::glass::{GlobalPrior, PriorKind, Strategy};
+use crate::util::json::Json;
+use crate::util::table::{improvement_pct, mean_std, Table};
+
+pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let prompts = lg_prompts(engine, cfg.lg_samples)?;
+    let a_nps = GlobalPrior::load(&engine.rt, PriorKind::ANps)?;
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+
+    let strategies = vec![
+        ("GRIFFIN".to_string(), Strategy::LocalOnly, None),
+        (
+            "A-GLASS".to_string(),
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(&a_nps),
+        ),
+        (
+            "I-GLASS".to_string(),
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(&i_nps),
+        ),
+    ];
+    let results = eval_strategies(
+        engine,
+        &prompts,
+        cfg.batch,
+        &strategies,
+        cfg.density,
+        cfg.kld_top,
+    )?;
+
+    let grif_ppl = results[0].1.ppl.mean;
+    let grif_kld = results[0].1.kld.mean;
+
+    let mut t = Table::new(
+        &format!(
+            "Table 2 — LG PPL/KLD @ {:.0}% density ({} samples)",
+            cfg.density * 100.0,
+            prompts.len()
+        ),
+        &["metric", "GRIFFIN", "A-GLASS", "Imp%", "I-GLASS", "Imp%"],
+    );
+    t.row(vec![
+        "PPL".into(),
+        mean_std(results[0].1.ppl.mean, results[0].1.ppl.sem(), 4),
+        mean_std(results[1].1.ppl.mean, results[1].1.ppl.sem(), 4),
+        format!("{:.2}%", improvement_pct(grif_ppl, results[1].1.ppl.mean)),
+        mean_std(results[2].1.ppl.mean, results[2].1.ppl.sem(), 4),
+        format!("{:.2}%", improvement_pct(grif_ppl, results[2].1.ppl.mean)),
+    ]);
+    t.row(vec![
+        "KLD".into(),
+        mean_std(results[0].1.kld.mean, results[0].1.kld.sem(), 4),
+        mean_std(results[1].1.kld.mean, results[1].1.kld.sem(), 4),
+        format!("{:.2}%", improvement_pct(grif_kld, results[1].1.kld.mean)),
+        mean_std(results[2].1.kld.mean, results[2].1.kld.sem(), 4),
+        format!("{:.2}%", improvement_pct(grif_kld, results[2].1.kld.mean)),
+    ]);
+
+    let mut json = Json::obj();
+    json.set("density", Json::Num(cfg.density))
+        .set("samples", Json::Num(prompts.len() as f64));
+    for (name, m, _) in &results {
+        let mut o = Json::obj();
+        o.set("ppl_mean", Json::Num(m.ppl.mean))
+            .set("ppl_sem", Json::Num(m.ppl.sem()))
+            .set("ppl_std", Json::Num(m.ppl.std))
+            .set("kld_mean", Json::Num(m.kld.mean))
+            .set("kld_sem", Json::Num(m.kld.sem()))
+            .set("ppl_imp_pct", Json::Num(improvement_pct(grif_ppl, m.ppl.mean)))
+            .set("kld_imp_pct", Json::Num(improvement_pct(grif_kld, m.kld.mean)));
+        json.set(name, o);
+    }
+
+    Ok(ExpReport {
+        name: "table2".into(),
+        tables: vec![t],
+        json,
+    })
+}

@@ -1,0 +1,77 @@
+//! Table 3: KLD across activation densities (90%→10%) comparing the
+//! NPS-derived global prior against the held-out-corpus prior ("Wiki"
+//! in the paper), for both A-GLASS and I-GLASS, with GRIFFIN as the
+//! local-only reference.
+
+use anyhow::Result;
+
+use super::lgeval::eval_strategies;
+use super::{lg_prompts, ExpReport};
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::glass::{GlobalPrior, PriorKind, Strategy};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let prompts = lg_prompts(engine, cfg.sweep_samples)?;
+    let priors: Vec<(&str, GlobalPrior)> = vec![
+        ("A-GLS (corpus)", GlobalPrior::load(&engine.rt, PriorKind::ACorpus)?),
+        ("A-GLS (NPS)", GlobalPrior::load(&engine.rt, PriorKind::ANps)?),
+        ("I-GLS (corpus)", GlobalPrior::load(&engine.rt, PriorKind::ICorpus)?),
+        ("I-GLS (NPS)", GlobalPrior::load(&engine.rt, PriorKind::INps)?),
+    ];
+
+    let headers: Vec<&str> = std::iter::once("density %")
+        .chain(std::iter::once("GRFN"))
+        .chain(priors.iter().map(|(n, _)| *n))
+        .collect();
+    let mut t = Table::new(
+        &format!(
+            "Table 3 — KLD vs density, NPS vs corpus prior ({} samples)",
+            prompts.len()
+        ),
+        &headers,
+    );
+
+    let mut json = Json::obj();
+    json.set("samples", Json::Num(prompts.len() as f64));
+    let mut rows_json = Vec::new();
+
+    for &density in &cfg.density_grid {
+        let mut strategies: Vec<(String, Strategy, Option<&GlobalPrior>)> =
+            vec![("GRFN".into(), Strategy::LocalOnly, None)];
+        for (name, p) in &priors {
+            strategies.push((
+                name.to_string(),
+                Strategy::Glass { lambda: cfg.lambda },
+                Some(p),
+            ));
+        }
+        let results = eval_strategies(
+            engine,
+            &prompts,
+            cfg.batch,
+            &strategies,
+            density,
+            cfg.kld_top,
+        )?;
+        let mut row = vec![format!("{:.0}", density * 100.0)];
+        let mut jrow = Json::obj();
+        jrow.set("density", Json::Num(density));
+        for (name, m, _) in &results {
+            row.push(fnum(m.kld.mean, 4));
+            jrow.set(name, Json::Num(m.kld.mean));
+        }
+        t.row(row);
+        rows_json.push(jrow);
+        crate::info!("table3: density {:.0}% done", density * 100.0);
+    }
+    json.set("rows", Json::Arr(rows_json));
+
+    Ok(ExpReport {
+        name: "table3".into(),
+        tables: vec![t],
+        json,
+    })
+}

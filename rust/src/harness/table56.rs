@@ -1,0 +1,160 @@
+//! Oracle-overlap analysis (Table 5 + Fig. 1) and the end-to-end PPL
+//! ablation (Table 6), per App. C.1.
+//!
+//! Oracle overlap: local masks come from prompt statistics, global masks
+//! from the held-out-corpus prior (disjoint from the eval prompts), and
+//! the oracle set is the top-k by post-hoc decoding-time activation on
+//! the dense trajectory. Jaccard similarity to the oracle is reported per
+//! layer (Fig. 1) and layer-aggregated (Tab. 5).
+
+use anyhow::Result;
+
+use super::lgeval::{batch_masks, eval_strategies, prepare_batch};
+use super::{lg_prompts, ExpReport};
+use crate::config::RunConfig;
+use crate::engine::Engine;
+use crate::glass::{GlobalPrior, PriorKind, Strategy};
+use crate::util::json::Json;
+use crate::util::stats::{mean, std_dev};
+use crate::util::table::{fnum, mean_std, Table};
+
+pub fn run_oracle_overlap(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let spec = engine.spec().clone();
+    let prompts = lg_prompts(engine, cfg.oracle_samples)?;
+    // the paper estimates A^g on a corpus disjoint from the oracle set
+    let prior = GlobalPrior::load(&engine.rt, PriorKind::ACorpus)?;
+
+    let variants: Vec<(&str, Strategy, Option<&GlobalPrior>)> = vec![
+        ("Local-Only", Strategy::LocalOnly, None),
+        ("Global-Only", Strategy::GlobalOnly, Some(&prior)),
+        (
+            "Global-Local (Ours)",
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(&prior),
+        ),
+    ];
+
+    // per variant, per layer, jaccards across samples
+    let l = spec.n_layers;
+    let mut jacc: Vec<Vec<Vec<f64>>> = vec![vec![Vec::new(); l]; 3];
+
+    for chunk in prompts.chunks(cfg.batch) {
+        let batch = prepare_batch(engine, chunk, cfg.batch)?;
+        let oracle =
+            batch_masks(engine, &batch, &Strategy::Oracle, None, cfg.density)?;
+        for (vi, (_, strat, p)) in variants.iter().enumerate() {
+            let masks = batch_masks(engine, &batch, strat, *p, cfg.density)?;
+            for (slot, mask) in masks.iter().enumerate() {
+                for li in 0..l {
+                    jacc[vi][li]
+                        .push(mask.jaccard_layer(&oracle[slot], li));
+                }
+            }
+        }
+    }
+
+    // Table 5: layer-aggregated mean/std
+    let mut t5 = Table::new(
+        &format!(
+            "Table 5 — Jaccard to oracle @ {:.0}% density ({} samples, {} layers)",
+            cfg.density * 100.0,
+            prompts.len(),
+            l
+        ),
+        &["variant", "mean Jaccard", "std (across layers)"],
+    );
+    let mut json = Json::obj();
+    json.set("density", Json::Num(cfg.density))
+        .set("samples", Json::Num(prompts.len() as f64));
+
+    let mut fig1 = Table::new(
+        "Fig. 1 — per-layer Jaccard to oracle",
+        &["layer", "Local-Only", "Global-Only", "Global-Local"],
+    );
+    let mut layer_means: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    for li in 0..l {
+        let mut row = vec![format!("{li}")];
+        for vi in 0..3 {
+            let m = mean(&jacc[vi][li]);
+            layer_means[vi].push(m);
+            row.push(fnum(m, 3));
+        }
+        fig1.row(row);
+    }
+    for (vi, (name, _, _)) in variants.iter().enumerate() {
+        let m = mean(&layer_means[vi]);
+        let s = std_dev(&layer_means[vi]);
+        t5.row(vec![name.to_string(), fnum(m, 3), fnum(s, 3)]);
+        let mut o = Json::obj();
+        o.set("mean_jaccard", Json::Num(m))
+            .set("std_across_layers", Json::Num(s))
+            .set("per_layer", Json::from_f64_slice(&layer_means[vi]));
+        json.set(name, o);
+    }
+
+    Ok(ExpReport {
+        name: "table5_fig1".into(),
+        tables: vec![t5, fig1],
+        json,
+    })
+}
+
+/// Table 6: end-to-end PPL ablation — Local-Only (λ=0, GRIFFIN),
+/// Global-Only (λ=1, static global mask), Global+Local (λ=0.5, I-GLASS).
+pub fn run_ablation(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
+    let prompts = lg_prompts(engine, cfg.lg_samples)?;
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+
+    let strategies = vec![
+        (
+            "Local-Only (λ=0; GRIFFIN)".to_string(),
+            Strategy::Glass { lambda: 0.0 },
+            Some(&i_nps),
+        ),
+        (
+            "Global-Only (λ=1; static global)".to_string(),
+            Strategy::Glass { lambda: 1.0 },
+            Some(&i_nps),
+        ),
+        (
+            "Global+Local (λ=0.5; I-GLASS)".to_string(),
+            Strategy::Glass { lambda: 0.5 },
+            Some(&i_nps),
+        ),
+    ];
+    let results = eval_strategies(
+        engine,
+        &prompts,
+        cfg.batch,
+        &strategies,
+        cfg.density,
+        cfg.kld_top,
+    )?;
+
+    let mut t = Table::new(
+        &format!(
+            "Table 6 — PPL ablation @ {:.0}% density ({} samples); \
+             std across samples in parens",
+            cfg.density * 100.0,
+            prompts.len()
+        ),
+        &["variant", "PPL (std)"],
+    );
+    let mut json = Json::obj();
+    json.set("density", Json::Num(cfg.density))
+        .set("samples", Json::Num(prompts.len() as f64));
+    for (name, m, _) in &results {
+        t.row(vec![name.clone(), mean_std(m.ppl.mean, m.ppl.std, 4)]);
+        let mut o = Json::obj();
+        o.set("ppl_mean", Json::Num(m.ppl.mean))
+            .set("ppl_std", Json::Num(m.ppl.std))
+            .set("kld_mean", Json::Num(m.kld.mean));
+        json.set(name, o);
+    }
+
+    Ok(ExpReport {
+        name: "table6".into(),
+        tables: vec![t],
+        json,
+    })
+}

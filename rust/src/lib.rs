@@ -1,0 +1,46 @@
+//! # GLASS — Global-Local Aggregation for Inference-time Sparsification
+//!
+//! Rust (L3) coordinator of the three-layer reproduction of
+//! *"GLASS: Global-Local Aggregation for Inference-time Sparsification of
+//! LLMs"*: request handling, prefill→mask→decode orchestration, the
+//! paper's rank-aggregation mask selection, serving, evaluation harness,
+//! and the edge-memory simulator.
+//!
+//! The compute graphs (L2 JAX) and the sparse-FFN kernel (L1 Pallas) are
+//! AOT-compiled to HLO text by `python/compile/aot.py`; [`runtime`]
+//! loads and executes them through the PJRT CPU client (`xla` crate).
+//! Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md §5 for the full inventory):
+//!
+//! * [`util`]    — hand-rolled substrates (JSON, CLI, PRNG, stats,
+//!   logging, tables, bench + property-test harnesses, thread pool)
+//! * [`config`]  — typed run configuration + TOML-subset parser
+//! * [`tensor`]  — host tensors and numeric helpers
+//! * [`runtime`] — PJRT client, artifact manifest, executables
+//! * [`model`]   — model metadata, weights, tokenizer, samplers
+//! * [`glass`]   — the paper's core: ranking, fusion, importance, masks,
+//!   selection strategies (GLASS + all baselines)
+//! * [`engine`]  — prefill/decode/score/generate sessions and batching
+//! * [`eval`]    — PPL / top-100 KLD / Jaccard / ROUGE / F1-EM / accuracy
+//! * [`data`]    — benchmark-set loaders
+//! * [`nps`]     — Null-Prompt Stimulation driver over the runtime
+//! * [`memsim`]  — edge-device memory-hierarchy simulator (Fig. 5)
+//! * [`server`]  — threaded serving layer with a JSON-line protocol
+//! * [`harness`] — one runner per paper table/figure
+
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod glass;
+pub mod harness;
+pub mod memsim;
+pub mod model;
+pub mod nps;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,292 @@
+//! `glass` — CLI for the GLASS reproduction.
+//!
+//! Subcommands:
+//!   info                      — artifact bundle + model summary
+//!   generate  --prompt ...    — one sparse generation (quick demo)
+//!   exp <id|all>              — regenerate a paper table/figure
+//!   nps [--check]             — run Null-Prompt Stimulation via the runtime
+//!   serve                     — start the JSON-line TCP server
+//!   client --prompt ...       — send one request to a running server
+//!   profile                   — dump the section profiler after a workload
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+use glass::config::RunConfig;
+use glass::engine::session::{run_dense_batch, run_sparse_batch};
+use glass::engine::Engine;
+use glass::glass::{GlobalPrior, PriorKind, Strategy};
+use glass::harness::run_experiment;
+use glass::nps::{prior_agreement, run_nps, NpsConfig};
+use glass::server::client::{request, Client};
+use glass::server::Server;
+use glass::util::cli::Args;
+use glass::util::logging;
+use glass::util::stats::mean;
+
+const USAGE: &str = "\
+glass — GLASS: Global-Local Aggregation for Inference-time Sparsification
+
+USAGE:
+    glass <subcommand> [options]
+
+SUBCOMMANDS:
+    info                      artifact bundle + model summary
+    generate                  sparse generation demo
+                              [--prompt STR] [--strategy dense|griffin|
+                               global|a-glass|i-glass] [--density F]
+                               [--lambda F]
+    exp <table1|table2|table3|table5|table6|fig1|fig4|fig5|all>
+                              regenerate a paper table/figure
+    nps                       run NPS through the runtime [--check]
+                              [--seqs N] [--len N]
+    serve                     start the server [--bind ADDR] [--batch N]
+    client                    send a request [--bind ADDR] [--prompt STR]
+                              [--strategy S] [--density F]
+    profile                   run a mixed workload and print the profiler
+
+COMMON OPTIONS:
+    --artifacts DIR           artifact bundle (default: artifacts)
+    --results DIR             report output (default: results)
+    --config FILE             TOML run config
+    --lg-samples N --sweep-samples N --cls-samples N --sg-samples N
+    --oracle-samples N --density F --lambda F --batch N --seed N
+";
+
+fn main() {
+    logging::init();
+    let args = match Args::from_env(&["check", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = RunConfig::load(args)?;
+    let sub = args.subcommand.as_deref().unwrap();
+    match sub {
+        "info" => info(&cfg),
+        "generate" => generate(args, &cfg),
+        "exp" => exp(args, &cfg),
+        "nps" => nps(args, &cfg),
+        "serve" => serve(args, &cfg),
+        "client" => client(args, &cfg),
+        "profile" => profile(&cfg),
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn load_engine(cfg: &RunConfig) -> Result<Engine> {
+    Engine::load(Path::new(&cfg.artifacts_dir))
+}
+
+fn info(cfg: &RunConfig) -> Result<()> {
+    let engine = load_engine(cfg)?;
+    let man = &engine.rt.manifest;
+    let spec = &man.model;
+    println!("GLASS artifact bundle: {}", man.dir.display());
+    println!(
+        "model: vocab={} d_model={} layers={} heads={} ffn_m={} max_seq={}",
+        spec.vocab,
+        spec.d_model,
+        spec.n_layers,
+        spec.n_heads,
+        spec.ffn_m,
+        spec.max_seq
+    );
+    println!(
+        "weights: {:.2} MB across {} tensors",
+        engine.rt.weight_bytes() as f64 / 1e6,
+        man.params.len()
+    );
+    let fp = glass::model::WeightFootprint::from_manifest(man);
+    println!(
+        "footprint: ffn {:.1}% attn {:.1}% embed {:.1}%",
+        fp.ffn_fraction() * 100.0,
+        fp.attn_bytes as f64 / fp.total_bytes as f64 * 100.0,
+        fp.embed_bytes as f64 / fp.total_bytes as f64 * 100.0
+    );
+    println!("executables:");
+    for e in &man.executables {
+        println!(
+            "  {:18} {} operands, {} outputs",
+            e.name,
+            e.operands.len(),
+            e.outputs.len()
+        );
+    }
+    println!("priors: {:?}", man.priors.iter().map(|(k, _)| k).collect::<Vec<_>>());
+    Ok(())
+}
+
+fn generate(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let engine = load_engine(cfg)?;
+    let prompt = args.get_str("prompt", "once there was a red fox");
+    let strategy_name = args.get_str("strategy", "i-glass");
+    let (strategy, prior) = resolve_strategy(&engine, &strategy_name, cfg)?;
+
+    println!("prompt:   {prompt:?}");
+    println!(
+        "strategy: {} @ {:.0}% density",
+        strategy.name(),
+        cfg.density * 100.0
+    );
+    let t0 = std::time::Instant::now();
+    if matches!(strategy, Strategy::Dense) {
+        let gen = run_dense_batch(&engine, &[prompt.clone()], 1)?;
+        let n = gen.tokens.shape[1];
+        println!("output:   {:?}", engine.decode_text(&gen.tokens.data[..n]));
+    } else {
+        let run = run_sparse_batch(
+            &engine,
+            &[prompt.clone()],
+            &strategy,
+            prior.as_ref(),
+            cfg.density,
+            1,
+        )?;
+        println!("output:   {:?}", run.texts[0]);
+        println!(
+            "mask:     density {:.3}, layer-0 kept {} / {}",
+            run.masks[0].density(),
+            run.masks[0].layers[0].len(),
+            engine.spec().ffn_m
+        );
+    }
+    println!("elapsed:  {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn resolve_strategy(
+    engine: &Engine,
+    name: &str,
+    cfg: &RunConfig,
+) -> Result<(Strategy, Option<GlobalPrior>)> {
+    Ok(match name {
+        "dense" => (Strategy::Dense, None),
+        "griffin" => (Strategy::LocalOnly, None),
+        "global" => (
+            Strategy::GlobalOnly,
+            Some(GlobalPrior::load(&engine.rt, PriorKind::ANps)?),
+        ),
+        "a-glass" => (
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(GlobalPrior::load(&engine.rt, PriorKind::ANps)?),
+        ),
+        "i-glass" => (
+            Strategy::Glass { lambda: cfg.lambda },
+            Some(GlobalPrior::load(&engine.rt, PriorKind::INps)?),
+        ),
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+fn exp(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let engine = load_engine(cfg)?;
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.positional[0] == "all"
+    {
+        // table5 and fig1 share a runner; run each id once
+        vec!["table1", "table2", "table3", "table5", "table6", "fig4", "fig5"]
+            .into_iter()
+            .map(String::from)
+            .collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        crate::println_header(id);
+        let report = run_experiment(id, &engine, cfg)?;
+        report.emit(cfg)?;
+    }
+    Ok(())
+}
+
+fn nps(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let engine = load_engine(cfg)?;
+    let ncfg = NpsConfig {
+        n_seqs: args.get_usize("seqs", 8)?,
+        seq_len: args.get_usize("len", 64)?,
+        seed: cfg.seed + 42,
+    };
+    println!(
+        "running NPS via the runtime: {} seqs x {} tokens",
+        ncfg.n_seqs, ncfg.seq_len
+    );
+    let run = run_nps(&engine, &ncfg)?;
+    println!("accumulated {} tokens of A^g statistics", run.n_tokens);
+    println!("sample[0]: {:?}", &run.samples[0][..run.samples[0].len().min(80)]);
+    if args.has_flag("check") {
+        let bundled = GlobalPrior::load(&engine.rt, PriorKind::ANps)?;
+        let cors = prior_agreement(&run.prior, &bundled);
+        println!(
+            "Spearman agreement with the bundled python NPS prior, per \
+             layer: {:?} (mean {:.3})",
+            cors.iter().map(|c| (c * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+            mean(&cors)
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let engine = load_engine(cfg)?;
+    let batch = args.get_usize("batch", cfg.batch)?;
+    let server = Server::start(engine, &cfg.bind, batch)?;
+    println!("serving on {} (batch width {batch}); Ctrl-C to stop", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let mut c = Client::connect(&cfg.bind)?;
+    let prompt = args.get_str("prompt", "once there was a red fox");
+    let strategy = args.get_str("strategy", "i-glass");
+    let resp = c.call(request(&prompt, &strategy, cfg.density))?;
+    match resp.error {
+        Some(e) => bail!("server error: {e}"),
+        None => {
+            println!("text:    {:?}", resp.text);
+            println!(
+                "tokens:  {}  prefill {:.1} ms  decode {:.1} ms  density {:.2}",
+                resp.tokens, resp.prefill_ms, resp.decode_ms, resp.density
+            );
+        }
+    }
+    Ok(())
+}
+
+fn profile(cfg: &RunConfig) -> Result<()> {
+    let engine = load_engine(cfg)?;
+    let prior = GlobalPrior::load(&engine.rt, PriorKind::INps)?;
+    let prompts: Vec<String> = glass::harness::lg_prompts(&engine, 8)?;
+    glass::util::timer::global().reset();
+    for chunk in prompts.chunks(cfg.batch) {
+        run_sparse_batch(
+            &engine,
+            chunk,
+            &Strategy::Glass { lambda: cfg.lambda },
+            Some(&prior),
+            cfg.density,
+            cfg.batch,
+        )?;
+    }
+    println!("{}", glass::util::timer::global().report());
+    Ok(())
+}
+
+pub fn println_header(id: &str) {
+    println!("\n================ {} ================", id);
+}

@@ -1,0 +1,130 @@
+//! Model-facing host utilities: tokenizer, samplers, and weight-store
+//! inspection. The actual network weights live on the device (uploaded
+//! once by [`crate::runtime::Runtime`]); this module provides the host
+//! views the memory simulator and diagnostics need.
+
+pub mod sampling;
+pub mod tokenizer;
+
+pub use sampling::{sample, NpsSampler, SamplerConfig};
+pub use tokenizer::Tokenizer;
+
+use crate::runtime::{Manifest, ModelSpec};
+
+/// Byte-size breakdown of the model weights by component — the input to
+/// the edge-memory simulator's residency model (FFN vs non-FFN split is
+/// what GLASS's static masking exploits on-device, Sec. 4.5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightFootprint {
+    pub total_bytes: usize,
+    pub ffn_bytes: usize,
+    pub attn_bytes: usize,
+    pub embed_bytes: usize,
+    pub other_bytes: usize,
+}
+
+impl WeightFootprint {
+    pub fn from_manifest(man: &Manifest) -> WeightFootprint {
+        let mut f = WeightFootprint {
+            total_bytes: 0,
+            ffn_bytes: 0,
+            attn_bytes: 0,
+            embed_bytes: 0,
+            other_bytes: 0,
+        };
+        for p in &man.params {
+            let bytes = p.numel * 4;
+            f.total_bytes += bytes;
+            if p.name.contains("w_up")
+                || p.name.contains("w_gate")
+                || p.name.contains("w_down")
+            {
+                f.ffn_bytes += bytes;
+            } else if p.name.contains("wq")
+                || p.name.contains("wk")
+                || p.name.contains("wv")
+                || p.name.contains("wo")
+            {
+                f.attn_bytes += bytes;
+            } else if p.name.contains("embed") || p.name.contains("head") {
+                f.embed_bytes += bytes;
+            } else {
+                f.other_bytes += bytes;
+            }
+        }
+        f
+    }
+
+    /// Bytes resident when the FFN is pruned to `density` (static mask ⇒
+    /// only the kept columns/rows of W_up/W_gate/W_down stay in fast
+    /// memory — the paper's edge-deployment benefit).
+    pub fn resident_bytes(&self, ffn_density: f64) -> usize {
+        let kept_ffn = (self.ffn_bytes as f64 * ffn_density).round() as usize;
+        self.total_bytes - self.ffn_bytes + kept_ffn
+    }
+
+    pub fn ffn_fraction(&self) -> f64 {
+        self.ffn_bytes as f64 / self.total_bytes.max(1) as f64
+    }
+}
+
+/// Rough per-token decode FLOPs for the spec at a given FFN density —
+/// used by the memory simulator's compute roofline.
+pub fn decode_flops_per_token(spec: &ModelSpec, ffn_density: f64) -> f64 {
+    let d = spec.d_model as f64;
+    let m = spec.ffn_m as f64 * ffn_density;
+    let layers = spec.n_layers as f64;
+    let attn_proj = 4.0 * d * d; // q,k,v,o projections
+    let attn_kv = 2.0 * (spec.max_seq as f64) * d; // scores + values
+    let ffn = 3.0 * d * m;
+    let head = d * spec.vocab as f64;
+    2.0 * (layers * (attn_proj + attn_kv + ffn) + head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 260,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 32,
+            ffn_m: 512,
+            max_seq: 224,
+            prefill_len: 96,
+            score_len: 224,
+            gen_len: 96,
+            bos_id: 256,
+            pad_id: 257,
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_density() {
+        let s = spec();
+        let dense = decode_flops_per_token(&s, 1.0);
+        let half = decode_flops_per_token(&s, 0.5);
+        assert!(half < dense);
+        // FFN dominates: 3dm vs 4dd per layer (m=4d here)
+        let ffn_dense = 2.0 * 4.0 * 3.0 * 128.0 * 512.0;
+        assert!((dense - half) * 2.0 - ffn_dense < 1e-6);
+    }
+
+    #[test]
+    fn resident_bytes_interpolates() {
+        let f = WeightFootprint {
+            total_bytes: 100,
+            ffn_bytes: 60,
+            attn_bytes: 20,
+            embed_bytes: 20,
+            other_bytes: 0,
+        };
+        assert_eq!(f.resident_bytes(1.0), 100);
+        assert_eq!(f.resident_bytes(0.5), 70);
+        assert_eq!(f.resident_bytes(0.0), 40);
+        assert!((f.ffn_fraction() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,186 @@
+//! Token samplers: greedy, temperature/top-k, and the NPS schedule
+//! (App. B.3: temperature 1.5 + bigram repetition penalty for the first
+//! 10 tokens, then temperature 1.0; top-k = 20 throughout).
+
+use std::collections::HashSet;
+
+use crate::tensor::{argmax, softmax, topk_indices};
+use crate::util::prng::Prng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerConfig {
+    pub temperature: f32,
+    pub top_k: usize,
+}
+
+impl SamplerConfig {
+    pub fn greedy() -> Self {
+        SamplerConfig {
+            temperature: 0.0,
+            top_k: 1,
+        }
+    }
+}
+
+/// Sample one token from logits under the config. temperature == 0 means
+/// greedy (deterministic).
+pub fn sample(logits: &[f32], cfg: SamplerConfig, rng: &mut Prng) -> i32 {
+    if cfg.temperature <= 0.0 || cfg.top_k <= 1 {
+        return argmax(logits) as i32;
+    }
+    let cand = topk_indices(logits, cfg.top_k.min(logits.len()));
+    let mut probs: Vec<f32> = cand
+        .iter()
+        .map(|&i| logits[i] / cfg.temperature)
+        .collect();
+    softmax(&mut probs);
+    let w: Vec<f64> = probs.iter().map(|&p| p as f64).collect();
+    cand[rng.weighted(&w)] as i32
+}
+
+/// NPS sampling schedule state (paper App. B.3 / python compile/nps.py).
+#[derive(Debug, Clone)]
+pub struct NpsSampler {
+    pub hot_tokens: usize,
+    pub hot_temperature: f32,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub bigram_penalty: f32,
+    seen_bigrams: HashSet<(i32, i32)>,
+    last: Option<i32>,
+    step: usize,
+}
+
+impl Default for NpsSampler {
+    fn default() -> Self {
+        NpsSampler {
+            hot_tokens: 10,
+            hot_temperature: 1.5,
+            temperature: 1.0,
+            top_k: 20,
+            bigram_penalty: 2.5,
+            seen_bigrams: HashSet::new(),
+            last: None,
+            step: 0,
+        }
+    }
+}
+
+impl NpsSampler {
+    /// Sample the next token given raw logits, applying the schedule.
+    pub fn next(&mut self, logits: &[f32], rng: &mut Prng) -> i32 {
+        let hot = self.step < self.hot_tokens;
+        let temp = if hot {
+            self.hot_temperature
+        } else {
+            self.temperature
+        };
+        let mut adj: Vec<f32> =
+            logits.iter().map(|&x| x / temp).collect();
+        if hot {
+            if let Some(last) = self.last {
+                for (tok, v) in adj.iter_mut().enumerate() {
+                    if self.seen_bigrams.contains(&(last, tok as i32)) {
+                        // divisor-penalty mirrors python nps.py
+                        *v /= self.bigram_penalty;
+                    }
+                }
+            }
+        }
+        let chosen = sample(
+            &adj,
+            SamplerConfig {
+                temperature: 1.0, // temp already applied
+                top_k: self.top_k,
+            },
+            rng,
+        );
+        if let Some(last) = self.last {
+            self.seen_bigrams.insert((last, chosen));
+        }
+        self.last = Some(chosen);
+        self.step += 1;
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut rng = Prng::new(0);
+        let logits = vec![0.1, 3.0, 0.5];
+        assert_eq!(sample(&logits, SamplerConfig::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_excludes_tail() {
+        let mut rng = Prng::new(1);
+        let mut logits = vec![-100.0; 50];
+        logits[7] = 5.0;
+        logits[9] = 4.0;
+        let cfg = SamplerConfig {
+            temperature: 1.0,
+            top_k: 2,
+        };
+        for _ in 0..100 {
+            let t = sample(&logits, cfg, &mut rng);
+            assert!(t == 7 || t == 9);
+        }
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..30).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cfg = SamplerConfig {
+            temperature: 1.0,
+            top_k: 10,
+        };
+        let a: Vec<i32> = {
+            let mut r = Prng::new(5);
+            (0..20).map(|_| sample(&logits, cfg, &mut r)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut r = Prng::new(5);
+            (0..20).map(|_| sample(&logits, cfg, &mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nps_schedule_cools_down() {
+        let mut s = NpsSampler::default();
+        assert_eq!(s.step, 0);
+        let mut rng = Prng::new(2);
+        let logits = vec![1.0; 30];
+        for _ in 0..12 {
+            s.next(&logits, &mut rng);
+        }
+        assert_eq!(s.step, 12);
+        assert!(!s.seen_bigrams.is_empty());
+    }
+
+    #[test]
+    fn nps_hot_phase_penalizes_repeats() {
+        // With two candidate tokens and a strongly-preferred one, the
+        // penalty makes an immediate repeat of the same bigram unlikely.
+        let mut s = NpsSampler {
+            top_k: 2,
+            bigram_penalty: 1e6,
+            ..NpsSampler::default()
+        };
+        let mut rng = Prng::new(3);
+        let mut logits = vec![-50.0f32; 10];
+        logits[4] = 10.0; // dominant
+        logits[5] = 9.0;
+        let t1 = s.next(&logits, &mut rng);
+        let t2 = s.next(&logits, &mut rng);
+        let t3 = s.next(&logits, &mut rng);
+        // after (t1,t2)=(x,y) occurs once, the same continuation is
+        // heavily penalized while hot
+        let _ = (t1, t2, t3); // sequence must simply be drawn from {4,5}
+        assert!([t1, t2, t3].iter().all(|t| *t == 4 || *t == 5));
+    }
+}

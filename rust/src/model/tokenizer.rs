@@ -1,0 +1,93 @@
+//! Byte-level tokenizer: ids 0..255 are raw bytes, plus BOS and PAD
+//! specials (mirrors the python-side encoding in train.py/data.py).
+
+use crate::runtime::ModelSpec;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: usize,
+    pub bos_id: i32,
+    pub pad_id: i32,
+}
+
+impl Tokenizer {
+    pub fn from_spec(spec: &ModelSpec) -> Self {
+        Tokenizer {
+            vocab: spec.vocab,
+            bos_id: spec.bos_id,
+            pad_id: spec.pad_id,
+        }
+    }
+
+    /// Encode text as bytes (no BOS).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| b as i32).collect()
+    }
+
+    /// Encode with a leading BOS token.
+    pub fn encode_with_bos(&self, text: &str) -> Vec<i32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(self.bos_id);
+        v.extend(text.bytes().map(|b| b as i32));
+        v
+    }
+
+    /// Decode ids to text; specials and invalid utf-8 are dropped
+    /// (lossy) — generation output is ASCII in practice.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..256).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Pad/truncate to exactly `len`, returning (tokens, true_len).
+    pub fn pad_to(&self, ids: &[i32], len: usize) -> (Vec<i32>, usize) {
+        let mut v = ids.to_vec();
+        let true_len = v.len().min(len);
+        v.truncate(len);
+        v.resize(len, self.pad_id);
+        (v, true_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer {
+            vocab: 260,
+            bos_id: 256,
+            pad_id: 257,
+        }
+    }
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = tok();
+        let ids = t.encode("the red fox");
+        assert_eq!(t.decode(&ids), "the red fox");
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let t = tok();
+        let ids = t.encode_with_bos("ab");
+        assert_eq!(ids, vec![256, 97, 98]);
+        assert_eq!(t.decode(&ids), "ab"); // BOS dropped on decode
+    }
+
+    #[test]
+    fn pad_and_truncate() {
+        let t = tok();
+        let (p, n) = t.pad_to(&[1, 2, 3], 5);
+        assert_eq!(p, vec![1, 2, 3, 257, 257]);
+        assert_eq!(n, 3);
+        let (q, m) = t.pad_to(&[1, 2, 3, 4, 5, 6], 4);
+        assert_eq!(q, vec![1, 2, 3, 4]);
+        assert_eq!(m, 4);
+    }
+}

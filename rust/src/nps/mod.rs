@@ -1,0 +1,120 @@
+//! Null-Prompt Stimulation driver over the runtime (Sec. 3.3).
+//!
+//! The offline A^g prior ships with the artifact bundle (computed by
+//! python/compile/nps.py at build time, like the paper's one-off
+//! per-model precomputation). This module re-runs NPS **through the Rust
+//! runtime** — BOS-only prefill, the App. B.3 sampling schedule, and
+//! online accumulation of the decode stats — so the prior can be
+//! regenerated or refreshed without Python, and so the two
+//! implementations can be cross-checked (`glass nps --check`).
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::glass::{GlobalPrior, ImportanceMap, OnlineImportance};
+use crate::model::NpsSampler;
+use crate::util::prng::Prng;
+
+#[derive(Debug, Clone)]
+pub struct NpsConfig {
+    pub n_seqs: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl Default for NpsConfig {
+    fn default() -> Self {
+        // scaled from the paper's 1000 × 1024 (Tab. 4) to model size
+        NpsConfig {
+            n_seqs: 16,
+            seq_len: 96,
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of a Rust-side NPS run.
+#[derive(Debug, Clone)]
+pub struct NpsRun {
+    pub prior: GlobalPrior,
+    pub n_tokens: u64,
+    /// The generated stimulation text (diagnostics).
+    pub samples: Vec<String>,
+}
+
+/// Run NPS with batch-1 step decoding and accumulate A^g online.
+pub fn run_nps(engine: &Engine, cfg: &NpsConfig) -> Result<NpsRun> {
+    let spec = engine.spec().clone();
+    let mut acc = OnlineImportance::new(spec.n_layers, spec.ffn_m);
+    let mut rng = Prng::new(cfg.seed);
+    let mut samples = Vec::new();
+    let max_steps = cfg.seq_len.min(spec.max_seq - 2);
+    let mask = engine.dense_mask(1);
+
+    for s in 0..cfg.n_seqs {
+        // null prompt: BOS only
+        let pre = engine.prefill(&[String::new()], 1)?;
+        let mut kv = pre.kv;
+        let mut sampler = NpsSampler::default();
+        let mut seq_rng = rng.fork(s as u64);
+        let mut tok = sampler.next(pre.logits.row(0), &mut seq_rng);
+        let mut pos = pre.lens[0] as i32;
+        let mut text_ids = vec![tok];
+
+        for _ in 0..max_steps {
+            let (logits, stats) =
+                engine.decode_step(&mut kv, &[tok], &[pos], &mask)?;
+            acc.push(&ImportanceMap::from_stats(&stats, 0)?);
+            tok = sampler.next(logits.row(0), &mut seq_rng);
+            text_ids.push(tok);
+            pos += 1;
+        }
+        samples.push(engine.tok.decode(&text_ids));
+    }
+
+    let prior = GlobalPrior::new("a_nps_rust", acc.map.layers.clone())?;
+    Ok(NpsRun {
+        prior,
+        n_tokens: acc.n_tokens,
+        samples,
+    })
+}
+
+/// Spearman correlation per layer between two priors — the cross-check
+/// between the Rust-side NPS prior and the python build-time prior.
+pub fn prior_agreement(a: &GlobalPrior, b: &GlobalPrior) -> Vec<f64> {
+    use crate::util::stats::spearman;
+    a.map
+        .layers
+        .iter()
+        .zip(&b.map.layers)
+        .map(|(x, y)| {
+            let xs: Vec<f64> = x.iter().map(|v| *v as f64).collect();
+            let ys: Vec<f64> = y.iter().map(|v| *v as f64).collect();
+            spearman(&xs, &ys)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_agreement_self_is_one() {
+        let p = GlobalPrior::new(
+            "p",
+            vec![vec![0.1, 0.5, 0.3], vec![0.9, 0.2, 0.4]],
+        )
+        .unwrap();
+        let cors = prior_agreement(&p, &p);
+        assert!(cors.iter().all(|c| (c - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn default_config_scaled() {
+        let c = NpsConfig::default();
+        assert!(c.n_seqs >= 8);
+        assert!(c.seq_len >= 32);
+    }
+}

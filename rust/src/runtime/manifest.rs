@@ -1,0 +1,286 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One input/output slot of an executable.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?.usize_list()?,
+            dtype: DType::parse(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub name: String,
+    pub file: String,
+    /// Model parameters come first in the HLO parameter list.
+    pub n_params: usize,
+    /// Operand slots (inputs AFTER the parameters).
+    pub operands: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One tensor inside params.bin.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Byte offset in params.bin.
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// Model architecture constants (mirror of python ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_m: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub score_len: usize,
+    pub gen_len: usize,
+    pub bos_id: i32,
+    pub pad_id: i32,
+}
+
+impl ModelSpec {
+    fn from_json(v: &Json) -> Result<ModelSpec> {
+        Ok(ModelSpec {
+            vocab: v.req("vocab")?.as_usize()?,
+            d_model: v.req("d_model")?.as_usize()?,
+            n_layers: v.req("n_layers")?.as_usize()?,
+            n_heads: v.req("n_heads")?.as_usize()?,
+            head_dim: v.req("head_dim")?.as_usize()?,
+            ffn_m: v.req("ffn_m")?.as_usize()?,
+            max_seq: v.req("max_seq")?.as_usize()?,
+            prefill_len: v.req("prefill_len")?.as_usize()?,
+            score_len: v.req("score_len")?.as_usize()?,
+            gen_len: v.req("gen_len")?.as_usize()?,
+            bos_id: v.req("bos_id")?.as_i64()? as i32,
+            pad_id: v.req("pad_id")?.as_i64()? as i32,
+        })
+    }
+
+    /// Neuron budget k for a density in (0, 1].
+    pub fn budget(&self, density: f64) -> usize {
+        ((self.ffn_m as f64 * density).round() as usize)
+            .clamp(1, self.ffn_m)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    pub topk_k: usize,
+    pub params_file: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub executables: Vec<ExeSpec>,
+    /// prior name -> relative path
+    pub priors: Vec<(String, String)>,
+    /// dataset name -> relative path
+    pub data: Vec<(String, String)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let j = Json::parse_file(&path)
+            .with_context(|| "loading artifact manifest (run `make artifacts`?)")?;
+        let model = ModelSpec::from_json(j.req("model")?)?;
+
+        let params = j
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.usize_list()?,
+                    offset: p.req("offset")?.as_usize()?,
+                    numel: p.req("numel")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut executables = Vec::new();
+        for (name, e) in j.req("executables")?.as_obj()? {
+            let n_params = e.req("n_params")?.as_usize()?;
+            let all_inputs = e
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            if all_inputs.len() < n_params {
+                bail!("exe {name}: inputs < n_params");
+            }
+            executables.push(ExeSpec {
+                name: name.clone(),
+                file: e.req("file")?.as_str()?.to_string(),
+                n_params,
+                operands: all_inputs[n_params..].to_vec(),
+                outputs: e
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+
+        let pairs = |key: &str| -> Result<Vec<(String, String)>> {
+            Ok(j.req(key)?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<Result<Vec<_>>>()?)
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            topk_k: j.req("topk_k")?.as_usize()?,
+            params_file: dir.join(j.req("params_file")?.as_str()?),
+            params,
+            executables,
+            priors: pairs("priors")?,
+            data: pairs("data")?,
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "executable '{name}' not in manifest (have: {})",
+                    self.executables
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn prior_path(&self, name: &str) -> Result<PathBuf> {
+        self.priors
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| self.dir.join(v))
+            .ok_or_else(|| anyhow::anyhow!("prior '{name}' not in manifest"))
+    }
+
+    pub fn data_path(&self, name: &str) -> Result<PathBuf> {
+        self.data
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| self.dir.join(v))
+            .ok_or_else(|| anyhow::anyhow!("dataset '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+          "version": 1,
+          "model": {"vocab":260,"d_model":8,"n_layers":2,"n_heads":2,
+                    "head_dim":4,"ffn_m":16,"max_seq":8,"prefill_len":4,
+                    "score_len":8,"gen_len":4,"rope_base":10000.0,
+                    "bos_id":256,"pad_id":257},
+          "topk_k": 8,
+          "params_file": "params.bin",
+          "params": [{"name":"embed","shape":[260,8],"offset":0,"numel":2080}],
+          "executables": {
+            "decode_b1": {
+              "file": "decode_b1.hlo.txt",
+              "n_params": 1,
+              "inputs": [
+                {"name":"embed","shape":[260,8],"dtype":"f32"},
+                {"name":"token","shape":[1],"dtype":"i32"}
+              ],
+              "outputs": [{"name":"logits","shape":[1,260],"dtype":"f32"}]
+            }
+          },
+          "priors": {"a_nps": "priors/a_nps.bin"},
+          "data": {"lg": "data/lg.json"}
+        }"#
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("glass_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.ffn_m, 16);
+        assert_eq!(m.model.budget(0.5), 8);
+        let e = m.exe("decode_b1").unwrap();
+        assert_eq!(e.n_params, 1);
+        assert_eq!(e.operands.len(), 1);
+        assert_eq!(e.operands[0].name, "token");
+        assert_eq!(e.operands[0].dtype, DType::I32);
+        assert!(m.exe("nope").is_err());
+        assert!(m.prior_path("a_nps").unwrap().ends_with("priors/a_nps.bin"));
+    }
+
+    #[test]
+    fn budget_clamps() {
+        let dir = std::env::temp_dir().join("glass_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.budget(0.0001), 1);
+        assert_eq!(m.model.budget(1.0), 16);
+    }
+}

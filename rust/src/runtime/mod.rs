@@ -1,0 +1,311 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! request path with device-resident model weights.
+//!
+//! Flow (see /opt/xla-example/load_hlo and aot_recipe):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` → `execute_b`.
+//!
+//! Model parameters are uploaded to the device **once** per runtime and
+//! passed as the leading arguments of every call (`execute_b`), so the
+//! per-step host↔device traffic is only the operands (tokens, masks, KV).
+//! Outputs come back as one tuple literal (xla_extension 0.5.1 does not
+//! untuple results device-side) and are decomposed into host tensors.
+
+pub mod manifest;
+
+pub use manifest::{DType, ExeSpec, IoSpec, Manifest, ModelSpec, ParamSpec};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{TensorF, TensorI};
+use crate::util::timer;
+
+/// A host-side value crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(TensorF),
+    I32(TensorI),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&TensorF> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<TensorF> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<TensorI> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 value"),
+        }
+    }
+}
+
+/// PJRT-side state: client, device-resident weights, compiled programs.
+///
+/// The `xla` crate's wrappers hold non-atomically-refcounted handles
+/// (`Rc`) onto the C++ client, so they are neither `Send` nor `Sync`.
+/// The underlying PJRT C++ objects are safe to use from multiple threads
+/// *sequentially*; we enforce that by funneling every PJRT touch through
+/// the `Mutex<PjrtState>` below, which makes the `unsafe impl Send` sound
+/// in practice (no concurrent access, no cross-thread Rc clone races —
+/// all clones happen under the lock).
+struct PjrtState {
+    client: xla::PjRtClient,
+    /// Model parameters uploaded once, in manifest order.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    exes: HashMap<String, (ExeSpec, xla::PjRtLoadedExecutable)>,
+}
+
+unsafe impl Send for PjrtState {}
+
+/// The runtime: the manifest, the serialized PJRT state, and host copies
+/// of the weights (for the memory simulator and diagnostics).
+pub struct Runtime {
+    pub manifest: Manifest,
+    state: Mutex<PjrtState>,
+    /// Raw host copy of the weights (memsim + weight inspection need it).
+    pub param_host: Vec<Vec<f32>>,
+}
+
+impl Runtime {
+    /// Load the artifact bundle at `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let raw = std::fs::read(&manifest.params_file)
+            .with_context(|| format!("reading {:?}", manifest.params_file))?;
+        let mut param_bufs = Vec::with_capacity(manifest.params.len());
+        let mut param_host = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let start = p.offset;
+            let end = start + p.numel * 4;
+            if end > raw.len() {
+                bail!("params.bin too small for {}", p.name);
+            }
+            let floats: Vec<f32> = raw[start..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer(&floats, &p.shape, None)
+                .with_context(|| format!("uploading param {}", p.name))?;
+            param_bufs.push(buf);
+            param_host.push(floats);
+        }
+        Ok(Runtime {
+            manifest,
+            state: Mutex::new(PjrtState {
+                client,
+                param_bufs,
+                exes: HashMap::new(),
+            }),
+            param_host,
+        })
+    }
+
+    /// Total model weight bytes (for the memory simulator).
+    pub fn weight_bytes(&self) -> usize {
+        self.manifest.params.iter().map(|p| p.numel * 4).sum()
+    }
+
+    /// Compile (and cache) an executable by manifest name. Also used to
+    /// warm programs before serving.
+    pub fn executable(&self, name: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        self.compile_locked(&mut st, name)
+    }
+
+    fn compile_locked(
+        &self,
+        st: &mut PjrtState,
+        name: &str,
+    ) -> Result<()> {
+        if st.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.exe(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let _t = timer::global().start("runtime.compile");
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = st
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        st.exes.insert(name.to_string(), (spec, exe));
+        crate::info!("compiled executable '{name}'");
+        Ok(())
+    }
+
+    /// Execute by name with operands in manifest order.
+    pub fn call(&self, name: &str, operands: &[Value]) -> Result<Vec<Value>> {
+        let mut st = self.state.lock().unwrap();
+        self.compile_locked(&mut st, name)?;
+        let st = &*st;
+        let (spec, exe) = st.exes.get(name).expect("just compiled");
+        if operands.len() != spec.operands.len() {
+            bail!(
+                "exe {}: expected {} operands, got {}",
+                spec.name,
+                spec.operands.len(),
+                operands.len()
+            );
+        }
+        // validate + upload operands
+        let _t_all = timer::global().start("runtime.call");
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            st.param_bufs.iter().collect();
+        let mut operand_bufs = Vec::with_capacity(operands.len());
+        {
+            let _t = timer::global().start("runtime.upload");
+            for (io, v) in spec.operands.iter().zip(operands) {
+                if io.shape != v.shape() {
+                    bail!(
+                        "exe {} operand '{}': shape {:?} != expected {:?}",
+                        spec.name,
+                        io.name,
+                        v.shape(),
+                        io.shape
+                    );
+                }
+                if io.dtype != v.dtype() {
+                    bail!(
+                        "exe {} operand '{}': dtype mismatch",
+                        spec.name,
+                        io.name
+                    );
+                }
+                let buf = match v {
+                    Value::F32(t) => st.client.buffer_from_host_buffer(
+                        &t.data,
+                        &t.shape,
+                        None,
+                    ),
+                    Value::I32(t) => st.client.buffer_from_host_buffer(
+                        &t.data,
+                        &t.shape,
+                        None,
+                    ),
+                }
+                .map_err(|e| anyhow::anyhow!("upload operand: {e:?}"))?;
+                operand_bufs.push(buf);
+            }
+        }
+        inputs.extend(operand_bufs.iter());
+
+        let out_bufs = {
+            let _t = timer::global().start("runtime.execute");
+            exe.execute_b(&inputs)
+                .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", spec.name))?
+        };
+        let _t_dl = timer::global().start("runtime.download");
+        let tuple = out_bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "exe {}: manifest lists {} outputs, program returned {}",
+                spec.name,
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (io, lit) in spec.outputs.iter().zip(parts) {
+            let v = match io.dtype {
+                DType::F32 => {
+                    let data = lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?;
+                    Value::F32(TensorF::new(io.shape.clone(), data)?)
+                }
+                DType::I32 => {
+                    let data = lit
+                        .to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?;
+                    Value::I32(TensorI::new(io.shape.clone(), data)?)
+                }
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Load a prior file ([L, m] f32 row-major) from the bundle.
+    pub fn load_prior(&self, name: &str) -> Result<Vec<Vec<f32>>> {
+        let path = self.manifest.prior_path(name)?;
+        let raw = std::fs::read(&path)
+            .with_context(|| format!("reading prior {}", path.display()))?;
+        let m = self.manifest.model.ffn_m;
+        let l = self.manifest.model.n_layers;
+        if raw.len() != l * m * 4 {
+            bail!(
+                "prior {name}: expected {} bytes, found {}",
+                l * m * 4,
+                raw.len()
+            );
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(floats.chunks_exact(m).map(|c| c.to_vec()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let f = Value::F32(TensorF::zeros(&[2, 2]));
+        assert_eq!(f.shape(), &[2, 2]);
+        assert_eq!(f.dtype(), DType::F32);
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = Value::I32(TensorI::zeros(&[3]));
+        assert!(i.as_i32().is_ok());
+        assert!(i.into_f32().is_err());
+    }
+}

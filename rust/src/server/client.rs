@@ -1,0 +1,100 @@
+//! Blocking client for the JSON-line protocol (used by examples, the
+//! integration tests, and the serving benchmark).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{Request, Response};
+
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client {
+            stream,
+            reader,
+            next_id: 1,
+        })
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send one request (non-blocking with respect to the response).
+    pub fn send(&mut self, mut req: Request) -> Result<u64> {
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        writeln!(self.stream, "{}", req.to_line())?;
+        Ok(req.id)
+    }
+
+    /// Read the next response line.
+    pub fn recv(&mut self) -> Result<Response> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        Response::parse(line.trim())
+    }
+
+    /// Round-trip a single request.
+    pub fn call(&mut self, req: Request) -> Result<Response> {
+        let id = self.send(req)?;
+        let resp = self.recv()?;
+        if resp.id != id && resp.id != 0 {
+            bail!("response id {} != request id {id}", resp.id);
+        }
+        Ok(resp)
+    }
+
+    /// Pipeline many requests, returning responses keyed by id with
+    /// per-request wall-clock latency measured from send to receive
+    /// completion of that id.
+    pub fn call_many(
+        &mut self,
+        reqs: Vec<Request>,
+    ) -> Result<Vec<(Response, Duration)>> {
+        let t0 = Instant::now();
+        let mut sent = HashMap::new();
+        for r in reqs {
+            let id = self.send(r)?;
+            sent.insert(id, t0.elapsed());
+        }
+        let mut out = Vec::with_capacity(sent.len());
+        for _ in 0..sent.len() {
+            let resp = self.recv()?;
+            let sent_at = sent.get(&resp.id).copied().unwrap_or_default();
+            out.push((resp, t0.elapsed() - sent_at));
+        }
+        Ok(out)
+    }
+}
+
+/// Convenience request builder.
+pub fn request(prompt: &str, strategy: &str, density: f64) -> Request {
+    Request {
+        id: 0,
+        prompt: prompt.to_string(),
+        strategy: strategy.to_string(),
+        lambda: 0.5,
+        density,
+        max_tokens: 64,
+    }
+}

@@ -1,0 +1,265 @@
+//! Threaded serving layer: TCP listener + scheduler + engine loop.
+//!
+//! Topology (vLLM-router-like, scaled to one box):
+//!   * N acceptor/connection threads parse JSON-line requests and push
+//!     them onto the [`scheduler::Scheduler`] queue;
+//!   * one engine thread drains batches, runs the GLASS flow
+//!     (prefill → mask → fused sparse generate), and routes responses
+//!     back through per-connection channels;
+//!   * masks are per-slot, so heterogeneous strategies share a batch.
+
+pub mod client;
+pub mod protocol;
+pub mod scheduler;
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::session::pack_slot_masks;
+use crate::engine::Engine;
+use crate::glass::{build_mask, GlobalPrior, PriorKind, Strategy};
+use crate::info;
+
+use protocol::{Request, Response};
+use scheduler::{Pending, Scheduler};
+
+/// Server handle: bind address + shutdown flag.
+pub struct Server {
+    pub addr: String,
+    shutdown: Arc<AtomicBool>,
+    sched: Arc<Scheduler>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Shared {
+    engine: Engine,
+    priors: HashMap<&'static str, GlobalPrior>,
+    conns: Mutex<HashMap<u64, Sender<Response>>>,
+}
+
+impl Server {
+    /// Start serving on `addr` (e.g. "127.0.0.1:7433"). Returns once the
+    /// listener is bound; serving continues on background threads.
+    pub fn start(engine: Engine, addr: &str, batch_width: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?.to_string();
+
+        let mut priors = HashMap::new();
+        for (key, kind) in [
+            ("a-glass", PriorKind::ANps),
+            ("i-glass", PriorKind::INps),
+        ] {
+            priors.insert(key, GlobalPrior::load(&engine.rt, kind)?);
+        }
+        // warm the executables so first requests aren't hit by compiles
+        let b = engine.pick_batch(batch_width.min(4))?;
+        engine.rt.executable(&format!("prefill_b{b}"))?;
+        engine.rt.executable(&format!("generate_b{b}"))?;
+
+        let shared = Arc::new(Shared {
+            engine,
+            priors,
+            conns: Mutex::new(HashMap::new()),
+        });
+        let sched = Arc::new(Scheduler::new(
+            batch_width,
+            Duration::from_millis(4),
+        ));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // engine loop
+        {
+            let shared = Arc::clone(&shared);
+            let sched = Arc::clone(&sched);
+            threads.push(std::thread::spawn(move || {
+                engine_loop(&shared, &sched);
+            }));
+        }
+        // acceptor
+        {
+            let shared = Arc::clone(&shared);
+            let sched = Arc::clone(&sched);
+            let shutdown = Arc::clone(&shutdown);
+            threads.push(std::thread::spawn(move || {
+                let next_conn = AtomicU64::new(1);
+                loop {
+                    if shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let conn_id =
+                                next_conn.fetch_add(1, Ordering::Relaxed);
+                            let shared = Arc::clone(&shared);
+                            let sched = Arc::clone(&sched);
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(
+                                    stream, conn_id, &shared, &sched,
+                                );
+                            });
+                        }
+                        Err(ref e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        info!("server listening on {local}");
+        Ok(Server {
+            addr: local,
+            shutdown,
+            sched,
+            threads,
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        self.sched.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    conn_id: u64,
+    shared: &Arc<Shared>,
+    sched: &Arc<Scheduler>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let (tx, rx) = channel::<Response>();
+    shared.conns.lock().unwrap().insert(conn_id, tx);
+    let mut writer = stream.try_clone()?;
+    // writer thread: serialize responses back to the client
+    let w = std::thread::spawn(move || {
+        for resp in rx {
+            if writeln!(writer, "{}", resp.to_line()).is_err() {
+                break;
+            }
+        }
+    });
+
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::parse(&line) {
+            Ok(request) => sched.submit(Pending {
+                request,
+                arrived: Instant::now(),
+                conn_id,
+            }),
+            Err(e) => {
+                // protocol error: respond immediately
+                if let Some(tx) =
+                    shared.conns.lock().unwrap().get(&conn_id)
+                {
+                    let _ = tx.send(Response::err(0, e.to_string()));
+                }
+            }
+        }
+    }
+    shared.conns.lock().unwrap().remove(&conn_id);
+    let _ = w.join();
+    Ok(())
+}
+
+fn engine_loop(shared: &Arc<Shared>, sched: &Arc<Scheduler>) {
+    while let Some(batch) = sched.next_batch() {
+        let responses = match serve_batch(shared, &batch) {
+            Ok(r) => r,
+            Err(e) => batch
+                .iter()
+                .map(|p| Response::err(p.request.id, e.to_string()))
+                .collect(),
+        };
+        let conns = shared.conns.lock().unwrap();
+        for (p, resp) in batch.iter().zip(responses) {
+            if let Some(tx) = conns.get(&p.conn_id) {
+                let _ = tx.send(resp);
+            }
+        }
+    }
+}
+
+/// Run one scheduled batch through the GLASS flow.
+fn serve_batch(shared: &Arc<Shared>, batch: &[Pending]) -> Result<Vec<Response>> {
+    let engine = &shared.engine;
+    let spec = engine.spec().clone();
+    let n = batch.len();
+    let b = engine.pick_batch(n)?;
+    let prompts: Vec<String> =
+        batch.iter().map(|p| p.request.prompt.clone()).collect();
+
+    let t0 = Instant::now();
+    let pre = engine.prefill(&prompts, b)?;
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // per-slot masks from per-request strategies
+    let mut masks = Vec::with_capacity(n);
+    for (slot, p) in batch.iter().enumerate() {
+        let req = &p.request;
+        let local = engine.local_importance(&pre, slot)?;
+        let k = spec.budget(req.density);
+        let (strategy, prior) = match req.strategy.as_str() {
+            "dense" => (Strategy::Dense, None),
+            "griffin" => (Strategy::LocalOnly, None),
+            "global" => (
+                Strategy::GlobalOnly,
+                shared.priors.get("a-glass"),
+            ),
+            "a-glass" => (
+                Strategy::Glass { lambda: req.lambda },
+                shared.priors.get("a-glass"),
+            ),
+            _ => (
+                Strategy::Glass { lambda: req.lambda },
+                shared.priors.get("i-glass"),
+            ),
+        };
+        masks.push(build_mask(&strategy, &local, prior, k)?);
+    }
+    let mask_t = pack_slot_masks(&masks, n, b, &spec);
+
+    let t1 = Instant::now();
+    let gen = engine.generate(&prompts, &mask_t, b)?;
+    let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    let n_gen = gen.tokens.shape[1];
+    let mut out = Vec::with_capacity(n);
+    for (slot, p) in batch.iter().enumerate() {
+        let want = p.request.max_tokens.min(n_gen);
+        let ids = &gen.tokens.data[slot * n_gen..slot * n_gen + want];
+        out.push(Response::ok(
+            p.request.id,
+            engine.decode_text(ids),
+            want,
+            prefill_ms,
+            decode_ms,
+            masks[slot].density(),
+        ));
+    }
+    Ok(out)
+}

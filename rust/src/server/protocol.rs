@@ -1,0 +1,186 @@
+//! JSON-line wire protocol for the serving layer.
+//!
+//! One JSON object per line in each direction over TCP:
+//!   request:  {"id": 7, "prompt": "...", "strategy": "glass",
+//!              "lambda": 0.5, "density": 0.5, "max_tokens": 64}
+//!   response: {"id": 7, "text": "...", "tokens": 42,
+//!              "prefill_ms": 1.2, "decode_ms": 30.5, "density": 0.5}
+//!   error:    {"id": 7, "error": "..."}
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    /// "dense" | "griffin" | "global" | "a-glass" | "i-glass"
+    pub strategy: String,
+    pub lambda: f64,
+    pub density: f64,
+    pub max_tokens: usize,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line)?;
+        let get_f = |k: &str, d: f64| -> Result<f64> {
+            match j.get(k) {
+                Some(v) => v.as_f64(),
+                None => Ok(d),
+            }
+        };
+        let strategy = match j.get("strategy") {
+            Some(v) => v.as_str()?.to_string(),
+            None => "i-glass".to_string(),
+        };
+        if !["dense", "griffin", "global", "a-glass", "i-glass"]
+            .contains(&strategy.as_str())
+        {
+            bail!("unknown strategy '{strategy}'");
+        }
+        Ok(Request {
+            id: j.req("id")?.as_usize()? as u64,
+            prompt: j.req("prompt")?.as_str()?.to_string(),
+            strategy,
+            lambda: get_f("lambda", 0.5)?,
+            density: get_f("density", 0.5)?,
+            max_tokens: match j.get("max_tokens") {
+                Some(v) => v.as_usize()?,
+                None => 64,
+            },
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut o = Json::obj();
+        o.set("id", Json::Num(self.id as f64))
+            .set("prompt", Json::Str(self.prompt.clone()))
+            .set("strategy", Json::Str(self.strategy.clone()))
+            .set("lambda", Json::Num(self.lambda))
+            .set("density", Json::Num(self.density))
+            .set("max_tokens", Json::Num(self.max_tokens as f64));
+        o.to_string()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: usize,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub density: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn ok(
+        id: u64,
+        text: String,
+        tokens: usize,
+        prefill_ms: f64,
+        decode_ms: f64,
+        density: f64,
+    ) -> Response {
+        Response {
+            id,
+            text,
+            tokens,
+            prefill_ms,
+            decode_ms,
+            density,
+            error: None,
+        }
+    }
+
+    pub fn err(id: u64, msg: String) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            tokens: 0,
+            prefill_ms: 0.0,
+            decode_ms: 0.0,
+            density: 1.0,
+            error: Some(msg),
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut o = Json::obj();
+        o.set("id", Json::Num(self.id as f64));
+        if let Some(e) = &self.error {
+            o.set("error", Json::Str(e.clone()));
+        } else {
+            o.set("text", Json::Str(self.text.clone()))
+                .set("tokens", Json::Num(self.tokens as f64))
+                .set("prefill_ms", Json::Num(self.prefill_ms))
+                .set("decode_ms", Json::Num(self.decode_ms))
+                .set("density", Json::Num(self.density));
+        }
+        o.to_string()
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        let j = Json::parse(line)?;
+        let id = j.req("id")?.as_usize()? as u64;
+        if let Some(e) = j.get("error") {
+            return Ok(Response::err(id, e.as_str()?.to_string()));
+        }
+        Ok(Response {
+            id,
+            text: j.req("text")?.as_str()?.to_string(),
+            tokens: j.req("tokens")?.as_usize()?,
+            prefill_ms: j.req("prefill_ms")?.as_f64()?,
+            decode_ms: j.req("decode_ms")?.as_f64()?,
+            density: j.req("density")?.as_f64()?,
+            error: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request {
+            id: 3,
+            prompt: "once there was a \"fox\"".into(),
+            strategy: "a-glass".into(),
+            lambda: 0.5,
+            density: 0.4,
+            max_tokens: 32,
+        };
+        let r2 = Request::parse(&r.to_line()).unwrap();
+        assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn request_defaults() {
+        let r = Request::parse(r#"{"id":1,"prompt":"hi"}"#).unwrap();
+        assert_eq!(r.strategy, "i-glass");
+        assert_eq!(r.max_tokens, 64);
+        assert_eq!(r.density, 0.5);
+    }
+
+    #[test]
+    fn bad_strategy_rejected() {
+        assert!(Request::parse(
+            r#"{"id":1,"prompt":"x","strategy":"bogus"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_err() {
+        let ok = Response::ok(1, "hello".into(), 5, 1.5, 20.0, 0.5);
+        assert_eq!(Response::parse(&ok.to_line()).unwrap(), ok);
+        let e = Response::err(2, "boom".into());
+        let e2 = Response::parse(&e.to_line()).unwrap();
+        assert_eq!(e2.error.as_deref(), Some("boom"));
+    }
+}

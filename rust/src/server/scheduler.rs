@@ -1,0 +1,167 @@
+//! Request scheduler: FCFS queue with greedy batch formation.
+//!
+//! Requests accumulate in a queue; the engine loop drains up to the
+//! compiled batch width each cycle (waiting up to `batch_window` for
+//! more work to arrive once at least one request is pending). Static
+//! masks mean a request's sparsity pattern is fixed at prefill — slots
+//! in the same generate call can carry different masks, so heterogeneous
+//! strategies batch together (the [B, L, m] mask tensor is per-slot).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::protocol::Request;
+
+/// Queue entry: the request plus its arrival time and a reply slot key.
+#[derive(Debug)]
+pub struct Pending {
+    pub request: Request,
+    pub arrived: Instant,
+    /// Opaque connection key used by the server to route the response.
+    pub conn_id: u64,
+}
+
+#[derive(Default)]
+struct QueueState {
+    queue: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Thread-safe scheduler queue.
+pub struct Scheduler {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    pub batch_width: usize,
+    pub batch_window: Duration,
+}
+
+impl Scheduler {
+    pub fn new(batch_width: usize, batch_window: Duration) -> Scheduler {
+        Scheduler {
+            state: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            batch_width,
+            batch_window,
+        }
+    }
+
+    pub fn submit(&self, p: Pending) {
+        let mut st = self.state.lock().unwrap();
+        st.queue.push_back(p);
+        self.cv.notify_all();
+    }
+
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take the next batch (1..=batch_width requests). Blocks until at
+    /// least one request is available or the queue is closed (→ None).
+    /// After the first request arrives, waits up to `batch_window` for
+    /// the batch to fill — the classic latency/throughput knob.
+    pub fn next_batch(&self) -> Option<Vec<Pending>> {
+        let mut st = self.state.lock().unwrap();
+        // wait for work
+        while st.queue.is_empty() {
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+        // batch-fill window
+        let deadline = Instant::now() + self.batch_window;
+        while st.queue.len() < self.batch_width && !st.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (lock, timeout) =
+                self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = lock;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = st.queue.len().min(self.batch_width);
+        Some(st.queue.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Pending {
+        Pending {
+            request: Request {
+                id,
+                prompt: "p".into(),
+                strategy: "dense".into(),
+                lambda: 0.5,
+                density: 0.5,
+                max_tokens: 4,
+            },
+            arrived: Instant::now(),
+            conn_id: id,
+        }
+    }
+
+    #[test]
+    fn batches_up_to_width() {
+        let s = Scheduler::new(2, Duration::from_millis(5));
+        for i in 0..5 {
+            s.submit(req(i));
+        }
+        let b1 = s.next_batch().unwrap();
+        assert_eq!(b1.len(), 2);
+        let b2 = s.next_batch().unwrap();
+        assert_eq!(b2.len(), 2);
+        let b3 = s.next_batch().unwrap();
+        assert_eq!(b3.len(), 1);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn fcfs_order() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        for i in 0..4 {
+            s.submit(req(i));
+        }
+        let b = s.next_batch().unwrap();
+        let ids: Vec<u64> = b.iter().map(|p| p.request.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn close_unblocks() {
+        let s = Arc::new(Scheduler::new(2, Duration::from_millis(1)));
+        let s2 = Arc::clone(&s);
+        let h = std::thread::spawn(move || s2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        s.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn window_fills_batch() {
+        let s = Arc::new(Scheduler::new(2, Duration::from_millis(200)));
+        let s2 = Arc::clone(&s);
+        s.submit(req(0));
+        let h = std::thread::spawn(move || s2.next_batch());
+        std::thread::sleep(Duration::from_millis(30));
+        s.submit(req(1));
+        let b = h.join().unwrap().unwrap();
+        assert_eq!(b.len(), 2, "window should have gathered both");
+    }
+}

@@ -1,0 +1,266 @@
+//! Host tensors and numeric helpers shared across the coordinator.
+//!
+//! These are deliberately simple row-major buffers: the heavy math runs
+//! inside the AOT-compiled XLA executables; the host side only needs
+//! shaping, softmax/log-softmax for metric computation, top-k, and
+//! masks. Kept dependency-free and well tested.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Row-major i32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl TensorF {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                numel(&shape),
+                data.len()
+            );
+        }
+        Ok(TensorF { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorF {
+            shape: shape.to_vec(),
+            data: vec![0.0; numel(shape)],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        TensorF {
+            shape: shape.to_vec(),
+            data: vec![1.0; numel(shape)],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2, "row() needs rank-2");
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Slice along the leading axis: returns the sub-tensor at index i.
+    pub fn index0(&self, i: usize) -> TensorF {
+        assert!(self.rank() >= 1 && i < self.shape[0]);
+        let sub = numel(&self.shape[1..]);
+        TensorF {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * sub..(i + 1) * sub].to_vec(),
+        }
+    }
+
+    /// View of the flattened chunk at leading index i (no copy).
+    pub fn chunk0(&self, i: usize) -> &[f32] {
+        let sub = numel(&self.shape[1..]);
+        &self.data[i * sub..(i + 1) * sub]
+    }
+
+    pub fn chunk0_mut(&mut self, i: usize) -> &mut [f32] {
+        let sub = numel(&self.shape[1..]);
+        &mut self.data[i * sub..(i + 1) * sub]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        if numel(&shape) != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+}
+
+impl TensorI {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        if numel(&shape) != data.len() {
+            bail!(
+                "shape {:?} needs {} elements, got {}",
+                shape,
+                numel(&shape),
+                data.len()
+            );
+        }
+        Ok(TensorI { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorI {
+            shape: shape.to_vec(),
+            data: vec![0; numel(shape)],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: i32) -> Self {
+        TensorI {
+            shape: shape.to_vec(),
+            data: vec![v; numel(shape)],
+        }
+    }
+}
+
+// --------------------------------------------------------------- numerics
+
+/// log(sum(exp(x))) with the max trick.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut s = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        s += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= s;
+    }
+}
+
+/// Log-probabilities from logits (new vector).
+pub fn log_softmax(xs: &[f32]) -> Vec<f32> {
+    let lse = logsumexp(xs);
+    xs.iter().map(|x| x - lse).collect()
+}
+
+/// Index of the maximum (ties -> lowest index, matching jnp.argmax).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest values, descending; ties broken by lower
+/// index first (the paper's deterministic tie rule).
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+/// ℓ2 norm.
+pub fn l2_norm(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum::<f32>().sqrt()
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        assert!(TensorF::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rows_and_chunks() {
+        let t = TensorF::new(vec![2, 3], (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(t.chunk0(0), &[0.0, 1.0, 2.0]);
+        let s = t.index0(1);
+        assert_eq!(s.shape, vec![3]);
+        assert_eq!(s.data, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut xs = vec![1.0, 2.0, 3.0];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn log_softmax_consistent_with_softmax() {
+        let xs = vec![0.5, -1.0, 2.0, 0.0];
+        let lp = log_softmax(&xs);
+        let mut sm = xs.clone();
+        softmax(&mut sm);
+        for (l, p) in lp.iter().zip(&sm) {
+            assert!((l.exp() - p).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let xs = vec![1000.0, 1000.0];
+        let l = logsumexp(&xs);
+        assert!((l - (1000.0 + (2f32).ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argmax_tie_lowest_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn topk_deterministic_ties() {
+        let idx = topk_indices(&[1.0, 5.0, 5.0, 0.0, 5.0], 3);
+        assert_eq!(idx, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn topk_k_larger_than_len() {
+        assert_eq!(topk_indices(&[2.0, 1.0], 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = TensorF::zeros(&[4, 2]);
+        assert!(t.clone().reshape(vec![2, 4]).is_ok());
+        assert!(t.reshape(vec![3, 3]).is_err());
+    }
+}

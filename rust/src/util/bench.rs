@@ -1,0 +1,182 @@
+//! Mini-criterion: warmup + timed iterations with mean/p50/p95 reporting
+//! (criterion is unavailable offline; `cargo bench` targets use
+//! `harness = false` and call into this).
+
+use std::time::Instant;
+
+use super::stats::{percentile, summarize};
+use super::table::Table;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            self.items_per_iter / self.mean_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop adding iterations once this much wall time is spent.
+    pub budget_s: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            budget_s: 3.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget_s: 1.0,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`; `items` = logical items per call (tokens, requests).
+    pub fn bench<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let s = summarize(&samples);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: s.mean,
+            p50_s: percentile(&samples, 0.5),
+            p95_s: percentile(&samples, 0.95),
+            std_s: s.std,
+            items_per_iter: items,
+        };
+        println!(
+            "bench {name:40} {:>10}  p50 {:>10}  p95 {:>10}  ({} iters{})",
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p95_s),
+            r.iters,
+            if items > 0.0 {
+                format!(", {:.1} items/s", r.throughput())
+            } else {
+                String::new()
+            }
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            "benchmarks",
+            &["name", "mean", "p50", "p95", "iters", "items/s"],
+        );
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                fmt_time(r.mean_s),
+                fmt_time(r.p50_s),
+                fmt_time(r.p95_s),
+                format!("{}", r.iters),
+                if r.items_per_iter > 0.0 {
+                    format!("{:.1}", r.throughput())
+                } else {
+                    "-".into()
+                },
+            ]);
+        }
+        t.to_ascii()
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s.is_nan() {
+        "-".into()
+    } else if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::quick();
+        let r = b.bench("noop", 1.0, || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        assert!(b.report().contains("noop"));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn throughput() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            p50_s: 0.5,
+            p95_s: 0.5,
+            std_s: 0.0,
+            items_per_iter: 10.0,
+        };
+        assert!((r.throughput() - 20.0).abs() < 1e-9);
+    }
+}

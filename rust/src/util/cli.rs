@@ -1,0 +1,181 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `glass <subcommand> [--key value]... [--flag]... [positional]...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+    /// (name, takes_value) registered specs, for help + validation.
+    known: Vec<(String, bool, String)>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding program name). `flag_names` lists
+    /// options that take NO value; everything else starting with `--`
+    /// consumes the next token.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    a.flags.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv.get(i).ok_or_else(|| {
+                        anyhow!("option --{name} requires a value")
+                    })?;
+                    a.options.insert(name.to_string(), v.clone());
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: invalid integer '{v}': {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name}: invalid float '{v}': {e}")),
+        }
+    }
+
+    /// Comma-separated list of floats, e.g. `--densities 0.9,0.5,0.1`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("--{name}: bad float '{x}': {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    pub fn expect_subcommand(&self, allowed: &[&str]) -> Result<&str> {
+        match &self.subcommand {
+            Some(s) if allowed.contains(&s.as_str()) => Ok(s),
+            Some(s) => bail!(
+                "unknown subcommand '{s}' (expected one of: {})",
+                allowed.join(", ")
+            ),
+            None => bail!("missing subcommand (one of: {})", allowed.join(", ")),
+        }
+    }
+
+    pub fn describe(&mut self, name: &str, takes_value: bool, help: &str) {
+        self.known.push((name.into(), takes_value, help.into()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &argv("exp table2 --samples 64 --verbose --lambda 0.5"),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.get_usize("samples", 0).unwrap(), 64);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv("run --k=7"), &[]).unwrap();
+        assert_eq!(a.get_usize("k", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("run --samples"), &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv("x --densities 0.9,0.5,0.1"), &[]).unwrap();
+        assert_eq!(
+            a.get_f64_list("densities", &[]).unwrap(),
+            vec![0.9, 0.5, 0.1]
+        );
+        let d = a.get_f64_list("other", &[1.0]).unwrap();
+        assert_eq!(d, vec![1.0]);
+    }
+
+    #[test]
+    fn subcommand_validation() {
+        let a = Args::parse(&argv("bogus"), &[]).unwrap();
+        assert!(a.expect_subcommand(&["serve", "exp"]).is_err());
+        let b = Args::parse(&argv("serve"), &[]).unwrap();
+        assert_eq!(b.expect_subcommand(&["serve", "exp"]).unwrap(), "serve");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("x"), &[]).unwrap();
+        assert_eq!(a.get_str("out", "results"), "results");
+        assert_eq!(a.get_usize("n", 5).unwrap(), 5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hand-rolled infrastructure substrates.
+//!
+//! The offline image ships only the `xla` crate's dependency closure, so
+//! the usual ecosystem crates (serde, clap, criterion, proptest, tokio,
+//! rand, log) are unavailable. Each substrate here is a small, tested
+//! replacement scoped to what this project needs (DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

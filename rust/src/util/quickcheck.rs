@@ -1,0 +1,228 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, prop)` draws `cases` inputs from `gen`,
+//! checks `prop`, and on failure performs greedy shrinking via the
+//! generator's `shrink` before reporting the minimal counterexample.
+//!
+//! Used for the GLASS core invariants (ranking/fusion/mask), the memory
+//! simulator, and the batching scheduler (DESIGN.md §5).
+
+use super::prng::Prng;
+
+/// A generator produces a value from randomness and can propose smaller
+/// variants of a failing value.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Prng) -> Self::Value;
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run the property over `cases` random inputs. Panics with the minimal
+/// failing input + seed on violation.
+pub fn forall<G: Gen>(
+    cases: usize,
+    seed: u64,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // shrink greedily
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: \
+                 {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+// ----------------------------------------------------------- generators
+
+/// Vec<f32> with values in [lo, hi); length in [min_len, max_len].
+pub struct F32VecGen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for F32VecGen {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Prng) -> Vec<f32> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        rng.f32_vec(n, self.lo, self.hi)
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // zero-out elements
+        if let Some(i) = v.iter().position(|&x| x != 0.0) {
+            let mut w = v.clone();
+            w[i] = 0.0;
+            out.push(w);
+        }
+        out.retain(|w| w.len() >= self.min_len);
+        out
+    }
+}
+
+/// usize in [lo, hi].
+pub struct UsizeGen {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for UsizeGen {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Prng) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Prng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// A permutation of 0..n with n in [min_n, max_n].
+pub struct PermGen {
+    pub min_n: usize,
+    pub max_n: usize,
+}
+
+impl Gen for PermGen {
+    type Value = Vec<usize>;
+
+    fn generate(&self, rng: &mut Prng) -> Vec<usize> {
+        let n = self.min_n + rng.below(self.max_n - self.min_n + 1);
+        rng.permutation(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(
+            100,
+            1,
+            &F32VecGen {
+                min_len: 0,
+                max_len: 20,
+                lo: -1.0,
+                hi: 1.0,
+            },
+            |v| {
+                prop_assert!(
+                    v.iter().all(|x| (-1.0..1.0).contains(x)),
+                    "out of range"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        forall(100, 2, &UsizeGen { lo: 0, hi: 50 }, |&n| {
+            prop_assert!(n < 40, "n={n} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // capture the panic message and check the shrunk value is minimal
+        let result = std::panic::catch_unwind(|| {
+            forall(200, 3, &UsizeGen { lo: 0, hi: 1000 }, |&n| {
+                prop_assert!(n < 500, "big");
+                Ok(())
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        // greedy shrink reaches a value close to the boundary
+        assert!(msg.contains("input: 500"), "{msg}");
+    }
+
+    #[test]
+    fn perm_gen_valid() {
+        forall(50, 4, &PermGen { min_n: 1, max_n: 30 }, |p| {
+            let mut seen = vec![false; p.len()];
+            for &i in p {
+                prop_assert!(i < p.len() && !seen[i], "not a permutation");
+                seen[i] = true;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,237 @@
+//! Descriptive statistics + bootstrap utilities used by the eval harness
+//! and the bench framework.
+
+/// Summary of a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Standard error of the mean (the paper reports mean (sem) in Tab. 2).
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std / (self.n as f64).sqrt()
+        }
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile with linear interpolation; q in [0, 1].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: f64::NAN,
+            std: f64::NAN,
+            min: f64::NAN,
+            max: f64::NAN,
+            p50: f64::NAN,
+            p95: f64::NAN,
+        };
+    }
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: std_dev(xs),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        p50: percentile(xs, 0.5),
+        p95: percentile(xs, 0.95),
+    }
+}
+
+/// Percentile bootstrap CI for the mean.
+pub fn bootstrap_ci(
+    xs: &[f64],
+    iters: usize,
+    alpha: f64,
+    seed: u64,
+) -> (f64, f64) {
+    use super::prng::Prng;
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let mut rng = Prng::new(seed);
+    let mut means = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let mut s = 0.0;
+        for _ in 0..xs.len() {
+            s += xs[rng.below(xs.len())];
+        }
+        means.push(s / xs.len() as f64);
+    }
+    (
+        percentile(&means, alpha / 2.0),
+        percentile(&means, 1.0 - alpha / 2.0),
+    )
+}
+
+/// Welford online accumulator — used by importance/statistics collectors
+/// where the token stream is unbounded.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx).powi(2);
+        dy += (y - my).powi(2);
+    }
+    num / (dx.sqrt() * dy.sqrt() + 1e-12)
+}
+
+/// Spearman rank correlation (ties broken by index — consistent with the
+/// paper's deterministic tie handling).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    let rx = rank_f64(xs);
+    let ry = rank_f64(ys);
+    pearson(&rx, &ry)
+}
+
+fn rank_f64(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[a].partial_cmp(&xs[b]).unwrap().then(a.cmp(&b))
+    });
+    let mut ranks = vec![0.0; xs.len()];
+    for (r, &i) in idx.iter().enumerate() {
+        ranks[i] = r as f64;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_summary() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.p50 - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean - mean(&xs)).abs() < 1e-10);
+        assert!((o.variance() - variance(&xs)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_monotone_invariance() {
+        let xs = [0.1f64, 0.5, 0.9, 2.0];
+        let ys: Vec<f64> = xs.iter().map(|x| x.exp()).collect();
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bootstrap_contains_mean() {
+        let xs: Vec<f64> = (0..200).map(|i| (i % 7) as f64).collect();
+        let (lo, hi) = bootstrap_ci(&xs, 500, 0.05, 1);
+        let m = mean(&xs);
+        assert!(lo <= m && m <= hi);
+        assert!(hi - lo < 1.0);
+    }
+
+    #[test]
+    fn empty_safe() {
+        assert!(summarize(&[]).mean.is_nan());
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

@@ -1,0 +1,141 @@
+//! Markdown/ASCII table builder for experiment reports (EXPERIMENTS.md
+//! rows are generated with this so paper-vs-measured tables stay aligned).
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Fixed-width ASCII rendering for terminal output.
+    pub fn to_ascii(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// GitHub-flavored markdown rendering for EXPERIMENTS.md.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("**{}**\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.headers.len())
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals; NaN renders as "-".
+pub fn fnum(x: f64, decimals: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.decimals$}")
+    }
+}
+
+/// "mean (std)" cell in the paper's Tab. 2 style.
+pub fn mean_std(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{} ({})", fnum(mean, decimals), fnum(std, decimals))
+}
+
+/// Signed improvement percentage over a baseline (paper's "Imp%" column):
+/// positive = better (lower metric).
+pub fn improvement_pct(baseline: f64, ours: f64) -> f64 {
+    if baseline == 0.0 {
+        return f64::NAN;
+    }
+    (baseline - ours) / baseline * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_ascii_and_markdown() {
+        let mut t = Table::new("demo", &["a", "metric"]);
+        t.row(vec!["x".into(), "1.50".into()]);
+        let a = t.to_ascii();
+        assert!(a.contains("demo"));
+        assert!(a.contains("| x"));
+        let m = t.to_markdown();
+        assert!(m.contains("| a | metric |"));
+        assert!(m.contains("| x | 1.50 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn improvement_sign_convention() {
+        // lower is better: going 4.0 -> 3.0 is +25%
+        assert!((improvement_pct(4.0, 3.0) - 25.0).abs() < 1e-9);
+        assert!(improvement_pct(4.0, 5.0) < 0.0);
+    }
+
+    #[test]
+    fn fnum_nan() {
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fnum(1.23456, 2), "1.23");
+    }
+}

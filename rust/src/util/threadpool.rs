@@ -1,0 +1,149 @@
+//! Fixed-size worker pool over std channels (tokio is unavailable
+//! offline; the serving layer is thread-based — see DESIGN.md §5).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple fixed worker pool. Jobs run FIFO; `join` waits for quiescence
+/// by dropping the sender and joining workers.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    tx: Option<mpsc::Sender<Job>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("glass-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // all senders dropped
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            workers,
+            tx: Some(tx),
+        }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already joined")
+            .send(Box::new(f))
+            .expect("worker pool hung up");
+    }
+
+    /// Drop the queue and wait for all workers to finish outstanding jobs.
+    pub fn join(mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n on up to `width` threads, collecting results
+/// in order. Used by harness runners for independent samples.
+pub fn parallel_map<T: Send + 'static>(
+    n: usize,
+    width: usize,
+    f: impl Fn(usize) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let next = Arc::new(Mutex::new(0usize));
+    let width = width.max(1).min(n);
+    let mut handles = Vec::new();
+    for _ in 0..width {
+        let f = Arc::clone(&f);
+        let results = Arc::clone(&results);
+        let next = Arc::clone(&next);
+        handles.push(thread::spawn(move || loop {
+            let i = {
+                let mut g = next.lock().unwrap();
+                if *g >= n {
+                    break;
+                }
+                let i = *g;
+                *g += 1;
+                i
+            };
+            let r = f(i);
+            results.lock().unwrap()[i] = Some(r);
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Arc::try_unwrap(results)
+        .ok()
+        .expect("threads done")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("all indices computed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_in_order() {
+        let out = parallel_map(50, 4, |i| i * 2);
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,140 @@
+//! Lightweight section profiler for the perf pass (no cargo-flamegraph
+//! offline): named accumulators with call counts, reported as a table.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::table::Table;
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Acc {
+    total_ns: u128,
+    count: u64,
+}
+
+/// Global named-section profiler. Cheap enough to leave enabled: one
+/// mutex lock per section end (the hot loop spends ms per PJRT execute,
+/// so lock cost is noise).
+#[derive(Default)]
+pub struct Profiler {
+    accs: Mutex<HashMap<String, Acc>>,
+}
+
+static PROFILER: std::sync::OnceLock<Profiler> = std::sync::OnceLock::new();
+
+pub fn global() -> &'static Profiler {
+    PROFILER.get_or_init(Profiler::default)
+}
+
+impl Profiler {
+    pub fn record(&self, name: &str, elapsed_ns: u128) {
+        let mut accs = self.accs.lock().unwrap();
+        let a = accs.entry(name.to_string()).or_default();
+        a.total_ns += elapsed_ns;
+        a.count += 1;
+    }
+
+    pub fn start(&self, name: &'static str) -> Section<'_> {
+        Section {
+            profiler: self,
+            name,
+            t0: Instant::now(),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.accs.lock().unwrap().clear();
+    }
+
+    /// (name, total_seconds, count, mean_us) sorted by total desc.
+    pub fn snapshot(&self) -> Vec<(String, f64, u64, f64)> {
+        let accs = self.accs.lock().unwrap();
+        let mut v: Vec<_> = accs
+            .iter()
+            .map(|(k, a)| {
+                (
+                    k.clone(),
+                    a.total_ns as f64 / 1e9,
+                    a.count,
+                    if a.count > 0 {
+                        a.total_ns as f64 / 1e3 / a.count as f64
+                    } else {
+                        0.0
+                    },
+                )
+            })
+            .collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            "profile (by total time)",
+            &["section", "total s", "calls", "mean µs"],
+        );
+        for (name, total, count, mean_us) in self.snapshot() {
+            t.row(vec![
+                name,
+                format!("{total:.3}"),
+                format!("{count}"),
+                format!("{mean_us:.1}"),
+            ]);
+        }
+        t.to_ascii()
+    }
+}
+
+/// RAII timing section.
+pub struct Section<'a> {
+    profiler: &'a Profiler,
+    name: &'static str,
+    t0: Instant,
+}
+
+impl Drop for Section<'_> {
+    fn drop(&mut self) {
+        self.profiler
+            .record(self.name, self.t0.elapsed().as_nanos());
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_sections() {
+        let p = Profiler::default();
+        for _ in 0..3 {
+            let _s = p.start("work");
+            std::hint::black_box(1 + 1);
+        }
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].2, 3);
+        assert!(snap[0].1 >= 0.0);
+    }
+
+    #[test]
+    fn timed_measures() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let p = Profiler::default();
+        p.record("a", 1000);
+        assert!(p.report().contains("a"));
+    }
+}

@@ -1,0 +1,44 @@
+//! Shared helpers for integration tests. All of these need the artifact
+//! bundle (`make artifacts`) — they exercise the real AOT executables.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+use glass::engine::Engine;
+
+pub fn artifacts_dir() -> PathBuf {
+    let dir = std::env::var("GLASS_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let p = PathBuf::from(dir);
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifact bundle missing at {:?} — run `make artifacts` first",
+        p
+    );
+    p
+}
+
+/// One engine per test binary (PJRT client + weight upload is ~100 ms;
+/// executables compile lazily and are cached inside).
+pub fn engine() -> Engine {
+    static ENGINE: OnceLock<Mutex<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| {
+            Mutex::new(Engine::load(&artifacts_dir()).expect("load engine"))
+        })
+        .lock()
+        .unwrap()
+        .clone()
+}
+
+pub fn sample_prompts(n: usize) -> Vec<String> {
+    let base = [
+        "once there was a red fox",
+        "the blue owl is",
+        "every morning the wolf",
+        "once there was a golden otter",
+        "the grey cat is quiet and",
+        "every dusk the raven",
+    ];
+    (0..n).map(|i| base[i % base.len()].to_string()).collect()
+}

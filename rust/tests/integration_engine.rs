@@ -1,0 +1,219 @@
+//! Engine-level integration: cross-executable consistency contracts.
+//! These pin the L3↔L2 interface — KV layout, positions, masks, and the
+//! fused-vs-step decode equivalence.
+
+mod common;
+
+use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
+use glass::tensor::argmax;
+
+const ATOL: f32 = 2e-3; // distinct XLA programs; fused ops reorder floats
+
+#[test]
+fn fused_generate_matches_step_decode_greedy() {
+    let engine = common::engine();
+    let prompts = vec!["once there was a red fox".to_string()];
+    let mask = engine.dense_mask(1);
+    let gen = engine.generate(&prompts, &mask, 1).unwrap();
+
+    // manual loop: prefill + greedy decode_step
+    let pre = engine.prefill(&prompts, 1).unwrap();
+    let mut kv = pre.kv;
+    let mut tok = argmax(pre.logits.row(0)) as i32;
+    let mut pos = pre.lens[0] as i32;
+    let n = gen.tokens.shape[1].min(12); // compare a prefix (speed)
+    for i in 0..n {
+        assert_eq!(
+            gen.tokens.data[i], tok,
+            "fused and step decode diverged at token {i}"
+        );
+        let (logits, _) = engine
+            .decode_step(&mut kv, &[tok], &[pos], &mask)
+            .unwrap();
+        // logits match too (distributional contract for the KLD metric)
+        let g = &gen.logits.data
+            [i * engine.spec().vocab..(i + 1) * engine.spec().vocab];
+        let max_err = g
+            .iter()
+            .zip(logits.row(0))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < ATOL, "logits diverged at {i}: {max_err}");
+        tok = argmax(logits.row(0)) as i32;
+        pos += 1;
+    }
+}
+
+#[test]
+fn decode_topk_matches_masked_decode() {
+    let engine = common::engine();
+    let spec = engine.spec().clone();
+    let prompts = vec!["the blue owl is".to_string()];
+    let pre = engine.prefill(&prompts, 1).unwrap();
+    let local = ImportanceMap::from_stats(&pre.stats, 0).unwrap();
+    let k = engine.rt.manifest.topk_k;
+    let mask = build_mask(&Strategy::LocalOnly, &local, None, k).unwrap();
+    let idx = pack_indices(&[&mask], spec.n_layers, k).unwrap();
+    let mask_t = glass::engine::session::pack_slot_masks(
+        &[mask],
+        1,
+        1,
+        &spec,
+    );
+
+    let tok = [100i32];
+    let pos = [pre.lens[0] as i32];
+    let mut kv1 = pre.kv.clone();
+    let (lg_masked, _) = engine
+        .decode_step(&mut kv1, &tok, &pos, &mask_t)
+        .unwrap();
+    let mut kv2 = pre.kv.clone();
+    let (lg_topk, _) = engine
+        .decode_step_topk(&mut kv2, &tok, &pos, &idx)
+        .unwrap();
+
+    let max_err = lg_masked
+        .data
+        .iter()
+        .zip(&lg_topk.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_err < ATOL,
+        "gathered (Pallas) and masked decode disagree: {max_err}"
+    );
+    // KV caches also match
+    let kv_err = kv1
+        .k
+        .data
+        .iter()
+        .zip(&kv2.k.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(kv_err < ATOL, "kv diverged: {kv_err}");
+}
+
+#[test]
+fn score_is_consistent_with_generate_dense() {
+    // Teacher-forcing the dense model along its own dense trajectory must
+    // produce (a) near-zero top-100 KLD and (b) low NLL at every step —
+    // the foundation of the deviation metrics.
+    let engine = common::engine();
+    let cfg = glass::config::RunConfig {
+        lg_samples: 4,
+        ..Default::default()
+    };
+    let prompts = common::sample_prompts(4);
+    let batch = glass::harness::lgeval::prepare_batch(&engine, &prompts, 4)
+        .unwrap();
+    let dense_masks = glass::harness::lgeval::batch_masks(
+        &engine,
+        &batch,
+        &Strategy::Dense,
+        None,
+        1.0,
+    )
+    .unwrap();
+    let metrics = glass::harness::lgeval::eval_masks(
+        &engine,
+        &batch,
+        &dense_masks,
+        cfg.kld_top,
+    )
+    .unwrap();
+    for m in &metrics {
+        assert!(
+            m.kld < 5e-3,
+            "dense self-KLD should be ~0, got {}",
+            m.kld
+        );
+        assert!(
+            m.ppl < 1.6,
+            "dense self-PPL should be near 1 under greedy, got {}",
+            m.ppl
+        );
+    }
+}
+
+#[test]
+fn masks_change_generation() {
+    let engine = common::engine();
+    let prompts = vec!["every morning the wolf".to_string()];
+    let dense = engine
+        .generate(&prompts, &engine.dense_mask(1), 1)
+        .unwrap();
+    // aggressive 10% density random mask must change the trajectory
+    let pre = engine.prefill(&prompts, 1).unwrap();
+    let local = ImportanceMap::from_stats(&pre.stats, 0).unwrap();
+    let k = engine.spec().budget(0.1);
+    let mask =
+        build_mask(&Strategy::Random { seed: 3 }, &local, None, k).unwrap();
+    let mask_t = glass::engine::session::pack_slot_masks(
+        &[mask],
+        1,
+        1,
+        engine.spec(),
+    );
+    let sparse = engine.generate(&prompts, &mask_t, 1).unwrap();
+    assert_ne!(
+        dense.tokens.data, sparse.tokens.data,
+        "10% random mask should alter the greedy trajectory"
+    );
+}
+
+#[test]
+fn batched_prefill_slots_are_independent() {
+    // Prompt in slot 0 must produce the same stats whether alone (b1) or
+    // batched with others (b4) — continuous-batching correctness.
+    let engine = common::engine();
+    let p0 = "once there was a golden otter".to_string();
+    let solo = engine.prefill(&[p0.clone()], 1).unwrap();
+    let batch = engine
+        .prefill(
+            &[
+                p0,
+                "the grey cat is".to_string(),
+                "every dusk the raven".to_string(),
+            ],
+            4,
+        )
+        .unwrap();
+    let max_err = solo
+        .logits
+        .row(0)
+        .iter()
+        .zip(batch.logits.row(0))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < ATOL, "slot-0 logits depend on batchmates: {max_err}");
+    let s_err = solo.stats.data[..]
+        .iter()
+        .zip(batch.stats.chunk0(0))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(s_err < ATOL, "slot-0 stats depend on batchmates: {s_err}");
+}
+
+#[test]
+fn trained_model_continues_grammar() {
+    // End-to-end sanity that the build-time training worked: a corpus
+    // prefix should continue with plausible grammar-world text.
+    let engine = common::engine();
+    let gen = engine
+        .generate(
+            &["the red fox is quick and".to_string()],
+            &engine.dense_mask(1),
+            1,
+        )
+        .unwrap();
+    let n = gen.tokens.shape[1];
+    let text = engine.decode_text(&gen.tokens.data[..n]);
+    assert!(
+        text.chars().all(|c| c.is_ascii()),
+        "generation should be ascii, got {text:?}"
+    );
+    assert!(
+        text.contains(' ') && text.len() > 20,
+        "generation too degenerate: {text:?}"
+    );
+}

@@ -1,0 +1,106 @@
+//! Quality-direction integration: on the real trained model, the paper's
+//! ordering claims should hold in shape on a small LG sample —
+//! fusion helps over random, dense beats everything, KLD grows as
+//! density drops.
+
+mod common;
+
+use glass::glass::{GlobalPrior, PriorKind, Strategy};
+use glass::harness::lgeval::eval_strategies;
+
+#[test]
+fn strategy_quality_ordering_holds() {
+    let engine = common::engine();
+    let prompts = common::sample_prompts(8);
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps).unwrap();
+
+    let strategies = vec![
+        ("glass".to_string(), Strategy::Glass { lambda: 0.5 }, Some(&i_nps)),
+        ("griffin".to_string(), Strategy::LocalOnly, None),
+        ("random".to_string(), Strategy::Random { seed: 7 }, None),
+        ("oracle".to_string(), Strategy::Oracle, None),
+    ];
+    let results =
+        eval_strategies(&engine, &prompts, 4, &strategies, 0.5, 100)
+            .unwrap();
+    let kld: std::collections::HashMap<&str, f64> = results
+        .iter()
+        .map(|(n, m, _)| (n.as_str(), m.kld.mean))
+        .collect();
+
+    // random is the sanity floor: every informed method beats it
+    assert!(
+        kld["glass"] < kld["random"],
+        "glass {} !< random {}",
+        kld["glass"],
+        kld["random"]
+    );
+    assert!(kld["griffin"] < kld["random"]);
+    // the oracle (post-hoc decode stats) upper-bounds prompt-only local
+    assert!(
+        kld["oracle"] < kld["griffin"] * 1.05,
+        "oracle {} should be at least as good as griffin {}",
+        kld["oracle"],
+        kld["griffin"]
+    );
+    // all KLDs positive and finite at 50% sparsity
+    for (n, v) in &kld {
+        assert!(*v > 0.0 && v.is_finite(), "{n}: bad kld {v}");
+    }
+}
+
+#[test]
+fn kld_monotone_in_density() {
+    let engine = common::engine();
+    let prompts = common::sample_prompts(4);
+    let i_nps = GlobalPrior::load(&engine.rt, PriorKind::INps).unwrap();
+    let mut last = 0.0;
+    for density in [0.9, 0.5, 0.2] {
+        let results = eval_strategies(
+            &engine,
+            &prompts,
+            4,
+            &[(
+                "glass".to_string(),
+                Strategy::Glass { lambda: 0.5 },
+                Some(&i_nps),
+            )],
+            density,
+            100,
+        )
+        .unwrap();
+        let kld = results[0].1.kld.mean;
+        assert!(
+            kld > last,
+            "KLD should grow as density drops: {kld} at {density} vs {last}"
+        );
+        last = kld;
+    }
+}
+
+#[test]
+fn lambda_endpoints_match_dedicated_strategies() {
+    // Glass(λ=0) ≡ LocalOnly and Glass(λ=1) ≡ GlobalOnly — on the real
+    // model end to end, not just unit level.
+    let engine = common::engine();
+    let prompts = common::sample_prompts(4);
+    let prior = GlobalPrior::load(&engine.rt, PriorKind::ANps).unwrap();
+    let strategies = vec![
+        ("g0".to_string(), Strategy::Glass { lambda: 0.0 }, Some(&prior)),
+        ("local".to_string(), Strategy::LocalOnly, None),
+        ("g1".to_string(), Strategy::Glass { lambda: 1.0 }, Some(&prior)),
+        ("global".to_string(), Strategy::GlobalOnly, Some(&prior)),
+    ];
+    let results =
+        eval_strategies(&engine, &prompts, 4, &strategies, 0.5, 100)
+            .unwrap();
+    let get = |n: &str| {
+        results
+            .iter()
+            .find(|(name, _, _)| name == n)
+            .map(|(_, m, _)| m.kld.mean)
+            .unwrap()
+    };
+    assert!((get("g0") - get("local")).abs() < 1e-9);
+    assert!((get("g1") - get("global")).abs() < 1e-9);
+}

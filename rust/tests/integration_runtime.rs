@@ -1,0 +1,109 @@
+//! Runtime-level integration: manifest → compile → execute round trips
+//! against the real artifact bundle.
+
+mod common;
+
+use glass::runtime::{DType, Value};
+use glass::tensor::{TensorF, TensorI};
+
+#[test]
+fn manifest_lists_expected_executables() {
+    let engine = common::engine();
+    let man = &engine.rt.manifest;
+    for kind in ["prefill", "decode", "decode_topk", "score", "generate"] {
+        for b in [1usize, 4] {
+            assert!(
+                man.exe(&format!("{kind}_b{b}")).is_ok(),
+                "missing {kind}_b{b}"
+            );
+        }
+    }
+    assert_eq!(man.model.ffn_m % 2, 0);
+    assert_eq!(man.topk_k, man.model.ffn_m / 2);
+}
+
+#[test]
+fn priors_load_and_are_well_formed() {
+    let engine = common::engine();
+    for kind in glass::glass::PriorKind::all() {
+        let p = glass::glass::GlobalPrior::load(&engine.rt, kind).unwrap();
+        assert_eq!(p.map.n_layers(), engine.spec().n_layers);
+        assert_eq!(p.map.m(), engine.spec().ffn_m);
+        assert!(p.map.is_well_formed(), "{:?} has bad values", kind);
+        // a prior that is all-equal would make ranks meaningless
+        let l0 = &p.map.layers[0];
+        assert!(l0.iter().any(|&x| (x - l0[0]).abs() > 1e-9));
+    }
+}
+
+#[test]
+fn call_validates_operands() {
+    let engine = common::engine();
+    // wrong operand count
+    assert!(engine.rt.call("decode_b1", &[]).is_err());
+    // wrong shape
+    let spec = engine.spec().clone();
+    let bad = vec![
+        Value::I32(TensorI::zeros(&[2])), // token should be [1]
+        Value::I32(TensorI::zeros(&[1])),
+        Value::F32(TensorF::zeros(&[
+            spec.n_layers,
+            1,
+            spec.n_heads,
+            spec.max_seq,
+            spec.head_dim,
+        ])),
+        Value::F32(TensorF::zeros(&[
+            spec.n_layers,
+            1,
+            spec.n_heads,
+            spec.max_seq,
+            spec.head_dim,
+        ])),
+        Value::F32(TensorF::zeros(&[1, spec.n_layers, spec.ffn_m])),
+    ];
+    let err = engine.rt.call("decode_b1", &bad).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn prefill_outputs_match_manifest_shapes() {
+    let engine = common::engine();
+    let spec = engine.spec().clone();
+    let pre = engine
+        .prefill(&["the red fox runs".to_string()], 1)
+        .unwrap();
+    assert_eq!(pre.logits.shape, vec![1, spec.vocab]);
+    assert_eq!(
+        pre.kv.k.shape,
+        vec![spec.n_layers, 1, spec.n_heads, spec.max_seq, spec.head_dim]
+    );
+    assert_eq!(pre.stats.shape, vec![1, spec.n_layers, spec.ffn_m]);
+    assert!(pre.logits.data.iter().all(|x| x.is_finite()));
+    assert!(pre.stats.data.iter().all(|x| x.is_finite() && *x >= 0.0));
+    // the model is trained: logits should be far from uniform
+    let mx = pre.logits.data.iter().cloned().fold(f32::MIN, f32::max);
+    let mn = pre.logits.data.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(mx - mn > 2.0, "trained model should be confident");
+}
+
+#[test]
+fn manifest_dtype_contract_holds() {
+    let engine = common::engine();
+    let gen = engine
+        .generate(
+            &["the red fox".to_string()],
+            &engine.dense_mask(1),
+            1,
+        )
+        .unwrap();
+    // gen tokens are I32 per manifest
+    assert_eq!(gen.tokens.shape[0], 1);
+    assert!(gen
+        .tokens
+        .data
+        .iter()
+        .all(|&t| t >= 0 && (t as usize) < engine.spec().vocab));
+    let spec_out = engine.rt.manifest.exe("generate_b1").unwrap();
+    assert_eq!(spec_out.outputs[0].dtype, DType::I32);
+}
