@@ -1,20 +1,29 @@
 //! Decode-path benchmarks (§4.5 runtime claims on this host):
 //! prefill, step decode (dense / masked / top-k gathered), the fused
-//! generator, and the teacher-forced scorer.
+//! generator, the teacher-forced scorer, and the serving-layer
+//! continuous batcher (step-mode with mid-flight admission).
 //!
 //!     cargo bench --bench bench_decode
+//!
+//! Results land in BENCH_decode.json next to the bench's working
+//! directory, including the fused-vs-step speedup and the continuous
+//! batcher's tokens/s.
 
 use std::path::Path;
+use std::time::{Duration, Instant};
 
 use glass::engine::Engine;
 use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
+use glass::server::batcher::Batcher;
+use glass::server::protocol::Request;
+use glass::server::scheduler::{Pending, Scheduler};
 use glass::tensor::TensorF;
 use glass::util::bench::Bencher;
+use glass::util::json::Json;
 
 fn main() {
-    let engine = Engine::load(Path::new("artifacts")).expect(
-        "artifact bundle missing — run `make artifacts` before benching",
-    );
+    let engine = Engine::load_or_synthetic(Path::new("artifacts"))
+        .expect("load engine");
     let spec = engine.spec().clone();
     let mut b = Bencher::default();
     b.budget_s = 2.0;
@@ -99,12 +108,122 @@ fn main() {
             .unwrap()
     });
 
+    // -------------------------------------- continuous batching (serve)
+    // 16 requests through the serving engine loop: step-mode decode,
+    // mid-flight admission, immediate retirement. Tokens per iteration =
+    // 16 × gen_len, directly comparable with the fused rows above.
+    let n_reqs = 16usize;
+    let max_tokens = spec.gen_len;
+    let submit_all = |sched: &Scheduler, refresh_every: usize| {
+        for i in 0..n_reqs {
+            sched.submit(Pending {
+                request: Request {
+                    id: i as u64 + 1,
+                    prompt: prompts[i % prompts.len()].clone(),
+                    strategy: "i-glass".into(),
+                    lambda: 0.5,
+                    density: 0.5,
+                    max_tokens,
+                    refresh_every,
+                },
+                arrived: Instant::now(),
+                conn_id: i as u64,
+            });
+        }
+        sched.close();
+    };
+    // setup (prior loading + executable warm-up) stays OUTSIDE the
+    // measured closures so these rows compare fairly with the fused
+    // rows above, which also time only the engine call
+    let mut batcher = Batcher::new(engine.clone(), 4).expect("batcher");
+    b.bench(
+        "continuous batch serve (b=4, 16 reqs)",
+        (n_reqs * max_tokens) as f64,
+        || {
+            let sched = Scheduler::new(4, Duration::from_millis(1));
+            submit_all(&sched, 0);
+            let mut served = 0usize;
+            batcher.run(&sched, &mut |_, resp| {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                served += resp.tokens;
+            });
+            served
+        },
+    );
+    // same workload with in-flight mask refresh every 8 tokens
+    b.bench(
+        "continuous serve + refresh R=8",
+        (n_reqs * max_tokens) as f64,
+        || {
+            let sched = Scheduler::new(4, Duration::from_millis(1));
+            submit_all(&sched, 8);
+            let mut served = 0usize;
+            batcher.run(&sched, &mut |_, resp| {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                served += resp.tokens;
+            });
+            served
+        },
+    );
+
     println!("\n{}", b.report());
-    // headline comparisons for EXPERIMENTS.md §Perf
-    let step_per_tok = b.results[2].mean_s; // b=1 dense step
-    let fused_per_tok = b.results[6].mean_s / n_gen;
+    // headline comparisons for EXPERIMENTS.md §Perf — rows looked up by
+    // name so reordering the bench list cannot silently misreport
+    let row = |name: &str| {
+        b.results
+            .iter()
+            .find(|r| r.name.starts_with(name))
+            .unwrap_or_else(|| panic!("missing bench row '{name}'"))
+    };
+    let step_per_tok = row("decode step b=1 dense").mean_s;
+    let fused_per_tok = row("generate b=1").mean_s / n_gen;
+    let fused_b4 = row("generate b=4");
+    let continuous = row("continuous batch serve");
     println!(
         "fused-scan speedup over step decode (b=1): {:.1}x per token",
         step_per_tok / fused_per_tok
     );
+    println!(
+        "continuous batching throughput: {:.1} tok/s \
+         (fused b=4: {:.1} tok/s)",
+        continuous.throughput(),
+        fused_b4.throughput()
+    );
+
+    // ------------------------------------------------- BENCH json entry
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("decode".into()));
+    doc.set(
+        "backend",
+        Json::Str(
+            if engine.rt.is_simulated() { "sim" } else { "pjrt" }.into(),
+        ),
+    );
+    let mut rows = Vec::new();
+    for r in &b.results {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(r.name.clone()))
+            .set("mean_s", Json::Num(r.mean_s))
+            .set("p50_s", Json::Num(r.p50_s))
+            .set("p95_s", Json::Num(r.p95_s))
+            .set("iters", Json::Num(r.iters as f64))
+            .set("items_per_s", Json::Num(r.throughput()));
+        rows.push(o);
+    }
+    doc.set("results", Json::Arr(rows));
+    doc.set(
+        "fused_vs_step_speedup_b1",
+        Json::Num(step_per_tok / fused_per_tok),
+    );
+    doc.set(
+        "continuous_toks_per_s",
+        Json::Num(continuous.throughput()),
+    );
+    doc.set(
+        "fused_b4_toks_per_s",
+        Json::Num(fused_b4.throughput()),
+    );
+    let path = Path::new("BENCH_decode.json");
+    doc.write_file(path).expect("write BENCH_decode.json");
+    println!("wrote {}", path.display());
 }

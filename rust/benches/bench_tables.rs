@@ -13,9 +13,8 @@ use glass::harness::run_experiment;
 use glass::util::timer;
 
 fn main() {
-    let engine = Engine::load(Path::new("artifacts")).expect(
-        "artifact bundle missing — run `make artifacts` before benching",
-    );
+    let engine = Engine::load_or_synthetic(Path::new("artifacts"))
+        .expect("load engine");
     let cfg = RunConfig {
         lg_samples: 8,
         sweep_samples: 4,

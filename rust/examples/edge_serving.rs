@@ -19,7 +19,7 @@ const N_REQUESTS: usize = 24;
 const MAX_TOKENS: usize = 48;
 
 fn main() -> Result<()> {
-    let engine = Engine::load(Path::new("artifacts"))?;
+    let engine = Engine::load_or_synthetic(Path::new("artifacts"))?;
     let server = Server::start(engine, "127.0.0.1:0", 4)?;
     println!("server up at {}\n", server.addr);
 

@@ -18,7 +18,7 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(32);
-    let engine = Engine::load(Path::new("artifacts"))?;
+    let engine = Engine::load_or_synthetic(Path::new("artifacts"))?;
     let prompts = lg_prompts(&engine, n)?;
     println!(
         "LG study: {} short prompts, {} generated tokens each\n",

@@ -10,7 +10,7 @@ use glass::glass::{GlobalPrior, PriorKind, Strategy};
 use std::path::Path;
 
 fn main() -> Result<()> {
-    let engine = Engine::load(Path::new("artifacts"))?;
+    let engine = Engine::load_or_synthetic(Path::new("artifacts"))?;
     let spec = engine.spec().clone();
     println!(
         "loaded model: {} layers, d={}, ffn_m={}, {:.1} MB weights\n",

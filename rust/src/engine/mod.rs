@@ -30,6 +30,48 @@ pub struct KvState {
     pub v: TensorF,
 }
 
+impl KvState {
+    /// Zeroed cache for a batch of `b` slots.
+    pub fn zeros(spec: &ModelSpec, b: usize) -> KvState {
+        let shape =
+            [spec.n_layers, b, spec.n_heads, spec.max_seq, spec.head_dim];
+        KvState {
+            k: TensorF::zeros(&shape),
+            v: TensorF::zeros(&shape),
+        }
+    }
+
+    /// Batch width of this cache.
+    pub fn batch(&self) -> usize {
+        self.k.shape[1]
+    }
+
+    /// Copy one slot's cache planes from another KvState — the slot
+    /// surgery the continuous batcher uses to admit a freshly prefilled
+    /// request into a free slot of the in-flight batch. Layout is
+    /// [L, B, H, T, Dh], so each (layer, slot) plane is contiguous.
+    pub fn copy_slot_from(
+        &mut self,
+        dst_slot: usize,
+        src: &KvState,
+        src_slot: usize,
+    ) {
+        let (l_n, b_dst) = (self.k.shape[0], self.k.shape[1]);
+        let b_src = src.k.shape[1];
+        let plane: usize = self.k.shape[2..].iter().product();
+        assert_eq!(&self.k.shape[2..], &src.k.shape[2..], "KV shape mismatch");
+        assert!(dst_slot < b_dst && src_slot < b_src, "slot out of range");
+        for l in 0..l_n {
+            let d = (l * b_dst + dst_slot) * plane;
+            let s = (l * b_src + src_slot) * plane;
+            self.k.data[d..d + plane]
+                .copy_from_slice(&src.k.data[s..s + plane]);
+            self.v.data[d..d + plane]
+                .copy_from_slice(&src.v.data[s..s + plane]);
+        }
+    }
+}
+
 /// Prefill output for a batch.
 #[derive(Debug, Clone)]
 pub struct PrefillResult {
@@ -71,6 +113,27 @@ impl Engine {
     pub fn from_runtime(rt: Arc<Runtime>) -> Engine {
         let tok = Tokenizer::from_spec(&rt.manifest.model);
         Engine { rt, tok }
+    }
+
+    /// Fully in-memory engine on the simulator backend (no artifacts on
+    /// disk). Used by tests, benches, and as the CLI fallback.
+    pub fn synthetic() -> Engine {
+        Engine::from_runtime(Arc::new(Runtime::synthetic()))
+    }
+
+    /// Load the artifact bundle if present, else fall back to the
+    /// synthetic simulator engine.
+    pub fn load_or_synthetic(artifacts_dir: &Path) -> Result<Engine> {
+        if artifacts_dir.join("manifest.json").exists() {
+            Engine::load(artifacts_dir)
+        } else {
+            crate::info!(
+                "no artifact bundle at {:?} — using the synthetic \
+                 simulator engine",
+                artifacts_dir
+            );
+            Ok(Engine::synthetic())
+        }
     }
 
     pub fn spec(&self) -> &ModelSpec {
@@ -306,6 +369,50 @@ impl Engine {
 
 #[cfg(test)]
 mod tests {
-    // Engine methods need real artifacts; covered by rust/tests/
-    // integration suite. Pure helpers are tested here.
+    // Engine calls are covered by the rust/tests/ integration suite
+    // (against real artifacts or the simulator). Pure helpers here.
+    use super::*;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 260,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            head_dim: 4,
+            ffn_m: 8,
+            max_seq: 6,
+            prefill_len: 4,
+            score_len: 6,
+            gen_len: 2,
+            bos_id: 256,
+            pad_id: 257,
+        }
+    }
+
+    #[test]
+    fn kv_slot_copy_moves_one_slot_only() {
+        let spec = tiny_spec();
+        let mut src = KvState::zeros(&spec, 1);
+        for x in src.k.data.iter_mut() {
+            *x = 7.0;
+        }
+        for x in src.v.data.iter_mut() {
+            *x = 3.0;
+        }
+        let mut dst = KvState::zeros(&spec, 4);
+        assert_eq!(dst.batch(), 4);
+        dst.copy_slot_from(2, &src, 0);
+        let plane: usize = dst.k.shape[2..].iter().product();
+        for l in 0..spec.n_layers {
+            for slot in 0..4 {
+                let base = (l * 4 + slot) * plane;
+                let expect = if slot == 2 { 7.0 } else { 0.0 };
+                assert!(dst.k.data[base..base + plane]
+                    .iter()
+                    .all(|&x| x == expect));
+            }
+        }
+        assert!(dst.v.data.iter().any(|&x| x == 3.0));
+    }
 }

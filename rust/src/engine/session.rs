@@ -1,14 +1,18 @@
 //! High-level sparse-generation sessions: the paper's full request flow
 //! (Fig. 2) — prefill, learn A^l, fuse with the global prior, build the
-//! static mask, then decode with it.
+//! static mask, then decode with it — plus the per-slot
+//! [`DecodeSession`] state machine the continuous batcher drives token
+//! by token (position, stop state, decode-time statistics accumulator,
+//! and the current mask with its refresh bookkeeping).
 
 use anyhow::Result;
 
-use super::{Engine, GenerateResult};
+use super::{Engine, GenerateResult, PrefillResult};
 use crate::glass::{
-    build_mask, pack_masks, GlobalPrior, ImportanceMap, MaskSet, Strategy,
+    build_mask, pack_masks, DecayingImportance, GlobalPrior, ImportanceMap,
+    MaskSet, Strategy,
 };
-use crate::tensor::TensorF;
+use crate::tensor::{argmax, TensorF};
 
 /// Everything produced by a sparse batch request.
 #[derive(Debug, Clone)]
@@ -72,6 +76,139 @@ pub fn pack_slot_masks(
         .map(|i| if i < active { Some(&masks[i]) } else { None })
         .collect();
     pack_masks(&refs, spec.n_layers, spec.ffn_m)
+}
+
+// ------------------------------------------------- continuous decoding
+
+/// Why a slot stopped decoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit max_tokens or the KV window.
+    Length,
+    /// The model emitted a special (≥ byte range) token.
+    Stop,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+        }
+    }
+}
+
+/// Per-slot decode state for the continuous batcher: everything one
+/// in-flight request needs between steps. The decode-time activation
+/// statistics are folded into a decaying average so a periodic GLASS
+/// mask refresh can re-aggregate them with the prompt statistics.
+#[derive(Debug, Clone)]
+pub struct DecodeSession {
+    /// Prompt length including BOS (also the first decode position).
+    pub prompt_len: usize,
+    /// Next write position in the KV cache.
+    pub pos: i32,
+    /// Last emitted token (the next step's input).
+    pub last_tok: i32,
+    /// Generated tokens so far (first comes from the prefill logits).
+    pub generated: Vec<i32>,
+    /// Prompt-time local statistics A^l (fixed at prefill).
+    pub prompt_local: ImportanceMap,
+    /// Decaying average of per-step decode statistics.
+    pub decode_acc: DecayingImportance,
+    /// Current mask (starts as the prefill-time mask; refreshes may
+    /// replace it, counted in `mask_updates`).
+    pub mask: MaskSet,
+    /// Per-layer neuron budget.
+    pub k: usize,
+    /// Mask refreshes applied / refreshes that changed the kept set.
+    pub refreshes: usize,
+    pub mask_updates: usize,
+    pub finished: Option<FinishReason>,
+}
+
+impl DecodeSession {
+    /// Start a session from one prefilled slot: seed the first token
+    /// from the prefill logits and position decoding at the prompt end.
+    ///
+    /// Serving semantics: the first token deliberately comes from the
+    /// *dense* prefill forward pass — the mask is only built from the
+    /// prefill statistics, so it cannot causally apply before the first
+    /// decode step. (The fused `generate` executable instead applies
+    /// the mask retroactively to the prefill position; the two paths
+    /// may emit different first tokens for aggressive masks.)
+    pub fn from_prefill(
+        pre: &PrefillResult,
+        slot: usize,
+        mask: MaskSet,
+        k: usize,
+        stat_decay: f64,
+    ) -> Result<DecodeSession> {
+        let local = ImportanceMap::from_stats(&pre.stats, slot)?;
+        let first = argmax(pre.logits.row(slot)) as i32;
+        // same stop rule as absorb_step: a special first token ends the
+        // request at prefill instead of being decoded against
+        let (generated, finished) = if first >= 256 {
+            (Vec::new(), Some(FinishReason::Stop))
+        } else {
+            (vec![first], None)
+        };
+        Ok(DecodeSession {
+            prompt_len: pre.lens[slot],
+            pos: pre.lens[slot] as i32,
+            last_tok: first,
+            generated,
+            decode_acc: DecayingImportance::new(
+                local.n_layers(),
+                local.m(),
+                stat_decay,
+            ),
+            prompt_local: local,
+            mask,
+            k,
+            refreshes: 0,
+            mask_updates: 0,
+            finished,
+        })
+    }
+
+    /// Fold one decode step's outputs into the session: accumulate the
+    /// slot's activation statistics, advance the position, emit the next
+    /// token, and update the stop state. Returns true when finished.
+    pub fn absorb_step(
+        &mut self,
+        logits_row: &[f32],
+        stats: &TensorF,
+        slot: usize,
+        max_tokens: usize,
+        max_seq: usize,
+    ) -> Result<bool> {
+        debug_assert!(self.finished.is_none(), "step on finished session");
+        self.decode_acc
+            .push(&ImportanceMap::from_stats(stats, slot)?);
+        self.pos += 1;
+        let next = argmax(logits_row) as i32;
+        if next >= 256 {
+            self.finished = Some(FinishReason::Stop);
+        } else {
+            self.generated.push(next);
+            self.last_tok = next;
+            if self.generated.len() >= max_tokens.max(1)
+                || self.pos as usize >= max_seq
+            {
+                self.finished = Some(FinishReason::Length);
+            }
+        }
+        Ok(self.finished.is_some())
+    }
+
+    /// The paper's aggregation over the generation horizon: blend the
+    /// fixed prompt statistics with the decaying decode-time average.
+    /// `prompt_weight` is the pseudo-count mass of the prompt evidence.
+    pub fn blended_local(&self, prompt_weight: f64) -> ImportanceMap {
+        self.decode_acc
+            .blend_with(&self.prompt_local, prompt_weight)
+    }
 }
 
 /// Dense reference generation for the same prompts (the trajectory the

@@ -112,6 +112,61 @@ impl OnlineImportance {
     }
 }
 
+/// Decaying (exponentially weighted) accumulator over decode steps with
+/// bias correction — the temporal half of the continuous batcher's mask
+/// refresh. Recent tokens dominate (weight of a step fades by `decay`
+/// per subsequent step), so the accumulator tracks *current* generation
+/// behavior instead of an all-history mean.
+#[derive(Debug, Clone)]
+pub struct DecayingImportance {
+    pub map: ImportanceMap,
+    /// Accumulated evidence mass: Σ decay^i over pushed steps (bias
+    /// correction denominator; → 1/(1-decay) as steps accumulate).
+    pub weight: f64,
+    pub decay: f64,
+}
+
+impl DecayingImportance {
+    pub fn new(n_layers: usize, m: usize, decay: f64) -> Self {
+        assert!((0.0..=1.0).contains(&decay), "decay out of [0,1]");
+        DecayingImportance {
+            map: ImportanceMap::zeros(n_layers, m),
+            weight: 0.0,
+            decay,
+        }
+    }
+
+    /// Push one step's statistics [L, m].
+    pub fn push(&mut self, stats: &ImportanceMap) {
+        assert_eq!(self.map.n_layers(), stats.n_layers());
+        assert_eq!(self.map.m(), stats.m());
+        let faded = self.weight * self.decay;
+        let total = faded + 1.0;
+        for (acc, s) in self.map.layers.iter_mut().zip(&stats.layers) {
+            for (a, x) in acc.iter_mut().zip(s) {
+                *a = ((*a as f64 * faded + *x as f64) / total) as f32;
+            }
+        }
+        self.weight = total;
+    }
+
+    /// Blend with fixed prompt statistics: the prompt contributes
+    /// `prompt_weight` pseudo-steps against this accumulator's evidence
+    /// mass. With no decode evidence yet this returns the prompt map.
+    pub fn blend_with(
+        &self,
+        prompt: &ImportanceMap,
+        prompt_weight: f64,
+    ) -> ImportanceMap {
+        let mut out = prompt.clone();
+        if self.weight > 0.0 {
+            let beta = self.weight / (self.weight + prompt_weight.max(0.0));
+            out.merge(&self.map, 1.0 - beta, beta);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +221,49 @@ mod tests {
     fn ragged_rejected() {
         assert!(ImportanceMap::from_layers(vec![vec![1.0], vec![1.0, 2.0]])
             .is_err());
+    }
+
+    #[test]
+    fn decaying_recent_steps_dominate() {
+        let mut acc = DecayingImportance::new(1, 2, 0.5);
+        let a = ImportanceMap::from_layers(vec![vec![1.0, 0.0]]).unwrap();
+        let b = ImportanceMap::from_layers(vec![vec![0.0, 1.0]]).unwrap();
+        for _ in 0..8 {
+            acc.push(&a);
+        }
+        acc.push(&b);
+        // last step carries weight 1 of total ≈ 2 (Σ 0.5^i)
+        assert!(acc.map.layers[0][1] > 0.45, "{:?}", acc.map.layers);
+        assert!(acc.map.layers[0][1] < 0.6);
+        assert!(acc.weight > 1.9 && acc.weight < 2.1);
+    }
+
+    #[test]
+    fn decaying_is_unweighted_mean_at_decay_one() {
+        let mut acc = DecayingImportance::new(1, 2, 1.0);
+        for s in [[2.0f32, 0.0], [4.0, 2.0], [6.0, 4.0]] {
+            acc.push(
+                &ImportanceMap::from_layers(vec![s.to_vec()]).unwrap(),
+            );
+        }
+        assert!((acc.map.layers[0][0] - 4.0).abs() < 1e-5);
+        assert!((acc.map.layers[0][1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn blend_interpolates_toward_decode_evidence() {
+        let prompt =
+            ImportanceMap::from_layers(vec![vec![1.0, 0.0]]).unwrap();
+        let mut acc = DecayingImportance::new(1, 2, 0.9);
+        // no evidence → prompt unchanged
+        assert_eq!(acc.blend_with(&prompt, 1.0), prompt);
+        let dec = ImportanceMap::from_layers(vec![vec![0.0, 1.0]]).unwrap();
+        for _ in 0..8 {
+            acc.push(&dec);
+        }
+        let blended = acc.blend_with(&prompt, 1.0);
+        // β = w/(w+1) with w ≈ 5.7 → decode side dominates
+        assert!(blended.layers[0][1] > 0.8, "{:?}", blended.layers);
+        assert!(blended.layers[0][0] < 0.2);
     }
 }

@@ -10,8 +10,8 @@ pub mod ranking;
 pub mod selector;
 
 pub use fusion::{fuse_and_select, glass_scores, select_topk};
-pub use importance::{ImportanceMap, OnlineImportance};
+pub use importance::{DecayingImportance, ImportanceMap, OnlineImportance};
 pub use mask::{jaccard, pack_indices, pack_masks, MaskSet};
 pub use prior::{GlobalPrior, PriorKind};
 pub use ranking::rank_ascending;
-pub use selector::{build_mask, Strategy};
+pub use selector::{build_mask, refresh_mask, Strategy};

@@ -32,11 +32,13 @@ pub enum Strategy {
     /// Oracle: top-k by post-hoc decoding-time statistics (App. C.1) —
     /// the caller supplies those statistics as the "local" argument.
     Oracle,
-    /// CATS-like: per-layer threshold at the (1-density) quantile of the
-    /// *global prior* magnitudes (offline-statistics thresholding).
+    /// CATS-like: one scalar threshold at the (1-density) quantile of
+    /// the pooled *global prior* magnitudes, applied per layer —
+    /// offline-statistics thresholding with a variable per-layer
+    /// keep-count (clamped to ≥ 1).
     CatsThreshold,
-    /// TDA-like: per-layer threshold at the (1-density) quantile of the
-    /// *prefill* activations (first-activations thresholding).
+    /// TDA-like: the same thresholding rule over the pooled *prefill*
+    /// activations (first-activations thresholding).
     TdaThreshold,
 }
 
@@ -124,15 +126,30 @@ pub fn build_mask(
         }
         Strategy::CatsThreshold => {
             let p = prior.unwrap();
-            (0..n_layers)
-                .map(|l| threshold_select(&p.map.layers[l], k))
-                .collect()
+            threshold_select_layers(&p.map.layers, k)
         }
-        Strategy::TdaThreshold => (0..n_layers)
-            .map(|l| threshold_select(&local.layers[l], k))
-            .collect(),
+        Strategy::TdaThreshold => threshold_select_layers(&local.layers, k),
     };
     MaskSet::from_indices(layers, m)
+}
+
+/// Rebuild a request's mask mid-generation from blended (prompt +
+/// decode-time) local statistics — the continuous batcher's periodic
+/// GLASS refresh. Returns the new mask and whether the kept set changed
+/// relative to `current`.
+pub fn refresh_mask(
+    strategy: &Strategy,
+    blended: &ImportanceMap,
+    prior: Option<&GlobalPrior>,
+    k: usize,
+    current: &MaskSet,
+) -> Result<(MaskSet, bool)> {
+    if !blended.is_well_formed() {
+        bail!("blended statistics are not well-formed");
+    }
+    let mask = build_mask(strategy, blended, prior, k)?;
+    let changed = &mask != current;
+    Ok((mask, changed))
 }
 
 fn sorted(mut v: Vec<usize>) -> Vec<usize> {
@@ -140,12 +157,35 @@ fn sorted(mut v: Vec<usize>) -> Vec<usize> {
     v
 }
 
-/// Threshold selection: keep everything ≥ the value at the k-th largest
-/// position. With distinct scores this equals top-k; the threshold framing
-/// mirrors CATS/TDA semantics (ties at the boundary keep lower indices —
-/// same deterministic rule).
-fn threshold_select(scores: &[f32], k: usize) -> Vec<usize> {
-    sorted(topk_indices(scores, k))
+/// CATS/TDA-style thresholding: one scalar threshold at the
+/// (1 − density) quantile of the *pooled* score distribution across all
+/// layers, then applied per layer. Unlike top-k this yields a variable
+/// per-layer keep-count (layers with stronger statistics keep more
+/// units, clamped to ≥ 1), with only the *expected* total matching the
+/// budget — the defining behavior of threshold rules vs. rank rules.
+fn threshold_select_layers(layers: &[Vec<f32>], k: usize) -> Vec<Vec<usize>> {
+    let mut pooled: Vec<f32> =
+        layers.iter().flat_map(|l| l.iter().copied()).collect();
+    pooled.sort_unstable_by(|a, b| {
+        b.partial_cmp(a).expect("NaN threshold score")
+    });
+    // pooled count matching an average of k kept per layer
+    let cut = (k * layers.len()).min(pooled.len());
+    let theta = pooled[cut.saturating_sub(1)];
+    layers
+        .iter()
+        .map(|scores| {
+            let kept: Vec<usize> = (0..scores.len())
+                .filter(|&j| scores[j] >= theta)
+                .collect();
+            if kept.is_empty() {
+                // clamp: always keep the layer's strongest unit
+                sorted(topk_indices(scores, 1))
+            } else {
+                kept
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -267,14 +307,13 @@ mod tests {
                 ],
             )
             .unwrap();
+            // rank-based strategies keep exactly k per layer
             for strat in [
                 Strategy::LocalOnly,
                 Strategy::GlobalOnly,
                 Strategy::Glass { lambda: 0.5 },
                 Strategy::Random { seed: 1 },
                 Strategy::Oracle,
-                Strategy::CatsThreshold,
-                Strategy::TdaThreshold,
             ] {
                 let mask =
                     build_mask(&strat, &local, Some(&prior), k).unwrap();
@@ -287,8 +326,92 @@ mod tests {
                     );
                 }
             }
+            // threshold strategies have a VARIABLE per-layer keep-count:
+            // ≥ 1 (clamped), ≤ m, and a pooled total that only has to
+            // stay near the budget (≤ 2k plus the per-layer clamp).
+            for strat in [Strategy::CatsThreshold, Strategy::TdaThreshold] {
+                let mask =
+                    build_mask(&strat, &local, Some(&prior), k).unwrap();
+                let mut total = 0;
+                for l in 0..2 {
+                    let kept = mask.layers[l].len();
+                    total += kept;
+                    prop_assert!(
+                        (1..=m).contains(&kept),
+                        "{} layer {l}: keep-count {kept} out of [1, {m}]",
+                        strat.name()
+                    );
+                }
+                prop_assert!(
+                    total <= 2 * k + 2,
+                    "{}: pooled total {total} far above budget 2k={}",
+                    strat.name(),
+                    2 * k
+                );
+            }
             Ok(())
         });
+    }
+
+    #[test]
+    fn threshold_keep_count_varies_per_layer() {
+        // layer 0 holds the 3 strongest pooled values, layer 1 only one
+        // above the pooled cut — a per-layer top-k would keep 2+2.
+        let local = imap(vec![
+            vec![0.9, 0.8, 0.7, 0.1],
+            vec![0.6, 0.05, 0.02, 0.01],
+        ]);
+        let m = build_mask(&Strategy::TdaThreshold, &local, None, 2).unwrap();
+        assert_eq!(m.layers[0], vec![0, 1, 2]);
+        assert_eq!(m.layers[1], vec![0]);
+    }
+
+    #[test]
+    fn threshold_clamps_empty_layers_to_one() {
+        // all of layer 1 sits below the pooled threshold
+        let local = imap(vec![vec![1.0, 0.9, 0.8, 0.7], vec![
+            0.01, 0.04, 0.02, 0.03,
+        ]]);
+        let m = build_mask(&Strategy::TdaThreshold, &local, None, 2).unwrap();
+        assert_eq!(m.layers[0], vec![0, 1, 2, 3]);
+        assert_eq!(m.layers[1], vec![1], "clamp keeps the strongest unit");
+    }
+
+    #[test]
+    fn cats_thresholds_prior_not_local() {
+        let local = imap(vec![vec![0.0, 0.0, 1.0, 1.0]; 2]);
+        let prior = GlobalPrior::new(
+            "g",
+            vec![vec![1.0, 0.9, 0.1, 0.05]; 2],
+        )
+        .unwrap();
+        let m = build_mask(&Strategy::CatsThreshold, &local, Some(&prior), 2)
+            .unwrap();
+        assert_eq!(m.layers[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn refresh_mask_reports_changes() {
+        let before = imap(vec![vec![0.9, 0.5, 0.1, 0.05]]);
+        let mask0 =
+            build_mask(&Strategy::LocalOnly, &before, None, 2).unwrap();
+        // no drift → unchanged
+        let (same, changed) =
+            refresh_mask(&Strategy::LocalOnly, &before, None, 2, &mask0)
+                .unwrap();
+        assert!(!changed);
+        assert_eq!(same, mask0);
+        // unit 3 overtakes unit 1 during decode
+        let after = imap(vec![vec![0.9, 0.1, 0.05, 0.8]]);
+        let (refreshed, changed) =
+            refresh_mask(&Strategy::LocalOnly, &after, None, 2, &mask0)
+                .unwrap();
+        assert!(changed);
+        assert_eq!(refreshed.layers[0], vec![0, 3]);
+        // malformed blended stats rejected
+        let bad = imap(vec![vec![f32::NAN, 0.1, 0.2, 0.3]]);
+        assert!(refresh_mask(&Strategy::LocalOnly, &bad, None, 2, &mask0)
+            .is_err());
     }
 
     #[test]

@@ -83,11 +83,27 @@ pub fn run_experiment(
     }
 }
 
-/// Load the LG prompt list, truncated to n samples.
+/// Load the LG prompt list, truncated to n samples. Without a bundled
+/// dataset (simulator runtime) a deterministic grammar-world prompt
+/// list is generated instead, so the harness and profiler still run.
 pub fn lg_prompts(engine: &Engine, n: usize) -> Result<Vec<String>> {
-    let path = engine.rt.manifest.data_path("lg")?;
-    let set = crate::data::LgSet::load(Path::new(&path))?;
-    let mut prompts = set.prompts;
-    prompts.truncate(n);
-    Ok(prompts)
+    if let Ok(path) = engine.rt.manifest.data_path("lg") {
+        if path.exists() {
+            let set = crate::data::LgSet::load(Path::new(&path))?;
+            let mut prompts = set.prompts;
+            prompts.truncate(n);
+            return Ok(prompts);
+        }
+    }
+    let adjectives = ["red", "blue", "golden", "grey", "quiet", "quick"];
+    let animals = ["fox", "owl", "wolf", "otter", "cat", "raven"];
+    Ok((0..n)
+        .map(|i| {
+            format!(
+                "once there was a {} {}",
+                adjectives[i % adjectives.len()],
+                animals[(i / adjectives.len() + i) % animals.len()]
+            )
+        })
+        .collect())
 }

@@ -88,7 +88,10 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn load_engine(cfg: &RunConfig) -> Result<Engine> {
-    Engine::load(Path::new(&cfg.artifacts_dir))
+    // falls back to the deterministic simulator engine when the AOT
+    // bundle is absent, so `glass serve` / `glass generate` work out of
+    // the box in offline environments
+    Engine::load_or_synthetic(Path::new(&cfg.artifacts_dir))
 }
 
 fn info(cfg: &RunConfig) -> Result<()> {

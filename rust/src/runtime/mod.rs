@@ -1,23 +1,28 @@
-//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
-//! request path with device-resident model weights.
+//! Runtime: the manifest-driven executable layer behind the engine.
 //!
-//! Flow (see /opt/xla-example/load_hlo and aot_recipe):
-//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//!   `XlaComputation::from_proto` → `client.compile` → `execute_b`.
+//! Two interchangeable backends sit behind [`Runtime::call`]:
 //!
-//! Model parameters are uploaded to the device **once** per runtime and
-//! passed as the leading arguments of every call (`execute_b`), so the
-//! per-step host↔device traffic is only the operands (tokens, masks, KV).
-//! Outputs come back as one tuple literal (xla_extension 0.5.1 does not
-//! untuple results device-side) and are decomposed into host tensors.
+//! * **PJRT** (`--features pjrt`): loads AOT-compiled HLO text through
+//!   the `xla` crate's PJRT CPU client — see [`pjrt`]. Model parameters
+//!   are uploaded once; per-call traffic is operands only.
+//! * **Simulator** (default): a deterministic pure-Rust model with the
+//!   same executable contract — see [`sim`]. Used whenever the real
+//!   XLA toolchain or the artifact bundle is unavailable (offline CI,
+//!   tests, benches), via [`Runtime::synthetic`] or as the execution
+//!   backend for an on-disk manifest.
+//!
+//! Operand count/shape/dtype validation against the manifest happens
+//! here, identically for both backends.
 
 pub mod manifest;
+pub mod sim;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
 pub use manifest::{DType, ExeSpec, IoSpec, Manifest, ModelSpec, ParamSpec};
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
@@ -75,68 +80,72 @@ impl Value {
     }
 }
 
-/// PJRT-side state: client, device-resident weights, compiled programs.
-///
-/// The `xla` crate's wrappers hold non-atomically-refcounted handles
-/// (`Rc`) onto the C++ client, so they are neither `Send` nor `Sync`.
-/// The underlying PJRT C++ objects are safe to use from multiple threads
-/// *sequentially*; we enforce that by funneling every PJRT touch through
-/// the `Mutex<PjrtState>` below, which makes the `unsafe impl Send` sound
-/// in practice (no concurrent access, no cross-thread Rc clone races —
-/// all clones happen under the lock).
-struct PjrtState {
-    client: xla::PjRtClient,
-    /// Model parameters uploaded once, in manifest order.
-    param_bufs: Vec<xla::PjRtBuffer>,
-    exes: HashMap<String, (ExeSpec, xla::PjRtLoadedExecutable)>,
+enum Backend {
+    Sim(sim::SimBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
 }
 
-unsafe impl Send for PjrtState {}
-
-/// The runtime: the manifest, the serialized PJRT state, and host copies
-/// of the weights (for the memory simulator and diagnostics).
+/// The runtime: the manifest, the selected backend, and host copies of
+/// the weights (for the memory simulator and diagnostics).
 pub struct Runtime {
     pub manifest: Manifest,
-    state: Mutex<PjrtState>,
+    backend: Backend,
     /// Raw host copy of the weights (memsim + weight inspection need it).
     pub param_host: Vec<Vec<f32>>,
 }
 
 impl Runtime {
-    /// Load the artifact bundle at `dir`.
+    /// Load the artifact bundle at `dir`. With the `pjrt` feature the
+    /// HLO programs are compiled and executed through PJRT; without it,
+    /// the manifest drives the simulator backend.
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let raw = std::fs::read(&manifest.params_file)
-            .with_context(|| format!("reading {:?}", manifest.params_file))?;
-        let mut param_bufs = Vec::with_capacity(manifest.params.len());
-        let mut param_host = Vec::with_capacity(manifest.params.len());
-        for p in &manifest.params {
-            let start = p.offset;
-            let end = start + p.numel * 4;
-            if end > raw.len() {
-                bail!("params.bin too small for {}", p.name);
-            }
-            let floats: Vec<f32> = raw[start..end]
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
-            let buf = client
-                .buffer_from_host_buffer(&floats, &p.shape, None)
-                .with_context(|| format!("uploading param {}", p.name))?;
-            param_bufs.push(buf);
-            param_host.push(floats);
-        }
+        let param_host = load_params(&manifest)?;
+
+        #[cfg(feature = "pjrt")]
+        let backend = Backend::Pjrt(pjrt::PjrtBackend::load(
+            &manifest.params,
+            &param_host,
+        )?);
+        #[cfg(not(feature = "pjrt"))]
+        let backend = {
+            crate::info!(
+                "pjrt feature disabled — executing '{}' on the simulator \
+                 backend",
+                dir.display()
+            );
+            Backend::Sim(sim::SimBackend::new(manifest.model.clone()))
+        };
+
         Ok(Runtime {
             manifest,
-            state: Mutex::new(PjrtState {
-                client,
-                param_bufs,
-                exes: HashMap::new(),
-            }),
+            backend,
             param_host,
         })
+    }
+
+    /// Build a fully in-memory runtime on the simulator backend: a
+    /// synthetic manifest, deterministic weights, and hash-derived
+    /// priors. Works with zero files on disk.
+    pub fn synthetic() -> Runtime {
+        let manifest = sim::synthetic_manifest();
+        let param_host = manifest
+            .params
+            .iter()
+            .map(|p| sim::SimBackend::param_values(&p.name, p.numel))
+            .collect();
+        let backend = Backend::Sim(sim::SimBackend::new(manifest.model.clone()));
+        Runtime {
+            manifest,
+            backend,
+            param_host,
+        }
+    }
+
+    /// True when calls execute on the simulator backend.
+    pub fn is_simulated(&self) -> bool {
+        matches!(self.backend, Backend::Sim(_))
     }
 
     /// Total model weight bytes (for the memory simulator).
@@ -145,41 +154,20 @@ impl Runtime {
     }
 
     /// Compile (and cache) an executable by manifest name. Also used to
-    /// warm programs before serving.
+    /// warm programs before serving; a no-op on the simulator beyond
+    /// validating the name.
     pub fn executable(&self, name: &str) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
-        self.compile_locked(&mut st, name)
-    }
-
-    fn compile_locked(
-        &self,
-        st: &mut PjrtState,
-        name: &str,
-    ) -> Result<()> {
-        if st.exes.contains_key(name) {
-            return Ok(());
+        self.manifest.exe(name)?;
+        match &self.backend {
+            Backend::Sim(_) => Ok(()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.compile(&self.manifest, name),
         }
-        let spec = self.manifest.exe(name)?.clone();
-        let path = self.manifest.dir.join(&spec.file);
-        let _t = timer::global().start("runtime.compile");
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = st
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        st.exes.insert(name.to_string(), (spec, exe));
-        crate::info!("compiled executable '{name}'");
-        Ok(())
     }
 
     /// Execute by name with operands in manifest order.
     pub fn call(&self, name: &str, operands: &[Value]) -> Result<Vec<Value>> {
-        let mut st = self.state.lock().unwrap();
-        self.compile_locked(&mut st, name)?;
-        let st = &*st;
-        let (spec, exe) = st.exes.get(name).expect("just compiled");
+        let spec = self.manifest.exe(name)?;
         if operands.len() != spec.operands.len() {
             bail!(
                 "exe {}: expected {} operands, got {}",
@@ -188,91 +176,41 @@ impl Runtime {
                 operands.len()
             );
         }
-        // validate + upload operands
         let _t_all = timer::global().start("runtime.call");
-        let mut inputs: Vec<&xla::PjRtBuffer> =
-            st.param_bufs.iter().collect();
-        let mut operand_bufs = Vec::with_capacity(operands.len());
-        {
-            let _t = timer::global().start("runtime.upload");
-            for (io, v) in spec.operands.iter().zip(operands) {
-                if io.shape != v.shape() {
-                    bail!(
-                        "exe {} operand '{}': shape {:?} != expected {:?}",
-                        spec.name,
-                        io.name,
-                        v.shape(),
-                        io.shape
-                    );
-                }
-                if io.dtype != v.dtype() {
-                    bail!(
-                        "exe {} operand '{}': dtype mismatch",
-                        spec.name,
-                        io.name
-                    );
-                }
-                let buf = match v {
-                    Value::F32(t) => st.client.buffer_from_host_buffer(
-                        &t.data,
-                        &t.shape,
-                        None,
-                    ),
-                    Value::I32(t) => st.client.buffer_from_host_buffer(
-                        &t.data,
-                        &t.shape,
-                        None,
-                    ),
-                }
-                .map_err(|e| anyhow::anyhow!("upload operand: {e:?}"))?;
-                operand_bufs.push(buf);
+        for (io, v) in spec.operands.iter().zip(operands) {
+            if io.shape != v.shape() {
+                bail!(
+                    "exe {} operand '{}': shape {:?} != expected {:?}",
+                    spec.name,
+                    io.name,
+                    v.shape(),
+                    io.shape
+                );
+            }
+            if io.dtype != v.dtype() {
+                bail!(
+                    "exe {} operand '{}': dtype mismatch",
+                    spec.name,
+                    io.name
+                );
             }
         }
-        inputs.extend(operand_bufs.iter());
-
-        let out_bufs = {
-            let _t = timer::global().start("runtime.execute");
-            exe.execute_b(&inputs)
-                .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", spec.name))?
-        };
-        let _t_dl = timer::global().start("runtime.download");
-        let tuple = out_bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
-        if parts.len() != spec.outputs.len() {
-            bail!(
-                "exe {}: manifest lists {} outputs, program returned {}",
-                spec.name,
-                spec.outputs.len(),
-                parts.len()
-            );
+        match &self.backend {
+            Backend::Sim(s) => {
+                let _t = timer::global().start("runtime.execute");
+                s.call(name, operands)
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.call(&self.manifest, spec, operands),
         }
-        let mut out = Vec::with_capacity(parts.len());
-        for (io, lit) in spec.outputs.iter().zip(parts) {
-            let v = match io.dtype {
-                DType::F32 => {
-                    let data = lit
-                        .to_vec::<f32>()
-                        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?;
-                    Value::F32(TensorF::new(io.shape.clone(), data)?)
-                }
-                DType::I32 => {
-                    let data = lit
-                        .to_vec::<i32>()
-                        .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?;
-                    Value::I32(TensorI::new(io.shape.clone(), data)?)
-                }
-            };
-            out.push(v);
-        }
-        Ok(out)
     }
 
-    /// Load a prior file ([L, m] f32 row-major) from the bundle.
+    /// Load a prior by name: from the simulator when simulated, else
+    /// from the bundle ([L, m] f32 row-major file).
     pub fn load_prior(&self, name: &str) -> Result<Vec<Vec<f32>>> {
+        if let Backend::Sim(s) = &self.backend {
+            return s.prior(name);
+        }
         let path = self.manifest.prior_path(name)?;
         let raw = std::fs::read(&path)
             .with_context(|| format!("reading prior {}", path.display()))?;
@@ -293,6 +231,44 @@ impl Runtime {
     }
 }
 
+/// Read params.bin per the manifest inventory. When the file is absent
+/// and we are not going to upload to PJRT (simulator execution), fall
+/// back to deterministic synthetic weights so weight-dependent tooling
+/// (memsim, `glass info`) still works.
+fn load_params(manifest: &Manifest) -> Result<Vec<Vec<f32>>> {
+    match std::fs::read(&manifest.params_file) {
+        Ok(raw) => {
+            let mut param_host = Vec::with_capacity(manifest.params.len());
+            for p in &manifest.params {
+                let start = p.offset;
+                let end = start + p.numel * 4;
+                if end > raw.len() {
+                    bail!("params.bin too small for {}", p.name);
+                }
+                let floats: Vec<f32> = raw[start..end]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                param_host.push(floats);
+            }
+            Ok(param_host)
+        }
+        Err(e) => {
+            if cfg!(feature = "pjrt") {
+                Err(e).with_context(|| {
+                    format!("reading {:?}", manifest.params_file)
+                })
+            } else {
+                Ok(manifest
+                    .params
+                    .iter()
+                    .map(|p| sim::SimBackend::param_values(&p.name, p.numel))
+                    .collect())
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -307,5 +283,20 @@ mod tests {
         let i = Value::I32(TensorI::zeros(&[3]));
         assert!(i.as_i32().is_ok());
         assert!(i.into_f32().is_err());
+    }
+
+    #[test]
+    fn synthetic_runtime_round_trips() {
+        let rt = Runtime::synthetic();
+        assert!(rt.is_simulated());
+        assert!(rt.weight_bytes() > 0);
+        assert_eq!(rt.param_host.len(), rt.manifest.params.len());
+        // operand validation is backend-independent
+        assert!(rt.call("decode_b1", &[]).is_err());
+        assert!(rt.executable("prefill_b4").is_ok());
+        assert!(rt.executable("nope_b4").is_err());
+        // priors resolve through the simulator
+        let p = rt.load_prior("a_nps").unwrap();
+        assert_eq!(p.len(), rt.manifest.model.n_layers);
     }
 }

@@ -1,0 +1,184 @@
+//! PJRT backend: load HLO-text artifacts, compile once, execute from the
+//! request path with device-resident model weights. Only compiled with
+//! `--features pjrt` (the offline default build uses [`super::sim`]).
+//!
+//! Flow (see /opt/xla-example/load_hlo and aot_recipe):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` → `execute_b`.
+//!
+//! Model parameters are uploaded to the device **once** per runtime and
+//! passed as the leading arguments of every call (`execute_b`), so the
+//! per-step host↔device traffic is only the operands (tokens, masks, KV).
+//! Outputs come back as one tuple literal (xla_extension 0.5.1 does not
+//! untuple results device-side) and are decomposed into host tensors.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, ExeSpec, Manifest};
+use super::Value;
+use crate::tensor::{TensorF, TensorI};
+use crate::util::timer;
+
+/// PJRT-side state: client, device-resident weights, compiled programs.
+///
+/// The `xla` crate's wrappers hold non-atomically-refcounted handles
+/// (`Rc`) onto the C++ client, so they are neither `Send` nor `Sync`.
+/// The underlying PJRT C++ objects are safe to use from multiple threads
+/// *sequentially*; we enforce that by funneling every PJRT touch through
+/// the `Mutex<PjrtState>` below, which makes the `unsafe impl Send` sound
+/// in practice (no concurrent access, no cross-thread Rc clone races —
+/// all clones happen under the lock).
+struct PjrtState {
+    client: xla::PjRtClient,
+    /// Model parameters uploaded once, in manifest order.
+    param_bufs: Vec<xla::PjRtBuffer>,
+    exes: HashMap<String, (ExeSpec, xla::PjRtLoadedExecutable)>,
+}
+
+unsafe impl Send for PjrtState {}
+
+pub struct PjrtBackend {
+    state: Mutex<PjrtState>,
+}
+
+impl PjrtBackend {
+    /// Create the client and upload the host weights once. Takes the
+    /// manifest inventory + host tensors by reference — no second host
+    /// copy of the model is materialized.
+    pub fn load(
+        params: &[super::manifest::ParamSpec],
+        param_host: &[Vec<f32>],
+    ) -> Result<PjrtBackend> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| {
+                anyhow::anyhow!("creating PJRT CPU client: {e:?}")
+            })?;
+        let mut param_bufs = Vec::with_capacity(param_host.len());
+        for (spec, floats) in params.iter().zip(param_host) {
+            let buf = client
+                .buffer_from_host_buffer(floats, &spec.shape, None)
+                .map_err(|e| {
+                    anyhow::anyhow!("uploading param {}: {e:?}", spec.name)
+                })
+                .context("uploading model weights")?;
+            param_bufs.push(buf);
+        }
+        Ok(PjrtBackend {
+            state: Mutex::new(PjrtState {
+                client,
+                param_bufs,
+                exes: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Compile (and cache) an executable by manifest name.
+    pub fn compile(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        compile_locked(&mut st, manifest, name)
+    }
+
+    /// Execute by name with operands in manifest order (shapes already
+    /// validated by the runtime).
+    pub fn call(
+        &self,
+        manifest: &Manifest,
+        spec: &ExeSpec,
+        operands: &[Value],
+    ) -> Result<Vec<Value>> {
+        let mut st = self.state.lock().unwrap();
+        compile_locked(&mut st, manifest, &spec.name)?;
+        let st = &*st;
+        let (spec, exe) = st.exes.get(&spec.name).expect("just compiled");
+
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            st.param_bufs.iter().collect();
+        let mut operand_bufs = Vec::with_capacity(operands.len());
+        {
+            let _t = timer::global().start("runtime.upload");
+            for v in operands {
+                let buf = match v {
+                    Value::F32(t) => st.client.buffer_from_host_buffer(
+                        &t.data,
+                        &t.shape,
+                        None,
+                    ),
+                    Value::I32(t) => st.client.buffer_from_host_buffer(
+                        &t.data,
+                        &t.shape,
+                        None,
+                    ),
+                }
+                .map_err(|e| anyhow::anyhow!("upload operand: {e:?}"))?;
+                operand_bufs.push(buf);
+            }
+        }
+        inputs.extend(operand_bufs.iter());
+
+        let out_bufs = {
+            let _t = timer::global().start("runtime.execute");
+            exe.execute_b(&inputs)
+                .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", spec.name))?
+        };
+        let _t_dl = timer::global().start("runtime.download");
+        let tuple = out_bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "exe {}: manifest lists {} outputs, program returned {}",
+                spec.name,
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (io, lit) in spec.outputs.iter().zip(parts) {
+            let v = match io.dtype {
+                DType::F32 => {
+                    let data = lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?;
+                    Value::F32(TensorF::new(io.shape.clone(), data)?)
+                }
+                DType::I32 => {
+                    let data = lit
+                        .to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?;
+                    Value::I32(TensorI::new(io.shape.clone(), data)?)
+                }
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+fn compile_locked(
+    st: &mut PjrtState,
+    manifest: &Manifest,
+    name: &str,
+) -> Result<()> {
+    if st.exes.contains_key(name) {
+        return Ok(());
+    }
+    let spec = manifest.exe(name)?.clone();
+    let path = manifest.dir.join(&spec.file);
+    let _t = timer::global().start("runtime.compile");
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = st
+        .client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+    st.exes.insert(name.to_string(), (spec, exe));
+    crate::info!("compiled executable '{name}'");
+    Ok(())
+}

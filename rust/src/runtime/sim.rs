@@ -1,0 +1,767 @@
+//! Deterministic simulator backend: a pure-Rust stand-in for the AOT
+//! executables, with the same calling contract as the PJRT backend.
+//!
+//! The build image cannot always run the real XLA artifacts (the
+//! `xla_extension` C++ runtime and the python AOT step are unavailable
+//! offline), so this backend implements the executable contract —
+//! prefill / masked decode step / gathered top-k decode / fused generate
+//! / teacher-forced score — as a closed-form "toy transformer" whose
+//! behavior is analytically controlled:
+//!
+//! * **Grammar head.** Each vocab token has one strongly preferred
+//!   successor (an alphabet walk with spaces), scaled by the kept-mask
+//!   FFN "strength". The dense model confidently follows the grammar;
+//!   heavily pruned models fall into deterministic hash noise.
+//! * **Neuron importance.** FFN unit `j` carries geometric weight
+//!   `1.5·0.7^j`; mask strength is the product over layers of kept
+//!   weight mass. Informed top-k masks keep ≈ all mass, random masks
+//!   don't — reproducing the paper's quality ordering (dense ≥ GLASS ≈
+//!   GRIFFIN ≫ random) and the KLD-vs-density monotone.
+//! * **Decode-time drift.** During decode, units in alternating
+//!   sign-blocks of four are boosted/suppressed (±Δ), so decode-time
+//!   statistics *drift away* from prompt statistics. This is what makes
+//!   a mid-generation GLASS mask refresh change the kept set — the
+//!   long-form scenario in the paper's motivation — and makes the
+//!   post-hoc oracle (ranked by true decode weights) at least as good
+//!   as prompt-only GRIFFIN.
+//!
+//! Everything is a pure function of (token, position, layer, unit) via
+//! SplitMix64 hashing: batch slots are exactly independent, fused and
+//! step decode agree bitwise, and runs are reproducible.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, ExeSpec, IoSpec, Manifest, ModelSpec, ParamSpec};
+use super::Value;
+use crate::tensor::{argmax, TensorF, TensorI};
+
+// ------------------------------------------------------------ constants
+
+/// Top neuron weight; unit j carries GAIN·RATIO^j.
+const GAIN: f64 = 1.5;
+const RATIO: f64 = 0.7;
+/// Decode-time drift amplitude (±) applied in sign-blocks of four.
+const DELTA: f64 = 0.5;
+/// Per-(token,position) jitter on statistics.
+const EPS: f64 = 0.05;
+/// Grammar-head logit margin at full strength.
+const MARGIN: f64 = 8.0;
+/// Hash-noise amplitude on all logits.
+const NOISE: f64 = 1.5;
+
+const SALT_NOISE: u64 = 0x9E00;
+const SALT_PROMPT: u64 = 0x51;
+const SALT_DEC: u64 = 0x52;
+const SALT_PRIOR: u64 = 0x53;
+const SALT_KV: u64 = 0x54;
+const SALT_PARAM: u64 = 0x55;
+
+// -------------------------------------------------------------- hashing
+
+fn sm64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+fn hmix(vals: &[u64]) -> u64 {
+    let mut h: u64 = 0x243F6A8885A308D3;
+    for &v in vals {
+        h = sm64(h ^ sm64(v));
+    }
+    h
+}
+
+/// Deterministic uniform value in [0, 1).
+fn h01(vals: &[u64]) -> f64 {
+    (hmix(vals) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+// ---------------------------------------------------------- toy model
+
+/// The bigram grammar: lowercase alphabet walk with a space after 'z';
+/// anything else re-enters the alphabet deterministically.
+fn next_byte(t: i32) -> i32 {
+    match t {
+        97..=121 => t + 1,
+        122 => 32,
+        32 => 97,
+        _ => 97 + t.rem_euclid(26),
+    }
+}
+
+/// Decode-drift sign for unit j: blocks of two boosted, two suppressed.
+/// The block-of-4 period moves drifted units by TWO local rank positions
+/// at kept-set boundaries, enough to flip λ=0.5 rank fusion too.
+fn drift_sign(j: usize) -> f64 {
+    if j % 4 < 2 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+fn l2_normalize(v: &mut [f64]) {
+    let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+/// The simulator backend; cheap, immutable, thread-safe.
+pub struct SimBackend {
+    spec: ModelSpec,
+    /// gain[j] = GAIN·RATIO^j.
+    gain: Vec<f64>,
+    /// Decode-time unit weights gain[j]·(1 + Δ·sign(j)) and their sum.
+    w_dec: Vec<f64>,
+    w_dec_sum: f64,
+}
+
+impl SimBackend {
+    pub fn new(spec: ModelSpec) -> SimBackend {
+        let m = spec.ffn_m;
+        let gain: Vec<f64> = (0..m).map(|j| GAIN * RATIO.powi(j as i32)).collect();
+        let w_dec: Vec<f64> = (0..m)
+            .map(|j| gain[j] * (1.0 + DELTA * drift_sign(j)))
+            .collect();
+        let w_dec_sum = w_dec.iter().sum();
+        SimBackend {
+            spec,
+            gain,
+            w_dec,
+            w_dec_sum,
+        }
+    }
+
+    // ------------------------------------------------------- primitives
+
+    /// FFN strength of a mask: product over layers of kept decode-weight
+    /// mass fraction. 1.0 for dense, → 0 as important units are dropped.
+    fn strength(&self, kept: &[Vec<usize>]) -> f64 {
+        let mut s = 1.0;
+        for layer in kept {
+            let mass: f64 = layer.iter().map(|&j| self.w_dec[j]).sum();
+            s *= mass / self.w_dec_sum;
+        }
+        s
+    }
+
+    /// Next-token logits after consuming `t` under FFN strength `s`.
+    /// Shared by prefill, step decode, fused generate and score, so all
+    /// paths agree bitwise.
+    fn step_logits(&self, t: i32, s: f64) -> Vec<f32> {
+        let v = self.spec.vocab;
+        let mut row: Vec<f64> = (0..v)
+            .map(|tok| NOISE * h01(&[SALT_NOISE, t as u64, tok as u64]))
+            .collect();
+        let nx = next_byte(t) as usize;
+        if nx < v {
+            row[nx] += MARGIN * s;
+        }
+        row.into_iter().map(|x| x as f32).collect()
+    }
+
+    /// Per-token prompt statistics for one layer (ℓ2-normalized).
+    fn prompt_tok_stats(&self, t: i32, l: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..self.spec.ffn_m)
+            .map(|j| {
+                let jitter =
+                    2.0 * h01(&[SALT_PROMPT, t as u64, l as u64, j as u64]) - 1.0;
+                self.gain[j] * (1.0 + EPS * jitter)
+            })
+            .collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    /// Per-token decode statistics for one layer (ℓ2-normalized) —
+    /// carries the ±Δ drift that distinguishes decode from prompt time.
+    fn dec_tok_stats(&self, t: i32, p: i32, l: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..self.spec.ffn_m)
+            .map(|j| {
+                let jitter = 2.0
+                    * h01(&[SALT_DEC, t as u64, p as u64, l as u64, j as u64])
+                    - 1.0;
+                self.w_dec[j] * (1.0 + EPS * jitter)
+            })
+            .collect();
+        l2_normalize(&mut v);
+        v
+    }
+
+    fn kv_value(&self, tag: u64, t: i32, p: i32, l: usize, h: usize, e: usize) -> f32 {
+        (h01(&[SALT_KV, tag, t as u64, p as u64, l as u64, h as u64, e as u64])
+            - 0.5) as f32
+    }
+
+    /// Write the KV row for (token t, position p) into [L,B,H,T,Dh] data.
+    fn write_kv_row(
+        &self,
+        k: &mut [f32],
+        v: &mut [f32],
+        b: usize,
+        slot: usize,
+        t: i32,
+        p: i32,
+    ) {
+        let spec = &self.spec;
+        let (hn, tn, dh) = (spec.n_heads, spec.max_seq, spec.head_dim);
+        if p < 0 || p as usize >= tn {
+            return;
+        }
+        for l in 0..spec.n_layers {
+            for h in 0..hn {
+                let base = ((((l * b + slot) * hn) + h) * tn + p as usize) * dh;
+                for e in 0..dh {
+                    k[base + e] = self.kv_value(0, t, p, l, h, e);
+                    v[base + e] = self.kv_value(1, t, p, l, h, e);
+                }
+            }
+        }
+    }
+
+    /// Kept unit ids per layer from one slot's [L, m] mask values.
+    fn kept_from_mask(&self, mask: &TensorF, slot: usize) -> Vec<Vec<usize>> {
+        let (l_n, m) = (self.spec.n_layers, self.spec.ffn_m);
+        (0..l_n)
+            .map(|l| {
+                let base = (slot * l_n + l) * m;
+                (0..m)
+                    .filter(|&j| mask.data[base + j] > 0.5)
+                    .collect::<Vec<usize>>()
+            })
+            .collect()
+    }
+
+    fn kept_from_idx(&self, idx: &TensorI, slot: usize) -> Vec<Vec<usize>> {
+        let l_n = self.spec.n_layers;
+        let k = idx.shape[2];
+        (0..l_n)
+            .map(|l| {
+                let base = (slot * l_n + l) * k;
+                idx.data[base..base + k]
+                    .iter()
+                    .map(|&j| j as usize)
+                    .collect::<Vec<usize>>()
+            })
+            .collect()
+    }
+
+    /// Global prior map for a named prior ([L][m], ℓ2-normalized rows).
+    pub fn prior(&self, name: &str) -> Result<Vec<Vec<f32>>> {
+        let kind: u64 = match name {
+            "a_nps" => 0,
+            "i_nps" => 1,
+            "a_corpus" => 2,
+            "i_corpus" => 3,
+            other => bail!("sim backend has no prior '{other}'"),
+        };
+        let spec = &self.spec;
+        Ok((0..spec.n_layers)
+            .map(|l| {
+                let mut v: Vec<f64> = (0..spec.ffn_m)
+                    .map(|j| {
+                        let jitter = 2.0
+                            * h01(&[SALT_PRIOR, kind, l as u64, j as u64])
+                            - 1.0;
+                        self.gain[j] * (1.0 + EPS * jitter)
+                    })
+                    .collect();
+                l2_normalize(&mut v);
+                v.into_iter().map(|x| x as f32).collect()
+            })
+            .collect())
+    }
+
+    /// Deterministic host weights for the synthetic param store.
+    pub fn param_values(name: &str, numel: usize) -> Vec<f32> {
+        let tag = hmix(&[SALT_PARAM, name.len() as u64])
+            ^ name.bytes().fold(0u64, |a, b| sm64(a ^ b as u64));
+        (0..numel)
+            .map(|i| (h01(&[SALT_PARAM, tag, i as u64]) as f32 - 0.5) * 0.2)
+            .collect()
+    }
+
+    // ------------------------------------------------------ executables
+
+    /// Execute an executable by manifest name (operands pre-validated
+    /// against the ExeSpec by the runtime).
+    pub fn call(&self, name: &str, operands: &[Value]) -> Result<Vec<Value>> {
+        let (kind, b) = parse_exe_name(name)
+            .ok_or_else(|| anyhow::anyhow!("sim backend: bad exe name '{name}'"))?;
+        match kind {
+            "prefill" => self.run_prefill(b, operands),
+            "decode" => self.run_decode(b, operands, false),
+            "decode_topk" => self.run_decode(b, operands, true),
+            "score" => self.run_score(b, operands),
+            "generate" => self.run_generate(b, operands),
+            other => bail!("sim backend: unknown executable kind '{other}'"),
+        }
+    }
+
+    fn run_prefill(&self, b: usize, operands: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.spec.clone();
+        let tokens = operands[0].as_i32()?;
+        let lens = operands[1].as_i32()?;
+        let s_pre = spec.prefill_len;
+
+        let mut logits = vec![0.0f32; b * spec.vocab];
+        let kv_numel =
+            spec.n_layers * b * spec.n_heads * spec.max_seq * spec.head_dim;
+        let mut k = vec![0.0f32; kv_numel];
+        let mut v = vec![0.0f32; kv_numel];
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+
+        for slot in 0..b {
+            let len = (lens.data[slot].max(1) as usize).min(s_pre);
+            let toks = &tokens.data[slot * s_pre..(slot + 1) * s_pre];
+            // next-token logits at the last real position, dense strength
+            let row = self.step_logits(toks[len - 1], 1.0);
+            logits[slot * spec.vocab..(slot + 1) * spec.vocab]
+                .copy_from_slice(&row);
+            // KV for every prefill frame position (pad rows are
+            // overwritten by decode before they can be attended)
+            for (p, &t) in toks.iter().enumerate() {
+                self.write_kv_row(&mut k, &mut v, b, slot, t, p as i32);
+            }
+            // local statistics A^l: mean of per-token prompt stats
+            for l in 0..spec.n_layers {
+                let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                for &t in toks.iter().take(len) {
+                    let st = self.prompt_tok_stats(t, l);
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] += (st[j] / len as f64) as f32;
+                    }
+                }
+            }
+        }
+        Ok(vec![
+            Value::F32(TensorF::new(vec![b, spec.vocab], logits)?),
+            Value::F32(TensorF::new(
+                vec![spec.n_layers, b, spec.n_heads, spec.max_seq, spec.head_dim],
+                k,
+            )?),
+            Value::F32(TensorF::new(
+                vec![spec.n_layers, b, spec.n_heads, spec.max_seq, spec.head_dim],
+                v,
+            )?),
+            Value::F32(TensorF::new(
+                vec![b, spec.n_layers, spec.ffn_m],
+                stats,
+            )?),
+        ])
+    }
+
+    fn run_decode(
+        &self,
+        b: usize,
+        operands: &[Value],
+        gathered: bool,
+    ) -> Result<Vec<Value>> {
+        let spec = self.spec.clone();
+        let tokens = operands[0].as_i32()?;
+        let pos = operands[1].as_i32()?;
+        let mut k = operands[2].as_f32()?.clone();
+        let mut v = operands[3].as_f32()?.clone();
+
+        let mut logits = vec![0.0f32; b * spec.vocab];
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        for slot in 0..b {
+            let kept = if gathered {
+                self.kept_from_idx(operands[4].as_i32()?, slot)
+            } else {
+                self.kept_from_mask(operands[4].as_f32()?, slot)
+            };
+            let t = tokens.data[slot];
+            let p = pos.data[slot];
+            let row = self.step_logits(t, self.strength(&kept));
+            logits[slot * spec.vocab..(slot + 1) * spec.vocab]
+                .copy_from_slice(&row);
+            self.write_kv_row(&mut k.data, &mut v.data, b, slot, t, p);
+            for l in 0..spec.n_layers {
+                let st = self.dec_tok_stats(t, p, l);
+                let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                for j in 0..spec.ffn_m {
+                    stats[base + j] = st[j] as f32;
+                }
+            }
+        }
+        Ok(vec![
+            Value::F32(TensorF::new(vec![b, spec.vocab], logits)?),
+            Value::F32(k),
+            Value::F32(v),
+            Value::F32(TensorF::new(
+                vec![b, spec.n_layers, spec.ffn_m],
+                stats,
+            )?),
+        ])
+    }
+
+    fn run_score(&self, b: usize, operands: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.spec.clone();
+        let tokens = operands[0].as_i32()?;
+        let weights = operands[1].as_f32()?;
+        let mask = operands[2].as_f32()?;
+        let s_len = spec.score_len;
+
+        let mut logits = vec![0.0f32; b * s_len * spec.vocab];
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        for slot in 0..b {
+            let kept = self.kept_from_mask(mask, slot);
+            let s = self.strength(&kept);
+            let mut w_total = 0.0f64;
+            let mut acc =
+                vec![vec![0.0f64; spec.ffn_m]; spec.n_layers];
+            for p in 0..s_len {
+                let t = tokens.data[slot * s_len + p];
+                let row = self.step_logits(t, s);
+                let base = (slot * s_len + p) * spec.vocab;
+                logits[base..base + spec.vocab].copy_from_slice(&row);
+                let w = weights.data[slot * s_len + p] as f64;
+                if w > 0.0 {
+                    w_total += w;
+                    for l in 0..spec.n_layers {
+                        let st = self.dec_tok_stats(t, p as i32, l);
+                        for j in 0..spec.ffn_m {
+                            acc[l][j] += w * st[j];
+                        }
+                    }
+                }
+            }
+            if w_total > 0.0 {
+                for l in 0..spec.n_layers {
+                    let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] = (acc[l][j] / w_total) as f32;
+                    }
+                }
+            }
+        }
+        Ok(vec![
+            Value::F32(TensorF::new(vec![b, s_len, spec.vocab], logits)?),
+            Value::F32(TensorF::new(
+                vec![b, spec.n_layers, spec.ffn_m],
+                stats,
+            )?),
+        ])
+    }
+
+    fn run_generate(&self, b: usize, operands: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.spec.clone();
+        let tokens = operands[0].as_i32()?;
+        let lens = operands[1].as_i32()?;
+        let mask = operands[2].as_f32()?;
+        let s_pre = spec.prefill_len;
+        let n = spec.gen_len;
+
+        let mut out_toks = vec![0i32; b * n];
+        let mut out_logits = vec![0.0f32; b * n * spec.vocab];
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        for slot in 0..b {
+            let kept = self.kept_from_mask(mask, slot);
+            let s = self.strength(&kept);
+            let len = (lens.data[slot].max(1) as usize).min(s_pre);
+            let last = tokens.data[slot * s_pre + len - 1];
+            // first generated token from the (masked) prefill position
+            let mut tok = argmax(&self.step_logits(last, s)) as i32;
+            for i in 0..n {
+                out_toks[slot * n + i] = tok;
+                let p = (len + i) as i32;
+                for l in 0..spec.n_layers {
+                    let st = self.dec_tok_stats(tok, p, l);
+                    let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] += (st[j] / n as f64) as f32;
+                    }
+                }
+                let row = self.step_logits(tok, s);
+                let base = (slot * n + i) * spec.vocab;
+                out_logits[base..base + spec.vocab].copy_from_slice(&row);
+                if i + 1 < n {
+                    tok = argmax(&row) as i32;
+                }
+            }
+        }
+        Ok(vec![
+            Value::I32(TensorI::new(vec![b, n], out_toks)?),
+            Value::F32(TensorF::new(vec![b, n, spec.vocab], out_logits)?),
+            Value::F32(TensorF::new(
+                vec![b, spec.n_layers, spec.ffn_m],
+                stats,
+            )?),
+        ])
+    }
+}
+
+fn parse_exe_name(name: &str) -> Option<(&str, usize)> {
+    let (kind, b) = name.rsplit_once("_b")?;
+    Some((kind, b.parse().ok()?))
+}
+
+// --------------------------------------------------- synthetic bundle
+
+/// The synthetic model spec used when no artifact bundle is available.
+pub fn synthetic_spec() -> ModelSpec {
+    ModelSpec {
+        vocab: 260,
+        d_model: 16,
+        n_layers: 4,
+        n_heads: 2,
+        head_dim: 8,
+        ffn_m: 32,
+        max_seq: 96,
+        prefill_len: 32,
+        score_len: 64,
+        gen_len: 24,
+        bos_id: 256,
+        pad_id: 257,
+    }
+}
+
+/// Batch sizes the synthetic bundle "compiles".
+pub const SYNTHETIC_BATCH_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+/// Build an in-memory manifest equivalent to what `make artifacts`
+/// produces, so every manifest-driven code path (batch discovery, shape
+/// validation, weight footprint, priors) works without files on disk.
+pub fn synthetic_manifest() -> Manifest {
+    let spec = synthetic_spec();
+    let io = |name: &str, shape: Vec<usize>, dtype: DType| IoSpec {
+        name: name.to_string(),
+        shape,
+        dtype,
+    };
+    let kv_shape = |b: usize| {
+        vec![spec.n_layers, b, spec.n_heads, spec.max_seq, spec.head_dim]
+    };
+    let mask_shape = |b: usize| vec![b, spec.n_layers, spec.ffn_m];
+    let topk_k = spec.ffn_m / 2;
+
+    let mut executables = Vec::new();
+    for &b in &SYNTHETIC_BATCH_SIZES {
+        executables.push(ExeSpec {
+            name: format!("prefill_b{b}"),
+            file: String::new(),
+            n_params: 0,
+            operands: vec![
+                io("tokens", vec![b, spec.prefill_len], DType::I32),
+                io("lens", vec![b], DType::I32),
+            ],
+            outputs: vec![
+                io("logits", vec![b, spec.vocab], DType::F32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
+                io("stats", mask_shape(b), DType::F32),
+            ],
+        });
+        executables.push(ExeSpec {
+            name: format!("decode_b{b}"),
+            file: String::new(),
+            n_params: 0,
+            operands: vec![
+                io("tokens", vec![b], DType::I32),
+                io("pos", vec![b], DType::I32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
+                io("mask", mask_shape(b), DType::F32),
+            ],
+            outputs: vec![
+                io("logits", vec![b, spec.vocab], DType::F32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
+                io("stats", mask_shape(b), DType::F32),
+            ],
+        });
+        executables.push(ExeSpec {
+            name: format!("decode_topk_b{b}"),
+            file: String::new(),
+            n_params: 0,
+            operands: vec![
+                io("tokens", vec![b], DType::I32),
+                io("pos", vec![b], DType::I32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
+                io("idx", vec![b, spec.n_layers, topk_k], DType::I32),
+            ],
+            outputs: vec![
+                io("logits", vec![b, spec.vocab], DType::F32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
+                io("stats", mask_shape(b), DType::F32),
+            ],
+        });
+        executables.push(ExeSpec {
+            name: format!("score_b{b}"),
+            file: String::new(),
+            n_params: 0,
+            operands: vec![
+                io("tokens", vec![b, spec.score_len], DType::I32),
+                io("stats_w", vec![b, spec.score_len], DType::F32),
+                io("mask", mask_shape(b), DType::F32),
+            ],
+            outputs: vec![
+                io("logits", vec![b, spec.score_len, spec.vocab], DType::F32),
+                io("stats", mask_shape(b), DType::F32),
+            ],
+        });
+        executables.push(ExeSpec {
+            name: format!("generate_b{b}"),
+            file: String::new(),
+            n_params: 0,
+            operands: vec![
+                io("tokens", vec![b, spec.prefill_len], DType::I32),
+                io("lens", vec![b], DType::I32),
+                io("mask", mask_shape(b), DType::F32),
+            ],
+            outputs: vec![
+                io("tokens", vec![b, spec.gen_len], DType::I32),
+                io("logits", vec![b, spec.gen_len, spec.vocab], DType::F32),
+                io("stats", mask_shape(b), DType::F32),
+            ],
+        });
+    }
+
+    // weight inventory (for the memory simulator and `glass info`)
+    let mut params = Vec::new();
+    let mut offset = 0usize;
+    let mut push = |params: &mut Vec<ParamSpec>, name: String, shape: Vec<usize>| {
+        let numel: usize = shape.iter().product();
+        params.push(ParamSpec {
+            name,
+            shape,
+            offset,
+            numel,
+        });
+        offset += numel * 4;
+    };
+    push(&mut params, "embed".into(), vec![spec.vocab, spec.d_model]);
+    for l in 0..spec.n_layers {
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(&mut params, format!("layer{l}.{w}"), vec![spec.d_model, spec.d_model]);
+        }
+        push(&mut params, format!("layer{l}.w_up"), vec![spec.d_model, spec.ffn_m]);
+        push(&mut params, format!("layer{l}.w_gate"), vec![spec.d_model, spec.ffn_m]);
+        push(&mut params, format!("layer{l}.w_down"), vec![spec.ffn_m, spec.d_model]);
+    }
+    push(&mut params, "head".into(), vec![spec.d_model, spec.vocab]);
+
+    Manifest {
+        dir: PathBuf::from("<synthetic>"),
+        model: spec,
+        topk_k,
+        params_file: PathBuf::from("<synthetic>/params.bin"),
+        params,
+        executables,
+        priors: vec![
+            ("a_nps".into(), "<sim>".into()),
+            ("i_nps".into(), "<sim>".into()),
+            ("a_corpus".into(), "<sim>".into()),
+            ("i_corpus".into(), "<sim>".into()),
+        ],
+        data: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> SimBackend {
+        SimBackend::new(synthetic_spec())
+    }
+
+    #[test]
+    fn grammar_walks_alphabet_with_spaces() {
+        assert_eq!(next_byte(b'a' as i32), b'b' as i32);
+        assert_eq!(next_byte(b'z' as i32), b' ' as i32);
+        assert_eq!(next_byte(b' ' as i32), b'a' as i32);
+        // chain from any byte stays in printable ascii
+        let mut t = 256;
+        for _ in 0..60 {
+            t = next_byte(t);
+            assert!((32..127).contains(&t), "left ascii: {t}");
+        }
+    }
+
+    #[test]
+    fn h01_in_unit_interval_and_deterministic() {
+        for i in 0..1000u64 {
+            let x = h01(&[1, i]);
+            assert!((0.0..1.0).contains(&x));
+        }
+        assert_eq!(h01(&[3, 4, 5]), h01(&[3, 4, 5]));
+        assert_ne!(h01(&[3, 4, 5]), h01(&[3, 4, 6]));
+    }
+
+    #[test]
+    fn strength_monotone_in_kept_mass() {
+        let be = backend();
+        let m = be.spec.ffn_m;
+        let dense: Vec<Vec<usize>> =
+            vec![(0..m).collect(); be.spec.n_layers];
+        let top_half: Vec<Vec<usize>> =
+            vec![(0..m / 2).collect(); be.spec.n_layers];
+        let bottom_half: Vec<Vec<usize>> =
+            vec![(m / 2..m).collect(); be.spec.n_layers];
+        let s_dense = be.strength(&dense);
+        let s_top = be.strength(&top_half);
+        let s_bottom = be.strength(&bottom_half);
+        assert!((s_dense - 1.0).abs() < 1e-12);
+        assert!(s_top < s_dense && s_top > 0.9, "{s_top}");
+        assert!(s_bottom < 0.01, "{s_bottom}");
+    }
+
+    #[test]
+    fn dense_logits_follow_grammar() {
+        let be = backend();
+        let m = be.spec.ffn_m;
+        let dense: Vec<Vec<usize>> =
+            vec![(0..m).collect(); be.spec.n_layers];
+        let row = be.step_logits(b'f' as i32, be.strength(&dense));
+        assert_eq!(argmax(&row), b'g' as usize);
+    }
+
+    #[test]
+    fn priors_distinct_and_normalized() {
+        let be = backend();
+        for name in ["a_nps", "i_nps", "a_corpus", "i_corpus"] {
+            let p = be.prior(name).unwrap();
+            assert_eq!(p.len(), be.spec.n_layers);
+            let l0 = &p[0];
+            assert!(l0.iter().any(|&x| (x - l0[0]).abs() > 1e-9));
+            let norm: f32 = l0.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3);
+        }
+        assert!(be.prior("nope").is_err());
+    }
+
+    #[test]
+    fn exe_name_parsing() {
+        assert_eq!(parse_exe_name("prefill_b4"), Some(("prefill", 4)));
+        assert_eq!(
+            parse_exe_name("decode_topk_b8"),
+            Some(("decode_topk", 8))
+        );
+        assert_eq!(parse_exe_name("nope"), None);
+    }
+
+    #[test]
+    fn synthetic_manifest_is_consistent() {
+        let man = synthetic_manifest();
+        assert_eq!(man.topk_k, man.model.ffn_m / 2);
+        for kind in ["prefill", "decode", "decode_topk", "score", "generate"] {
+            for b in SYNTHETIC_BATCH_SIZES {
+                assert!(man.exe(&format!("{kind}_b{b}")).is_ok());
+            }
+        }
+        assert!(!man.params.is_empty());
+        let total: usize = man.params.iter().map(|p| p.numel * 4).sum();
+        assert_eq!(man.params.last().unwrap().offset
+            + man.params.last().unwrap().numel * 4, total);
+    }
+}

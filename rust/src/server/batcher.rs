@@ -1,0 +1,500 @@
+//! Continuous batcher: the serving engine loop.
+//!
+//! A fixed-width decode batch (one compiled `decode_b{W}` executable)
+//! runs step by step; each slot holds an independent in-flight request
+//! ([`DecodeSession`]). Every step the batcher:
+//!
+//!  1. **admits** queued requests into free slots — prefill runs on the
+//!     smallest compiled batch that fits the newcomers, and their KV
+//!     planes are spliced into the in-flight batch cache (slot surgery,
+//!     [`KvState::copy_slot_from`]);
+//!  2. **decodes** one token for every active slot through the shared
+//!     masked step executable (per-slot masks, so strategies mix);
+//!  3. **refreshes** masks whose request asked for it: every R decoded
+//!     tokens the GLASS selection is re-run on blended prompt +
+//!     decaying-average decode statistics (the paper's global-local
+//!     aggregation applied over the generation horizon, not just the
+//!     prompt);
+//!  4. **retires** finished slots immediately — the response leaves as
+//!     soon as its request stops, while longer requests keep decoding.
+//!
+//! Compared to the old drain-a-batch/fused-generate loop there is no
+//! head-of-line blocking: a short request admitted next to a long one
+//! completes and frees its slot mid-flight.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::engine::session::{DecodeSession, FinishReason};
+use crate::engine::{Engine, KvState};
+use crate::glass::{
+    build_mask, refresh_mask, GlobalPrior, MaskSet, PriorKind, Strategy,
+};
+use crate::info;
+use crate::tensor::TensorF;
+
+use super::protocol::Response;
+use super::scheduler::{Pending, Scheduler};
+
+/// Decay of the per-step decode-statistics average (per further step).
+pub const STAT_DECAY: f64 = 0.9;
+/// Pseudo-step mass of the prompt statistics in the refresh blend.
+pub const PROMPT_STAT_WEIGHT: f64 = 1.0;
+
+struct Slot {
+    pending: Pending,
+    sess: DecodeSession,
+    strategy: Strategy,
+    prior_key: Option<&'static str>,
+    prefill_ms: f64,
+    queue_ms: f64,
+    decode_started: Instant,
+}
+
+/// Continuous-batching engine loop over step-mode decode.
+pub struct Batcher {
+    engine: Engine,
+    /// Compiled decode width (slot count).
+    pub width: usize,
+    priors: HashMap<&'static str, GlobalPrior>,
+    kv: KvState,
+    slots: Vec<Option<Slot>>,
+    /// Packed [W, L, m] mask tensor for the decode step, kept in sync
+    /// incrementally (admission / refresh / retirement) instead of
+    /// being rebuilt every token — masks rarely change between steps.
+    /// Free slots hold dense rows (harmless; their logits are ignored).
+    mask_t: TensorF,
+    /// Total decode steps executed (telemetry / tests).
+    pub steps: u64,
+    /// Total tokens emitted across finished requests.
+    pub tokens_out: u64,
+}
+
+/// Overwrite one slot's rows of the packed mask tensor ([W, L, m]);
+/// `None` resets the slot to dense.
+fn write_slot_mask(
+    mask_t: &mut TensorF,
+    n_layers: usize,
+    m: usize,
+    slot: usize,
+    mask: Option<&MaskSet>,
+) {
+    for l in 0..n_layers {
+        let base = (slot * n_layers + l) * m;
+        match mask {
+            Some(ms) => mask_t.data[base..base + m]
+                .copy_from_slice(&ms.layer_mask(l)),
+            None => mask_t.data[base..base + m].fill(1.0),
+        }
+    }
+}
+
+/// Map a wire strategy name to the selection rule + prior key. The
+/// wildcard arm is an explicit error: a typo'd strategy must never be
+/// silently served as i-GLASS.
+pub fn resolve_strategy(
+    name: &str,
+    lambda: f64,
+) -> Result<(Strategy, Option<&'static str>)> {
+    Ok(match name {
+        "dense" => (Strategy::Dense, None),
+        "griffin" => (Strategy::LocalOnly, None),
+        "global" => (Strategy::GlobalOnly, Some("a-glass")),
+        "a-glass" => (Strategy::Glass { lambda }, Some("a-glass")),
+        "i-glass" => (Strategy::Glass { lambda }, Some("i-glass")),
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+impl Batcher {
+    /// Build the batcher: pick the decode width, load the priors, and
+    /// warm every executable the loop can hit — `decode_b{W}` plus
+    /// `prefill_b{n}` for every admission size the scheduler can form
+    /// (1..=W), so no first request pays compile latency.
+    pub fn new(engine: Engine, batch_width: usize) -> Result<Batcher> {
+        let width = engine.pick_batch(batch_width)?;
+        let mut priors = HashMap::new();
+        for (key, kind) in [
+            ("a-glass", PriorKind::ANps),
+            ("i-glass", PriorKind::INps),
+        ] {
+            priors.insert(key, GlobalPrior::load(&engine.rt, kind)?);
+        }
+        let mut warmed = Vec::new();
+        for n in 1..=width {
+            let b = engine.pick_batch(n)?;
+            if !warmed.contains(&b) {
+                engine.rt.executable(&format!("prefill_b{b}"))?;
+                warmed.push(b);
+            }
+        }
+        engine.rt.executable(&format!("decode_b{width}"))?;
+        info!(
+            "batcher ready: width {width}, warmed prefill_b{warmed:?} + \
+             decode_b{width}"
+        );
+        let kv = KvState::zeros(engine.spec(), width);
+        let slots = (0..width).map(|_| None).collect();
+        let spec = engine.spec();
+        let mask_t =
+            TensorF::ones(&[width, spec.n_layers, spec.ffn_m]);
+        Ok(Batcher {
+            engine,
+            width,
+            priors,
+            kv,
+            slots,
+            mask_t,
+            steps: 0,
+            tokens_out: 0,
+        })
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn active(&self) -> usize {
+        self.width - self.free_slots()
+    }
+
+    /// Admit up to `free_slots()` requests: batch-prefill the newcomers,
+    /// build their prefill-time masks, splice KV into free slots. Bad
+    /// requests (unknown strategy, mask failures) get an immediate error
+    /// response; `max_tokens <= 1` requests complete right here.
+    pub fn admit(
+        &mut self,
+        pending: Vec<Pending>,
+        sink: &mut dyn FnMut(u64, Response),
+    ) {
+        if pending.is_empty() {
+            return;
+        }
+        let admit_start = Instant::now();
+        let spec = self.engine.spec().clone();
+
+        // resolve strategies first; protocol-invalid requests never
+        // reach the engine
+        let mut accepted = Vec::new();
+        for p in pending {
+            match resolve_strategy(&p.request.strategy, p.request.lambda) {
+                Ok((strategy, prior_key)) => {
+                    accepted.push((p, strategy, prior_key))
+                }
+                Err(e) => {
+                    sink(p.conn_id, Response::err(p.request.id, e.to_string()))
+                }
+            }
+        }
+        if accepted.is_empty() {
+            return;
+        }
+        if accepted.len() > self.free_slots() {
+            // caller bug: shed the overflow back as errors rather than
+            // corrupting slot state
+            for (p, ..) in accepted.drain(self.free_slots()..) {
+                sink(
+                    p.conn_id,
+                    Response::err(p.request.id, "batcher overloaded".into()),
+                );
+            }
+        }
+
+        let prompts: Vec<String> = accepted
+            .iter()
+            .map(|(p, ..)| p.request.prompt.clone())
+            .collect();
+        let t0 = Instant::now();
+        let pre = match self
+            .engine
+            .pick_batch(prompts.len())
+            .and_then(|pb| self.engine.prefill(&prompts, pb))
+        {
+            Ok(pre) => pre,
+            Err(e) => {
+                for (p, ..) in accepted {
+                    sink(p.conn_id, Response::err(p.request.id, e.to_string()));
+                }
+                return;
+            }
+        };
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        for (i, (p, strategy, prior_key)) in accepted.into_iter().enumerate()
+        {
+            let req = &p.request;
+            let k = spec.budget(req.density);
+            let prior = prior_key.and_then(|key| self.priors.get(key));
+            let built = self
+                .engine
+                .local_importance(&pre, i)
+                .and_then(|local| build_mask(&strategy, &local, prior, k));
+            let mask = match built {
+                Ok(m) => m,
+                Err(e) => {
+                    sink(p.conn_id, Response::err(req.id, e.to_string()));
+                    continue;
+                }
+            };
+            let sess = match DecodeSession::from_prefill(
+                &pre, i, mask, k, STAT_DECAY,
+            ) {
+                Ok(s) => s,
+                Err(e) => {
+                    sink(p.conn_id, Response::err(req.id, e.to_string()));
+                    continue;
+                }
+            };
+            let si = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("free slot accounted above");
+            self.kv.copy_slot_from(si, &pre.kv, i);
+            let queue_ms =
+                admit_start.duration_since(p.arrived).as_secs_f64() * 1e3;
+            let slot = Slot {
+                pending: p,
+                sess,
+                strategy,
+                prior_key,
+                prefill_ms,
+                queue_ms,
+                decode_started: Instant::now(),
+            };
+            let done_at_prefill = slot.sess.finished.is_some()
+                || slot.sess.generated.len()
+                    >= slot.pending.request.max_tokens.max(1);
+            if done_at_prefill {
+                // stop token or 1-token budget: finished at prefill
+                let resp = finish_response(&self.engine, &slot);
+                self.tokens_out += resp.tokens as u64;
+                sink(slot.pending.conn_id, resp);
+            } else {
+                write_slot_mask(
+                    &mut self.mask_t,
+                    spec.n_layers,
+                    spec.ffn_m,
+                    si,
+                    Some(&slot.sess.mask),
+                );
+                self.slots[si] = Some(slot);
+            }
+        }
+    }
+
+    /// One decode step for every active slot; finished slots respond and
+    /// free immediately. Inactive slots ride along with a dense mask and
+    /// a parked position (their logits are ignored).
+    pub fn step(
+        &mut self,
+        sink: &mut dyn FnMut(u64, Response),
+    ) -> Result<()> {
+        let spec = self.engine.spec().clone();
+        if self.active() == 0 {
+            return Ok(());
+        }
+        let mut tokens = vec![spec.pad_id; self.width];
+        let mut pos = vec![0i32; self.width];
+        {
+            for (si, s) in self.slots.iter().enumerate() {
+                if let Some(slot) = s {
+                    tokens[si] = slot.sess.last_tok;
+                    pos[si] = slot.sess.pos;
+                }
+            }
+            let (logits, stats) = self.engine.decode_step(
+                &mut self.kv,
+                &tokens,
+                &pos,
+                &self.mask_t,
+            )?;
+            self.steps += 1;
+
+            let engine = &self.engine;
+            let priors = &self.priors;
+            let tokens_out = &mut self.tokens_out;
+            let mask_t = &mut self.mask_t;
+            for (si, s) in self.slots.iter_mut().enumerate() {
+                let Some(slot) = s else { continue };
+                let finished = slot.sess.absorb_step(
+                    logits.row(si),
+                    &stats,
+                    si,
+                    slot.pending.request.max_tokens,
+                    spec.max_seq,
+                )?;
+                if finished {
+                    let resp = finish_response(engine, slot);
+                    *tokens_out += resp.tokens as u64;
+                    sink(slot.pending.conn_id, resp);
+                    *s = None;
+                    write_slot_mask(
+                        mask_t,
+                        spec.n_layers,
+                        spec.ffn_m,
+                        si,
+                        None,
+                    );
+                    continue;
+                }
+                let every = slot.pending.request.refresh_every;
+                if every > 0 && slot.sess.generated.len() % every == 0 {
+                    let prior =
+                        slot.prior_key.and_then(|key| priors.get(key));
+                    let blended =
+                        slot.sess.blended_local(PROMPT_STAT_WEIGHT);
+                    match refresh_mask(
+                        &slot.strategy,
+                        &blended,
+                        prior,
+                        slot.sess.k,
+                        &slot.sess.mask,
+                    ) {
+                        Ok((mask, changed)) => {
+                            slot.sess.refreshes += 1;
+                            if changed {
+                                slot.sess.mask_updates += 1;
+                                slot.sess.mask = mask;
+                                write_slot_mask(
+                                    mask_t,
+                                    spec.n_layers,
+                                    spec.ffn_m,
+                                    si,
+                                    Some(&slot.sess.mask),
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            // the refresh is an optional optimization:
+                            // degrade to the current mask and stop
+                            // refreshing rather than discarding the
+                            // tokens generated so far
+                            crate::warn_!(
+                                "request {}: mask refresh failed ({e}); \
+                                 keeping current mask",
+                                slot.pending.request.id
+                            );
+                            slot.pending.request.refresh_every = 0;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Abort every in-flight request with an error (engine failure).
+    pub fn fail_all(
+        &mut self,
+        err: &anyhow::Error,
+        sink: &mut dyn FnMut(u64, Response),
+    ) {
+        let spec = self.engine.spec().clone();
+        for (si, s) in self.slots.iter_mut().enumerate() {
+            if let Some(slot) = s.take() {
+                sink(
+                    slot.pending.conn_id,
+                    Response::err(slot.pending.request.id, err.to_string()),
+                );
+                write_slot_mask(
+                    &mut self.mask_t,
+                    spec.n_layers,
+                    spec.ffn_m,
+                    si,
+                    None,
+                );
+            }
+        }
+    }
+
+    /// Drive the loop against a scheduler until it closes and drains:
+    /// block for work only when idle, admit mid-flight otherwise.
+    pub fn run(
+        &mut self,
+        sched: &Scheduler,
+        sink: &mut dyn FnMut(u64, Response),
+    ) {
+        loop {
+            let free = self.free_slots();
+            if free > 0 {
+                if self.active() == 0 {
+                    // idle: block until work arrives (batch_window lets
+                    // an initial burst form), or exit on close+empty
+                    match sched.next_batch() {
+                        Some(batch) => self.admit(batch, sink),
+                        None => break,
+                    }
+                } else {
+                    // mid-flight admission into free slots
+                    let newly = sched.take(free);
+                    if !newly.is_empty() {
+                        self.admit(newly, sink);
+                    }
+                }
+            }
+            if self.active() == 0 {
+                continue;
+            }
+            if let Err(e) = self.step(sink) {
+                self.fail_all(&e, sink);
+            }
+        }
+    }
+}
+
+fn finish_response(engine: &Engine, slot: &Slot) -> Response {
+    let sess = &slot.sess;
+    let mut resp = Response::ok(
+        slot.pending.request.id,
+        engine.decode_text(&sess.generated),
+        sess.generated.len(),
+        slot.prefill_ms,
+        slot.decode_started.elapsed().as_secs_f64() * 1e3,
+        sess.mask.density(),
+    );
+    resp.queue_ms = slot.queue_ms;
+    resp.refreshes = sess.refreshes;
+    resp.mask_updates = sess.mask_updates;
+    resp.finish = sess
+        .finished
+        .unwrap_or(FinishReason::Length)
+        .as_str()
+        .to_string();
+    resp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_strategy_is_an_error_not_iglass() {
+        // the old serve path had a `_ =>` arm that silently served any
+        // typo as i-GLASS; the resolver must reject instead
+        for bad in ["bogus", "iglass", "I-GLASS", ""] {
+            let err = resolve_strategy(bad, 0.5).unwrap_err();
+            assert!(
+                err.to_string().contains("unknown strategy"),
+                "{bad}: {err}"
+            );
+        }
+        for good in super::super::protocol::STRATEGIES {
+            assert!(resolve_strategy(good, 0.5).is_ok(), "{good}");
+        }
+    }
+
+    #[test]
+    fn glass_variants_pick_matching_priors() {
+        let (s, p) = resolve_strategy("a-glass", 0.25).unwrap();
+        assert!(matches!(s, Strategy::Glass { lambda } if lambda == 0.25));
+        assert_eq!(p, Some("a-glass"));
+        let (_, p) = resolve_strategy("i-glass", 0.5).unwrap();
+        assert_eq!(p, Some("i-glass"));
+        let (s, p) = resolve_strategy("dense", 0.5).unwrap();
+        assert!(matches!(s, Strategy::Dense));
+        assert_eq!(p, None);
+    }
+}

@@ -96,5 +96,6 @@ pub fn request(prompt: &str, strategy: &str, density: f64) -> Request {
         lambda: 0.5,
         density,
         max_tokens: 64,
+        refresh_every: 0,
     }
 }

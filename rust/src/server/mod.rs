@@ -1,13 +1,51 @@
-//! Threaded serving layer: TCP listener + scheduler + engine loop.
+//! Threaded serving layer: TCP listener + scheduler + continuous batcher.
 //!
-//! Topology (vLLM-router-like, scaled to one box):
-//!   * N acceptor/connection threads parse JSON-line requests and push
-//!     them onto the [`scheduler::Scheduler`] queue;
-//!   * one engine thread drains batches, runs the GLASS flow
-//!     (prefill → mask → fused sparse generate), and routes responses
-//!     back through per-connection channels;
-//!   * masks are per-slot, so heterogeneous strategies share a batch.
+//! # Architecture
+//!
+//! ```text
+//!  conn threads ──parse──▶ Scheduler (FCFS queue) ──admit──▶ Batcher
+//!       ▲                                                     │
+//!       └───────────── per-conn response channels ◀──retire───┘
+//! ```
+//!
+//! * N acceptor/connection threads parse JSON-line requests
+//!   ([`protocol`]) and push them onto the [`scheduler::Scheduler`]
+//!   queue;
+//! * one engine thread runs the [`batcher::Batcher`] loop: a fixed-width
+//!   step-mode decode batch in which every slot is an independent
+//!   request. Queued requests are admitted into free slots **mid-flight**
+//!   (prefill + KV slot splice), finished slots respond and free
+//!   **immediately**, so a short request is never blocked behind a long
+//!   one (no head-of-line blocking, unlike the old fused-generate drain
+//!   loop that ran every batch to the compiled max length);
+//! * masks are per-slot, so heterogeneous strategies share a batch; a
+//!   request can opt into a periodic **GLASS mask refresh**
+//!   (`refresh_every: R`) that re-runs the global-local rank aggregation
+//!   every R decoded tokens on blended prompt + decaying-average decode
+//!   statistics — the paper's aggregation applied over the generation
+//!   horizon, for the long-form scenarios where prompt-only statistics
+//!   drift.
+//!
+//! # Knobs and trade-offs
+//!
+//! * `batch_width` — decode slot count (must fit a compiled
+//!   `decode_b{W}`). Wider = more throughput under load, slightly more
+//!   per-step work when mostly idle.
+//! * scheduler `batch_window` — how long an idle engine waits for an
+//!   initial burst to form before starting; admission is continuous
+//!   afterwards, so this only shapes cold-start batching (latency ↔
+//!   throughput).
+//! * `refresh_every` (per request) — mask-refresh interval R. Small R
+//!   tracks decode-time importance drift closely at the cost of one
+//!   selection pass (pure host work, µs-scale) per R tokens; 0 keeps
+//!   the prefill-time static mask.
+//!
+//! All executables the loop can touch are warmed at startup —
+//! `prefill_b{n}` for every admission size and the full-width
+//! `decode_b{W}` — so first requests never pay compile latency at any
+//! batch size the scheduler can form.
 
+pub mod batcher;
 pub mod client;
 pub mod protocol;
 pub mod scheduler;
@@ -22,13 +60,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::session::pack_slot_masks;
 use crate::engine::Engine;
-use crate::glass::{build_mask, GlobalPrior, PriorKind, Strategy};
 use crate::info;
 
+use batcher::Batcher;
 use protocol::{Request, Response};
 use scheduler::{Pending, Scheduler};
+
+type Conns = Arc<Mutex<HashMap<u64, Sender<Response>>>>;
 
 /// Server handle: bind address + shutdown flag.
 pub struct Server {
@@ -36,12 +75,6 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     sched: Arc<Scheduler>,
     threads: Vec<std::thread::JoinHandle<()>>,
-}
-
-struct Shared {
-    engine: Engine,
-    priors: HashMap<&'static str, GlobalPrior>,
-    conns: Mutex<HashMap<u64, Sender<Response>>>,
 }
 
 impl Server {
@@ -53,23 +86,12 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?.to_string();
 
-        let mut priors = HashMap::new();
-        for (key, kind) in [
-            ("a-glass", PriorKind::ANps),
-            ("i-glass", PriorKind::INps),
-        ] {
-            priors.insert(key, GlobalPrior::load(&engine.rt, kind)?);
-        }
-        // warm the executables so first requests aren't hit by compiles
-        let b = engine.pick_batch(batch_width.min(4))?;
-        engine.rt.executable(&format!("prefill_b{b}"))?;
-        engine.rt.executable(&format!("generate_b{b}"))?;
+        // build the batcher up front: loads priors and warms every
+        // executable the engine loop can hit (all admission prefill
+        // sizes + the full-width decode step)
+        let mut engine_loop = Batcher::new(engine, batch_width)?;
 
-        let shared = Arc::new(Shared {
-            engine,
-            priors,
-            conns: Mutex::new(HashMap::new()),
-        });
+        let conns: Conns = Arc::new(Mutex::new(HashMap::new()));
         let sched = Arc::new(Scheduler::new(
             batch_width,
             Duration::from_millis(4),
@@ -77,17 +99,22 @@ impl Server {
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // engine loop
+        // engine thread: continuous batching loop
         {
-            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
             let sched = Arc::clone(&sched);
             threads.push(std::thread::spawn(move || {
-                engine_loop(&shared, &sched);
+                let mut sink = |conn_id: u64, resp: Response| {
+                    if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
+                        let _ = tx.send(resp);
+                    }
+                };
+                engine_loop.run(&sched, &mut sink);
             }));
         }
         // acceptor
         {
-            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
             let sched = Arc::clone(&sched);
             let shutdown = Arc::clone(&shutdown);
             threads.push(std::thread::spawn(move || {
@@ -100,11 +127,11 @@ impl Server {
                         Ok((stream, _)) => {
                             let conn_id =
                                 next_conn.fetch_add(1, Ordering::Relaxed);
-                            let shared = Arc::clone(&shared);
+                            let conns = Arc::clone(&conns);
                             let sched = Arc::clone(&sched);
                             std::thread::spawn(move || {
                                 let _ = handle_conn(
-                                    stream, conn_id, &shared, &sched,
+                                    stream, conn_id, &conns, &sched,
                                 );
                             });
                         }
@@ -140,12 +167,12 @@ impl Server {
 fn handle_conn(
     stream: TcpStream,
     conn_id: u64,
-    shared: &Arc<Shared>,
+    conns: &Conns,
     sched: &Arc<Scheduler>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let (tx, rx) = channel::<Response>();
-    shared.conns.lock().unwrap().insert(conn_id, tx);
+    conns.lock().unwrap().insert(conn_id, tx);
     let mut writer = stream.try_clone()?;
     // writer thread: serialize responses back to the client
     let w = std::thread::spawn(move || {
@@ -173,93 +200,13 @@ fn handle_conn(
             }),
             Err(e) => {
                 // protocol error: respond immediately
-                if let Some(tx) =
-                    shared.conns.lock().unwrap().get(&conn_id)
-                {
+                if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
                     let _ = tx.send(Response::err(0, e.to_string()));
                 }
             }
         }
     }
-    shared.conns.lock().unwrap().remove(&conn_id);
+    conns.lock().unwrap().remove(&conn_id);
     let _ = w.join();
     Ok(())
-}
-
-fn engine_loop(shared: &Arc<Shared>, sched: &Arc<Scheduler>) {
-    while let Some(batch) = sched.next_batch() {
-        let responses = match serve_batch(shared, &batch) {
-            Ok(r) => r,
-            Err(e) => batch
-                .iter()
-                .map(|p| Response::err(p.request.id, e.to_string()))
-                .collect(),
-        };
-        let conns = shared.conns.lock().unwrap();
-        for (p, resp) in batch.iter().zip(responses) {
-            if let Some(tx) = conns.get(&p.conn_id) {
-                let _ = tx.send(resp);
-            }
-        }
-    }
-}
-
-/// Run one scheduled batch through the GLASS flow.
-fn serve_batch(shared: &Arc<Shared>, batch: &[Pending]) -> Result<Vec<Response>> {
-    let engine = &shared.engine;
-    let spec = engine.spec().clone();
-    let n = batch.len();
-    let b = engine.pick_batch(n)?;
-    let prompts: Vec<String> =
-        batch.iter().map(|p| p.request.prompt.clone()).collect();
-
-    let t0 = Instant::now();
-    let pre = engine.prefill(&prompts, b)?;
-    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-
-    // per-slot masks from per-request strategies
-    let mut masks = Vec::with_capacity(n);
-    for (slot, p) in batch.iter().enumerate() {
-        let req = &p.request;
-        let local = engine.local_importance(&pre, slot)?;
-        let k = spec.budget(req.density);
-        let (strategy, prior) = match req.strategy.as_str() {
-            "dense" => (Strategy::Dense, None),
-            "griffin" => (Strategy::LocalOnly, None),
-            "global" => (
-                Strategy::GlobalOnly,
-                shared.priors.get("a-glass"),
-            ),
-            "a-glass" => (
-                Strategy::Glass { lambda: req.lambda },
-                shared.priors.get("a-glass"),
-            ),
-            _ => (
-                Strategy::Glass { lambda: req.lambda },
-                shared.priors.get("i-glass"),
-            ),
-        };
-        masks.push(build_mask(&strategy, &local, prior, k)?);
-    }
-    let mask_t = pack_slot_masks(&masks, n, b, &spec);
-
-    let t1 = Instant::now();
-    let gen = engine.generate(&prompts, &mask_t, b)?;
-    let decode_ms = t1.elapsed().as_secs_f64() * 1e3;
-
-    let n_gen = gen.tokens.shape[1];
-    let mut out = Vec::with_capacity(n);
-    for (slot, p) in batch.iter().enumerate() {
-        let want = p.request.max_tokens.min(n_gen);
-        let ids = &gen.tokens.data[slot * n_gen..slot * n_gen + want];
-        out.push(Response::ok(
-            p.request.id,
-            engine.decode_text(ids),
-            want,
-            prefill_ms,
-            decode_ms,
-            masks[slot].density(),
-        ));
-    }
-    Ok(out)
 }

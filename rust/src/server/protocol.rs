@@ -1,25 +1,40 @@
 //! JSON-line wire protocol for the serving layer.
 //!
 //! One JSON object per line in each direction over TCP:
-//!   request:  {"id": 7, "prompt": "...", "strategy": "glass",
-//!              "lambda": 0.5, "density": 0.5, "max_tokens": 64}
+//!   request:  {"id": 7, "prompt": "...", "strategy": "i-glass",
+//!              "lambda": 0.5, "density": 0.5, "max_tokens": 64,
+//!              "refresh_every": 8}
 //!   response: {"id": 7, "text": "...", "tokens": 42,
-//!              "prefill_ms": 1.2, "decode_ms": 30.5, "density": 0.5}
+//!              "prefill_ms": 1.2, "decode_ms": 30.5, "queue_ms": 0.3,
+//!              "density": 0.5, "refreshes": 5, "mask_updates": 2,
+//!              "finish": "length"}
 //!   error:    {"id": 7, "error": "..."}
+//!
+//! `refresh_every` = R re-runs the GLASS mask selection every R decoded
+//! tokens from blended prompt+decode statistics (0 = static prefill
+//! mask). `finish` is "length" (max_tokens / KV window) or "stop"
+//! (special token). `mask_updates` counts refreshes that changed the
+//! kept set — a direct observable for decode-time importance drift.
 
 use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
+/// Strategy names the serving layer accepts.
+pub const STRATEGIES: &[&str] =
+    &["dense", "griffin", "global", "a-glass", "i-glass"];
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub prompt: String,
-    /// "dense" | "griffin" | "global" | "a-glass" | "i-glass"
+    /// One of [`STRATEGIES`].
     pub strategy: String,
     pub lambda: f64,
     pub density: f64,
     pub max_tokens: usize,
+    /// Refresh the GLASS mask every N decoded tokens (0 = never).
+    pub refresh_every: usize,
 }
 
 impl Request {
@@ -31,13 +46,17 @@ impl Request {
                 None => Ok(d),
             }
         };
+        let get_u = |k: &str, d: usize| -> Result<usize> {
+            match j.get(k) {
+                Some(v) => v.as_usize(),
+                None => Ok(d),
+            }
+        };
         let strategy = match j.get("strategy") {
             Some(v) => v.as_str()?.to_string(),
             None => "i-glass".to_string(),
         };
-        if !["dense", "griffin", "global", "a-glass", "i-glass"]
-            .contains(&strategy.as_str())
-        {
+        if !STRATEGIES.contains(&strategy.as_str()) {
             bail!("unknown strategy '{strategy}'");
         }
         Ok(Request {
@@ -46,10 +65,8 @@ impl Request {
             strategy,
             lambda: get_f("lambda", 0.5)?,
             density: get_f("density", 0.5)?,
-            max_tokens: match j.get("max_tokens") {
-                Some(v) => v.as_usize()?,
-                None => 64,
-            },
+            max_tokens: get_u("max_tokens", 64)?,
+            refresh_every: get_u("refresh_every", 0)?,
         })
     }
 
@@ -60,7 +77,8 @@ impl Request {
             .set("strategy", Json::Str(self.strategy.clone()))
             .set("lambda", Json::Num(self.lambda))
             .set("density", Json::Num(self.density))
-            .set("max_tokens", Json::Num(self.max_tokens as f64));
+            .set("max_tokens", Json::Num(self.max_tokens as f64))
+            .set("refresh_every", Json::Num(self.refresh_every as f64));
         o.to_string()
     }
 }
@@ -72,7 +90,14 @@ pub struct Response {
     pub tokens: usize,
     pub prefill_ms: f64,
     pub decode_ms: f64,
+    /// Time spent queued before admission into a batch slot.
+    pub queue_ms: f64,
     pub density: f64,
+    /// Mask refreshes applied / refreshes that changed the kept set.
+    pub refreshes: usize,
+    pub mask_updates: usize,
+    /// "length" | "stop" ("" on errors).
+    pub finish: String,
     pub error: Option<String>,
 }
 
@@ -91,7 +116,11 @@ impl Response {
             tokens,
             prefill_ms,
             decode_ms,
+            queue_ms: 0.0,
             density,
+            refreshes: 0,
+            mask_updates: 0,
+            finish: "length".to_string(),
             error: None,
         }
     }
@@ -103,7 +132,11 @@ impl Response {
             tokens: 0,
             prefill_ms: 0.0,
             decode_ms: 0.0,
+            queue_ms: 0.0,
             density: 1.0,
+            refreshes: 0,
+            mask_updates: 0,
+            finish: String::new(),
             error: Some(msg),
         }
     }
@@ -118,7 +151,11 @@ impl Response {
                 .set("tokens", Json::Num(self.tokens as f64))
                 .set("prefill_ms", Json::Num(self.prefill_ms))
                 .set("decode_ms", Json::Num(self.decode_ms))
-                .set("density", Json::Num(self.density));
+                .set("queue_ms", Json::Num(self.queue_ms))
+                .set("density", Json::Num(self.density))
+                .set("refreshes", Json::Num(self.refreshes as f64))
+                .set("mask_updates", Json::Num(self.mask_updates as f64))
+                .set("finish", Json::Str(self.finish.clone()));
         }
         o.to_string()
     }
@@ -129,13 +166,32 @@ impl Response {
         if let Some(e) = j.get("error") {
             return Ok(Response::err(id, e.as_str()?.to_string()));
         }
+        let get_f = |k: &str, d: f64| -> Result<f64> {
+            match j.get(k) {
+                Some(v) => v.as_f64(),
+                None => Ok(d),
+            }
+        };
+        let get_u = |k: &str, d: usize| -> Result<usize> {
+            match j.get(k) {
+                Some(v) => v.as_usize(),
+                None => Ok(d),
+            }
+        };
         Ok(Response {
             id,
             text: j.req("text")?.as_str()?.to_string(),
             tokens: j.req("tokens")?.as_usize()?,
             prefill_ms: j.req("prefill_ms")?.as_f64()?,
             decode_ms: j.req("decode_ms")?.as_f64()?,
+            queue_ms: get_f("queue_ms", 0.0)?,
             density: j.req("density")?.as_f64()?,
+            refreshes: get_u("refreshes", 0)?,
+            mask_updates: get_u("mask_updates", 0)?,
+            finish: match j.get("finish") {
+                Some(v) => v.as_str()?.to_string(),
+                None => "length".to_string(),
+            },
             error: None,
         })
     }
@@ -154,6 +210,7 @@ mod tests {
             lambda: 0.5,
             density: 0.4,
             max_tokens: 32,
+            refresh_every: 8,
         };
         let r2 = Request::parse(&r.to_line()).unwrap();
         assert_eq!(r, r2);
@@ -165,6 +222,7 @@ mod tests {
         assert_eq!(r.strategy, "i-glass");
         assert_eq!(r.max_tokens, 64);
         assert_eq!(r.density, 0.5);
+        assert_eq!(r.refresh_every, 0, "refresh defaults to off");
     }
 
     #[test]
@@ -177,10 +235,27 @@ mod tests {
 
     #[test]
     fn response_roundtrip_ok_and_err() {
-        let ok = Response::ok(1, "hello".into(), 5, 1.5, 20.0, 0.5);
+        let mut ok = Response::ok(1, "hello".into(), 5, 1.5, 20.0, 0.5);
+        ok.queue_ms = 0.25;
+        ok.refreshes = 3;
+        ok.mask_updates = 1;
+        ok.finish = "stop".into();
         assert_eq!(Response::parse(&ok.to_line()).unwrap(), ok);
         let e = Response::err(2, "boom".into());
         let e2 = Response::parse(&e.to_line()).unwrap();
         assert_eq!(e2.error.as_deref(), Some("boom"));
+        assert_eq!(e2, e);
+    }
+
+    #[test]
+    fn legacy_response_without_new_fields_parses() {
+        let r = Response::parse(
+            r#"{"id":9,"text":"t","tokens":2,"prefill_ms":1.0,
+                "decode_ms":2.0,"density":0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(r.queue_ms, 0.0);
+        assert_eq!(r.refreshes, 0);
+        assert_eq!(r.finish, "length");
     }
 }

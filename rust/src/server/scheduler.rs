@@ -1,11 +1,16 @@
-//! Request scheduler: FCFS queue with greedy batch formation.
+//! Request scheduler: FCFS queue feeding the continuous batcher.
 //!
-//! Requests accumulate in a queue; the engine loop drains up to the
-//! compiled batch width each cycle (waiting up to `batch_window` for
-//! more work to arrive once at least one request is pending). Static
-//! masks mean a request's sparsity pattern is fixed at prefill — slots
-//! in the same generate call can carry different masks, so heterogeneous
-//! strategies batch together (the [B, L, m] mask tensor is per-slot).
+//! Two consumption modes:
+//!  * [`Scheduler::next_batch`] — blocking greedy batch formation
+//!    (waits up to `batch_window` for the batch to fill once one
+//!    request is pending). The batcher uses it only when idle, so an
+//!    initial burst is admitted together.
+//!  * [`Scheduler::take`] — non-blocking drain of up to N requests,
+//!    polled every decode step to admit work into free slots
+//!    *mid-flight* while other slots keep decoding.
+//!
+//! Slots in the same decode call carry per-slot masks (the [B, L, m]
+//! mask tensor), so heterogeneous strategies batch together.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -95,6 +100,18 @@ impl Scheduler {
         let n = st.queue.len().min(self.batch_width);
         Some(st.queue.drain(..n).collect())
     }
+
+    /// Non-blocking FCFS drain of up to `max` pending requests — the
+    /// continuous batcher's mid-flight admission path.
+    pub fn take(&self, max: usize) -> Vec<Pending> {
+        let mut st = self.state.lock().unwrap();
+        let n = st.queue.len().min(max);
+        st.queue.drain(..n).collect()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +128,7 @@ mod tests {
                 lambda: 0.5,
                 density: 0.5,
                 max_tokens: 4,
+                refresh_every: 0,
             },
             arrived: Instant::now(),
             conn_id: id,
@@ -155,13 +173,74 @@ mod tests {
 
     #[test]
     fn window_fills_batch() {
-        let s = Arc::new(Scheduler::new(2, Duration::from_millis(200)));
-        let s2 = Arc::clone(&s);
+        // Deterministic (submit-before-drain): both requests are queued
+        // before next_batch runs, so the fill loop must gather both no
+        // matter how the scheduler thread is timed. The old version
+        // raced a 30 ms sleep against the window and flaked under load.
+        let s = Scheduler::new(2, Duration::from_millis(200));
         s.submit(req(0));
-        let h = std::thread::spawn(move || s2.next_batch());
-        std::thread::sleep(Duration::from_millis(30));
         s.submit(req(1));
-        let b = h.join().unwrap().unwrap();
-        assert_eq!(b.len(), 2, "window should have gathered both");
+        let t0 = Instant::now();
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.len(), 2, "full batch forms from queued work");
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "a full batch must not wait out the window"
+        );
+    }
+
+    #[test]
+    fn window_times_out_on_partial_batch() {
+        // One queued request + a tiny window: next_batch returns the
+        // partial batch after the window, without external signals.
+        let s = Scheduler::new(4, Duration::from_millis(5));
+        s.submit(req(0));
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn take_is_nonblocking_fcfs() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        assert!(s.take(3).is_empty(), "empty queue → empty, no block");
+        for i in 0..5 {
+            s.submit(req(i));
+        }
+        let a = s.take(2);
+        assert_eq!(
+            a.iter().map(|p| p.request.id).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        let b = s.take(10);
+        assert_eq!(
+            b.iter().map(|p| p.request.id).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn take_zero_and_closed_flag() {
+        let s = Scheduler::new(2, Duration::from_millis(1));
+        s.submit(req(0));
+        assert!(s.take(0).is_empty());
+        assert_eq!(s.len(), 1);
+        assert!(!s.is_closed());
+        s.close();
+        assert!(s.is_closed());
+        // closed but non-empty: queued work still drains
+        assert_eq!(s.take(5).len(), 1);
+    }
+
+    #[test]
+    fn next_batch_drains_queued_work_after_close() {
+        let s = Scheduler::new(2, Duration::from_millis(1));
+        for i in 0..3 {
+            s.submit(req(i));
+        }
+        s.close();
+        assert_eq!(s.next_batch().unwrap().len(), 2);
+        assert_eq!(s.next_batch().unwrap().len(), 1);
+        assert!(s.next_batch().is_none());
     }
 }

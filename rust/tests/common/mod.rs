@@ -1,36 +1,47 @@
-//! Shared helpers for integration tests. All of these need the artifact
-//! bundle (`make artifacts`) — they exercise the real AOT executables.
+//! Shared helpers for integration tests.
+//!
+//! When an artifact bundle is available (GLASS_ARTIFACTS env var, or an
+//! `artifacts/` directory with a manifest), the tests exercise the real
+//! AOT executables. Otherwise they run on the deterministic simulator
+//! backend (`Engine::synthetic`), which implements the same executable
+//! contract — so the suite is green offline and in CI.
 
 use std::path::PathBuf;
 use std::sync::{Mutex, OnceLock};
 
 use glass::engine::Engine;
 
-pub fn artifacts_dir() -> PathBuf {
+pub fn artifacts_dir() -> Option<PathBuf> {
     let dir = std::env::var("GLASS_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".to_string());
     let p = PathBuf::from(dir);
-    assert!(
-        p.join("manifest.json").exists(),
-        "artifact bundle missing at {:?} — run `make artifacts` first",
-        p
-    );
-    p
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        None
+    }
 }
 
-/// One engine per test binary (PJRT client + weight upload is ~100 ms;
+/// One engine per test binary (client setup + weight upload is ~100 ms;
 /// executables compile lazily and are cached inside).
 pub fn engine() -> Engine {
     static ENGINE: OnceLock<Mutex<Engine>> = OnceLock::new();
     ENGINE
         .get_or_init(|| {
-            Mutex::new(Engine::load(&artifacts_dir()).expect("load engine"))
+            let engine = match artifacts_dir() {
+                Some(dir) => {
+                    Engine::load(&dir).expect("load engine from artifacts")
+                }
+                None => Engine::synthetic(),
+            };
+            Mutex::new(engine)
         })
         .lock()
         .unwrap()
         .clone()
 }
 
+#[allow(dead_code)]
 pub fn sample_prompts(n: usize) -> Vec<String> {
     let base = [
         "once there was a red fox",

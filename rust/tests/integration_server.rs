@@ -1,15 +1,62 @@
-//! Serving-layer integration: real TCP server + client over the engine.
+//! Serving-layer integration: the continuous batcher driven directly
+//! (deterministic, no timing races) plus real TCP server + client runs.
 
 mod common;
 
+use std::time::Instant;
+
+use glass::server::batcher::Batcher;
 use glass::server::client::{request, Client};
-use glass::server::protocol::Request;
+use glass::server::protocol::{Request, Response};
+use glass::server::scheduler::Pending;
 use glass::server::Server;
 
 fn start_server() -> Server {
     let engine = common::engine();
     Server::start(engine, "127.0.0.1:0", 4).expect("start server")
 }
+
+fn pending(
+    conn_id: u64,
+    prompt: &str,
+    strategy: &str,
+    max_tokens: usize,
+    refresh_every: usize,
+) -> Pending {
+    Pending {
+        request: Request {
+            id: conn_id,
+            prompt: prompt.into(),
+            strategy: strategy.into(),
+            lambda: 0.5,
+            density: 0.5,
+            max_tokens,
+            refresh_every,
+        },
+        arrived: Instant::now(),
+        conn_id,
+    }
+}
+
+/// Drive the batcher until `n` responses arrive (bounded step budget).
+fn drive(
+    batcher: &mut Batcher,
+    done: &mut Vec<(u64, Response)>,
+    n: usize,
+) {
+    let mut out = std::mem::take(done);
+    for _ in 0..512 {
+        if out.len() >= n {
+            break;
+        }
+        batcher
+            .step(&mut |c, r| out.push((c, r)))
+            .expect("decode step");
+    }
+    *done = out;
+}
+
+// ------------------------------------------------------ TCP-level tests
 
 #[test]
 fn serves_all_strategies() {
@@ -22,6 +69,7 @@ fn serves_all_strategies() {
         assert!(resp.error.is_none(), "{strategy}: {:?}", resp.error);
         assert!(resp.tokens > 0);
         assert!(!resp.text.is_empty(), "{strategy} returned empty text");
+        assert!(!resp.finish.is_empty(), "{strategy} missing finish reason");
         if strategy == "dense" {
             assert!((resp.density - 1.0).abs() < 1e-9);
         } else {
@@ -51,6 +99,7 @@ fn batches_concurrent_requests() {
     for (resp, _latency) in &out {
         assert!(resp.error.is_none());
         assert_eq!(resp.tokens, 16);
+        assert_eq!(resp.finish, "length");
     }
     server.stop();
 }
@@ -100,4 +149,147 @@ fn dense_and_sparse_agree_on_prefix_sometimes() {
         s.text
     );
     server.stop();
+}
+
+// --------------------------------------- continuous-batching semantics
+//
+// These drive the Batcher synchronously (admit/step), so admission
+// ordering, early exit, and refresh behavior are asserted without any
+// sleeps or cross-thread timing.
+
+#[test]
+fn short_request_overtakes_long_one_mid_flight() {
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+
+    // long request starts decoding alone
+    batcher.admit(
+        vec![pending(1, "once there was a red fox", "i-glass", 24, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    assert_eq!(batcher.active(), 1);
+    for _ in 0..5 {
+        batcher.step(&mut |c, r| done.push((c, r))).unwrap();
+    }
+    assert!(done.is_empty(), "long request must still be decoding");
+
+    // short request admitted mid-flight into a free slot
+    batcher.admit(
+        vec![pending(2, "the blue owl is", "i-glass", 3, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    assert_eq!(batcher.active(), 2, "admitted while slot 0 in flight");
+
+    drive(&mut batcher, &mut done, 2);
+    assert_eq!(done.len(), 2, "both requests must complete");
+    // the short request finishes (and its response is delivered) FIRST,
+    // while the long one is still decoding — no head-of-line blocking
+    assert_eq!(done[0].0, 2, "short request delivered first");
+    assert_eq!(done[1].0, 1);
+    let short = &done[0].1;
+    let long = &done[1].1;
+    assert!(short.error.is_none() && long.error.is_none());
+    assert_eq!(short.tokens, 3);
+    assert_eq!(long.tokens, 24);
+    assert_eq!(batcher.active(), 0, "slots freed after completion");
+}
+
+#[test]
+fn mask_refresh_changes_masks_after_r_steps() {
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+
+    // refresh every 4 decoded tokens; control request with refresh off
+    batcher.admit(
+        vec![
+            pending(1, "the blue owl is", "griffin", 16, 4),
+            pending(2, "the blue owl is", "i-glass", 16, 4),
+            pending(3, "the blue owl is", "griffin", 16, 0),
+        ],
+        &mut |c, r| done.push((c, r)),
+    );
+    drive(&mut batcher, &mut done, 3);
+    assert_eq!(done.len(), 3);
+
+    let by_conn = |c: u64| {
+        &done.iter().find(|(cc, _)| *cc == c).unwrap().1
+    };
+    for c in [1, 2] {
+        let r = by_conn(c);
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(
+            r.refreshes, 3,
+            "16 tokens / R=4 → refreshes at 4, 8, 12"
+        );
+        assert!(
+            r.mask_updates >= 1,
+            "conn {c}: decode-time statistics drift must change the \
+             mask vs. its prefill-time selection (got {} updates)",
+            r.mask_updates
+        );
+        assert!((r.density - 0.5).abs() < 0.02, "budget preserved");
+    }
+    let control = by_conn(3);
+    assert_eq!(control.refreshes, 0);
+    assert_eq!(control.mask_updates, 0, "refresh off → static mask");
+}
+
+#[test]
+fn unknown_strategy_rejected_by_engine_path() {
+    // bypasses protocol validation to hit the serve-path guard that
+    // used to silently fall through to i-GLASS
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    batcher.admit(
+        vec![
+            pending(7, "hello", "not-a-strategy", 8, 0),
+            pending(8, "hello", "dense", 2, 0),
+        ],
+        &mut |c, r| done.push((c, r)),
+    );
+    // the invalid request errors immediately, before any decode step
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].0, 7);
+    let err = done[0].1.error.as_deref().unwrap_or("");
+    assert!(
+        err.contains("unknown strategy"),
+        "expected strategy rejection, got {err:?}"
+    );
+    // the valid companion request still serves normally
+    drive(&mut batcher, &mut done, 2);
+    assert_eq!(done.len(), 2);
+    assert!(done[1].1.error.is_none());
+    assert_eq!(done[1].1.tokens, 2);
+}
+
+#[test]
+fn stop_state_and_kv_window_bound_generation() {
+    // a request asking for more tokens than the KV window can hold
+    // finishes with reason "length" at the window edge instead of
+    // running forever or overflowing positions
+    let engine = common::engine();
+    let max_seq = engine.spec().max_seq;
+    let prompt = "the grey cat is quiet and";
+    // prompt occupies len+BOS positions; the final step may emit one
+    // last token from the last in-window logits
+    let capacity = max_seq - (prompt.len() + 1) + 1;
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    batcher.admit(
+        vec![pending(1, prompt, "dense", 10_000, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    drive(&mut batcher, &mut done, 1);
+    assert_eq!(done.len(), 1, "window-bounded request must finish");
+    let r = &done[0].1;
+    assert!(r.error.is_none());
+    assert_eq!(r.finish, "length");
+    assert!(
+        r.tokens <= capacity,
+        "{} tokens exceeds KV capacity {capacity}",
+        r.tokens
+    );
 }

@@ -1,0 +1,219 @@
+//! Offline vendored subset of the `anyhow` API.
+//!
+//! The build image has no crates.io access, so this path crate provides
+//! the slice of anyhow the workspace actually uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`. Error values
+//! carry a context chain; `{}` prints the outermost message and `{:#}`
+//! prints the whole chain, matching upstream formatting closely enough
+//! for the CLI and tests.
+
+use std::fmt;
+
+/// A string-backed error with a context chain. `chain[0]` is the
+/// outermost (most recently attached) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Attach an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        for cause in self.chain.iter().skip(1) {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Like upstream anyhow, `Error` deliberately does NOT implement
+/// `std::error::Error`; that is what makes the blanket `From` below and
+/// the dual `Context` impls coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::msg(err)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// ------------------------------------------------------------- Context
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Mirror of upstream's private ext trait: "anything that can become an
+/// [`Error`] while absorbing a context message". Implemented for real
+/// `std::error::Error` types and for [`Error`] itself — coherent because
+/// `Error` is local and never implements `std::error::Error`.
+pub trait ToError {
+    fn into_error(self) -> Error;
+}
+
+impl<E> ToError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::msg(self)
+    }
+}
+
+impl ToError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+pub trait Context<T, E>: private::Sealed {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: ToError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+// -------------------------------------------------------------- macros
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/glass-vendor-test")?;
+        Ok(())
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chain_and_alternate_format() {
+        let e: Result<()> = Err(anyhow!("root {}", 7));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+        assert_eq!(e.root_cause(), "root 7");
+    }
+
+    #[test]
+    fn with_context_on_result_and_option() {
+        let r: Result<(), Error> = Err(anyhow!("inner"));
+        let e = r.with_context(|| format!("ctx {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx 1: inner");
+        let o: Option<u32> = None;
+        assert!(o.context("missing").is_err());
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        if x < 0 {
+            bail!("negative: {x}");
+        }
+        ensure!(x != 3, "three is right out");
+        Ok(x)
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(bails(1).unwrap(), 1);
+        assert_eq!(bails(-2).unwrap_err().to_string(), "negative: -2");
+        assert!(bails(3).is_err());
+    }
+}

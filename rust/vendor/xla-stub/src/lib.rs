@@ -1,0 +1,91 @@
+//! Compile-time stub of the `xla` (xla-rs) API surface the glass PJRT
+//! backend uses. It keeps the `--features pjrt` build type-checking in
+//! environments without the xla_extension C++ toolchain; every entry
+//! point fails at runtime with a clear message. To run real HLO
+//! artifacts, replace the `xla` path dependency in rust/Cargo.toml with
+//! an actual xla-rs checkout (API v0.1.x / xla_extension 0.5.1).
+
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "xla stub: {what} unavailable — this build vendors a compile-time \
+         stub of xla-rs; link a real xla_extension to use the PJRT backend"
+    )))
+}
+
+/// Marker for element types PJRT buffers can hold.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for i32 {}
+
+pub struct PjRtClient;
+pub struct PjRtBuffer;
+pub struct PjRtLoadedExecutable;
+pub struct HloModuleProto;
+pub struct XlaComputation;
+pub struct Literal;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("buffer_from_host_buffer")
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("compile")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execute_b")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("to_literal_sync")
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
