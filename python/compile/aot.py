@@ -36,6 +36,7 @@ from .model import (
     apply_decode_topk,
     apply_generate,
     apply_prefill,
+    apply_prefill_chunk,
     apply_score,
     flatten_params,
     param_spec,
@@ -78,6 +79,14 @@ def build_executables(cfg: ModelConfig):
             lambda p, t, ln: apply_prefill(cfg, p, t, ln),
             [_spec((b, S), jnp.int32), _spec((b,), jnp.int32)],
             ["tokens", "lens"],
+            ["logits", "k", "v", "stats"],
+        )
+        exes[f"prefill_chunk_b{b}"] = (
+            lambda p, t, ln, off, k, v: apply_prefill_chunk(cfg, p, t, ln,
+                                                            off, k, v),
+            [_spec((b, S), jnp.int32), _spec((b,), jnp.int32),
+             _spec((b,), jnp.int32), kv, kv],
+            ["tokens", "lens", "offsets", "k", "v"],
             ["logits", "k", "v", "stats"],
         )
         exes[f"decode_b{b}"] = (

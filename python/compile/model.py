@@ -245,6 +245,100 @@ def apply_prefill(cfg: ModelConfig, params, tokens, lens):
     return last, k, v, stats
 
 
+# --------------------------------------------------------- chunked prefill
+
+
+def _chunk_causal_mask(cfg, pos_q):
+    """[B,1,S,T] additive mask over CACHE key positions: key t is
+    attendable iff t <= the query's absolute position (earlier chunks'
+    rows are all < offset, so they are covered automatically)."""
+    tpos = jnp.arange(cfg.max_seq)
+    ok = tpos[None, None, None, :] <= pos_q[:, None, :, None]
+    return jnp.where(ok, 0.0, -1e9).astype(jnp.float32)
+
+
+def _layer_prefill_chunk(cfg: ModelConfig, x, lw, kc, vc, pos_q, valid,
+                         attn_mask):
+    """One layer over a prompt chunk with a carry-in KV cache.
+
+    x: [B,S,d]; kc/vc: [B,H,T,Dh] (cache; this chunk's rows scattered
+    in at absolute positions); pos_q: [B,S] absolute positions;
+    valid: [B,S] 0/1 chunk-token validity; attn_mask: [B,1,S,T].
+    Returns (x', kc', vc', hh[B,S,m]).
+    """
+    b, s, _ = x.shape
+    xin = rmsnorm(x, lw["ln1"])
+    q = _split_heads(cfg, xin @ lw["wq"])
+    k = _split_heads(cfg, xin @ lw["wk"])
+    v = _split_heads(cfg, xin @ lw["wv"])
+    cos, sin = _rope_angles(cfg, pos_q)  # [B, S, Dh/2]
+    cos, sin = cos[:, None], sin[:, None]  # [B, 1, S, Dh/2]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # scatter ONLY the chunk's valid rows into the cache (pad rows are
+    # never written — the host contract mirrored by the simulator)
+    oh = jax.nn.one_hot(pos_q, cfg.max_seq, dtype=jnp.float32)
+    oh = oh * valid[:, :, None]  # [B,S,T]
+    written = oh.sum(1)  # [B,T]
+    keep = (1.0 - written)[:, None, :, None]
+    kc = kc * keep + jnp.einsum("bst,bhsd->bhtd", oh, k)
+    vc = vc * keep + jnp.einsum("bst,bhsd->bhtd", oh, v)
+
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, kc) * (cfg.head_dim**-0.5)
+    scores = scores + attn_mask
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", att, vc)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+    x = x + out @ lw["wo"]
+
+    xin2 = rmsnorm(x, lw["ln2"])
+    h = (xin2 @ lw["w_up"]) * jax.nn.silu(xin2 @ lw["w_gate"])
+    x = x + h @ lw["w_down"]
+    return x, kc, vc, hhat(h)
+
+
+def apply_prefill_chunk(cfg: ModelConfig, params, tokens, lens, offsets,
+                        k, v):
+    """One chunk of a chunked prefill (long prompts over the fixed frame).
+
+    tokens: [B,S] (PAD beyond lens), lens: [B] valid tokens in THIS
+    chunk (0 = idle slot), offsets: [B] absolute position of the chunk's
+    first token, k/v: [L,B,H,T,Dh] carry-in cache holding the previous
+    chunks' rows.
+
+    Returns (logits[B,V] at the chunk's last valid position,
+             k'/v' with this chunk's rows appended at offset..offset+len,
+             stats[B,L,m] mean hhat over THIS chunk's valid tokens —
+             the host merges chunks token-count-weighted into the same
+             A^l a monolithic prefill would emit).
+    """
+    b, s = tokens.shape
+    pos_q = offsets[:, None] + jnp.arange(s)[None, :]  # [B,S] absolute
+    valid = (jnp.arange(s)[None, :] < lens[:, None]).astype(jnp.float32)
+    amask = _chunk_causal_mask(cfg, pos_q)
+    stats_w = valid / jnp.maximum(
+        lens[:, None].astype(jnp.float32), 1.0
+    )
+    x = params["embed"][tokens]
+
+    def body(x, lw_kv):
+        lw, kc, vc = lw_kv
+        x, kc, vc, hh = _layer_prefill_chunk(
+            cfg, x, lw, kc, vc, pos_q, valid, amask
+        )
+        stats = jnp.einsum("bs,bsm->bm", stats_w, hh)
+        return x, (kc, vc, stats)
+
+    x, (k, v, stats) = jax.lax.scan(body, x, (params["layers"], k, v))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"]  # [B,S,V]
+    last = jnp.take_along_axis(
+        logits, jnp.maximum(lens - 1, 0)[:, None, None], 1
+    )[:, 0]
+    return last, k, v, jnp.swapaxes(stats, 0, 1)  # stats -> [B,L,m]
+
+
 # ----------------------------------------------------------------- score
 
 

@@ -44,8 +44,8 @@ def test_params_bin_roundtrip(tiny_cfg, tiny_params, tmp_path):
 def test_build_executables_cover_contract(tiny_cfg):
     exes = build_executables(tiny_cfg)
     for b in (1, 4):
-        for kind in ["prefill", "decode", "decode_topk", "score",
-                     "generate"]:
+        for kind in ["prefill", "prefill_chunk", "decode", "decode_topk",
+                     "score", "generate"]:
             assert f"{kind}_b{b}" in exes
 
 

@@ -10,6 +10,7 @@ from compile.model import (
     apply_decode_topk,
     apply_generate,
     apply_prefill,
+    apply_prefill_chunk,
     apply_score,
     causal_mask,
     hhat,
@@ -67,6 +68,77 @@ def test_prefill_then_decode_matches_longer_prefill(tiny_cfg, tiny_params,
     _, k, v, _ = apply_prefill(cfg, params, toks, lens)
     nxt = toks[:, n]
     logits_step, _, _, _ = apply_decode(cfg, params, nxt, lens, k, v,
+                                        _ones_mask(cfg, b))
+    logits_full, _, _, _ = apply_prefill(cfg, params, toks,
+                                         jnp.full((b,), n + 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_step),
+                               np.asarray(logits_full), atol=ATOL)
+
+
+def test_prefill_chunk_matches_monolithic(tiny_cfg, tiny_params, rng):
+    """Chunked prefill contract: feeding a prompt in two chunks with
+    carry-in KV must reproduce the monolithic prefill — same valid KV
+    rows, same final logits, and token-count-weighted chunk statistics
+    that merge into the monolithic A^l."""
+    cfg, params = tiny_cfg, tiny_params
+    b, s = 2, cfg.prefill_len
+    n, split = 14, 8
+    toks = rand_tokens(cfg, b, s, rng)
+    lens = jnp.full((b,), n, jnp.int32)
+    logits_m, k_m, v_m, stats_m = apply_prefill(cfg, params, toks, lens)
+
+    kv_shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    k = jnp.zeros(kv_shape, jnp.float32)
+    v = jnp.zeros(kv_shape, jnp.float32)
+    frame1 = np.full((b, s), cfg.pad_id, np.int32)
+    frame1[:, :split] = np.asarray(toks)[:, :split]
+    _, k, v, stats1 = apply_prefill_chunk(
+        cfg, params, jnp.asarray(frame1),
+        jnp.full((b,), split, jnp.int32),
+        jnp.zeros((b,), jnp.int32), k, v)
+    frame2 = np.full((b, s), cfg.pad_id, np.int32)
+    frame2[:, :n - split] = np.asarray(toks)[:, split:n]
+    logits_c, k, v, stats2 = apply_prefill_chunk(
+        cfg, params, jnp.asarray(frame2),
+        jnp.full((b,), n - split, jnp.int32),
+        jnp.full((b,), split, jnp.int32), k, v)
+
+    np.testing.assert_allclose(np.asarray(logits_c),
+                               np.asarray(logits_m), atol=ATOL)
+    merged = (split * np.asarray(stats1)
+              + (n - split) * np.asarray(stats2)) / n
+    np.testing.assert_allclose(merged, np.asarray(stats_m), atol=ATOL)
+    np.testing.assert_allclose(np.asarray(k)[:, :, :, :n],
+                               np.asarray(k_m)[:, :, :, :n], atol=ATOL)
+    np.testing.assert_allclose(np.asarray(v)[:, :, :, :n],
+                               np.asarray(v_m)[:, :, :, :n], atol=ATOL)
+
+
+def test_prefill_chunk_then_decode_continues_the_sequence(tiny_cfg,
+                                                          tiny_params, rng):
+    """After a chunked prefill, a decode step at the prompt end must match
+    the logits of a longer monolithic prefill — KV offsets line up."""
+    cfg, params = tiny_cfg, tiny_params
+    b, s = 2, cfg.prefill_len
+    n, split = 10, 6
+    toks = rand_tokens(cfg, b, s, rng)
+    kv_shape = (cfg.n_layers, b, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    k = jnp.zeros(kv_shape, jnp.float32)
+    v = jnp.zeros(kv_shape, jnp.float32)
+    frame1 = np.full((b, s), cfg.pad_id, np.int32)
+    frame1[:, :split] = np.asarray(toks)[:, :split]
+    _, k, v, _ = apply_prefill_chunk(
+        cfg, params, jnp.asarray(frame1),
+        jnp.full((b,), split, jnp.int32),
+        jnp.zeros((b,), jnp.int32), k, v)
+    frame2 = np.full((b, s), cfg.pad_id, np.int32)
+    frame2[:, :n - split] = np.asarray(toks)[:, split:n]
+    _, k, v, _ = apply_prefill_chunk(
+        cfg, params, jnp.asarray(frame2),
+        jnp.full((b,), n - split, jnp.int32),
+        jnp.full((b,), split, jnp.int32), k, v)
+    lens = jnp.full((b,), n, jnp.int32)
+    logits_step, _, _, _ = apply_decode(cfg, params, toks[:, n], lens, k, v,
                                         _ones_mask(cfg, b))
     logits_full, _, _, _ = apply_prefill(cfg, params, toks,
                                          jnp.full((b,), n + 1, jnp.int32))

@@ -1,13 +1,18 @@
 //! Decode-path benchmarks (§4.5 runtime claims on this host):
 //! prefill, step decode (dense / masked / top-k gathered), the fused
 //! generator, the teacher-forced scorer, and the serving-layer
-//! continuous batcher (step-mode with mid-flight admission).
+//! continuous batcher (step-mode with mid-flight admission + chunked
+//! long-prompt admission).
 //!
-//!     cargo bench --bench bench_decode
+//!     cargo bench --bench bench_decode             # full run
+//!     cargo bench --bench bench_decode -- --smoke  # CI smoke (tiny
+//!                                                  # counts, ~seconds)
 //!
 //! Results land in BENCH_decode.json next to the bench's working
-//! directory, including the fused-vs-step speedup and the continuous
-//! batcher's tokens/s.
+//! directory, including the fused-vs-step speedup, the continuous
+//! batcher's tokens/s, and the mixed long+short workload's
+//! stall-removal evidence (decode steps overlapped with prefill
+//! streaming).
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -22,11 +27,20 @@ use glass::util::bench::Bencher;
 use glass::util::json::Json;
 
 fn main() {
+    // --smoke: run every row at minimal iteration counts so CI can keep
+    // the bench code compiling AND executing without a multi-minute job
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let engine = Engine::load_or_synthetic(Path::new("artifacts"))
         .expect("load engine");
     let spec = engine.spec().clone();
     let mut b = Bencher::default();
     b.budget_s = 2.0;
+    if smoke {
+        b.warmup_iters = 1;
+        b.min_iters = 1;
+        b.max_iters = 2;
+        b.budget_s = 0.01;
+    }
 
     let prompts: Vec<String> = vec![
         "once there was a red fox".into(),
@@ -112,7 +126,7 @@ fn main() {
     // 16 requests through the serving engine loop: step-mode decode,
     // mid-flight admission, immediate retirement. Tokens per iteration =
     // 16 × gen_len, directly comparable with the fused rows above.
-    let n_reqs = 16usize;
+    let n_reqs = if smoke { 4usize } else { 16usize };
     let max_tokens = spec.gen_len;
     let submit_all = |sched: &Scheduler, refresh_every: usize| {
         for i in 0..n_reqs {
@@ -165,6 +179,74 @@ fn main() {
             served
         },
     );
+
+    // ------------------------- mixed long+short workload (chunked admit)
+    // every 4th request carries a multi-chunk prompt (≥ 3 prefill
+    // frames) admitted next to short in-flight requests; the batcher
+    // must keep the short slots decoding while the long prompt streams
+    // in. `overlap_steps` counts decode steps that ran concurrently
+    // with prefill streaming — the measured stall-removal evidence.
+    // Skipped (not failed) on bundles without the prefill_chunk
+    // executable or whose KV window cannot hold a 3-frame prompt.
+    let long_prompt =
+        "the quick grey cat naps ".repeat(3 * spec.prefill_len / 24 + 1);
+    let chunking = engine.rt.manifest.exe("prefill_chunk_b1").is_ok();
+    let long_fits = long_prompt.len() + 1 >= 3 * spec.prefill_len
+        && long_prompt.len() + 1 + max_tokens <= spec.max_seq;
+    if !(chunking && long_fits) {
+        println!(
+            "skipping mixed long+short row (prefill_chunk available: \
+             {chunking}, 3-frame prompt fits window: {long_fits})"
+        );
+    }
+    let submit_mixed = |sched: &Scheduler| {
+        for i in 0..n_reqs {
+            let prompt = if i % 4 == 3 {
+                long_prompt.clone()
+            } else {
+                prompts[i % prompts.len()].clone()
+            };
+            sched.submit(Pending {
+                request: Request {
+                    id: i as u64 + 1,
+                    prompt,
+                    strategy: "i-glass".into(),
+                    lambda: 0.5,
+                    density: 0.5,
+                    max_tokens,
+                    refresh_every: 0,
+                },
+                arrived: Instant::now(),
+                conn_id: i as u64,
+            });
+        }
+        sched.close();
+    };
+    if chunking && long_fits {
+        b.bench(
+            "mixed long+short serve (chunked admission)",
+            (n_reqs * max_tokens) as f64,
+            || {
+                let sched = Scheduler::new(4, Duration::from_millis(1));
+                submit_mixed(&sched);
+                let mut served = 0usize;
+                batcher.run(&sched, &mut |_, resp| {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    served += resp.tokens;
+                });
+                served
+            },
+        );
+        println!(
+            "chunked admission: {} prefill chunks streamed, {} decode \
+             steps ran during streaming (stall-free overlap)",
+            batcher.chunks, batcher.overlap_steps
+        );
+        assert!(
+            batcher.overlap_steps > 0,
+            "in-flight decode stalled during chunked prefill"
+        );
+    }
 
     println!("\n{}", b.report());
     // headline comparisons for EXPERIMENTS.md §Perf — rows looked up by
@@ -223,6 +305,15 @@ fn main() {
         "fused_b4_toks_per_s",
         Json::Num(fused_b4.throughput()),
     );
+    if chunking && long_fits {
+        let mixed = row("mixed long+short serve");
+        doc.set("mixed_toks_per_s", Json::Num(mixed.throughput()));
+        doc.set("prefill_chunks", Json::Num(batcher.chunks as f64));
+        doc.set(
+            "decode_steps_during_prefill",
+            Json::Num(batcher.overlap_steps as f64),
+        );
+    }
     let path = Path::new("BENCH_decode.json");
     doc.write_file(path).expect("write BENCH_decode.json");
     println!("wrote {}", path.display());

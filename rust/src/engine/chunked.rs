@@ -1,0 +1,317 @@
+//! Chunked prefill: long-prompt support over the fixed prefill frame.
+//!
+//! The compiled prefill executable consumes at most `prefill_len` tokens
+//! per call, so prompts used to be silently tail-truncated at admission.
+//! Instead, [`ChunkedPrefill`] streams a prompt of any length (up to the
+//! `max_seq` KV window) through `prefill_len`-sized chunks of the
+//! `prefill_chunk` executable: each chunk carries the KV cache in at a
+//! sequence offset and appends its rows in place, and emits *per-chunk*
+//! local statistics that the host merges token-count-weighted via
+//! [`ImportanceMap::merge`] — reproducing exactly the statistics a
+//! monolithic prefill over the whole prompt would produce (bit-identical
+//! when the prompt fits one frame; see the integration equivalence
+//! tests).
+//!
+//! The API is deliberately incremental — one executable call per
+//! [`Engine::chunked_prefill_step`] — so the continuous batcher can
+//! interleave a newcomer's prefill chunks between decode steps (a
+//! per-step admission budget) instead of stalling every in-flight slot
+//! for the whole prompt. [`Engine::prefill_chunked`] drives the loop to
+//! completion for batch callers (tests, harnesses, benches).
+
+use anyhow::{bail, Result};
+
+use super::{Engine, KvState, PrefillResult};
+use crate::glass::ImportanceMap;
+use crate::tensor::{TensorF, TensorI};
+
+/// In-flight state of one request's chunked prefill (batch width 1).
+#[derive(Debug, Clone)]
+pub struct ChunkedPrefill {
+    /// Full encoded prompt (BOS + bytes) — never truncated.
+    tokens: Vec<i32>,
+    /// Frame fill per chunk (≤ `prefill_len`; tests shrink it to check
+    /// partition invariance).
+    chunk_len: usize,
+    /// Tokens consumed so far == the next chunk's absolute offset.
+    consumed: usize,
+    /// KV cache being filled (batch width 1, `max_seq` positions).
+    pub kv: KvState,
+    /// Token-count-weighted merge of per-chunk local statistics A^l.
+    merged: ImportanceMap,
+    /// Evidence mass (token count) behind `merged`.
+    merged_weight: f64,
+    /// Next-token logits at the last consumed position ([vocab]).
+    logits: Vec<f32>,
+    /// Chunk executable calls made so far.
+    pub chunks_done: usize,
+}
+
+impl ChunkedPrefill {
+    /// Total prompt length in tokens (incl. BOS).
+    pub fn total_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Tokens consumed so far.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Prompt tokens not yet prefilled.
+    pub fn remaining(&self) -> usize {
+        self.tokens.len() - self.consumed
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.consumed >= self.tokens.len()
+    }
+
+    /// Merged local importance over all consumed chunks.
+    pub fn local_importance(&self) -> &ImportanceMap {
+        &self.merged
+    }
+
+    /// Assemble the finished stream into a one-slot [`PrefillResult`] —
+    /// the same shape a monolithic `prefill` call returns, so mask
+    /// selection and [`DecodeSession::from_prefill`] work unchanged.
+    ///
+    /// [`DecodeSession::from_prefill`]: super::session::DecodeSession::from_prefill
+    pub fn result(&self) -> Result<PrefillResult> {
+        if !self.is_done() {
+            bail!(
+                "chunked prefill still has {} of {} tokens pending",
+                self.remaining(),
+                self.total_len()
+            );
+        }
+        Ok(PrefillResult {
+            logits: TensorF::new(
+                vec![1, self.logits.len()],
+                self.logits.clone(),
+            )?,
+            kv: self.kv.clone(),
+            stats: self.merged.to_stats_tensor(),
+            lens: vec![self.tokens.len()],
+            truncated: vec![false],
+        })
+    }
+
+    /// Consuming variant of [`ChunkedPrefill::result`] that moves the
+    /// KV cache out instead of cloning it (megabytes per request at
+    /// real model scale) — the batcher's admission path.
+    pub fn into_result(self) -> Result<PrefillResult> {
+        if !self.is_done() {
+            bail!(
+                "chunked prefill still has {} of {} tokens pending",
+                self.remaining(),
+                self.total_len()
+            );
+        }
+        Ok(PrefillResult {
+            logits: TensorF::new(vec![1, self.logits.len()], self.logits)?,
+            kv: self.kv,
+            stats: self.merged.to_stats_tensor(),
+            lens: vec![self.tokens.len()],
+            truncated: vec![false],
+        })
+    }
+}
+
+impl Engine {
+    /// Begin a chunked prefill with the standard `prefill_len` chunk
+    /// size. Errors when the prompt cannot fit the KV window at all.
+    pub fn chunked_prefill_start(
+        &self,
+        prompt: &str,
+    ) -> Result<ChunkedPrefill> {
+        self.chunked_prefill_start_with(prompt, self.spec().prefill_len)
+    }
+
+    /// Begin a chunked prefill with an explicit chunk size (tests use
+    /// smaller-than-frame chunks to verify partition invariance).
+    pub fn chunked_prefill_start_with(
+        &self,
+        prompt: &str,
+        chunk_len: usize,
+    ) -> Result<ChunkedPrefill> {
+        self.chunked_prefill_from_tokens(
+            self.tok.encode_with_bos(prompt),
+            chunk_len,
+        )
+    }
+
+    /// Begin a chunked prefill from an already-encoded prompt (BOS +
+    /// token ids) — the batcher's path, which tokenizes once during
+    /// admission screening and hands the ids straight through.
+    pub fn chunked_prefill_from_tokens(
+        &self,
+        tokens: Vec<i32>,
+        chunk_len: usize,
+    ) -> Result<ChunkedPrefill> {
+        let spec = self.spec();
+        if chunk_len == 0 || chunk_len > spec.prefill_len {
+            bail!(
+                "chunk_len {chunk_len} outside 1..={}",
+                spec.prefill_len
+            );
+        }
+        if tokens.len() > spec.max_seq {
+            bail!(
+                "prompt needs {} KV positions but the window holds {}",
+                tokens.len(),
+                spec.max_seq
+            );
+        }
+        Ok(ChunkedPrefill {
+            tokens,
+            chunk_len,
+            consumed: 0,
+            kv: KvState::zeros(spec, 1),
+            merged: ImportanceMap::zeros(spec.n_layers, spec.ffn_m),
+            merged_weight: 0.0,
+            logits: vec![0.0; spec.vocab],
+            chunks_done: 0,
+        })
+    }
+
+    /// Feed ONE chunk of the prompt through the `prefill_chunk`
+    /// executable: KV rows land at the stream's current offset, the
+    /// chunk's local statistics are merged token-count-weighted into the
+    /// running aggregate, and the last-position logits are kept. Returns
+    /// true once the whole prompt has been consumed.
+    pub fn chunked_prefill_step(
+        &self,
+        st: &mut ChunkedPrefill,
+    ) -> Result<bool> {
+        if st.is_done() {
+            return Ok(true);
+        }
+        let spec = self.spec();
+        let take = st.chunk_len.min(st.remaining());
+        let s = spec.prefill_len;
+        let mut frame = vec![spec.pad_id; s];
+        frame[..take]
+            .copy_from_slice(&st.tokens[st.consumed..st.consumed + take]);
+        let tokens = TensorI::new(vec![1, s], frame)?;
+        let (logits, stats) = self.prefill_chunk(
+            &mut st.kv,
+            &tokens,
+            &[take as i32],
+            &[st.consumed as i32],
+        )?;
+        let chunk_map = ImportanceMap::from_stats(&stats, 0)?;
+        if st.merged_weight <= 0.0 {
+            // first chunk verbatim: keeps the single-frame case
+            // bit-identical to the monolithic prefill statistics
+            st.merged = chunk_map;
+        } else {
+            st.merged
+                .merge(&chunk_map, st.merged_weight, take as f64);
+        }
+        st.merged_weight += take as f64;
+        st.logits.copy_from_slice(logits.row(0));
+        st.consumed += take;
+        st.chunks_done += 1;
+        Ok(st.is_done())
+    }
+
+    /// Drive a batch of prompts through chunked prefill to completion
+    /// and assemble a batch-shaped [`PrefillResult`] — the drop-in
+    /// equivalent of [`Engine::prefill`] without any prompt-length
+    /// ceiling below the KV window.
+    pub fn prefill_chunked(
+        &self,
+        prompts: &[String],
+        b: usize,
+    ) -> Result<PrefillResult> {
+        let spec = self.spec().clone();
+        if prompts.len() > b {
+            bail!("{} prompts > batch {b}", prompts.len());
+        }
+        let mut kv = KvState::zeros(&spec, b);
+        let mut logits = vec![0.0f32; b * spec.vocab];
+        let lm = spec.n_layers * spec.ffn_m;
+        let mut stats = vec![0.0f32; b * lm];
+        let mut lens = vec![1usize; b];
+        for (i, p) in prompts.iter().enumerate() {
+            let mut st = self.chunked_prefill_start(p)?;
+            while !self.chunked_prefill_step(&mut st)? {}
+            kv.copy_slot_from(i, &st.kv, 0);
+            logits[i * spec.vocab..(i + 1) * spec.vocab]
+                .copy_from_slice(&st.logits);
+            let mut off = i * lm;
+            for layer in &st.merged.layers {
+                stats[off..off + layer.len()].copy_from_slice(layer);
+                off += layer.len();
+            }
+            lens[i] = st.total_len();
+        }
+        Ok(PrefillResult {
+            logits: TensorF::new(vec![b, spec.vocab], logits)?,
+            kv,
+            stats: TensorF::new(vec![b, spec.n_layers, spec.ffn_m], stats)?,
+            lens,
+            truncated: vec![false; b],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Cross-executable equivalence (chunked vs monolithic prefill) lives
+    // in rust/tests/integration_engine.rs; pure state-machine edges here.
+    use super::*;
+    use crate::runtime::Runtime;
+    use std::sync::Arc;
+
+    fn engine() -> Engine {
+        Engine::from_runtime(Arc::new(Runtime::synthetic()))
+    }
+
+    #[test]
+    fn rejects_bad_chunk_len_and_oversized_prompt() {
+        let e = engine();
+        let pl = e.spec().prefill_len;
+        assert!(e.chunked_prefill_start_with("hi", 0).is_err());
+        assert!(e.chunked_prefill_start_with("hi", pl + 1).is_err());
+        // prompt of max_seq bytes → max_seq + 1 tokens with BOS
+        let too_long = "a".repeat(e.spec().max_seq);
+        assert!(e.chunked_prefill_start(&too_long).is_err());
+    }
+
+    #[test]
+    fn chunk_count_is_ceil_of_len_over_chunk() {
+        let e = engine();
+        let pl = e.spec().prefill_len;
+        // 2.5 frames of prompt bytes (+ BOS) → 3 chunks
+        let prompt = "ab ".repeat(pl * 5 / 6);
+        let mut st = e.chunked_prefill_start(&prompt).unwrap();
+        let total = st.total_len();
+        assert!(total > 2 * pl && total <= 3 * pl, "len {total}");
+        let mut steps = 0;
+        while !e.chunked_prefill_step(&mut st).unwrap() {
+            steps += 1;
+            assert!(steps < 16, "runaway chunk loop");
+        }
+        assert_eq!(st.chunks_done, (total + pl - 1) / pl);
+        assert_eq!(st.consumed(), total);
+        assert_eq!(st.remaining(), 0);
+        // stepping a finished stream is a no-op
+        assert!(e.chunked_prefill_step(&mut st).unwrap());
+        assert_eq!(st.chunks_done, (total + pl - 1) / pl);
+        let pre = st.result().unwrap();
+        assert_eq!(pre.lens, vec![total]);
+        assert_eq!(pre.truncated, vec![false]);
+    }
+
+    #[test]
+    fn result_refuses_unfinished_stream() {
+        let e = engine();
+        let prompt = "x".repeat(e.spec().prefill_len * 2);
+        let mut st = e.chunked_prefill_start(&prompt).unwrap();
+        e.chunked_prefill_step(&mut st).unwrap();
+        assert!(!st.is_done());
+        assert!(st.result().is_err());
+    }
+}

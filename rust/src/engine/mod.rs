@@ -10,7 +10,15 @@
 //!    inside one XLA program (L2 `lax.scan`), no per-step host traffic;
 //!    used for dense-trajectory generation and batch evaluation. The
 //!    speedup of fused over step mode is quantified in bench_decode.
+//!
+//! Prefill comes in two shapes: the monolithic `prefill` executable
+//! (one fixed frame; longer prompts are tail-truncated and flagged) and
+//! the **chunked** path ([`chunked`]) that streams a prompt of any
+//! length through `prefill_chunk` calls with carry-in KV, merging
+//! per-chunk importance on the host — the serving layer's long-prompt
+//! route.
 
+pub mod chunked;
 pub mod session;
 
 use std::path::Path;
@@ -82,6 +90,11 @@ pub struct PrefillResult {
     pub stats: TensorF,
     /// True prompt lengths per slot.
     pub lens: Vec<usize>,
+    /// Per-slot flag: the prompt exceeded the prefill frame and its head
+    /// was dropped. Never true on the chunked-prefill path; serving
+    /// layers must surface it (or reject the request) rather than
+    /// silently serving a clipped prompt.
+    pub truncated: Vec<bool>,
 }
 
 /// Fused-generation output for a batch.
@@ -94,6 +107,8 @@ pub struct GenerateResult {
     /// Mean decode-time activation statistics: [B, L, m] — the paper's
     /// post-hoc oracle statistic when generated dense (App. C.1).
     pub stats: TensorF,
+    /// Per-slot prompt-truncation flags (see [`PrefillResult::truncated`]).
+    pub truncated: Vec<bool>,
 }
 
 /// The engine. Cheap to clone (shared runtime).
@@ -173,31 +188,48 @@ impl Engine {
 
     /// Encode prompts into the fixed prefill frame: BOS + bytes, PAD to
     /// prefill_len. Prompts longer than prefill_len-1 are tail-truncated
-    /// (keeps the most recent context).
+    /// (keeps the most recent context) and flagged in the returned
+    /// per-slot `truncated` vector — callers must never ignore a set
+    /// flag silently (serve prompts of any length via
+    /// [`Engine::prefill_chunked`] instead).
     pub fn encode_prompts(
         &self,
         prompts: &[String],
         b: usize,
-    ) -> Result<(TensorI, Vec<usize>)> {
+    ) -> Result<(TensorI, Vec<usize>, Vec<bool>)> {
+        self.frame_encoded(
+            prompts.iter().map(|p| self.tok.encode_with_bos(p)).collect(),
+            b,
+        )
+    }
+
+    /// Frame already-encoded prompts (BOS + token ids) — the shared
+    /// tail of [`Engine::encode_prompts`] and the encoded entry points.
+    fn frame_encoded(
+        &self,
+        encoded: Vec<Vec<i32>>,
+        b: usize,
+    ) -> Result<(TensorI, Vec<usize>, Vec<bool>)> {
         let spec = self.spec();
-        if prompts.len() > b {
-            bail!("{} prompts > batch {b}", prompts.len());
+        if encoded.len() > b {
+            bail!("{} prompts > batch {b}", encoded.len());
         }
         let s = spec.prefill_len;
         let mut toks = vec![spec.pad_id; b * s];
         let mut lens = vec![1usize; b];
-        for (i, p) in prompts.iter().enumerate() {
-            let mut ids = self.tok.encode_with_bos(p);
+        let mut truncated = vec![false; b];
+        for (i, mut ids) in encoded.into_iter().enumerate() {
             if ids.len() > s {
-                // keep BOS + most recent bytes
+                // keep BOS + most recent tokens
                 let tail = ids.split_off(ids.len() - (s - 1));
                 ids.truncate(1);
                 ids.extend(tail);
+                truncated[i] = true;
             }
             lens[i] = ids.len();
             toks[i * s..i * s + ids.len()].copy_from_slice(&ids);
         }
-        Ok((TensorI::new(vec![b, s], toks)?, lens))
+        Ok((TensorI::new(vec![b, s], toks)?, lens, truncated))
     }
 
     // ------------------------------------------------------------ calls
@@ -207,7 +239,27 @@ impl Engine {
         prompts: &[String],
         b: usize,
     ) -> Result<PrefillResult> {
-        let (tokens, lens) = self.encode_prompts(prompts, b)?;
+        let framed = self.encode_prompts(prompts, b)?;
+        self.prefill_framed(framed)
+    }
+
+    /// Prefill from already-encoded prompts (BOS + token ids) — the
+    /// batcher's admission path, which tokenizes each prompt once at
+    /// screening and hands the ids straight through.
+    pub fn prefill_encoded(
+        &self,
+        encoded: Vec<Vec<i32>>,
+        b: usize,
+    ) -> Result<PrefillResult> {
+        let framed = self.frame_encoded(encoded, b)?;
+        self.prefill_framed(framed)
+    }
+
+    fn prefill_framed(
+        &self,
+        (tokens, lens, truncated): (TensorI, Vec<usize>, Vec<bool>),
+    ) -> Result<PrefillResult> {
+        let b = tokens.shape[0];
         let lens_t = TensorI::new(
             vec![b],
             lens.iter().map(|&l| l as i32).collect(),
@@ -226,7 +278,41 @@ impl Engine {
             kv: KvState { k, v },
             stats,
             lens,
+            truncated,
         })
+    }
+
+    /// One chunk of a chunked prefill (see [`chunked`]): feed up to
+    /// `prefill_len` prompt tokens per slot at per-slot absolute sequence
+    /// offsets, appending KV rows in place. `tokens` is a [B, prefill_len]
+    /// PAD-filled frame; `lens[i]` is the valid token count of slot i in
+    /// this chunk (0 = idle slot); `offsets[i]` is the absolute position
+    /// of the chunk's first token. Returns (last-position logits [B, V],
+    /// per-chunk local stats [B, L, m]).
+    pub fn prefill_chunk(
+        &self,
+        kv: &mut KvState,
+        tokens: &TensorI,
+        lens: &[i32],
+        offsets: &[i32],
+    ) -> Result<(TensorF, TensorF)> {
+        let b = kv.batch();
+        let out = self.rt.call(
+            &format!("prefill_chunk_b{b}"),
+            &[
+                Value::I32(tokens.clone()),
+                Value::I32(TensorI::new(vec![b], lens.to_vec())?),
+                Value::I32(TensorI::new(vec![b], offsets.to_vec())?),
+                Value::F32(kv.k.clone()),
+                Value::F32(kv.v.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let logits = it.next().unwrap().into_f32()?;
+        kv.k = it.next().unwrap().into_f32()?;
+        kv.v = it.next().unwrap().into_f32()?;
+        let stats = it.next().unwrap().into_f32()?;
+        Ok((logits, stats))
     }
 
     /// One masked decode step. `tokens`/`pos` have length B; `mask` is
@@ -318,7 +404,7 @@ impl Engine {
         mask: &TensorF,
         b: usize,
     ) -> Result<GenerateResult> {
-        let (tokens, lens) = self.encode_prompts(prompts, b)?;
+        let (tokens, lens, truncated) = self.encode_prompts(prompts, b)?;
         let lens_t = TensorI::new(
             vec![b],
             lens.iter().map(|&l| l as i32).collect(),
@@ -339,6 +425,7 @@ impl Engine {
             tokens: gen_tokens,
             logits: gen_logits,
             stats: gen_stats,
+            truncated,
         })
     }
 

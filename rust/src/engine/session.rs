@@ -130,6 +130,11 @@ pub struct DecodeSession {
 impl DecodeSession {
     /// Start a session from one prefilled slot: seed the first token
     /// from the prefill logits and position decoding at the prompt end.
+    /// The `pre` may come from the monolithic `prefill` executable or
+    /// from a completed chunked stream ([`ChunkedPrefill::result`]) —
+    /// both produce the same shapes and statistics.
+    ///
+    /// [`ChunkedPrefill::result`]: super::chunked::ChunkedPrefill::result
     ///
     /// Serving semantics: the first token deliberately comes from the
     /// *dense* prefill forward pass — the mask is only built from the

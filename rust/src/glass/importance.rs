@@ -75,6 +75,19 @@ impl ImportanceMap {
         }
     }
 
+    /// Pack into a one-slot [1, L, m] stats tensor — the inverse of
+    /// [`ImportanceMap::from_stats`] for a single slot. The chunked
+    /// prefill uses this to hand chunk-merged evidence to the same
+    /// mask-selection/session code paths that consume executable stats.
+    pub fn to_stats_tensor(&self) -> TensorF {
+        let (l, m) = (self.n_layers(), self.m());
+        let mut data = Vec::with_capacity(l * m);
+        for layer in &self.layers {
+            data.extend_from_slice(layer);
+        }
+        TensorF::new(vec![1, l, m], data).expect("consistent layer shapes")
+    }
+
     /// All values finite and non-negative?
     pub fn is_well_formed(&self) -> bool {
         self.layers
@@ -181,6 +194,18 @@ mod tests {
         let m1 = ImportanceMap::from_stats(&t, 1).unwrap();
         assert_eq!(m1.layers[0], vec![6.0, 7.0, 8.0]);
         assert!(ImportanceMap::from_stats(&t, 2).is_err());
+    }
+
+    #[test]
+    fn stats_tensor_roundtrip() {
+        let m = ImportanceMap::from_layers(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+        ])
+        .unwrap();
+        let t = m.to_stats_tensor();
+        assert_eq!(t.shape, vec![1, 2, 3]);
+        assert_eq!(ImportanceMap::from_stats(&t, 0).unwrap(), m);
     }
 
     #[test]

@@ -56,7 +56,16 @@ pub fn prepare_batch(engine: &Engine, prompts: &[String], b: usize) -> Result<Lg
 
     let n_gen = dense.tokens.shape[1];
     let s_score = spec.score_len;
-    let (prompt_toks, lens) = engine.encode_prompts(prompts, b)?;
+    let (prompt_toks, lens, truncated) = engine.encode_prompts(prompts, b)?;
+    if let Some(i) = truncated.iter().position(|&t| t) {
+        // scoring a clipped prompt would silently misattribute quality;
+        // fail loudly instead (the eval sets fit the prefill frame)
+        bail!(
+            "lgeval prompt {i} exceeds the prefill frame ({} tokens) and \
+             would be tail-truncated",
+            engine.spec().prefill_len
+        );
+    }
     let s_pre = spec.prefill_len;
     if lens.iter().any(|&l| l + n_gen > s_score) {
         bail!("prompt+trajectory exceeds score window");

@@ -146,8 +146,19 @@ fn generate(args: &Args, cfg: &RunConfig) -> Result<()> {
         cfg.density * 100.0
     );
     let t0 = std::time::Instant::now();
+    let warn_truncated = |truncated: &[bool]| {
+        if truncated.first().copied().unwrap_or(false) {
+            println!(
+                "WARNING:  prompt exceeds the {}-token prefill frame and \
+                 was tail-truncated by the fused generator; serve it via \
+                 `glass serve` for full-length chunked prefill",
+                engine.spec().prefill_len
+            );
+        }
+    };
     if matches!(strategy, Strategy::Dense) {
         let gen = run_dense_batch(&engine, &[prompt.clone()], 1)?;
+        warn_truncated(&gen.truncated);
         let n = gen.tokens.shape[1];
         println!("output:   {:?}", engine.decode_text(&gen.tokens.data[..n]));
     } else {
@@ -159,6 +170,7 @@ fn generate(args: &Args, cfg: &RunConfig) -> Result<()> {
             cfg.density,
             1,
         )?;
+        warn_truncated(&run.result.truncated);
         println!("output:   {:?}", run.texts[0]);
         println!(
             "mask:     density {:.3}, layer-0 kept {} / {}",

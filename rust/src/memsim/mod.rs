@@ -38,13 +38,18 @@ impl SimModel {
     ) -> SimModel {
         let total = (params_b * 1e9 * bytes_per_param) as usize;
         let ffn = (total as f64 * ffn_fraction) as usize;
+        // split the non-FFN remainder so the components sum EXACTLY to
+        // total_bytes — integer halving both sides loses a byte on odd
+        // remainders, which breaks footprint-conservation invariants
+        let attn = (total - ffn) / 2;
+        let embed = total - ffn - attn;
         SimModel {
             name: name.to_string(),
             footprint: WeightFootprint {
                 total_bytes: total,
                 ffn_bytes: ffn,
-                attn_bytes: (total - ffn) / 2,
-                embed_bytes: (total - ffn) / 2,
+                attn_bytes: attn,
+                embed_bytes: embed,
                 other_bytes: 0,
             },
             // ~2 FLOPs per weight per token
@@ -134,6 +139,46 @@ mod tests {
 
     fn phone() -> DeviceProfile {
         DeviceProfile::galaxy_s25_ultra()
+    }
+
+    #[test]
+    fn paper_workload_components_sum_to_total() {
+        // fixed paper workloads plus randomized shapes; odd (total - ffn)
+        // remainders used to lose one byte to integer halving
+        let fixed = [
+            SimModel::paper_workload("gemma7b-bf16", 8.5, 2.0, 0.66),
+            SimModel::paper_workload("qwen3-4b-int4", 4.0, 0.5, 0.66),
+            SimModel::paper_workload("llama8b-int8", 8.0, 1.0, 0.7),
+        ];
+        for m in &fixed {
+            let f = &m.footprint;
+            assert_eq!(
+                f.ffn_bytes + f.attn_bytes + f.embed_bytes + f.other_bytes,
+                f.total_bytes,
+                "{}: components must sum exactly",
+                m.name
+            );
+        }
+        forall(200, 73, &UsizeGen { lo: 1, hi: 10_000 }, |&seed| {
+            let mut rng = Prng::new(seed as u64);
+            let m = SimModel::paper_workload(
+                "m",
+                0.1 + rng.f64() * 15.0,
+                0.25 + rng.f64() * 3.75,
+                0.3 + rng.f64() * 0.6,
+            );
+            let f = &m.footprint;
+            prop_assert!(
+                f.ffn_bytes + f.attn_bytes + f.embed_bytes + f.other_bytes
+                    == f.total_bytes,
+                "{} + {} + {} != {}",
+                f.ffn_bytes,
+                f.attn_bytes,
+                f.embed_bytes,
+                f.total_bytes
+            );
+            Ok(())
+        });
     }
 
     #[test]

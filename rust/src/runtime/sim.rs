@@ -296,6 +296,7 @@ impl SimBackend {
             .ok_or_else(|| anyhow::anyhow!("sim backend: bad exe name '{name}'"))?;
         match kind {
             "prefill" => self.run_prefill(b, operands),
+            "prefill_chunk" => self.run_prefill_chunk(b, operands),
             "decode" => self.run_decode(b, operands, false),
             "decode_topk" => self.run_decode(b, operands, true),
             "score" => self.run_score(b, operands),
@@ -350,6 +351,76 @@ impl SimBackend {
                 vec![spec.n_layers, b, spec.n_heads, spec.max_seq, spec.head_dim],
                 v,
             )?),
+            Value::F32(TensorF::new(
+                vec![b, spec.n_layers, spec.ffn_m],
+                stats,
+            )?),
+        ])
+    }
+
+    /// One chunk of a chunked prefill: consume up to `prefill_len` prompt
+    /// tokens starting at an absolute sequence offset, appending KV rows
+    /// at `offset + p` into the carried-in cache and emitting *per-chunk*
+    /// local statistics (mean over this chunk's valid tokens only — the
+    /// host merges chunks via `ImportanceMap::merge`). For a prompt that
+    /// fits one frame (offset 0, len == prompt len) the logits and stats
+    /// are bit-identical to the monolithic `prefill` executable; KV rows
+    /// are written only for the chunk's valid tokens (no trailing PAD
+    /// rows — those are decode-overwritten scratch in the monolithic
+    /// path and carry no information).
+    fn run_prefill_chunk(
+        &self,
+        b: usize,
+        operands: &[Value],
+    ) -> Result<Vec<Value>> {
+        let spec = self.spec.clone();
+        let tokens = operands[0].as_i32()?;
+        let lens = operands[1].as_i32()?;
+        let offsets = operands[2].as_i32()?;
+        let mut k = operands[3].as_f32()?.clone();
+        let mut v = operands[4].as_f32()?.clone();
+        let s_pre = spec.prefill_len;
+
+        let mut logits = vec![0.0f32; b * spec.vocab];
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        for slot in 0..b {
+            // len == 0 marks an idle slot in this chunk call: no KV
+            // writes, zero stats, logits left at zero (caller ignores)
+            let len = (lens.data[slot].max(0) as usize).min(s_pre);
+            if len == 0 {
+                continue;
+            }
+            let off = offsets.data[slot].max(0);
+            let toks = &tokens.data[slot * s_pre..slot * s_pre + len];
+            let row = self.step_logits(toks[len - 1], 1.0);
+            logits[slot * spec.vocab..(slot + 1) * spec.vocab]
+                .copy_from_slice(&row);
+            for (p, &t) in toks.iter().enumerate() {
+                self.write_kv_row(
+                    &mut k.data,
+                    &mut v.data,
+                    b,
+                    slot,
+                    t,
+                    off + p as i32,
+                );
+            }
+            // same accumulation order/arithmetic as run_prefill so a
+            // single-chunk call reproduces its stats bit-for-bit
+            for l in 0..spec.n_layers {
+                let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                for &t in toks {
+                    let st = self.prompt_tok_stats(t, l);
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] += (st[j] / len as f64) as f32;
+                    }
+                }
+            }
+        }
+        Ok(vec![
+            Value::F32(TensorF::new(vec![b, spec.vocab], logits)?),
+            Value::F32(k),
+            Value::F32(v),
             Value::F32(TensorF::new(
                 vec![b, spec.n_layers, spec.ffn_m],
                 stats,
@@ -514,7 +585,9 @@ pub fn synthetic_spec() -> ModelSpec {
         n_heads: 2,
         head_dim: 8,
         ffn_m: 32,
-        max_seq: 96,
+        // large enough that a multi-chunk prompt (several prefill_len
+        // frames) still leaves decode room inside the KV window
+        max_seq: 192,
         prefill_len: 32,
         score_len: 64,
         gen_len: 24,
@@ -551,6 +624,24 @@ pub fn synthetic_manifest() -> Manifest {
             operands: vec![
                 io("tokens", vec![b, spec.prefill_len], DType::I32),
                 io("lens", vec![b], DType::I32),
+            ],
+            outputs: vec![
+                io("logits", vec![b, spec.vocab], DType::F32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
+                io("stats", mask_shape(b), DType::F32),
+            ],
+        });
+        executables.push(ExeSpec {
+            name: format!("prefill_chunk_b{b}"),
+            file: String::new(),
+            n_params: 0,
+            operands: vec![
+                io("tokens", vec![b, spec.prefill_len], DType::I32),
+                io("lens", vec![b], DType::I32),
+                io("offsets", vec![b], DType::I32),
+                io("k", kv_shape(b), DType::F32),
+                io("v", kv_shape(b), DType::F32),
             ],
             outputs: vec![
                 io("logits", vec![b, spec.vocab], DType::F32),
@@ -744,6 +835,10 @@ mod tests {
     fn exe_name_parsing() {
         assert_eq!(parse_exe_name("prefill_b4"), Some(("prefill", 4)));
         assert_eq!(
+            parse_exe_name("prefill_chunk_b1"),
+            Some(("prefill_chunk", 1))
+        );
+        assert_eq!(
             parse_exe_name("decode_topk_b8"),
             Some(("decode_topk", 8))
         );
@@ -754,7 +849,14 @@ mod tests {
     fn synthetic_manifest_is_consistent() {
         let man = synthetic_manifest();
         assert_eq!(man.topk_k, man.model.ffn_m / 2);
-        for kind in ["prefill", "decode", "decode_topk", "score", "generate"] {
+        for kind in [
+            "prefill",
+            "prefill_chunk",
+            "decode",
+            "decode_topk",
+            "score",
+            "generate",
+        ] {
             for b in SYNTHETIC_BATCH_SIZES {
                 assert!(man.exe(&format!("{kind}_b{b}")).is_ok());
             }

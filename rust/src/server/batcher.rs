@@ -4,10 +4,20 @@
 //! runs step by step; each slot holds an independent in-flight request
 //! ([`DecodeSession`]). Every step the batcher:
 //!
-//!  1. **admits** queued requests into free slots — prefill runs on the
-//!     smallest compiled batch that fits the newcomers, and their KV
+//!  1. **admits** queued requests into free slots — a prompt that fits
+//!     the prefill frame runs a monolithic batched prefill and its KV
 //!     planes are spliced into the in-flight batch cache (slot surgery,
-//!     [`KvState::copy_slot_from`]);
+//!     [`KvState::copy_slot_from`]); a *long* prompt claims its slot but
+//!     **streams in chunk by chunk** ([`ChunkedPrefill`]), at most
+//!     [`Batcher::chunk_budget`] prefill chunks per decode step, so the
+//!     other slots keep emitting tokens while the newcomer's prompt
+//!     loads (no full-batch prefill stall). Its GLASS mask is built only
+//!     once the final chunk lands, from the chunk-merged statistics —
+//!     identical to what a monolithic prefill would have produced.
+//!     Requests the engine cannot hold (`prompt + max_tokens` beyond the
+//!     KV window) get an immediate error — prompts are **never silently
+//!     truncated**. Admissions beyond the free-slot count are returned
+//!     to the caller for FCFS re-queuing, not failed;
 //!  2. **decodes** one token for every active slot through the shared
 //!     masked step executable (per-slot masks, so strategies mix);
 //!  3. **refreshes** masks whose request asked for it: every R decoded
@@ -20,17 +30,21 @@
 //!
 //! Compared to the old drain-a-batch/fused-generate loop there is no
 //! head-of-line blocking: a short request admitted next to a long one
-//! completes and frees its slot mid-flight.
+//! completes and frees its slot mid-flight, and a multi-chunk prompt
+//! admission never pauses in-flight decoding (`overlap_steps` counts
+//! the decode steps that ran concurrently with prefill streaming).
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::engine::chunked::ChunkedPrefill;
 use crate::engine::session::{DecodeSession, FinishReason};
 use crate::engine::{Engine, KvState};
 use crate::glass::{
-    build_mask, refresh_mask, GlobalPrior, MaskSet, PriorKind, Strategy,
+    build_mask, refresh_mask, GlobalPrior, ImportanceMap, MaskSet,
+    PriorKind, Strategy,
 };
 use crate::info;
 use crate::tensor::TensorF;
@@ -53,6 +67,34 @@ struct Slot {
     decode_started: Instant,
 }
 
+/// A newcomer whose long prompt is still streaming in: it owns its
+/// decode slot (capacity accounting + FCFS order) but takes no decode
+/// steps until the final chunk lands and its mask is built.
+struct Streaming {
+    pending: Pending,
+    strategy: Strategy,
+    prior_key: Option<&'static str>,
+    chunks: ChunkedPrefill,
+    queue_ms: f64,
+    prefill_ms: f64,
+    /// Admission order — chunk scheduling is FCFS across streams.
+    seq: u64,
+}
+
+enum SlotState {
+    Empty,
+    /// Prompt streaming in via chunked prefill.
+    Prefilling(Streaming),
+    /// Decoding one token per step.
+    Active(Slot),
+}
+
+impl SlotState {
+    fn is_empty(&self) -> bool {
+        matches!(self, SlotState::Empty)
+    }
+}
+
 /// Continuous-batching engine loop over step-mode decode.
 pub struct Batcher {
     engine: Engine,
@@ -60,14 +102,30 @@ pub struct Batcher {
     pub width: usize,
     priors: HashMap<&'static str, GlobalPrior>,
     kv: KvState,
-    slots: Vec<Option<Slot>>,
+    slots: Vec<SlotState>,
     /// Packed [W, L, m] mask tensor for the decode step, kept in sync
     /// incrementally (admission / refresh / retirement) instead of
     /// being rebuilt every token — masks rarely change between steps.
-    /// Free slots hold dense rows (harmless; their logits are ignored).
+    /// Free and still-prefilling slots hold dense rows (harmless; their
+    /// logits are ignored).
     mask_t: TensorF,
+    /// Max prefill chunks advanced per decode step (the per-step
+    /// admission budget; clamped to ≥ 1). 1 = a long prompt costs each
+    /// decode step at most one extra chunk of prefill work.
+    pub chunk_budget: usize,
+    /// Whether the manifest provides the chunked-prefill executable
+    /// (old artifact bundles may not; long prompts are then rejected
+    /// at admission instead of failing server startup).
+    chunking: bool,
+    /// Admission sequence counter (FCFS chunk scheduling).
+    admit_seq: u64,
     /// Total decode steps executed (telemetry / tests).
     pub steps: u64,
+    /// Total prefill chunks executed for streaming admissions.
+    pub chunks: u64,
+    /// Decode steps that ran while ≥ 1 slot was still prefill-streaming
+    /// — direct evidence the batch never stalls for a long admission.
+    pub overlap_steps: u64,
     /// Total tokens emitted across finished requests.
     pub tokens_out: u64,
 }
@@ -110,9 +168,10 @@ pub fn resolve_strategy(
 
 impl Batcher {
     /// Build the batcher: pick the decode width, load the priors, and
-    /// warm every executable the loop can hit — `decode_b{W}` plus
+    /// warm every executable the loop can hit — `decode_b{W}`,
     /// `prefill_b{n}` for every admission size the scheduler can form
-    /// (1..=W), so no first request pays compile latency.
+    /// (1..=W), and `prefill_chunk_b1` for streaming admissions — so no
+    /// first request pays compile latency.
     pub fn new(engine: Engine, batch_width: usize) -> Result<Batcher> {
         let width = engine.pick_batch(batch_width)?;
         let mut priors = HashMap::new();
@@ -130,13 +189,25 @@ impl Batcher {
                 warmed.push(b);
             }
         }
+        // chunked long-prompt admission needs the prefill_chunk
+        // executable; bundles built before it existed still serve
+        // short prompts (long ones get an explicit error at admit)
+        let chunking = engine.rt.manifest.exe("prefill_chunk_b1").is_ok();
+        if chunking {
+            engine.rt.executable("prefill_chunk_b1")?;
+        }
         engine.rt.executable(&format!("decode_b{width}"))?;
         info!(
             "batcher ready: width {width}, warmed prefill_b{warmed:?} + \
-             decode_b{width}"
+             decode_b{width}{}",
+            if chunking {
+                " + prefill_chunk_b1 (long prompts enabled)"
+            } else {
+                " (no prefill_chunk executable — long prompts rejected)"
+            }
         );
         let kv = KvState::zeros(engine.spec(), width);
-        let slots = (0..width).map(|_| None).collect();
+        let slots = (0..width).map(|_| SlotState::Empty).collect();
         let spec = engine.spec();
         let mask_t =
             TensorF::ones(&[width, spec.n_layers, spec.ffn_m]);
@@ -147,160 +218,400 @@ impl Batcher {
             kv,
             slots,
             mask_t,
+            chunk_budget: 1,
+            chunking,
+            admit_seq: 0,
             steps: 0,
+            chunks: 0,
+            overlap_steps: 0,
             tokens_out: 0,
         })
     }
 
     pub fn free_slots(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_none()).count()
+        self.slots.iter().filter(|s| s.is_empty()).count()
     }
 
     pub fn active(&self) -> usize {
-        self.width - self.free_slots()
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, SlotState::Active(_)))
+            .count()
     }
 
-    /// Admit up to `free_slots()` requests: batch-prefill the newcomers,
-    /// build their prefill-time masks, splice KV into free slots. Bad
-    /// requests (unknown strategy, mask failures) get an immediate error
-    /// response; `max_tokens <= 1` requests complete right here.
+    /// Slots occupied by a still-streaming chunked prefill.
+    pub fn prefilling(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, SlotState::Prefilling(_)))
+            .count()
+    }
+
+    /// Admit requests into free slots: short prompts batch-prefill and
+    /// start decoding immediately; long prompts claim a slot and stream
+    /// in chunk by chunk across subsequent [`Batcher::step`]s. Bad
+    /// requests (unknown strategy, prompt + max_tokens beyond the KV
+    /// window, mask failures) get an immediate error response;
+    /// `max_tokens <= 1` requests complete right here. Requests beyond
+    /// the free-slot count are **returned** (FCFS order preserved) for
+    /// the caller to re-queue — they are never failed.
+    #[must_use = "admission overflow must be re-queued, not dropped"]
     pub fn admit(
         &mut self,
         pending: Vec<Pending>,
         sink: &mut dyn FnMut(u64, Response),
-    ) {
+    ) -> Vec<Pending> {
         if pending.is_empty() {
-            return;
+            return Vec::new();
         }
         let admit_start = Instant::now();
         let spec = self.engine.spec().clone();
 
-        // resolve strategies first; protocol-invalid requests never
-        // reach the engine
-        let mut accepted = Vec::new();
+        // screen first; protocol-invalid requests never reach the
+        // engine and never consume a slot
+        let mut screened = Vec::new();
         for p in pending {
-            match resolve_strategy(&p.request.strategy, p.request.lambda) {
-                Ok((strategy, prior_key)) => {
-                    accepted.push((p, strategy, prior_key))
+            let (strategy, prior_key) =
+                match resolve_strategy(&p.request.strategy, p.request.lambda)
+                {
+                    Ok(s) => s,
+                    Err(e) => {
+                        sink(
+                            p.conn_id,
+                            Response::err(p.request.id, e.to_string()),
+                        );
+                        continue;
+                    }
+                };
+            // tokenize ONCE; both admission paths reuse the encoding
+            // (chunked stream / prefill_encoded frame)
+            let encoded = self.engine.tok.encode_with_bos(&p.request.prompt);
+            let n_prompt = encoded.len();
+            let budget_toks = p.request.max_tokens.max(1);
+            // the final generated token comes from the last in-window
+            // logits and needs no KV write, so exact capacity is
+            // max_seq - n_prompt + 1 tokens
+            if n_prompt + budget_toks > spec.max_seq + 1 {
+                // the KV window cannot hold prompt + generation: reject
+                // explicitly instead of silently truncating the prompt
+                sink(
+                    p.conn_id,
+                    Response::err(
+                        p.request.id,
+                        format!(
+                            "prompt too long: {n_prompt} prompt tokens + \
+                             {budget_toks} max_tokens exceeds the serving \
+                             capacity of {} ({}-position KV window + 1 \
+                             write-free final token)",
+                            spec.max_seq + 1,
+                            spec.max_seq
+                        ),
+                    ),
+                );
+                continue;
+            }
+            if n_prompt > spec.prefill_len && !self.chunking {
+                sink(
+                    p.conn_id,
+                    Response::err(
+                        p.request.id,
+                        format!(
+                            "prompt of {n_prompt} tokens needs chunked \
+                             prefill, but this artifact bundle has no \
+                             prefill_chunk executable (rebuild artifacts)"
+                        ),
+                    ),
+                );
+                continue;
+            }
+            screened.push((p, strategy, prior_key, encoded));
+        }
+
+        // claim one free slot per request, FCFS; the remainder flows
+        // back to the caller (re-queued at the scheduler front by
+        // `run`), never shed as errors
+        let mut overflow = Vec::new();
+        let mut claimed = Vec::new();
+        let mut used: Vec<usize> = Vec::new();
+        for item in screened {
+            let slot = self
+                .slots
+                .iter()
+                .enumerate()
+                .position(|(i, s)| s.is_empty() && !used.contains(&i));
+            match slot {
+                Some(si) => {
+                    used.push(si);
+                    claimed.push((si, item));
+                }
+                None => overflow.push(item.0),
+            }
+        }
+
+        // long prompts stream; short ones share a monolithic prefill
+        let (long, short): (Vec<_>, Vec<_>) = claimed
+            .into_iter()
+            .partition(|(_, (_, _, _, enc))| enc.len() > spec.prefill_len);
+
+        for (si, (p, strategy, prior_key, encoded)) in long {
+            match self
+                .engine
+                .chunked_prefill_from_tokens(encoded, spec.prefill_len)
+            {
+                Ok(chunks) => {
+                    let queue_ms = admit_start
+                        .duration_since(p.arrived)
+                        .as_secs_f64()
+                        * 1e3;
+                    self.admit_seq += 1;
+                    write_slot_mask(
+                        &mut self.mask_t,
+                        spec.n_layers,
+                        spec.ffn_m,
+                        si,
+                        None,
+                    );
+                    self.slots[si] = SlotState::Prefilling(Streaming {
+                        pending: p,
+                        strategy,
+                        prior_key,
+                        chunks,
+                        queue_ms,
+                        prefill_ms: 0.0,
+                        seq: self.admit_seq,
+                    });
                 }
                 Err(e) => {
                     sink(p.conn_id, Response::err(p.request.id, e.to_string()))
                 }
             }
         }
-        if accepted.is_empty() {
-            return;
-        }
-        if accepted.len() > self.free_slots() {
-            // caller bug: shed the overflow back as errors rather than
-            // corrupting slot state
-            for (p, ..) in accepted.drain(self.free_slots()..) {
-                sink(
-                    p.conn_id,
-                    Response::err(p.request.id, "batcher overloaded".into()),
-                );
-            }
-        }
 
-        let prompts: Vec<String> = accepted
-            .iter()
-            .map(|(p, ..)| p.request.prompt.clone())
-            .collect();
+        if short.is_empty() {
+            return overflow;
+        }
+        let mut shorts = Vec::with_capacity(short.len());
+        let mut encoded = Vec::with_capacity(short.len());
+        for (si, (p, strategy, prior_key, enc)) in short {
+            shorts.push((si, p, strategy, prior_key));
+            encoded.push(enc);
+        }
         let t0 = Instant::now();
         let pre = match self
             .engine
-            .pick_batch(prompts.len())
-            .and_then(|pb| self.engine.prefill(&prompts, pb))
+            .pick_batch(encoded.len())
+            .and_then(|pb| self.engine.prefill_encoded(encoded, pb))
         {
             Ok(pre) => pre,
             Err(e) => {
-                for (p, ..) in accepted {
+                for (_, p, ..) in shorts {
                     sink(p.conn_id, Response::err(p.request.id, e.to_string()));
                 }
-                return;
+                return overflow;
             }
         };
         let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
 
-        for (i, (p, strategy, prior_key)) in accepted.into_iter().enumerate()
+        for (i, (si, p, strategy, prior_key)) in
+            shorts.into_iter().enumerate()
         {
-            let req = &p.request;
-            let k = spec.budget(req.density);
-            let prior = prior_key.and_then(|key| self.priors.get(key));
-            let built = self
-                .engine
-                .local_importance(&pre, i)
-                .and_then(|local| build_mask(&strategy, &local, prior, k));
-            let mask = match built {
-                Ok(m) => m,
-                Err(e) => {
-                    sink(p.conn_id, Response::err(req.id, e.to_string()));
-                    continue;
-                }
-            };
-            let sess = match DecodeSession::from_prefill(
-                &pre, i, mask, k, STAT_DECAY,
-            ) {
-                Ok(s) => s,
-                Err(e) => {
-                    sink(p.conn_id, Response::err(req.id, e.to_string()));
-                    continue;
-                }
-            };
-            let si = self
-                .slots
-                .iter()
-                .position(|s| s.is_none())
-                .expect("free slot accounted above");
-            self.kv.copy_slot_from(si, &pre.kv, i);
             let queue_ms =
                 admit_start.duration_since(p.arrived).as_secs_f64() * 1e3;
-            let slot = Slot {
-                pending: p,
-                sess,
+            self.place(
+                si,
+                p,
                 strategy,
                 prior_key,
+                &pre,
+                i,
                 prefill_ms,
                 queue_ms,
-                decode_started: Instant::now(),
-            };
-            let done_at_prefill = slot.sess.finished.is_some()
-                || slot.sess.generated.len()
-                    >= slot.pending.request.max_tokens.max(1);
-            if done_at_prefill {
-                // stop token or 1-token budget: finished at prefill
-                let resp = finish_response(&self.engine, &slot);
-                self.tokens_out += resp.tokens as u64;
-                sink(slot.pending.conn_id, resp);
-            } else {
-                write_slot_mask(
-                    &mut self.mask_t,
-                    spec.n_layers,
-                    spec.ffn_m,
-                    si,
-                    Some(&slot.sess.mask),
-                );
-                self.slots[si] = Some(slot);
+                sink,
+            );
+        }
+        overflow
+    }
+
+    /// Build one prefilled request's mask + session and install it into
+    /// decode slot `si` (KV slot splice included). Shared by the
+    /// monolithic short-prompt path and the final chunk of a stream.
+    #[allow(clippy::too_many_arguments)]
+    fn place(
+        &mut self,
+        si: usize,
+        p: Pending,
+        strategy: Strategy,
+        prior_key: Option<&'static str>,
+        pre: &crate::engine::PrefillResult,
+        pre_slot: usize,
+        prefill_ms: f64,
+        queue_ms: f64,
+        sink: &mut dyn FnMut(u64, Response),
+    ) {
+        let spec = self.engine.spec().clone();
+        let req = &p.request;
+        let k = spec.budget(req.density);
+        let prior = prior_key.and_then(|key| self.priors.get(key));
+        let built = ImportanceMap::from_stats(&pre.stats, pre_slot)
+            .and_then(|local| build_mask(&strategy, &local, prior, k));
+        let mask = match built {
+            Ok(m) => m,
+            Err(e) => {
+                sink(p.conn_id, Response::err(req.id, e.to_string()));
+                return;
             }
+        };
+        let sess = match DecodeSession::from_prefill(
+            pre, pre_slot, mask, k, STAT_DECAY,
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                sink(p.conn_id, Response::err(req.id, e.to_string()));
+                return;
+            }
+        };
+        self.kv.copy_slot_from(si, &pre.kv, pre_slot);
+        let slot = Slot {
+            pending: p,
+            sess,
+            strategy,
+            prior_key,
+            prefill_ms,
+            queue_ms,
+            decode_started: Instant::now(),
+        };
+        let done_at_prefill = slot.sess.finished.is_some()
+            || slot.sess.generated.len()
+                >= slot.pending.request.max_tokens.max(1);
+        if done_at_prefill {
+            // stop token or 1-token budget: finished at prefill
+            let resp = finish_response(&self.engine, &slot);
+            self.tokens_out += resp.tokens as u64;
+            sink(slot.pending.conn_id, resp);
+        } else {
+            write_slot_mask(
+                &mut self.mask_t,
+                spec.n_layers,
+                spec.ffn_m,
+                si,
+                Some(&slot.sess.mask),
+            );
+            self.slots[si] = SlotState::Active(slot);
         }
     }
 
-    /// One decode step for every active slot; finished slots respond and
-    /// free immediately. Inactive slots ride along with a dense mask and
-    /// a parked position (their logits are ignored).
+    /// Advance the oldest streaming admission by one prefill chunk; on
+    /// the final chunk, build the mask from the merged statistics and
+    /// promote the slot to active decoding.
+    fn advance_chunk(
+        &mut self,
+        si: usize,
+        sink: &mut dyn FnMut(u64, Response),
+    ) {
+        let engine = self.engine.clone();
+        let t0 = Instant::now();
+        let stepped = {
+            let SlotState::Prefilling(st) = &mut self.slots[si] else {
+                return;
+            };
+            let r = engine.chunked_prefill_step(&mut st.chunks);
+            if r.is_ok() {
+                st.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+            }
+            r
+        };
+        let done = match stepped {
+            Ok(done) => {
+                self.chunks += 1;
+                done
+            }
+            Err(e) => {
+                let SlotState::Prefilling(st) =
+                    std::mem::replace(&mut self.slots[si], SlotState::Empty)
+                else {
+                    unreachable!("checked Prefilling above");
+                };
+                sink(
+                    st.pending.conn_id,
+                    Response::err(st.pending.request.id, e.to_string()),
+                );
+                return;
+            }
+        };
+        if !done {
+            return;
+        }
+        let SlotState::Prefilling(st) =
+            std::mem::replace(&mut self.slots[si], SlotState::Empty)
+        else {
+            unreachable!("checked Prefilling above");
+        };
+        let Streaming {
+            pending,
+            strategy,
+            prior_key,
+            chunks,
+            queue_ms,
+            prefill_ms,
+            seq: _,
+        } = st;
+        // consuming conversion: moves the stream's KV out instead of
+        // cloning a full cache per admission
+        let pre = match chunks.into_result() {
+            Ok(pre) => pre,
+            Err(e) => {
+                sink(
+                    pending.conn_id,
+                    Response::err(pending.request.id, e.to_string()),
+                );
+                return;
+            }
+        };
+        self.place(
+            si, pending, strategy, prior_key, &pre, 0, prefill_ms,
+            queue_ms, sink,
+        );
+    }
+
+    /// One engine step: advance up to `chunk_budget` prefill chunks for
+    /// streaming admissions, then decode one token for every active
+    /// slot; finished slots respond and free immediately. Inactive slots
+    /// ride along with a dense mask and a parked position (their logits
+    /// are ignored).
     pub fn step(
         &mut self,
         sink: &mut dyn FnMut(u64, Response),
     ) -> Result<()> {
         let spec = self.engine.spec().clone();
+
+        // ---- prefill-chunk phase (per-step admission budget)
+        let mut budget = self.chunk_budget.max(1);
+        while budget > 0 {
+            let next = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| match s {
+                    SlotState::Prefilling(st) => Some((st.seq, i)),
+                    _ => None,
+                })
+                .min()
+                .map(|(_, i)| i);
+            let Some(si) = next else { break };
+            self.advance_chunk(si, sink);
+            budget -= 1;
+        }
+
+        // ---- decode phase
         if self.active() == 0 {
             return Ok(());
         }
+        let streaming_now = self.prefilling();
         let mut tokens = vec![spec.pad_id; self.width];
         let mut pos = vec![0i32; self.width];
         {
             for (si, s) in self.slots.iter().enumerate() {
-                if let Some(slot) = s {
+                if let SlotState::Active(slot) = s {
                     tokens[si] = slot.sess.last_tok;
                     pos[si] = slot.sess.pos;
                 }
@@ -312,13 +623,16 @@ impl Batcher {
                 &self.mask_t,
             )?;
             self.steps += 1;
+            if streaming_now > 0 {
+                self.overlap_steps += 1;
+            }
 
             let engine = &self.engine;
             let priors = &self.priors;
             let tokens_out = &mut self.tokens_out;
             let mask_t = &mut self.mask_t;
             for (si, s) in self.slots.iter_mut().enumerate() {
-                let Some(slot) = s else { continue };
+                let SlotState::Active(slot) = s else { continue };
                 let finished = slot.sess.absorb_step(
                     logits.row(si),
                     &stats,
@@ -330,7 +644,7 @@ impl Batcher {
                     let resp = finish_response(engine, slot);
                     *tokens_out += resp.tokens as u64;
                     sink(slot.pending.conn_id, resp);
-                    *s = None;
+                    *s = SlotState::Empty;
                     write_slot_mask(
                         mask_t,
                         spec.n_layers,
@@ -386,7 +700,8 @@ impl Batcher {
         Ok(())
     }
 
-    /// Abort every in-flight request with an error (engine failure).
+    /// Abort every in-flight request with an error (engine failure) —
+    /// including admissions still streaming their prompt in.
     pub fn fail_all(
         &mut self,
         err: &anyhow::Error,
@@ -394,24 +709,29 @@ impl Batcher {
     ) {
         let spec = self.engine.spec().clone();
         for (si, s) in self.slots.iter_mut().enumerate() {
-            if let Some(slot) = s.take() {
-                sink(
-                    slot.pending.conn_id,
-                    Response::err(slot.pending.request.id, err.to_string()),
-                );
-                write_slot_mask(
-                    &mut self.mask_t,
-                    spec.n_layers,
-                    spec.ffn_m,
-                    si,
-                    None,
-                );
-            }
+            let pending = match std::mem::replace(s, SlotState::Empty) {
+                SlotState::Empty => continue,
+                SlotState::Prefilling(st) => st.pending,
+                SlotState::Active(slot) => slot.pending,
+            };
+            sink(
+                pending.conn_id,
+                Response::err(pending.request.id, err.to_string()),
+            );
+            write_slot_mask(
+                &mut self.mask_t,
+                spec.n_layers,
+                spec.ffn_m,
+                si,
+                None,
+            );
         }
     }
 
     /// Drive the loop against a scheduler until it closes and drains:
     /// block for work only when idle, admit mid-flight otherwise.
+    /// Admission overflow (more queued work than free slots) is pushed
+    /// back onto the scheduler's queue front, preserving FCFS.
     pub fn run(
         &mut self,
         sched: &Scheduler,
@@ -420,22 +740,26 @@ impl Batcher {
         loop {
             let free = self.free_slots();
             if free > 0 {
-                if self.active() == 0 {
+                if self.active() == 0 && self.prefilling() == 0 {
                     // idle: block until work arrives (batch_window lets
                     // an initial burst form), or exit on close+empty
                     match sched.next_batch() {
-                        Some(batch) => self.admit(batch, sink),
+                        Some(batch) => {
+                            let over = self.admit(batch, sink);
+                            sched.requeue_front(over);
+                        }
                         None => break,
                     }
                 } else {
                     // mid-flight admission into free slots
                     let newly = sched.take(free);
                     if !newly.is_empty() {
-                        self.admit(newly, sink);
+                        let over = self.admit(newly, sink);
+                        sched.requeue_front(over);
                     }
                 }
             }
-            if self.active() == 0 {
+            if self.active() == 0 && self.prefilling() == 0 {
                 continue;
             }
             if let Err(e) = self.step(sink) {
@@ -456,6 +780,7 @@ fn finish_response(engine: &Engine, slot: &Slot) -> Response {
         sess.mask.density(),
     );
     resp.queue_ms = slot.queue_ms;
+    resp.prompt_tokens = sess.prompt_len;
     resp.refreshes = sess.refreshes;
     resp.mask_updates = sess.mask_updates;
     resp.finish = sess

@@ -18,6 +18,21 @@
 //!   **immediately**, so a short request is never blocked behind a long
 //!   one (no head-of-line blocking, unlike the old fused-generate drain
 //!   loop that ran every batch to the compiled max length);
+//! * **chunked admission** — a prompt longer than the compiled prefill
+//!   frame claims its slot and streams in through the `prefill_chunk`
+//!   executable, at most `chunk_budget` chunks interleaved per decode
+//!   step, while every other slot keeps emitting tokens (no full-batch
+//!   prefill stall). Per-chunk local statistics are merged on the host
+//!   (`ImportanceMap::merge`) into exactly the aggregate a monolithic
+//!   prefill would produce, and the GLASS mask is built once the final
+//!   chunk lands. Prompts are accepted up to `max_seq - max_tokens + 1`
+//!   encoded tokens (the final token needs no KV write); anything
+//!   larger is rejected with an explicit
+//!   error — the server never silently truncates a prompt (the old
+//!   `prefill_len - 1` silent-tail-truncation ceiling is gone), and
+//!   responses carry `prompt_tokens` as proof of full consumption.
+//!   Admission overflow (burst wider than the free-slot count) is
+//!   re-queued at the scheduler front in FCFS order, never failed;
 //! * masks are per-slot, so heterogeneous strategies share a batch; a
 //!   request can opt into a periodic **GLASS mask refresh**
 //!   (`refresh_every: R`) that re-runs the global-local rank aggregation
@@ -35,15 +50,31 @@
 //!   initial burst to form before starting; admission is continuous
 //!   afterwards, so this only shapes cold-start batching (latency ↔
 //!   throughput).
+//! * `Batcher::chunk_budget` — prefill chunks advanced per decode step
+//!   for streaming (long-prompt) admissions; default 1. Higher values
+//!   admit long prompts faster at the cost of more prefill work per
+//!   decode step (worse inter-token latency for in-flight requests
+//!   while a stream is active); 1 bounds the per-step overhead to one
+//!   chunk. `overlap_steps` telemetry counts decode steps that ran
+//!   concurrently with a stream — the direct no-stall observable.
 //! * `refresh_every` (per request) — mask-refresh interval R. Small R
 //!   tracks decode-time importance drift closely at the cost of one
 //!   selection pass (pure host work, µs-scale) per R tokens; 0 keeps
 //!   the prefill-time static mask.
 //!
+//! # Request limits
+//!
+//! `density` ∈ (0, 1], `lambda` ∈ [0, 1], and `max_tokens` ≥ 1 are
+//! enforced at protocol parse time; encoded prompt length (incl. BOS) +
+//! `max_tokens` must fit the `max_seq + 1`-position serving capacity
+//! (the KV window plus the final write-free token), enforced at
+//! admission with an explicit "prompt too long" error.
+//!
 //! All executables the loop can touch are warmed at startup —
-//! `prefill_b{n}` for every admission size and the full-width
-//! `decode_b{W}` — so first requests never pay compile latency at any
-//! batch size the scheduler can form.
+//! `prefill_b{n}` for every admission size, `prefill_chunk_b1` for
+//! streaming admissions, and the full-width `decode_b{W}` — so first
+//! requests never pay compile latency at any batch size the scheduler
+//! can form.
 
 pub mod batcher;
 pub mod client;

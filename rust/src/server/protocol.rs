@@ -5,10 +5,27 @@
 //!              "lambda": 0.5, "density": 0.5, "max_tokens": 64,
 //!              "refresh_every": 8}
 //!   response: {"id": 7, "text": "...", "tokens": 42,
-//!              "prefill_ms": 1.2, "decode_ms": 30.5, "queue_ms": 0.3,
-//!              "density": 0.5, "refreshes": 5, "mask_updates": 2,
-//!              "finish": "length"}
+//!              "prompt_tokens": 25, "prefill_ms": 1.2,
+//!              "decode_ms": 30.5, "queue_ms": 0.3, "density": 0.5,
+//!              "refreshes": 5, "mask_updates": 2, "finish": "length"}
 //!   error:    {"id": 7, "error": "..."}
+//!
+//! Field ranges are validated at parse time and rejected with an
+//! immediate protocol error (never surfaced as a deep engine failure):
+//! `density` must lie in (0, 1], `lambda` in [0, 1], and `max_tokens`
+//! must be ≥ 1.
+//!
+//! **Prompt length.** Prompts are NOT bounded by the prefill frame: the
+//! batcher streams long prompts through chunked prefill (one chunk per
+//! decode step — see [`super::batcher`]), so any prompt whose encoded
+//! length plus `max_tokens` fits the serving capacity of `max_seq + 1`
+//! (the `max_seq`-position KV window plus one final token that needs no
+//! KV write) is served in full. Beyond that the request is rejected
+//! with an explicit "prompt too long" error — prompt tokens are never
+//! silently dropped.
+//! `prompt_tokens` in the response reports how many prompt tokens
+//! (incl. BOS) were actually prefilled, so a client can verify its
+//! prompt was consumed whole.
 //!
 //! `refresh_every` = R re-runs the GLASS mask selection every R decoded
 //! tokens from blended prompt+decode statistics (0 = static prefill
@@ -59,13 +76,27 @@ impl Request {
         if !STRATEGIES.contains(&strategy.as_str()) {
             bail!("unknown strategy '{strategy}'");
         }
+        // range-validate numeric knobs here so a bad request dies as an
+        // immediate protocol error, not a deep engine failure mid-batch
+        let lambda = get_f("lambda", 0.5)?;
+        if !(0.0..=1.0).contains(&lambda) {
+            bail!("lambda {lambda} outside [0, 1]");
+        }
+        let density = get_f("density", 0.5)?;
+        if !(density > 0.0 && density <= 1.0) {
+            bail!("density {density} outside (0, 1]");
+        }
+        let max_tokens = get_u("max_tokens", 64)?;
+        if max_tokens == 0 {
+            bail!("max_tokens must be >= 1");
+        }
         Ok(Request {
             id: j.req("id")?.as_usize()? as u64,
             prompt: j.req("prompt")?.as_str()?.to_string(),
             strategy,
-            lambda: get_f("lambda", 0.5)?,
-            density: get_f("density", 0.5)?,
-            max_tokens: get_u("max_tokens", 64)?,
+            lambda,
+            density,
+            max_tokens,
             refresh_every: get_u("refresh_every", 0)?,
         })
     }
@@ -88,6 +119,10 @@ pub struct Response {
     pub id: u64,
     pub text: String,
     pub tokens: usize,
+    /// Prompt tokens actually prefilled (incl. BOS). Lets a client
+    /// distinguish a full-prompt response from a truncated one — the
+    /// engine never truncates silently, and this field proves it.
+    pub prompt_tokens: usize,
     pub prefill_ms: f64,
     pub decode_ms: f64,
     /// Time spent queued before admission into a batch slot.
@@ -114,6 +149,7 @@ impl Response {
             id,
             text,
             tokens,
+            prompt_tokens: 0,
             prefill_ms,
             decode_ms,
             queue_ms: 0.0,
@@ -130,6 +166,7 @@ impl Response {
             id,
             text: String::new(),
             tokens: 0,
+            prompt_tokens: 0,
             prefill_ms: 0.0,
             decode_ms: 0.0,
             queue_ms: 0.0,
@@ -149,6 +186,7 @@ impl Response {
         } else {
             o.set("text", Json::Str(self.text.clone()))
                 .set("tokens", Json::Num(self.tokens as f64))
+                .set("prompt_tokens", Json::Num(self.prompt_tokens as f64))
                 .set("prefill_ms", Json::Num(self.prefill_ms))
                 .set("decode_ms", Json::Num(self.decode_ms))
                 .set("queue_ms", Json::Num(self.queue_ms))
@@ -182,6 +220,7 @@ impl Response {
             id,
             text: j.req("text")?.as_str()?.to_string(),
             tokens: j.req("tokens")?.as_usize()?,
+            prompt_tokens: get_u("prompt_tokens", 0)?,
             prefill_ms: j.req("prefill_ms")?.as_f64()?,
             decode_ms: j.req("decode_ms")?.as_f64()?,
             queue_ms: get_f("queue_ms", 0.0)?,
@@ -234,8 +273,52 @@ mod tests {
     }
 
     #[test]
+    fn density_out_of_range_rejected_at_parse() {
+        for bad in ["0", "-0.5", "1.5", "0.0"] {
+            let line =
+                format!(r#"{{"id":1,"prompt":"x","density":{bad}}}"#);
+            let err = Request::parse(&line).unwrap_err();
+            assert!(
+                err.to_string().contains("density"),
+                "{bad}: {err}"
+            );
+        }
+        // boundary: exactly 1.0 is dense and legal
+        assert!(Request::parse(r#"{"id":1,"prompt":"x","density":1.0}"#)
+            .is_ok());
+    }
+
+    #[test]
+    fn lambda_out_of_range_rejected_at_parse() {
+        for bad in ["-0.1", "1.01", "7"] {
+            let line =
+                format!(r#"{{"id":1,"prompt":"x","lambda":{bad}}}"#);
+            let err = Request::parse(&line).unwrap_err();
+            assert!(err.to_string().contains("lambda"), "{bad}: {err}");
+        }
+        for good in ["0", "1", "0.5"] {
+            let line =
+                format!(r#"{{"id":1,"prompt":"x","lambda":{good}}}"#);
+            assert!(Request::parse(&line).is_ok(), "{good}");
+        }
+    }
+
+    #[test]
+    fn zero_max_tokens_rejected_at_parse() {
+        let err =
+            Request::parse(r#"{"id":1,"prompt":"x","max_tokens":0}"#)
+                .unwrap_err();
+        assert!(err.to_string().contains("max_tokens"), "{err}");
+        assert!(
+            Request::parse(r#"{"id":1,"prompt":"x","max_tokens":1}"#)
+                .is_ok()
+        );
+    }
+
+    #[test]
     fn response_roundtrip_ok_and_err() {
         let mut ok = Response::ok(1, "hello".into(), 5, 1.5, 20.0, 0.5);
+        ok.prompt_tokens = 25;
         ok.queue_ms = 0.25;
         ok.refreshes = 3;
         ok.mask_updates = 1;
@@ -255,6 +338,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(r.queue_ms, 0.0);
+        assert_eq!(r.prompt_tokens, 0);
         assert_eq!(r.refreshes, 0);
         assert_eq!(r.finish, "length");
     }

@@ -109,6 +109,22 @@ impl Scheduler {
         st.queue.drain(..n).collect()
     }
 
+    /// Return admission overflow to the FRONT of the queue, preserving
+    /// FCFS order (the first element of `overflow` becomes the next
+    /// request dequeued). Used by the batcher when it was handed more
+    /// requests than it has free slots — overflow must be retried, not
+    /// failed.
+    pub fn requeue_front(&self, overflow: Vec<Pending>) {
+        if overflow.is_empty() {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        for p in overflow.into_iter().rev() {
+            st.queue.push_front(p);
+        }
+        self.cv.notify_all();
+    }
+
     pub fn is_closed(&self) -> bool {
         self.state.lock().unwrap().closed
     }
@@ -216,6 +232,26 @@ mod tests {
             b.iter().map(|p| p.request.id).collect::<Vec<_>>(),
             vec![2, 3, 4]
         );
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn requeue_front_preserves_fcfs() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        for i in 0..5 {
+            s.submit(req(i));
+        }
+        // batcher takes 4, can only seat 2, pushes [2, 3] back
+        let mut batch = s.take(4);
+        let overflow: Vec<Pending> = batch.drain(2..).collect();
+        s.requeue_front(overflow);
+        let order: Vec<u64> = s
+            .take(10)
+            .iter()
+            .map(|p| p.request.id)
+            .collect();
+        assert_eq!(order, vec![2, 3, 4], "overflow re-queued ahead, in order");
+        s.requeue_front(Vec::new()); // no-op
         assert!(s.is_empty());
     }
 

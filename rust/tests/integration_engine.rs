@@ -4,10 +4,19 @@
 
 mod common;
 
-use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
+use glass::glass::{
+    build_mask, pack_indices, GlobalPrior, ImportanceMap, PriorKind,
+    Strategy,
+};
+use glass::prop_assert;
 use glass::tensor::argmax;
+use glass::util::quickcheck::{forall, UsizeGen};
 
 const ATOL: f32 = 2e-3; // distinct XLA programs; fused ops reorder floats
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
 
 #[test]
 fn fused_generate_matches_step_decode_greedy() {
@@ -192,6 +201,201 @@ fn batched_prefill_slots_are_independent() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(s_err < ATOL, "slot-0 stats depend on batchmates: {s_err}");
+}
+
+// ---------------------------------------------------- chunked prefill
+//
+// The chunk-capable prefill contract: feeding a prompt through
+// `prefill_len`-sized (or smaller) chunks with carry-in KV must
+// reproduce the monolithic prefill — same KV rows, same final logits,
+// same merged local importance — no matter how the prompt is
+// partitioned.
+
+#[test]
+fn chunked_prefill_single_frame_matches_monolithic_bitwise() {
+    let engine = common::engine();
+    if engine.rt.manifest.exe("prefill_chunk_b1").is_err() {
+        eprintln!("artifact bundle lacks prefill_chunk — skipping");
+        return;
+    }
+    let spec = engine.spec().clone();
+    let prompts = vec!["once there was a red fox".to_string()];
+    let mono = engine.prefill(&prompts, 1).unwrap();
+    let chunked = engine.prefill_chunked(&prompts, 1).unwrap();
+    assert_eq!(mono.lens, chunked.lens);
+    let len = mono.lens[0];
+    if engine.rt.is_simulated() {
+        // one backend, one arithmetic path → bit-identical
+        assert_eq!(
+            bits(&mono.logits.data),
+            bits(&chunked.logits.data),
+            "logits"
+        );
+        assert_eq!(
+            bits(&mono.stats.data),
+            bits(&chunked.stats.data),
+            "local importance"
+        );
+        // KV over the valid prompt rows; the monolithic path also writes
+        // PAD scratch rows at len..prefill_len, which decode overwrites
+        // before they can be attended (excluded by construction)
+        let (hn, tn, dh) = (spec.n_heads, spec.max_seq, spec.head_dim);
+        for l in 0..spec.n_layers {
+            for h in 0..hn {
+                for p in 0..len {
+                    let base = ((l * hn + h) * tn + p) * dh;
+                    assert_eq!(
+                        bits(&mono.kv.k.data[base..base + dh]),
+                        bits(&chunked.kv.k.data[base..base + dh]),
+                        "k l{l} h{h} p{p}"
+                    );
+                    assert_eq!(
+                        bits(&mono.kv.v.data[base..base + dh]),
+                        bits(&chunked.kv.v.data[base..base + dh]),
+                        "v l{l} h{h} p{p}"
+                    );
+                }
+            }
+        }
+    } else {
+        // distinct XLA programs: tolerance compare
+        for (name, a, b) in [
+            ("logits", &mono.logits.data, &chunked.logits.data),
+            ("stats", &mono.stats.data, &chunked.stats.data),
+        ] {
+            let max_err = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_err < ATOL, "{name} diverged: {max_err}");
+        }
+    }
+}
+
+#[test]
+fn chunk_partition_never_changes_kv_logits_or_glass_mask() {
+    let engine = common::engine();
+    if engine.rt.manifest.exe("prefill_chunk_b1").is_err() {
+        eprintln!("artifact bundle lacks prefill_chunk — skipping");
+        return;
+    }
+    if !engine.rt.is_simulated() {
+        // distinct XLA programs per partition need not be bitwise
+        // reproducible; the bit-exact property is a simulator contract
+        eprintln!("real backend — skipping bit-exact partition property");
+        return;
+    }
+    let spec = engine.spec().clone();
+    // a prompt spanning ≥ 3 prefill frames
+    let prompt =
+        "the quick grey cat naps ".repeat(3 * spec.prefill_len / 24 + 1);
+    let n_prompt = prompt.len() + 1;
+    assert!(n_prompt >= 3 * spec.prefill_len && n_prompt <= spec.max_seq);
+    let prior = GlobalPrior::load(&engine.rt, PriorKind::INps).unwrap();
+    let k = spec.budget(0.5);
+
+    // canonical stream: full prefill_len-sized chunks
+    let reference = {
+        let mut st = engine.chunked_prefill_start(&prompt).unwrap();
+        while !engine.chunked_prefill_step(&mut st).unwrap() {}
+        st
+    };
+    let ref_pre = reference.result().unwrap();
+    let ref_mask = build_mask(
+        &Strategy::Glass { lambda: 0.5 },
+        reference.local_importance(),
+        Some(&prior),
+        k,
+    )
+    .unwrap();
+
+    forall(10, 91, &UsizeGen { lo: 1, hi: spec.prefill_len }, |&chunk| {
+        let mut st = engine
+            .chunked_prefill_start_with(&prompt, chunk)
+            .map_err(|e| e.to_string())?;
+        let mut guard = 0;
+        while !engine
+            .chunked_prefill_step(&mut st)
+            .map_err(|e| e.to_string())?
+        {
+            guard += 1;
+            prop_assert!(guard <= n_prompt, "runaway chunk loop");
+        }
+        prop_assert!(
+            st.chunks_done == (n_prompt + chunk - 1) / chunk,
+            "chunk={chunk}: {} chunk calls",
+            st.chunks_done
+        );
+        // KV rows are pure functions of (token, position): the full
+        // cache must be bit-identical for every partition
+        prop_assert!(
+            bits(&st.kv.k.data) == bits(&reference.kv.k.data),
+            "K cache diverged at chunk={chunk}"
+        );
+        prop_assert!(
+            bits(&st.kv.v.data) == bits(&reference.kv.v.data),
+            "V cache diverged at chunk={chunk}"
+        );
+        let pre = st.result().map_err(|e| e.to_string())?;
+        prop_assert!(
+            bits(&pre.logits.data) == bits(&ref_pre.logits.data),
+            "final logits diverged at chunk={chunk}"
+        );
+        // merged statistics agree to fp-merge tolerance...
+        let max_err = pre
+            .stats
+            .data
+            .iter()
+            .zip(&ref_pre.stats.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        prop_assert!(
+            max_err < 1e-5,
+            "merged importance err {max_err} at chunk={chunk}"
+        );
+        // ...and the selected GLASS mask NEVER depends on the chunking
+        let mask = build_mask(
+            &Strategy::Glass { lambda: 0.5 },
+            st.local_importance(),
+            Some(&prior),
+            k,
+        )
+        .map_err(|e| e.to_string())?;
+        prop_assert!(
+            mask == ref_mask,
+            "GLASS mask changed under chunk={chunk}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn truncation_is_flagged_and_chunked_path_never_truncates() {
+    // regression for the silent tail-truncation bug: a clipped prompt
+    // must be distinguishable from a fully-consumed one at every layer
+    let engine = common::engine();
+    let spec = engine.spec().clone();
+    let long = "z".repeat(spec.prefill_len * 2);
+    let (_, lens, truncated) =
+        engine.encode_prompts(&[long.clone()], 1).unwrap();
+    assert!(truncated[0], "over-frame prompt must be flagged");
+    assert_eq!(lens[0], spec.prefill_len);
+    let pre = engine.prefill(&[long.clone()], 1).unwrap();
+    assert!(pre.truncated[0], "prefill must surface the flag");
+    let full = engine
+        .prefill(&["a short prompt".to_string()], 1)
+        .unwrap();
+    assert!(!full.truncated[0], "in-frame prompt must not be flagged");
+    if engine.rt.manifest.exe("prefill_chunk_b1").is_ok() {
+        let chunked = engine.prefill_chunked(&[long.clone()], 1).unwrap();
+        assert!(!chunked.truncated[0]);
+        assert_eq!(
+            chunked.lens[0],
+            long.len() + 1,
+            "chunked path consumes every prompt token"
+        );
+    }
 }
 
 #[test]

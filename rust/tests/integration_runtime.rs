@@ -10,7 +10,14 @@ use glass::tensor::{TensorF, TensorI};
 fn manifest_lists_expected_executables() {
     let engine = common::engine();
     let man = &engine.rt.manifest;
-    for kind in ["prefill", "decode", "decode_topk", "score", "generate"] {
+    for kind in [
+        "prefill",
+        "prefill_chunk",
+        "decode",
+        "decode_topk",
+        "score",
+        "generate",
+    ] {
         for b in [1usize, 4] {
             assert!(
                 man.exe(&format!("{kind}_b{b}")).is_ok(),

@@ -3,12 +3,12 @@
 
 mod common;
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use glass::server::batcher::Batcher;
 use glass::server::client::{request, Client};
 use glass::server::protocol::{Request, Response};
-use glass::server::scheduler::Pending;
+use glass::server::scheduler::{Pending, Scheduler};
 use glass::server::Server;
 
 fn start_server() -> Server {
@@ -164,10 +164,11 @@ fn short_request_overtakes_long_one_mid_flight() {
     let mut done: Vec<(u64, Response)> = Vec::new();
 
     // long request starts decoding alone
-    batcher.admit(
+    let over = batcher.admit(
         vec![pending(1, "once there was a red fox", "i-glass", 24, 0)],
         &mut |c, r| done.push((c, r)),
     );
+    assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.active(), 1);
     for _ in 0..5 {
         batcher.step(&mut |c, r| done.push((c, r))).unwrap();
@@ -175,10 +176,11 @@ fn short_request_overtakes_long_one_mid_flight() {
     assert!(done.is_empty(), "long request must still be decoding");
 
     // short request admitted mid-flight into a free slot
-    batcher.admit(
+    let over = batcher.admit(
         vec![pending(2, "the blue owl is", "i-glass", 3, 0)],
         &mut |c, r| done.push((c, r)),
     );
+    assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.active(), 2, "admitted while slot 0 in flight");
 
     drive(&mut batcher, &mut done, 2);
@@ -202,7 +204,7 @@ fn mask_refresh_changes_masks_after_r_steps() {
     let mut done: Vec<(u64, Response)> = Vec::new();
 
     // refresh every 4 decoded tokens; control request with refresh off
-    batcher.admit(
+    let over = batcher.admit(
         vec![
             pending(1, "the blue owl is", "griffin", 16, 4),
             pending(2, "the blue owl is", "i-glass", 16, 4),
@@ -210,6 +212,7 @@ fn mask_refresh_changes_masks_after_r_steps() {
         ],
         &mut |c, r| done.push((c, r)),
     );
+    assert!(over.is_empty(), "unexpected admission overflow");
     drive(&mut batcher, &mut done, 3);
     assert_eq!(done.len(), 3);
 
@@ -243,13 +246,14 @@ fn unknown_strategy_rejected_by_engine_path() {
     let engine = common::engine();
     let mut batcher = Batcher::new(engine, 4).unwrap();
     let mut done: Vec<(u64, Response)> = Vec::new();
-    batcher.admit(
+    let over = batcher.admit(
         vec![
             pending(7, "hello", "not-a-strategy", 8, 0),
             pending(8, "hello", "dense", 2, 0),
         ],
         &mut |c, r| done.push((c, r)),
     );
+    assert!(over.is_empty(), "unexpected admission overflow");
     // the invalid request errors immediately, before any decode step
     assert_eq!(done.len(), 1);
     assert_eq!(done[0].0, 7);
@@ -267,29 +271,158 @@ fn unknown_strategy_rejected_by_engine_path() {
 
 #[test]
 fn stop_state_and_kv_window_bound_generation() {
-    // a request asking for more tokens than the KV window can hold
-    // finishes with reason "length" at the window edge instead of
-    // running forever or overflowing positions
+    // a request whose budget exactly fills the KV window finishes with
+    // reason "length" at the window edge (no position overflow); asking
+    // for more than the window can hold is rejected at admission with
+    // an explicit error — never silently capped or truncated
     let engine = common::engine();
     let max_seq = engine.spec().max_seq;
     let prompt = "the grey cat is quiet and";
-    // prompt occupies len+BOS positions; the final step may emit one
-    // last token from the last in-window logits
-    let capacity = max_seq - (prompt.len() + 1) + 1;
+    let n_prompt = prompt.len() + 1;
+    // the final token comes from the last in-window logits and needs
+    // no KV write, so exact capacity is max_seq - n_prompt + 1
+    let capacity = max_seq - n_prompt + 1;
     let mut batcher = Batcher::new(engine, 4).unwrap();
     let mut done: Vec<(u64, Response)> = Vec::new();
-    batcher.admit(
-        vec![pending(1, prompt, "dense", 10_000, 0)],
+    let over = batcher.admit(
+        vec![pending(1, prompt, "dense", capacity, 0)],
         &mut |c, r| done.push((c, r)),
     );
+    assert!(over.is_empty(), "unexpected admission overflow");
     drive(&mut batcher, &mut done, 1);
-    assert_eq!(done.len(), 1, "window-bounded request must finish");
+    assert_eq!(done.len(), 1, "window-filling request must finish");
     let r = &done[0].1;
-    assert!(r.error.is_none());
+    assert!(r.error.is_none(), "{:?}", r.error);
     assert_eq!(r.finish, "length");
     assert!(
         r.tokens <= capacity,
         "{} tokens exceeds KV capacity {capacity}",
         r.tokens
     );
+
+    // one token more than the window holds → explicit admission error
+    let over = batcher.admit(
+        vec![pending(2, prompt, "dense", capacity + 1, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    assert!(over.is_empty(), "unexpected admission overflow");
+    assert_eq!(done.len(), 2);
+    let err = done[1].1.error.as_deref().unwrap_or("");
+    assert!(
+        err.contains("prompt too long"),
+        "expected explicit window rejection, got {err:?}"
+    );
+}
+
+// ------------------------------------------- chunked long-prompt admission
+
+#[test]
+fn long_prompt_is_served_in_full_without_truncation() {
+    let engine = common::engine();
+    let spec = engine.spec().clone();
+    // ≥ 3× the prefill frame: must stream through ≥ 3 chunks
+    let long_prompt = "abcdefghij ".repeat(3 * spec.prefill_len / 11 + 1);
+    let n_prompt = long_prompt.len() + 1;
+    assert!(n_prompt >= 3 * spec.prefill_len);
+    assert!(n_prompt + 8 <= spec.max_seq);
+
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    let over = batcher.admit(
+        vec![pending(1, &long_prompt, "i-glass", 8, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    assert!(over.is_empty(), "unexpected admission overflow");
+    assert_eq!(batcher.prefilling(), 1, "long prompt streams in");
+    assert_eq!(batcher.active(), 0, "no decoding before the final chunk");
+    drive(&mut batcher, &mut done, 1);
+    assert_eq!(done.len(), 1);
+    let r = &done[0].1;
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(
+        r.prompt_tokens, n_prompt,
+        "every prompt token must be consumed (no tail truncation)"
+    );
+    assert_eq!(r.tokens, 8);
+    assert!((r.density - 0.5).abs() < 0.02, "glass mask built post-stream");
+    assert!(
+        batcher.chunks >= 3,
+        "expected a multi-chunk stream, got {} chunks",
+        batcher.chunks
+    );
+}
+
+#[test]
+fn in_flight_decode_continues_during_chunked_admission() {
+    // the stall this PR removes: admitting a long prompt used to run a
+    // monolithic prefill while every in-flight slot waited
+    let engine = common::engine();
+    let spec = engine.spec().clone();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+
+    // a short request decodes alone first
+    let over = batcher.admit(
+        vec![pending(1, "once there was a red fox", "i-glass", 6, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    assert!(over.is_empty(), "unexpected admission overflow");
+    assert_eq!(batcher.active(), 1);
+    for _ in 0..2 {
+        batcher.step(&mut |c, r| done.push((c, r))).unwrap();
+    }
+    assert!(done.is_empty());
+
+    // a long prompt claims a slot and streams chunk by chunk
+    let long_prompt = "abcdefghijklm ".repeat(3 * spec.prefill_len / 14 + 1);
+    let n_long = long_prompt.len() + 1;
+    assert!(n_long >= 3 * spec.prefill_len && n_long + 8 <= spec.max_seq);
+    let over = batcher.admit(
+        vec![pending(2, &long_prompt, "griffin", 8, 0)],
+        &mut |c, r| done.push((c, r)),
+    );
+    assert!(over.is_empty(), "unexpected admission overflow");
+    assert_eq!(batcher.prefilling(), 1);
+    assert_eq!(batcher.active(), 1, "short request still in flight");
+
+    drive(&mut batcher, &mut done, 2);
+    assert_eq!(done.len(), 2, "both requests must complete");
+    // the short request keeps decoding THROUGH the stream and finishes
+    // first — its slot never stalls for the newcomer's prompt
+    assert_eq!(done[0].0, 1, "short request delivered first");
+    assert_eq!(done[1].0, 2);
+    let short = &done[0].1;
+    let long = &done[1].1;
+    assert!(short.error.is_none() && long.error.is_none());
+    assert_eq!(short.tokens, 6);
+    assert_eq!(long.tokens, 8);
+    assert_eq!(long.prompt_tokens, n_long, "stream consumed in full");
+    assert!(
+        batcher.overlap_steps > 0,
+        "decode steps must overlap prefill streaming (no-stall evidence)"
+    );
+    assert!(batcher.chunks >= 3, "got {} chunks", batcher.chunks);
+}
+
+#[test]
+fn burst_wider_than_free_slots_is_requeued_not_failed() {
+    // Batcher::admit used to shed overload with "batcher overloaded"
+    // errors, losing requests; overflow now flows back to the scheduler
+    // queue front and every request is eventually served (FCFS)
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    // scheduler wider than the batcher, so next_batch can hand admit()
+    // more requests than there are decode slots
+    let sched = Scheduler::new(10, Duration::from_millis(1));
+    for i in 0..10 {
+        sched.submit(pending(i, "the blue owl is", "dense", 3, 0));
+    }
+    sched.close();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    batcher.run(&sched, &mut |c, r| done.push((c, r)));
+    assert_eq!(done.len(), 10, "every burst request must be served");
+    for (c, r) in &done {
+        assert!(r.error.is_none(), "conn {c}: {:?}", r.error);
+        assert_eq!(r.tokens, 3);
+    }
 }
