@@ -7,29 +7,47 @@
 //!     cargo bench --bench bench_decode             # full run
 //!     cargo bench --bench bench_decode -- --smoke  # CI smoke (tiny
 //!                                                  # counts, ~seconds)
+//!     ... -- --smoke --check-against BENCH_baseline.json
+//!                                   # CI regression gate: non-zero
+//!                                   # exit on a >15% decode-throughput
+//!                                   # drop or lost prefix-cache savings
+//!     ... -- --smoke --write-baseline BENCH_baseline.json
+//!                                   # refresh the checked-in baseline
 //!
 //! Results land in BENCH_decode.json next to the bench's working
 //! directory, including the fused-vs-step speedup, the continuous
-//! batcher's tokens/s, and the mixed long+short workload's
-//! stall-removal evidence (decode steps overlapped with prefill
-//! streaming).
+//! batcher's tokens/s, the mixed long+short workload's stall-removal
+//! evidence (decode steps overlapped with prefill streaming), and the
+//! shared-system-prompt workload's prefill tokens saved by the
+//! prefix cache.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
 
+use glass::engine::prefix_cache::CacheMode;
 use glass::engine::Engine;
 use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
-use glass::server::batcher::Batcher;
+use glass::server::batcher::{Batcher, BatcherOptions};
 use glass::server::protocol::Request;
 use glass::server::scheduler::{Pending, Scheduler};
 use glass::tensor::TensorF;
-use glass::util::bench::Bencher;
+use glass::util::bench::{check_regression, Bencher};
 use glass::util::json::Json;
+
+/// Value of `--flag <value>` in raw argv, if present.
+fn arg_value(flag: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == flag)
+        .and_then(|i| argv.get(i + 1).cloned())
+}
 
 fn main() {
     // --smoke: run every row at minimal iteration counts so CI can keep
     // the bench code compiling AND executing without a multi-minute job
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let check_against = arg_value("--check-against");
+    let write_baseline = arg_value("--write-baseline");
     let engine = Engine::load_or_synthetic(Path::new("artifacts"))
         .expect("load engine");
     let spec = engine.spec().clone();
@@ -139,6 +157,7 @@ fn main() {
                     density: 0.5,
                     max_tokens,
                     refresh_every,
+                    cache: CacheMode::On,
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
@@ -148,8 +167,15 @@ fn main() {
     };
     // setup (prior loading + executable warm-up) stays OUTSIDE the
     // measured closures so these rows compare fairly with the fused
-    // rows above, which also time only the engine call
-    let mut batcher = Batcher::new(engine.clone(), 4).expect("batcher");
+    // rows above, which also time only the engine call. The prefix
+    // cache is DISABLED here so these rows keep measuring the cold
+    // prefill + decode path (the shared-prefix rows below measure the
+    // cache).
+    let mut batcher = Batcher::with_options(
+        engine.clone(),
+        BatcherOptions::new(4).without_cache(),
+    )
+    .expect("batcher");
     b.bench(
         "continuous batch serve (b=4, 16 reqs)",
         (n_reqs * max_tokens) as f64,
@@ -215,6 +241,7 @@ fn main() {
                     density: 0.5,
                     max_tokens,
                     refresh_every: 0,
+                    cache: CacheMode::On,
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
@@ -245,6 +272,105 @@ fn main() {
         assert!(
             batcher.overlap_steps > 0,
             "in-flight decode stalled during chunked prefill"
+        );
+    }
+
+    // -------------------- shared-system-prompt workload (prefix cache)
+    // every request = one shared multi-frame system prompt + a short
+    // distinct user suffix — the serving pattern the shared-prefix
+    // cache exists for. The first pass pays the prefix miss once
+    // (same-prefix followers defer behind the publisher); every later
+    // pass exact-hits and skips prefill entirely. `prefill_tokens_saved`
+    // counts prompt tokens spliced from the cache instead of recomputed.
+    let sys_prompt =
+        "the shared system prompt is: ans".repeat(2 * spec.prefill_len / 32 + 1);
+    let shared_prompt =
+        |i: usize| format!("{sys_prompt} user{i} asks");
+    let prefix_tokens = sys_prompt.len() + 1; // + BOS
+    let longest = shared_prompt(n_reqs - 1).len() + 1;
+    let shared_fits = chunking
+        && sys_prompt.len() >= 2 * spec.prefill_len
+        && longest + max_tokens <= spec.max_seq + 1;
+    let submit_shared = |sched: &Scheduler| {
+        for i in 0..n_reqs {
+            sched.submit(Pending {
+                request: Request {
+                    id: i as u64 + 1,
+                    prompt: shared_prompt(i),
+                    strategy: "i-glass".into(),
+                    lambda: 0.5,
+                    density: 0.5,
+                    max_tokens,
+                    refresh_every: 0,
+                    cache: CacheMode::On,
+                },
+                arrived: Instant::now(),
+                conn_id: i as u64,
+            });
+        }
+        sched.close();
+    };
+    let serve_shared = |batcher: &mut Batcher| {
+        let sched = Scheduler::new(4, Duration::from_millis(1))
+            .with_prefix_grouping(spec.prefill_len);
+        submit_shared(&sched);
+        let mut served = 0usize;
+        batcher.run(&sched, &mut |_, resp| {
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            served += resp.tokens;
+        });
+        served
+    };
+    let mut saved_warm = 0u64;
+    if !shared_fits {
+        println!(
+            "skipping shared-prefix rows (prefill_chunk available: \
+             {chunking}, workload fits window: {})",
+            longest + max_tokens <= spec.max_seq + 1
+        );
+    } else {
+        let mut cold = Batcher::with_options(
+            engine.clone(),
+            BatcherOptions::new(4).without_cache(),
+        )
+        .expect("batcher");
+        b.bench(
+            "shared-prefix serve (cache off)",
+            (n_reqs * max_tokens) as f64,
+            || serve_shared(&mut cold),
+        );
+        let mut warm =
+            Batcher::new(engine.clone(), 4).expect("batcher");
+        b.bench(
+            "shared-prefix serve (cache on)",
+            (n_reqs * max_tokens) as f64,
+            || serve_shared(&mut warm),
+        );
+        // one extra fully-warm pass, measured in tokens not time: with
+        // every full prompt published, each request exact-hits, so the
+        // pass saves every single prompt token — deterministic and
+        // machine-independent, which is what the CI gate pins
+        let before = warm.prefill_tokens_saved;
+        serve_shared(&mut warm);
+        saved_warm = warm.prefill_tokens_saved - before;
+        let snap = warm.telemetry().snapshot();
+        println!(
+            "prefix cache: {} prompt tokens saved on the warm pass \
+             (shared prefix is {prefix_tokens} tokens), {} total; \
+             {} hits / {} misses, {} inserts, {} evictions, \
+             {} bytes resident",
+            saved_warm,
+            warm.prefill_tokens_saved,
+            snap.hits,
+            snap.misses,
+            snap.inserts,
+            snap.evictions,
+            snap.bytes_resident
+        );
+        assert!(
+            saved_warm >= prefix_tokens as u64,
+            "warm pass saved {saved_warm} < the {prefix_tokens}-token \
+             shared prefix — the cache is not hitting"
         );
     }
 
@@ -314,7 +440,51 @@ fn main() {
             Json::Num(batcher.overlap_steps as f64),
         );
     }
+    if shared_fits {
+        doc.set(
+            "shared_prefix_toks_per_s",
+            Json::Num(row("shared-prefix serve (cache on)").throughput()),
+        );
+        doc.set(
+            "shared_prefix_off_toks_per_s",
+            Json::Num(
+                row("shared-prefix serve (cache off)").throughput(),
+            ),
+        );
+        doc.set(
+            "prefill_tokens_saved_warm",
+            Json::Num(saved_warm as f64),
+        );
+        doc.set(
+            "shared_prefix_tokens",
+            Json::Num(prefix_tokens as f64),
+        );
+    }
     let path = Path::new("BENCH_decode.json");
     doc.write_file(path).expect("write BENCH_decode.json");
     println!("wrote {}", path.display());
+
+    // ------------------------------------------------- regression gate
+    if let Some(base_path) = check_against {
+        let baseline = Json::parse_file(Path::new(&base_path))
+            .unwrap_or_else(|e| {
+                panic!("cannot read baseline {base_path}: {e}")
+            });
+        let report = check_regression(&doc, &baseline, 0.15);
+        for line in &report.checked {
+            println!("gate: {line}");
+        }
+        if !report.passed() {
+            for f in &report.failures {
+                eprintln!("BENCH REGRESSION: {f}");
+            }
+            std::process::exit(1);
+        }
+        println!("bench gate passed against {base_path}");
+    }
+    if let Some(out) = write_baseline {
+        doc.write_file(Path::new(&out))
+            .unwrap_or_else(|e| panic!("cannot write {out}: {e}"));
+        println!("wrote baseline {out}");
+    }
 }

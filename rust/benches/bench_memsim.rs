@@ -84,9 +84,9 @@ fn main() {
     for d10 in (1..=10).rev() {
         let r = simulate_decode(&dev, gemma, d10 as f64 / 10.0, 64);
         cliff.row(vec![
-            format!("{}", d10 * 10),
+            (d10 * 10).to_string(),
             fnum(r.tokens_per_s, 1),
-            format!("{}", r.resident),
+            r.resident.to_string(),
         ]);
     }
     println!("{}", cliff.to_ascii());

@@ -34,8 +34,8 @@ fn main() -> Result<()> {
                 fnum(dense.tokens_per_s, 1),
                 fnum(sparse.tokens_per_s, 1),
                 format!("{speedup:.2}x"),
-                format!("{}", dense.resident),
-                format!("{}", sparse.resident),
+                dense.resident.to_string(),
+                sparse.resident.to_string(),
             ]);
         }
         println!("{}", t.to_ascii());
@@ -55,7 +55,7 @@ fn main() -> Result<()> {
         sweep.row(vec![
             format!("{:.0}", d * 100.0),
             fnum(r.tokens_per_s, 1),
-            format!("{}", r.resident),
+            r.resident.to_string(),
             fnum(r.paging_s / r.tokens as f64 * 1e3, 2),
         ]);
     }

@@ -48,6 +48,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Server bind address for `glass serve`.
     pub bind: String,
+    /// Shared-prefix cache byte budget for `glass serve` (0 = off).
+    pub cache_bytes: usize,
 }
 
 impl Default for RunConfig {
@@ -68,6 +70,8 @@ impl Default for RunConfig {
             kld_top: 100,
             seed: 0,
             bind: "127.0.0.1:7433".to_string(),
+            cache_bytes:
+                crate::engine::prefix_cache::DEFAULT_CACHE_BYTES,
         }
     }
 }
@@ -131,6 +135,9 @@ impl RunConfig {
         if let Some(v) = get("bind") {
             self.bind = v.as_str()?.to_string();
         }
+        if let Some(v) = get("cache_bytes") {
+            self.cache_bytes = v.as_int()? as usize;
+        }
         Ok(())
     }
 
@@ -160,6 +167,8 @@ impl RunConfig {
         if let Some(v) = args.get("bind") {
             self.bind = v.to_string();
         }
+        self.cache_bytes =
+            args.get_usize("cache-bytes", self.cache_bytes)?;
         Ok(())
     }
 }

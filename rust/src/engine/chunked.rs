@@ -21,6 +21,7 @@
 
 use anyhow::{bail, Result};
 
+use super::prefix_cache::PrefixSeed;
 use super::{Engine, KvState, PrefillResult};
 use crate::glass::ImportanceMap;
 use crate::tensor::{TensorF, TensorI};
@@ -45,6 +46,10 @@ pub struct ChunkedPrefill {
     logits: Vec<f32>,
     /// Chunk executable calls made so far.
     pub chunks_done: usize,
+    /// Tokens seeded from the shared-prefix cache (0 on a cold stream):
+    /// the stream started at this offset instead of recomputing the
+    /// prefix — the serving layer's `cached_prompt_tokens` telemetry.
+    pub cached: usize,
 }
 
 impl ChunkedPrefill {
@@ -70,6 +75,21 @@ impl ChunkedPrefill {
     /// Merged local importance over all consumed chunks.
     pub fn local_importance(&self) -> &ImportanceMap {
         &self.merged
+    }
+
+    /// Full encoded prompt (BOS + token ids).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// Evidence mass (token count) behind [`Self::local_importance`].
+    pub fn merged_weight(&self) -> f64 {
+        self.merged_weight
+    }
+
+    /// Last-position logits after the most recent chunk ([vocab]).
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
     }
 
     /// Assemble the finished stream into a one-slot [`PrefillResult`] —
@@ -172,7 +192,62 @@ impl Engine {
             merged_weight: 0.0,
             logits: vec![0.0; spec.vocab],
             chunks_done: 0,
+            cached: 0,
         })
+    }
+
+    /// Begin a chunked prefill from a cached prefix: the stream starts
+    /// at the seed's length with the prefix's KV rows spliced in and the
+    /// merge state `(stats, weight, logits)` restored — continuing with
+    /// the same chunk partition and merge arithmetic a cold stream would
+    /// have used from that point, so the finished statistics are
+    /// bit-identical when the seed was published at a chunk boundary of
+    /// the same partition. A seed covering the whole prompt yields a
+    /// stream that [`ChunkedPrefill::is_done`] immediately (exact-hit:
+    /// zero executable calls).
+    pub fn chunked_prefill_resume(
+        &self,
+        tokens: Vec<i32>,
+        chunk_len: usize,
+        seed: PrefixSeed,
+    ) -> Result<ChunkedPrefill> {
+        let mut st = self.chunked_prefill_from_tokens(tokens, chunk_len)?;
+        let spec = self.spec();
+        if seed.len > st.tokens.len() {
+            bail!(
+                "cached prefix of {} tokens exceeds the {}-token prompt",
+                seed.len,
+                st.tokens.len()
+            );
+        }
+        if seed.logits.len() != spec.vocab {
+            bail!(
+                "cached logits of {} values do not match vocab {}",
+                seed.logits.len(),
+                spec.vocab
+            );
+        }
+        if seed.stats.n_layers() != spec.n_layers
+            || seed.stats.m() != spec.ffn_m
+        {
+            bail!("cached statistics shape mismatch");
+        }
+        let row_n =
+            spec.n_layers * spec.n_heads * seed.len * spec.head_dim;
+        if seed.k_rows.len() != row_n || seed.v_rows.len() != row_n {
+            bail!("cached KV rows shape mismatch");
+        }
+        if seed.len == 0 {
+            return Ok(st);
+        }
+        st.kv
+            .write_prefix_rows(0, seed.len, &seed.k_rows, &seed.v_rows);
+        st.merged = seed.stats;
+        st.merged_weight = seed.weight;
+        st.logits = seed.logits;
+        st.consumed = seed.len;
+        st.cached = seed.len;
+        Ok(st)
     }
 
     /// Feed ONE chunk of the prompt through the `prefill_chunk`
@@ -294,15 +369,69 @@ mod tests {
             steps += 1;
             assert!(steps < 16, "runaway chunk loop");
         }
-        assert_eq!(st.chunks_done, (total + pl - 1) / pl);
+        assert_eq!(st.chunks_done, total.div_ceil(pl));
         assert_eq!(st.consumed(), total);
         assert_eq!(st.remaining(), 0);
         // stepping a finished stream is a no-op
         assert!(e.chunked_prefill_step(&mut st).unwrap());
-        assert_eq!(st.chunks_done, (total + pl - 1) / pl);
+        assert_eq!(st.chunks_done, total.div_ceil(pl));
         let pre = st.result().unwrap();
         assert_eq!(pre.lens, vec![total]);
         assert_eq!(pre.truncated, vec![false]);
+    }
+
+    #[test]
+    fn resume_from_seed_skips_the_cached_prefix() {
+        let e = engine();
+        let spec = e.spec().clone();
+        let pl = spec.prefill_len;
+        let prompt = "abcdef ".repeat(2 * pl / 7 + 1);
+
+        // cold reference stream, captured at the first chunk boundary
+        let mut cold = e.chunked_prefill_start(&prompt).unwrap();
+        assert!(!e.chunked_prefill_step(&mut cold).unwrap());
+        let (k_rows, v_rows) =
+            cold.kv.extract_prefix_rows(0, cold.consumed());
+        let seed = PrefixSeed {
+            len: cold.consumed(),
+            k_rows,
+            v_rows,
+            stats: cold.local_importance().clone(),
+            weight: cold.merged_weight(),
+            logits: cold.logits().to_vec(),
+        };
+
+        let tokens = e.tok.encode_with_bos(&prompt);
+        let total = tokens.len();
+        let mut warm = e
+            .chunked_prefill_resume(tokens.clone(), pl, seed.clone())
+            .unwrap();
+        assert_eq!(warm.cached, pl);
+        assert_eq!(warm.consumed(), pl);
+        assert_eq!(warm.chunks_done, 0);
+        while !e.chunked_prefill_step(&mut warm).unwrap() {}
+        // one fewer executable call than the cold stream needs
+        assert_eq!(warm.chunks_done, total.div_ceil(pl) - 1);
+
+        // finish the cold stream and compare: identical results
+        while !e.chunked_prefill_step(&mut cold).unwrap() {}
+        let (a, b) = (cold.result().unwrap(), warm.result().unwrap());
+        assert_eq!(a.lens, b.lens);
+        assert_eq!(a.logits.data, b.logits.data);
+        assert_eq!(a.stats.data, b.stats.data);
+        assert_eq!(a.kv.k.data, b.kv.k.data);
+        assert_eq!(a.kv.v.data, b.kv.v.data);
+
+        // a seed longer than the prompt is rejected
+        let mut too_long = seed.clone();
+        too_long.len = total + 1;
+        assert!(e
+            .chunked_prefill_resume(tokens.clone(), pl, too_long)
+            .is_err());
+        // malformed cached rows are rejected, not spliced
+        let mut bad_rows = seed;
+        bad_rows.k_rows.pop();
+        assert!(e.chunked_prefill_resume(tokens, pl, bad_rows).is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! route.
 
 pub mod chunked;
+pub mod prefix_cache;
 pub mod session;
 
 use std::path::Path;
@@ -76,6 +77,69 @@ impl KvState {
                 .copy_from_slice(&src.k.data[s..s + plane]);
             self.v.data[d..d + plane]
                 .copy_from_slice(&src.v.data[s..s + plane]);
+        }
+    }
+
+    /// Copy one slot's first `len` KV positions out into compact
+    /// `[L, H, len, Dh]` buffers (K, V) — the shared-prefix cache's
+    /// storage form, which holds only the prefix rows instead of the
+    /// whole `max_seq` window. Positions are contiguous within each
+    /// (layer, head) plane of the `[L, B, H, T, Dh]` layout, so each
+    /// copy is one contiguous `len · Dh` slice.
+    pub fn extract_prefix_rows(
+        &self,
+        slot: usize,
+        len: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (l_n, b) = (self.k.shape[0], self.k.shape[1]);
+        let (h_n, t_n, dh) =
+            (self.k.shape[2], self.k.shape[3], self.k.shape[4]);
+        assert!(slot < b, "slot out of range");
+        assert!(len <= t_n, "prefix longer than the KV window");
+        let mut k_rows = vec![0.0f32; l_n * h_n * len * dh];
+        let mut v_rows = vec![0.0f32; l_n * h_n * len * dh];
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let src = (((l * b + slot) * h_n + h) * t_n) * dh;
+                let dst = ((l * h_n + h) * len) * dh;
+                let n = len * dh;
+                k_rows[dst..dst + n]
+                    .copy_from_slice(&self.k.data[src..src + n]);
+                v_rows[dst..dst + n]
+                    .copy_from_slice(&self.v.data[src..src + n]);
+            }
+        }
+        (k_rows, v_rows)
+    }
+
+    /// Splice compact `[L, H, len, Dh]` prefix rows (as produced by
+    /// [`KvState::extract_prefix_rows`]) into one slot's positions
+    /// `0..len`, leaving every other row untouched — how a cache hit's
+    /// KV lands in a fresh chunked-prefill stream.
+    pub fn write_prefix_rows(
+        &mut self,
+        slot: usize,
+        len: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) {
+        let (l_n, b) = (self.k.shape[0], self.k.shape[1]);
+        let (h_n, t_n, dh) =
+            (self.k.shape[2], self.k.shape[3], self.k.shape[4]);
+        assert!(slot < b, "slot out of range");
+        assert!(len <= t_n, "prefix longer than the KV window");
+        assert_eq!(k_rows.len(), l_n * h_n * len * dh, "K rows shape");
+        assert_eq!(v_rows.len(), l_n * h_n * len * dh, "V rows shape");
+        for l in 0..l_n {
+            for h in 0..h_n {
+                let dst = (((l * b + slot) * h_n + h) * t_n) * dh;
+                let src = ((l * h_n + h) * len) * dh;
+                let n = len * dh;
+                self.k.data[dst..dst + n]
+                    .copy_from_slice(&k_rows[src..src + n]);
+                self.v.data[dst..dst + n]
+                    .copy_from_slice(&v_rows[src..src + n]);
+            }
         }
     }
 }
@@ -501,5 +565,61 @@ mod tests {
             }
         }
         assert!(dst.v.data.iter().any(|&x| x == 3.0));
+    }
+
+    #[test]
+    fn prefix_rows_roundtrip_touches_only_the_prefix() {
+        let spec = tiny_spec();
+        // fill a 2-slot cache with position-tagged values
+        let mut src = KvState::zeros(&spec, 2);
+        let (h_n, t_n, dh) =
+            (spec.n_heads, spec.max_seq, spec.head_dim);
+        for l in 0..spec.n_layers {
+            for slot in 0..2 {
+                for h in 0..h_n {
+                    for p in 0..t_n {
+                        let base =
+                            (((l * 2 + slot) * h_n + h) * t_n + p) * dh;
+                        for e in 0..dh {
+                            let tag = (l * 1000
+                                + slot * 100
+                                + p * 10
+                                + e) as f32;
+                            src.k.data[base + e] = tag;
+                            src.v.data[base + e] = -tag;
+                        }
+                    }
+                }
+            }
+        }
+        let len = 3;
+        let (k_rows, v_rows) = src.extract_prefix_rows(1, len);
+        assert_eq!(k_rows.len(), spec.n_layers * h_n * len * dh);
+
+        let mut dst = KvState::zeros(&spec, 4);
+        dst.write_prefix_rows(2, len, &k_rows, &v_rows);
+        for l in 0..spec.n_layers {
+            for slot in 0..4 {
+                for h in 0..h_n {
+                    for p in 0..t_n {
+                        let base =
+                            (((l * 4 + slot) * h_n + h) * t_n + p) * dh;
+                        for e in 0..dh {
+                            let expect = if slot == 2 && p < len {
+                                (l * 1000 + 100 + p * 10 + e) as f32
+                            } else {
+                                0.0
+                            };
+                            assert_eq!(
+                                dst.k.data[base + e],
+                                expect,
+                                "k l{l} s{slot} h{h} p{p} e{e}"
+                            );
+                            assert_eq!(dst.v.data[base + e], -expect);
+                        }
+                    }
+                }
+            }
+        }
     }
 }

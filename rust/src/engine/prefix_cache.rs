@@ -1,0 +1,672 @@
+//! Shared-prefix cache: KV rows + merged GLASS statistics per prompt
+//! prefix.
+//!
+//! A server handling traffic that shares system prompts / few-shot
+//! headers recomputes the same prefill work — both the KV rows and the
+//! prompt-local importance evidence A^l — for every admission. Both are
+//! pure functions of the token prefix (KV rows of `(token, position)`
+//! under causal attention, statistics of the token multiset per chunk),
+//! so they can be computed once and spliced into every later request
+//! that shares the prefix.
+//!
+//! Each [`PrefixCache`] entry stores, for one token-id prefix:
+//!
+//!  * its compact KV rows (`[L, H, len, Dh]`, K and V — only the prefix
+//!    positions, not the whole `max_seq` window),
+//!  * the token-count-weighted merge of its per-chunk local statistics
+//!    plus the evidence mass behind it — exactly the `(merged, weight)`
+//!    state of a [`ChunkedPrefill`] after consuming the prefix, so a
+//!    resumed stream continues the merge with **bit-identical**
+//!    arithmetic to a cold one,
+//!  * the last-position logits after the prefix (so an exact full-prompt
+//!    hit needs no engine call at all).
+//!
+//! Lookup is **longest-prefix match** over token IDs (a flat scan today
+//! — entries are byte-budgeted, so the set stays small; a radix tree is
+//! the scale-up path, see ROADMAP). Entries are **ref-counted**: a hit
+//! pins its entry until the resumed stream completes, and eviction
+//! never frees a pinned entry. Eviction is LRU under a configurable
+//! byte budget, with bytes accounted through the [`memsim`] helpers so
+//! the cache and the edge-memory cost model agree on what "resident"
+//! means.
+//!
+//! [`ChunkedPrefill`]: super::chunked::ChunkedPrefill
+//! [`memsim`]: crate::memsim
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{KvState, PrefillResult};
+use crate::glass::ImportanceMap;
+use crate::memsim;
+use crate::runtime::ModelSpec;
+use crate::tensor::TensorF;
+
+/// Default serving-cache byte budget (32 MiB — generous for the
+/// synthetic spec, a deliberate floor for real bundles; tune with
+/// `--cache-bytes`).
+pub const DEFAULT_CACHE_BYTES: usize = 32 << 20;
+
+/// Per-request cache behavior, carried on the wire (`"cache"` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    /// Consult the cache and publish new prefixes (default).
+    On,
+    /// Bypass the cache entirely: no lookup, no insert.
+    Off,
+    /// Consult the cache but never insert.
+    ReadOnly,
+}
+
+impl CacheMode {
+    pub fn parse(s: &str) -> Result<CacheMode> {
+        Ok(match s {
+            "on" => CacheMode::On,
+            "off" => CacheMode::Off,
+            "readonly" => CacheMode::ReadOnly,
+            other => bail!("unknown cache mode '{other}' \
+                            (expected on|off|readonly)"),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CacheMode::On => "on",
+            CacheMode::Off => "off",
+            CacheMode::ReadOnly => "readonly",
+        }
+    }
+
+    /// May this request read cached prefixes?
+    pub fn reads(self) -> bool {
+        !matches!(self, CacheMode::Off)
+    }
+
+    /// May this request publish new prefixes?
+    pub fn writes(self) -> bool {
+        matches!(self, CacheMode::On)
+    }
+}
+
+/// Server-level aggregate cache counters, shared (Arc) between the
+/// batcher's engine thread and the connection threads that answer the
+/// `stats` protocol command — so operators can watch cache health
+/// without scraping per-response telemetry.
+#[derive(Debug, Default)]
+pub struct CacheTelemetry {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub inserts: AtomicU64,
+    pub evictions: AtomicU64,
+    pub bytes_resident: AtomicU64,
+    pub entries: AtomicU64,
+}
+
+/// A plain-data copy of [`CacheTelemetry`] at one instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub bytes_resident: u64,
+    pub entries: u64,
+}
+
+impl CacheTelemetry {
+    pub fn snapshot(&self) -> CacheStatsSnapshot {
+        CacheStatsSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes_resident: self.bytes_resident.load(Ordering::Relaxed),
+            entries: self.entries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Everything needed to resume a chunked prefill (or fabricate a whole
+/// [`PrefillResult`], on an exact full-prompt hit) from a cached prefix:
+/// the data cloned out of a cache entry by [`PrefixCache::lookup`].
+#[derive(Debug, Clone)]
+pub struct PrefixSeed {
+    /// Prefix length in tokens (incl. BOS).
+    pub len: usize,
+    /// Compact K rows `[L, H, len, Dh]` (see `KvState::extract_prefix_rows`).
+    pub k_rows: Vec<f32>,
+    /// Compact V rows, same layout.
+    pub v_rows: Vec<f32>,
+    /// Token-count-weighted merge of the prefix's per-chunk statistics.
+    pub stats: ImportanceMap,
+    /// Evidence mass (token count) behind `stats`.
+    pub weight: f64,
+    /// Last-position logits after the prefix (`[vocab]`).
+    pub logits: Vec<f32>,
+}
+
+/// A successful lookup: the cloned seed plus the pinned entry's id.
+/// The caller must [`PrefixCache::release`] the id when the splice (or
+/// the stream it resumed) is finished, so the entry becomes evictable
+/// again.
+#[derive(Debug)]
+pub struct PrefixHit {
+    pub id: usize,
+    pub seed: PrefixSeed,
+}
+
+struct Entry {
+    tokens: Vec<i32>,
+    k_rows: Vec<f32>,
+    v_rows: Vec<f32>,
+    stats: ImportanceMap,
+    weight: f64,
+    logits: Vec<f32>,
+    bytes: usize,
+    refs: usize,
+    tick: u64,
+}
+
+/// The cache itself (owned by one batcher; not internally synchronized —
+/// the engine loop is single-threaded, only the telemetry is shared).
+pub struct PrefixCache {
+    spec: ModelSpec,
+    budget_bytes: usize,
+    /// Slot-map of entries: ids are stable across evictions.
+    entries: Vec<Option<Entry>>,
+    bytes_resident: usize,
+    tick: u64,
+    telemetry: Arc<CacheTelemetry>,
+}
+
+impl PrefixCache {
+    pub fn new(
+        spec: ModelSpec,
+        budget_bytes: usize,
+        telemetry: Arc<CacheTelemetry>,
+    ) -> PrefixCache {
+        PrefixCache {
+            spec,
+            budget_bytes,
+            entries: Vec::new(),
+            bytes_resident: 0,
+            tick: 0,
+            telemetry,
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn bytes_resident(&self) -> usize {
+        self.bytes_resident
+    }
+
+    /// Live entry count.
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(|e| e.is_none())
+    }
+
+    /// Is this exact prefix cached? (test/diagnostic helper; does not
+    /// touch LRU order or counters)
+    pub fn contains(&self, tokens: &[i32]) -> bool {
+        self.entries
+            .iter()
+            .flatten()
+            .any(|e| e.tokens == tokens)
+    }
+
+    /// Length of the longest cached prefix of `tokens`, WITHOUT pinning,
+    /// LRU-bumping, or counting a hit/miss — the batcher's deferral
+    /// check peeks with this to decide whether a same-prefix admission
+    /// would hit anyway (and so must not be deferred).
+    pub fn peek_longest(&self, tokens: &[i32]) -> usize {
+        self.entries
+            .iter()
+            .flatten()
+            .filter(|e| tokens.starts_with(&e.tokens))
+            .map(|e| e.tokens.len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn entry_bytes(&self, len: usize) -> usize {
+        let s = &self.spec;
+        memsim::kv_prefix_bytes(s.n_layers, s.n_heads, s.head_dim, len)
+            + memsim::stats_map_bytes(s.n_layers, s.ffn_m)
+            + memsim::logits_bytes(s.vocab)
+            + memsim::token_ids_bytes(len)
+    }
+
+    /// Longest cached prefix of `tokens` (a cache entry whose token ids
+    /// are a prefix of the query — possibly all of it). On a hit the
+    /// entry is pinned (ref-counted) and its LRU tick bumped; the caller
+    /// must [`PrefixCache::release`] the returned id. Counts one hit or
+    /// one miss.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<PrefixHit> {
+        let mut best: Option<usize> = None;
+        let mut best_len = 0usize;
+        for (id, e) in self.entries.iter().enumerate() {
+            let Some(e) = e else { continue };
+            let longer = best.is_none() || e.tokens.len() > best_len;
+            if longer && tokens.starts_with(&e.tokens) {
+                best = Some(id);
+                best_len = e.tokens.len();
+            }
+        }
+        match best {
+            Some(id) => {
+                self.tick += 1;
+                let e = self.entries[id].as_mut().unwrap();
+                e.tick = self.tick;
+                e.refs += 1;
+                self.telemetry.hits.fetch_add(1, Ordering::Relaxed);
+                Some(PrefixHit {
+                    id,
+                    seed: PrefixSeed {
+                        len: e.tokens.len(),
+                        k_rows: e.k_rows.clone(),
+                        v_rows: e.v_rows.clone(),
+                        stats: e.stats.clone(),
+                        weight: e.weight,
+                        logits: e.logits.clone(),
+                    },
+                })
+            }
+            None => {
+                self.telemetry.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Unpin an entry returned by [`PrefixCache::lookup`]. Safe to call
+    /// after the entry was (impossibly) evicted — eviction skips pinned
+    /// entries, so a live pin always finds its entry.
+    pub fn release(&mut self, id: usize) {
+        if let Some(Some(e)) = self.entries.get_mut(id) {
+            e.refs = e.refs.saturating_sub(1);
+        }
+    }
+
+    /// Publish one prefix: KV rows are extracted from `kv` slot `slot`
+    /// (positions `0..tokens.len()`), statistics and logits are stored
+    /// verbatim. Duplicate prefixes are a no-op (LRU bump only). Entries
+    /// larger than the whole budget are refused. Returns the number of
+    /// evictions this insert caused.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        kv: &KvState,
+        slot: usize,
+        stats: &ImportanceMap,
+        weight: f64,
+        logits: &[f32],
+    ) -> usize {
+        if tokens.is_empty() {
+            return 0;
+        }
+        self.tick += 1;
+        // duplicate: refresh recency, keep the existing entry (its
+        // contents are a pure function of the prefix, so equal anyway)
+        for e in self.entries.iter_mut().flatten() {
+            if e.tokens == tokens {
+                e.tick = self.tick;
+                return 0;
+            }
+        }
+        let bytes = self.entry_bytes(tokens.len());
+        if bytes > self.budget_bytes {
+            return 0;
+        }
+        let evicted = self.evict_to_fit(bytes);
+        if self.bytes_resident + bytes > self.budget_bytes {
+            // everything still resident is pinned; refuse the insert
+            // rather than exceed the budget
+            return evicted;
+        }
+        let (k_rows, v_rows) = kv.extract_prefix_rows(slot, tokens.len());
+        let entry = Entry {
+            tokens: tokens.to_vec(),
+            k_rows,
+            v_rows,
+            stats: stats.clone(),
+            weight,
+            logits: logits.to_vec(),
+            bytes,
+            refs: 0,
+            tick: self.tick,
+        };
+        self.bytes_resident += bytes;
+        match self.entries.iter().position(|e| e.is_none()) {
+            Some(free) => self.entries[free] = Some(entry),
+            None => self.entries.push(Some(entry)),
+        }
+        self.telemetry.inserts.fetch_add(1, Ordering::Relaxed);
+        self.publish_residency();
+        evicted
+    }
+
+    /// Evict least-recently-used unpinned entries until `incoming` more
+    /// bytes fit the budget (or nothing unpinned remains). Returns the
+    /// eviction count.
+    fn evict_to_fit(&mut self, incoming: usize) -> usize {
+        let mut evicted = 0usize;
+        while self.bytes_resident + incoming > self.budget_bytes {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| match e {
+                    Some(e) if e.refs == 0 => Some((e.tick, i)),
+                    _ => None,
+                })
+                .min()
+                .map(|(_, i)| i);
+            let Some(i) = victim else { break };
+            let e = self.entries[i].take().unwrap();
+            self.bytes_resident -= e.bytes;
+            evicted += 1;
+        }
+        if evicted > 0 {
+            self.telemetry
+                .evictions
+                .fetch_add(evicted as u64, Ordering::Relaxed);
+            self.publish_residency();
+        }
+        evicted
+    }
+
+    fn publish_residency(&self) {
+        self.telemetry
+            .bytes_resident
+            .store(self.bytes_resident as u64, Ordering::Relaxed);
+        self.telemetry
+            .entries
+            .store(self.len() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Fabricate the one-slot [`PrefillResult`] an exact full-prompt hit
+/// stands in for: cached logits, cached stats, and a fresh KV window
+/// with the prefix rows spliced at positions `0..len` (rows beyond the
+/// prompt are zero — same as the chunked-prefill path leaves them; they
+/// are decode-overwritten scratch).
+pub fn seed_to_prefill_result(
+    spec: &ModelSpec,
+    seed: &PrefixSeed,
+) -> Result<PrefillResult> {
+    if seed.logits.len() != spec.vocab {
+        bail!(
+            "cached logits of {} values do not match vocab {}",
+            seed.logits.len(),
+            spec.vocab
+        );
+    }
+    // same hardening as `chunked_prefill_resume`: a malformed seed must
+    // be an error, not an assert panic inside the row splice
+    let row_n = spec.n_layers * spec.n_heads * seed.len * spec.head_dim;
+    if seed.k_rows.len() != row_n || seed.v_rows.len() != row_n {
+        bail!("cached KV rows shape mismatch");
+    }
+    let mut kv = KvState::zeros(spec, 1);
+    kv.write_prefix_rows(0, seed.len, &seed.k_rows, &seed.v_rows);
+    Ok(PrefillResult {
+        logits: TensorF::new(vec![1, spec.vocab], seed.logits.clone())?,
+        kv,
+        stats: seed.stats.to_stats_tensor(),
+        lens: vec![seed.len],
+        truncated: vec![false],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 260,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            head_dim: 4,
+            ffn_m: 8,
+            max_seq: 16,
+            prefill_len: 4,
+            score_len: 6,
+            gen_len: 2,
+            bos_id: 256,
+            pad_id: 257,
+        }
+    }
+
+    fn cache(budget: usize) -> PrefixCache {
+        PrefixCache::new(
+            tiny_spec(),
+            budget,
+            Arc::new(CacheTelemetry::default()),
+        )
+    }
+
+    /// A KV cache whose rows are tagged by position so splices are
+    /// checkable, plus matching stats/logits for `insert`.
+    fn seed_parts(
+        spec: &ModelSpec,
+        fill: f32,
+    ) -> (KvState, ImportanceMap, Vec<f32>) {
+        let mut kv = KvState::zeros(spec, 1);
+        for x in kv.k.data.iter_mut() {
+            *x = fill;
+        }
+        for x in kv.v.data.iter_mut() {
+            *x = -fill;
+        }
+        let stats = ImportanceMap::from_layers(vec![
+            vec![fill; spec.ffn_m];
+            spec.n_layers
+        ])
+        .unwrap();
+        let logits = vec![fill; spec.vocab];
+        (kv, stats, logits)
+    }
+
+    #[test]
+    fn mode_parse_roundtrip_and_rejection() {
+        for (s, m) in [
+            ("on", CacheMode::On),
+            ("off", CacheMode::Off),
+            ("readonly", CacheMode::ReadOnly),
+        ] {
+            assert_eq!(CacheMode::parse(s).unwrap(), m);
+            assert_eq!(m.as_str(), s);
+        }
+        assert!(CacheMode::parse("ON").is_err());
+        assert!(CacheMode::parse("").is_err());
+        assert!(CacheMode::On.reads() && CacheMode::On.writes());
+        assert!(!CacheMode::Off.reads() && !CacheMode::Off.writes());
+        assert!(
+            CacheMode::ReadOnly.reads() && !CacheMode::ReadOnly.writes()
+        );
+    }
+
+    #[test]
+    fn longest_prefix_match_wins() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits);
+        c.insert(&[256, 97, 98, 99], &kv, 0, &stats, 4.0, &logits);
+        c.insert(&[256, 120], &kv, 0, &stats, 2.0, &logits);
+
+        // longest matching prefix is picked over the shorter one
+        let hit = c.lookup(&[256, 97, 98, 99, 100, 101]).unwrap();
+        assert_eq!(hit.seed.len, 4);
+        assert_eq!(hit.seed.weight, 4.0);
+        c.release(hit.id);
+
+        // an entry longer than the query never matches
+        let hit = c.lookup(&[256, 97, 98]).unwrap();
+        assert_eq!(hit.seed.len, 2);
+        c.release(hit.id);
+
+        // exact-length match is legal (full-prompt hit)
+        let hit = c.lookup(&[256, 97, 98, 99]).unwrap();
+        assert_eq!(hit.seed.len, 4);
+        c.release(hit.id);
+
+        // divergent token → miss
+        assert!(c.lookup(&[256, 98, 98]).is_none());
+        let snap = c.telemetry.snapshot();
+        assert_eq!(snap.hits, 3);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.inserts, 3);
+        assert_eq!(snap.entries, 3);
+    }
+
+    #[test]
+    fn peek_longest_is_nonmutating() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        assert_eq!(c.peek_longest(&[256, 97]), 0, "empty cache");
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits);
+        c.insert(&[256, 97, 98], &kv, 0, &stats, 3.0, &logits);
+        assert_eq!(c.peek_longest(&[256, 97, 98, 99]), 3);
+        assert_eq!(c.peek_longest(&[256, 97, 99]), 2);
+        assert_eq!(c.peek_longest(&[257]), 0);
+        // no hit/miss counted, nothing pinned or LRU-bumped
+        let snap = c.telemetry.snapshot();
+        assert_eq!(snap.hits, 0);
+        assert_eq!(snap.misses, 0);
+        assert!(c
+            .entries
+            .iter()
+            .flatten()
+            .all(|e| e.refs == 0), "peek must not pin");
+    }
+
+    #[test]
+    fn duplicate_insert_is_a_noop() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits);
+        let before = c.bytes_resident();
+        c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes_resident(), before);
+        assert_eq!(c.telemetry.snapshot().inserts, 1);
+        // the empty prefix is never cached
+        c.insert(&[], &kv, 0, &stats, 0.0, &logits);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_honors_the_byte_budget_lru_first() {
+        let spec = tiny_spec();
+        let mut c = cache(0); // sized below
+        let two = c.entry_bytes(2);
+        // room for exactly two 2-token entries
+        c.budget_bytes = 2 * two;
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        assert_eq!(c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits), 0);
+        assert_eq!(c.insert(&[256, 98], &kv, 0, &stats, 2.0, &logits), 0);
+        assert_eq!(c.len(), 2);
+        assert!(c.bytes_resident() <= c.budget_bytes());
+
+        // touch the older entry so the OTHER one becomes LRU
+        let hit = c.lookup(&[256, 97, 99]).unwrap();
+        c.release(hit.id);
+        let evicted =
+            c.insert(&[256, 99], &kv, 0, &stats, 2.0, &logits);
+        assert_eq!(evicted, 1, "third entry must evict exactly one");
+        assert!(c.bytes_resident() <= c.budget_bytes());
+        assert!(c.contains(&[256, 97]), "recently-used entry survives");
+        assert!(!c.contains(&[256, 98]), "LRU entry evicted");
+        assert!(c.contains(&[256, 99]));
+        assert_eq!(c.telemetry.snapshot().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_entries_are_never_evicted() {
+        let spec = tiny_spec();
+        let mut c = cache(0);
+        let two = c.entry_bytes(2);
+        c.budget_bytes = two; // room for ONE entry
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits);
+        let pin = c.lookup(&[256, 97]).unwrap();
+
+        // inserting another entry cannot evict the pinned one: the
+        // insert is refused instead of exceeding the budget
+        let evicted =
+            c.insert(&[256, 98], &kv, 0, &stats, 2.0, &logits);
+        assert_eq!(evicted, 0);
+        assert!(c.contains(&[256, 97]), "pinned entry must survive");
+        assert!(!c.contains(&[256, 98]), "insert refused while pinned");
+        assert!(c.bytes_resident() <= c.budget_bytes());
+
+        // released → evictable again
+        c.release(pin.id);
+        let evicted =
+            c.insert(&[256, 98], &kv, 0, &stats, 2.0, &logits);
+        assert_eq!(evicted, 1);
+        assert!(!c.contains(&[256, 97]));
+        assert!(c.contains(&[256, 98]));
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_outright() {
+        let spec = tiny_spec();
+        let mut c = cache(1); // 1 byte budget: nothing fits
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        assert_eq!(c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits), 0);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_resident(), 0);
+    }
+
+    #[test]
+    fn seed_roundtrips_through_prefill_result() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 2.5);
+        c.insert(&[256, 97, 98], &kv, 0, &stats, 3.0, &logits);
+        let hit = c.lookup(&[256, 97, 98]).unwrap();
+        let pre = seed_to_prefill_result(&spec, &hit.seed).unwrap();
+        c.release(hit.id);
+        assert_eq!(pre.lens, vec![3]);
+        assert_eq!(pre.truncated, vec![false]);
+        assert_eq!(pre.logits.shape, vec![1, spec.vocab]);
+        assert!(pre.logits.data.iter().all(|&x| x == 2.5));
+        assert_eq!(
+            pre.stats.shape,
+            vec![1, spec.n_layers, spec.ffn_m]
+        );
+        // spliced rows carry the cached values; rows beyond len are zero
+        let (hn, tn, dh) = (spec.n_heads, spec.max_seq, spec.head_dim);
+        for l in 0..spec.n_layers {
+            for h in 0..hn {
+                for p in 0..tn {
+                    let base = ((l * hn + h) * tn + p) * dh;
+                    let expect = if p < 3 { 2.5 } else { 0.0 };
+                    for e in 0..dh {
+                        assert_eq!(pre.kv.k.data[base + e], expect);
+                        assert_eq!(pre.kv.v.data[base + e], -expect);
+                    }
+                }
+            }
+        }
+        // wrong vocab is rejected
+        let mut bad = hit.seed.clone();
+        bad.logits.pop();
+        assert!(seed_to_prefill_result(&spec, &bad).is_err());
+    }
+}

@@ -72,8 +72,8 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport> {
             fnum(sparse.tokens_per_s, 1),
             format!("{speedup:.2}x"),
             format!("{paper:.2}x"),
-            format!("{}", dense.resident),
-            format!("{}", sparse.resident),
+            dense.resident.to_string(),
+            sparse.resident.to_string(),
         ]);
         let mut o = Json::obj();
         o.set("dense_tok_s", Json::Num(dense.tokens_per_s))

@@ -73,7 +73,7 @@ pub fn run_oracle_overlap(engine: &Engine, cfg: &RunConfig) -> Result<ExpReport>
     );
     let mut layer_means: Vec<Vec<f64>> = vec![Vec::new(); 3];
     for li in 0..l {
-        let mut row = vec![format!("{li}")];
+        let mut row = vec![li.to_string()];
         for vi in 0..3 {
             let m = mean(&jacc[vi][li]);
             layer_means[vi].push(m);

@@ -41,8 +41,11 @@ SUBCOMMANDS:
     nps                       run NPS through the runtime [--check]
                               [--seqs N] [--len N]
     serve                     start the server [--bind ADDR] [--batch N]
+                              [--cache-bytes N]  (0 disables the
+                              shared-prefix cache)
     client                    send a request [--bind ADDR] [--prompt STR]
                               [--strategy S] [--density F]
+                              [--cache on|off|readonly] [--stats]
     profile                   run a mixed workload and print the profiler
 
 COMMON OPTIONS:
@@ -55,7 +58,7 @@ COMMON OPTIONS:
 
 fn main() {
     logging::init();
-    let args = match Args::from_env(&["check", "help"]) {
+    let args = match Args::from_env(&["check", "help", "stats"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}\n\n{USAGE}");
@@ -258,8 +261,19 @@ fn nps(args: &Args, cfg: &RunConfig) -> Result<()> {
 fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     let engine = load_engine(cfg)?;
     let batch = args.get_usize("batch", cfg.batch)?;
-    let server = Server::start(engine, &cfg.bind, batch)?;
-    println!("serving on {} (batch width {batch}); Ctrl-C to stop", server.addr);
+    let mut opts = glass::server::ServerOptions::new(batch);
+    opts.cache_bytes = cfg.cache_bytes;
+    let server = Server::start_with(engine, &cfg.bind, opts)?;
+    println!(
+        "serving on {} (batch width {batch}, prefix cache {}); \
+         Ctrl-C to stop",
+        server.addr,
+        if cfg.cache_bytes > 0 {
+            format!("{} MiB", cfg.cache_bytes >> 20)
+        } else {
+            "off".to_string()
+        }
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
@@ -267,9 +281,23 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
 
 fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
     let mut c = Client::connect(&cfg.bind)?;
+    if args.has_flag("stats") {
+        let s = c.stats()?;
+        println!(
+            "cache: {} hits / {} misses, {} inserts, {} evictions, \
+             {} entries, {} bytes resident",
+            s.hits, s.misses, s.inserts, s.evictions, s.entries,
+            s.bytes_resident
+        );
+        return Ok(());
+    }
     let prompt = args.get_str("prompt", "once there was a red fox");
     let strategy = args.get_str("strategy", "i-glass");
-    let resp = c.call(request(&prompt, &strategy, cfg.density))?;
+    let mut req = request(&prompt, &strategy, cfg.density);
+    req.cache = glass::engine::prefix_cache::CacheMode::parse(
+        &args.get_str("cache", "on"),
+    )?;
+    let resp = c.call(req)?;
     match resp.error {
         Some(e) => bail!("server error: {e}"),
         None => {
@@ -278,6 +306,13 @@ fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
                 "tokens:  {}  prefill {:.1} ms  decode {:.1} ms  density {:.2}",
                 resp.tokens, resp.prefill_ms, resp.decode_ms, resp.density
             );
+            if resp.cached_prompt_tokens > 0 {
+                println!(
+                    "cache:   {} of {} prompt tokens spliced from the \
+                     shared-prefix cache",
+                    resp.cached_prompt_tokens, resp.prompt_tokens
+                );
+            }
         }
     }
     Ok(())

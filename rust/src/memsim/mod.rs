@@ -19,6 +19,38 @@ pub use device::DeviceProfile;
 
 use crate::model::WeightFootprint;
 
+// ------------------------------------------------ cache byte accounting
+//
+// The serving layer's shared-prefix cache (engine::prefix_cache) budgets
+// itself in bytes; the conversion from cached artifacts to bytes lives
+// here so the cost model and the cache agree on what "resident" means.
+
+/// Bytes of one cached f32 KV prefix (K and V planes) of `len` positions:
+/// 2 · L · H · len · Dh · 4.
+pub fn kv_prefix_bytes(
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    len: usize,
+) -> usize {
+    2 * n_layers * n_heads * len * head_dim * std::mem::size_of::<f32>()
+}
+
+/// Bytes of one merged importance map ([L][m] of f32).
+pub fn stats_map_bytes(n_layers: usize, m: usize) -> usize {
+    n_layers * m * std::mem::size_of::<f32>()
+}
+
+/// Bytes of one cached last-position logits row ([vocab] of f32).
+pub fn logits_bytes(vocab: usize) -> usize {
+    vocab * std::mem::size_of::<f32>()
+}
+
+/// Bytes of the token-id key of a cached prefix ([len] of i32).
+pub fn token_ids_bytes(len: usize) -> usize {
+    len * std::mem::size_of::<i32>()
+}
+
 /// A simulated model workload (footprint + per-token compute).
 #[derive(Debug, Clone)]
 pub struct SimModel {
@@ -179,6 +211,21 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn cache_byte_accounting_scales_linearly() {
+        // K+V, 4 layers, 2 heads, 8-wide heads, 10 positions, f32
+        assert_eq!(kv_prefix_bytes(4, 2, 8, 10), 2 * 4 * 2 * 10 * 8 * 4);
+        assert_eq!(kv_prefix_bytes(4, 2, 8, 0), 0);
+        assert_eq!(stats_map_bytes(4, 32), 4 * 32 * 4);
+        assert_eq!(logits_bytes(260), 260 * 4);
+        assert_eq!(token_ids_bytes(7), 7 * 4);
+        // doubling the prefix doubles only the KV term
+        assert_eq!(
+            kv_prefix_bytes(4, 2, 8, 20),
+            2 * kv_prefix_bytes(4, 2, 8, 10)
+        );
     }
 
     #[test]

@@ -846,6 +846,88 @@ mod tests {
     }
 
     #[test]
+    fn prefill_chunk_outputs_ignore_unwritten_kv_contents() {
+        // The shared-prefix cache splices stored rows into an otherwise
+        // ZEROED KV window before resuming a stream, so the executable
+        // contract it relies on is: a chunk's outputs (logits, stats,
+        // and the rows it writes) are pure functions of (tokens,
+        // offset) — rows it does not write pass through untouched and
+        // are never read. The simulator must honor that bit for bit.
+        let be = backend();
+        let spec = synthetic_spec();
+        let s = spec.prefill_len;
+        let mut frame = vec![spec.pad_id; s];
+        let toks = [97, 98, 99, 100, 101];
+        frame[..toks.len()].copy_from_slice(&toks);
+        let tokens = TensorI::new(vec![1, s], frame).unwrap();
+        let lens = TensorI::new(vec![1], vec![toks.len() as i32]).unwrap();
+        let off = 7i32;
+        let offs = TensorI::new(vec![1], vec![off]).unwrap();
+        let kv_shape = [
+            spec.n_layers,
+            1,
+            spec.n_heads,
+            spec.max_seq,
+            spec.head_dim,
+        ];
+        let zeros = TensorF::zeros(&kv_shape);
+        let mut junk = TensorF::zeros(&kv_shape);
+        for x in junk.data.iter_mut() {
+            *x = 9.875;
+        }
+        let run = |k: &TensorF, v: &TensorF| {
+            be.call(
+                "prefill_chunk_b1",
+                &[
+                    Value::I32(tokens.clone()),
+                    Value::I32(lens.clone()),
+                    Value::I32(offs.clone()),
+                    Value::F32(k.clone()),
+                    Value::F32(v.clone()),
+                ],
+            )
+            .unwrap()
+        };
+        let a = run(&zeros, &zeros);
+        let b = run(&junk, &junk);
+        let f32s = |v: &Value| v.as_f32().unwrap().clone();
+        assert_eq!(
+            f32s(&a[0]).data,
+            f32s(&b[0]).data,
+            "logits depend on carried-in KV garbage"
+        );
+        assert_eq!(
+            f32s(&a[3]).data,
+            f32s(&b[3]).data,
+            "stats depend on carried-in KV garbage"
+        );
+        // written rows identical; untouched rows pass through verbatim
+        let (ka, kb) = (f32s(&a[1]), f32s(&b[1]));
+        let (hn, tn, dh) = (spec.n_heads, spec.max_seq, spec.head_dim);
+        for l in 0..spec.n_layers {
+            for h in 0..hn {
+                for p in 0..tn {
+                    let base = ((l * hn + h) * tn + p) * dh;
+                    let written = (p as i32) >= off
+                        && (p as i32) < off + toks.len() as i32;
+                    for e in 0..dh {
+                        if written {
+                            assert_eq!(
+                                ka.data[base + e],
+                                kb.data[base + e],
+                                "written row differs l{l} h{h} p{p}"
+                            );
+                        } else {
+                            assert_eq!(ka.data[base + e], 0.0);
+                            assert_eq!(kb.data[base + e], 9.875);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn synthetic_manifest_is_consistent() {
         let man = synthetic_manifest();
         assert_eq!(man.topk_k, man.model.ffn_m / 2);

@@ -4,16 +4,25 @@
 //! runs step by step; each slot holds an independent in-flight request
 //! ([`DecodeSession`]). Every step the batcher:
 //!
-//!  1. **admits** queued requests into free slots — a prompt that fits
-//!     the prefill frame runs a monolithic batched prefill and its KV
-//!     planes are spliced into the in-flight batch cache (slot surgery,
-//!     [`KvState::copy_slot_from`]); a *long* prompt claims its slot but
-//!     **streams in chunk by chunk** ([`ChunkedPrefill`]), at most
+//!  1. **admits** queued requests into free slots — each admission
+//!     first consults the **shared-prefix cache**
+//!     ([`PrefixCache`](crate::engine::prefix_cache)): an exact
+//!     full-prompt hit splices cached KV + statistics + logits and
+//!     skips prefill entirely; a partial hit resumes a chunked stream
+//!     after the cached prefix. Cold short prompts run a monolithic
+//!     batched prefill and their KV planes are spliced into the
+//!     in-flight batch cache (slot surgery,
+//!     [`KvState::copy_slot_from`]); a *long* prompt claims its slot
+//!     but **streams in chunk by chunk** ([`ChunkedPrefill`]), at most
 //!     [`Batcher::chunk_budget`] prefill chunks per decode step, so the
 //!     other slots keep emitting tokens while the newcomer's prompt
-//!     loads (no full-batch prefill stall). Its GLASS mask is built only
-//!     once the final chunk lands, from the chunk-merged statistics —
-//!     identical to what a monolithic prefill would have produced.
+//!     loads (no full-batch prefill stall). Completed-chunk prefixes
+//!     (and every cold short prompt) are **published back** into the
+//!     cache; a same-prefix admission arriving while a publisher is
+//!     still streaming is deferred so a burst pays its miss once. The
+//!     GLASS mask is built only once the final chunk lands, from the
+//!     chunk-merged statistics — identical to what a monolithic
+//!     prefill would have produced.
 //!     Requests the engine cannot hold (`prompt + max_tokens` beyond the
 //!     KV window) get an immediate error — prompts are **never silently
 //!     truncated**. Admissions beyond the free-slot count are returned
@@ -35,11 +44,16 @@
 //! the decode steps that ran concurrently with prefill streaming).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::engine::chunked::ChunkedPrefill;
+use crate::engine::prefix_cache::{
+    seed_to_prefill_result, CacheTelemetry, PrefixCache, PrefixHit,
+    DEFAULT_CACHE_BYTES,
+};
 use crate::engine::session::{DecodeSession, FinishReason};
 use crate::engine::{Engine, KvState};
 use crate::glass::{
@@ -57,13 +71,25 @@ pub const STAT_DECAY: f64 = 0.9;
 /// Pseudo-step mass of the prompt statistics in the refresh blend.
 pub const PROMPT_STAT_WEIGHT: f64 = 1.0;
 
+/// Admission-time facts that ride along to the finished response.
+#[derive(Debug, Clone, Copy, Default)]
+struct AdmitInfo {
+    prefill_ms: f64,
+    queue_ms: f64,
+    /// Prompt tokens spliced from the shared-prefix cache.
+    cached_prompt_tokens: usize,
+    /// Cache entries this request used (0 or 1).
+    cache_hits: usize,
+    /// Entries this request's own publishes evicted.
+    cache_evictions: usize,
+}
+
 struct Slot {
     pending: Pending,
     sess: DecodeSession,
     strategy: Strategy,
     prior_key: Option<&'static str>,
-    prefill_ms: f64,
-    queue_ms: f64,
+    admit: AdmitInfo,
     decode_started: Instant,
 }
 
@@ -75,8 +101,12 @@ struct Streaming {
     strategy: Strategy,
     prior_key: Option<&'static str>,
     chunks: ChunkedPrefill,
-    queue_ms: f64,
-    prefill_ms: f64,
+    admit: AdmitInfo,
+    /// Publish completed-chunk prefixes into the cache (mode `on`).
+    publish: bool,
+    /// Pinned cache entry this stream resumed from (released when the
+    /// stream completes or dies — eviction skips pinned entries).
+    pin: Option<usize>,
     /// Admission order — chunk scheduling is FCFS across streams.
     seq: u64,
 }
@@ -117,6 +147,15 @@ pub struct Batcher {
     /// (old artifact bundles may not; long prompts are then rejected
     /// at admission instead of failing server startup).
     chunking: bool,
+    /// Shared-prefix cache (None = disabled, `cache_bytes: 0`).
+    cache: Option<PrefixCache>,
+    /// Defer a same-prefix admission while an earlier request is still
+    /// streaming (and publishing) that prefix, so a burst of shared
+    /// prompts pays the prefill miss once.
+    group_prefixes: bool,
+    /// Server-level aggregate cache counters (shared with the `stats`
+    /// protocol command).
+    telemetry: Arc<CacheTelemetry>,
     /// Admission sequence counter (FCFS chunk scheduling).
     admit_seq: u64,
     /// Total decode steps executed (telemetry / tests).
@@ -128,6 +167,48 @@ pub struct Batcher {
     pub overlap_steps: u64,
     /// Total tokens emitted across finished requests.
     pub tokens_out: u64,
+    /// Total prompt tokens served from the cache instead of being
+    /// prefilled (the bench's "prefill tokens saved" observable).
+    pub prefill_tokens_saved: u64,
+}
+
+/// Construction knobs for [`Batcher::with_options`].
+#[derive(Debug, Clone)]
+pub struct BatcherOptions {
+    /// Decode slot count (must fit a compiled `decode_b{W}`).
+    pub batch_width: usize,
+    /// Shared-prefix cache byte budget; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Prefill chunks advanced per decode step (clamped to ≥ 1).
+    pub chunk_budget: usize,
+    /// Defer same-prefix admissions behind an in-flight publisher.
+    pub group_prefixes: bool,
+}
+
+impl BatcherOptions {
+    pub fn new(batch_width: usize) -> BatcherOptions {
+        BatcherOptions {
+            batch_width,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            chunk_budget: 1,
+            group_prefixes: true,
+        }
+    }
+
+    /// Disable the shared-prefix cache (and with it, deferral).
+    pub fn without_cache(mut self) -> BatcherOptions {
+        self.cache_bytes = 0;
+        self
+    }
+}
+
+/// One screened admission: the request plus its resolved strategy,
+/// prior key, and (single) tokenization.
+type Screened = (Pending, Strategy, Option<&'static str>, Vec<i32>);
+
+/// Leading tokens shared by two encoded prompts.
+fn shared_token_prefix(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
 /// Overwrite one slot's rows of the packed mask tensor ([W, L, m]);
@@ -167,13 +248,22 @@ pub fn resolve_strategy(
 }
 
 impl Batcher {
+    /// Build the batcher with default options (shared-prefix cache on
+    /// at [`DEFAULT_CACHE_BYTES`], prefix grouping on, chunk budget 1).
+    pub fn new(engine: Engine, batch_width: usize) -> Result<Batcher> {
+        Batcher::with_options(engine, BatcherOptions::new(batch_width))
+    }
+
     /// Build the batcher: pick the decode width, load the priors, and
     /// warm every executable the loop can hit — `decode_b{W}`,
     /// `prefill_b{n}` for every admission size the scheduler can form
     /// (1..=W), and `prefill_chunk_b1` for streaming admissions — so no
     /// first request pays compile latency.
-    pub fn new(engine: Engine, batch_width: usize) -> Result<Batcher> {
-        let width = engine.pick_batch(batch_width)?;
+    pub fn with_options(
+        engine: Engine,
+        opts: BatcherOptions,
+    ) -> Result<Batcher> {
+        let width = engine.pick_batch(opts.batch_width)?;
         let mut priors = HashMap::new();
         for (key, kind) in [
             ("a-glass", PriorKind::ANps),
@@ -211,6 +301,16 @@ impl Batcher {
         let spec = engine.spec();
         let mask_t =
             TensorF::ones(&[width, spec.n_layers, spec.ffn_m]);
+        let telemetry = Arc::new(CacheTelemetry::default());
+        let cache = if opts.cache_bytes > 0 {
+            Some(PrefixCache::new(
+                spec.clone(),
+                opts.cache_bytes,
+                Arc::clone(&telemetry),
+            ))
+        } else {
+            None
+        };
         Ok(Batcher {
             engine,
             width,
@@ -218,14 +318,29 @@ impl Batcher {
             kv,
             slots,
             mask_t,
-            chunk_budget: 1,
+            chunk_budget: opts.chunk_budget.max(1),
             chunking,
+            cache,
+            group_prefixes: opts.group_prefixes,
+            telemetry,
             admit_seq: 0,
             steps: 0,
             chunks: 0,
             overlap_steps: 0,
             tokens_out: 0,
+            prefill_tokens_saved: 0,
         })
+    }
+
+    /// Handle on the server-level aggregate cache counters (the `stats`
+    /// protocol command reads these from the connection threads).
+    pub fn telemetry(&self) -> Arc<CacheTelemetry> {
+        Arc::clone(&self.telemetry)
+    }
+
+    /// Is the shared-prefix cache enabled?
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.is_some()
     }
 
     pub fn free_slots(&self) -> usize {
@@ -329,11 +444,52 @@ impl Batcher {
 
         // claim one free slot per request, FCFS; the remainder flows
         // back to the caller (re-queued at the scheduler front by
-        // `run`), never shed as errors
+        // `run`), never shed as errors. A cache-reading request whose
+        // prompt shares ≥ one prefill frame with a prefix some
+        // in-flight (or just-claimed) stream is publishing is
+        // *deferred* the same way — when it retries, the prefix is
+        // cached and the burst's miss has been paid exactly once.
+        let min_share = spec.prefill_len;
         let mut overflow = Vec::new();
-        let mut claimed = Vec::new();
+        let mut claimed: Vec<(usize, Screened)> = Vec::new();
         let mut used: Vec<usize> = Vec::new();
         for item in screened {
+            if self.group_prefixes
+                && self.cache.is_some()
+                && item.0.request.cache.reads()
+            {
+                // a request that would already hit the cache for at
+                // least one frame gains nothing from waiting — only
+                // defer when the shared prefix is still UNcached (a
+                // warm burst must admit at full width, not serialize)
+                let already_cached = self
+                    .cache
+                    .as_ref()
+                    .is_some_and(|c| c.peek_longest(&item.3) >= min_share);
+                let live_publisher = !already_cached
+                    && self.slots.iter().any(|s| match s {
+                        SlotState::Prefilling(st) => {
+                            st.publish
+                                && shared_token_prefix(
+                                    st.chunks.tokens(),
+                                    &item.3,
+                                ) >= min_share
+                        }
+                        _ => false,
+                    });
+                let batch_publisher = !already_cached
+                    && claimed.iter().any(|(_, c)| {
+                        c.3.len() > spec.prefill_len
+                            && c.0.request.cache.writes()
+                            && self.chunking
+                            && shared_token_prefix(&c.3, &item.3)
+                                >= min_share
+                    });
+                if live_publisher || batch_publisher {
+                    overflow.push(item.0);
+                    continue;
+                }
+            }
             let slot = self
                 .slots
                 .iter()
@@ -348,60 +504,153 @@ impl Batcher {
             }
         }
 
-        // long prompts stream; short ones share a monolithic prefill
-        let (long, short): (Vec<_>, Vec<_>) = claimed
-            .into_iter()
-            .partition(|(_, (_, _, _, enc))| enc.len() > spec.prefill_len);
-
-        for (si, (p, strategy, prior_key, encoded)) in long {
-            match self
-                .engine
-                .chunked_prefill_from_tokens(encoded, spec.prefill_len)
-            {
-                Ok(chunks) => {
-                    let queue_ms = admit_start
-                        .duration_since(p.arrived)
-                        .as_secs_f64()
-                        * 1e3;
-                    self.admit_seq += 1;
-                    write_slot_mask(
-                        &mut self.mask_t,
-                        spec.n_layers,
-                        spec.ffn_m,
-                        si,
-                        None,
-                    );
-                    self.slots[si] = SlotState::Prefilling(Streaming {
-                        pending: p,
-                        strategy,
-                        prior_key,
-                        chunks,
-                        queue_ms,
-                        prefill_ms: 0.0,
-                        seq: self.admit_seq,
-                    });
+        // route each claimed request: an exact full-prompt cache hit
+        // skips prefill entirely; a partial hit or a long prompt
+        // streams chunk by chunk (resuming after the cached prefix);
+        // the rest share one monolithic batched prefill
+        let mut shorts: Vec<(
+            usize,
+            Pending,
+            Strategy,
+            Option<&'static str>,
+        )> = Vec::new();
+        let mut short_encoded: Vec<Vec<i32>> = Vec::new();
+        for (si, (p, strategy, prior_key, encoded)) in claimed {
+            let queue_ms =
+                admit_start.duration_since(p.arrived).as_secs_f64() * 1e3;
+            let mode = p.request.cache;
+            let mut hit: Option<PrefixHit> = match &mut self.cache {
+                Some(cache) if mode.reads() => cache.lookup(&encoded),
+                _ => None,
+            };
+            // finishing a partial prefix needs the chunked executable
+            if let Some(h) = &hit {
+                if h.seed.len < encoded.len() && !self.chunking {
+                    let id = h.id;
+                    if let Some(cache) = self.cache.as_mut() {
+                        cache.release(id);
+                    }
+                    hit = None;
                 }
-                Err(e) => {
-                    sink(p.conn_id, Response::err(p.request.id, e.to_string()))
+            }
+            match hit {
+                Some(h) if h.seed.len == encoded.len() => {
+                    // exact hit: KV + stats + logits spliced, zero
+                    // engine calls
+                    let cached = h.seed.len;
+                    let built = seed_to_prefill_result(&spec, &h.seed);
+                    if let Some(cache) = self.cache.as_mut() {
+                        cache.release(h.id);
+                    }
+                    match built {
+                        Ok(pre) => {
+                            self.prefill_tokens_saved += cached as u64;
+                            let admit = AdmitInfo {
+                                prefill_ms: 0.0,
+                                queue_ms,
+                                cached_prompt_tokens: cached,
+                                cache_hits: 1,
+                                cache_evictions: 0,
+                            };
+                            self.place(
+                                si, p, strategy, prior_key, &pre, 0,
+                                admit, sink,
+                            );
+                        }
+                        Err(e) => sink(
+                            p.conn_id,
+                            Response::err(p.request.id, e.to_string()),
+                        ),
+                    }
+                }
+                hit => {
+                    let long = encoded.len() > spec.prefill_len;
+                    if hit.is_none() && !long {
+                        shorts.push((si, p, strategy, prior_key));
+                        short_encoded.push(encoded);
+                        continue;
+                    }
+                    let publish =
+                        self.cache.is_some() && mode.writes();
+                    let (cached, pin, stream) = match hit {
+                        Some(h) => (
+                            h.seed.len,
+                            Some(h.id),
+                            self.engine.chunked_prefill_resume(
+                                encoded,
+                                spec.prefill_len,
+                                h.seed,
+                            ),
+                        ),
+                        None => (
+                            0,
+                            None,
+                            self.engine.chunked_prefill_from_tokens(
+                                encoded,
+                                spec.prefill_len,
+                            ),
+                        ),
+                    };
+                    match stream {
+                        Ok(chunks) => {
+                            self.admit_seq += 1;
+                            self.prefill_tokens_saved += cached as u64;
+                            write_slot_mask(
+                                &mut self.mask_t,
+                                spec.n_layers,
+                                spec.ffn_m,
+                                si,
+                                None,
+                            );
+                            self.slots[si] =
+                                SlotState::Prefilling(Streaming {
+                                    pending: p,
+                                    strategy,
+                                    prior_key,
+                                    chunks,
+                                    admit: AdmitInfo {
+                                        prefill_ms: 0.0,
+                                        queue_ms,
+                                        cached_prompt_tokens: cached,
+                                        cache_hits: usize::from(
+                                            cached > 0,
+                                        ),
+                                        cache_evictions: 0,
+                                    },
+                                    publish,
+                                    pin,
+                                    seq: self.admit_seq,
+                                });
+                        }
+                        Err(e) => {
+                            if let (Some(pin), Some(cache)) =
+                                (pin, self.cache.as_mut())
+                            {
+                                cache.release(pin);
+                            }
+                            sink(
+                                p.conn_id,
+                                Response::err(
+                                    p.request.id,
+                                    e.to_string(),
+                                ),
+                            );
+                        }
+                    }
                 }
             }
         }
 
-        if short.is_empty() {
+        if shorts.is_empty() {
             return overflow;
-        }
-        let mut shorts = Vec::with_capacity(short.len());
-        let mut encoded = Vec::with_capacity(short.len());
-        for (si, (p, strategy, prior_key, enc)) in short {
-            shorts.push((si, p, strategy, prior_key));
-            encoded.push(enc);
         }
         let t0 = Instant::now();
         let pre = match self
             .engine
-            .pick_batch(encoded.len())
-            .and_then(|pb| self.engine.prefill_encoded(encoded, pb))
-        {
+            .pick_batch(short_encoded.len())
+            .and_then(|pb| {
+                self.engine.prefill_encoded(short_encoded.clone(), pb)
+            }) {
             Ok(pre) => pre,
             Err(e) => {
                 for (_, p, ..) in shorts {
@@ -417,24 +666,41 @@ impl Batcher {
         {
             let queue_ms =
                 admit_start.duration_since(p.arrived).as_secs_f64() * 1e3;
-            self.place(
-                si,
-                p,
-                strategy,
-                prior_key,
-                &pre,
-                i,
+            // publish the whole prompt as a cached prefix: later
+            // identical prompts exact-hit, longer ones resume from it
+            let mut evictions = 0usize;
+            if p.request.cache.writes() {
+                if let Some(cache) = self.cache.as_mut() {
+                    if let Ok(stats) =
+                        ImportanceMap::from_stats(&pre.stats, i)
+                    {
+                        evictions = cache.insert(
+                            &short_encoded[i],
+                            &pre.kv,
+                            i,
+                            &stats,
+                            pre.lens[i] as f64,
+                            pre.logits.row(i),
+                        );
+                    }
+                }
+            }
+            let admit = AdmitInfo {
                 prefill_ms,
                 queue_ms,
-                sink,
-            );
+                cached_prompt_tokens: 0,
+                cache_hits: 0,
+                cache_evictions: evictions,
+            };
+            self.place(si, p, strategy, prior_key, &pre, i, admit, sink);
         }
         overflow
     }
 
     /// Build one prefilled request's mask + session and install it into
     /// decode slot `si` (KV slot splice included). Shared by the
-    /// monolithic short-prompt path and the final chunk of a stream.
+    /// monolithic short-prompt path, the exact-cache-hit path, and the
+    /// final chunk of a stream.
     #[allow(clippy::too_many_arguments)]
     fn place(
         &mut self,
@@ -444,8 +710,7 @@ impl Batcher {
         prior_key: Option<&'static str>,
         pre: &crate::engine::PrefillResult,
         pre_slot: usize,
-        prefill_ms: f64,
-        queue_ms: f64,
+        admit: AdmitInfo,
         sink: &mut dyn FnMut(u64, Response),
     ) {
         let spec = self.engine.spec().clone();
@@ -476,8 +741,7 @@ impl Batcher {
             sess,
             strategy,
             prior_key,
-            prefill_ms,
-            queue_ms,
+            admit,
             decode_started: Instant::now(),
         };
         let done_at_prefill = slot.sess.finished.is_some()
@@ -500,9 +764,11 @@ impl Batcher {
         }
     }
 
-    /// Advance the oldest streaming admission by one prefill chunk; on
-    /// the final chunk, build the mask from the merged statistics and
-    /// promote the slot to active decoding.
+    /// Advance the oldest streaming admission by one prefill chunk
+    /// (publishing the completed prefix into the shared-prefix cache
+    /// when the stream's request allows it); on the final chunk, build
+    /// the mask from the merged statistics and promote the slot to
+    /// active decoding.
     fn advance_chunk(
         &mut self,
         si: usize,
@@ -516,7 +782,7 @@ impl Batcher {
             };
             let r = engine.chunked_prefill_step(&mut st.chunks);
             if r.is_ok() {
-                st.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
+                st.admit.prefill_ms += t0.elapsed().as_secs_f64() * 1e3;
             }
             r
         };
@@ -531,6 +797,11 @@ impl Batcher {
                 else {
                     unreachable!("checked Prefilling above");
                 };
+                if let (Some(pin), Some(cache)) =
+                    (st.pin, self.cache.as_mut())
+                {
+                    cache.release(pin);
+                }
                 sink(
                     st.pending.conn_id,
                     Response::err(st.pending.request.id, e.to_string()),
@@ -538,6 +809,25 @@ impl Batcher {
                 return;
             }
         };
+        // publish the just-completed prefix (a pure function of its
+        // tokens): same-prefix requests admitted later splice it
+        // instead of recomputing — including the final full prompt
+        if let SlotState::Prefilling(st) = &mut self.slots[si] {
+            if st.publish {
+                if let Some(cache) = self.cache.as_mut() {
+                    let consumed = st.chunks.consumed();
+                    let evicted = cache.insert(
+                        &st.chunks.tokens()[..consumed],
+                        &st.chunks.kv,
+                        0,
+                        st.chunks.local_importance(),
+                        st.chunks.merged_weight(),
+                        st.chunks.logits(),
+                    );
+                    st.admit.cache_evictions += evicted;
+                }
+            }
+        }
         if !done {
             return;
         }
@@ -551,10 +841,14 @@ impl Batcher {
             strategy,
             prior_key,
             chunks,
-            queue_ms,
-            prefill_ms,
+            admit,
+            publish: _,
+            pin,
             seq: _,
         } = st;
+        if let (Some(pin), Some(cache)) = (pin, self.cache.as_mut()) {
+            cache.release(pin);
+        }
         // consuming conversion: moves the stream's KV out instead of
         // cloning a full cache per admission
         let pre = match chunks.into_result() {
@@ -567,10 +861,7 @@ impl Batcher {
                 return;
             }
         };
-        self.place(
-            si, pending, strategy, prior_key, &pre, 0, prefill_ms,
-            queue_ms, sink,
-        );
+        self.place(si, pending, strategy, prior_key, &pre, 0, admit, sink);
     }
 
     /// One engine step: advance up to `chunk_budget` prefill chunks for
@@ -711,7 +1002,14 @@ impl Batcher {
         for (si, s) in self.slots.iter_mut().enumerate() {
             let pending = match std::mem::replace(s, SlotState::Empty) {
                 SlotState::Empty => continue,
-                SlotState::Prefilling(st) => st.pending,
+                SlotState::Prefilling(st) => {
+                    if let (Some(pin), Some(cache)) =
+                        (st.pin, self.cache.as_mut())
+                    {
+                        cache.release(pin);
+                    }
+                    st.pending
+                }
                 SlotState::Active(slot) => slot.pending,
             };
             sink(
@@ -775,12 +1073,15 @@ fn finish_response(engine: &Engine, slot: &Slot) -> Response {
         slot.pending.request.id,
         engine.decode_text(&sess.generated),
         sess.generated.len(),
-        slot.prefill_ms,
+        slot.admit.prefill_ms,
         slot.decode_started.elapsed().as_secs_f64() * 1e3,
         sess.mask.density(),
     );
-    resp.queue_ms = slot.queue_ms;
+    resp.queue_ms = slot.admit.queue_ms;
     resp.prompt_tokens = sess.prompt_len;
+    resp.cached_prompt_tokens = slot.admit.cached_prompt_tokens;
+    resp.cache_hits = slot.admit.cache_hits;
+    resp.cache_evictions = slot.admit.cache_evictions;
     resp.refreshes = sess.refreshes;
     resp.mask_updates = sess.mask_updates;
     resp.finish = sess

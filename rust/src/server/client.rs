@@ -8,7 +8,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::protocol::{Request, Response};
+use super::protocol::{parse_stats_line, Request, Response};
+use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
 
 pub struct Client {
     stream: TcpStream,
@@ -64,6 +65,22 @@ impl Client {
         Ok(resp)
     }
 
+    /// Round-trip the `stats` command: server-level cache counters.
+    pub fn stats(&mut self) -> Result<CacheStatsSnapshot> {
+        let id = self.fresh_id();
+        writeln!(self.stream, "{{\"cmd\":\"stats\",\"id\":{id}}}")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed connection");
+        }
+        let (resp_id, snap) = parse_stats_line(line.trim())?;
+        if resp_id != id {
+            bail!("stats response id {resp_id} != request id {id}");
+        }
+        Ok(snap)
+    }
+
     /// Pipeline many requests, returning responses keyed by id with
     /// per-request wall-clock latency measured from send to receive
     /// completion of that id.
@@ -97,5 +114,6 @@ pub fn request(prompt: &str, strategy: &str, density: f64) -> Request {
         density,
         max_tokens: 64,
         refresh_every: 0,
+        cache: CacheMode::On,
     }
 }

@@ -39,7 +39,26 @@
 //!   every R decoded tokens on blended prompt + decaying-average decode
 //!   statistics — the paper's aggregation applied over the generation
 //!   horizon, for the long-form scenarios where prompt-only statistics
-//!   drift.
+//!   drift;
+//! * **shared-prefix cache** — per cached token prefix the batcher
+//!   keeps the KV rows *and* the merged GLASS statistics (plus the
+//!   last-position logits), both pure functions of the prefix. At
+//!   admission the longest cached prefix of the prompt is spliced in:
+//!   an exact full-prompt hit costs **zero** engine calls, a partial
+//!   hit resumes the chunked stream after the prefix — continuing the
+//!   statistics merge with the same arithmetic a cold stream would
+//!   use, so a hit's prompt statistics (and therefore its GLASS mask
+//!   and generated tokens) are **bit-identical** to a cold prefill.
+//!   Completed-chunk prefixes and cold short prompts are published
+//!   back; entries are ref-counted (a resuming stream pins its entry)
+//!   and evicted LRU under a byte budget accounted through
+//!   [`memsim`](crate::memsim). The scheduler clusters same-prefix
+//!   requests and the batcher defers a same-prefix admission while an
+//!   earlier one is still publishing, so a shared-system-prompt burst
+//!   pays its prefill miss once. Responses carry
+//!   `cached_prompt_tokens` / `cache_hits` / `cache_evictions`;
+//!   server-level aggregates (hits, misses, inserts, evictions, bytes
+//!   resident, entries) are served by the `stats` protocol command.
 //!
 //! # Knobs and trade-offs
 //!
@@ -61,6 +80,18 @@
 //!   tracks decode-time importance drift closely at the cost of one
 //!   selection pass (pure host work, µs-scale) per R tokens; 0 keeps
 //!   the prefill-time static mask.
+//! * `cache_bytes` (server, [`ServerOptions`]) — shared-prefix cache
+//!   budget; 0 disables caching entirely. Bigger budgets keep more
+//!   distinct prefixes resident (more hits) at the cost of host
+//!   memory; eviction is LRU and never frees an entry a stream is
+//!   resuming from.
+//! * `cache` (per request) — `on` (read + publish, default),
+//!   `readonly` (read, never insert — for traffic that must not
+//!   displace hot prefixes), `off` (bypass — for strict cold-start
+//!   measurements).
+//! * `group_prefixes` (server) — same-prefix clustering/deferral so a
+//!   burst of shared-prompt requests pays one miss; disable for strict
+//!   FCFS admission order.
 //!
 //! # Request limits
 //!
@@ -91,14 +122,40 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::engine::prefix_cache::{CacheTelemetry, DEFAULT_CACHE_BYTES};
 use crate::engine::Engine;
 use crate::info;
 
-use batcher::Batcher;
-use protocol::{Request, Response};
+use batcher::{Batcher, BatcherOptions};
+use protocol::{parse_client_line, stats_to_line, ClientLine, Response};
 use scheduler::{Pending, Scheduler};
 
-type Conns = Arc<Mutex<HashMap<u64, Sender<Response>>>>;
+/// Response lines are serialized before entering the per-connection
+/// channel, so protocol commands (`stats`) and generation responses
+/// share one ordered writer.
+type Conns = Arc<Mutex<HashMap<u64, Sender<String>>>>;
+
+/// Construction knobs for [`Server::start_with`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Decode slot count (must fit a compiled `decode_b{W}`).
+    pub batch_width: usize,
+    /// Shared-prefix cache byte budget; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Cluster same-prefix requests at the scheduler and defer
+    /// same-prefix admissions behind an in-flight publisher.
+    pub group_prefixes: bool,
+}
+
+impl ServerOptions {
+    pub fn new(batch_width: usize) -> ServerOptions {
+        ServerOptions {
+            batch_width,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            group_prefixes: true,
+        }
+    }
+}
 
 /// Server handle: bind address + shutdown flag.
 pub struct Server {
@@ -109,9 +166,18 @@ pub struct Server {
 }
 
 impl Server {
+    /// Start serving on `addr` with default options (cache on).
+    pub fn start(engine: Engine, addr: &str, batch_width: usize) -> Result<Server> {
+        Server::start_with(engine, addr, ServerOptions::new(batch_width))
+    }
+
     /// Start serving on `addr` (e.g. "127.0.0.1:7433"). Returns once the
     /// listener is bound; serving continues on background threads.
-    pub fn start(engine: Engine, addr: &str, batch_width: usize) -> Result<Server> {
+    pub fn start_with(
+        engine: Engine,
+        addr: &str,
+        opts: ServerOptions,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         listener.set_nonblocking(true)?;
@@ -120,13 +186,31 @@ impl Server {
         // build the batcher up front: loads priors and warms every
         // executable the engine loop can hit (all admission prefill
         // sizes + the full-width decode step)
-        let mut engine_loop = Batcher::new(engine, batch_width)?;
+        let prefill_len = engine.spec().prefill_len;
+        let mut engine_loop = Batcher::with_options(
+            engine,
+            BatcherOptions {
+                batch_width: opts.batch_width,
+                cache_bytes: opts.cache_bytes,
+                chunk_budget: 1,
+                group_prefixes: opts.group_prefixes,
+            },
+        )?;
+        let telemetry = engine_loop.telemetry();
 
         let conns: Conns = Arc::new(Mutex::new(HashMap::new()));
-        let sched = Arc::new(Scheduler::new(
-            batch_width,
-            Duration::from_millis(4),
-        ));
+        let group_bytes = if opts.group_prefixes && opts.cache_bytes > 0
+        {
+            // one prefill frame of shared prompt bytes ≈ one cacheable
+            // chunk (byte-level tokenizer)
+            prefill_len
+        } else {
+            0
+        };
+        let sched = Arc::new(
+            Scheduler::new(opts.batch_width, Duration::from_millis(4))
+                .with_prefix_grouping(group_bytes),
+        );
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
@@ -137,7 +221,7 @@ impl Server {
             threads.push(std::thread::spawn(move || {
                 let mut sink = |conn_id: u64, resp: Response| {
                     if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
-                        let _ = tx.send(resp);
+                        let _ = tx.send(resp.to_line());
                     }
                 };
                 engine_loop.run(&sched, &mut sink);
@@ -160,9 +244,11 @@ impl Server {
                                 next_conn.fetch_add(1, Ordering::Relaxed);
                             let conns = Arc::clone(&conns);
                             let sched = Arc::clone(&sched);
+                            let telemetry = Arc::clone(&telemetry);
                             std::thread::spawn(move || {
                                 let _ = handle_conn(
                                     stream, conn_id, &conns, &sched,
+                                    &telemetry,
                                 );
                             });
                         }
@@ -200,19 +286,25 @@ fn handle_conn(
     conn_id: u64,
     conns: &Conns,
     sched: &Arc<Scheduler>,
+    telemetry: &Arc<CacheTelemetry>,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let (tx, rx) = channel::<Response>();
+    let (tx, rx) = channel::<String>();
     conns.lock().unwrap().insert(conn_id, tx);
     let mut writer = stream.try_clone()?;
-    // writer thread: serialize responses back to the client
+    // writer thread: one ordered line stream back to the client
     let w = std::thread::spawn(move || {
-        for resp in rx {
-            if writeln!(writer, "{}", resp.to_line()).is_err() {
+        for line in rx {
+            if writeln!(writer, "{line}").is_err() {
                 break;
             }
         }
     });
+    let send = |line: String| {
+        if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
+            let _ = tx.send(line);
+        }
+    };
 
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -223,17 +315,20 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        match Request::parse(&line) {
-            Ok(request) => sched.submit(Pending {
+        match parse_client_line(&line) {
+            Ok(ClientLine::Request(request)) => sched.submit(Pending {
                 request,
                 arrived: Instant::now(),
                 conn_id,
             }),
+            Ok(ClientLine::Stats { id }) => {
+                // answered right here from the shared counters — no
+                // round trip through the engine loop
+                send(stats_to_line(id, &telemetry.snapshot()));
+            }
             Err(e) => {
                 // protocol error: respond immediately
-                if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
-                    let _ = tx.send(Response::err(0, e.to_string()));
-                }
+                send(Response::err(0, e.to_string()).to_line());
             }
         }
     }

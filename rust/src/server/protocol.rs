@@ -3,17 +3,32 @@
 //! One JSON object per line in each direction over TCP:
 //!   request:  {"id": 7, "prompt": "...", "strategy": "i-glass",
 //!              "lambda": 0.5, "density": 0.5, "max_tokens": 64,
-//!              "refresh_every": 8}
+//!              "refresh_every": 8, "cache": "on"}
 //!   response: {"id": 7, "text": "...", "tokens": 42,
-//!              "prompt_tokens": 25, "prefill_ms": 1.2,
+//!              "prompt_tokens": 25, "cached_prompt_tokens": 20,
+//!              "cache_hits": 1, "cache_evictions": 0,
+//!              "prefill_ms": 1.2,
 //!              "decode_ms": 30.5, "queue_ms": 0.3, "density": 0.5,
 //!              "refreshes": 5, "mask_updates": 2, "finish": "length"}
 //!   error:    {"id": 7, "error": "..."}
+//!   command:  {"cmd": "stats", "id": 3}
+//!             → {"id": 3, "stats": {"cache_hits": ..., ...}}
 //!
 //! Field ranges are validated at parse time and rejected with an
 //! immediate protocol error (never surfaced as a deep engine failure):
-//! `density` must lie in (0, 1], `lambda` in [0, 1], and `max_tokens`
-//! must be ≥ 1.
+//! `density` must lie in (0, 1], `lambda` in [0, 1], `max_tokens`
+//! must be ≥ 1, and `cache` must be one of on|off|readonly.
+//!
+//! **Shared-prefix cache.** `cache` selects the request's cache
+//! behavior (`on` = read + publish, default; `readonly` = read but
+//! never insert; `off` = bypass). `cached_prompt_tokens` reports how
+//! many prompt tokens were spliced from the cache instead of being
+//! recomputed, `cache_hits` how many cache entries this request used,
+//! and `cache_evictions` how many entries this request's own inserts
+//! evicted. The `stats` command returns the **server-level** aggregate
+//! counters (hits, misses, inserts, evictions, bytes resident, entry
+//! count) so operators can watch cache health without scraping
+//! per-response telemetry.
 //!
 //! **Prompt length.** Prompts are NOT bounded by the prefill frame: the
 //! batcher streams long prompts through chunked prefill (one chunk per
@@ -35,6 +50,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
 use crate::util::json::Json;
 
 /// Strategy names the serving layer accepts.
@@ -52,11 +68,83 @@ pub struct Request {
     pub max_tokens: usize,
     /// Refresh the GLASS mask every N decoded tokens (0 = never).
     pub refresh_every: usize,
+    /// Shared-prefix cache behavior for this request.
+    pub cache: CacheMode,
+}
+
+/// One parsed client line: a generation request or a server command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientLine {
+    Request(Request),
+    /// `{"cmd": "stats"}` — report server-level cache counters.
+    Stats { id: u64 },
+}
+
+/// Parse one client line, dispatching on the optional `cmd` key. The
+/// document is parsed ONCE and shared with [`Request::from_json`] —
+/// this sits on the per-line hot path of every connection thread.
+pub fn parse_client_line(line: &str) -> Result<ClientLine> {
+    let j = Json::parse(line)?;
+    let Some(cmd) = j.get("cmd") else {
+        return Request::from_json(&j).map(ClientLine::Request);
+    };
+    let id = match j.get("id") {
+        Some(v) => v.as_usize()? as u64,
+        None => 0,
+    };
+    match cmd.as_str()? {
+        "stats" => Ok(ClientLine::Stats { id }),
+        other => bail!("unknown command '{other}'"),
+    }
+}
+
+/// Serialize the `stats` command response line.
+pub fn stats_to_line(id: u64, s: &CacheStatsSnapshot) -> String {
+    let mut inner = Json::obj();
+    inner
+        .set("cache_hits", Json::Num(s.hits as f64))
+        .set("cache_misses", Json::Num(s.misses as f64))
+        .set("cache_inserts", Json::Num(s.inserts as f64))
+        .set("cache_evictions", Json::Num(s.evictions as f64))
+        .set("cache_bytes_resident", Json::Num(s.bytes_resident as f64))
+        .set("cache_entries", Json::Num(s.entries as f64));
+    let mut o = Json::obj();
+    o.set("id", Json::Num(id as f64)).set("stats", inner);
+    o.to_string()
+}
+
+/// Parse a `stats` response line back into a snapshot (client side).
+pub fn parse_stats_line(line: &str) -> Result<(u64, CacheStatsSnapshot)> {
+    let j = Json::parse(line)?;
+    let id = j.req("id")?.as_usize()? as u64;
+    let s = j.req("stats")?;
+    let get = |k: &str| -> Result<u64> {
+        Ok(match s.get(k) {
+            Some(v) => v.as_usize()? as u64,
+            None => 0,
+        })
+    };
+    Ok((
+        id,
+        CacheStatsSnapshot {
+            hits: get("cache_hits")?,
+            misses: get("cache_misses")?,
+            inserts: get("cache_inserts")?,
+            evictions: get("cache_evictions")?,
+            bytes_resident: get("cache_bytes_resident")?,
+            entries: get("cache_entries")?,
+        },
+    ))
 }
 
 impl Request {
     pub fn parse(line: &str) -> Result<Request> {
-        let j = Json::parse(line)?;
+        Request::from_json(&Json::parse(line)?)
+    }
+
+    /// Build from an already-parsed document (shared with
+    /// [`parse_client_line`] so request lines are parsed once).
+    pub fn from_json(j: &Json) -> Result<Request> {
         let get_f = |k: &str, d: f64| -> Result<f64> {
             match j.get(k) {
                 Some(v) => v.as_f64(),
@@ -90,6 +178,10 @@ impl Request {
         if max_tokens == 0 {
             bail!("max_tokens must be >= 1");
         }
+        let cache = match j.get("cache") {
+            Some(v) => CacheMode::parse(v.as_str()?)?,
+            None => CacheMode::On,
+        };
         Ok(Request {
             id: j.req("id")?.as_usize()? as u64,
             prompt: j.req("prompt")?.as_str()?.to_string(),
@@ -98,6 +190,7 @@ impl Request {
             density,
             max_tokens,
             refresh_every: get_u("refresh_every", 0)?,
+            cache,
         })
     }
 
@@ -109,7 +202,8 @@ impl Request {
             .set("lambda", Json::Num(self.lambda))
             .set("density", Json::Num(self.density))
             .set("max_tokens", Json::Num(self.max_tokens as f64))
-            .set("refresh_every", Json::Num(self.refresh_every as f64));
+            .set("refresh_every", Json::Num(self.refresh_every as f64))
+            .set("cache", Json::Str(self.cache.as_str().to_string()));
         o.to_string()
     }
 }
@@ -123,6 +217,13 @@ pub struct Response {
     /// distinguish a full-prompt response from a truncated one — the
     /// engine never truncates silently, and this field proves it.
     pub prompt_tokens: usize,
+    /// Prompt tokens spliced from the shared-prefix cache instead of
+    /// being recomputed (0 = cold prefill or cache off).
+    pub cached_prompt_tokens: usize,
+    /// Cache entries this request used (0 or 1 today).
+    pub cache_hits: usize,
+    /// Entries this request's own cache inserts evicted.
+    pub cache_evictions: usize,
     pub prefill_ms: f64,
     pub decode_ms: f64,
     /// Time spent queued before admission into a batch slot.
@@ -150,6 +251,9 @@ impl Response {
             text,
             tokens,
             prompt_tokens: 0,
+            cached_prompt_tokens: 0,
+            cache_hits: 0,
+            cache_evictions: 0,
             prefill_ms,
             decode_ms,
             queue_ms: 0.0,
@@ -167,6 +271,9 @@ impl Response {
             text: String::new(),
             tokens: 0,
             prompt_tokens: 0,
+            cached_prompt_tokens: 0,
+            cache_hits: 0,
+            cache_evictions: 0,
             prefill_ms: 0.0,
             decode_ms: 0.0,
             queue_ms: 0.0,
@@ -187,6 +294,15 @@ impl Response {
             o.set("text", Json::Str(self.text.clone()))
                 .set("tokens", Json::Num(self.tokens as f64))
                 .set("prompt_tokens", Json::Num(self.prompt_tokens as f64))
+                .set(
+                    "cached_prompt_tokens",
+                    Json::Num(self.cached_prompt_tokens as f64),
+                )
+                .set("cache_hits", Json::Num(self.cache_hits as f64))
+                .set(
+                    "cache_evictions",
+                    Json::Num(self.cache_evictions as f64),
+                )
                 .set("prefill_ms", Json::Num(self.prefill_ms))
                 .set("decode_ms", Json::Num(self.decode_ms))
                 .set("queue_ms", Json::Num(self.queue_ms))
@@ -221,6 +337,9 @@ impl Response {
             text: j.req("text")?.as_str()?.to_string(),
             tokens: j.req("tokens")?.as_usize()?,
             prompt_tokens: get_u("prompt_tokens", 0)?,
+            cached_prompt_tokens: get_u("cached_prompt_tokens", 0)?,
+            cache_hits: get_u("cache_hits", 0)?,
+            cache_evictions: get_u("cache_evictions", 0)?,
             prefill_ms: j.req("prefill_ms")?.as_f64()?,
             decode_ms: j.req("decode_ms")?.as_f64()?,
             queue_ms: get_f("queue_ms", 0.0)?,
@@ -250,6 +369,7 @@ mod tests {
             density: 0.4,
             max_tokens: 32,
             refresh_every: 8,
+            cache: CacheMode::ReadOnly,
         };
         let r2 = Request::parse(&r.to_line()).unwrap();
         assert_eq!(r, r2);
@@ -262,6 +382,57 @@ mod tests {
         assert_eq!(r.max_tokens, 64);
         assert_eq!(r.density, 0.5);
         assert_eq!(r.refresh_every, 0, "refresh defaults to off");
+        assert_eq!(r.cache, CacheMode::On, "cache defaults to on");
+    }
+
+    #[test]
+    fn cache_mode_parsed_and_validated() {
+        for (s, m) in [
+            ("on", CacheMode::On),
+            ("off", CacheMode::Off),
+            ("readonly", CacheMode::ReadOnly),
+        ] {
+            let line =
+                format!(r#"{{"id":1,"prompt":"x","cache":"{s}"}}"#);
+            assert_eq!(Request::parse(&line).unwrap().cache, m);
+        }
+        let err = Request::parse(
+            r#"{"id":1,"prompt":"x","cache":"maybe"}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cache mode"), "{err}");
+    }
+
+    #[test]
+    fn stats_command_parses_and_roundtrips() {
+        match parse_client_line(r#"{"cmd":"stats","id":5}"#).unwrap() {
+            ClientLine::Stats { id } => assert_eq!(id, 5),
+            other => panic!("expected stats, got {other:?}"),
+        }
+        // id defaults to 0; unknown commands are protocol errors
+        assert_eq!(
+            parse_client_line(r#"{"cmd":"stats"}"#).unwrap(),
+            ClientLine::Stats { id: 0 }
+        );
+        assert!(parse_client_line(r#"{"cmd":"dance"}"#).is_err());
+        // a plain request still parses through the same entry point
+        match parse_client_line(r#"{"id":1,"prompt":"hi"}"#).unwrap() {
+            ClientLine::Request(r) => assert_eq!(r.id, 1),
+            other => panic!("expected request, got {other:?}"),
+        }
+
+        let snap = CacheStatsSnapshot {
+            hits: 3,
+            misses: 2,
+            inserts: 4,
+            evictions: 1,
+            bytes_resident: 4096,
+            entries: 3,
+        };
+        let (id, back) =
+            parse_stats_line(&stats_to_line(9, &snap)).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(back, snap);
     }
 
     #[test]
@@ -319,6 +490,9 @@ mod tests {
     fn response_roundtrip_ok_and_err() {
         let mut ok = Response::ok(1, "hello".into(), 5, 1.5, 20.0, 0.5);
         ok.prompt_tokens = 25;
+        ok.cached_prompt_tokens = 20;
+        ok.cache_hits = 1;
+        ok.cache_evictions = 2;
         ok.queue_ms = 0.25;
         ok.refreshes = 3;
         ok.mask_updates = 1;
@@ -339,6 +513,9 @@ mod tests {
         .unwrap();
         assert_eq!(r.queue_ms, 0.0);
         assert_eq!(r.prompt_tokens, 0);
+        assert_eq!(r.cached_prompt_tokens, 0);
+        assert_eq!(r.cache_hits, 0);
+        assert_eq!(r.cache_evictions, 0);
         assert_eq!(r.refreshes, 0);
         assert_eq!(r.finish, "length");
     }

@@ -11,6 +11,14 @@
 //!
 //! Slots in the same decode call carry per-slot masks (the [B, L, m]
 //! mask tensor), so heterogeneous strategies batch together.
+//!
+//! **Prefix grouping** (optional): when `prefix_group_bytes > 0`, each
+//! drained batch is stable-reordered so requests sharing at least that
+//! many leading prompt bytes sit adjacent, in first-arrival order. The
+//! batcher admits a batch front-to-back and defers same-prefix
+//! followers while the first request's prefill is still streaming, so
+//! a shared-prefix burst pays its cache miss **once** — the followers
+//! splice the published prefix instead of recomputing it.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -39,6 +47,9 @@ pub struct Scheduler {
     cv: Condvar,
     pub batch_width: usize,
     pub batch_window: Duration,
+    /// Cluster drained batches by shared prompt prefix of at least this
+    /// many bytes (0 = off, strict FCFS output order).
+    pub prefix_group_bytes: usize,
 }
 
 impl Scheduler {
@@ -48,7 +59,15 @@ impl Scheduler {
             cv: Condvar::new(),
             batch_width,
             batch_window,
+            prefix_group_bytes: 0,
         }
+    }
+
+    /// Builder-style knob: enable same-prefix clustering of drained
+    /// batches (`min_shared` leading prompt bytes; 0 disables).
+    pub fn with_prefix_grouping(mut self, min_shared: usize) -> Scheduler {
+        self.prefix_group_bytes = min_shared;
+        self
     }
 
     pub fn submit(&self, p: Pending) {
@@ -67,7 +86,7 @@ impl Scheduler {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.state.lock().unwrap().queue.is_empty()
     }
 
     /// Take the next batch (1..=batch_width requests). Blocks until at
@@ -98,7 +117,8 @@ impl Scheduler {
             }
         }
         let n = st.queue.len().min(self.batch_width);
-        Some(st.queue.drain(..n).collect())
+        let batch = st.queue.drain(..n).collect();
+        Some(group_by_prefix(batch, self.prefix_group_bytes))
     }
 
     /// Non-blocking FCFS drain of up to `max` pending requests — the
@@ -106,7 +126,9 @@ impl Scheduler {
     pub fn take(&self, max: usize) -> Vec<Pending> {
         let mut st = self.state.lock().unwrap();
         let n = st.queue.len().min(max);
-        st.queue.drain(..n).collect()
+        let batch: Vec<Pending> = st.queue.drain(..n).collect();
+        drop(st);
+        group_by_prefix(batch, self.prefix_group_bytes)
     }
 
     /// Return admission overflow to the FRONT of the queue, preserving
@@ -130,21 +152,61 @@ impl Scheduler {
     }
 }
 
+/// Leading bytes shared by two prompts.
+fn shared_prefix_bytes(a: &str, b: &str) -> usize {
+    a.bytes()
+        .zip(b.bytes())
+        .take_while(|(x, y)| x == y)
+        .count()
+}
+
+/// Stable-cluster a drained batch: each request joins the first earlier
+/// group whose head shares at least `min_shared` leading prompt bytes,
+/// else starts a new group. Groups keep first-arrival order and members
+/// keep FCFS order within a group, so the reorder is bounded to the
+/// batch at hand — nothing jumps the queue across batches.
+pub fn group_by_prefix(
+    batch: Vec<Pending>,
+    min_shared: usize,
+) -> Vec<Pending> {
+    if min_shared == 0 || batch.len() < 3 {
+        // with ≤ 2 requests clustering cannot change adjacency
+        return batch;
+    }
+    let mut groups: Vec<Vec<Pending>> = Vec::new();
+    for p in batch {
+        let home = groups.iter().position(|g| {
+            shared_prefix_bytes(&g[0].request.prompt, &p.request.prompt)
+                >= min_shared
+        });
+        match home {
+            Some(i) => groups[i].push(p),
+            None => groups.push(vec![p]),
+        }
+    }
+    groups.into_iter().flatten().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::Arc;
 
     fn req(id: u64) -> Pending {
+        req_with_prompt(id, "p")
+    }
+
+    fn req_with_prompt(id: u64, prompt: &str) -> Pending {
         Pending {
             request: Request {
                 id,
-                prompt: "p".into(),
+                prompt: prompt.into(),
                 strategy: "dense".into(),
                 lambda: 0.5,
                 density: 0.5,
                 max_tokens: 4,
                 refresh_every: 0,
+                cache: crate::engine::prefix_cache::CacheMode::On,
             },
             arrived: Instant::now(),
             conn_id: id,
@@ -266,6 +328,66 @@ mod tests {
         assert!(s.is_closed());
         // closed but non-empty: queued work still drains
         assert_eq!(s.take(5).len(), 1);
+    }
+
+    #[test]
+    fn prefix_grouping_clusters_without_reordering_groups() {
+        let sys = "SYSTEM: you are a terse assistant. ";
+        let batch = vec![
+            req_with_prompt(0, &format!("{sys}alpha")),
+            req_with_prompt(1, "unrelated prompt one"),
+            req_with_prompt(2, &format!("{sys}beta")),
+            req_with_prompt(3, "unrelated prompt two"),
+            req_with_prompt(4, &format!("{sys}gamma")),
+        ];
+        let out = group_by_prefix(batch, 16);
+        let ids: Vec<u64> = out.iter().map(|p| p.request.id).collect();
+        // shared-prefix requests cluster behind their first arrival;
+        // "unrelated prompt one/two" also share ≥ 16 bytes → one group
+        assert_eq!(ids, vec![0, 2, 4, 1, 3]);
+    }
+
+    #[test]
+    fn prefix_grouping_disabled_or_tiny_batch_is_identity() {
+        let mk = || {
+            vec![
+                req_with_prompt(0, "aaaa bbbb"),
+                req_with_prompt(1, "cccc dddd"),
+                req_with_prompt(2, "aaaa eeee"),
+            ]
+        };
+        let ids = |v: Vec<Pending>| -> Vec<u64> {
+            v.iter().map(|p| p.request.id).collect()
+        };
+        assert_eq!(ids(group_by_prefix(mk(), 0)), vec![0, 1, 2]);
+        // two-element batches are returned untouched
+        let two = vec![
+            req_with_prompt(7, "aaaa"),
+            req_with_prompt(8, "bbbb"),
+        ];
+        assert_eq!(ids(group_by_prefix(two, 2)), vec![7, 8]);
+        // nothing shares 6+ bytes here ("aaaa " vs "aaaa e" diverge at 5)
+        assert_eq!(ids(group_by_prefix(mk(), 6)), vec![0, 1, 2]);
+        // at 4 bytes the two aaaa prompts cluster
+        assert_eq!(ids(group_by_prefix(mk(), 4)), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn scheduler_applies_grouping_on_drain() {
+        let s = Scheduler::new(8, Duration::from_millis(1))
+            .with_prefix_grouping(4);
+        for (i, p) in ["sys a", "solo x", "sys b", "sys c"]
+            .iter()
+            .enumerate()
+        {
+            s.submit(req_with_prompt(i as u64, p));
+        }
+        let ids: Vec<u64> = s
+            .take(8)
+            .iter()
+            .map(|p| p.request.id)
+            .collect();
+        assert_eq!(ids, vec![0, 2, 3, 1]);
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Mini-criterion: warmup + timed iterations with mean/p50/p95 reporting
 //! (criterion is unavailable offline; `cargo bench` targets use
-//! `harness = false` and call into this).
+//! `harness = false` and call into this), plus the CI **regression
+//! gate** that compares a bench's JSON document against a checked-in
+//! baseline (`check_regression`) so the bench trajectory is enforced
+//! per commit, not just recorded.
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::{percentile, summarize};
 use super::table::Table;
 
@@ -119,7 +123,7 @@ impl Bencher {
                 fmt_time(r.mean_s),
                 fmt_time(r.p50_s),
                 fmt_time(r.p95_s),
-                format!("{}", r.iters),
+                r.iters.to_string(),
                 if r.items_per_iter > 0.0 {
                     format!("{:.1}", r.throughput())
                 } else {
@@ -129,6 +133,93 @@ impl Bencher {
         }
         t.to_ascii()
     }
+}
+
+// ------------------------------------------------------ regression gate
+
+/// Outcome of checking a bench document against a baseline: every rule
+/// that ran (for the operator's log) and every rule that failed (a
+/// non-empty list means the gate must exit non-zero).
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    pub checked: Vec<String>,
+    pub failures: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Baseline keys holding throughputs (items/s): the current run must
+/// reach at least `(1 - tol)` of the baseline value. Keys absent from
+/// either document are skipped (the gate degrades gracefully when a
+/// bundle cannot run a row), so adding rows never breaks old baselines.
+const THROUGHPUT_KEYS: &[&str] = &[
+    "continuous_toks_per_s",
+    "shared_prefix_toks_per_s",
+];
+
+/// Baseline keys holding deterministic counters: the current run must
+/// be ≥ the baseline (machine-independent — e.g. warm-iteration prefill
+/// tokens saved by the shared-prefix cache; losing them means the cache
+/// stopped hitting).
+const FLOOR_KEYS: &[&str] = &["prefill_tokens_saved_warm"];
+
+/// Compare a bench JSON document against a baseline. `tol` is the
+/// allowed fractional throughput drop (0.15 = fail below 85% of
+/// baseline).
+pub fn check_regression(
+    current: &Json,
+    baseline: &Json,
+    tol: f64,
+) -> GateReport {
+    let mut report = GateReport::default();
+    let num = |doc: &Json, key: &str| -> Option<f64> {
+        doc.get(key).and_then(|v| v.as_f64().ok())
+    };
+    for &key in THROUGHPUT_KEYS {
+        let (Some(cur), Some(base)) =
+            (num(current, key), num(baseline, key))
+        else {
+            continue;
+        };
+        let floor = base * (1.0 - tol);
+        report.checked.push(format!(
+            "{key}: {cur:.1} vs baseline {base:.1} (floor {floor:.1})"
+        ));
+        if cur < floor {
+            report.failures.push(format!(
+                "{key} regressed: {cur:.1} < {floor:.1} \
+                 ({:.0}% below the {base:.1} baseline)",
+                (1.0 - cur / base) * 100.0
+            ));
+        }
+    }
+    for &key in FLOOR_KEYS {
+        let (Some(cur), Some(base)) =
+            (num(current, key), num(baseline, key))
+        else {
+            continue;
+        };
+        report.checked.push(format!(
+            "{key}: {cur:.0} vs baseline floor {base:.0}"
+        ));
+        if cur < base {
+            report.failures.push(format!(
+                "{key} lost its savings: {cur:.0} < baseline {base:.0}"
+            ));
+        }
+    }
+    if report.checked.is_empty() {
+        report.failures.push(
+            "baseline shares no checkable keys with this run \
+             (wrong baseline file?)"
+                .to_string(),
+        );
+    }
+    report
 }
 
 pub fn fmt_time(s: f64) -> String {
@@ -178,5 +269,93 @@ mod tests {
             items_per_iter: 10.0,
         };
         assert!((r.throughput() - 20.0).abs() < 1e-9);
+    }
+
+    fn doc(pairs: &[(&str, f64)]) -> Json {
+        let mut o = Json::obj();
+        for (k, v) in pairs {
+            o.set(k, Json::Num(*v));
+        }
+        o
+    }
+
+    #[test]
+    fn gate_fails_on_injected_20_percent_regression() {
+        // the acceptance demonstration: a 20% decode-throughput drop
+        // against the baseline MUST fail the gate at 15% tolerance
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_tokens_saved_warm", 100.0),
+        ]);
+        let regressed = doc(&[
+            ("continuous_toks_per_s", 800.0),
+            ("prefill_tokens_saved_warm", 100.0),
+        ]);
+        let r = check_regression(&regressed, &base, 0.15);
+        assert!(!r.passed(), "20% drop must fail: {:?}", r.checked);
+        assert_eq!(r.failures.len(), 1);
+        assert!(
+            r.failures[0].contains("continuous_toks_per_s"),
+            "{:?}",
+            r.failures
+        );
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance_and_above() {
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("shared_prefix_toks_per_s", 500.0),
+            ("prefill_tokens_saved_warm", 100.0),
+        ]);
+        // 10% down, savings equal: inside the 15% band
+        let ok = doc(&[
+            ("continuous_toks_per_s", 900.0),
+            ("shared_prefix_toks_per_s", 460.0),
+            ("prefill_tokens_saved_warm", 100.0),
+        ]);
+        let r = check_regression(&ok, &base, 0.15);
+        assert!(r.passed(), "{:?}", r.failures);
+        assert_eq!(r.checked.len(), 3, "{:?}", r.checked);
+        // faster than baseline is of course fine
+        let faster = doc(&[
+            ("continuous_toks_per_s", 2000.0),
+            ("prefill_tokens_saved_warm", 250.0),
+        ]);
+        assert!(check_regression(&faster, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_fails_when_prefix_cache_savings_are_lost() {
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_tokens_saved_warm", 100.0),
+        ]);
+        let broken = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_tokens_saved_warm", 0.0),
+        ]);
+        let r = check_regression(&broken, &base, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.failures[0].contains("prefill_tokens_saved_warm"),
+            "{:?}",
+            r.failures
+        );
+    }
+
+    #[test]
+    fn gate_skips_absent_keys_but_rejects_disjoint_baselines() {
+        let base = doc(&[("continuous_toks_per_s", 1000.0)]);
+        // current lacks the shared-prefix row (e.g. old bundle): the
+        // one shared key still gates
+        let cur = doc(&[("continuous_toks_per_s", 990.0)]);
+        let r = check_regression(&cur, &base, 0.15);
+        assert!(r.passed());
+        assert_eq!(r.checked.len(), 1);
+        // nothing in common → explicit failure, not a silent pass
+        let r =
+            check_regression(&doc(&[("x", 1.0)]), &doc(&[("y", 2.0)]), 0.15);
+        assert!(!r.passed());
     }
 }

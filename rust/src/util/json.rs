@@ -363,9 +363,9 @@ fn escape(s: &str, out: &mut String) {
 
 fn fmt_num(n: f64, out: &mut String) {
     if n.fract() == 0.0 && n.abs() < 1e15 {
-        out.push_str(&format!("{}", n as i64));
+        out.push_str(&(n as i64).to_string());
     } else {
-        out.push_str(&format!("{n}"));
+        out.push_str(&n.to_string());
     }
 }
 

@@ -78,7 +78,7 @@ impl Profiler {
             t.row(vec![
                 name,
                 format!("{total:.3}"),
-                format!("{count}"),
+                count.to_string(),
                 format!("{mean_us:.1}"),
             ]);
         }

@@ -323,7 +323,7 @@ fn chunk_partition_never_changes_kv_logits_or_glass_mask() {
             prop_assert!(guard <= n_prompt, "runaway chunk loop");
         }
         prop_assert!(
-            st.chunks_done == (n_prompt + chunk - 1) / chunk,
+            st.chunks_done == n_prompt.div_ceil(chunk),
             "chunk={chunk}: {} chunk calls",
             st.chunks_done
         );
@@ -368,6 +368,116 @@ fn chunk_partition_never_changes_kv_logits_or_glass_mask() {
         );
         Ok(())
     });
+}
+
+#[test]
+fn cached_prefix_resume_is_bitwise_equal_and_mask_invariant() {
+    // The shared-prefix cache's core claim, at the engine layer: a
+    // stream resumed from a boundary published by a DIFFERENT prompt
+    // sharing the prefix must reproduce the cold stream bit for bit —
+    // KV rows, final logits, merged statistics — and therefore select
+    // the identical GLASS mask.
+    use glass::engine::prefix_cache::{CacheTelemetry, PrefixCache};
+    use std::sync::Arc;
+
+    let engine = common::engine();
+    if engine.rt.manifest.exe("prefill_chunk_b1").is_err() {
+        eprintln!("artifact bundle lacks prefill_chunk — skipping");
+        return;
+    }
+    if !engine.rt.is_simulated() {
+        eprintln!("real backend — skipping bit-exact cache property");
+        return;
+    }
+    let spec = engine.spec().clone();
+    let sys = "the common system header reads: "
+        .repeat(2 * spec.prefill_len / 32 + 1);
+    assert!(sys.len() >= 2 * spec.prefill_len);
+    let p1 = format!("{sys} alpha question");
+    let p2 = format!("{sys} beta question");
+    assert!(p1.len().max(p2.len()) + 1 <= spec.max_seq);
+
+    // stream p1 cold, publishing every completed-chunk prefix — the
+    // batcher's publication discipline, reproduced by hand
+    let mut cache = PrefixCache::new(
+        spec.clone(),
+        usize::MAX,
+        Arc::new(CacheTelemetry::default()),
+    );
+    let mut st1 = engine.chunked_prefill_start(&p1).unwrap();
+    loop {
+        let done = engine.chunked_prefill_step(&mut st1).unwrap();
+        cache.insert(
+            &st1.tokens()[..st1.consumed()],
+            &st1.kv,
+            0,
+            st1.local_importance(),
+            st1.merged_weight(),
+            st1.logits(),
+        );
+        if done {
+            break;
+        }
+    }
+
+    // cold p2 reference
+    let mut cold = engine.chunked_prefill_start(&p2).unwrap();
+    while !engine.chunked_prefill_step(&mut cold).unwrap() {}
+
+    // warm p2: resume from the longest published prefix
+    let toks2 = engine.tok.encode_with_bos(&p2);
+    let hit = cache.lookup(&toks2).expect("shared prefix must hit");
+    assert!(
+        hit.seed.len >= 2 * spec.prefill_len
+            && hit.seed.len < toks2.len(),
+        "expected a multi-frame partial hit, got {} of {}",
+        hit.seed.len,
+        toks2.len()
+    );
+    let cached = hit.seed.len;
+    let mut warm = engine
+        .chunked_prefill_resume(toks2, spec.prefill_len, hit.seed)
+        .unwrap();
+    while !engine.chunked_prefill_step(&mut warm).unwrap() {}
+    cache.release(hit.id);
+    assert_eq!(warm.cached, cached);
+
+    // bit-identical stream state...
+    assert_eq!(
+        bits(&cold.kv.k.data),
+        bits(&warm.kv.k.data),
+        "K cache diverged after a cached splice"
+    );
+    assert_eq!(bits(&cold.kv.v.data), bits(&warm.kv.v.data), "V cache");
+    assert_eq!(
+        bits(cold.logits()),
+        bits(warm.logits()),
+        "final logits"
+    );
+    let (a, b) = (cold.result().unwrap(), warm.result().unwrap());
+    assert_eq!(a.lens, b.lens);
+    assert_eq!(
+        bits(&a.stats.data),
+        bits(&b.stats.data),
+        "merged prompt statistics must be bit-identical"
+    );
+    // ...and the identical GLASS mask
+    let prior = GlobalPrior::load(&engine.rt, PriorKind::INps).unwrap();
+    let k = spec.budget(0.5);
+    let mask = |st: &glass::engine::chunked::ChunkedPrefill| {
+        build_mask(
+            &Strategy::Glass { lambda: 0.5 },
+            st.local_importance(),
+            Some(&prior),
+            k,
+        )
+        .unwrap()
+    };
+    assert_eq!(
+        mask(&cold),
+        mask(&warm),
+        "GLASS mask changed under a cached prefix splice"
+    );
 }
 
 #[test]

@@ -5,7 +5,8 @@ mod common;
 
 use std::time::{Duration, Instant};
 
-use glass::server::batcher::Batcher;
+use glass::engine::prefix_cache::CacheMode;
+use glass::server::batcher::{Batcher, BatcherOptions};
 use glass::server::client::{request, Client};
 use glass::server::protocol::{Request, Response};
 use glass::server::scheduler::{Pending, Scheduler};
@@ -23,6 +24,24 @@ fn pending(
     max_tokens: usize,
     refresh_every: usize,
 ) -> Pending {
+    pending_cached(
+        conn_id,
+        prompt,
+        strategy,
+        max_tokens,
+        refresh_every,
+        CacheMode::On,
+    )
+}
+
+fn pending_cached(
+    conn_id: u64,
+    prompt: &str,
+    strategy: &str,
+    max_tokens: usize,
+    refresh_every: usize,
+    cache: CacheMode,
+) -> Pending {
     Pending {
         request: Request {
             id: conn_id,
@@ -32,6 +51,7 @@ fn pending(
             density: 0.5,
             max_tokens,
             refresh_every,
+            cache,
         },
         arrived: Instant::now(),
         conn_id,
@@ -402,6 +422,242 @@ fn in_flight_decode_continues_during_chunked_admission() {
         "decode steps must overlap prefill streaming (no-stall evidence)"
     );
     assert!(batcher.chunks >= 3, "got {} chunks", batcher.chunks);
+}
+
+// ------------------------------------------------- shared-prefix cache
+
+/// Drive one request through a batcher to completion.
+fn serve_one(batcher: &mut Batcher, p: Pending) -> Response {
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    let over = batcher.admit(vec![p], &mut |c, r| done.push((c, r)));
+    assert!(over.is_empty(), "unexpected admission overflow");
+    drive(batcher, &mut done, 1);
+    assert_eq!(done.len(), 1, "request must complete");
+    done.pop().unwrap().1
+}
+
+/// A multi-frame shared system prefix plus a per-request user suffix.
+fn shared_prefix_prompts() -> Option<(String, String, String)> {
+    let engine = common::engine();
+    if engine.rt.manifest.exe("prefill_chunk_b1").is_err() {
+        return None;
+    }
+    let spec = engine.spec().clone();
+    let sys =
+        "shared system prompt: answer with terse grammar-world prose. "
+            .repeat(2 * spec.prefill_len / 61 + 1);
+    assert!(sys.len() >= 2 * spec.prefill_len);
+    let p1 = format!("{sys} alpha asks about the fox");
+    let p2 = format!("{sys} beta asks about the owl");
+    // both must fit the serving capacity with an 8-token budget
+    if p2.len().max(p1.len()) + 1 + 8 > spec.max_seq + 1 {
+        return None;
+    }
+    Some((sys, p1, p2))
+}
+
+#[test]
+fn shared_prefix_hit_is_bit_identical_to_cold_and_reports_savings() {
+    // THE cache-correctness contract: for a prompt pair sharing a
+    // prefix, the second request's generated text (and mask density)
+    // must be identical with the cache on vs. off, while its telemetry
+    // proves the prefix was spliced, not recomputed.
+    let engine = common::engine();
+    let Some((sys, p1, p2)) = shared_prefix_prompts() else {
+        eprintln!("artifact bundle lacks prefill_chunk — skipping");
+        return;
+    };
+    let spec = engine.spec().clone();
+
+    // cache ON: p1 warms the prefix, p2 splices it
+    let mut on = Batcher::new(engine.clone(), 4).unwrap();
+    assert!(on.cache_enabled());
+    let first = serve_one(&mut on, pending(1, &p1, "i-glass", 8, 0));
+    assert!(first.error.is_none(), "{:?}", first.error);
+    assert_eq!(first.cached_prompt_tokens, 0, "first request is cold");
+    let warm = serve_one(&mut on, pending(2, &p2, "i-glass", 8, 0));
+
+    // cache OFF: p2 served cold by a fresh batcher
+    let mut off = Batcher::with_options(
+        engine.clone(),
+        BatcherOptions::new(4).without_cache(),
+    )
+    .unwrap();
+    assert!(!off.cache_enabled());
+    let cold = serve_one(&mut off, pending(3, &p2, "i-glass", 8, 0));
+
+    assert!(warm.error.is_none(), "{:?}", warm.error);
+    assert!(cold.error.is_none(), "{:?}", cold.error);
+    assert_eq!(
+        warm.text, cold.text,
+        "cached splice changed the generated tokens"
+    );
+    assert_eq!(warm.tokens, cold.tokens);
+    assert_eq!(
+        warm.density, cold.density,
+        "cached splice changed the GLASS mask"
+    );
+    assert_eq!(warm.prompt_tokens, cold.prompt_tokens);
+    assert_eq!(warm.prompt_tokens, p2.len() + 1, "full prompt consumed");
+    // ...and the splice actually happened
+    assert!(
+        warm.cached_prompt_tokens >= spec.prefill_len,
+        "expected ≥ one cached frame, got {}",
+        warm.cached_prompt_tokens
+    );
+    assert!(
+        warm.cached_prompt_tokens <= sys.len() + 2,
+        "cached span cannot exceed the shared prefix"
+    );
+    assert_eq!(warm.cache_hits, 1);
+    assert_eq!(cold.cached_prompt_tokens, 0);
+    assert_eq!(cold.cache_hits, 0);
+    assert!(
+        on.prefill_tokens_saved >= spec.prefill_len as u64,
+        "batcher-level savings counter must record the splice"
+    );
+}
+
+#[test]
+fn exact_repeat_prompt_skips_prefill_entirely() {
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let prompt = "the grey cat is quiet and";
+    let a = serve_one(&mut batcher, pending(1, prompt, "i-glass", 6, 0));
+    let b = serve_one(&mut batcher, pending(2, prompt, "i-glass", 6, 0));
+    assert!(a.error.is_none() && b.error.is_none());
+    assert_eq!(a.text, b.text, "same prompt, same greedy output");
+    assert_eq!(a.cached_prompt_tokens, 0);
+    // the repeat hit the full-prompt entry: every token spliced
+    assert_eq!(b.cached_prompt_tokens, prompt.len() + 1);
+    assert_eq!(b.cache_hits, 1);
+    assert_eq!(b.prompt_tokens, prompt.len() + 1);
+    assert_eq!(b.prefill_ms, 0.0, "exact hit makes no prefill call");
+}
+
+#[test]
+fn cache_off_mode_bypasses_and_readonly_never_inserts() {
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let prompt = "every morning the wolf";
+    let telemetry = batcher.telemetry();
+
+    // readonly on a cold cache: reads (miss), never publishes
+    let r = serve_one(
+        &mut batcher,
+        pending_cached(1, prompt, "dense", 4, 0, CacheMode::ReadOnly),
+    );
+    assert!(r.error.is_none());
+    let snap = telemetry.snapshot();
+    assert_eq!(snap.inserts, 0, "readonly must never insert");
+    assert_eq!(snap.misses, 1);
+
+    // a later identical readonly request still misses (nothing stored)
+    let r2 = serve_one(
+        &mut batcher,
+        pending_cached(2, prompt, "dense", 4, 0, CacheMode::ReadOnly),
+    );
+    assert_eq!(r2.cached_prompt_tokens, 0);
+    assert_eq!(telemetry.snapshot().inserts, 0);
+
+    // mode `on` publishes; a following `off` request bypasses entirely
+    let r3 = serve_one(
+        &mut batcher,
+        pending_cached(3, prompt, "dense", 4, 0, CacheMode::On),
+    );
+    assert!(r3.error.is_none());
+    assert!(telemetry.snapshot().inserts >= 1, "on-mode publishes");
+    let r4 = serve_one(
+        &mut batcher,
+        pending_cached(4, prompt, "dense", 4, 0, CacheMode::Off),
+    );
+    assert_eq!(
+        r4.cached_prompt_tokens, 0,
+        "off-mode must not read the warm entry"
+    );
+    assert_eq!(r4.cache_hits, 0);
+    assert_eq!(r4.text, r3.text, "bypass serves the same output");
+
+    // ...while an `on` request does hit it
+    let r5 = serve_one(
+        &mut batcher,
+        pending_cached(5, prompt, "dense", 4, 0, CacheMode::On),
+    );
+    assert_eq!(r5.cached_prompt_tokens, prompt.len() + 1);
+}
+
+#[test]
+fn same_prefix_burst_pays_the_prefix_miss_once() {
+    let engine = common::engine();
+    let Some((_sys, p1, p2)) = shared_prefix_prompts() else {
+        eprintln!("artifact bundle lacks prefill_chunk — skipping");
+        return;
+    };
+    let spec = engine.spec().clone();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    // both requests submitted in ONE admission burst: the follower is
+    // deferred (returned with the overflow) while the leader streams,
+    // then splices the published prefix on retry
+    let sched = Scheduler::new(4, Duration::from_millis(1));
+    sched.submit(pending(1, &p1, "i-glass", 8, 0));
+    sched.submit(pending(2, &p2, "i-glass", 8, 0));
+    sched.close();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    batcher.run(&sched, &mut |c, r| done.push((c, r)));
+    assert_eq!(done.len(), 2);
+    let by_conn = |c: u64| {
+        &done.iter().find(|(cc, _)| *cc == c).unwrap().1
+    };
+    let (leader, follower) = (by_conn(1), by_conn(2));
+    assert!(leader.error.is_none() && follower.error.is_none());
+    assert_eq!(leader.cached_prompt_tokens, 0, "leader pays the miss");
+    assert!(
+        follower.cached_prompt_tokens >= spec.prefill_len,
+        "deferred follower must splice the published prefix \
+         (got {} cached tokens)",
+        follower.cached_prompt_tokens
+    );
+
+    // warm re-burst: with every prefix cached, NOBODY defers or pays —
+    // both requests splice (the deferral check peeks the cache first)
+    let sched = Scheduler::new(4, Duration::from_millis(1));
+    sched.submit(pending(3, &p1, "i-glass", 8, 0));
+    sched.submit(pending(4, &p2, "i-glass", 8, 0));
+    sched.close();
+    let mut done: Vec<(u64, Response)> = Vec::new();
+    batcher.run(&sched, &mut |c, r| done.push((c, r)));
+    assert_eq!(done.len(), 2);
+    for (c, r) in &done {
+        assert!(r.error.is_none(), "conn {c}: {:?}", r.error);
+        assert!(
+            r.cached_prompt_tokens >= spec.prefill_len,
+            "conn {c}: warm burst must hit (got {} cached tokens)",
+            r.cached_prompt_tokens
+        );
+    }
+}
+
+#[test]
+fn stats_command_reports_server_cache_counters() {
+    let server = start_server();
+    let mut client = Client::connect(&server.addr).unwrap();
+    // cold stats: all zero
+    let s0 = client.stats().unwrap();
+    assert_eq!(s0.hits + s0.misses + s0.inserts, 0);
+    // one served request (miss + publish), one repeat (hit)
+    let prompt = "once there was a red fox";
+    for _ in 0..2 {
+        let resp =
+            client.call(request(prompt, "i-glass", 0.5)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+    }
+    let s = client.stats().unwrap();
+    assert!(s.misses >= 1, "first request misses: {s:?}");
+    assert!(s.hits >= 1, "repeat request hits: {s:?}");
+    assert!(s.inserts >= 1, "miss publishes: {s:?}");
+    assert!(s.bytes_resident > 0, "entries are byte-accounted: {s:?}");
+    assert!(s.entries >= 1);
+    server.stop();
 }
 
 #[test]
