@@ -48,8 +48,12 @@ pub struct RunConfig {
     pub seed: u64,
     /// Server bind address for `glass serve`.
     pub bind: String,
-    /// Shared-prefix cache byte budget for `glass serve` (0 = off).
+    /// Shared-prefix cache byte budget for `glass serve` (0 = off),
+    /// split evenly across serving shards.
     pub cache_bytes: usize,
+    /// Serving shard count for `glass serve` (per-shard engine thread,
+    /// scheduler queue, and prefix cache; 1 = the unsharded server).
+    pub shards: usize,
 }
 
 impl Default for RunConfig {
@@ -72,6 +76,7 @@ impl Default for RunConfig {
             bind: "127.0.0.1:7433".to_string(),
             cache_bytes:
                 crate::engine::prefix_cache::DEFAULT_CACHE_BYTES,
+            shards: 1,
         }
     }
 }
@@ -138,6 +143,9 @@ impl RunConfig {
         if let Some(v) = get("cache_bytes") {
             self.cache_bytes = v.as_int()? as usize;
         }
+        if let Some(v) = get("shards") {
+            self.shards = v.as_int()? as usize;
+        }
         Ok(())
     }
 
@@ -169,6 +177,7 @@ impl RunConfig {
         }
         self.cache_bytes =
             args.get_usize("cache-bytes", self.cache_bytes)?;
+        self.shards = args.get_usize("shards", self.shards)?;
         Ok(())
     }
 }
@@ -206,6 +215,25 @@ mod tests {
         c.apply_toml("[run]\nseed = 7\nbatch = 1\n").unwrap();
         assert_eq!(c.seed, 7);
         assert_eq!(c.batch, 1);
+    }
+
+    #[test]
+    fn shards_knob_defaults_and_overrides() {
+        let c = RunConfig::default();
+        assert_eq!(c.shards, 1, "default must be the unsharded server");
+        let mut c = RunConfig::default();
+        c.apply_toml("shards = 4\n").unwrap();
+        assert_eq!(c.shards, 4);
+        let args = Args::parse(
+            &["x", "--shards", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.shards, 2, "CLI overrides the config file");
     }
 
     #[test]

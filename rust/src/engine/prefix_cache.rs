@@ -115,6 +115,21 @@ pub struct CacheStatsSnapshot {
     pub entries: u64,
 }
 
+impl CacheStatsSnapshot {
+    /// Field-wise sum — how a sharded server aggregates its per-shard
+    /// cache counters into the one `stats`-command summary.
+    pub fn merge(&self, other: &CacheStatsSnapshot) -> CacheStatsSnapshot {
+        CacheStatsSnapshot {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            inserts: self.inserts + other.inserts,
+            evictions: self.evictions + other.evictions,
+            bytes_resident: self.bytes_resident + other.bytes_resident,
+            entries: self.entries + other.entries,
+        }
+    }
+}
+
 impl CacheTelemetry {
     pub fn snapshot(&self) -> CacheStatsSnapshot {
         CacheStatsSnapshot {

@@ -41,8 +41,12 @@ SUBCOMMANDS:
     nps                       run NPS through the runtime [--check]
                               [--seqs N] [--len N]
     serve                     start the server [--bind ADDR] [--batch N]
-                              [--cache-bytes N]  (0 disables the
-                              shared-prefix cache)
+                              [--shards N]  (per-shard engine thread +
+                              prefix cache; prompts are routed by
+                              leading-bytes hash so same-prefix traffic
+                              colocates; default 1)
+                              [--cache-bytes N]  (total across shards;
+                              0 disables the shared-prefix cache)
     client                    send a request [--bind ADDR] [--prompt STR]
                               [--strategy S] [--density F]
                               [--cache on|off|readonly] [--stats]
@@ -263,13 +267,16 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     let batch = args.get_usize("batch", cfg.batch)?;
     let mut opts = glass::server::ServerOptions::new(batch);
     opts.cache_bytes = cfg.cache_bytes;
+    opts.shards = cfg.shards.max(1);
     let server = Server::start_with(engine, &cfg.bind, opts)?;
     println!(
-        "serving on {} (batch width {batch}, prefix cache {}); \
-         Ctrl-C to stop",
+        "serving on {} ({} shard{} x batch width {batch}, prefix \
+         cache {}); Ctrl-C to stop",
         server.addr,
+        cfg.shards.max(1),
+        if cfg.shards.max(1) == 1 { "" } else { "s" },
         if cfg.cache_bytes > 0 {
-            format!("{} MiB", cfg.cache_bytes >> 20)
+            format!("{} MiB total", cfg.cache_bytes >> 20)
         } else {
             "off".to_string()
         }
@@ -282,13 +289,24 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
 fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
     let mut c = Client::connect(&cfg.bind)?;
     if args.has_flag("stats") {
-        let s = c.stats()?;
+        let (s, shards) = c.stats_full()?;
         println!(
             "cache: {} hits / {} misses, {} inserts, {} evictions, \
              {} entries, {} bytes resident",
             s.hits, s.misses, s.inserts, s.evictions, s.entries,
             s.bytes_resident
         );
+        for sh in &shards {
+            println!(
+                "shard {}: queue {} / slots {}+{} of {} \
+                 (decoding+prefilling)",
+                sh.shard,
+                sh.queue_depth,
+                sh.slots_active,
+                sh.slots_prefilling,
+                sh.batch_width
+            );
+        }
         return Ok(());
     }
     let prompt = args.get_str("prompt", "once there was a red fox");

@@ -44,6 +44,7 @@
 //! the decode steps that ran concurrently with prefill streaming).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -65,6 +66,29 @@ use crate::tensor::TensorF;
 
 use super::protocol::Response;
 use super::scheduler::{Pending, Scheduler};
+
+/// Live occupancy gauges for one batcher (= one serving shard),
+/// published by the [`Batcher::run`] loop and read lock-free by the
+/// connection threads answering the `stats` protocol command — so an
+/// operator sees per-shard queue depth and slot occupancy without a
+/// round trip through the engine loop.
+#[derive(Debug, Default)]
+pub struct ShardGauges {
+    /// Slots currently decoding a token per step.
+    pub slots_active: AtomicU64,
+    /// Slots currently streaming a chunked prefill.
+    pub slots_prefilling: AtomicU64,
+}
+
+impl ShardGauges {
+    pub fn active(&self) -> u64 {
+        self.slots_active.load(Ordering::Relaxed)
+    }
+
+    pub fn prefilling(&self) -> u64 {
+        self.slots_prefilling.load(Ordering::Relaxed)
+    }
+}
 
 /// Decay of the per-step decode-statistics average (per further step).
 pub const STAT_DECAY: f64 = 0.9;
@@ -156,6 +180,8 @@ pub struct Batcher {
     /// Server-level aggregate cache counters (shared with the `stats`
     /// protocol command).
     telemetry: Arc<CacheTelemetry>,
+    /// Live slot-occupancy gauges (shared with the `stats` command).
+    gauges: Arc<ShardGauges>,
     /// Admission sequence counter (FCFS chunk scheduling).
     admit_seq: u64,
     /// Total decode steps executed (telemetry / tests).
@@ -323,6 +349,7 @@ impl Batcher {
             cache,
             group_prefixes: opts.group_prefixes,
             telemetry,
+            gauges: Arc::new(ShardGauges::default()),
             admit_seq: 0,
             steps: 0,
             chunks: 0,
@@ -336,6 +363,22 @@ impl Batcher {
     /// protocol command reads these from the connection threads).
     pub fn telemetry(&self) -> Arc<CacheTelemetry> {
         Arc::clone(&self.telemetry)
+    }
+
+    /// Handle on this batcher's live occupancy gauges (published by
+    /// [`Batcher::run`]; the `stats` command reads them per shard).
+    pub fn gauges(&self) -> Arc<ShardGauges> {
+        Arc::clone(&self.gauges)
+    }
+
+    /// Publish the current slot occupancy to the shared gauges.
+    fn publish_gauges(&self) {
+        self.gauges
+            .slots_active
+            .store(self.active() as u64, Ordering::Relaxed);
+        self.gauges
+            .slots_prefilling
+            .store(self.prefilling() as u64, Ordering::Relaxed);
     }
 
     /// Is the shared-prefix cache enabled?
@@ -1036,6 +1079,7 @@ impl Batcher {
         sink: &mut dyn FnMut(u64, Response),
     ) {
         loop {
+            self.publish_gauges();
             let free = self.free_slots();
             if free > 0 {
                 if self.active() == 0 && self.prefilling() == 0 {
@@ -1063,7 +1107,9 @@ impl Batcher {
             if let Err(e) = self.step(sink) {
                 self.fail_all(&e, sink);
             }
+            self.publish_gauges();
         }
+        self.publish_gauges();
     }
 }
 

@@ -8,7 +8,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use super::protocol::{parse_stats_line, Request, Response};
+use super::protocol::{
+    parse_stats_line, Request, Response, ShardSnapshot,
+};
 use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
 
 pub struct Client {
@@ -65,8 +67,19 @@ impl Client {
         Ok(resp)
     }
 
-    /// Round-trip the `stats` command: server-level cache counters.
+    /// Round-trip the `stats` command: server-level cache counters
+    /// (summed across shards). See [`Client::stats_full`] for the
+    /// per-shard breakdown.
     pub fn stats(&mut self) -> Result<CacheStatsSnapshot> {
+        Ok(self.stats_full()?.0)
+    }
+
+    /// Round-trip the `stats` command, keeping the per-shard counters
+    /// (queue depth, slot occupancy) alongside the aggregate cache
+    /// snapshot.
+    pub fn stats_full(
+        &mut self,
+    ) -> Result<(CacheStatsSnapshot, Vec<ShardSnapshot>)> {
         let id = self.fresh_id();
         writeln!(self.stream, "{{\"cmd\":\"stats\",\"id\":{id}}}")?;
         let mut line = String::new();
@@ -74,11 +87,11 @@ impl Client {
         if n == 0 {
             bail!("server closed connection");
         }
-        let (resp_id, snap) = parse_stats_line(line.trim())?;
+        let (resp_id, snap, shards) = parse_stats_line(line.trim())?;
         if resp_id != id {
             bail!("stats response id {resp_id} != request id {id}");
         }
-        Ok(snap)
+        Ok((snap, shards))
     }
 
     /// Pipeline many requests, returning responses keyed by id with

@@ -1,23 +1,41 @@
-//! Threaded serving layer: TCP listener + scheduler + continuous batcher.
+//! Threaded serving layer: TCP listener + per-shard scheduler/batcher
+//! pairs behind a prefix-affinity router.
 //!
 //! # Architecture
 //!
 //! ```text
-//!  conn threads ──parse──▶ Scheduler (FCFS queue) ──admit──▶ Batcher
-//!       ▲                                                     │
-//!       └───────────── per-conn response channels ◀──retire───┘
+//!                         ┌─▶ Scheduler 0 ──admit──▶ Batcher 0 (engine, KV,
+//!  conn threads ──parse──▶│                              slots, prefix cache)
+//!        ▲      route_shard└─▶ Scheduler N-1 ──admit──▶ Batcher N-1
+//!        └───────────────── per-conn response channels ◀──retire──┘
 //! ```
 //!
 //! * N acceptor/connection threads parse JSON-line requests
-//!   ([`protocol`]) and push them onto the [`scheduler::Scheduler`]
-//!   queue;
-//! * one engine thread runs the [`batcher::Batcher`] loop: a fixed-width
-//!   step-mode decode batch in which every slot is an independent
-//!   request. Queued requests are admitted into free slots **mid-flight**
-//!   (prefill + KV slot splice), finished slots respond and free
-//!   **immediately**, so a short request is never blocked behind a long
-//!   one (no head-of-line blocking, unlike the old fused-generate drain
-//!   loop that ran every batch to the compiled max length);
+//!   ([`protocol`]) and **route** each one to a shard
+//!   ([`route_shard`]): an FNV-1a hash of the prompt's leading
+//!   [`route_window`] bytes — the first prefill frame's byte span
+//!   (`prefill_len - 1`; BOS takes the frame's remaining token slot),
+//!   i.e. the system-prefix window — modulo the shard count, so
+//!   requests sharing a system prompt / few-shot header **colocate**
+//!   on the shard whose prefix cache already holds their prefix.
+//!   Routing is a pure function of the prompt text: deterministic
+//!   across connections, threads, and restarts;
+//! * each of the `shards` serving shards owns a full single-owner
+//!   serving stack — one [`scheduler::Scheduler`] FCFS queue, one
+//!   engine thread running the [`batcher::Batcher`] loop over its own
+//!   `Engine`, KV state, decode slots, and shared-prefix cache. No
+//!   cross-shard synchronization exists on the hot path: GLASS mask
+//!   refresh, chunked admission, stats merging, and cache
+//!   publish/splice all stay shard-local, preserving every
+//!   single-owner invariant of the unsharded design. With the default
+//!   `shards = 1` the topology (and its behavior, bit for bit) is
+//!   exactly the pre-sharding server;
+//! * within a shard, the batcher is the same continuous-batching loop
+//!   as before: a fixed-width step-mode decode batch in which every
+//!   slot is an independent request. Queued requests are admitted into
+//!   free slots **mid-flight** (prefill + KV slot splice), finished
+//!   slots respond and free **immediately**, so a short request is
+//!   never blocked behind a long one (no head-of-line blocking);
 //! * **chunked admission** — a prompt longer than the compiled prefill
 //!   frame claims its slot and streams in through the `prefill_chunk`
 //!   executable, at most `chunk_budget` chunks interleaved per decode
@@ -27,12 +45,11 @@
 //!   prefill would produce, and the GLASS mask is built once the final
 //!   chunk lands. Prompts are accepted up to `max_seq - max_tokens + 1`
 //!   encoded tokens (the final token needs no KV write); anything
-//!   larger is rejected with an explicit
-//!   error — the server never silently truncates a prompt (the old
-//!   `prefill_len - 1` silent-tail-truncation ceiling is gone), and
-//!   responses carry `prompt_tokens` as proof of full consumption.
-//!   Admission overflow (burst wider than the free-slot count) is
-//!   re-queued at the scheduler front in FCFS order, never failed;
+//!   larger is rejected with an explicit error — the server never
+//!   silently truncates a prompt, and responses carry `prompt_tokens`
+//!   as proof of full consumption. Admission overflow (burst wider
+//!   than the free-slot count) is re-queued at the shard's scheduler
+//!   front in FCFS order, never failed;
 //! * masks are per-slot, so heterogeneous strategies share a batch; a
 //!   request can opt into a periodic **GLASS mask refresh**
 //!   (`refresh_every: R`) that re-runs the global-local rank aggregation
@@ -40,32 +57,43 @@
 //!   statistics — the paper's aggregation applied over the generation
 //!   horizon, for the long-form scenarios where prompt-only statistics
 //!   drift;
-//! * **shared-prefix cache** — per cached token prefix the batcher
-//!   keeps the KV rows *and* the merged GLASS statistics (plus the
-//!   last-position logits), both pure functions of the prefix. At
-//!   admission the longest cached prefix of the prompt is spliced in:
-//!   an exact full-prompt hit costs **zero** engine calls, a partial
-//!   hit resumes the chunked stream after the prefix — continuing the
-//!   statistics merge with the same arithmetic a cold stream would
-//!   use, so a hit's prompt statistics (and therefore its GLASS mask
-//!   and generated tokens) are **bit-identical** to a cold prefill.
-//!   Completed-chunk prefixes and cold short prompts are published
-//!   back; entries are ref-counted (a resuming stream pins its entry)
-//!   and evicted LRU under a byte budget accounted through
+//! * **shared-prefix cache** — per-shard; the server's total
+//!   `cache_bytes` budget is split evenly across shards. Per cached
+//!   token prefix a shard keeps the KV rows *and* the merged GLASS
+//!   statistics (plus the last-position logits), both pure functions
+//!   of the prefix. At admission the longest cached prefix of the
+//!   prompt is spliced in: an exact full-prompt hit costs **zero**
+//!   engine calls, a partial hit resumes the chunked stream after the
+//!   prefix — continuing the statistics merge with the same arithmetic
+//!   a cold stream would use, so a hit's prompt statistics (and
+//!   therefore its GLASS mask and generated tokens) are
+//!   **bit-identical** to a cold prefill. Completed-chunk prefixes and
+//!   cold short prompts are published back; entries are ref-counted
+//!   (a resuming stream pins its entry) and evicted LRU under the
+//!   per-shard byte budget accounted through
 //!   [`memsim`](crate::memsim). The scheduler clusters same-prefix
 //!   requests and the batcher defers a same-prefix admission while an
-//!   earlier one is still publishing, so a shared-system-prompt burst
-//!   pays its prefill miss once. Responses carry
-//!   `cached_prompt_tokens` / `cache_hits` / `cache_evictions`;
-//!   server-level aggregates (hits, misses, inserts, evictions, bytes
-//!   resident, entries) are served by the `stats` protocol command.
+//!   earlier one is still publishing; because the router colocates
+//!   same-prefix traffic, a shared-system-prompt burst pays its
+//!   prefill miss once **even when split across connections and
+//!   shards**. Responses carry `cached_prompt_tokens` / `cache_hits` /
+//!   `cache_evictions`; the `stats` protocol command serves the
+//!   cross-shard **sum** of the cache counters plus one per-shard
+//!   entry (queue depth, decode / prefill slot occupancy, width) so a
+//!   routing imbalance is visible from the wire.
 //!
 //! # Knobs and trade-offs
 //!
-//! * `batch_width` — decode slot count (must fit a compiled
-//!   `decode_b{W}`). Wider = more throughput under load, slightly more
-//!   per-step work when mostly idle.
-//! * scheduler `batch_window` — how long an idle engine waits for an
+//! * `shards` ([`ServerOptions`], `glass serve --shards N`) — serving
+//!   shard count; default 1 preserves the unsharded behavior exactly.
+//!   More shards = more engine threads decoding in parallel and more
+//!   (smaller) prefix caches; the router keeps warm traffic local, so
+//!   scaling costs no cross-shard chatter. Shard counts far above the
+//!   physical core count just slice the caches thinner.
+//! * `batch_width` — decode slot count **per shard** (must fit a
+//!   compiled `decode_b{W}`). Wider = more throughput under load,
+//!   slightly more per-step work when mostly idle.
+//! * scheduler `batch_window` — how long an idle shard waits for an
 //!   initial burst to form before starting; admission is continuous
 //!   afterwards, so this only shapes cold-start batching (latency ↔
 //!   throughput).
@@ -80,11 +108,14 @@
 //!   tracks decode-time importance drift closely at the cost of one
 //!   selection pass (pure host work, µs-scale) per R tokens; 0 keeps
 //!   the prefill-time static mask.
-//! * `cache_bytes` (server, [`ServerOptions`]) — shared-prefix cache
-//!   budget; 0 disables caching entirely. Bigger budgets keep more
-//!   distinct prefixes resident (more hits) at the cost of host
-//!   memory; eviction is LRU and never frees an entry a stream is
-//!   resuming from.
+//! * `cache_bytes` (server, [`ServerOptions`]) — **total**
+//!   shared-prefix cache budget, split evenly across shards
+//!   (`cache_bytes / shards` each); 0 disables caching entirely.
+//!   Bigger budgets keep more distinct prefixes resident (more hits)
+//!   at the cost of host memory; eviction is LRU per shard and never
+//!   frees an entry a stream is resuming from. Prefix-affinity routing
+//!   means splitting the budget does not split a prefix's hit rate —
+//!   all of a prefix's traffic lands on the one shard that caches it.
 //! * `cache` (per request) — `on` (read + publish, default),
 //!   `readonly` (read, never insert — for traffic that must not
 //!   displace hot prefixes), `off` (bypass — for strict cold-start
@@ -101,11 +132,12 @@
 //! (the KV window plus the final write-free token), enforced at
 //! admission with an explicit "prompt too long" error.
 //!
-//! All executables the loop can touch are warmed at startup —
+//! All executables a shard's loop can touch are warmed at startup —
 //! `prefill_b{n}` for every admission size, `prefill_chunk_b1` for
 //! streaming admissions, and the full-width `decode_b{W}` — so first
-//! requests never pay compile latency at any batch size the scheduler
-//! can form.
+//! requests never pay compile latency at any batch size a scheduler
+//! can form (the compiled-executable cache is shared, so warming costs
+//! once, not once per shard).
 
 pub mod batcher;
 pub mod client;
@@ -122,12 +154,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::prefix_cache::{CacheTelemetry, DEFAULT_CACHE_BYTES};
+use crate::engine::prefix_cache::{
+    CacheStatsSnapshot, CacheTelemetry, DEFAULT_CACHE_BYTES,
+};
 use crate::engine::Engine;
 use crate::info;
 
-use batcher::{Batcher, BatcherOptions};
-use protocol::{parse_client_line, stats_to_line, ClientLine, Response};
+use batcher::{Batcher, BatcherOptions, ShardGauges};
+use protocol::{
+    parse_client_line, stats_to_line, ClientLine, Response, ShardSnapshot,
+};
 use scheduler::{Pending, Scheduler};
 
 /// Response lines are serialized before entering the per-connection
@@ -135,16 +171,50 @@ use scheduler::{Pending, Scheduler};
 /// share one ordered writer.
 type Conns = Arc<Mutex<HashMap<u64, Sender<String>>>>;
 
+/// Router window for a model: the byte span of the first cacheable
+/// chunk — one prefill frame minus the BOS token slot (the byte-level
+/// tokenizer maps one prompt byte per remaining token). Hashing
+/// exactly this span guarantees two prompts that share their first
+/// cached chunk also share a shard.
+pub fn route_window(prefill_len: usize) -> usize {
+    prefill_len.saturating_sub(1).max(1)
+}
+
+/// Route a prompt to a serving shard: FNV-1a over the prompt's leading
+/// `window` bytes (the system-prefix span — [`route_window`] passes the
+/// first prefill frame's byte span, so the hash covers exactly the
+/// cacheable leading chunk), modulo the shard count. Prompts sharing at
+/// least `window` leading bytes always land on the same shard, which is
+/// what keeps shared-prefix cache hits local after the cache budget is
+/// split. Deterministic across connections, threads, and restarts;
+/// always 0 for a single shard.
+pub fn route_shard(prompt: &str, n_shards: usize, window: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    let bytes = prompt.as_bytes();
+    let take = bytes.len().min(window.max(1));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in &bytes[..take] {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % n_shards as u64) as usize
+}
+
 /// Construction knobs for [`Server::start_with`].
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
-    /// Decode slot count (must fit a compiled `decode_b{W}`).
+    /// Decode slot count per shard (must fit a compiled `decode_b{W}`).
     pub batch_width: usize,
-    /// Shared-prefix cache byte budget; 0 disables the cache.
+    /// Total shared-prefix cache byte budget, split evenly across
+    /// shards; 0 disables the cache.
     pub cache_bytes: usize,
-    /// Cluster same-prefix requests at the scheduler and defer
+    /// Cluster same-prefix requests at each shard's scheduler and defer
     /// same-prefix admissions behind an in-flight publisher.
     pub group_prefixes: bool,
+    /// Serving shard count (engine threads); 1 = the unsharded server.
+    pub shards: usize,
 }
 
 impl ServerOptions {
@@ -153,20 +223,37 @@ impl ServerOptions {
             batch_width,
             cache_bytes: DEFAULT_CACHE_BYTES,
             group_prefixes: true,
+            shards: 1,
         }
     }
+
+    /// Builder-style shard count override.
+    pub fn with_shards(mut self, shards: usize) -> ServerOptions {
+        self.shards = shards;
+        self
+    }
+}
+
+/// One serving shard's handles, shared between the engine thread that
+/// owns the batcher and the connection threads that submit work and
+/// answer `stats`.
+struct Shard {
+    sched: Arc<Scheduler>,
+    telemetry: Arc<CacheTelemetry>,
+    gauges: Arc<ShardGauges>,
+    width: usize,
 }
 
 /// Server handle: bind address + shutdown flag.
 pub struct Server {
     pub addr: String,
     shutdown: Arc<AtomicBool>,
-    sched: Arc<Scheduler>,
+    shards: Arc<Vec<Shard>>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Start serving on `addr` with default options (cache on).
+    /// Start serving on `addr` with default options (cache on, 1 shard).
     pub fn start(engine: Engine, addr: &str, batch_width: usize) -> Result<Server> {
         Server::start_with(engine, addr, ServerOptions::new(batch_width))
     }
@@ -183,41 +270,61 @@ impl Server {
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?.to_string();
 
-        // build the batcher up front: loads priors and warms every
-        // executable the engine loop can hit (all admission prefill
-        // sizes + the full-width decode step)
+        let n_shards = opts.shards.max(1);
+        // split the cache budget evenly; with one shard this is the
+        // whole budget (bit-identical to the unsharded server)
+        let shard_cache_bytes = opts.cache_bytes / n_shards;
         let prefill_len = engine.spec().prefill_len;
-        let mut engine_loop = Batcher::with_options(
-            engine,
-            BatcherOptions {
-                batch_width: opts.batch_width,
-                cache_bytes: opts.cache_bytes,
-                chunk_budget: 1,
-                group_prefixes: opts.group_prefixes,
-            },
-        )?;
-        let telemetry = engine_loop.telemetry();
 
+        // build every shard's batcher up front: loads priors and warms
+        // every executable an engine loop can hit (the compiled-
+        // executable cache is shared across shards, so the warm-up work
+        // is paid once)
+        let mut batchers = Vec::with_capacity(n_shards);
+        let mut shards = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            let engine_loop = Batcher::with_options(
+                engine.clone(),
+                BatcherOptions {
+                    batch_width: opts.batch_width,
+                    cache_bytes: shard_cache_bytes,
+                    chunk_budget: 1,
+                    group_prefixes: opts.group_prefixes,
+                },
+            )?;
+            let group_bytes =
+                if opts.group_prefixes && shard_cache_bytes > 0 {
+                    // one prefill frame of shared prompt bytes ≈ one
+                    // cacheable chunk (byte-level tokenizer)
+                    prefill_len
+                } else {
+                    0
+                };
+            shards.push(Shard {
+                sched: Arc::new(
+                    Scheduler::new(
+                        opts.batch_width,
+                        Duration::from_millis(4),
+                    )
+                    .with_prefix_grouping(group_bytes),
+                ),
+                telemetry: engine_loop.telemetry(),
+                gauges: engine_loop.gauges(),
+                width: engine_loop.width,
+            });
+            batchers.push(engine_loop);
+        }
+        let shards = Arc::new(shards);
         let conns: Conns = Arc::new(Mutex::new(HashMap::new()));
-        let group_bytes = if opts.group_prefixes && opts.cache_bytes > 0
-        {
-            // one prefill frame of shared prompt bytes ≈ one cacheable
-            // chunk (byte-level tokenizer)
-            prefill_len
-        } else {
-            0
-        };
-        let sched = Arc::new(
-            Scheduler::new(opts.batch_width, Duration::from_millis(4))
-                .with_prefix_grouping(group_bytes),
-        );
         let shutdown = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
 
-        // engine thread: continuous batching loop
+        // one engine thread per shard: independent continuous-batching
+        // loops, no cross-shard synchronization
+        for (shard_id, mut engine_loop) in batchers.into_iter().enumerate()
         {
             let conns = Arc::clone(&conns);
-            let sched = Arc::clone(&sched);
+            let sched = Arc::clone(&shards[shard_id].sched);
             threads.push(std::thread::spawn(move || {
                 let mut sink = |conn_id: u64, resp: Response| {
                     if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
@@ -230,7 +337,7 @@ impl Server {
         // acceptor
         {
             let conns = Arc::clone(&conns);
-            let sched = Arc::clone(&sched);
+            let shards = Arc::clone(&shards);
             let shutdown = Arc::clone(&shutdown);
             threads.push(std::thread::spawn(move || {
                 let next_conn = AtomicU64::new(1);
@@ -243,12 +350,14 @@ impl Server {
                             let conn_id =
                                 next_conn.fetch_add(1, Ordering::Relaxed);
                             let conns = Arc::clone(&conns);
-                            let sched = Arc::clone(&sched);
-                            let telemetry = Arc::clone(&telemetry);
+                            let shards = Arc::clone(&shards);
                             std::thread::spawn(move || {
                                 let _ = handle_conn(
-                                    stream, conn_id, &conns, &sched,
-                                    &telemetry,
+                                    stream,
+                                    conn_id,
+                                    &conns,
+                                    &shards,
+                                    route_window(prefill_len),
                                 );
                             });
                         }
@@ -263,18 +372,23 @@ impl Server {
                 }
             }));
         }
-        info!("server listening on {local}");
+        info!(
+            "server listening on {local} ({n_shards} shard{})",
+            if n_shards == 1 { "" } else { "s" }
+        );
         Ok(Server {
             addr: local,
             shutdown,
-            sched,
+            shards,
             threads,
         })
     }
 
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        self.sched.close();
+        for shard in self.shards.iter() {
+            shard.sched.close();
+        }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -285,8 +399,8 @@ fn handle_conn(
     stream: TcpStream,
     conn_id: u64,
     conns: &Conns,
-    sched: &Arc<Scheduler>,
-    telemetry: &Arc<CacheTelemetry>,
+    shards: &Arc<Vec<Shard>>,
+    route_window: usize,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let (tx, rx) = channel::<String>();
@@ -316,15 +430,40 @@ fn handle_conn(
             continue;
         }
         match parse_client_line(&line) {
-            Ok(ClientLine::Request(request)) => sched.submit(Pending {
-                request,
-                arrived: Instant::now(),
-                conn_id,
-            }),
+            Ok(ClientLine::Request(request)) => {
+                // prefix-affinity routing: a pure function of the
+                // prompt text, so same-prefix traffic colocates on the
+                // shard whose cache holds (or will hold) its prefix
+                let si = route_shard(
+                    &request.prompt,
+                    shards.len(),
+                    route_window,
+                );
+                shards[si].sched.submit(Pending {
+                    request,
+                    arrived: Instant::now(),
+                    conn_id,
+                });
+            }
             Ok(ClientLine::Stats { id }) => {
                 // answered right here from the shared counters — no
-                // round trip through the engine loop
-                send(stats_to_line(id, &telemetry.snapshot()));
+                // round trip through any engine loop
+                let agg = shards.iter().fold(
+                    CacheStatsSnapshot::default(),
+                    |acc, s| acc.merge(&s.telemetry.snapshot()),
+                );
+                let per: Vec<ShardSnapshot> = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| ShardSnapshot {
+                        shard: i as u64,
+                        queue_depth: s.sched.len() as u64,
+                        slots_active: s.gauges.active(),
+                        slots_prefilling: s.gauges.prefilling(),
+                        batch_width: s.width as u64,
+                    })
+                    .collect();
+                send(stats_to_line(id, &agg, &per));
             }
             Err(e) => {
                 // protocol error: respond immediately
@@ -335,4 +474,87 @@ fn handle_conn(
     conns.lock().unwrap().remove(&conn_id);
     let _ = w.join();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        let prompts = [
+            "once there was a red fox",
+            "the blue owl is",
+            "every morning the wolf",
+            "the grey cat is quiet and",
+            "",
+        ];
+        for n in [1usize, 2, 3, 4, 8] {
+            for p in &prompts {
+                let s = route_shard(p, n, 32);
+                assert!(s < n, "shard {s} out of range for {n}");
+                // pure function: repeat calls agree
+                for _ in 0..3 {
+                    assert_eq!(route_shard(p, n, 32), s);
+                }
+            }
+        }
+        // a single shard never hashes
+        assert_eq!(route_shard("anything", 1, 32), 0);
+        assert_eq!(route_shard("anything", 0, 32), 0);
+    }
+
+    #[test]
+    fn route_window_is_the_first_frame_minus_bos() {
+        assert_eq!(route_window(32), 31);
+        assert_eq!(route_window(2), 1);
+        // degenerate frames still hash at least one byte
+        assert_eq!(route_window(1), 1);
+        assert_eq!(route_window(0), 1);
+    }
+
+    #[test]
+    fn shared_prefix_window_colocates() {
+        // prompts sharing at least `window` leading bytes must land on
+        // the same shard — the property that keeps warm hits local
+        let sys = "SYSTEM: you are a terse assistant. ".repeat(2);
+        assert!(sys.len() >= 32);
+        for n in [2usize, 3, 4, 7] {
+            let home = route_shard(&format!("{sys}alpha"), n, 32);
+            for suffix in ["beta", "gamma", "a much longer user turn"] {
+                assert_eq!(
+                    route_shard(&format!("{sys}{suffix}"), n, 32),
+                    home,
+                    "suffix {suffix:?} broke colocation at {n} shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_prefixes_spread_across_shards() {
+        // not a strict uniformity claim — just that the hash actually
+        // disperses: 32 distinct prefixes must touch ≥ 2 of 4 shards
+        let hit: std::collections::HashSet<usize> = (0..32)
+            .map(|i| route_shard(&format!("prompt number {i} says"), 4, 32))
+            .collect();
+        assert!(hit.len() >= 2, "router sent everything to one shard");
+    }
+
+    #[test]
+    fn short_prompts_hash_their_whole_text() {
+        // prompts shorter than the window differ within it → may spread
+        let a = route_shard("a", 4, 32);
+        let same = (0..8u8).all(|i| {
+            route_shard(&((b'a' + i) as char).to_string(), 4, 32) == a
+        });
+        assert!(!same, "window-clamped hash ignored short-prompt bytes");
+    }
+
+    #[test]
+    fn options_default_to_one_shard() {
+        let o = ServerOptions::new(4);
+        assert_eq!(o.shards, 1, "default must preserve the unsharded server");
+        assert_eq!(o.with_shards(4).shards, 4);
+    }
 }

@@ -12,7 +12,11 @@
 //!              "refreshes": 5, "mask_updates": 2, "finish": "length"}
 //!   error:    {"id": 7, "error": "..."}
 //!   command:  {"cmd": "stats", "id": 3}
-//!             → {"id": 3, "stats": {"cache_hits": ..., ...}}
+//!             → {"id": 3, "stats": {"cache_hits": ..., ...},
+//!                "shards": [{"shard": 0, "queue_depth": ...,
+//!                            "slots_active": ...,
+//!                            "slots_prefilling": ...,
+//!                            "batch_width": ...}, ...]}
 //!
 //! Field ranges are validated at parse time and rejected with an
 //! immediate protocol error (never surfaced as a deep engine failure):
@@ -27,8 +31,11 @@
 //! and `cache_evictions` how many entries this request's own inserts
 //! evicted. The `stats` command returns the **server-level** aggregate
 //! counters (hits, misses, inserts, evictions, bytes resident, entry
-//! count) so operators can watch cache health without scraping
-//! per-response telemetry.
+//! count — summed across every shard's cache) so operators can watch
+//! cache health without scraping per-response telemetry, plus one
+//! [`ShardSnapshot`] per serving shard: live queue depth and decode /
+//! prefill slot occupancy, so a routing imbalance is visible from the
+//! wire.
 //!
 //! **Prompt length.** Prompts are NOT bounded by the prefill frame: the
 //! batcher streams long prompts through chunked prefill (one chunk per
@@ -98,8 +105,30 @@ pub fn parse_client_line(line: &str) -> Result<ClientLine> {
     }
 }
 
-/// Serialize the `stats` command response line.
-pub fn stats_to_line(id: u64, s: &CacheStatsSnapshot) -> String {
+/// One serving shard's live counters, as reported by the `stats`
+/// command: scheduler queue depth plus decode / prefill slot occupancy
+/// (gauges the shard's batcher publishes every loop iteration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ShardSnapshot {
+    /// Shard index (also the routing target of `route_shard`).
+    pub shard: u64,
+    /// Requests waiting in this shard's scheduler queue.
+    pub queue_depth: u64,
+    /// Slots currently decoding.
+    pub slots_active: u64,
+    /// Slots currently streaming a chunked prefill.
+    pub slots_prefilling: u64,
+    /// Slot capacity (occupancy denominator).
+    pub batch_width: u64,
+}
+
+/// Serialize the `stats` command response line: aggregate cache
+/// counters plus one entry per serving shard.
+pub fn stats_to_line(
+    id: u64,
+    s: &CacheStatsSnapshot,
+    shards: &[ShardSnapshot],
+) -> String {
     let mut inner = Json::obj();
     inner
         .set("cache_hits", Json::Num(s.hits as f64))
@@ -108,33 +137,68 @@ pub fn stats_to_line(id: u64, s: &CacheStatsSnapshot) -> String {
         .set("cache_evictions", Json::Num(s.evictions as f64))
         .set("cache_bytes_resident", Json::Num(s.bytes_resident as f64))
         .set("cache_entries", Json::Num(s.entries as f64));
+    let per_shard: Vec<Json> = shards
+        .iter()
+        .map(|sh| {
+            let mut o = Json::obj();
+            o.set("shard", Json::Num(sh.shard as f64))
+                .set("queue_depth", Json::Num(sh.queue_depth as f64))
+                .set("slots_active", Json::Num(sh.slots_active as f64))
+                .set(
+                    "slots_prefilling",
+                    Json::Num(sh.slots_prefilling as f64),
+                )
+                .set("batch_width", Json::Num(sh.batch_width as f64));
+            o
+        })
+        .collect();
     let mut o = Json::obj();
-    o.set("id", Json::Num(id as f64)).set("stats", inner);
+    o.set("id", Json::Num(id as f64))
+        .set("stats", inner)
+        .set("shards", Json::Arr(per_shard));
     o.to_string()
 }
 
-/// Parse a `stats` response line back into a snapshot (client side).
-pub fn parse_stats_line(line: &str) -> Result<(u64, CacheStatsSnapshot)> {
+/// Parse a `stats` response line back into the aggregate snapshot and
+/// the per-shard counters (client side). A line without a `shards` key
+/// (pre-sharding server) parses to an empty shard list.
+pub fn parse_stats_line(
+    line: &str,
+) -> Result<(u64, CacheStatsSnapshot, Vec<ShardSnapshot>)> {
     let j = Json::parse(line)?;
     let id = j.req("id")?.as_usize()? as u64;
     let s = j.req("stats")?;
-    let get = |k: &str| -> Result<u64> {
-        Ok(match s.get(k) {
+    let get = |doc: &Json, k: &str| -> Result<u64> {
+        Ok(match doc.get(k) {
             Some(v) => v.as_usize()? as u64,
             None => 0,
         })
     };
-    Ok((
-        id,
-        CacheStatsSnapshot {
-            hits: get("cache_hits")?,
-            misses: get("cache_misses")?,
-            inserts: get("cache_inserts")?,
-            evictions: get("cache_evictions")?,
-            bytes_resident: get("cache_bytes_resident")?,
-            entries: get("cache_entries")?,
-        },
-    ))
+    let snap = CacheStatsSnapshot {
+        hits: get(s, "cache_hits")?,
+        misses: get(s, "cache_misses")?,
+        inserts: get(s, "cache_inserts")?,
+        evictions: get(s, "cache_evictions")?,
+        bytes_resident: get(s, "cache_bytes_resident")?,
+        entries: get(s, "cache_entries")?,
+    };
+    let shards = match j.get("shards") {
+        Some(arr) => arr
+            .as_arr()?
+            .iter()
+            .map(|sh| {
+                Ok(ShardSnapshot {
+                    shard: get(sh, "shard")?,
+                    queue_depth: get(sh, "queue_depth")?,
+                    slots_active: get(sh, "slots_active")?,
+                    slots_prefilling: get(sh, "slots_prefilling")?,
+                    batch_width: get(sh, "batch_width")?,
+                })
+            })
+            .collect::<Result<Vec<ShardSnapshot>>>()?,
+        None => Vec::new(),
+    };
+    Ok((id, snap, shards))
 }
 
 impl Request {
@@ -429,10 +493,38 @@ mod tests {
             bytes_resident: 4096,
             entries: 3,
         };
-        let (id, back) =
-            parse_stats_line(&stats_to_line(9, &snap)).unwrap();
+        let shards = vec![
+            ShardSnapshot {
+                shard: 0,
+                queue_depth: 2,
+                slots_active: 3,
+                slots_prefilling: 1,
+                batch_width: 4,
+            },
+            ShardSnapshot {
+                shard: 1,
+                queue_depth: 0,
+                slots_active: 0,
+                slots_prefilling: 0,
+                batch_width: 4,
+            },
+        ];
+        let (id, back, back_shards) =
+            parse_stats_line(&stats_to_line(9, &snap, &shards)).unwrap();
         assert_eq!(id, 9);
         assert_eq!(back, snap);
+        assert_eq!(back_shards, shards);
+    }
+
+    #[test]
+    fn stats_line_without_shards_key_still_parses() {
+        // a pre-sharding server's stats line has no "shards" array
+        let legacy = r#"{"id":4,"stats":{"cache_hits":7}}"#;
+        let (id, snap, shards) = parse_stats_line(legacy).unwrap();
+        assert_eq!(id, 4);
+        assert_eq!(snap.hits, 7);
+        assert_eq!(snap.misses, 0);
+        assert!(shards.is_empty());
     }
 
     #[test]

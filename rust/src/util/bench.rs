@@ -162,14 +162,30 @@ const THROUGHPUT_KEYS: &[&str] = &[
 ];
 
 /// Baseline keys holding deterministic counters: the current run must
-/// be ≥ the baseline (machine-independent — e.g. warm-iteration prefill
-/// tokens saved by the shared-prefix cache; losing them means the cache
-/// stopped hitting).
-const FLOOR_KEYS: &[&str] = &["prefill_tokens_saved_warm"];
+/// be ≥ the baseline (machine-independent). `prefill_tokens_saved_warm`
+/// pins the shared-prefix cache's warm-pass savings (losing them means
+/// the cache stopped hitting); `prefill_chunks` and
+/// `decode_steps_during_prefill` pin the chunked-admission overlap of
+/// one deterministic mixed long+short pass (losing them means long
+/// prompts stopped streaming, or in-flight decode stalls while they
+/// do — the exact head-of-line regressions the continuous batcher
+/// exists to prevent).
+const FLOOR_KEYS: &[&str] = &[
+    "prefill_tokens_saved_warm",
+    "prefill_chunks",
+    "decode_steps_during_prefill",
+];
+
+/// Baseline keys holding latency ceilings (milliseconds): the current
+/// run must stay AT OR BELOW the baseline value. Ceilings are absolute
+/// and deliberately generous (the mirror image of the conservative
+/// throughput floors), so only a real blow-up — a stall, an accidental
+/// sleep, a quadratic admission path — trips them on a slow CI host.
+const CEILING_KEYS: &[&str] = &["p95_queue_decode_ms"];
 
 /// Compare a bench JSON document against a baseline. `tol` is the
 /// allowed fractional throughput drop (0.15 = fail below 85% of
-/// baseline).
+/// baseline). Counter floors and latency ceilings are absolute.
 pub fn check_regression(
     current: &Json,
     baseline: &Json,
@@ -208,7 +224,23 @@ pub fn check_regression(
         ));
         if cur < base {
             report.failures.push(format!(
-                "{key} lost its savings: {cur:.0} < baseline {base:.0}"
+                "{key} fell below its floor: {cur:.0} < baseline \
+                 {base:.0}"
+            ));
+        }
+    }
+    for &key in CEILING_KEYS {
+        let (Some(cur), Some(base)) =
+            (num(current, key), num(baseline, key))
+        else {
+            continue;
+        };
+        report.checked.push(format!(
+            "{key}: {cur:.2} vs baseline ceiling {base:.2}"
+        ));
+        if cur > base {
+            report.failures.push(format!(
+                "{key} blew up: {cur:.2} > the {base:.2} ceiling"
             ));
         }
     }
@@ -342,6 +374,79 @@ mod tests {
             "{:?}",
             r.failures
         );
+    }
+
+    #[test]
+    fn gate_fails_on_injected_latency_blowup() {
+        // the p95 queue+decode latency is a CEILING: a run that blows
+        // past the baseline value must fail even with throughput intact
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("p95_queue_decode_ms", 2000.0),
+        ]);
+        let slow = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("p95_queue_decode_ms", 7500.0),
+        ]);
+        let r = check_regression(&slow, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert_eq!(r.failures.len(), 1);
+        assert!(
+            r.failures[0].contains("p95_queue_decode_ms"),
+            "{:?}",
+            r.failures
+        );
+        // at or below the ceiling passes (boundary included)
+        let ok = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("p95_queue_decode_ms", 2000.0),
+        ]);
+        assert!(check_regression(&ok, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_fails_when_chunked_admission_overlap_is_lost() {
+        // losing the overlap counters means long prompts stopped
+        // streaming (prefill_chunks) or in-flight decode stalls during
+        // a stream (decode_steps_during_prefill) — each fails alone
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_chunks", 3.0),
+            ("decode_steps_during_prefill", 1.0),
+        ]);
+        let no_chunks = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_chunks", 0.0),
+            ("decode_steps_during_prefill", 1.0),
+        ]);
+        let r = check_regression(&no_chunks, &base, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.failures.iter().any(|f| f.contains("prefill_chunks")),
+            "{:?}",
+            r.failures
+        );
+        let stalled = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_chunks", 3.0),
+            ("decode_steps_during_prefill", 0.0),
+        ]);
+        let r = check_regression(&stalled, &base, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.failures
+                .iter()
+                .any(|f| f.contains("decode_steps_during_prefill")),
+            "{:?}",
+            r.failures
+        );
+        // more overlap than baseline is of course fine
+        let better = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("prefill_chunks", 16.0),
+            ("decode_steps_during_prefill", 12.0),
+        ]);
+        assert!(check_regression(&better, &base, 0.15).passed());
     }
 
     #[test]

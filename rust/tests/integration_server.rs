@@ -1,8 +1,15 @@
 //! Serving-layer integration: the continuous batcher driven directly
 //! (deterministic, no timing races) plus real TCP server + client runs.
+//!
+//! Every TCP-level test starts its server with `GLASS_TEST_SHARDS`
+//! shards (default 1) — the CI matrix runs the whole suite at 1 and 4
+//! shards, so concurrency regressions in the sharded batcher cannot
+//! land green. Tests that specifically exercise sharding pin their own
+//! shard count with [`start_server_sharded`].
 
 mod common;
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use glass::engine::prefix_cache::CacheMode;
@@ -10,11 +17,26 @@ use glass::server::batcher::{Batcher, BatcherOptions};
 use glass::server::client::{request, Client};
 use glass::server::protocol::{Request, Response};
 use glass::server::scheduler::{Pending, Scheduler};
-use glass::server::Server;
+use glass::server::{Server, ServerOptions};
+
+/// Shard count for the generic TCP tests (the CI matrix sets this).
+fn test_shards() -> usize {
+    std::env::var("GLASS_TEST_SHARDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
 
 fn start_server() -> Server {
+    start_server_sharded(test_shards())
+}
+
+fn start_server_sharded(shards: usize) -> Server {
     let engine = common::engine();
-    Server::start(engine, "127.0.0.1:0", 4).expect("start server")
+    let opts = ServerOptions::new(4).with_shards(shards);
+    Server::start_with(engine, "127.0.0.1:0", opts)
+        .expect("start server")
 }
 
 fn pending(
@@ -657,6 +679,234 @@ fn stats_command_reports_server_cache_counters() {
     assert!(s.inserts >= 1, "miss publishes: {s:?}");
     assert!(s.bytes_resident > 0, "entries are byte-accounted: {s:?}");
     assert!(s.entries >= 1);
+    server.stop();
+}
+
+// --------------------------------------------------- sharded serving
+
+/// A fixed mixed request set: every strategy over the short prompts,
+/// plus (when the bundle supports chunked prefill) a multi-chunk long
+/// prompt and a shared-prefix pair. Ids are distinct and deterministic.
+fn fixed_workload() -> Vec<Request> {
+    let engine = common::engine();
+    let spec = engine.spec().clone();
+    let mut reqs = Vec::new();
+    let mut id = 0u64;
+    for strategy in ["i-glass", "dense", "griffin"] {
+        for prompt in [
+            "once there was a red fox",
+            "the blue owl is",
+            "every morning the wolf",
+            "the grey cat is quiet and",
+        ] {
+            id += 1;
+            let mut r = request(prompt, strategy, 0.5);
+            r.id = id;
+            r.max_tokens = 8;
+            reqs.push(r);
+        }
+    }
+    if engine.rt.manifest.exe("prefill_chunk_b1").is_ok() {
+        let long = "abcdefghij ".repeat(3 * spec.prefill_len / 11 + 1);
+        if long.len() + 1 + 8 <= spec.max_seq {
+            id += 1;
+            let mut r = request(&long, "i-glass", 0.5);
+            r.id = id;
+            r.max_tokens = 8;
+            reqs.push(r);
+        }
+        if let Some((_sys, p1, p2)) = shared_prefix_prompts() {
+            for p in [p1, p2] {
+                id += 1;
+                let mut r = request(&p, "i-glass", 0.5);
+                r.id = id;
+                r.max_tokens = 8;
+                reqs.push(r);
+            }
+        }
+    }
+    reqs
+}
+
+/// Per-request observables compared across shard counts: text, tokens,
+/// prompt_tokens, mask density, finish reason (timing fields excluded).
+type Digest = HashMap<u64, (String, usize, usize, f64, String)>;
+
+#[test]
+fn four_shards_serve_bit_identical_outputs_to_one_shard() {
+    // THE sharding-correctness contract: splitting the serving stack
+    // into per-shard decode loops (separate engines, KV, caches with a
+    // split byte budget) must not change a single generated token. The
+    // sim backend is deterministic per slot, so any divergence here is
+    // a real sharding bug, not noise.
+    let digest = |shards: usize| -> Digest {
+        let server = start_server_sharded(shards);
+        let mut client = Client::connect(&server.addr).unwrap();
+        let out = client.call_many(fixed_workload()).unwrap();
+        server.stop();
+        out.into_iter()
+            .map(|(r, _latency)| {
+                assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+                (
+                    r.id,
+                    (r.text, r.tokens, r.prompt_tokens, r.density, r.finish),
+                )
+            })
+            .collect()
+    };
+    let one = digest(1);
+    let four = digest(4);
+    assert_eq!(one.len(), four.len());
+    for (id, resp) in &one {
+        assert_eq!(
+            four.get(id),
+            Some(resp),
+            "request {id} diverged between --shards 1 and --shards 4"
+        );
+    }
+}
+
+#[test]
+fn same_prefix_burst_across_connections_pays_one_miss_on_shards() {
+    // prefix-affinity routing colocates a shared-system-prompt burst
+    // on ONE shard even when the requests arrive on different
+    // connections — so the whole burst still pays exactly one cold
+    // prefill, exactly like the single-shard deferral test above
+    let Some((_sys, p1, p2)) = shared_prefix_prompts() else {
+        eprintln!("artifact bundle lacks prefill_chunk — skipping");
+        return;
+    };
+    let spec = common::engine().spec().clone();
+    let p3 = {
+        // third distinct suffix over the same system prefix
+        let cut = p2.len() - "beta asks about the owl".len();
+        format!("{}gamma asks about the cat", &p2[..cut])
+    };
+    let server = start_server_sharded(4);
+    let mut clients: Vec<Client> = (0..3)
+        .map(|_| Client::connect(&server.addr).unwrap())
+        .collect();
+    // all three submitted before any response is read, from three
+    // distinct connections (order of arrival at the shard is whatever
+    // the kernel makes of it — the invariant must hold regardless)
+    for (i, (c, p)) in
+        clients.iter_mut().zip([&p1, &p2, &p3]).enumerate()
+    {
+        let mut r = request(p, "i-glass", 0.5);
+        r.id = (i as u64 + 1) * 11;
+        r.max_tokens = 8;
+        c.send(r).unwrap();
+    }
+    let resps: Vec<Response> = clients
+        .iter_mut()
+        .map(|c| c.recv().unwrap())
+        .collect();
+    let mut cold = 0usize;
+    for r in &resps {
+        assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+        if r.cached_prompt_tokens == 0 {
+            cold += 1;
+        } else {
+            assert!(
+                r.cached_prompt_tokens >= spec.prefill_len,
+                "id {}: warm member spliced only {} tokens",
+                r.id,
+                r.cached_prompt_tokens
+            );
+        }
+    }
+    assert_eq!(
+        cold, 1,
+        "a same-prefix burst must pay exactly one cold prefill \
+         (cached_prompt_tokens per response: {:?})",
+        resps
+            .iter()
+            .map(|r| r.cached_prompt_tokens)
+            .collect::<Vec<_>>()
+    );
+    server.stop();
+}
+
+#[test]
+fn repeat_prompt_across_connections_hits_the_same_shard() {
+    // behavioral proof of routing determinism: the second connection's
+    // identical prompt must land on the shard that cached it, turning
+    // into an exact full-prompt hit with zero prefill
+    let server = start_server_sharded(4);
+    let prompt = "every morning the wolf";
+    let mut a = Client::connect(&server.addr).unwrap();
+    let first = a.call(request(prompt, "i-glass", 0.5)).unwrap();
+    assert!(first.error.is_none(), "{:?}", first.error);
+    assert_eq!(first.cached_prompt_tokens, 0, "first serve is cold");
+    let mut b = Client::connect(&server.addr).unwrap();
+    let second = b.call(request(prompt, "i-glass", 0.5)).unwrap();
+    assert!(second.error.is_none(), "{:?}", second.error);
+    assert_eq!(
+        second.cached_prompt_tokens,
+        prompt.len() + 1,
+        "deterministic routing must land the repeat on the warm shard"
+    );
+    assert_eq!(second.text, first.text);
+    server.stop();
+}
+
+#[test]
+fn stats_reports_per_shard_queue_depth_and_occupancy() {
+    let server = start_server_sharded(4);
+    let mut client = Client::connect(&server.addr).unwrap();
+    // cold: four shards, correct widths, nothing queued or occupied
+    let (agg0, shards0) = client.stats_full().unwrap();
+    assert_eq!(shards0.len(), 4);
+    for (i, sh) in shards0.iter().enumerate() {
+        assert_eq!(sh.shard, i as u64);
+        assert_eq!(sh.batch_width, 4);
+        assert_eq!(sh.queue_depth, 0);
+        assert_eq!(sh.slots_active, 0);
+        assert_eq!(sh.slots_prefilling, 0);
+    }
+    assert_eq!(agg0.hits + agg0.misses + agg0.inserts, 0);
+
+    // serve a few requests, then wait for the gauges to drain: the
+    // batcher publishes occupancy after the retiring step, so poll
+    // briefly instead of racing it
+    let out = client
+        .call_many(
+            (1..=6u64)
+                .map(|i| {
+                    let mut r = request(
+                        &format!("the blue owl is number {i}"),
+                        "dense",
+                        0.5,
+                    );
+                    r.id = i;
+                    r.max_tokens = 4;
+                    r
+                })
+                .collect(),
+        )
+        .unwrap();
+    assert!(out.iter().all(|(r, _)| r.error.is_none()));
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        let (agg, shards) = client.stats_full().unwrap();
+        assert_eq!(shards.len(), 4);
+        let queued: u64 = shards.iter().map(|s| s.queue_depth).sum();
+        let busy: u64 = shards
+            .iter()
+            .map(|s| s.slots_active + s.slots_prefilling)
+            .sum();
+        assert_eq!(queued, 0, "queues drain before responses return");
+        if busy == 0 {
+            // requests were served, caches touched, slots all free
+            assert!(agg.misses >= 1, "{agg:?}");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "shard gauges never drained: {shards:?}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
     server.stop();
 }
 
