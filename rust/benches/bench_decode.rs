@@ -22,10 +22,13 @@
 //! mixed long+short workload's stall-removal evidence (one
 //! deterministic pass's prefill chunks + decode steps overlapped with
 //! prefill streaming), the shared-system-prompt workload's prefill
-//! tokens saved by the prefix cache, and the sharded-serving rows (the
+//! tokens saved by the prefix cache, the sharded-serving rows (the
 //! continuous workload split across per-shard batcher threads by the
 //! server's prefix-affinity router — the multi-shard scaling proof on
-//! the sim backend).
+//! the sim backend), and the protocol-v2 streaming row: the same
+//! workload over real TCP through the nonblocking reactor with a crowd
+//! of idle connections attached (`idle_conns_toks_per_s` — proof that
+//! idle connections cost table entries, not throughput).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -35,9 +38,10 @@ use glass::engine::prefix_cache::CacheMode;
 use glass::engine::Engine;
 use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
 use glass::server::batcher::{Batcher, BatcherOptions};
+use glass::server::client::Client;
 use glass::server::protocol::Request;
-use glass::server::{route_shard, route_window};
 use glass::server::scheduler::{Pending, Scheduler};
+use glass::server::{route_shard, route_window, Server, ServerOptions};
 use glass::tensor::TensorF;
 use glass::util::bench::{check_regression, Bencher};
 use glass::util::json::Json;
@@ -157,7 +161,7 @@ fn main() {
     let max_tokens = spec.gen_len;
     let submit_all = |sched: &Scheduler, refresh_every: usize| {
         for i in 0..n_reqs {
-            sched.submit(Pending {
+            let _ = sched.submit(Pending {
                 request: Request {
                     id: i as u64 + 1,
                     prompt: prompts[i % prompts.len()].clone(),
@@ -170,6 +174,7 @@ fn main() {
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
+                stream: false,
             });
         }
         sched.close();
@@ -197,12 +202,14 @@ fn main() {
             let sched = Scheduler::new(4, Duration::from_millis(1));
             submit_all(&sched, 0);
             let mut served = 0usize;
-            batcher.run(&sched, &mut |_, resp| {
-                assert!(resp.error.is_none(), "{:?}", resp.error);
-                served += resp.tokens;
-                latencies_ms.push(
-                    resp.queue_ms + resp.prefill_ms + resp.decode_ms,
-                );
+            batcher.run(&sched, &mut |_, ev| {
+                if let Some(resp) = ev.into_response() {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    served += resp.tokens;
+                    latencies_ms.push(
+                        resp.queue_ms + resp.prefill_ms + resp.decode_ms,
+                    );
+                }
             });
             served
         },
@@ -221,9 +228,11 @@ fn main() {
             let sched = Scheduler::new(4, Duration::from_millis(1));
             submit_all(&sched, 8);
             let mut served = 0usize;
-            batcher.run(&sched, &mut |_, resp| {
-                assert!(resp.error.is_none(), "{:?}", resp.error);
-                served += resp.tokens;
+            batcher.run(&sched, &mut |_, ev| {
+                if let Some(resp) = ev.into_response() {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    served += resp.tokens;
+                }
             });
             served
         },
@@ -255,7 +264,7 @@ fn main() {
             } else {
                 prompts[i % prompts.len()].clone()
             };
-            sched.submit(Pending {
+            let _ = sched.submit(Pending {
                 request: Request {
                     id: i as u64 + 1,
                     prompt,
@@ -268,6 +277,7 @@ fn main() {
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
+                stream: false,
             });
         }
         sched.close();
@@ -276,9 +286,11 @@ fn main() {
         let sched = Scheduler::new(4, Duration::from_millis(1));
         submit_mixed(&sched);
         let mut served = 0usize;
-        batcher.run(&sched, &mut |_, resp| {
-            assert!(resp.error.is_none(), "{:?}", resp.error);
-            served += resp.tokens;
+        batcher.run(&sched, &mut |_, ev| {
+            if let Some(resp) = ev.into_response() {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                served += resp.tokens;
+            }
         });
         served
     };
@@ -326,7 +338,7 @@ fn main() {
         && longest + max_tokens <= spec.max_seq + 1;
     let submit_shared = |sched: &Scheduler| {
         for i in 0..n_reqs {
-            sched.submit(Pending {
+            let _ = sched.submit(Pending {
                 request: Request {
                     id: i as u64 + 1,
                     prompt: shared_prompt(i),
@@ -339,6 +351,7 @@ fn main() {
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
+                stream: false,
             });
         }
         sched.close();
@@ -348,9 +361,11 @@ fn main() {
             .with_prefix_grouping(spec.prefill_len);
         submit_shared(&sched);
         let mut served = 0usize;
-        batcher.run(&sched, &mut |_, resp| {
-            assert!(resp.error.is_none(), "{:?}", resp.error);
-            served += resp.tokens;
+        batcher.run(&sched, &mut |_, ev| {
+            if let Some(resp) = ev.into_response() {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                served += resp.tokens;
+            }
         });
         served
     };
@@ -428,7 +443,7 @@ fn main() {
                 n_shards,
                 route_window(spec.prefill_len),
             );
-            scheds[si].submit(Pending {
+            let _ = scheds[si].submit(Pending {
                 request: Request {
                     id: i as u64 + 1,
                     prompt,
@@ -441,6 +456,7 @@ fn main() {
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
+                stream: false,
             });
         }
         for s in &scheds {
@@ -458,13 +474,15 @@ fn main() {
                     )
                     .expect("shard batcher");
                     let mut served = 0usize;
-                    shard.run(&sched, &mut |_, resp| {
-                        assert!(
-                            resp.error.is_none(),
-                            "{:?}",
-                            resp.error
-                        );
-                        served += resp.tokens;
+                    shard.run(&sched, &mut |_, ev| {
+                        if let Some(resp) = ev.into_response() {
+                            assert!(
+                                resp.error.is_none(),
+                                "{:?}",
+                                resp.error
+                            );
+                            served += resp.tokens;
+                        }
                     });
                     served
                 })
@@ -485,6 +503,51 @@ fn main() {
         (n_reqs * max_tokens) as f64,
         || serve_sharded(4),
     );
+
+    // ---------------- v2 streaming over the reactor, many idle conns
+    // the reactor claim measured end to end: a crowd of idle
+    // connections must cost table entries, not threads or throughput.
+    // One active v2 client streams the continuous workload over real
+    // TCP while `idle_n` connected-but-silent sockets sit in the same
+    // reactor; tokens/s lands in the CI gate as idle_conns_toks_per_s.
+    let idle_n = if smoke { 32 } else { 256 };
+    let server = Server::start_with(
+        engine.clone(),
+        "127.0.0.1:0",
+        ServerOptions::new(4),
+    )
+    .expect("bench server");
+    let idle_conns: Vec<std::net::TcpStream> = (0..idle_n)
+        .map(|_| {
+            std::net::TcpStream::connect(&server.addr)
+                .expect("idle conn")
+        })
+        .collect();
+    let mut v2_client =
+        Client::connect_v2(&server.addr).expect("v2 client");
+    b.bench(
+        &format!("v2 streaming serve (b=4, {idle_n} idle conns)"),
+        (n_reqs * max_tokens) as f64,
+        || {
+            let reqs: Vec<Request> = (0..n_reqs)
+                .map(|i| Request {
+                    id: i as u64 + 1,
+                    prompt: prompts[i % prompts.len()].clone(),
+                    strategy: "i-glass".into(),
+                    lambda: 0.5,
+                    density: 0.5,
+                    max_tokens,
+                    refresh_every: 0,
+                    cache: CacheMode::On,
+                })
+                .collect();
+            let out = v2_client.call_many(reqs).expect("v2 workload");
+            assert!(out.iter().all(|(r, _)| r.error.is_none()));
+            out.len()
+        },
+    );
+    drop(idle_conns);
+    server.stop();
 
     println!("\n{}", b.report());
     // headline comparisons for EXPERIMENTS.md §Perf — rows looked up by
@@ -551,6 +614,10 @@ fn main() {
         Json::Num(fused_b4.throughput()),
     );
     doc.set("p95_queue_decode_ms", Json::Num(p95_latency_ms));
+    doc.set(
+        "idle_conns_toks_per_s",
+        Json::Num(row("v2 streaming serve").throughput()),
+    );
     doc.set("sharded_1_toks_per_s", Json::Num(sharded_1));
     doc.set("sharded_4_toks_per_s", Json::Num(sharded_4));
     doc.set(

@@ -1,6 +1,8 @@
-//! End-to-end serving driver (DESIGN.md §7): start the threaded server on
-//! the real trained model, submit batched requests dense and GLASS-sparse
-//! over TCP, and report latency/throughput + quality spot checks.
+//! End-to-end serving driver (DESIGN.md §7): start the reactor server
+//! on the real trained model, submit batched requests dense and
+//! GLASS-sparse over TCP (legacy v1 blocking protocol), stream one
+//! generation over protocol v2 with a mid-stream refresh, and report
+//! latency/throughput + quality spot checks.
 //!
 //!     make artifacts && cargo run --release --example edge_serving
 
@@ -10,7 +12,7 @@ use std::time::Instant;
 use anyhow::Result;
 use glass::engine::Engine;
 use glass::server::client::{request, Client};
-use glass::server::protocol::Request;
+use glass::server::protocol::{Event, Request};
 use glass::server::Server;
 use glass::util::stats::summarize;
 use glass::util::table::{fnum, Table};
@@ -83,6 +85,45 @@ fn main() -> Result<()> {
     println!("sample outputs (same prompt, different strategies):");
     for (strategy, text) in &sample_outputs {
         println!("  {strategy:8} -> {:?}", &text[..text.len().min(70)]);
+    }
+
+    // ------------------------- protocol v2: one streamed session
+    // the same server speaks the framed streaming protocol on the same
+    // port (auto-detected per connection): tokens arrive as deltas, the
+    // GLASS mask refresh is observable mid-stream, and the session is
+    // adjustable while in flight
+    println!("\nprotocol v2 stream (i-glass, refresh every 8 tokens):");
+    let mut v2 = Client::connect_v2(&server.addr)?;
+    let mut req = request(prompts[0], "i-glass", 0.5);
+    req.max_tokens = MAX_TOKENS;
+    req.refresh_every = 8;
+    let id = v2.generate_stream(req)?;
+    let mut deltas = 0usize;
+    let mut refreshes = 0usize;
+    loop {
+        match v2.next_event(id)? {
+            Event::Accepted { queue_pos, .. } => {
+                println!("  accepted at queue position {queue_pos}");
+            }
+            Event::Delta { .. } => deltas += 1,
+            Event::Refresh { changed, .. } => {
+                refreshes += 1;
+                if changed {
+                    println!("  mask refreshed (kept set changed)");
+                }
+            }
+            Event::Done(resp) => {
+                println!(
+                    "  done: {} tokens across {deltas} deltas, \
+                     {refreshes} refreshes, finish {:?}",
+                    resp.tokens, resp.finish
+                );
+                break;
+            }
+            Event::Error { error, .. } => {
+                anyhow::bail!("stream failed: {error}")
+            }
+        }
     }
     server.stop();
     Ok(())

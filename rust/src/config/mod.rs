@@ -52,8 +52,19 @@ pub struct RunConfig {
     /// split evenly across serving shards.
     pub cache_bytes: usize,
     /// Serving shard count for `glass serve` (per-shard engine thread,
-    /// scheduler queue, and prefix cache; 1 = the unsharded server).
+    /// reactor thread, scheduler queue, and prefix cache; 1 = the
+    /// unsharded server).
     pub shards: usize,
+    /// Wire protocol `glass client` speaks: "v2" (framed streaming
+    /// sessions, default) or "v1" (legacy one-shot lines). The server
+    /// auto-detects per connection and always serves both.
+    pub protocol: String,
+    /// Largest accepted wire frame (`glass serve`); bounds each
+    /// connection's read buffer.
+    pub max_frame_bytes: usize,
+    /// Outbound buffer cap per connection (`glass serve`); a consumer
+    /// that falls this far behind is disconnected.
+    pub conn_buffer_bytes: usize,
 }
 
 impl Default for RunConfig {
@@ -77,6 +88,9 @@ impl Default for RunConfig {
             cache_bytes:
                 crate::engine::prefix_cache::DEFAULT_CACHE_BYTES,
             shards: 1,
+            protocol: "v2".to_string(),
+            max_frame_bytes: crate::server::DEFAULT_MAX_FRAME_BYTES,
+            conn_buffer_bytes: crate::server::DEFAULT_CONN_BUFFER_BYTES,
         }
     }
 }
@@ -146,6 +160,15 @@ impl RunConfig {
         if let Some(v) = get("shards") {
             self.shards = v.as_int()? as usize;
         }
+        if let Some(v) = get("protocol") {
+            self.protocol = v.as_str()?.to_string();
+        }
+        if let Some(v) = get("max_frame_bytes") {
+            self.max_frame_bytes = v.as_int()? as usize;
+        }
+        if let Some(v) = get("conn_buffer_bytes") {
+            self.conn_buffer_bytes = v.as_int()? as usize;
+        }
         Ok(())
     }
 
@@ -178,6 +201,13 @@ impl RunConfig {
         self.cache_bytes =
             args.get_usize("cache-bytes", self.cache_bytes)?;
         self.shards = args.get_usize("shards", self.shards)?;
+        if let Some(v) = args.get("protocol") {
+            self.protocol = v.to_string();
+        }
+        self.max_frame_bytes =
+            args.get_usize("max-frame-bytes", self.max_frame_bytes)?;
+        self.conn_buffer_bytes = args
+            .get_usize("conn-buffer-bytes", self.conn_buffer_bytes)?;
         Ok(())
     }
 }
@@ -234,6 +264,36 @@ mod tests {
         .unwrap();
         c.apply_args(&args).unwrap();
         assert_eq!(c.shards, 2, "CLI overrides the config file");
+    }
+
+    #[test]
+    fn protocol_and_buffer_knobs_default_and_override() {
+        let c = RunConfig::default();
+        assert_eq!(c.protocol, "v2", "client defaults to the new wire");
+        assert_eq!(
+            c.max_frame_bytes,
+            crate::server::DEFAULT_MAX_FRAME_BYTES
+        );
+        let mut c = RunConfig::default();
+        c.apply_toml(
+            "protocol = \"v1\"\nmax_frame_bytes = 4096\n\
+             conn_buffer_bytes = 65536\n",
+        )
+        .unwrap();
+        assert_eq!(c.protocol, "v1");
+        assert_eq!(c.max_frame_bytes, 4096);
+        assert_eq!(c.conn_buffer_bytes, 65536);
+        let args = Args::parse(
+            &["x", "--protocol", "v2", "--max-frame-bytes", "8192"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.protocol, "v2", "CLI overrides the config file");
+        assert_eq!(c.max_frame_bytes, 8192);
     }
 
     #[test]

@@ -41,15 +41,22 @@ SUBCOMMANDS:
     nps                       run NPS through the runtime [--check]
                               [--seqs N] [--len N]
     serve                     start the server [--bind ADDR] [--batch N]
-                              [--shards N]  (per-shard engine thread +
-                              prefix cache; prompts are routed by
-                              leading-bytes hash so same-prefix traffic
-                              colocates; default 1)
+                              [--shards N]  (per-shard engine + reactor
+                              thread + prefix cache; prompts are routed
+                              by leading-bytes hash so same-prefix
+                              traffic colocates; default 1)
                               [--cache-bytes N]  (total across shards;
                               0 disables the shared-prefix cache)
+                              [--max-frame-bytes N] [--conn-buffer-bytes N]
+                              (per-connection read / write buffer caps;
+                              both protocols are served, auto-detected
+                              per connection)
     client                    send a request [--bind ADDR] [--prompt STR]
                               [--strategy S] [--density F]
                               [--cache on|off|readonly] [--stats]
+                              [--protocol v1|v2] (default v2)
+                              [--stream]  (v2: print deltas as they
+                              arrive, then the session summary)
     profile                   run a mixed workload and print the profiler
 
 COMMON OPTIONS:
@@ -62,7 +69,7 @@ COMMON OPTIONS:
 
 fn main() {
     logging::init();
-    let args = match Args::from_env(&["check", "help", "stats"]) {
+    let args = match Args::from_env(&["check", "help", "stats", "stream"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("argument error: {e}\n\n{USAGE}");
@@ -268,10 +275,12 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     let mut opts = glass::server::ServerOptions::new(batch);
     opts.cache_bytes = cfg.cache_bytes;
     opts.shards = cfg.shards.max(1);
+    opts.max_frame_bytes = cfg.max_frame_bytes;
+    opts.conn_buffer_bytes = cfg.conn_buffer_bytes;
     let server = Server::start_with(engine, &cfg.bind, opts)?;
     println!(
         "serving on {} ({} shard{} x batch width {batch}, prefix \
-         cache {}); Ctrl-C to stop",
+         cache {}, protocols v1+v2 auto-detected); Ctrl-C to stop",
         server.addr,
         cfg.shards.max(1),
         if cfg.shards.max(1) == 1 { "" } else { "s" },
@@ -287,7 +296,11 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
 }
 
 fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
-    let mut c = Client::connect(&cfg.bind)?;
+    let mut c = match cfg.protocol.as_str() {
+        "v2" => Client::connect_v2(&cfg.bind)?,
+        "v1" => Client::connect(&cfg.bind)?,
+        other => bail!("unknown protocol '{other}' (use v1 or v2)"),
+    };
     if args.has_flag("stats") {
         let (s, shards) = c.stats_full()?;
         println!(
@@ -315,6 +328,12 @@ fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
     req.cache = glass::engine::prefix_cache::CacheMode::parse(
         &args.get_str("cache", "on"),
     )?;
+    if args.has_flag("stream") {
+        if !c.is_v2() {
+            bail!("--stream needs --protocol v2");
+        }
+        return stream_one(&mut c, req);
+    }
     let resp = c.call(req)?;
     match resp.error {
         Some(e) => bail!("server error: {e}"),
@@ -334,6 +353,51 @@ fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Stream one v2 session, printing deltas as they arrive.
+fn stream_one(
+    c: &mut Client,
+    req: glass::server::protocol::Request,
+) -> Result<()> {
+    use glass::server::protocol::Event;
+    use std::io::Write as _;
+    let id = c.generate_stream(req)?;
+    loop {
+        match c.next_event(id)? {
+            Event::Accepted { queue_pos, .. } => {
+                println!("accepted (queue position {queue_pos})");
+            }
+            Event::Delta { text, .. } => {
+                print!("{text}");
+                std::io::stdout().flush().ok();
+            }
+            Event::Refresh { changed, .. } => {
+                if changed {
+                    print!("⟲");
+                    std::io::stdout().flush().ok();
+                }
+            }
+            Event::Done(resp) => {
+                println!();
+                println!(
+                    "tokens:  {}  prefill {:.1} ms  decode {:.1} ms  \
+                     density {:.2}  refreshes {}  finish {}",
+                    resp.tokens,
+                    resp.prefill_ms,
+                    resp.decode_ms,
+                    resp.density,
+                    resp.refreshes,
+                    resp.finish
+                );
+                return Ok(());
+            }
+            Event::Error { error, .. } => {
+                println!();
+                bail!("server error: {error}");
+            }
+        }
+    }
 }
 
 fn profile(cfg: &RunConfig) -> Result<()> {

@@ -42,6 +42,39 @@
 //! completes and frees its slot mid-flight, and a multi-chunk prompt
 //! admission never pauses in-flight decoding (`overlap_steps` counts
 //! the decode steps that ran concurrently with prefill streaming).
+//!
+//! # Event emission (protocol v2)
+//!
+//! The batcher reports per-slot progress as a stream of
+//! [`Event`]s through its sink instead of one whole response: a
+//! `delta` per decoded text chunk (UTF-8-safe incremental decoding via
+//! [`DeltaEmitter`] — the concatenation of a session's deltas is
+//! byte-identical to its final text), a `refresh` per GLASS mask
+//! re-aggregation, and exactly one terminal `done`/`error`. The v1
+//! compatibility shim ([`Event::into_response`]) collapses this stream
+//! back to the classic single response line, so the blocking protocol
+//! is served bit-identically — and a non-streaming session
+//! (`Pending::stream == false`, the v1 path) skips delta/refresh
+//! emission entirely, so one-shot requests pay no per-token event
+//! cost on the decode hot path.
+//!
+//! # Cancellation and live knobs
+//!
+//! [`Control`] messages ride the scheduler's control queue and are
+//! drained at the top of every loop iteration
+//! ([`Batcher::apply_controls`]): a `Cancel` frees the target's decode
+//! slot **within one decode step** (terminal `done` with finish
+//! "cancel", tokens decoded so far; a still-queued target is plucked
+//! from the scheduler) and re-queues nothing — the freed slot admits
+//! the next queued request on the very next iteration. A `SetRefresh`
+//! adjusts `refresh_every` for a live (or still-queued) session
+//! mid-stream. A control whose (conn, id) matches nothing is silently
+//! dropped: it means the session terminated while the control was in
+//! flight, and its real terminal event is already ahead in the
+//! connection's channel — emitting an error here would break the
+//! exactly-one-terminal-per-session guarantee. (Controls for ids the
+//! server never saw are answered with a no-op error frame by the
+//! reactor before they reach the batcher.)
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -64,29 +97,120 @@ use crate::glass::{
 use crate::info;
 use crate::tensor::TensorF;
 
-use super::protocol::Response;
-use super::scheduler::{Pending, Scheduler};
+use super::protocol::{Event, Response};
+use super::scheduler::{Control, Pending, Scheduler};
 
 /// Live occupancy gauges for one batcher (= one serving shard),
 /// published by the [`Batcher::run`] loop and read lock-free by the
-/// connection threads answering the `stats` protocol command — so an
+/// reactor threads answering the `stats` protocol command — so an
 /// operator sees per-shard queue depth and slot occupancy without a
 /// round trip through the engine loop.
+///
+/// Both gauges are packed into ONE atomic word (active in the low 32
+/// bits, prefilling in the high 32) and published with a single store,
+/// so any snapshot is a mutually consistent pair: a stats call racing
+/// heavy admission can never observe `active + prefilling` above the
+/// batch width, and never mixes a pre-retire active count with a
+/// post-admit prefilling count.
 #[derive(Debug, Default)]
 pub struct ShardGauges {
-    /// Slots currently decoding a token per step.
-    pub slots_active: AtomicU64,
-    /// Slots currently streaming a chunked prefill.
-    pub slots_prefilling: AtomicU64,
+    packed: AtomicU64,
 }
 
 impl ShardGauges {
+    /// Publish both gauges atomically (one store).
+    pub fn publish(&self, active: u64, prefilling: u64) {
+        self.packed
+            .store(active | (prefilling << 32), Ordering::Relaxed);
+    }
+
+    /// One consistent (active, prefilling) pair (one load).
+    pub fn snapshot(&self) -> (u64, u64) {
+        let v = self.packed.load(Ordering::Relaxed);
+        (v & 0xffff_ffff, v >> 32)
+    }
+
     pub fn active(&self) -> u64 {
-        self.slots_active.load(Ordering::Relaxed)
+        self.snapshot().0
     }
 
     pub fn prefilling(&self) -> u64 {
-        self.slots_prefilling.load(Ordering::Relaxed)
+        self.snapshot().1
+    }
+}
+
+/// Incremental, UTF-8-safe text emitter for one decode slot: turns the
+/// append-only generated-token byte stream into `delta` chunks whose
+/// concatenation is byte-identical to the final decoded text. Chunks
+/// end only where the UTF-8 decoder's state is finalized — after a
+/// valid character or after a definitively-invalid maximal subsequence
+/// (flushed as U+FFFD immediately; later bytes cannot change it) —
+/// while a possibly-incomplete trailing sequence is held back until
+/// more bytes arrive or the stream finishes. Splitting at finalized
+/// boundaries never changes the lossy decoding of what follows, so the
+/// stream totals exactly `Engine::decode_text`'s lossy decode of the
+/// whole sequence.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaEmitter {
+    /// Generated tokens already covered by emitted deltas.
+    sent: usize,
+    /// Deltas emitted so far (the next delta's contiguous index).
+    deltas: u64,
+}
+
+impl DeltaEmitter {
+    /// Next delta chunk for the tokens generated so far, or None when
+    /// nothing new is safely emittable. `finishing` flushes the held
+    /// tail (lossily, for invalid UTF-8) so the stream totals exactly
+    /// the final text.
+    pub fn chunk(
+        &mut self,
+        generated: &[i32],
+        finishing: bool,
+    ) -> Option<(u64, String)> {
+        debug_assert!(
+            generated.iter().all(|&t| (0..256).contains(&t)),
+            "generated stream must be byte tokens"
+        );
+        let tail: Vec<u8> = generated[self.sent.min(generated.len())..]
+            .iter()
+            .map(|&t| t as u8)
+            .collect();
+        if tail.is_empty() {
+            return None;
+        }
+        let upto = if finishing {
+            tail.len()
+        } else {
+            // emit through every finalized region: valid runs AND
+            // definitively-invalid subsequences (`error_len` is Some —
+            // later bytes cannot change their decoding, so flushing
+            // them lossily preserves the concat identity). Only a
+            // possibly-incomplete trailing sequence (`error_len` is
+            // None) is held back — a single bad byte must not stall
+            // the rest of the stream until the terminal flush.
+            let mut upto = 0;
+            loop {
+                match std::str::from_utf8(&tail[upto..]) {
+                    Ok(_) => break tail.len(),
+                    Err(e) => {
+                        upto += e.valid_up_to();
+                        match e.error_len() {
+                            Some(bad) => upto += bad,
+                            None => break upto,
+                        }
+                    }
+                }
+            }
+        };
+        if upto == 0 {
+            return None;
+        }
+        let text = String::from_utf8_lossy(&tail[..upto]).into_owned();
+        self.sent += upto;
+        let index = self.deltas;
+        self.deltas += 1;
+        Some((index, text))
     }
 }
 
@@ -115,6 +239,8 @@ struct Slot {
     prior_key: Option<&'static str>,
     admit: AdmitInfo,
     decode_started: Instant,
+    /// Incremental delta-text state (protocol v2 streaming).
+    emitter: DeltaEmitter,
 }
 
 /// A newcomer whose long prompt is still streaming in: it owns its
@@ -235,6 +361,16 @@ type Screened = (Pending, Strategy, Option<&'static str>, Vec<i32>);
 /// Leading tokens shared by two encoded prompts.
 fn shared_token_prefix(a: &[i32], b: &[i32]) -> usize {
     a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// Terminal error event for a permanently failed request (validation,
+/// capacity, mask/engine failure of this request alone).
+fn err_event(id: u64, msg: String) -> Event {
+    Event::Error {
+        id,
+        error: msg,
+        retryable: false,
+    }
 }
 
 /// Overwrite one slot's rows of the packed mask tensor ([W, L, m]);
@@ -371,14 +507,11 @@ impl Batcher {
         Arc::clone(&self.gauges)
     }
 
-    /// Publish the current slot occupancy to the shared gauges.
+    /// Publish the current slot occupancy to the shared gauges (one
+    /// atomic store, so readers always see a consistent pair).
     fn publish_gauges(&self) {
         self.gauges
-            .slots_active
-            .store(self.active() as u64, Ordering::Relaxed);
-        self.gauges
-            .slots_prefilling
-            .store(self.prefilling() as u64, Ordering::Relaxed);
+            .publish(self.active() as u64, self.prefilling() as u64);
     }
 
     /// Is the shared-prefix cache enabled?
@@ -409,7 +542,7 @@ impl Batcher {
     /// start decoding immediately; long prompts claim a slot and stream
     /// in chunk by chunk across subsequent [`Batcher::step`]s. Bad
     /// requests (unknown strategy, prompt + max_tokens beyond the KV
-    /// window, mask failures) get an immediate error response;
+    /// window, mask failures) get an immediate terminal error event;
     /// `max_tokens <= 1` requests complete right here. Requests beyond
     /// the free-slot count are **returned** (FCFS order preserved) for
     /// the caller to re-queue — they are never failed.
@@ -417,7 +550,7 @@ impl Batcher {
     pub fn admit(
         &mut self,
         pending: Vec<Pending>,
-        sink: &mut dyn FnMut(u64, Response),
+        sink: &mut dyn FnMut(u64, Event),
     ) -> Vec<Pending> {
         if pending.is_empty() {
             return Vec::new();
@@ -436,7 +569,7 @@ impl Batcher {
                     Err(e) => {
                         sink(
                             p.conn_id,
-                            Response::err(p.request.id, e.to_string()),
+                            err_event(p.request.id, e.to_string()),
                         );
                         continue;
                     }
@@ -454,7 +587,7 @@ impl Batcher {
                 // explicitly instead of silently truncating the prompt
                 sink(
                     p.conn_id,
-                    Response::err(
+                    err_event(
                         p.request.id,
                         format!(
                             "prompt too long: {n_prompt} prompt tokens + \
@@ -471,7 +604,7 @@ impl Batcher {
             if n_prompt > spec.prefill_len && !self.chunking {
                 sink(
                     p.conn_id,
-                    Response::err(
+                    err_event(
                         p.request.id,
                         format!(
                             "prompt of {n_prompt} tokens needs chunked \
@@ -602,7 +735,7 @@ impl Batcher {
                         }
                         Err(e) => sink(
                             p.conn_id,
-                            Response::err(p.request.id, e.to_string()),
+                            err_event(p.request.id, e.to_string()),
                         ),
                     }
                 }
@@ -673,10 +806,7 @@ impl Batcher {
                             }
                             sink(
                                 p.conn_id,
-                                Response::err(
-                                    p.request.id,
-                                    e.to_string(),
-                                ),
+                                err_event(p.request.id, e.to_string()),
                             );
                         }
                     }
@@ -697,7 +827,7 @@ impl Batcher {
             Ok(pre) => pre,
             Err(e) => {
                 for (_, p, ..) in shorts {
-                    sink(p.conn_id, Response::err(p.request.id, e.to_string()));
+                    sink(p.conn_id, err_event(p.request.id, e.to_string()));
                 }
                 return overflow;
             }
@@ -743,7 +873,8 @@ impl Batcher {
     /// Build one prefilled request's mask + session and install it into
     /// decode slot `si` (KV slot splice included). Shared by the
     /// monolithic short-prompt path, the exact-cache-hit path, and the
-    /// final chunk of a stream.
+    /// final chunk of a stream. Emits the prefill-seeded first token as
+    /// the session's initial `delta`.
     #[allow(clippy::too_many_arguments)]
     fn place(
         &mut self,
@@ -754,7 +885,7 @@ impl Batcher {
         pre: &crate::engine::PrefillResult,
         pre_slot: usize,
         admit: AdmitInfo,
-        sink: &mut dyn FnMut(u64, Response),
+        sink: &mut dyn FnMut(u64, Event),
     ) {
         let spec = self.engine.spec().clone();
         let req = &p.request;
@@ -765,7 +896,7 @@ impl Batcher {
         let mask = match built {
             Ok(m) => m,
             Err(e) => {
-                sink(p.conn_id, Response::err(req.id, e.to_string()));
+                sink(p.conn_id, err_event(req.id, e.to_string()));
                 return;
             }
         };
@@ -774,28 +905,31 @@ impl Batcher {
         ) {
             Ok(s) => s,
             Err(e) => {
-                sink(p.conn_id, Response::err(req.id, e.to_string()));
+                sink(p.conn_id, err_event(req.id, e.to_string()));
                 return;
             }
         };
         self.kv.copy_slot_from(si, &pre.kv, pre_slot);
-        let slot = Slot {
+        let mut slot = Slot {
             pending: p,
             sess,
             strategy,
             prior_key,
             admit,
             decode_started: Instant::now(),
+            emitter: DeltaEmitter::default(),
         };
         let done_at_prefill = slot.sess.finished.is_some()
             || slot.sess.generated.len()
                 >= slot.pending.request.max_tokens.max(1);
         if done_at_prefill {
             // stop token or 1-token budget: finished at prefill
+            emit_delta(&mut slot, true, sink);
             let resp = finish_response(&self.engine, &slot);
             self.tokens_out += resp.tokens as u64;
-            sink(slot.pending.conn_id, resp);
+            sink(slot.pending.conn_id, Event::Done(resp));
         } else {
+            emit_delta(&mut slot, false, sink);
             write_slot_mask(
                 &mut self.mask_t,
                 spec.n_layers,
@@ -815,7 +949,7 @@ impl Batcher {
     fn advance_chunk(
         &mut self,
         si: usize,
-        sink: &mut dyn FnMut(u64, Response),
+        sink: &mut dyn FnMut(u64, Event),
     ) {
         let engine = self.engine.clone();
         let t0 = Instant::now();
@@ -847,7 +981,7 @@ impl Batcher {
                 }
                 sink(
                     st.pending.conn_id,
-                    Response::err(st.pending.request.id, e.to_string()),
+                    err_event(st.pending.request.id, e.to_string()),
                 );
                 return;
             }
@@ -899,7 +1033,7 @@ impl Batcher {
             Err(e) => {
                 sink(
                     pending.conn_id,
-                    Response::err(pending.request.id, e.to_string()),
+                    err_event(pending.request.id, e.to_string()),
                 );
                 return;
             }
@@ -914,7 +1048,7 @@ impl Batcher {
     /// are ignored).
     pub fn step(
         &mut self,
-        sink: &mut dyn FnMut(u64, Response),
+        sink: &mut dyn FnMut(u64, Event),
     ) -> Result<()> {
         let spec = self.engine.spec().clone();
 
@@ -975,9 +1109,10 @@ impl Batcher {
                     spec.max_seq,
                 )?;
                 if finished {
+                    emit_delta(slot, true, sink);
                     let resp = finish_response(engine, slot);
                     *tokens_out += resp.tokens as u64;
-                    sink(slot.pending.conn_id, resp);
+                    sink(slot.pending.conn_id, Event::Done(resp));
                     *s = SlotState::Empty;
                     write_slot_mask(
                         mask_t,
@@ -988,6 +1123,7 @@ impl Batcher {
                     );
                     continue;
                 }
+                emit_delta(slot, false, sink);
                 let every = slot.pending.request.refresh_every;
                 if every > 0 && slot.sess.generated.len() % every == 0 {
                     let prior =
@@ -1014,6 +1150,21 @@ impl Batcher {
                                     Some(&slot.sess.mask),
                                 );
                             }
+                            if slot.pending.stream {
+                                sink(
+                                    slot.pending.conn_id,
+                                    Event::Refresh {
+                                        id: slot.pending.request.id,
+                                        refreshes: slot.sess.refreshes
+                                            as u64,
+                                        mask_updates: slot
+                                            .sess
+                                            .mask_updates
+                                            as u64,
+                                        changed,
+                                    },
+                                );
+                            }
                         }
                         Err(e) => {
                             // the refresh is an optional optimization:
@@ -1035,11 +1186,12 @@ impl Batcher {
     }
 
     /// Abort every in-flight request with an error (engine failure) —
-    /// including admissions still streaming their prompt in.
+    /// including admissions still streaming their prompt in. These are
+    /// marked retryable: the requests themselves were valid.
     pub fn fail_all(
         &mut self,
         err: &anyhow::Error,
-        sink: &mut dyn FnMut(u64, Response),
+        sink: &mut dyn FnMut(u64, Event),
     ) {
         let spec = self.engine.spec().clone();
         for (si, s) in self.slots.iter_mut().enumerate() {
@@ -1057,7 +1209,11 @@ impl Batcher {
             };
             sink(
                 pending.conn_id,
-                Response::err(pending.request.id, err.to_string()),
+                Event::Error {
+                    id: pending.request.id,
+                    error: err.to_string(),
+                    retryable: true,
+                },
             );
             write_slot_mask(
                 &mut self.mask_t,
@@ -1069,17 +1225,150 @@ impl Batcher {
         }
     }
 
+    /// Drain and apply every pending [`Control`] from the scheduler:
+    /// cancels free their slot right here (terminal `done` with finish
+    /// "cancel" — within one decode step of the frame's arrival) or
+    /// pluck a still-queued request; `set` adjusts `refresh_every`
+    /// live. A control matching no slot and no queued request is
+    /// dropped — its session already terminated, and a second terminal
+    /// must never be emitted.
+    pub fn apply_controls(
+        &mut self,
+        sched: &Scheduler,
+        sink: &mut dyn FnMut(u64, Event),
+    ) {
+        for c in sched.take_controls() {
+            self.apply_control(c, sched, sink);
+        }
+    }
+
+    /// Apply one control message (see [`Batcher::apply_controls`]).
+    pub fn apply_control(
+        &mut self,
+        c: Control,
+        sched: &Scheduler,
+        sink: &mut dyn FnMut(u64, Event),
+    ) {
+        let (conn_id, id) = c.key();
+        let spec = self.engine.spec().clone();
+        let si = self.slots.iter().position(|s| match s {
+            SlotState::Active(slot) => {
+                slot.pending.conn_id == conn_id
+                    && slot.pending.request.id == id
+            }
+            SlotState::Prefilling(st) => {
+                st.pending.conn_id == conn_id && st.pending.request.id == id
+            }
+            SlotState::Empty => false,
+        });
+        match c {
+            Control::Cancel { .. } => {
+                let Some(si) = si else {
+                    // not in a slot: maybe still queued — pluck it
+                    if let Some(p) = sched.remove(conn_id, id) {
+                        let mut resp = Response::ok(
+                            id,
+                            String::new(),
+                            0,
+                            0.0,
+                            0.0,
+                            p.request.density,
+                        );
+                        resp.queue_ms = p
+                            .arrived
+                            .elapsed()
+                            .as_secs_f64()
+                            * 1e3;
+                        resp.finish = "cancel".to_string();
+                        sink(p.conn_id, Event::Done(resp));
+                    }
+                    // neither slotted nor queued: the session already
+                    // terminated naturally and its real terminal event
+                    // is ahead of us in the connection's channel — a
+                    // second (error) terminal here would break the
+                    // exactly-one-terminal-per-session guarantee. The
+                    // reactor answers controls for ids it has never
+                    // seen; a control losing this race is dropped.
+                    return;
+                };
+                match std::mem::replace(&mut self.slots[si], SlotState::Empty)
+                {
+                    SlotState::Active(mut slot) => {
+                        // flush the held delta tail, then finish with
+                        // the tokens decoded so far
+                        emit_delta(&mut slot, true, sink);
+                        let mut resp =
+                            finish_response(&self.engine, &slot);
+                        resp.finish = "cancel".to_string();
+                        self.tokens_out += resp.tokens as u64;
+                        sink(slot.pending.conn_id, Event::Done(resp));
+                    }
+                    SlotState::Prefilling(st) => {
+                        if let (Some(pin), Some(cache)) =
+                            (st.pin, self.cache.as_mut())
+                        {
+                            cache.release(pin);
+                        }
+                        let mut resp = Response::ok(
+                            id,
+                            String::new(),
+                            0,
+                            st.admit.prefill_ms,
+                            0.0,
+                            st.pending.request.density,
+                        );
+                        resp.queue_ms = st.admit.queue_ms;
+                        resp.prompt_tokens = st.chunks.consumed();
+                        resp.finish = "cancel".to_string();
+                        sink(st.pending.conn_id, Event::Done(resp));
+                    }
+                    SlotState::Empty => unreachable!("matched above"),
+                }
+                write_slot_mask(
+                    &mut self.mask_t,
+                    spec.n_layers,
+                    spec.ffn_m,
+                    si,
+                    None,
+                );
+            }
+            Control::SetRefresh { refresh_every, .. } => {
+                if let Some(si) = si {
+                    match &mut self.slots[si] {
+                        SlotState::Active(slot) => {
+                            slot.pending.request.refresh_every =
+                                refresh_every;
+                        }
+                        SlotState::Prefilling(st) => {
+                            st.pending.request.refresh_every =
+                                refresh_every;
+                        }
+                        SlotState::Empty => unreachable!("matched above"),
+                    }
+                } else {
+                    // queued update, or a no-op: the session finished
+                    // while the frame was in flight (same reasoning as
+                    // the cancel race above — never add a terminal)
+                    let _ = sched.set_refresh(conn_id, id, refresh_every);
+                }
+            }
+        }
+    }
+
     /// Drive the loop against a scheduler until it closes and drains:
     /// block for work only when idle, admit mid-flight otherwise.
+    /// Control messages (cancel / set) are drained at the top of every
+    /// iteration, so a cancel frees its slot within one decode step.
     /// Admission overflow (more queued work than free slots) is pushed
     /// back onto the scheduler's queue front, preserving FCFS.
     pub fn run(
         &mut self,
         sched: &Scheduler,
-        sink: &mut dyn FnMut(u64, Response),
+        sink: &mut dyn FnMut(u64, Event),
     ) {
         loop {
             self.publish_gauges();
+            self.apply_controls(sched, sink);
             let free = self.free_slots();
             if free > 0 {
                 if self.active() == 0 && self.prefilling() == 0 {
@@ -1110,6 +1399,33 @@ impl Batcher {
             self.publish_gauges();
         }
         self.publish_gauges();
+    }
+}
+
+/// Emit the slot's next delta chunk, if any new text is safely
+/// representable (see [`DeltaEmitter`]). Non-streaming sessions (v1
+/// one-shot requests) skip this entirely: their compatibility shim
+/// would discard every delta, so building and sending one per token
+/// would be pure hot-path overhead.
+fn emit_delta(
+    slot: &mut Slot,
+    finishing: bool,
+    sink: &mut dyn FnMut(u64, Event),
+) {
+    if !slot.pending.stream {
+        return;
+    }
+    if let Some((index, text)) =
+        slot.emitter.chunk(&slot.sess.generated, finishing)
+    {
+        sink(
+            slot.pending.conn_id,
+            Event::Delta {
+                id: slot.pending.request.id,
+                index,
+                text,
+            },
+        );
     }
 }
 
@@ -1156,6 +1472,112 @@ mod tests {
         for good in super::super::protocol::STRATEGIES {
             assert!(resolve_strategy(good, 0.5).is_ok(), "{good}");
         }
+    }
+
+    #[test]
+    fn delta_emitter_concat_equals_full_decode() {
+        // ASCII: one delta per new token, concat == whole
+        let mut e = DeltaEmitter::default();
+        let gen: Vec<i32> = "the fox".bytes().map(|b| b as i32).collect();
+        let mut out = String::new();
+        for n in 1..=gen.len() {
+            if let Some((i, t)) = e.chunk(&gen[..n], false) {
+                assert_eq!(i as usize + 1, n, "contiguous indices");
+                out.push_str(&t);
+            }
+        }
+        assert!(e.chunk(&gen, true).is_none(), "nothing left to flush");
+        assert_eq!(out, "the fox");
+    }
+
+    #[test]
+    fn delta_emitter_holds_back_incomplete_utf8() {
+        // "é" = [0xC3, 0xA9] split across two tokens: the first byte
+        // must be held (NOT emitted as a replacement char), then both
+        // emitted together — concat stays byte-identical to the lossy
+        // decode of the whole stream
+        let mut e = DeltaEmitter::default();
+        let gen = vec![b'a' as i32, 0xC3];
+        let (i0, t0) = e.chunk(&gen, false).expect("ascii prefix emits");
+        assert_eq!((i0, t0.as_str()), (0, "a"));
+        assert!(
+            e.chunk(&gen, false).is_none(),
+            "incomplete sequence held back"
+        );
+        let gen = vec![b'a' as i32, 0xC3, 0xA9, b'b' as i32];
+        let (i1, t1) = e.chunk(&gen, false).expect("completed char emits");
+        assert_eq!((i1, t1.as_str()), (1, "éb"));
+    }
+
+    #[test]
+    fn delta_emitter_emits_finalized_invalid_bytes_immediately() {
+        // a DEFINITIVELY invalid byte (error_len = Some) must not
+        // stall the stream: it is flushed lossily right away, and the
+        // concat still equals the lossy decode of the whole stream
+        let mut e = DeltaEmitter::default();
+        let gen = vec![b'x' as i32, 0xFF, b'y' as i32];
+        let (_, t0) =
+            e.chunk(&gen, false).expect("finalized region emits");
+        assert_eq!(
+            t0,
+            String::from_utf8_lossy(&[b'x', 0xFF, b'y']).into_owned()
+        );
+        assert!(e.chunk(&gen, false).is_none(), "fully drained");
+        assert!(e.chunk(&gen, true).is_none(), "nothing left at finish");
+
+        // ...while a possibly-incomplete trailing sequence is still
+        // held back and flushed only on finish
+        let mut e = DeltaEmitter::default();
+        let gen = vec![b'x' as i32, 0xE2, 0x82]; // truncated 3-byte seq
+        let (_, t0) = e.chunk(&gen, false).expect("valid prefix emits");
+        assert_eq!(t0, "x");
+        assert!(e.chunk(&gen, false).is_none(), "incomplete tail held");
+        let (_, t1) = e.chunk(&gen, true).expect("finish flushes");
+        let mut concat = t0;
+        concat.push_str(&t1);
+        assert_eq!(
+            concat,
+            String::from_utf8_lossy(&[b'x', 0xE2, 0x82]).into_owned(),
+            "delta concat must equal the lossy decode of the stream"
+        );
+    }
+
+    #[test]
+    fn gauges_snapshot_is_always_a_consistent_pair() {
+        // the stats-race satellite: with both gauges packed into one
+        // atomic word, a reader hammering snapshots during publishes
+        // can never observe active + prefilling above the batch width
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let g = Arc::new(ShardGauges::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let width = 4u64;
+        let writer = {
+            let g = Arc::clone(&g);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                // cheap deterministic pseudo-random valid pairs
+                let mut x = 0x2545f491u64;
+                while !stop.load(Ordering::Relaxed) {
+                    x ^= x << 13;
+                    x ^= x >> 7;
+                    x ^= x << 17;
+                    let active = x % (width + 1);
+                    let prefilling = (x >> 8) % (width - active + 1);
+                    g.publish(active, prefilling);
+                }
+            })
+        };
+        for _ in 0..50_000 {
+            let (a, p) = g.snapshot();
+            assert!(
+                a + p <= width,
+                "inconsistent gauge pair: active {a} + prefilling {p} \
+                 exceeds width {width}"
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
     }
 
     #[test]

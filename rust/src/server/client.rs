@@ -1,7 +1,24 @@
-//! Blocking client for the JSON-line protocol (used by examples, the
+//! Client for the serving wire protocol (used by examples, the
 //! integration tests, and the serving benchmark).
+//!
+//! One [`Client`] speaks either protocol: [`Client::connect`] opens a
+//! legacy v1 (one-shot blocking) connection, [`Client::connect_v2`] a
+//! framed multiplexed v2 connection. On v2 the primitive is
+//! [`Client::generate_stream`] — start a session and consume its
+//! `accepted`/`delta`/`refresh` events incrementally with
+//! [`Client::next_event`] — and the old blocking methods
+//! ([`Client::call`], [`Client::call_many`], [`Client::recv`]) are
+//! reimplemented on top of the event stream: they simply discard
+//! non-terminal events and return the `done` frame's response, so the
+//! same test/bench code runs against both protocols.
+//! [`Client::next_event`] and [`Client::stats_full`] buffer other
+//! sessions' frames per-session rather than dropping them (a consumed
+//! terminal clears its session's buffer); the blocking collectors
+//! ([`Client::recv`]/[`Client::call_many`]) discard non-terminal
+//! frames they read, so don't interleave them with a
+//! [`Client::generate_stream`] whose deltas you still want.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -9,18 +26,37 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::protocol::{
-    parse_stats_line, Request, Response, ShardSnapshot,
+    cancel_frame, parse_stats_line, set_frame, stats_frame, Event,
+    Request, Response, ShardSnapshot,
 };
 use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
+use crate::util::json::Json;
 
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
     next_id: u64,
+    /// Speak framed v2 instead of one-shot v1.
+    v2: bool,
+    /// v2: buffered events for sessions other than the one currently
+    /// being waited on.
+    inbox: HashMap<u64, VecDeque<Event>>,
 }
 
 impl Client {
+    /// Connect speaking the legacy v1 protocol (one request line → one
+    /// response line).
     pub fn connect(addr: &str) -> Result<Client> {
+        Client::connect_proto(addr, false)
+    }
+
+    /// Connect speaking framed protocol v2 (multiplexed streaming
+    /// sessions; see [`super::protocol`] for the frame grammar).
+    pub fn connect_v2(addr: &str) -> Result<Client> {
+        Client::connect_proto(addr, true)
+    }
+
+    fn connect_proto(addr: &str, v2: bool) -> Result<Client> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -29,7 +65,14 @@ impl Client {
             stream,
             reader,
             next_id: 1,
+            v2,
+            inbox: HashMap::new(),
         })
+    }
+
+    /// Is this a v2 (streaming) connection?
+    pub fn is_v2(&self) -> bool {
+        self.v2
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -38,28 +81,140 @@ impl Client {
         id
     }
 
-    /// Send one request (non-blocking with respect to the response).
-    pub fn send(&mut self, mut req: Request) -> Result<u64> {
-        if req.id == 0 {
-            req.id = self.fresh_id();
-        }
-        writeln!(self.stream, "{}", req.to_line())?;
-        Ok(req.id)
-    }
-
-    /// Read the next response line.
-    pub fn recv(&mut self) -> Result<Response> {
+    fn read_line(&mut self) -> Result<String> {
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         if n == 0 {
             bail!("server closed connection");
         }
-        Response::parse(line.trim())
+        Ok(line)
     }
 
-    /// Round-trip a single request.
+    /// Send one request (non-blocking with respect to the response).
+    /// On a v2 connection this starts a streaming session; consume its
+    /// events with [`Client::next_event`] or collapse them with
+    /// [`Client::recv`].
+    pub fn send(&mut self, mut req: Request) -> Result<u64> {
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        let line = if self.v2 {
+            req.to_v2_frame()
+        } else {
+            req.to_line()
+        };
+        writeln!(self.stream, "{line}")?;
+        Ok(req.id)
+    }
+
+    /// Start a streaming session (v2 only): returns the session id to
+    /// pass to [`Client::next_event`].
+    pub fn generate_stream(&mut self, req: Request) -> Result<u64> {
+        if !self.v2 {
+            bail!("generate_stream requires a v2 connection");
+        }
+        self.send(req)
+    }
+
+    /// Cancel a live session (v2 only). The session's terminal frame —
+    /// a `done` with finish "cancel", or a no-op `error` if the id is
+    /// unknown/finished — still arrives through the event stream.
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        if !self.v2 {
+            bail!("cancel requires a v2 connection");
+        }
+        writeln!(self.stream, "{}", cancel_frame(id))?;
+        Ok(())
+    }
+
+    /// Adjust `refresh_every` for a live session mid-stream (v2 only).
+    pub fn set_refresh(&mut self, id: u64, refresh_every: usize) -> Result<()> {
+        if !self.v2 {
+            bail!("set requires a v2 connection");
+        }
+        writeln!(self.stream, "{}", set_frame(id, refresh_every))?;
+        Ok(())
+    }
+
+    /// Read the next event frame off the wire (v2).
+    fn read_event(&mut self) -> Result<Event> {
+        let line = self.read_line()?;
+        let j = Json::parse(line.trim())?;
+        Event::parse_frame(&j)
+    }
+
+    /// Next event for session `id` (v2): drains the per-session buffer
+    /// first, then reads frames off the wire — buffering other
+    /// sessions' frames rather than dropping them. Consuming a
+    /// session's terminal clears its buffer slot, so a reused id never
+    /// sees a previous session's stale events.
+    pub fn next_event(&mut self, id: u64) -> Result<Event> {
+        if let Some(q) = self.inbox.get_mut(&id) {
+            if let Some(ev) = q.pop_front() {
+                if q.is_empty() {
+                    self.inbox.remove(&id);
+                }
+                return Ok(ev);
+            }
+            self.inbox.remove(&id);
+        }
+        loop {
+            let ev = self.read_event()?;
+            if ev.id() == id {
+                return Ok(ev);
+            }
+            self.inbox.entry(ev.id()).or_default().push_back(ev);
+        }
+    }
+
+    /// Read the next COMPLETED response: on v1 the next response line;
+    /// on v2 the next terminal event of any session (non-terminal
+    /// events are discarded — use [`Client::next_event`] to observe
+    /// them).
+    pub fn recv(&mut self) -> Result<Response> {
+        if !self.v2 {
+            let line = self.read_line()?;
+            return Response::parse(line.trim());
+        }
+        // drain any buffered terminal first (sessions observed while
+        // waiting on another id), dropping that session's preceding
+        // non-terminal events with it — otherwise they would sit in
+        // the inbox forever and leak into a later session reusing the
+        // same id
+        let buffered = self.inbox.iter_mut().find_map(|(&id, q)| {
+            q.iter().position(|ev| ev.is_terminal()).map(|at| {
+                let ev = q.remove(at).unwrap();
+                q.drain(..at);
+                (id, ev)
+            })
+        });
+        if let Some((id, ev)) = buffered {
+            if self.inbox.get(&id).is_some_and(|q| q.is_empty()) {
+                self.inbox.remove(&id);
+            }
+            if let Some(resp) = ev.into_response() {
+                return Ok(resp);
+            }
+        }
+        loop {
+            if let Some(resp) = self.read_event()?.into_response() {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// Round-trip a single request (blocking, either protocol).
     pub fn call(&mut self, req: Request) -> Result<Response> {
         let id = self.send(req)?;
+        if self.v2 {
+            loop {
+                if let Some(resp) =
+                    self.next_event(id)?.into_response()
+                {
+                    return Ok(resp);
+                }
+            }
+        }
         let resp = self.recv()?;
         if resp.id != id && resp.id != 0 {
             bail!("response id {} != request id {id}", resp.id);
@@ -76,27 +231,42 @@ impl Client {
 
     /// Round-trip the `stats` command, keeping the per-shard counters
     /// (queue depth, slot occupancy) alongside the aggregate cache
-    /// snapshot.
+    /// snapshot. Works on both protocols (the stats response line is
+    /// identical); on v2, event frames of in-flight sessions arriving
+    /// first are buffered, not lost.
     pub fn stats_full(
         &mut self,
     ) -> Result<(CacheStatsSnapshot, Vec<ShardSnapshot>)> {
         let id = self.fresh_id();
-        writeln!(self.stream, "{{\"cmd\":\"stats\",\"id\":{id}}}")?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line)?;
-        if n == 0 {
-            bail!("server closed connection");
+        if self.v2 {
+            writeln!(self.stream, "{}", stats_frame(id))?;
+        } else {
+            writeln!(self.stream, "{{\"cmd\":\"stats\",\"id\":{id}}}")?;
         }
-        let (resp_id, snap, shards) = parse_stats_line(line.trim())?;
-        if resp_id != id {
-            bail!("stats response id {resp_id} != request id {id}");
+        loop {
+            let line = self.read_line()?;
+            let trimmed = line.trim();
+            if self.v2 {
+                // an in-flight session's event may interleave before
+                // the stats line: buffer it and keep reading
+                let j = Json::parse(trimmed)?;
+                if j.get("ev").is_some() {
+                    let ev = Event::parse_frame(&j)?;
+                    self.inbox.entry(ev.id()).or_default().push_back(ev);
+                    continue;
+                }
+            }
+            let (resp_id, snap, shards) = parse_stats_line(trimmed)?;
+            if resp_id != id {
+                bail!("stats response id {resp_id} != request id {id}");
+            }
+            return Ok((snap, shards));
         }
-        Ok((snap, shards))
     }
 
     /// Pipeline many requests, returning responses keyed by id with
     /// per-request wall-clock latency measured from send to receive
-    /// completion of that id.
+    /// completion of that id. Works on both protocols.
     pub fn call_many(
         &mut self,
         reqs: Vec<Request>,

@@ -1,128 +1,120 @@
-//! Threaded serving layer: TCP listener + per-shard scheduler/batcher
-//! pairs behind a prefix-affinity router.
+//! Serving layer: a poll-based **nonblocking reactor** front carrying
+//! framed, multiplexed protocol-v2 sessions (and the legacy v1
+//! protocol, auto-detected) over per-shard scheduler/batcher pairs
+//! behind a prefix-affinity router.
 //!
 //! # Architecture
 //!
 //! ```text
-//!                         ┌─▶ Scheduler 0 ──admit──▶ Batcher 0 (engine, KV,
-//!  conn threads ──parse──▶│                              slots, prefix cache)
-//!        ▲      route_shard└─▶ Scheduler N-1 ──admit──▶ Batcher N-1
-//!        └───────────────── per-conn response channels ◀──retire──┘
+//!             accept            round-robin handoff
+//!  listener ────────▶ acceptor ─────────────────────┐
+//!                                                   ▼
+//!  ┌─ reactor thread 0 ──────────────┐   ┌─ reactor thread R-1 ─┐
+//!  │ conn table: nonblocking reads,  │   │        ...           │
+//!  │ bounded r/w buffers, per-conn   │   └──────────────────────┘
+//!  │ protocol state machine (v1|v2)  │
+//!  └──────┬───────────────▲──────────┘
+//!   submit│/control       │ per-conn event channels
+//!         ▼               │
+//!  ┌─▶ Scheduler 0 ──admit──▶ Batcher 0 (engine thread: KV, slots,
+//!  │                              prefix cache, event emission)
+//!  └─▶ Scheduler N-1 ─admit──▶ Batcher N-1
+//!     (route_shard: FNV-1a over the prompt's leading bytes)
 //! ```
 //!
-//! * N acceptor/connection threads parse JSON-line requests
-//!   ([`protocol`]) and **route** each one to a shard
-//!   ([`route_shard`]): an FNV-1a hash of the prompt's leading
-//!   [`route_window`] bytes — the first prefill frame's byte span
-//!   (`prefill_len - 1`; BOS takes the frame's remaining token slot),
-//!   i.e. the system-prefix window — modulo the shard count, so
-//!   requests sharing a system prompt / few-shot header **colocate**
-//!   on the shard whose prefix cache already holds their prefix.
-//!   Routing is a pure function of the prompt text: deterministic
-//!   across connections, threads, and restarts;
-//! * each of the `shards` serving shards owns a full single-owner
-//!   serving stack — one [`scheduler::Scheduler`] FCFS queue, one
-//!   engine thread running the [`batcher::Batcher`] loop over its own
-//!   `Engine`, KV state, decode slots, and shared-prefix cache. No
-//!   cross-shard synchronization exists on the hot path: GLASS mask
-//!   refresh, chunked admission, stats merging, and cache
-//!   publish/splice all stay shard-local, preserving every
-//!   single-owner invariant of the unsharded design. With the default
-//!   `shards = 1` the topology (and its behavior, bit for bit) is
-//!   exactly the pre-sharding server;
+//! * **Reactor threads** (one per shard) own connection state
+//!   machines instead of parking one thread per connection: every
+//!   socket is `set_nonblocking`, and each reactor's readiness loop
+//!   polls its connections for reads, drains each connection's event
+//!   channel, and flushes pending writes — sleeping only when a full
+//!   pass found no work. An idle connection therefore costs a table
+//!   entry, a buffer, and one nonblocking `read` poll per sweep — not
+//!   a thread or a stack. The sweep is O(connections) per tick (≥
+//!   ~0.5 ms apart when idle), which is cheap into the thousands of
+//!   connections; true readiness registration (epoll/kqueue) that
+//!   makes idle connections cost nothing per tick is the remaining
+//!   ROADMAP item.
+//! * **Per-connection buffers are bounded.** The read buffer rejects
+//!   any frame larger than `max_frame_bytes` (a client that never
+//!   sends a newline, or sends one gigantic line, gets a protocol
+//!   error and a closed connection instead of growing server memory
+//!   without limit). The write buffer is capped at
+//!   `conn_buffer_bytes`: a consumer too slow to drain its own event
+//!   stream is disconnected rather than buffered forever.
+//! * **Protocol negotiation** happens on the first parsed line of each
+//!   connection ([`protocol`]): `"v":2` locks the connection to the
+//!   framed multiplexed protocol (interleaved `accepted` / `delta` /
+//!   `refresh` / `done` / `error` event frames per session id, plus
+//!   client `cancel` and mid-stream `set` control frames); anything
+//!   else locks it to v1, which the compatibility shim serves
+//!   **bit-identically** to the pre-reactor server — non-terminal
+//!   events are suppressed and the terminal event is serialized as the
+//!   classic one-line response.
+//! * **Routing** is per-request and unchanged from the sharded server:
+//!   [`route_shard`] hashes the prompt's leading [`route_window`]
+//!   bytes (the first prefill frame's byte span — the system-prefix
+//!   window) with FNV-1a, modulo the shard count, so requests sharing
+//!   a system prompt colocate on the shard whose prefix cache already
+//!   holds their prefix. A pure function of the prompt text:
+//!   deterministic across connections, reactors, and restarts.
+//!   v2 `cancel`/`set` frames are routed to the shard recorded for
+//!   their session at submission (the connection tracks live session
+//!   ids); controls ride the shard scheduler's control queue and are
+//!   drained by the batcher at the top of every loop iteration, so a
+//!   cancel frees its decode slot within one decode step.
+//! * Each of the `shards` serving shards owns a full single-owner
+//!   serving stack — one [`scheduler::Scheduler`] FCFS queue (+ its
+//!   control queue), one engine thread running the
+//!   [`batcher::Batcher`] loop over its own `Engine`, KV state, decode
+//!   slots, and shared-prefix cache. No cross-shard synchronization
+//!   exists on the hot path: GLASS mask refresh, chunked admission,
+//!   stats merging, and cache publish/splice all stay shard-local,
+//!   preserving every single-owner invariant of the unsharded design.
+//!   With the default `shards = 1` the topology (and its behavior, bit
+//!   for bit) is exactly the pre-sharding server;
 //! * within a shard, the batcher is the same continuous-batching loop
 //!   as before: a fixed-width step-mode decode batch in which every
-//!   slot is an independent request. Queued requests are admitted into
-//!   free slots **mid-flight** (prefill + KV slot splice), finished
-//!   slots respond and free **immediately**, so a short request is
-//!   never blocked behind a long one (no head-of-line blocking);
-//! * **chunked admission** — a prompt longer than the compiled prefill
-//!   frame claims its slot and streams in through the `prefill_chunk`
-//!   executable, at most `chunk_budget` chunks interleaved per decode
-//!   step, while every other slot keeps emitting tokens (no full-batch
-//!   prefill stall). Per-chunk local statistics are merged on the host
-//!   (`ImportanceMap::merge`) into exactly the aggregate a monolithic
-//!   prefill would produce, and the GLASS mask is built once the final
-//!   chunk lands. Prompts are accepted up to `max_seq - max_tokens + 1`
-//!   encoded tokens (the final token needs no KV write); anything
-//!   larger is rejected with an explicit error — the server never
-//!   silently truncates a prompt, and responses carry `prompt_tokens`
-//!   as proof of full consumption. Admission overflow (burst wider
-//!   than the free-slot count) is re-queued at the shard's scheduler
-//!   front in FCFS order, never failed;
-//! * masks are per-slot, so heterogeneous strategies share a batch; a
-//!   request can opt into a periodic **GLASS mask refresh**
-//!   (`refresh_every: R`) that re-runs the global-local rank aggregation
-//!   every R decoded tokens on blended prompt + decaying-average decode
-//!   statistics — the paper's aggregation applied over the generation
-//!   horizon, for the long-form scenarios where prompt-only statistics
-//!   drift;
-//! * **shared-prefix cache** — per-shard; the server's total
-//!   `cache_bytes` budget is split evenly across shards. Per cached
-//!   token prefix a shard keeps the KV rows *and* the merged GLASS
-//!   statistics (plus the last-position logits), both pure functions
-//!   of the prefix. At admission the longest cached prefix of the
-//!   prompt is spliced in: an exact full-prompt hit costs **zero**
-//!   engine calls, a partial hit resumes the chunked stream after the
-//!   prefix — continuing the statistics merge with the same arithmetic
-//!   a cold stream would use, so a hit's prompt statistics (and
-//!   therefore its GLASS mask and generated tokens) are
-//!   **bit-identical** to a cold prefill. Completed-chunk prefixes and
-//!   cold short prompts are published back; entries are ref-counted
-//!   (a resuming stream pins its entry) and evicted LRU under the
-//!   per-shard byte budget accounted through
-//!   [`memsim`](crate::memsim). The scheduler clusters same-prefix
-//!   requests and the batcher defers a same-prefix admission while an
-//!   earlier one is still publishing; because the router colocates
-//!   same-prefix traffic, a shared-system-prompt burst pays its
-//!   prefill miss once **even when split across connections and
-//!   shards**. Responses carry `cached_prompt_tokens` / `cache_hits` /
-//!   `cache_evictions`; the `stats` protocol command serves the
-//!   cross-shard **sum** of the cache counters plus one per-shard
-//!   entry (queue depth, decode / prefill slot occupancy, width) so a
-//!   routing imbalance is visible from the wire.
+//!   slot is an independent request, queued requests admitted into
+//!   free slots **mid-flight**, finished slots retired **immediately**
+//!   (no head-of-line blocking), **chunked admission** for prompts
+//!   longer than the prefill frame (at most `chunk_budget` chunks per
+//!   decode step, other slots keep emitting), per-slot masks with
+//!   optional periodic **GLASS mask refresh** (`refresh_every`, now
+//!   adjustable mid-stream via v2 `set`), and the per-shard
+//!   **shared-prefix cache** (total `cache_bytes` split evenly; exact
+//!   hits skip prefill, partial hits resume the chunked stream
+//!   bit-identically; ref-counted, LRU under the byte budget).
+//! * **Graceful shutdown** ([`Server::stop`]): the acceptor stops
+//!   accepting and late frames are refused; every in-flight session
+//!   drains to its natural `done`; queued-but-unadmitted requests get
+//!   an `error` frame with `retryable: true` (resubmit verbatim
+//!   elsewhere); reactors then flush every connection's pending bytes
+//!   before exiting.
 //!
 //! # Knobs and trade-offs
 //!
 //! * `shards` ([`ServerOptions`], `glass serve --shards N`) — serving
-//!   shard count; default 1 preserves the unsharded behavior exactly.
-//!   More shards = more engine threads decoding in parallel and more
-//!   (smaller) prefix caches; the router keeps warm traffic local, so
-//!   scaling costs no cross-shard chatter. Shard counts far above the
-//!   physical core count just slice the caches thinner.
+//!   shard count (engine threads AND reactor threads); default 1
+//!   preserves the unsharded behavior exactly. More shards = more
+//!   engine threads decoding in parallel and more (smaller) prefix
+//!   caches; the router keeps warm traffic local.
 //! * `batch_width` — decode slot count **per shard** (must fit a
-//!   compiled `decode_b{W}`). Wider = more throughput under load,
-//!   slightly more per-step work when mostly idle.
-//! * scheduler `batch_window` — how long an idle shard waits for an
-//!   initial burst to form before starting; admission is continuous
-//!   afterwards, so this only shapes cold-start batching (latency ↔
-//!   throughput).
+//!   compiled `decode_b{W}`).
+//! * `max_frame_bytes` (`--max-frame-bytes`) — largest accepted wire
+//!   frame; the per-connection read-buffer bound. Default 1 MiB.
+//! * `conn_buffer_bytes` (`--conn-buffer-bytes`) — outbound buffer cap
+//!   per connection; a slower consumer is disconnected. Default 8 MiB.
 //! * `Batcher::chunk_budget` — prefill chunks advanced per decode step
-//!   for streaming (long-prompt) admissions; default 1. Higher values
-//!   admit long prompts faster at the cost of more prefill work per
-//!   decode step (worse inter-token latency for in-flight requests
-//!   while a stream is active); 1 bounds the per-step overhead to one
-//!   chunk. `overlap_steps` telemetry counts decode steps that ran
-//!   concurrently with a stream — the direct no-stall observable.
-//! * `refresh_every` (per request) — mask-refresh interval R. Small R
-//!   tracks decode-time importance drift closely at the cost of one
-//!   selection pass (pure host work, µs-scale) per R tokens; 0 keeps
-//!   the prefill-time static mask.
-//! * `cache_bytes` (server, [`ServerOptions`]) — **total**
-//!   shared-prefix cache budget, split evenly across shards
-//!   (`cache_bytes / shards` each); 0 disables caching entirely.
-//!   Bigger budgets keep more distinct prefixes resident (more hits)
-//!   at the cost of host memory; eviction is LRU per shard and never
-//!   frees an entry a stream is resuming from. Prefix-affinity routing
-//!   means splitting the budget does not split a prefix's hit rate —
-//!   all of a prefix's traffic lands on the one shard that caches it.
+//!   for streaming (long-prompt) admissions; default 1.
+//! * `refresh_every` (per request, adjustable mid-stream with a v2
+//!   `set` frame) — mask-refresh interval R; 0 keeps the prefill-time
+//!   static mask.
+//! * `cache_bytes` (server) — **total** shared-prefix cache budget,
+//!   split evenly across shards; 0 disables caching entirely.
 //! * `cache` (per request) — `on` (read + publish, default),
-//!   `readonly` (read, never insert — for traffic that must not
-//!   displace hot prefixes), `off` (bypass — for strict cold-start
-//!   measurements).
+//!   `readonly`, `off`.
 //! * `group_prefixes` (server) — same-prefix clustering/deferral so a
-//!   burst of shared-prompt requests pays one miss; disable for strict
-//!   FCFS admission order.
+//!   burst of shared-prompt requests pays one miss.
 //!
 //! # Request limits
 //!
@@ -132,12 +124,9 @@
 //! (the KV window plus the final write-free token), enforced at
 //! admission with an explicit "prompt too long" error.
 //!
-//! All executables a shard's loop can touch are warmed at startup —
-//! `prefill_b{n}` for every admission size, `prefill_chunk_b1` for
-//! streaming admissions, and the full-width `decode_b{W}` — so first
-//! requests never pay compile latency at any batch size a scheduler
-//! can form (the compiled-executable cache is shared, so warming costs
-//! once, not once per shard).
+//! All executables a shard's loop can touch are warmed at startup, so
+//! first requests never pay compile latency (the compiled-executable
+//! cache is shared, so warming costs once, not once per shard).
 
 pub mod batcher;
 pub mod client;
@@ -145,10 +134,10 @@ pub mod protocol;
 pub mod scheduler;
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -159,17 +148,28 @@ use crate::engine::prefix_cache::{
 };
 use crate::engine::Engine;
 use crate::info;
+use crate::util::json::Json;
 
 use batcher::{Batcher, BatcherOptions, ShardGauges};
 use protocol::{
-    parse_client_line, stats_to_line, ClientLine, Response, ShardSnapshot,
+    client_line_from_json, frame_version, stats_to_line,
+    v2_frame_from_json, ClientLine, Event, ShardSnapshot, V2Frame,
+    PROTOCOL_V2,
 };
-use scheduler::{Pending, Scheduler};
+use scheduler::{Control, Pending, Scheduler};
 
-/// Response lines are serialized before entering the per-connection
-/// channel, so protocol commands (`stats`) and generation responses
-/// share one ordered writer.
-type Conns = Arc<Mutex<HashMap<u64, Sender<String>>>>;
+/// Default cap on a single wire frame (and the per-connection read
+/// buffer): a client that never terminates a line cannot grow server
+/// memory past this.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+/// Default cap on a connection's outbound buffer: a consumer that
+/// cannot keep up with its own event stream is disconnected.
+pub const DEFAULT_CONN_BUFFER_BYTES: usize = 8 << 20;
+
+/// Per-connection event channels: the batcher threads push [`Event`]s,
+/// the owning reactor drains and serializes them in the connection's
+/// negotiated protocol.
+type Conns = Arc<Mutex<HashMap<u64, Sender<Event>>>>;
 
 /// Router window for a model: the byte span of the first cacheable
 /// chunk — one prefill frame minus the BOS token slot (the byte-level
@@ -213,8 +213,15 @@ pub struct ServerOptions {
     /// Cluster same-prefix requests at each shard's scheduler and defer
     /// same-prefix admissions behind an in-flight publisher.
     pub group_prefixes: bool,
-    /// Serving shard count (engine threads); 1 = the unsharded server.
+    /// Serving shard count (engine + reactor threads); 1 = unsharded.
     pub shards: usize,
+    /// Largest accepted wire frame; bounds the per-connection read
+    /// buffer. Oversized frames are a protocol error that closes the
+    /// connection.
+    pub max_frame_bytes: usize,
+    /// Outbound buffer cap per connection; a consumer that falls this
+    /// far behind is disconnected.
+    pub conn_buffer_bytes: usize,
 }
 
 impl ServerOptions {
@@ -224,6 +231,8 @@ impl ServerOptions {
             cache_bytes: DEFAULT_CACHE_BYTES,
             group_prefixes: true,
             shards: 1,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            conn_buffer_bytes: DEFAULT_CONN_BUFFER_BYTES,
         }
     }
 
@@ -232,11 +241,17 @@ impl ServerOptions {
         self.shards = shards;
         self
     }
+
+    /// Builder-style frame-size cap override.
+    pub fn with_max_frame_bytes(mut self, n: usize) -> ServerOptions {
+        self.max_frame_bytes = n;
+        self
+    }
 }
 
 /// One serving shard's handles, shared between the engine thread that
-/// owns the batcher and the connection threads that submit work and
-/// answer `stats`.
+/// owns the batcher and the reactor threads that submit work, push
+/// controls, and answer `stats`.
 struct Shard {
     sched: Arc<Scheduler>,
     telemetry: Arc<CacheTelemetry>,
@@ -244,12 +259,50 @@ struct Shard {
     width: usize,
 }
 
-/// Server handle: bind address + shutdown flag.
+impl Shard {
+    /// One consistent stats row: the occupancy pair comes from a
+    /// single atomic load ([`ShardGauges::snapshot`]), so a stats call
+    /// racing heavy admission can never report `slots_active +
+    /// slots_prefilling` above the batch width.
+    fn snapshot_row(&self, shard: u64) -> ShardSnapshot {
+        let (slots_active, slots_prefilling) = self.gauges.snapshot();
+        ShardSnapshot {
+            shard,
+            queue_depth: self.sched.len() as u64,
+            slots_active,
+            slots_prefilling,
+            batch_width: self.width as u64,
+        }
+    }
+}
+
+/// The `stats` response line: aggregate cache counters plus one
+/// consistent per-shard row, assembled through one snapshot path for
+/// both protocol versions.
+fn stats_line(shards: &[Shard], id: u64) -> String {
+    let agg = shards.iter().fold(
+        CacheStatsSnapshot::default(),
+        |acc, s| acc.merge(&s.telemetry.snapshot()),
+    );
+    let per: Vec<ShardSnapshot> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| s.snapshot_row(i as u64))
+        .collect();
+    stats_to_line(id, &agg, &per)
+}
+
+/// Server handle: bind address + shutdown machinery.
 pub struct Server {
     pub addr: String,
+    /// Stops the acceptor and makes reactors refuse new sessions.
     shutdown: Arc<AtomicBool>,
+    /// Tells reactors to flush and exit (set after engines drain).
+    reactor_stop: Arc<AtomicBool>,
     shards: Arc<Vec<Shard>>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    conns: Conns,
+    engine_threads: Vec<std::thread::JoinHandle<()>>,
+    io_threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -317,29 +370,72 @@ impl Server {
         let shards = Arc::new(shards);
         let conns: Conns = Arc::new(Mutex::new(HashMap::new()));
         let shutdown = Arc::new(AtomicBool::new(false));
-        let mut threads = Vec::new();
+        let reactor_stop = Arc::new(AtomicBool::new(false));
+        let mut engine_threads = Vec::new();
+        let mut io_threads = Vec::new();
 
         // one engine thread per shard: independent continuous-batching
-        // loops, no cross-shard synchronization
+        // loops, no cross-shard synchronization; per-slot events flow
+        // to the owning reactor through the per-conn channels
         for (shard_id, mut engine_loop) in batchers.into_iter().enumerate()
         {
             let conns = Arc::clone(&conns);
             let sched = Arc::clone(&shards[shard_id].sched);
-            threads.push(std::thread::spawn(move || {
-                let mut sink = |conn_id: u64, resp: Response| {
-                    if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
-                        let _ = tx.send(resp.to_line());
+            engine_threads.push(std::thread::spawn(move || {
+                // per-conn Sender cache: events are emitted per TOKEN,
+                // so the shared conns map must not be locked on the
+                // per-token hot path — one lock per (conn, shard)
+                // pairing, lock-free sends afterwards. conn ids are
+                // never reused, so a cached Sender whose receiver was
+                // reaped just fails its send and is evicted.
+                let mut locals: HashMap<u64, Sender<Event>> =
+                    HashMap::new();
+                let mut sink = move |conn_id: u64, ev: Event| {
+                    if let Some(tx) = locals.get(&conn_id) {
+                        if tx.send(ev).is_ok() {
+                            return;
+                        }
+                        locals.remove(&conn_id);
+                        return;
+                    }
+                    if locals.len() > 4096 {
+                        // bound the cache across a long-lived server's
+                        // conn churn; re-warms on the next event
+                        locals.clear();
+                    }
+                    let tx = conns.lock().unwrap().get(&conn_id).cloned();
+                    if let Some(tx) = tx {
+                        if tx.send(ev).is_ok() {
+                            locals.insert(conn_id, tx);
+                        }
                     }
                 };
                 engine_loop.run(&sched, &mut sink);
             }));
         }
-        // acceptor
-        {
+        // reactor threads (one per shard): connection state machines
+        // over nonblocking sockets
+        let mut reactor_txs: Vec<Sender<(u64, TcpStream)>> = Vec::new();
+        for _ in 0..n_shards {
+            let (tx, rx) = channel::<(u64, TcpStream)>();
+            reactor_txs.push(tx);
+            let ctx = ReactorCtx {
+                shards: Arc::clone(&shards),
+                route_window: route_window(prefill_len),
+                max_frame_bytes: opts.max_frame_bytes.max(64),
+                conn_buffer_bytes: opts.conn_buffer_bytes.max(1 << 16),
+                shutdown: Arc::clone(&shutdown),
+            };
             let conns = Arc::clone(&conns);
-            let shards = Arc::clone(&shards);
+            let stop = Arc::clone(&reactor_stop);
+            io_threads.push(std::thread::spawn(move || {
+                reactor_loop(rx, conns, ctx, stop)
+            }));
+        }
+        // acceptor: hands fresh sockets to the reactors round-robin
+        {
             let shutdown = Arc::clone(&shutdown);
-            threads.push(std::thread::spawn(move || {
+            io_threads.push(std::thread::spawn(move || {
                 let next_conn = AtomicU64::new(1);
                 loop {
                     if shutdown.load(Ordering::Relaxed) {
@@ -349,21 +445,13 @@ impl Server {
                         Ok((stream, _)) => {
                             let conn_id =
                                 next_conn.fetch_add(1, Ordering::Relaxed);
-                            let conns = Arc::clone(&conns);
-                            let shards = Arc::clone(&shards);
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(
-                                    stream,
-                                    conn_id,
-                                    &conns,
-                                    &shards,
-                                    route_window(prefill_len),
-                                );
-                            });
+                            let target =
+                                (conn_id as usize) % reactor_txs.len();
+                            let _ = reactor_txs[target]
+                                .send((conn_id, stream));
                         }
                         Err(ref e)
-                            if e.kind()
-                                == std::io::ErrorKind::WouldBlock =>
+                            if e.kind() == ErrorKind::WouldBlock =>
                         {
                             std::thread::sleep(Duration::from_millis(5));
                         }
@@ -373,107 +461,620 @@ impl Server {
             }));
         }
         info!(
-            "server listening on {local} ({n_shards} shard{})",
+            "server listening on {local} ({n_shards} shard{} + reactor{})",
+            if n_shards == 1 { "" } else { "s" },
             if n_shards == 1 { "" } else { "s" }
         );
         Ok(Server {
             addr: local,
             shutdown,
+            reactor_stop,
             shards,
-            threads,
+            conns,
+            engine_threads,
+            io_threads,
         })
     }
 
+    /// Graceful shutdown: stop accepting, fail queued-but-unadmitted
+    /// requests with a retryable error, drain every in-flight session
+    /// to its natural terminal event, then flush and join the reactors.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        for shard in self.shards.iter() {
-            shard.sched.close();
+        // close each shard's queue; whatever had not been admitted yet
+        // is failed RETRYABLY (in-flight slots keep decoding to done)
+        let fail_queued = |shards: &[Shard], conns: &Conns| {
+            for shard in shards {
+                for p in shard.sched.drain_close() {
+                    if let Some(tx) =
+                        conns.lock().unwrap().get(&p.conn_id)
+                    {
+                        let _ = tx.send(Event::Error {
+                            id: p.request.id,
+                            error: "server shutting down before \
+                                    admission; retry on another server"
+                                .to_string(),
+                            retryable: true,
+                        });
+                    }
+                }
+            }
+        };
+        fail_queued(&self.shards, &self.conns);
+        // (a reactor racing the shutdown flag cannot strand a session:
+        // drain_close marks the queue closed under the same mutex
+        // Scheduler::submit checks, so any later submit is refused and
+        // the reactor fails it retryably itself)
+        // engine loops exit once their slots drain and queues are empty
+        for t in self.engine_threads.drain(..) {
+            let _ = t.join();
         }
-        for t in self.threads.drain(..) {
+        // reactors flush remaining events/bytes, then exit
+        self.reactor_stop.store(true, Ordering::Relaxed);
+        for t in self.io_threads.drain(..) {
             let _ = t.join();
         }
     }
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    conn_id: u64,
-    conns: &Conns,
-    shards: &Arc<Vec<Shard>>,
+// ------------------------------------------------------------ reactor
+
+/// Immutable per-reactor context.
+struct ReactorCtx {
+    shards: Arc<Vec<Shard>>,
     route_window: usize,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let (tx, rx) = channel::<String>();
-    conns.lock().unwrap().insert(conn_id, tx);
-    let mut writer = stream.try_clone()?;
-    // writer thread: one ordered line stream back to the client
-    let w = std::thread::spawn(move || {
-        for line in rx {
-            if writeln!(writer, "{line}").is_err() {
-                break;
+    max_frame_bytes: usize,
+    conn_buffer_bytes: usize,
+    /// Set during shutdown: refuse new sessions retryably.
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Protocol state of one connection (locked by its first parsed line).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Detect,
+    V1,
+    V2,
+}
+
+/// One connection owned by a reactor thread.
+struct ConnState {
+    conn_id: u64,
+    stream: TcpStream,
+    rx: Receiver<Event>,
+    mode: Mode,
+    /// Unparsed inbound bytes (bounded by `max_frame_bytes`).
+    rbuf: Vec<u8>,
+    /// Bytes of `rbuf` already scanned for a newline (no rescans: a
+    /// large frame trickling in over many ticks is scanned once).
+    scanned: usize,
+    /// Outbound bytes not yet written (bounded by
+    /// `conn_buffer_bytes`); `wpos` is the flush cursor.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// v2: live session id → owning shard (for control routing).
+    live: HashMap<u64, usize>,
+    read_closed: bool,
+    /// Protocol violation: stop reading, flush, then close.
+    closing: bool,
+    dead: bool,
+}
+
+impl ConnState {
+    fn new(conn_id: u64, stream: TcpStream, rx: Receiver<Event>) -> ConnState {
+        stream.set_nodelay(true).ok();
+        stream.set_nonblocking(true).ok();
+        ConnState {
+            conn_id,
+            stream,
+            rx,
+            mode: Mode::Detect,
+            rbuf: Vec::new(),
+            scanned: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            live: HashMap::new(),
+            read_closed: false,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn push_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Serialize one SESSION event (from the batcher channel) in the
+    /// connection's negotiated protocol: v2 gets every event as its
+    /// own frame; v1 (and a connection that never spoke) gets the
+    /// compatibility shim — terminal events as the classic response
+    /// line, the rest suppressed. A terminal event releases the
+    /// session id for reuse. Reactor-originated errors (protocol
+    /// violations, duplicate ids, unknown-id controls) must NOT go
+    /// through here — they are not session terminals and must not
+    /// release a live session's id; use [`ConnState::push_error_frame`].
+    fn push_event(&mut self, ev: Event) {
+        if ev.is_terminal() {
+            self.live.remove(&ev.id());
+        }
+        self.serialize_event(ev);
+    }
+
+    /// Serialize a reactor-originated error frame WITHOUT touching the
+    /// live-session map (it is not a session terminal — e.g. the error
+    /// rejecting a duplicate id must not release the original live
+    /// session's id).
+    fn push_error_frame(&mut self, id: u64, error: &str, retryable: bool) {
+        self.serialize_event(Event::Error {
+            id,
+            error: error.to_string(),
+            retryable,
+        });
+    }
+
+    /// Mode-specific wire form of one event: v2 gets every event as
+    /// its own frame; v1 (and a connection that never spoke) gets the
+    /// compatibility shim — terminal events as the classic response
+    /// line, the rest suppressed.
+    fn serialize_event(&mut self, ev: Event) {
+        match self.mode {
+            Mode::V2 => {
+                let frame = ev.to_frame();
+                self.push_line(&frame);
+            }
+            Mode::V1 | Mode::Detect => {
+                if let Some(resp) = ev.into_response() {
+                    let line = resp.to_line();
+                    self.push_line(&line);
+                }
             }
         }
-    });
-    let send = |line: String| {
-        if let Some(tx) = conns.lock().unwrap().get(&conn_id) {
-            let _ = tx.send(line);
-        }
-    };
+    }
 
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
+    /// Nonblocking read + line processing. Returns true if any bytes
+    /// or frames moved.
+    fn tick_read(&mut self, ctx: &ReactorCtx) -> bool {
+        if self.read_closed || self.closing || self.dead {
+            return false;
         }
-        match parse_client_line(&line) {
+        let mut work = false;
+        let mut buf = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    work = true;
+                    self.rbuf.extend_from_slice(&buf[..n]);
+                    // the read buffer must stay bounded even while the
+                    // socket keeps delivering: stop ingesting once the
+                    // cap is reached and let line processing below
+                    // either consume complete frames or reject the
+                    // oversized one — a client streaming a newline-free
+                    // line can never outrun the cap check, and one
+                    // connection cannot monopolize its reactor's tick
+                    if self.rbuf.len() > ctx.max_frame_bytes {
+                        break;
+                    }
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return work;
+                }
+            }
+        }
+        // complete lines — resume the newline scan where the last tick
+        // left off (every buffered byte is examined exactly once), and
+        // consume processed lines with ONE front-drain after the loop
+        // instead of one O(remaining) memmove per line, so a pipelined
+        // burst costs O(bytes), not O(lines × bytes)
+        let mut consumed = 0usize;
+        while let Some(at) = self.rbuf[self.scanned..]
+            .iter()
+            .position(|&b| b == b'\n')
+        {
+            let nl = self.scanned + at;
+            let line: Vec<u8> = self.rbuf[consumed..nl].to_vec();
+            self.scanned = nl + 1;
+            consumed = nl + 1;
+            if line.len() > ctx.max_frame_bytes {
+                // frame_too_big discards the whole buffer
+                self.frame_too_big(ctx, line.len());
+                return true;
+            }
+            match std::str::from_utf8(&line) {
+                Ok(text) => self.handle_line(ctx, text),
+                Err(_) => {
+                    // undecodable input: the pre-reactor server's
+                    // BufReader::lines() errored and closed with no
+                    // response — v1/Detect keep that bit-identically;
+                    // a v2 connection gets an error frame first
+                    if self.mode == Mode::V2 {
+                        self.protocol_error(
+                            0,
+                            "frame is not valid UTF-8",
+                        );
+                    }
+                    self.rbuf.clear();
+                    self.scanned = 0;
+                    self.closing = true;
+                }
+            }
+            work = true;
+            if self.closing || self.dead {
+                // unprocessed bytes die with the connection
+                return work;
+            }
+        }
+        if consumed > 0 {
+            self.rbuf.drain(..consumed);
+        }
+        // everything left was searched and holds no newline
+        self.scanned = self.rbuf.len();
+        // a partial line may not outgrow the frame cap
+        if self.rbuf.len() > ctx.max_frame_bytes {
+            self.frame_too_big(ctx, self.rbuf.len());
+            work = true;
+        }
+        work
+    }
+
+    fn frame_too_big(&mut self, ctx: &ReactorCtx, got: usize) {
+        self.protocol_error(
+            0,
+            &format!(
+                "frame of {got} bytes exceeds max_frame_bytes \
+                 ({}); closing connection",
+                ctx.max_frame_bytes
+            ),
+        );
+        self.rbuf.clear();
+        self.scanned = 0;
+        self.closing = true;
+    }
+
+    /// Emit a protocol-level error in the connection's current mode.
+    fn protocol_error(&mut self, id: u64, msg: &str) {
+        self.push_error_frame(id, msg, false);
+    }
+
+    fn handle_line(&mut self, ctx: &ReactorCtx, line: &str) {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            return;
+        }
+        let j = match Json::parse(trimmed) {
+            Ok(j) => j,
+            Err(e) => {
+                self.protocol_error(0, &e.to_string());
+                return;
+            }
+        };
+        if self.mode == Mode::Detect {
+            // the first parsed line locks the connection's protocol
+            match frame_version(&j) {
+                Ok(Some(PROTOCOL_V2)) => self.mode = Mode::V2,
+                Ok(None) => self.mode = Mode::V1,
+                Ok(Some(v)) => {
+                    self.protocol_error(
+                        0,
+                        &format!(
+                            "unsupported protocol version {v} (this \
+                             server speaks v1 and v2)"
+                        ),
+                    );
+                    return;
+                }
+                Err(e) => {
+                    self.protocol_error(0, &e.to_string());
+                    return;
+                }
+            }
+        }
+        match self.mode {
+            Mode::V1 => self.handle_v1(ctx, &j),
+            Mode::V2 => self.handle_v2(ctx, &j),
+            Mode::Detect => unreachable!("mode locked above"),
+        }
+    }
+
+    fn handle_v1(&mut self, ctx: &ReactorCtx, j: &Json) {
+        match client_line_from_json(j) {
             Ok(ClientLine::Request(request)) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    self.push_error_frame(
+                        request.id,
+                        "server shutting down",
+                        true,
+                    );
+                    return;
+                }
                 // prefix-affinity routing: a pure function of the
                 // prompt text, so same-prefix traffic colocates on the
                 // shard whose cache holds (or will hold) its prefix
                 let si = route_shard(
                     &request.prompt,
-                    shards.len(),
-                    route_window,
+                    ctx.shards.len(),
+                    ctx.route_window,
                 );
-                shards[si].sched.submit(Pending {
+                let id = request.id;
+                let accepted = ctx.shards[si].sched.submit(Pending {
                     request,
                     arrived: Instant::now(),
-                    conn_id,
+                    conn_id: self.conn_id,
+                    stream: false,
                 });
+                if accepted.is_none() {
+                    // queue already closed (shutdown won the race)
+                    self.push_error_frame(
+                        id,
+                        "server shutting down",
+                        true,
+                    );
+                    return;
+                }
+                // best-effort in-flight tracking (v1 ids may repeat on
+                // one connection — last wins): lets the reactor cancel
+                // a disconnected client's work instead of letting it
+                // decode to completion for nobody
+                self.live.insert(id, si);
             }
             Ok(ClientLine::Stats { id }) => {
                 // answered right here from the shared counters — no
                 // round trip through any engine loop
-                let agg = shards.iter().fold(
-                    CacheStatsSnapshot::default(),
-                    |acc, s| acc.merge(&s.telemetry.snapshot()),
-                );
-                let per: Vec<ShardSnapshot> = shards
-                    .iter()
-                    .enumerate()
-                    .map(|(i, s)| ShardSnapshot {
-                        shard: i as u64,
-                        queue_depth: s.sched.len() as u64,
-                        slots_active: s.gauges.active(),
-                        slots_prefilling: s.gauges.prefilling(),
-                        batch_width: s.width as u64,
-                    })
-                    .collect();
-                send(stats_to_line(id, &agg, &per));
+                let line = stats_line(&ctx.shards, id);
+                self.push_line(&line);
             }
+            Err(e) => self.protocol_error(0, &e.to_string()),
+        }
+    }
+
+    fn handle_v2(&mut self, ctx: &ReactorCtx, j: &Json) {
+        let frame = match v2_frame_from_json(j) {
+            Ok(f) => f,
             Err(e) => {
-                // protocol error: respond immediately
-                send(Response::err(0, e.to_string()).to_line());
+                // best-effort id so the client can correlate the error
+                // — UNLESS that id names a live session, whose terminal
+                // this error must not impersonate (then it goes to the
+                // reserved connection-level id 0)
+                let id = j
+                    .get("id")
+                    .and_then(|v| v.as_usize().ok())
+                    .unwrap_or(0) as u64;
+                let id =
+                    if self.live.contains_key(&id) { 0 } else { id };
+                self.protocol_error(id, &e.to_string());
+                return;
+            }
+        };
+        match frame {
+            V2Frame::Generate(request) => {
+                let id = request.id;
+                if id == 0 {
+                    // id 0 is the correlation id of connection-level
+                    // protocol errors; a session using it could read a
+                    // reactor-originated error as its terminal frame
+                    self.push_error_frame(
+                        0,
+                        "session id must be >= 1 (0 is reserved for \
+                         connection-level errors)",
+                        false,
+                    );
+                    return;
+                }
+                if self.live.contains_key(&id) {
+                    // reactor-originated rejection, reported on the
+                    // RESERVED correlation id 0: using the session's
+                    // own id would read as the ORIGINAL live session's
+                    // terminal error frame
+                    self.push_error_frame(
+                        0,
+                        &format!(
+                            "duplicate session id {id} (still live on \
+                             this connection)"
+                        ),
+                        false,
+                    );
+                    return;
+                }
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    self.push_error_frame(
+                        id,
+                        "server shutting down",
+                        true,
+                    );
+                    return;
+                }
+                let si = route_shard(
+                    &request.prompt,
+                    ctx.shards.len(),
+                    ctx.route_window,
+                );
+                let submitted = ctx.shards[si].sched.submit(Pending {
+                    request,
+                    arrived: Instant::now(),
+                    conn_id: self.conn_id,
+                    stream: true,
+                });
+                let Some(pos) = submitted else {
+                    // queue already closed (shutdown won the race):
+                    // refuse retryably instead of stranding a session
+                    // nothing will ever drain
+                    self.push_error_frame(
+                        id,
+                        "server shutting down",
+                        true,
+                    );
+                    return;
+                };
+                self.live.insert(id, si);
+                self.push_event(Event::Accepted {
+                    id,
+                    queue_pos: pos as u64,
+                });
+            }
+            V2Frame::Cancel { id } => match self.live.get(&id).copied() {
+                Some(si) => ctx.shards[si].sched.control(
+                    Control::Cancel {
+                        conn_id: self.conn_id,
+                        id,
+                    },
+                ),
+                None => self.push_error_frame(
+                    id,
+                    &format!("cancel: no live session with id {id}"),
+                    false,
+                ),
+            },
+            V2Frame::Set { id, refresh_every } => {
+                match self.live.get(&id).copied() {
+                    Some(si) => ctx.shards[si].sched.control(
+                        Control::SetRefresh {
+                            conn_id: self.conn_id,
+                            id,
+                            refresh_every,
+                        },
+                    ),
+                    None => self.push_error_frame(
+                        id,
+                        &format!("set: no live session with id {id}"),
+                        false,
+                    ),
+                }
+            }
+            V2Frame::Stats { id } => {
+                let line = stats_line(&ctx.shards, id);
+                self.push_line(&line);
             }
         }
     }
-    conns.lock().unwrap().remove(&conn_id);
-    let _ = w.join();
-    Ok(())
+
+    /// Drain this connection's event channel into the write buffer.
+    fn drain_events(&mut self) -> bool {
+        let mut work = false;
+        while let Ok(ev) = self.rx.try_recv() {
+            work = true;
+            self.push_event(ev);
+        }
+        work
+    }
+
+    /// Nonblocking flush of pending outbound bytes.
+    fn tick_write(&mut self, ctx: &ReactorCtx) -> bool {
+        let mut work = false;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    work = true;
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > (1 << 16) {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        // bounded write buffer: a consumer that cannot drain its own
+        // event stream is disconnected, not buffered without limit
+        if self.wbuf.len() - self.wpos > ctx.conn_buffer_bytes {
+            self.dead = true;
+        }
+        work
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    /// Should this connection be dropped from the table?
+    fn reapable(&self) -> bool {
+        self.dead
+            || (self.closing && self.flushed())
+            || (self.read_closed && self.live.is_empty() && self.flushed())
+    }
+}
+
+/// One reactor's readiness loop: poll nonblocking sockets for frames,
+/// drain event channels, flush writes; sleep only when a full pass
+/// found nothing to do. Exits after `stop` is set, once every
+/// connection's pending bytes are flushed (bounded by a deadline).
+fn reactor_loop(
+    handoff: Receiver<(u64, TcpStream)>,
+    conns: Conns,
+    ctx: ReactorCtx,
+    stop: Arc<AtomicBool>,
+) {
+    let mut table: Vec<ConnState> = Vec::new();
+    let mut stop_deadline: Option<Instant> = None;
+    loop {
+        let mut work = false;
+        // adopt freshly accepted connections
+        while let Ok((conn_id, stream)) = handoff.try_recv() {
+            let (tx, rx) = channel::<Event>();
+            conns.lock().unwrap().insert(conn_id, tx);
+            table.push(ConnState::new(conn_id, stream, rx));
+            work = true;
+        }
+        for c in table.iter_mut() {
+            work |= c.tick_read(&ctx);
+            work |= c.drain_events();
+            work |= c.tick_write(&ctx);
+        }
+        // reap finished/dead connections; a dead connection's live
+        // sessions are cancelled so their slots free up instead of
+        // decoding for nobody
+        let mut i = 0;
+        while i < table.len() {
+            if table[i].reapable() {
+                let c = table.swap_remove(i);
+                conns.lock().unwrap().remove(&c.conn_id);
+                for (id, si) in c.live {
+                    ctx.shards[si].sched.control(Control::Cancel {
+                        conn_id: c.conn_id,
+                        id,
+                    });
+                }
+                work = true;
+            } else {
+                i += 1;
+            }
+        }
+        if stop.load(Ordering::Relaxed) {
+            let deadline = *stop_deadline.get_or_insert_with(|| {
+                Instant::now() + Duration::from_secs(2)
+            });
+            let drained = table.iter().all(|c| c.flushed());
+            if drained || Instant::now() > deadline {
+                break;
+            }
+        }
+        if !work {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    // drop the table: sockets close, channels disconnect
+    let mut conns = conns.lock().unwrap();
+    for c in &table {
+        conns.remove(&c.conn_id);
+    }
 }
 
 #[cfg(test)]
@@ -552,9 +1153,13 @@ mod tests {
     }
 
     #[test]
-    fn options_default_to_one_shard() {
+    fn options_default_to_one_shard_with_bounded_buffers() {
         let o = ServerOptions::new(4);
         assert_eq!(o.shards, 1, "default must preserve the unsharded server");
-        assert_eq!(o.with_shards(4).shards, 4);
+        assert_eq!(o.max_frame_bytes, DEFAULT_MAX_FRAME_BYTES);
+        assert_eq!(o.conn_buffer_bytes, DEFAULT_CONN_BUFFER_BYTES);
+        let o = o.with_shards(4).with_max_frame_bytes(4096);
+        assert_eq!(o.shards, 4);
+        assert_eq!(o.max_frame_bytes, 4096);
     }
 }

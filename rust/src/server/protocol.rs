@@ -1,64 +1,134 @@
-//! JSON-line wire protocol for the serving layer.
+//! Wire protocol for the serving layer: framed **protocol v2**
+//! (multiplexed streaming sessions) plus the legacy **v1** one-shot
+//! JSON-line protocol, auto-detected per connection.
 //!
-//! One JSON object per line in each direction over TCP:
+//! # Framing and version negotiation
+//!
+//! Both protocols are newline-delimited JSON objects ("frames"), one
+//! per line, in each direction over TCP. The FIRST parsed line of a
+//! connection picks its protocol: a frame carrying `"v": 2` locks the
+//! connection to v2; any other object locks it to v1 and is served
+//! bit-identically to the pre-v2 server — the compatibility shim
+//! suppresses non-terminal events and serializes the terminal event in
+//! the v1 response shape ([`Event::into_response`]), so a v1 client
+//! cannot observe the reactor rewrite. (One deliberate exception: a
+//! request arriving during graceful shutdown gets an explicit
+//! retryable error line where the old server went silent.) Any single frame larger than
+//! the server's `max_frame_bytes` (newline seen or not) is a protocol
+//! error that closes the connection — per-connection read buffering is
+//! bounded.
+//!
+//! # v1 (legacy, one frame in → one frame out)
+//!
 //!   request:  {"id": 7, "prompt": "...", "strategy": "i-glass",
 //!              "lambda": 0.5, "density": 0.5, "max_tokens": 64,
 //!              "refresh_every": 8, "cache": "on"}
 //!   response: {"id": 7, "text": "...", "tokens": 42,
 //!              "prompt_tokens": 25, "cached_prompt_tokens": 20,
 //!              "cache_hits": 1, "cache_evictions": 0,
-//!              "prefill_ms": 1.2,
-//!              "decode_ms": 30.5, "queue_ms": 0.3, "density": 0.5,
-//!              "refreshes": 5, "mask_updates": 2, "finish": "length"}
+//!              "prefill_ms": 1.2, "decode_ms": 30.5, "queue_ms": 0.3,
+//!              "density": 0.5, "refreshes": 5, "mask_updates": 2,
+//!              "finish": "length"}
 //!   error:    {"id": 7, "error": "..."}
-//!   command:  {"cmd": "stats", "id": 3}
-//!             → {"id": 3, "stats": {"cache_hits": ..., ...},
-//!                "shards": [{"shard": 0, "queue_depth": ...,
-//!                            "slots_active": ...,
-//!                            "slots_prefilling": ...,
-//!                            "batch_width": ...}, ...]}
+//!   command:  {"cmd": "stats", "id": 3} → see **stats** below
 //!
-//! Field ranges are validated at parse time and rejected with an
-//! immediate protocol error (never surfaced as a deep engine failure):
-//! `density` must lie in (0, 1], `lambda` in [0, 1], `max_tokens`
-//! must be ≥ 1, and `cache` must be one of on|off|readonly.
+//! # v2 client → server frames
 //!
-//! **Shared-prefix cache.** `cache` selects the request's cache
-//! behavior (`on` = read + publish, default; `readonly` = read but
-//! never insert; `off` = bypass). `cached_prompt_tokens` reports how
-//! many prompt tokens were spliced from the cache instead of being
-//! recomputed, `cache_hits` how many cache entries this request used,
-//! and `cache_evictions` how many entries this request's own inserts
-//! evicted. The `stats` command returns the **server-level** aggregate
-//! counters (hits, misses, inserts, evictions, bytes resident, entry
-//! count — summed across every shard's cache) so operators can watch
-//! cache health without scraping per-response telemetry, plus one
-//! [`ShardSnapshot`] per serving shard: live queue depth and decode /
-//! prefill slot occupancy, so a routing imbalance is visible from the
-//! wire.
+//!   {"v":2,"cmd":"generate","id":7,"prompt":"...", ...}   start session 7
+//!   {"v":2,"cmd":"cancel","id":7}                         cancel session 7
+//!   {"v":2,"cmd":"set","id":7,"refresh_every":4}          live knob adjust
+//!   {"v":2,"cmd":"stats","id":3}                          server counters
 //!
-//! **Prompt length.** Prompts are NOT bounded by the prefill frame: the
-//! batcher streams long prompts through chunked prefill (one chunk per
-//! decode step — see [`super::batcher`]), so any prompt whose encoded
-//! length plus `max_tokens` fits the serving capacity of `max_seq + 1`
-//! (the `max_seq`-position KV window plus one final token that needs no
-//! KV write) is served in full. Beyond that the request is rejected
-//! with an explicit "prompt too long" error — prompt tokens are never
-//! silently dropped.
-//! `prompt_tokens` in the response reports how many prompt tokens
-//! (incl. BOS) were actually prefilled, so a client can verify its
-//! prompt was consumed whole.
+//! `generate` takes every v1 request field (strategy, lambda, density,
+//! max_tokens, refresh_every, cache), validated identically at parse
+//! time. The session `id` is **connection-scoped** and must be ≥ 1
+//! (id 0 is reserved as the correlation id of connection-level
+//! protocol errors): starting a session whose id is still live on the
+//! same connection is answered with an `error` frame **on id 0**
+//! naming the duplicate — never on the session's own id, whose live
+//! stream is unaffected. An id may be reused after its terminal
+//! frame; consume the reply to a `cancel`/`set` before reusing its
+//! id, since that reply is correlated on the target id. `cancel` stops a live session —
+//! its decode slot is freed within one decode step and nothing is
+//! re-queued; the session's terminal frame is a `done` with
+//! `finish: "cancel"` carrying the tokens decoded so far (a queued,
+//! not-yet-admitted session cancels to a zero-token `done`). `set`
+//! adjusts `refresh_every` for a live session mid-stream (takes effect
+//! from the next decoded token). `cancel`/`set` for an id that is not
+//! live on this connection is a **no-op**: the server answers with an
+//! `error` frame and the connection stays up. A `cancel`/`set` that
+//! loses the race with its session's natural completion is silently
+//! dropped — the session's real terminal frame is already on its way,
+//! and a session receives exactly ONE terminal frame, always.
 //!
-//! `refresh_every` = R re-runs the GLASS mask selection every R decoded
-//! tokens from blended prompt+decode statistics (0 = static prefill
-//! mask). `finish` is "length" (max_tokens / KV window) or "stop"
-//! (special token). `mask_updates` counts refreshes that changed the
-//! kept set — a direct observable for decode-time importance drift.
+//! # v2 server → client event frames
+//!
+//!   {"v":2,"ev":"accepted","id":7,"queue_pos":0}
+//!   {"v":2,"ev":"delta","id":7,"index":0,"text":"the "}
+//!   {"v":2,"ev":"refresh","id":7,"refreshes":1,"mask_updates":1,
+//!    "changed":true}
+//!   {"v":2,"ev":"done","id":7, ...all v1 response fields...}
+//!   {"v":2,"ev":"error","id":7,"error":"...","retryable":false}
+//!
+//! # Event ordering guarantees
+//!
+//! Per session id: `accepted` first (with the position in the target
+//! shard's queue at submission), then zero or more `delta` / `refresh`
+//! frames, then exactly ONE terminal frame (`done` or `error`).
+//! `delta.index` is contiguous from 0; every delta carries a valid
+//! UTF-8 chunk and the concatenation of all delta texts is
+//! byte-identical to the `done` frame's `text` — which is itself
+//! bit-identical to the v1 blocking response for the same request
+//! (incomplete multi-byte sequences are held back until completed or
+//! flushed on the terminal frame). A `refresh` frame reports one GLASS
+//! mask re-aggregation; `changed` is whether the kept set moved, and
+//! the refreshed mask applies from the next decoded token on. Frames
+//! of DIFFERENT sessions interleave arbitrarily — that is the point of
+//! multiplexing — but each session's frames are totally ordered as
+//! above. `finish` in a `done` frame is "length" (max_tokens / KV
+//! window), "stop" (special token), or "cancel" (client-initiated).
+//!
+//! On graceful shutdown, in-flight sessions drain to their natural
+//! `done` while queued-but-unadmitted sessions receive an `error`
+//! frame with `retryable: true` — a client may resubmit them verbatim
+//! to another server.
+//!
+//! # stats
+//!
+//! The `stats` command is answered with the same JSON line in BOTH
+//! protocols (an object with `id` / `stats` / `shards` keys and no
+//! `ev` key): server-level aggregate cache counters (hits, misses,
+//! inserts, evictions, bytes resident, entries — summed across every
+//! shard's cache) plus one [`ShardSnapshot`] per serving shard (queue
+//! depth, decode / prefill slot occupancy, batch width). The per-shard
+//! gauges are published by each batcher as ONE atomic word, so a stats
+//! call during heavy admission can never observe `slots_active +
+//! slots_prefilling` above the batch width.
+//!
+//! # Field ranges
+//!
+//! Validated at parse time and rejected with an immediate protocol
+//! error (never surfaced as a deep engine failure): `density` must lie
+//! in (0, 1], `lambda` in [0, 1], `max_tokens` must be ≥ 1, and
+//! `cache` must be one of on|off|readonly.
+//!
+//! **Prompt length.** Prompts are NOT bounded by the prefill frame:
+//! the batcher streams long prompts through chunked prefill (see
+//! [`super::batcher`]), so any prompt whose encoded length plus
+//! `max_tokens` fits the serving capacity of `max_seq + 1` (the
+//! `max_seq`-position KV window plus one final token that needs no KV
+//! write) is served in full. Beyond that the request is rejected with
+//! an explicit "prompt too long" error — prompt tokens are never
+//! silently dropped. `prompt_tokens` in the response reports how many
+//! prompt tokens (incl. BOS) were actually prefilled.
 
 use anyhow::{bail, Result};
 
 use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
 use crate::util::json::Json;
+
+/// The framed multiplexed protocol version this server speaks.
+pub const PROTOCOL_V2: usize = 2;
 
 /// Strategy names the serving layer accepts.
 pub const STRATEGIES: &[&str] =
@@ -79,7 +149,7 @@ pub struct Request {
     pub cache: CacheMode,
 }
 
-/// One parsed client line: a generation request or a server command.
+/// One parsed v1 client line: a generation request or a server command.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientLine {
     Request(Request),
@@ -87,27 +157,228 @@ pub enum ClientLine {
     Stats { id: u64 },
 }
 
-/// Parse one client line, dispatching on the optional `cmd` key. The
+/// One parsed v2 client frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum V2Frame {
+    /// `{"v":2,"cmd":"generate",...}` — start a streaming session.
+    Generate(Request),
+    /// `{"v":2,"cmd":"cancel","id":N}` — stop a live session.
+    Cancel { id: u64 },
+    /// `{"v":2,"cmd":"set","id":N,"refresh_every":R}` — live knob.
+    Set { id: u64, refresh_every: usize },
+    /// `{"v":2,"cmd":"stats","id":N}` — server counters.
+    Stats { id: u64 },
+}
+
+/// Parse one v1 client line, dispatching on the optional `cmd` key. The
 /// document is parsed ONCE and shared with [`Request::from_json`] —
-/// this sits on the per-line hot path of every connection thread.
+/// this sits on the per-line hot path of every connection.
 pub fn parse_client_line(line: &str) -> Result<ClientLine> {
     let j = Json::parse(line)?;
+    client_line_from_json(&j)
+}
+
+/// [`parse_client_line`] over an already-parsed document (the reactor
+/// parses each line once to detect the protocol version).
+pub fn client_line_from_json(j: &Json) -> Result<ClientLine> {
     let Some(cmd) = j.get("cmd") else {
-        return Request::from_json(&j).map(ClientLine::Request);
+        return Request::from_json(j).map(ClientLine::Request);
     };
-    let id = match j.get("id") {
-        Some(v) => v.as_usize()? as u64,
-        None => 0,
-    };
+    let id = opt_id(j)?;
     match cmd.as_str()? {
         "stats" => Ok(ClientLine::Stats { id }),
         other => bail!("unknown command '{other}'"),
     }
 }
 
+/// The `"v"` key of a frame: `None` = unversioned (v1), `Some(n)`
+/// otherwise. The reactor locks a connection's protocol from its first
+/// parsed line.
+pub fn frame_version(j: &Json) -> Result<Option<usize>> {
+    match j.get("v") {
+        Some(v) => Ok(Some(v.as_usize()?)),
+        None => Ok(None),
+    }
+}
+
+fn opt_id(j: &Json) -> Result<u64> {
+    Ok(match j.get("id") {
+        Some(v) => v.as_usize()? as u64,
+        None => 0,
+    })
+}
+
+/// Parse one v2 frame from an already-parsed document. The `"v"` key
+/// must be present and equal to 2 (the reactor checks this before
+/// locking the connection to v2, so a `"v":3` frame is an explicit
+/// "unsupported protocol version" error, not a silent v1 fallback).
+pub fn v2_frame_from_json(j: &Json) -> Result<V2Frame> {
+    let v = j.req("v")?.as_usize()?;
+    if v != PROTOCOL_V2 {
+        bail!("unsupported protocol version {v} (this server speaks v1 and v2)");
+    }
+    let cmd = j.req("cmd")?.as_str()?;
+    match cmd {
+        "generate" => Request::from_json(j).map(V2Frame::Generate),
+        "cancel" => Ok(V2Frame::Cancel { id: j.req("id")?.as_usize()? as u64 }),
+        "set" => Ok(V2Frame::Set {
+            id: j.req("id")?.as_usize()? as u64,
+            refresh_every: j.req("refresh_every")?.as_usize()?,
+        }),
+        "stats" => Ok(V2Frame::Stats { id: opt_id(j)? }),
+        other => bail!("unknown v2 command '{other}'"),
+    }
+}
+
+// ----------------------------------------------------------- events
+
+/// One server→client event. In v2 every event is serialized as its own
+/// frame ([`Event::to_frame`]); the v1 compatibility shim drops
+/// non-terminal events and serializes the terminal one as the classic
+/// response line ([`Event::into_response`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Session admitted to a shard's queue (position at submission).
+    Accepted { id: u64, queue_pos: u64 },
+    /// Incremental generation text. `index` is contiguous from 0; the
+    /// concatenation of all delta texts equals the final `done` text.
+    Delta { id: u64, index: u64, text: String },
+    /// One GLASS mask re-aggregation ran for this session.
+    Refresh {
+        id: u64,
+        refreshes: u64,
+        mask_updates: u64,
+        changed: bool,
+    },
+    /// Terminal: the completed response (finish length|stop|cancel).
+    Done(Response),
+    /// Terminal: the session failed. `retryable` marks errors where
+    /// resubmitting the identical request may succeed (e.g. server
+    /// shutdown before admission), vs. permanent rejections
+    /// (validation, prompt too long, cancel of an unknown id).
+    Error {
+        id: u64,
+        error: String,
+        retryable: bool,
+    },
+}
+
+impl Event {
+    /// The session id this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Accepted { id, .. }
+            | Event::Delta { id, .. }
+            | Event::Refresh { id, .. }
+            | Event::Error { id, .. } => *id,
+            Event::Done(r) => r.id,
+        }
+    }
+
+    /// Terminal events end a session (exactly one per session).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Done(_) | Event::Error { .. })
+    }
+
+    /// The v1 compatibility shim: terminal events become the classic
+    /// one-line response, everything else is suppressed. This is what
+    /// makes a v1 client's byte stream identical to the pre-v2 server.
+    pub fn into_response(self) -> Option<Response> {
+        match self {
+            Event::Done(r) => Some(r),
+            Event::Error { id, error, .. } => Some(Response::err(id, error)),
+            _ => None,
+        }
+    }
+
+    /// Serialize as a v2 event frame (one JSON line).
+    pub fn to_frame(&self) -> String {
+        let mut o = Json::obj();
+        o.set("v", Json::Num(PROTOCOL_V2 as f64));
+        match self {
+            Event::Accepted { id, queue_pos } => {
+                o.set("ev", Json::Str("accepted".into()))
+                    .set("id", Json::Num(*id as f64))
+                    .set("queue_pos", Json::Num(*queue_pos as f64));
+            }
+            Event::Delta { id, index, text } => {
+                o.set("ev", Json::Str("delta".into()))
+                    .set("id", Json::Num(*id as f64))
+                    .set("index", Json::Num(*index as f64))
+                    .set("text", Json::Str(text.clone()));
+            }
+            Event::Refresh {
+                id,
+                refreshes,
+                mask_updates,
+                changed,
+            } => {
+                o.set("ev", Json::Str("refresh".into()))
+                    .set("id", Json::Num(*id as f64))
+                    .set("refreshes", Json::Num(*refreshes as f64))
+                    .set("mask_updates", Json::Num(*mask_updates as f64))
+                    .set("changed", Json::Bool(*changed));
+            }
+            Event::Done(resp) => {
+                o.set("ev", Json::Str("done".into()));
+                if let Json::Obj(fields) = resp.to_json() {
+                    for (k, v) in fields {
+                        o.set(&k, v);
+                    }
+                }
+            }
+            Event::Error {
+                id,
+                error,
+                retryable,
+            } => {
+                o.set("ev", Json::Str("error".into()))
+                    .set("id", Json::Num(*id as f64))
+                    .set("error", Json::Str(error.clone()))
+                    .set("retryable", Json::Bool(*retryable));
+            }
+        }
+        o.to_string()
+    }
+
+    /// Parse a v2 event frame (client side).
+    pub fn parse_frame(j: &Json) -> Result<Event> {
+        let ev = j.req("ev")?.as_str()?;
+        let id = opt_id(j)?;
+        Ok(match ev {
+            "accepted" => Event::Accepted {
+                id,
+                queue_pos: j.req("queue_pos")?.as_usize()? as u64,
+            },
+            "delta" => Event::Delta {
+                id,
+                index: j.req("index")?.as_usize()? as u64,
+                text: j.req("text")?.as_str()?.to_string(),
+            },
+            "refresh" => Event::Refresh {
+                id,
+                refreshes: j.req("refreshes")?.as_usize()? as u64,
+                mask_updates: j.req("mask_updates")?.as_usize()? as u64,
+                changed: j.req("changed")?.as_bool()?,
+            },
+            "done" => Event::Done(Response::from_json(j)?),
+            "error" => Event::Error {
+                id,
+                error: j.req("error")?.as_str()?.to_string(),
+                retryable: match j.get("retryable") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                },
+            },
+            other => bail!("unknown event '{other}'"),
+        })
+    }
+}
+
 /// One serving shard's live counters, as reported by the `stats`
 /// command: scheduler queue depth plus decode / prefill slot occupancy
-/// (gauges the shard's batcher publishes every loop iteration).
+/// (gauges the shard's batcher publishes as one atomic word every loop
+/// iteration, so the pair is always mutually consistent).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct ShardSnapshot {
     /// Shard index (also the routing target of `route_shard`).
@@ -207,7 +478,8 @@ impl Request {
     }
 
     /// Build from an already-parsed document (shared with
-    /// [`parse_client_line`] so request lines are parsed once).
+    /// [`client_line_from_json`] and [`v2_frame_from_json`] so request
+    /// lines are parsed once).
     pub fn from_json(j: &Json) -> Result<Request> {
         let get_f = |k: &str, d: f64| -> Result<f64> {
             match j.get(k) {
@@ -258,8 +530,7 @@ impl Request {
         })
     }
 
-    pub fn to_line(&self) -> String {
-        let mut o = Json::obj();
+    fn fields_into(&self, o: &mut Json) {
         o.set("id", Json::Num(self.id as f64))
             .set("prompt", Json::Str(self.prompt.clone()))
             .set("strategy", Json::Str(self.strategy.clone()))
@@ -268,8 +539,51 @@ impl Request {
             .set("max_tokens", Json::Num(self.max_tokens as f64))
             .set("refresh_every", Json::Num(self.refresh_every as f64))
             .set("cache", Json::Str(self.cache.as_str().to_string()));
+    }
+
+    /// v1 request line.
+    pub fn to_line(&self) -> String {
+        let mut o = Json::obj();
+        self.fields_into(&mut o);
         o.to_string()
     }
+
+    /// v2 `generate` frame for the same request.
+    pub fn to_v2_frame(&self) -> String {
+        let mut o = Json::obj();
+        o.set("v", Json::Num(PROTOCOL_V2 as f64))
+            .set("cmd", Json::Str("generate".into()));
+        self.fields_into(&mut o);
+        o.to_string()
+    }
+}
+
+/// v2 `cancel` frame for session `id`.
+pub fn cancel_frame(id: u64) -> String {
+    let mut o = Json::obj();
+    o.set("v", Json::Num(PROTOCOL_V2 as f64))
+        .set("cmd", Json::Str("cancel".into()))
+        .set("id", Json::Num(id as f64));
+    o.to_string()
+}
+
+/// v2 `set` frame adjusting `refresh_every` for live session `id`.
+pub fn set_frame(id: u64, refresh_every: usize) -> String {
+    let mut o = Json::obj();
+    o.set("v", Json::Num(PROTOCOL_V2 as f64))
+        .set("cmd", Json::Str("set".into()))
+        .set("id", Json::Num(id as f64))
+        .set("refresh_every", Json::Num(refresh_every as f64));
+    o.to_string()
+}
+
+/// v2 `stats` frame.
+pub fn stats_frame(id: u64) -> String {
+    let mut o = Json::obj();
+    o.set("v", Json::Num(PROTOCOL_V2 as f64))
+        .set("cmd", Json::Str("stats".into()))
+        .set("id", Json::Num(id as f64));
+    o.to_string()
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -296,7 +610,7 @@ pub struct Response {
     /// Mask refreshes applied / refreshes that changed the kept set.
     pub refreshes: usize,
     pub mask_updates: usize,
-    /// "length" | "stop" ("" on errors).
+    /// "length" | "stop" | "cancel" ("" on errors).
     pub finish: String,
     pub error: Option<String>,
 }
@@ -349,7 +663,9 @@ impl Response {
         }
     }
 
-    pub fn to_line(&self) -> String {
+    /// The response's JSON document (the v1 line body; the v2 `done`
+    /// frame carries exactly these fields plus `v`/`ev`).
+    pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("id", Json::Num(self.id as f64));
         if let Some(e) = &self.error {
@@ -375,11 +691,16 @@ impl Response {
                 .set("mask_updates", Json::Num(self.mask_updates as f64))
                 .set("finish", Json::Str(self.finish.clone()));
         }
-        o.to_string()
+        o
     }
 
-    pub fn parse(line: &str) -> Result<Response> {
-        let j = Json::parse(line)?;
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Build from an already-parsed document (ignores unknown keys, so
+    /// a v2 `done` frame parses through the same path).
+    pub fn from_json(j: &Json) -> Result<Response> {
         let id = j.req("id")?.as_usize()? as u64;
         if let Some(e) = j.get("error") {
             return Ok(Response::err(id, e.as_str()?.to_string()));
@@ -416,6 +737,10 @@ impl Response {
             },
             error: None,
         })
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        Response::from_json(&Json::parse(line)?)
     }
 }
 
@@ -610,5 +935,169 @@ mod tests {
         assert_eq!(r.cache_evictions, 0);
         assert_eq!(r.refreshes, 0);
         assert_eq!(r.finish, "length");
+    }
+
+    // -------------------------------------------------- v2 frames
+
+    #[test]
+    fn frame_version_detection() {
+        let v2 = Json::parse(r#"{"v":2,"cmd":"stats"}"#).unwrap();
+        assert_eq!(frame_version(&v2).unwrap(), Some(2));
+        let v1 = Json::parse(r#"{"id":1,"prompt":"x"}"#).unwrap();
+        assert_eq!(frame_version(&v1).unwrap(), None);
+        // an unsupported version is an explicit error at frame parse
+        let v3 = Json::parse(r#"{"v":3,"cmd":"stats"}"#).unwrap();
+        assert_eq!(frame_version(&v3).unwrap(), Some(3));
+        let err = v2_frame_from_json(&v3).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported protocol version"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn v2_generate_frame_roundtrips_and_validates() {
+        let r = Request {
+            id: 7,
+            prompt: "the blue owl".into(),
+            strategy: "i-glass".into(),
+            lambda: 0.5,
+            density: 0.4,
+            max_tokens: 16,
+            refresh_every: 4,
+            cache: CacheMode::On,
+        };
+        let j = Json::parse(&r.to_v2_frame()).unwrap();
+        match v2_frame_from_json(&j).unwrap() {
+            V2Frame::Generate(back) => assert_eq!(back, r),
+            other => panic!("expected generate, got {other:?}"),
+        }
+        // v2 generate goes through the same validation as v1
+        let bad = Json::parse(
+            r#"{"v":2,"cmd":"generate","id":1,"prompt":"x","density":7}"#,
+        )
+        .unwrap();
+        let err = v2_frame_from_json(&bad).unwrap_err();
+        assert!(err.to_string().contains("density"), "{err}");
+    }
+
+    #[test]
+    fn v2_control_frames_parse() {
+        let j = Json::parse(&cancel_frame(9)).unwrap();
+        assert_eq!(
+            v2_frame_from_json(&j).unwrap(),
+            V2Frame::Cancel { id: 9 }
+        );
+        let j = Json::parse(&set_frame(9, 4)).unwrap();
+        assert_eq!(
+            v2_frame_from_json(&j).unwrap(),
+            V2Frame::Set {
+                id: 9,
+                refresh_every: 4
+            }
+        );
+        let j = Json::parse(&stats_frame(3)).unwrap();
+        assert_eq!(
+            v2_frame_from_json(&j).unwrap(),
+            V2Frame::Stats { id: 3 }
+        );
+        // cancel without an id is malformed; unknown commands error
+        let j = Json::parse(r#"{"v":2,"cmd":"cancel"}"#).unwrap();
+        assert!(v2_frame_from_json(&j).is_err());
+        let j = Json::parse(r#"{"v":2,"cmd":"dance","id":1}"#).unwrap();
+        assert!(v2_frame_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn event_frames_roundtrip() {
+        let mut done = Response::ok(7, "hello".into(), 5, 1.0, 2.0, 0.5);
+        done.finish = "cancel".into();
+        let events = vec![
+            Event::Accepted {
+                id: 7,
+                queue_pos: 3,
+            },
+            Event::Delta {
+                id: 7,
+                index: 0,
+                text: "hel\"lo\n".into(),
+            },
+            Event::Refresh {
+                id: 7,
+                refreshes: 2,
+                mask_updates: 1,
+                changed: true,
+            },
+            Event::Done(done),
+            Event::Error {
+                id: 7,
+                error: "boom".into(),
+                retryable: true,
+            },
+        ];
+        for ev in events {
+            let j = Json::parse(&ev.to_frame()).unwrap();
+            assert_eq!(
+                j.req("v").unwrap().as_usize().unwrap(),
+                PROTOCOL_V2
+            );
+            let back = Event::parse_frame(&j).unwrap();
+            assert_eq!(back, ev, "{}", ev.to_frame());
+            assert_eq!(back.id(), 7);
+        }
+    }
+
+    #[test]
+    fn v1_shim_keeps_terminal_events_only() {
+        let done = Response::ok(1, "t".into(), 1, 0.0, 0.0, 1.0);
+        assert_eq!(
+            Event::Done(done.clone()).into_response(),
+            Some(done)
+        );
+        let err = Event::Error {
+            id: 4,
+            error: "nope".into(),
+            retryable: false,
+        }
+        .into_response()
+        .unwrap();
+        // the shim serializes errors exactly as the pre-v2 server did
+        assert_eq!(err.to_line(), r#"{"id":4,"error":"nope"}"#);
+        assert!(Event::Accepted { id: 1, queue_pos: 0 }
+            .into_response()
+            .is_none());
+        assert!(Event::Delta {
+            id: 1,
+            index: 0,
+            text: "x".into()
+        }
+        .into_response()
+        .is_none());
+        assert!(Event::Refresh {
+            id: 1,
+            refreshes: 1,
+            mask_updates: 0,
+            changed: false
+        }
+        .into_response()
+        .is_none());
+    }
+
+    #[test]
+    fn terminality_is_exactly_done_or_error() {
+        assert!(Event::Done(Response::err(1, "e".into())).is_terminal());
+        assert!(Event::Error {
+            id: 1,
+            error: "e".into(),
+            retryable: false
+        }
+        .is_terminal());
+        assert!(!Event::Accepted { id: 1, queue_pos: 0 }.is_terminal());
+        assert!(!Event::Delta {
+            id: 1,
+            index: 0,
+            text: String::new()
+        }
+        .is_terminal());
     }
 }

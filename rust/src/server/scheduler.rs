@@ -19,12 +19,50 @@
 //! followers while the first request's prefill is still streaming, so
 //! a shared-prefix burst pays its cache miss **once** — the followers
 //! splice the published prefix instead of recomputing it.
+//!
+//! **Control plane** (protocol v2): the scheduler also carries
+//! [`Control`] messages — client-initiated `cancel` and mid-stream
+//! `set` knob adjustments — from the reactor to the shard's batcher
+//! loop, which drains them with [`Scheduler::take_controls`] at the top
+//! of every iteration. A pending control wakes an idle batcher blocked
+//! in [`Scheduler::next_batch`] (which then returns an empty batch), so
+//! a cancel is never stuck behind "no new work". [`Scheduler::remove`]
+//! plucks a still-queued request out of the queue (cancel before
+//! admission); [`Scheduler::drain_close`] closes the queue and returns
+//! everything still queued — graceful shutdown fails those with a
+//! retryable error instead of serving them.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::protocol::Request;
+
+/// One control-plane message for a shard's batcher loop, keyed by the
+/// (connection, session id) pair that uniquely names a live session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    /// Stop the session now: free its slot (or pluck it from the
+    /// queue), emit a terminal `done` with finish "cancel", re-queue
+    /// nothing.
+    Cancel { conn_id: u64, id: u64 },
+    /// Adjust the session's mask-refresh interval mid-stream.
+    SetRefresh {
+        conn_id: u64,
+        id: u64,
+        refresh_every: usize,
+    },
+}
+
+impl Control {
+    /// The (conn, session) key this control targets.
+    pub fn key(&self) -> (u64, u64) {
+        match *self {
+            Control::Cancel { conn_id, id }
+            | Control::SetRefresh { conn_id, id, .. } => (conn_id, id),
+        }
+    }
+}
 
 /// Queue entry: the request plus its arrival time and a reply slot key.
 #[derive(Debug)]
@@ -33,11 +71,17 @@ pub struct Pending {
     pub arrived: Instant,
     /// Opaque connection key used by the server to route the response.
     pub conn_id: u64,
+    /// Emit non-terminal events (delta/refresh) for this session —
+    /// protocol-v2 streams. v1 one-shot requests set false so the
+    /// batcher skips the per-token event cost their compatibility shim
+    /// would discard anyway; terminals are always emitted.
+    pub stream: bool,
 }
 
 #[derive(Default)]
 struct QueueState {
     queue: VecDeque<Pending>,
+    controls: Vec<Control>,
     closed: bool,
 }
 
@@ -70,15 +114,84 @@ impl Scheduler {
         self
     }
 
-    pub fn submit(&self, p: Pending) {
+    /// Enqueue a request, returning its position in the queue at
+    /// submission (0 = next to be drained) — the v2 `accepted` frame's
+    /// `queue_pos`. Returns `None` (refusing the request) once the
+    /// queue is closed: after shutdown's drain, nothing will ever
+    /// dequeue again, so enqueueing would strand the session without a
+    /// terminal — the caller must fail it itself (retryably).
+    #[must_use = "a refused submit must be failed back to the client"]
+    pub fn submit(&self, p: Pending) -> Option<usize> {
         let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return None;
+        }
+        let pos = st.queue.len();
         st.queue.push_back(p);
         self.cv.notify_all();
+        Some(pos)
+    }
+
+    /// Enqueue a control message for the batcher loop (wakes an idle
+    /// batcher blocked in [`Scheduler::next_batch`]).
+    pub fn control(&self, c: Control) {
+        let mut st = self.state.lock().unwrap();
+        st.controls.push(c);
+        self.cv.notify_all();
+    }
+
+    /// Drain every pending control message, FIFO.
+    pub fn take_controls(&self) -> Vec<Control> {
+        std::mem::take(&mut self.state.lock().unwrap().controls)
+    }
+
+    /// Remove a still-queued request by its (conn, session id) key —
+    /// cancellation before admission. Returns the plucked request.
+    pub fn remove(&self, conn_id: u64, id: u64) -> Option<Pending> {
+        let mut st = self.state.lock().unwrap();
+        let at = st
+            .queue
+            .iter()
+            .position(|p| p.conn_id == conn_id && p.request.id == id)?;
+        st.queue.remove(at)
+    }
+
+    /// Adjust `refresh_every` on a still-queued request. Returns false
+    /// when no queued request matches (the batcher then checks slots).
+    pub fn set_refresh(
+        &self,
+        conn_id: u64,
+        id: u64,
+        refresh_every: usize,
+    ) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st
+            .queue
+            .iter_mut()
+            .find(|p| p.conn_id == conn_id && p.request.id == id)
+        {
+            Some(p) => {
+                p.request.refresh_every = refresh_every;
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn close(&self) {
         self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Close the queue AND return everything still queued (graceful
+    /// shutdown: the server fails these with a retryable error frame
+    /// instead of serving them; in-flight slots drain normally).
+    pub fn drain_close(&self) -> Vec<Pending> {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        let dropped = st.queue.drain(..).collect();
+        self.cv.notify_all();
+        dropped
     }
 
     pub fn len(&self) -> usize {
@@ -92,15 +205,23 @@ impl Scheduler {
     /// Take the next batch (1..=batch_width requests). Blocks until at
     /// least one request is available or the queue is closed (→ None).
     /// After the first request arrives, waits up to `batch_window` for
-    /// the batch to fill — the classic latency/throughput knob.
+    /// the batch to fill — the classic latency/throughput knob. A
+    /// pending control message also wakes the wait and returns an
+    /// EMPTY batch, so the idle batcher loops around and processes it.
     pub fn next_batch(&self) -> Option<Vec<Pending>> {
         let mut st = self.state.lock().unwrap();
-        // wait for work
-        while st.queue.is_empty() {
+        // wait for work (or a control message)
+        while st.queue.is_empty() && st.controls.is_empty() {
             if st.closed {
                 return None;
             }
             st = self.cv.wait(st).unwrap();
+        }
+        if st.queue.is_empty() {
+            // woken by a control: hand the (empty) batch back so the
+            // caller's loop drains the control queue without waiting
+            // out the batch window
+            return Some(Vec::new());
         }
         // batch-fill window
         let deadline = Instant::now() + self.batch_window;
@@ -210,6 +331,7 @@ mod tests {
             },
             arrived: Instant::now(),
             conn_id: id,
+            stream: true,
         }
     }
 
@@ -217,7 +339,7 @@ mod tests {
     fn batches_up_to_width() {
         let s = Scheduler::new(2, Duration::from_millis(5));
         for i in 0..5 {
-            s.submit(req(i));
+            let _ = s.submit(req(i));
         }
         let b1 = s.next_batch().unwrap();
         assert_eq!(b1.len(), 2);
@@ -232,7 +354,7 @@ mod tests {
     fn fcfs_order() {
         let s = Scheduler::new(4, Duration::from_millis(1));
         for i in 0..4 {
-            s.submit(req(i));
+            let _ = s.submit(req(i));
         }
         let b = s.next_batch().unwrap();
         let ids: Vec<u64> = b.iter().map(|p| p.request.id).collect();
@@ -256,8 +378,8 @@ mod tests {
         // matter how the scheduler thread is timed. The old version
         // raced a 30 ms sleep against the window and flaked under load.
         let s = Scheduler::new(2, Duration::from_millis(200));
-        s.submit(req(0));
-        s.submit(req(1));
+        let _ = s.submit(req(0));
+        let _ = s.submit(req(1));
         let t0 = Instant::now();
         let b = s.next_batch().unwrap();
         assert_eq!(b.len(), 2, "full batch forms from queued work");
@@ -272,7 +394,7 @@ mod tests {
         // One queued request + a tiny window: next_batch returns the
         // partial batch after the window, without external signals.
         let s = Scheduler::new(4, Duration::from_millis(5));
-        s.submit(req(0));
+        let _ = s.submit(req(0));
         let b = s.next_batch().unwrap();
         assert_eq!(b.len(), 1);
     }
@@ -282,7 +404,7 @@ mod tests {
         let s = Scheduler::new(4, Duration::from_millis(1));
         assert!(s.take(3).is_empty(), "empty queue → empty, no block");
         for i in 0..5 {
-            s.submit(req(i));
+            let _ = s.submit(req(i));
         }
         let a = s.take(2);
         assert_eq!(
@@ -301,7 +423,7 @@ mod tests {
     fn requeue_front_preserves_fcfs() {
         let s = Scheduler::new(4, Duration::from_millis(1));
         for i in 0..5 {
-            s.submit(req(i));
+            let _ = s.submit(req(i));
         }
         // batcher takes 4, can only seat 2, pushes [2, 3] back
         let mut batch = s.take(4);
@@ -320,7 +442,7 @@ mod tests {
     #[test]
     fn take_zero_and_closed_flag() {
         let s = Scheduler::new(2, Duration::from_millis(1));
-        s.submit(req(0));
+        let _ = s.submit(req(0));
         assert!(s.take(0).is_empty());
         assert_eq!(s.len(), 1);
         assert!(!s.is_closed());
@@ -380,7 +502,7 @@ mod tests {
             .iter()
             .enumerate()
         {
-            s.submit(req_with_prompt(i as u64, p));
+            let _ = s.submit(req_with_prompt(i as u64, p));
         }
         let ids: Vec<u64> = s
             .take(8)
@@ -391,10 +513,82 @@ mod tests {
     }
 
     #[test]
+    fn submit_returns_queue_position() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        assert_eq!(s.submit(req(0)), Some(0));
+        assert_eq!(s.submit(req(1)), Some(1));
+        let _ = s.take(1);
+        // position is relative to the live queue, not an absolute count
+        assert_eq!(s.submit(req(2)), Some(1));
+    }
+
+    #[test]
+    fn remove_plucks_queued_request_by_conn_and_id() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        for i in 0..3 {
+            let _ = s.submit(req(i)); // conn_id == id == i
+        }
+        let plucked = s.remove(1, 1).expect("queued request removed");
+        assert_eq!(plucked.request.id, 1);
+        // wrong conn or already-removed id: None, queue untouched
+        assert!(s.remove(9, 2).is_none());
+        assert!(s.remove(1, 1).is_none());
+        let left: Vec<u64> =
+            s.take(10).iter().map(|p| p.request.id).collect();
+        assert_eq!(left, vec![0, 2], "FCFS order preserved around removal");
+    }
+
+    #[test]
+    fn set_refresh_updates_queued_request_only() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        let _ = s.submit(req(0));
+        assert!(s.set_refresh(0, 0, 7));
+        assert!(!s.set_refresh(0, 99, 7), "unknown id is a miss");
+        let b = s.take(1);
+        assert_eq!(b[0].request.refresh_every, 7);
+    }
+
+    #[test]
+    fn drain_close_returns_queued_and_closes() {
+        let s = Scheduler::new(4, Duration::from_millis(1));
+        for i in 0..3 {
+            let _ = s.submit(req(i));
+        }
+        let dropped = s.drain_close();
+        assert_eq!(dropped.len(), 3);
+        assert!(s.is_closed());
+        assert!(s.is_empty());
+        assert!(s.next_batch().is_none());
+        // a submit racing past the shutdown check is REFUSED, never
+        // silently stranded in a queue nothing will drain again
+        assert_eq!(s.submit(req(9)), None);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn pending_control_wakes_idle_next_batch_with_empty_batch() {
+        let s = Arc::new(Scheduler::new(2, Duration::from_millis(200)));
+        let s2 = Arc::clone(&s);
+        let h = std::thread::spawn(move || s2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        s.control(Control::Cancel { conn_id: 1, id: 2 });
+        let batch = h.join().unwrap().expect("woken, not closed");
+        assert!(batch.is_empty(), "control wake returns an empty batch");
+        let controls = s.take_controls();
+        assert_eq!(controls, vec![Control::Cancel { conn_id: 1, id: 2 }]);
+        assert!(s.take_controls().is_empty(), "drained exactly once");
+        assert_eq!(
+            Control::SetRefresh { conn_id: 3, id: 4, refresh_every: 8 }
+                .key(),
+            (3, 4)
+        );
+    }
+
+    #[test]
     fn next_batch_drains_queued_work_after_close() {
         let s = Scheduler::new(2, Duration::from_millis(1));
         for i in 0..3 {
-            s.submit(req(i));
+            let _ = s.submit(req(i));
         }
         s.close();
         assert_eq!(s.next_batch().unwrap().len(), 2);

@@ -159,6 +159,10 @@ impl GateReport {
 const THROUGHPUT_KEYS: &[&str] = &[
     "continuous_toks_per_s",
     "shared_prefix_toks_per_s",
+    // v2 streaming over the reactor with many idle connections
+    // attached — a regression here means idle connections started
+    // costing threads/CPU again, or the event path got slow
+    "idle_conns_toks_per_s",
 ];
 
 /// Baseline keys holding deterministic counters: the current run must
@@ -355,6 +359,32 @@ mod tests {
             ("prefill_tokens_saved_warm", 250.0),
         ]);
         assert!(check_regression(&faster, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_enforces_idle_conns_streaming_floor() {
+        // the v2-reactor row gates like every throughput key: a 20%
+        // drop with many idle connections attached must fail
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_conns_toks_per_s", 500.0),
+        ]);
+        let regressed = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_conns_toks_per_s", 400.0),
+        ]);
+        let r = check_regression(&regressed, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("idle_conns_toks_per_s"),
+            "{:?}",
+            r.failures
+        );
+        let fine = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_conns_toks_per_s", 480.0),
+        ]);
+        assert!(check_regression(&fine, &base, 0.15).passed());
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Serving-layer integration: the continuous batcher driven directly
-//! (deterministic, no timing races) plus real TCP server + client runs.
+//! (deterministic, no timing races) plus real TCP server + client runs
+//! over the nonblocking reactor.
 //!
 //! Every TCP-level test starts its server with `GLASS_TEST_SHARDS`
-//! shards (default 1) — the CI matrix runs the whole suite at 1 and 4
-//! shards, so concurrency regressions in the sharded batcher cannot
-//! land green. Tests that specifically exercise sharding pin their own
-//! shard count with [`start_server_sharded`].
+//! shards (default 1) and talks `GLASS_TEST_PROTOCOL` (v1 default, v2
+//! for the framed streaming protocol) — the CI matrix crosses both, so
+//! neither a sharding nor a protocol regression can land green. Tests
+//! that exercise a specific shard count or protocol pin their own.
 
 mod common;
 
@@ -15,8 +16,8 @@ use std::time::{Duration, Instant};
 use glass::engine::prefix_cache::CacheMode;
 use glass::server::batcher::{Batcher, BatcherOptions};
 use glass::server::client::{request, Client};
-use glass::server::protocol::{Request, Response};
-use glass::server::scheduler::{Pending, Scheduler};
+use glass::server::protocol::{Event, Request, Response};
+use glass::server::scheduler::{Control, Pending, Scheduler};
 use glass::server::{Server, ServerOptions};
 
 /// Shard count for the generic TCP tests (the CI matrix sets this).
@@ -26,6 +27,23 @@ fn test_shards() -> usize {
         .and_then(|v| v.parse().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(1)
+}
+
+/// Should the generic TCP tests speak v2 (the CI matrix sets this)?
+fn test_protocol_v2() -> bool {
+    std::env::var("GLASS_TEST_PROTOCOL")
+        .map(|v| v == "v2")
+        .unwrap_or(false)
+}
+
+/// Protocol-matrix client: v1 or v2 per `GLASS_TEST_PROTOCOL`. The
+/// blocking API is identical, so every generic test runs on both.
+fn connect(addr: &str) -> Client {
+    if test_protocol_v2() {
+        Client::connect_v2(addr).unwrap()
+    } else {
+        Client::connect(addr).unwrap()
+    }
 }
 
 fn start_server() -> Server {
@@ -77,6 +95,20 @@ fn pending_cached(
         },
         arrived: Instant::now(),
         conn_id,
+        // component tests assert delta/refresh event streams
+        stream: true,
+    }
+}
+
+/// Event-sink adapter: collect only terminal responses, exactly what
+/// the v1 compatibility shim serializes.
+fn respond(
+    done: &mut Vec<(u64, Response)>,
+) -> impl FnMut(u64, Event) + '_ {
+    move |c, ev| {
+        if let Some(r) = ev.into_response() {
+            done.push((c, r));
+        }
     }
 }
 
@@ -91,9 +123,7 @@ fn drive(
         if out.len() >= n {
             break;
         }
-        batcher
-            .step(&mut |c, r| out.push((c, r)))
-            .expect("decode step");
+        batcher.step(&mut respond(&mut out)).expect("decode step");
     }
     *done = out;
 }
@@ -103,7 +133,7 @@ fn drive(
 #[test]
 fn serves_all_strategies() {
     let server = start_server();
-    let mut client = Client::connect(&server.addr).unwrap();
+    let mut client = connect(&server.addr);
     for strategy in ["dense", "griffin", "global", "a-glass", "i-glass"] {
         let resp = client
             .call(request("once there was a red fox", strategy, 0.5))
@@ -124,7 +154,7 @@ fn serves_all_strategies() {
 #[test]
 fn batches_concurrent_requests() {
     let server = start_server();
-    let mut client = Client::connect(&server.addr).unwrap();
+    let mut client = connect(&server.addr);
     let reqs: Vec<Request> = (0..6)
         .map(|i| {
             let mut r = request(
@@ -149,7 +179,7 @@ fn batches_concurrent_requests() {
 #[test]
 fn malformed_and_invalid_requests_get_errors() {
     let server = start_server();
-    // raw socket: send garbage then a bad strategy
+    // raw socket: send garbage then a bad strategy (v1 wire)
     use std::io::{BufRead, BufReader, Write};
     let mut stream =
         std::net::TcpStream::connect(&server.addr).unwrap();
@@ -175,7 +205,7 @@ fn dense_and_sparse_agree_on_prefix_sometimes() {
     // not a strict invariant, but dense vs 90%-density glass should agree
     // on the first generated token for a well-learned prompt
     let server = start_server();
-    let mut client = Client::connect(&server.addr).unwrap();
+    let mut client = connect(&server.addr);
     let d = client
         .call(request("the red fox is", "dense", 1.0))
         .unwrap();
@@ -190,6 +220,406 @@ fn dense_and_sparse_agree_on_prefix_sometimes() {
         d.text,
         s.text
     );
+    server.stop();
+}
+
+// ----------------------------------------------- protocol v2 streaming
+
+/// The ISSUE's acceptance proof: a v2 client streaming a long-form
+/// generation receives deltas whose concatenation is bit-identical to
+/// the v1 blocking response for the same request against the same
+/// server — and the done frame repeats the identical full response.
+#[test]
+fn v2_stream_deltas_concat_bit_identical_to_v1_blocking() {
+    let server = start_server();
+    let mk = || {
+        let mut r = request("once there was a red fox", "i-glass", 0.5);
+        r.max_tokens = 48;
+        r.refresh_every = 8;
+        r.cache = CacheMode::Off; // strict cold path on both runs
+        r
+    };
+
+    let mut v1 = Client::connect(&server.addr).unwrap();
+    let blocking = v1.call(mk()).unwrap();
+    assert!(blocking.error.is_none(), "{:?}", blocking.error);
+    assert_eq!(blocking.tokens, 48);
+
+    let mut v2 = Client::connect_v2(&server.addr).unwrap();
+    let id = v2.generate_stream(mk()).unwrap();
+    let mut concat = String::new();
+    let mut next_index = 0u64;
+    let mut accepted = false;
+    let mut refreshes_seen = 0usize;
+    let done = loop {
+        match v2.next_event(id).unwrap() {
+            Event::Accepted { .. } => {
+                assert!(!accepted, "accepted must arrive exactly once");
+                assert!(
+                    concat.is_empty(),
+                    "accepted must precede every delta"
+                );
+                accepted = true;
+            }
+            Event::Delta { index, text, .. } => {
+                assert_eq!(
+                    index, next_index,
+                    "delta indices must be contiguous from 0"
+                );
+                next_index += 1;
+                concat.push_str(&text);
+            }
+            Event::Refresh { .. } => refreshes_seen += 1,
+            Event::Done(resp) => break resp,
+            Event::Error { error, .. } => panic!("stream failed: {error}"),
+        }
+    };
+    assert!(accepted, "session never got an accepted frame");
+    assert!(next_index > 1, "long-form run must stream multiple deltas");
+    assert_eq!(
+        concat, blocking.text,
+        "delta concatenation diverged from the v1 blocking text"
+    );
+    assert_eq!(done.text, blocking.text, "done frame text diverged");
+    assert_eq!(done.tokens, blocking.tokens);
+    assert_eq!(done.prompt_tokens, blocking.prompt_tokens);
+    assert_eq!(done.density, blocking.density);
+    assert_eq!(done.finish, blocking.finish);
+    assert_eq!(done.refreshes, blocking.refreshes);
+    assert_eq!(
+        refreshes_seen, done.refreshes,
+        "one refresh frame per applied refresh"
+    );
+    server.stop();
+}
+
+#[test]
+fn v2_cancel_mid_stream_stops_and_connection_stays_usable() {
+    let server = start_server();
+    let mut c = Client::connect_v2(&server.addr).unwrap();
+    let mut r = request("the grey cat is quiet and", "i-glass", 0.5);
+    r.max_tokens = 160; // long-form: plenty of stream left to cancel
+    let id = c.generate_stream(r).unwrap();
+    // wait until the stream is demonstrably decoding
+    loop {
+        match c.next_event(id).unwrap() {
+            Event::Delta { .. } => break,
+            Event::Done(resp) => {
+                panic!("finished before any delta: {resp:?}")
+            }
+            Event::Error { error, .. } => panic!("{error}"),
+            _ => {}
+        }
+    }
+    c.cancel(id).unwrap();
+    let done = loop {
+        match c.next_event(id).unwrap() {
+            Event::Done(resp) => break resp,
+            Event::Error { error, .. } => {
+                panic!("cancel must terminate via done, got: {error}")
+            }
+            _ => {}
+        }
+    };
+    assert_eq!(done.finish, "cancel");
+    assert!(
+        done.tokens < 160,
+        "cancel mid-stream must cut generation short (got {})",
+        done.tokens
+    );
+
+    // cancel of the now-FINISHED id: a no-op error frame...
+    c.cancel(id).unwrap();
+    match c.next_event(id).unwrap() {
+        Event::Error {
+            error, retryable, ..
+        } => {
+            assert!(error.contains("no live session"), "{error}");
+            assert!(!retryable);
+        }
+        other => panic!("expected no-op error frame, got {other:?}"),
+    }
+    // ...NOT a connection teardown: the same connection keeps serving
+    let resp = c
+        .call(request("the blue owl is", "dense", 0.5))
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert!(resp.tokens > 0);
+    server.stop();
+}
+
+#[test]
+fn v2_cancel_of_unknown_id_is_noop_error_frame() {
+    let server = start_server();
+    let mut c = Client::connect_v2(&server.addr).unwrap();
+    c.cancel(777).unwrap();
+    match c.next_event(777).unwrap() {
+        Event::Error {
+            error, retryable, ..
+        } => {
+            assert!(error.contains("no live session"), "{error}");
+            assert!(!retryable);
+        }
+        other => panic!("expected error frame, got {other:?}"),
+    }
+    // the connection survives and serves
+    let resp = c
+        .call(request("once there was a red fox", "i-glass", 0.5))
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    server.stop();
+}
+
+#[test]
+fn v2_duplicate_live_session_id_is_rejected() {
+    let server = start_server();
+    let mut c = Client::connect_v2(&server.addr).unwrap();
+    let mut a = request("the grey cat is quiet and", "i-glass", 0.5);
+    a.id = 42;
+    a.max_tokens = 120;
+    let id = c.generate_stream(a.clone()).unwrap();
+    assert_eq!(id, 42);
+    // same id while the first session is live → rejection on the
+    // RESERVED connection-level id 0, so it can never read as the
+    // original session's terminal; the original stream completes
+    c.generate_stream(a).unwrap();
+    match c.next_event(0).unwrap() {
+        Event::Error { error, .. } => {
+            assert!(error.contains("duplicate"), "{error}");
+            assert!(error.contains("42"), "{error}");
+        }
+        other => panic!("expected duplicate rejection, got {other:?}"),
+    }
+    let done = loop {
+        match c.next_event(42).unwrap() {
+            Event::Done(resp) => break resp,
+            Event::Error { error, .. } => {
+                panic!("original session must be unaffected: {error}")
+            }
+            _ => {}
+        }
+    };
+    assert_eq!(done.tokens, 120, "original session must be unaffected");
+    server.stop();
+}
+
+#[test]
+fn v2_session_id_zero_is_reserved() {
+    // id 0 is the correlation id of connection-level errors; a session
+    // with id 0 could mistake one for its terminal frame
+    use std::io::{BufRead, BufReader, Write};
+    let server = start_server();
+    let mut stream =
+        std::net::TcpStream::connect(&server.addr).unwrap();
+    writeln!(
+        stream,
+        r#"{{"v":2,"cmd":"generate","id":0,"prompt":"hi"}}"#
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("reserved") && line.contains("\"ev\":\"error\""),
+        "got: {line}"
+    );
+    server.stop();
+}
+
+#[test]
+fn v2_set_frame_adjusts_refresh_mid_stream() {
+    let server = start_server();
+    let mut c = Client::connect_v2(&server.addr).unwrap();
+    // start with refresh OFF and a long budget, then switch it on
+    // mid-stream: the done frame must report refreshes applied
+    let mut r = request("the grey cat is quiet and", "i-glass", 0.5);
+    r.max_tokens = 150;
+    r.refresh_every = 0;
+    let id = c.generate_stream(r).unwrap();
+    c.set_refresh(id, 2).unwrap();
+    let done = loop {
+        match c.next_event(id).unwrap() {
+            Event::Done(resp) => break resp,
+            Event::Error { error, .. } => panic!("{error}"),
+            _ => {}
+        }
+    };
+    assert!(done.error.is_none());
+    assert_eq!(done.tokens, 150);
+    assert!(
+        done.refreshes >= 1,
+        "set frame must enable refreshes mid-stream (got {})",
+        done.refreshes
+    );
+    server.stop();
+}
+
+#[test]
+fn v2_graceful_shutdown_drains_in_flight_and_fails_queued_retryably() {
+    // width-1, single-shard server: the first session occupies the only
+    // decode slot, the other two queue behind it. stop() must drain the
+    // in-flight session to its natural done and fail the queued ones
+    // with RETRYABLE error frames (they were never admitted).
+    let engine = common::engine();
+    let opts = ServerOptions::new(1);
+    let server =
+        Server::start_with(engine, "127.0.0.1:0", opts).unwrap();
+    let mut c = Client::connect_v2(&server.addr).unwrap();
+    for (id, prompt) in [
+        (1u64, "once there was a red fox"),
+        (2, "the blue owl is"),
+        (3, "every morning the wolf"),
+    ] {
+        let mut r = request(prompt, "i-glass", 0.5);
+        r.id = id;
+        r.max_tokens = 160;
+        c.generate_stream(r).unwrap();
+    }
+    // all three accepted (submitted server-side) before we stop
+    for id in [1u64, 2, 3] {
+        match c.next_event(id).unwrap() {
+            Event::Accepted { .. } => {}
+            other => panic!("expected accepted for {id}, got {other:?}"),
+        }
+    }
+    // session 1 is demonstrably IN FLIGHT (its prefill-seeded delta
+    // arrived), so stop() must drain it to a natural done while 2 and
+    // 3 are still waiting on the single busy slot
+    loop {
+        match c.next_event(1).unwrap() {
+            Event::Delta { .. } => break,
+            Event::Done(r) => {
+                panic!("160-token session finished instantly: {r:?}")
+            }
+            Event::Error { error, .. } => panic!("{error}"),
+            _ => {}
+        }
+    }
+    server.stop();
+    let mut dones = 0usize;
+    let mut retryable_errors = 0usize;
+    for id in [1u64, 2, 3] {
+        loop {
+            match c.next_event(id).unwrap() {
+                Event::Done(resp) => {
+                    assert!(
+                        resp.finish == "length" || resp.finish == "stop",
+                        "in-flight session must drain naturally, got \
+                         finish {:?}",
+                        resp.finish
+                    );
+                    dones += 1;
+                    break;
+                }
+                Event::Error {
+                    error, retryable, ..
+                } => {
+                    assert!(
+                        retryable,
+                        "queued-at-shutdown session {id} must be \
+                         retryable: {error}"
+                    );
+                    retryable_errors += 1;
+                    break;
+                }
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(dones + retryable_errors, 3, "every session terminates");
+    assert!(
+        retryable_errors >= 1,
+        "a width-1 server stopping with 3 near-capacity sessions must \
+         have queued work to fail retryably"
+    );
+    assert!(dones >= 1, "the admitted session must drain to done");
+}
+
+#[test]
+fn oversized_frame_is_rejected_and_connection_closed() {
+    // the unbounded-read-buffer bugfix: a gigantic line (or a line that
+    // never ends) must die with a protocol error, not grow server
+    // memory without limit
+    use std::io::{BufRead, BufReader, Write};
+    let engine = common::engine();
+    let opts = ServerOptions::new(4).with_max_frame_bytes(1024);
+    let server =
+        Server::start_with(engine, "127.0.0.1:0", opts).unwrap();
+
+    // case 1: a complete line over the cap
+    let mut stream =
+        std::net::TcpStream::connect(&server.addr).unwrap();
+    let huge = format!(
+        r#"{{"id":1,"prompt":"{}"}}"#,
+        "x".repeat(4096)
+    );
+    writeln!(stream, "{huge}").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("max_frame_bytes"),
+        "expected frame-cap error, got: {line}"
+    );
+    let mut rest = String::new();
+    let n = reader.read_line(&mut rest).unwrap();
+    assert_eq!(n, 0, "connection must be closed after the violation");
+
+    // case 2: a line that never ends (no newline at all)
+    let mut stream =
+        std::net::TcpStream::connect(&server.addr).unwrap();
+    stream.write_all(&vec![b'a'; 4096]).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.contains("max_frame_bytes"),
+        "expected frame-cap error, got: {line}"
+    );
+
+    // an in-cap request on a fresh connection still serves fine
+    let mut c = connect(&server.addr);
+    let resp = c
+        .call(request("once there was a red fox", "dense", 0.5))
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    server.stop();
+}
+
+#[test]
+fn v1_line_on_v2_server_is_served_with_exactly_one_response_line() {
+    // version auto-detection: a bare v1 line on a fresh connection gets
+    // the classic single response line — same fields as a v2 done frame
+    // for the identical request (the compatibility shim), with no event
+    // frames leaking in between
+    use std::io::{BufRead, BufReader, Write};
+    let server = start_server();
+    let mut stream =
+        std::net::TcpStream::connect(&server.addr).unwrap();
+    let mut req = request("every morning the wolf", "i-glass", 0.5);
+    req.id = 5;
+    req.max_tokens = 12;
+    req.cache = CacheMode::Off;
+    writeln!(stream, "{}", req.to_line()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        !line.contains("\"ev\""),
+        "v1 connection must never see event frames: {line}"
+    );
+    let v1_resp = Response::parse(line.trim()).unwrap();
+    assert!(v1_resp.error.is_none());
+    assert_eq!(v1_resp.id, 5);
+    assert_eq!(v1_resp.tokens, 12);
+
+    let mut v2 = Client::connect_v2(&server.addr).unwrap();
+    req.id = 6;
+    let done = v2.call(req).unwrap();
+    assert_eq!(done.text, v1_resp.text, "shim must serve the same bits");
+    assert_eq!(done.tokens, v1_resp.tokens);
+    assert_eq!(done.density, v1_resp.density);
+    assert_eq!(done.finish, v1_resp.finish);
     server.stop();
 }
 
@@ -208,19 +638,19 @@ fn short_request_overtakes_long_one_mid_flight() {
     // long request starts decoding alone
     let over = batcher.admit(
         vec![pending(1, "once there was a red fox", "i-glass", 24, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.active(), 1);
     for _ in 0..5 {
-        batcher.step(&mut |c, r| done.push((c, r))).unwrap();
+        batcher.step(&mut respond(&mut done)).unwrap();
     }
     assert!(done.is_empty(), "long request must still be decoding");
 
     // short request admitted mid-flight into a free slot
     let over = batcher.admit(
         vec![pending(2, "the blue owl is", "i-glass", 3, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.active(), 2, "admitted while slot 0 in flight");
@@ -252,7 +682,7 @@ fn mask_refresh_changes_masks_after_r_steps() {
             pending(2, "the blue owl is", "i-glass", 16, 4),
             pending(3, "the blue owl is", "griffin", 16, 0),
         ],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     drive(&mut batcher, &mut done, 3);
@@ -293,7 +723,7 @@ fn unknown_strategy_rejected_by_engine_path() {
             pending(7, "hello", "not-a-strategy", 8, 0),
             pending(8, "hello", "dense", 2, 0),
         ],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     // the invalid request errors immediately, before any decode step
@@ -328,7 +758,7 @@ fn stop_state_and_kv_window_bound_generation() {
     let mut done: Vec<(u64, Response)> = Vec::new();
     let over = batcher.admit(
         vec![pending(1, prompt, "dense", capacity, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     drive(&mut batcher, &mut done, 1);
@@ -345,7 +775,7 @@ fn stop_state_and_kv_window_bound_generation() {
     // one token more than the window holds → explicit admission error
     let over = batcher.admit(
         vec![pending(2, prompt, "dense", capacity + 1, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(done.len(), 2);
@@ -354,6 +784,256 @@ fn stop_state_and_kv_window_bound_generation() {
         err.contains("prompt too long"),
         "expected explicit window rejection, got {err:?}"
     );
+}
+
+// --------------------------------------- cancellation (deterministic)
+
+#[test]
+fn cancel_mid_decode_frees_slot_and_queued_request_takes_it() {
+    // THE cancellation contract, driven without timing races: cancel a
+    // mid-decode session on a width-1 batcher, and the queued request
+    // behind it is admitted into the freed slot on the next iteration
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 1).unwrap();
+    let sched = Scheduler::new(1, Duration::from_millis(1));
+    let mut events: Vec<(u64, Event)> = Vec::new();
+
+    let over = batcher.admit(
+        vec![pending(1, "once there was a red fox", "i-glass", 64, 0)],
+        &mut |c, ev| events.push((c, ev)),
+    );
+    assert!(over.is_empty());
+    assert_eq!(batcher.active(), 1);
+    for _ in 0..4 {
+        batcher
+            .step(&mut |c, ev| events.push((c, ev)))
+            .unwrap();
+    }
+    let deltas_before = events
+        .iter()
+        .filter(|(_, ev)| matches!(ev, Event::Delta { .. }))
+        .count();
+    assert!(deltas_before > 0, "session must be demonstrably decoding");
+
+    // the queued request waits for the occupied slot...
+    let _ = sched.submit(pending(2, "the blue owl is", "dense", 3, 0));
+    sched.control(Control::Cancel { conn_id: 1, id: 1 });
+    sched.close();
+    batcher.run(&sched, &mut |c, ev| events.push((c, ev)));
+
+    let terminals: Vec<&(u64, Event)> = events
+        .iter()
+        .filter(|(_, ev)| ev.is_terminal())
+        .collect();
+    assert_eq!(terminals.len(), 2, "both sessions terminate");
+    // the cancel lands FIRST (slot freed before the newcomer decodes)
+    let (c1, ev1) = terminals[0];
+    assert_eq!(*c1, 1);
+    match ev1 {
+        Event::Done(resp) => {
+            assert_eq!(resp.finish, "cancel");
+            assert!(
+                resp.tokens > 0 && resp.tokens < 64,
+                "cancel mid-decode keeps partial output ({} tokens)",
+                resp.tokens
+            );
+        }
+        other => panic!("expected done(cancel), got {other:?}"),
+    }
+    // the queued request was admitted into the freed slot and served
+    let (c2, ev2) = terminals[1];
+    assert_eq!(*c2, 2);
+    match ev2 {
+        Event::Done(resp) => {
+            assert!(resp.error.is_none());
+            assert_eq!(resp.tokens, 3);
+            assert_eq!(resp.finish, "length");
+        }
+        other => panic!("expected done for the queued request, got {other:?}"),
+    }
+    assert_eq!(batcher.active(), 0, "all slots freed");
+}
+
+#[test]
+fn cancel_of_queued_request_plucks_it_without_serving() {
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 1).unwrap();
+    let sched = Scheduler::new(1, Duration::from_millis(1));
+    let mut events: Vec<(u64, Event)> = Vec::new();
+
+    // slot occupied; conn 2's request queues; cancel it before admission
+    let over = batcher.admit(
+        vec![pending(1, "once there was a red fox", "i-glass", 8, 0)],
+        &mut |c, ev| events.push((c, ev)),
+    );
+    assert!(over.is_empty());
+    let _ = sched.submit(pending(2, "the blue owl is", "dense", 4, 0));
+    sched.control(Control::Cancel { conn_id: 2, id: 2 });
+    sched.close();
+    batcher.run(&sched, &mut |c, ev| events.push((c, ev)));
+
+    let for_conn2: Vec<&Event> = events
+        .iter()
+        .filter(|(c, _)| *c == 2)
+        .map(|(_, ev)| ev)
+        .collect();
+    assert_eq!(for_conn2.len(), 1, "exactly one terminal, no deltas");
+    match for_conn2[0] {
+        Event::Done(resp) => {
+            assert_eq!(resp.finish, "cancel");
+            assert_eq!(resp.tokens, 0, "never decoded");
+        }
+        other => panic!("expected done(cancel), got {other:?}"),
+    }
+    // conn 1 unaffected
+    assert!(events.iter().any(|(c, ev)| *c == 1
+        && matches!(ev, Event::Done(r) if r.tokens == 8)));
+}
+
+#[test]
+fn cancel_of_already_finished_session_adds_no_second_terminal() {
+    // a control that matches no slot and no queued request means the
+    // session terminated while the frame was in flight: the batcher
+    // must stay SILENT (its real terminal is already in the channel) —
+    // a second terminal would corrupt the per-session frame contract.
+    // (Controls for ids the server never saw are rejected by the
+    // reactor before they reach the batcher.)
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 1).unwrap();
+    let sched = Scheduler::new(1, Duration::from_millis(1));
+    let mut events: Vec<(u64, Event)> = Vec::new();
+
+    // serve a session to completion, then cancel it (the race's
+    // batcher-side view)
+    let over = batcher.admit(
+        vec![pending(3, "the blue owl is", "dense", 2, 0)],
+        &mut |c, ev| events.push((c, ev)),
+    );
+    assert!(over.is_empty());
+    for _ in 0..8 {
+        batcher.step(&mut |c, ev| events.push((c, ev))).unwrap();
+    }
+    let before = events.len();
+    assert_eq!(
+        events.iter().filter(|(_, ev)| ev.is_terminal()).count(),
+        1,
+        "session finished with exactly one terminal"
+    );
+    batcher.apply_control(
+        Control::Cancel { conn_id: 3, id: 3 },
+        &sched,
+        &mut |c, ev| events.push((c, ev)),
+    );
+    batcher.apply_control(
+        Control::SetRefresh { conn_id: 3, id: 3, refresh_every: 4 },
+        &sched,
+        &mut |c, ev| events.push((c, ev)),
+    );
+    assert_eq!(
+        events.len(),
+        before,
+        "late controls must not emit anything: {:?}",
+        &events[before..]
+    );
+}
+
+#[test]
+fn set_refresh_control_applies_to_active_slot() {
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 1).unwrap();
+    let sched = Scheduler::new(1, Duration::from_millis(1));
+    let mut done: Vec<(u64, Response)> = Vec::new();
+
+    // admitted with refresh OFF
+    let over = batcher.admit(
+        vec![pending(1, "the blue owl is", "i-glass", 16, 0)],
+        &mut respond(&mut done),
+    );
+    assert!(over.is_empty());
+    for _ in 0..2 {
+        batcher.step(&mut respond(&mut done)).unwrap();
+    }
+    // flip it on mid-stream via the control plane
+    batcher.apply_control(
+        Control::SetRefresh {
+            conn_id: 1,
+            id: 1,
+            refresh_every: 4,
+        },
+        &sched,
+        &mut respond(&mut done),
+    );
+    drive(&mut batcher, &mut done, 1);
+    assert_eq!(done.len(), 1);
+    let r = &done[0].1;
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.tokens, 16);
+    assert!(
+        r.refreshes >= 1,
+        "mid-stream set must enable refreshes (got {})",
+        r.refreshes
+    );
+}
+
+#[test]
+fn v2_event_stream_order_and_delta_concat_at_batcher_level() {
+    // deterministic (no TCP) ordering proof: per session, deltas are
+    // contiguous, exactly one terminal arrives last, and the delta
+    // concatenation equals the done text
+    let engine = common::engine();
+    let mut batcher = Batcher::new(engine, 4).unwrap();
+    let mut events: Vec<(u64, Event)> = Vec::new();
+    let over = batcher.admit(
+        vec![
+            pending(1, "once there was a red fox", "i-glass", 12, 4),
+            pending(2, "the blue owl is", "dense", 7, 0),
+        ],
+        &mut |c, ev| events.push((c, ev)),
+    );
+    assert!(over.is_empty());
+    for _ in 0..64 {
+        if events.iter().filter(|(_, ev)| ev.is_terminal()).count() == 2 {
+            break;
+        }
+        batcher
+            .step(&mut |c, ev| events.push((c, ev)))
+            .unwrap();
+    }
+    for conn in [1u64, 2] {
+        let stream: Vec<&Event> = events
+            .iter()
+            .filter(|(c, _)| *c == conn)
+            .map(|(_, ev)| ev)
+            .collect();
+        let mut concat = String::new();
+        let mut next_index = 0u64;
+        let mut terminal: Option<&Event> = None;
+        for &ev in &stream {
+            assert!(
+                terminal.is_none(),
+                "conn {conn}: event after terminal: {ev:?}"
+            );
+            match ev {
+                Event::Delta { index, text, .. } => {
+                    assert_eq!(*index, next_index, "conn {conn}");
+                    next_index += 1;
+                    concat.push_str(text);
+                }
+                Event::Refresh { .. } => {}
+                t if t.is_terminal() => terminal = Some(t),
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        match terminal {
+            Some(Event::Done(resp)) => {
+                assert_eq!(
+                    concat, resp.text,
+                    "conn {conn}: delta concat != final text"
+                );
+            }
+            other => panic!("conn {conn}: bad terminal {other:?}"),
+        }
+    }
 }
 
 // ------------------------------------------- chunked long-prompt admission
@@ -372,7 +1052,7 @@ fn long_prompt_is_served_in_full_without_truncation() {
     let mut done: Vec<(u64, Response)> = Vec::new();
     let over = batcher.admit(
         vec![pending(1, &long_prompt, "i-glass", 8, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.prefilling(), 1, "long prompt streams in");
@@ -406,12 +1086,12 @@ fn in_flight_decode_continues_during_chunked_admission() {
     // a short request decodes alone first
     let over = batcher.admit(
         vec![pending(1, "once there was a red fox", "i-glass", 6, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.active(), 1);
     for _ in 0..2 {
-        batcher.step(&mut |c, r| done.push((c, r))).unwrap();
+        batcher.step(&mut respond(&mut done)).unwrap();
     }
     assert!(done.is_empty());
 
@@ -421,7 +1101,7 @@ fn in_flight_decode_continues_during_chunked_admission() {
     assert!(n_long >= 3 * spec.prefill_len && n_long + 8 <= spec.max_seq);
     let over = batcher.admit(
         vec![pending(2, &long_prompt, "griffin", 8, 0)],
-        &mut |c, r| done.push((c, r)),
+        &mut respond(&mut done),
     );
     assert!(over.is_empty(), "unexpected admission overflow");
     assert_eq!(batcher.prefilling(), 1);
@@ -451,7 +1131,7 @@ fn in_flight_decode_continues_during_chunked_admission() {
 /// Drive one request through a batcher to completion.
 fn serve_one(batcher: &mut Batcher, p: Pending) -> Response {
     let mut done: Vec<(u64, Response)> = Vec::new();
-    let over = batcher.admit(vec![p], &mut |c, r| done.push((c, r)));
+    let over = batcher.admit(vec![p], &mut respond(&mut done));
     assert!(over.is_empty(), "unexpected admission overflow");
     drive(batcher, &mut done, 1);
     assert_eq!(done.len(), 1, "request must complete");
@@ -621,11 +1301,11 @@ fn same_prefix_burst_pays_the_prefix_miss_once() {
     // deferred (returned with the overflow) while the leader streams,
     // then splices the published prefix on retry
     let sched = Scheduler::new(4, Duration::from_millis(1));
-    sched.submit(pending(1, &p1, "i-glass", 8, 0));
-    sched.submit(pending(2, &p2, "i-glass", 8, 0));
+    let _ = sched.submit(pending(1, &p1, "i-glass", 8, 0));
+    let _ = sched.submit(pending(2, &p2, "i-glass", 8, 0));
     sched.close();
     let mut done: Vec<(u64, Response)> = Vec::new();
-    batcher.run(&sched, &mut |c, r| done.push((c, r)));
+    batcher.run(&sched, &mut respond(&mut done));
     assert_eq!(done.len(), 2);
     let by_conn = |c: u64| {
         &done.iter().find(|(cc, _)| *cc == c).unwrap().1
@@ -643,11 +1323,11 @@ fn same_prefix_burst_pays_the_prefix_miss_once() {
     // warm re-burst: with every prefix cached, NOBODY defers or pays —
     // both requests splice (the deferral check peeks the cache first)
     let sched = Scheduler::new(4, Duration::from_millis(1));
-    sched.submit(pending(3, &p1, "i-glass", 8, 0));
-    sched.submit(pending(4, &p2, "i-glass", 8, 0));
+    let _ = sched.submit(pending(3, &p1, "i-glass", 8, 0));
+    let _ = sched.submit(pending(4, &p2, "i-glass", 8, 0));
     sched.close();
     let mut done: Vec<(u64, Response)> = Vec::new();
-    batcher.run(&sched, &mut |c, r| done.push((c, r)));
+    batcher.run(&sched, &mut respond(&mut done));
     assert_eq!(done.len(), 2);
     for (c, r) in &done {
         assert!(r.error.is_none(), "conn {c}: {:?}", r.error);
@@ -662,7 +1342,7 @@ fn same_prefix_burst_pays_the_prefix_miss_once() {
 #[test]
 fn stats_command_reports_server_cache_counters() {
     let server = start_server();
-    let mut client = Client::connect(&server.addr).unwrap();
+    let mut client = connect(&server.addr);
     // cold stats: all zero
     let s0 = client.stats().unwrap();
     assert_eq!(s0.hits + s0.misses + s0.inserts, 0);
@@ -679,6 +1359,60 @@ fn stats_command_reports_server_cache_counters() {
     assert!(s.inserts >= 1, "miss publishes: {s:?}");
     assert!(s.bytes_resident > 0, "entries are byte-accounted: {s:?}");
     assert!(s.entries >= 1);
+    server.stop();
+}
+
+#[test]
+fn stats_occupancy_is_consistent_under_concurrent_load() {
+    // the stats-race satellite over the wire: hammer the stats command
+    // while a burst is admitted/retired and assert every per-shard row
+    // stays mutually consistent (occupancy never exceeds the width)
+    let server = start_server_sharded(2);
+    let addr = server.addr.clone();
+    let burst = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        let reqs: Vec<Request> = (0..24)
+            .map(|i| {
+                let mut r = request(
+                    &format!("stress prompt number {i} says"),
+                    "i-glass",
+                    0.5,
+                );
+                r.id = i as u64 + 1;
+                r.max_tokens = 12;
+                r
+            })
+            .collect();
+        let out = c.call_many(reqs).unwrap();
+        assert!(out.iter().all(|(r, _)| r.error.is_none()));
+    });
+    let mut stats_client = connect(&server.addr);
+    let mut polls = 0usize;
+    while !burst.is_finished() || polls < 20 {
+        let (_, shards) = stats_client.stats_full().unwrap();
+        for sh in &shards {
+            assert!(
+                sh.slots_active <= sh.batch_width,
+                "slots_active {} > batch width {} on shard {}",
+                sh.slots_active,
+                sh.batch_width,
+                sh.shard
+            );
+            assert!(
+                sh.slots_active + sh.slots_prefilling <= sh.batch_width,
+                "occupancy pair inconsistent on shard {}: {} + {} > {}",
+                sh.shard,
+                sh.slots_active,
+                sh.slots_prefilling,
+                sh.batch_width
+            );
+        }
+        polls += 1;
+        if polls > 3000 {
+            break;
+        }
+    }
+    burst.join().unwrap();
     server.stop();
 }
 
@@ -741,7 +1475,7 @@ fn four_shards_serve_bit_identical_outputs_to_one_shard() {
     // a real sharding bug, not noise.
     let digest = |shards: usize| -> Digest {
         let server = start_server_sharded(shards);
-        let mut client = Client::connect(&server.addr).unwrap();
+        let mut client = connect(&server.addr);
         let out = client.call_many(fixed_workload()).unwrap();
         server.stop();
         out.into_iter()
@@ -783,9 +1517,8 @@ fn same_prefix_burst_across_connections_pays_one_miss_on_shards() {
         format!("{}gamma asks about the cat", &p2[..cut])
     };
     let server = start_server_sharded(4);
-    let mut clients: Vec<Client> = (0..3)
-        .map(|_| Client::connect(&server.addr).unwrap())
-        .collect();
+    let mut clients: Vec<Client> =
+        (0..3).map(|_| connect(&server.addr)).collect();
     // all three submitted before any response is read, from three
     // distinct connections (order of arrival at the shard is whatever
     // the kernel makes of it — the invariant must hold regardless)
@@ -834,11 +1567,11 @@ fn repeat_prompt_across_connections_hits_the_same_shard() {
     // into an exact full-prompt hit with zero prefill
     let server = start_server_sharded(4);
     let prompt = "every morning the wolf";
-    let mut a = Client::connect(&server.addr).unwrap();
+    let mut a = connect(&server.addr);
     let first = a.call(request(prompt, "i-glass", 0.5)).unwrap();
     assert!(first.error.is_none(), "{:?}", first.error);
     assert_eq!(first.cached_prompt_tokens, 0, "first serve is cold");
-    let mut b = Client::connect(&server.addr).unwrap();
+    let mut b = connect(&server.addr);
     let second = b.call(request(prompt, "i-glass", 0.5)).unwrap();
     assert!(second.error.is_none(), "{:?}", second.error);
     assert_eq!(
@@ -853,7 +1586,7 @@ fn repeat_prompt_across_connections_hits_the_same_shard() {
 #[test]
 fn stats_reports_per_shard_queue_depth_and_occupancy() {
     let server = start_server_sharded(4);
-    let mut client = Client::connect(&server.addr).unwrap();
+    let mut client = connect(&server.addr);
     // cold: four shards, correct widths, nothing queued or occupied
     let (agg0, shards0) = client.stats_full().unwrap();
     assert_eq!(shards0.len(), 4);
@@ -921,11 +1654,11 @@ fn burst_wider_than_free_slots_is_requeued_not_failed() {
     // more requests than there are decode slots
     let sched = Scheduler::new(10, Duration::from_millis(1));
     for i in 0..10 {
-        sched.submit(pending(i, "the blue owl is", "dense", 3, 0));
+        let _ = sched.submit(pending(i, "the blue owl is", "dense", 3, 0));
     }
     sched.close();
     let mut done: Vec<(u64, Response)> = Vec::new();
-    batcher.run(&sched, &mut |c, r| done.push((c, r)));
+    batcher.run(&sched, &mut respond(&mut done));
     assert_eq!(done.len(), 10, "every burst request must be served");
     for (c, r) in &done {
         assert!(r.error.is_none(), "conn {c}: {:?}", r.error);
