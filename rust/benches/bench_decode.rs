@@ -22,7 +22,11 @@
 //! mixed long+short workload's stall-removal evidence (one
 //! deterministic pass's prefill chunks + decode steps overlapped with
 //! prefill streaming), the shared-system-prompt workload's prefill
-//! tokens saved by the prefix cache, the sharded-serving rows (the
+//! tokens saved by the prefix cache, the radix lookup-scaling row
+//! (`cache_lookup_us_p95` with hundreds of resident entries — a
+//! ceiling breach means lookups regressed toward entry-count scans),
+//! the warm-restart row (`warm_start_hits` served from a disk
+//! snapshot after a simulated restart), the sharded-serving rows (the
 //! continuous workload split across per-shard batcher threads by the
 //! server's prefix-affinity router — the multi-shard scaling proof on
 //! the sim backend), and the protocol-v2 streaming row: the same
@@ -34,8 +38,11 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use glass::engine::prefix_cache::CacheMode;
-use glass::engine::Engine;
+use glass::engine::prefix_cache::{
+    CacheMode, CacheTelemetry, PrefixCache,
+};
+use glass::engine::prefix_store;
+use glass::engine::{Engine, KvState};
 use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
 use glass::server::batcher::{Batcher, BatcherOptions};
 use glass::server::client::Client;
@@ -175,6 +182,7 @@ fn main() {
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
+                resume_from: 0,
             });
         }
         sched.close();
@@ -278,6 +286,7 @@ fn main() {
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
+                resume_from: 0,
             });
         }
         sched.close();
@@ -352,6 +361,7 @@ fn main() {
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
+                resume_from: 0,
             });
         }
         sched.close();
@@ -422,6 +432,106 @@ fn main() {
         );
     }
 
+    // ------------------ radix lookup scaling (hundreds of residents)
+    // the radix index measured directly: with hundreds of entries
+    // resident, one lookup walks the trie edge-by-edge in O(prefix
+    // length) — never a scan over the entry table. Per-call p95 lands
+    // in the CI gate as `cache_lookup_us_p95`; a ceiling breach means
+    // lookups regressed toward entry-count scans.
+    let resident = 256usize;
+    let lookup_probes = if smoke { 512 } else { 4096 };
+    let mut radix = PrefixCache::new(
+        spec.clone(),
+        usize::MAX,
+        Arc::new(CacheTelemetry::default()),
+    );
+    let tail = spec.max_seq.min(10).saturating_sub(3);
+    let lookup_keys: Vec<Vec<i32>> = (0..resident)
+        .map(|i| {
+            // distinct two-token branch point + shared tail: the trie
+            // holds `resident` leaves behind a fan-out near the root
+            let mut key = vec![spec.bos_id, (i % 251) as i32 + 1];
+            key.push((i / 251) as i32 + 1);
+            key.extend((0..tail).map(|j| j as i32 + 1));
+            key
+        })
+        .collect();
+    {
+        let kv_seed = KvState::zeros(&spec, 1);
+        let stats_seed = ImportanceMap::from_layers(vec![
+            vec![0.0; spec.ffn_m];
+            spec.n_layers
+        ])
+        .expect("stats seed");
+        let logits_seed = vec![0.0f32; spec.vocab];
+        for key in &lookup_keys {
+            radix.insert(
+                key, &kv_seed, 0, &stats_seed, 1.0, &logits_seed,
+            );
+        }
+    }
+    assert_eq!(radix.len(), resident, "scaling rig lost entries");
+    let mut lookup_us = Vec::with_capacity(lookup_probes);
+    for p in 0..lookup_probes {
+        let key = &lookup_keys[p % resident];
+        let t0 = Instant::now();
+        let hit = radix.lookup(key);
+        let dt = t0.elapsed();
+        let hit = hit.expect("probe must exact-hit");
+        radix.release(hit.id);
+        lookup_us.push(dt.as_secs_f64() * 1e6);
+    }
+    let cache_lookup_us_p95 = percentile(&lookup_us, 0.95);
+    println!(
+        "radix lookup with {resident} resident entries: p95 \
+         {cache_lookup_us_p95:.1} us per call ({lookup_probes} probes)"
+    );
+
+    // ------------------ warm restart (snapshot persistence round-trip)
+    // the persistence path measured end to end: serve the shared
+    // workload once, snapshot the hot entries to disk, then "restart" —
+    // a fresh batcher warm-starts from the snapshot and serves the same
+    // pass out of imported entries. `warm_start_hits` lands in the CI
+    // gate as a floor: losing them means restart persistence silently
+    // stopped working.
+    let mut warm_start_hits = 0u64;
+    if shared_fits {
+        let dir = std::env::temp_dir().join(format!(
+            "glass-bench-warm-{}",
+            std::process::id()
+        ));
+        let snap = prefix_store::snapshot_path(&dir, 0);
+        let mut first = Batcher::with_options(
+            engine.clone(),
+            BatcherOptions::new(4)
+                .with_snapshot_path(Some(snap.clone())),
+        )
+        .expect("batcher");
+        serve_shared(&mut first); // populate the cache, then persist
+        first.snapshot_hot();
+        let mut restarted = Batcher::with_options(
+            engine.clone(),
+            BatcherOptions::new(4).with_snapshot_path(Some(snap)),
+        )
+        .expect("batcher");
+        b.bench(
+            "warm-restart serve (snapshot-started cache)",
+            (n_reqs * max_tokens) as f64,
+            || serve_shared(&mut restarted),
+        );
+        warm_start_hits =
+            restarted.telemetry().snapshot().warm_start_hits;
+        println!(
+            "warm restart: {warm_start_hits} hits served from \
+             snapshot-imported entries"
+        );
+        assert!(
+            warm_start_hits > 0,
+            "restarted cache never hit a snapshot-imported entry"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     // ---------------------------- sharded serving (per-shard batchers)
     // the same continuous workload split across N independent shard
     // threads by the server's prefix-affinity router (route_shard).
@@ -457,6 +567,7 @@ fn main() {
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
+                resume_from: 0,
             });
         }
         for s in &scheds {
@@ -618,6 +729,10 @@ fn main() {
         "idle_conns_toks_per_s",
         Json::Num(row("v2 streaming serve").throughput()),
     );
+    doc.set(
+        "cache_lookup_us_p95",
+        Json::Num(cache_lookup_us_p95),
+    );
     doc.set("sharded_1_toks_per_s", Json::Num(sharded_1));
     doc.set("sharded_4_toks_per_s", Json::Num(sharded_4));
     doc.set(
@@ -653,6 +768,12 @@ fn main() {
         doc.set(
             "shared_prefix_tokens",
             Json::Num(prefix_tokens as f64),
+        );
+        // one restart round-trip's counter (see warm-restart row) —
+        // the CI gate enforces it as a floor
+        doc.set(
+            "warm_start_hits",
+            Json::Num(warm_start_hits as f64),
         );
     }
     let path = Path::new("BENCH_decode.json");

@@ -65,6 +65,11 @@ pub struct RunConfig {
     /// Outbound buffer cap per connection (`glass serve`); a consumer
     /// that falls this far behind is disconnected.
     pub conn_buffer_bytes: usize,
+    /// Directory for persistent prefix-cache snapshots (`glass serve`).
+    /// When set, `Server::stop` writes each shard's hot entries there
+    /// and the next startup warm-starts from them; unset (default)
+    /// disables persistence entirely.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -91,6 +96,7 @@ impl Default for RunConfig {
             protocol: "v2".to_string(),
             max_frame_bytes: crate::server::DEFAULT_MAX_FRAME_BYTES,
             conn_buffer_bytes: crate::server::DEFAULT_CONN_BUFFER_BYTES,
+            cache_dir: None,
         }
     }
 }
@@ -169,6 +175,9 @@ impl RunConfig {
         if let Some(v) = get("conn_buffer_bytes") {
             self.conn_buffer_bytes = v.as_int()? as usize;
         }
+        if let Some(v) = get("cache_dir") {
+            self.cache_dir = Some(PathBuf::from(v.as_str()?));
+        }
         Ok(())
     }
 
@@ -208,6 +217,9 @@ impl RunConfig {
             args.get_usize("max-frame-bytes", self.max_frame_bytes)?;
         self.conn_buffer_bytes = args
             .get_usize("conn-buffer-bytes", self.conn_buffer_bytes)?;
+        if let Some(v) = args.get("cache-dir") {
+            self.cache_dir = Some(PathBuf::from(v));
+        }
         Ok(())
     }
 }
@@ -274,26 +286,41 @@ mod tests {
             c.max_frame_bytes,
             crate::server::DEFAULT_MAX_FRAME_BYTES
         );
+        assert_eq!(c.cache_dir, None, "persistence is opt-in");
         let mut c = RunConfig::default();
         c.apply_toml(
             "protocol = \"v1\"\nmax_frame_bytes = 4096\n\
-             conn_buffer_bytes = 65536\n",
+             conn_buffer_bytes = 65536\n\
+             cache_dir = \"/var/glass/cache\"\n",
         )
         .unwrap();
         assert_eq!(c.protocol, "v1");
         assert_eq!(c.max_frame_bytes, 4096);
         assert_eq!(c.conn_buffer_bytes, 65536);
+        assert_eq!(
+            c.cache_dir,
+            Some(PathBuf::from("/var/glass/cache"))
+        );
         let args = Args::parse(
-            &["x", "--protocol", "v2", "--max-frame-bytes", "8192"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect::<Vec<_>>(),
+            &[
+                "x",
+                "--protocol",
+                "v2",
+                "--max-frame-bytes",
+                "8192",
+                "--cache-dir",
+                "/tmp/warm",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>(),
             &[],
         )
         .unwrap();
         c.apply_args(&args).unwrap();
         assert_eq!(c.protocol, "v2", "CLI overrides the config file");
         assert_eq!(c.max_frame_bytes, 8192);
+        assert_eq!(c.cache_dir, Some(PathBuf::from("/tmp/warm")));
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 pub mod chunked;
 pub mod prefix_cache;
+pub mod prefix_store;
 pub mod session;
 
 use std::path::Path;

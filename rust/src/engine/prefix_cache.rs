@@ -1,5 +1,5 @@
 //! Shared-prefix cache: KV rows + merged GLASS statistics per prompt
-//! prefix.
+//! prefix, indexed by an edge-compressed token-id radix tree.
 //!
 //! A server handling traffic that shares system prompts / few-shot
 //! headers recomputes the same prefill work — both the KV rows and the
@@ -21,14 +21,36 @@
 //!  * the last-position logits after the prefix (so an exact full-prompt
 //!    hit needs no engine call at all).
 //!
-//! Lookup is **longest-prefix match** over token IDs (a flat scan today
-//! — entries are byte-budgeted, so the set stays small; a radix tree is
-//! the scale-up path, see ROADMAP). Entries are **ref-counted**: a hit
-//! pins its entry until the resumed stream completes, and eviction
-//! never frees a pinned entry. Eviction is LRU under a configurable
-//! byte budget, with bytes accounted through the [`memsim`] helpers so
-//! the cache and the edge-memory cost model agree on what "resident"
-//! means.
+//! # Radix index
+//!
+//! Lookup is **longest-prefix match** over token IDs through an
+//! edge-compressed radix tree (an arena of nodes; each edge carries a
+//! token run, each node may terminate one cached entry). `lookup`,
+//! [`PrefixCache::peek_longest`], [`PrefixCache::contains`], and the
+//! duplicate check inside [`PrefixCache::insert`] all walk the tree
+//! from the root, so their cost scales with the **query prefix
+//! length**, not the resident entry count — the flat scan this replaces
+//! went O(entries · prefix) once the byte budget allowed hundreds of
+//! prefixes. Edges are split on partial divergence at insert and
+//! re-merged when removal leaves a pass-through node, so the tree stays
+//! compressed under any insert/evict order. Entry payloads themselves
+//! live in a stable slot-map (`entries`) so the pin/release ids handed
+//! to the batcher survive unrelated evictions, exactly as before.
+//!
+//! Entries are **ref-counted**: a hit pins its entry until the resumed
+//! stream completes, and eviction never frees a pinned entry. Eviction
+//! is LRU under a configurable byte budget, with bytes accounted
+//! through the [`memsim`] helpers so the cache and the edge-memory cost
+//! model agree on what "resident" means.
+//!
+//! # Warm-start
+//!
+//! A cache can be rebuilt from a persisted snapshot at startup
+//! ([`PrefixCache::import_seed`]; see [`super::prefix_store`] for the
+//! on-disk format): imported entries are flagged *warm* and every later
+//! hit on one bumps the `warm_start_hits` telemetry counter, so a
+//! restart's savings are observable end to end. [`PrefixCache::
+//! export_hot`] walks the resident set for the snapshot writer.
 //!
 //! [`ChunkedPrefill`]: super::chunked::ChunkedPrefill
 //! [`memsim`]: crate::memsim
@@ -102,6 +124,9 @@ pub struct CacheTelemetry {
     pub evictions: AtomicU64,
     pub bytes_resident: AtomicU64,
     pub entries: AtomicU64,
+    /// Hits whose entry was imported from a persisted snapshot at
+    /// startup (a subset of `hits`): the restart's observable savings.
+    pub warm_start_hits: AtomicU64,
 }
 
 /// A plain-data copy of [`CacheTelemetry`] at one instant.
@@ -113,6 +138,7 @@ pub struct CacheStatsSnapshot {
     pub evictions: u64,
     pub bytes_resident: u64,
     pub entries: u64,
+    pub warm_start_hits: u64,
 }
 
 impl CacheStatsSnapshot {
@@ -126,6 +152,8 @@ impl CacheStatsSnapshot {
             evictions: self.evictions + other.evictions,
             bytes_resident: self.bytes_resident + other.bytes_resident,
             entries: self.entries + other.entries,
+            warm_start_hits: self.warm_start_hits
+                + other.warm_start_hits,
         }
     }
 }
@@ -139,6 +167,9 @@ impl CacheTelemetry {
             evictions: self.evictions.load(Ordering::Relaxed),
             bytes_resident: self.bytes_resident.load(Ordering::Relaxed),
             entries: self.entries.load(Ordering::Relaxed),
+            warm_start_hits: self
+                .warm_start_hits
+                .load(Ordering::Relaxed),
         }
     }
 }
@@ -182,7 +213,28 @@ struct Entry {
     bytes: usize,
     refs: usize,
     tick: u64,
+    /// Radix node whose path spells this entry's token key.
+    node: usize,
+    /// Imported from a persisted snapshot (warm-start accounting).
+    warm: bool,
 }
+
+/// One radix-tree node. The path of edge labels from the root to a node
+/// spells a token sequence; a node with `entry = Some(slot)` terminates
+/// the cached prefix stored in `entries[slot]`.
+struct Node {
+    /// Edge label from the parent (empty only at the root). Labels of
+    /// sibling edges start with distinct tokens.
+    label: Vec<i32>,
+    /// Child node indices in the arena.
+    children: Vec<usize>,
+    /// Slot-map id of the entry terminating exactly here.
+    entry: Option<usize>,
+    parent: usize,
+}
+
+/// Arena index of the radix root (empty label, never freed).
+const ROOT: usize = 0;
 
 /// The cache itself (owned by one batcher; not internally synchronized —
 /// the engine loop is single-threaded, only the telemetry is shared).
@@ -191,6 +243,9 @@ pub struct PrefixCache {
     budget_bytes: usize,
     /// Slot-map of entries: ids are stable across evictions.
     entries: Vec<Option<Entry>>,
+    /// Radix-node arena; freed nodes are recycled through `free_nodes`.
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
     bytes_resident: usize,
     tick: u64,
     telemetry: Arc<CacheTelemetry>,
@@ -206,6 +261,13 @@ impl PrefixCache {
             spec,
             budget_bytes,
             entries: Vec::new(),
+            nodes: vec![Node {
+                label: Vec::new(),
+                children: Vec::new(),
+                entry: None,
+                parent: ROOT,
+            }],
+            free_nodes: Vec::new(),
             bytes_resident: 0,
             tick: 0,
             telemetry,
@@ -229,13 +291,182 @@ impl PrefixCache {
         self.entries.iter().all(|e| e.is_none())
     }
 
+    // ------------------------------------------------- radix primitives
+
+    fn alloc_node(&mut self, label: Vec<i32>, parent: usize) -> usize {
+        let node = Node {
+            label,
+            children: Vec::new(),
+            entry: None,
+            parent,
+        };
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// The child of `node` whose edge label starts with `t`, if any
+    /// (sibling labels start with distinct tokens, so it is unique).
+    fn child_starting_with(&self, node: usize, t: i32) -> Option<usize> {
+        self.nodes[node]
+            .children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].label[0] == t)
+    }
+
+    /// Walk `tokens` from the root, returning the slot of the LONGEST
+    /// cached prefix seen along the way (an entry whose full key was
+    /// matched). Cost: O(tokens.len()), independent of entry count.
+    fn walk_longest(&self, tokens: &[i32]) -> Option<(usize, usize)> {
+        let mut node = ROOT;
+        let mut depth = 0usize;
+        let mut best: Option<(usize, usize)> = None;
+        while depth < tokens.len() {
+            let Some(child) =
+                self.child_starting_with(node, tokens[depth])
+            else {
+                break;
+            };
+            let label = &self.nodes[child].label;
+            let rem = &tokens[depth..];
+            // the whole edge label must match to reach the child node;
+            // a divergence or query end mid-edge means every key at or
+            // below the child is longer than the matched span
+            if rem.len() < label.len() || rem[..label.len()] != label[..]
+            {
+                break;
+            }
+            depth += label.len();
+            node = child;
+            if let Some(slot) = self.nodes[node].entry {
+                best = Some((slot, depth));
+            }
+        }
+        best
+    }
+
+    /// Walk to the node terminating exactly `tokens`, if cached.
+    fn walk_exact(&self, tokens: &[i32]) -> Option<usize> {
+        match self.walk_longest(tokens) {
+            Some((slot, len)) if len == tokens.len() => Some(slot),
+            _ => None,
+        }
+    }
+
+    /// Insert `tokens` as a key terminating at a (possibly new) node,
+    /// splitting an edge on partial divergence. Returns the node index;
+    /// the caller stores the entry slot into it.
+    fn index_insert(&mut self, tokens: &[i32]) -> usize {
+        let mut node = ROOT;
+        let mut depth = 0usize;
+        loop {
+            if depth == tokens.len() {
+                return node;
+            }
+            let Some(child) =
+                self.child_starting_with(node, tokens[depth])
+            else {
+                let leaf =
+                    self.alloc_node(tokens[depth..].to_vec(), node);
+                self.nodes[node].children.push(leaf);
+                return leaf;
+            };
+            let rem = &tokens[depth..];
+            let common = self.nodes[child]
+                .label
+                .iter()
+                .zip(rem.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            if common == self.nodes[child].label.len() {
+                depth += common;
+                node = child;
+                continue;
+            }
+            // split the child edge at the divergence point: a new mid
+            // node takes label[..common], the child keeps the rest
+            let rest = self.nodes[child].label.split_off(common);
+            let mid_label =
+                std::mem::replace(&mut self.nodes[child].label, rest);
+            let mid = self.alloc_node(mid_label, node);
+            self.nodes[child].parent = mid;
+            self.nodes[mid].children.push(child);
+            let pos = self.nodes[node]
+                .children
+                .iter()
+                .position(|&c| c == child)
+                .expect("child listed under its parent");
+            self.nodes[node].children[pos] = mid;
+            depth += common;
+            if depth == tokens.len() {
+                return mid;
+            }
+            let leaf = self.alloc_node(tokens[depth..].to_vec(), mid);
+            self.nodes[mid].children.push(leaf);
+            return leaf;
+        }
+    }
+
+    /// Remove the key terminating at `node`, re-merging pass-through
+    /// nodes so the tree stays edge-compressed.
+    fn index_remove(&mut self, node: usize) {
+        self.nodes[node].entry = None;
+        let mut node = node;
+        loop {
+            if node == ROOT || self.nodes[node].entry.is_some() {
+                return;
+            }
+            match self.nodes[node].children.len() {
+                0 => {
+                    // leaf without an entry: detach and free, then the
+                    // parent may itself have become a pass-through
+                    let parent = self.nodes[node].parent;
+                    let pos = self.nodes[parent]
+                        .children
+                        .iter()
+                        .position(|&c| c == node)
+                        .expect("child listed under its parent");
+                    self.nodes[parent].children.swap_remove(pos);
+                    self.free_nodes.push(node);
+                    node = parent;
+                }
+                1 => {
+                    // pass-through: fold this node's label onto its
+                    // only child and splice the child to the parent
+                    let child = self.nodes[node].children[0];
+                    let parent = self.nodes[node].parent;
+                    let mut label = self.nodes[node].label.clone();
+                    label.append(&mut self.nodes[child].label);
+                    self.nodes[child].label = label;
+                    self.nodes[child].parent = parent;
+                    let pos = self.nodes[parent]
+                        .children
+                        .iter()
+                        .position(|&c| c == node)
+                        .expect("child listed under its parent");
+                    self.nodes[parent].children[pos] = child;
+                    self.free_nodes.push(node);
+                    return;
+                }
+                _ => return,
+            }
+        }
+    }
+
+    // ----------------------------------------------------- public API
+
     /// Is this exact prefix cached? (test/diagnostic helper; does not
     /// touch LRU order or counters)
     pub fn contains(&self, tokens: &[i32]) -> bool {
-        self.entries
-            .iter()
-            .flatten()
-            .any(|e| e.tokens == tokens)
+        self.walk_exact(tokens).is_some()
     }
 
     /// Length of the longest cached prefix of `tokens`, WITHOUT pinning,
@@ -243,46 +474,36 @@ impl PrefixCache {
     /// check peeks with this to decide whether a same-prefix admission
     /// would hit anyway (and so must not be deferred).
     pub fn peek_longest(&self, tokens: &[i32]) -> usize {
-        self.entries
-            .iter()
-            .flatten()
-            .filter(|e| tokens.starts_with(&e.tokens))
-            .map(|e| e.tokens.len())
-            .max()
-            .unwrap_or(0)
+        self.walk_longest(tokens).map_or(0, |(_, len)| len)
     }
 
     fn entry_bytes(&self, len: usize) -> usize {
         let s = &self.spec;
-        memsim::kv_prefix_bytes(s.n_layers, s.n_heads, s.head_dim, len)
-            + memsim::stats_map_bytes(s.n_layers, s.ffn_m)
-            + memsim::logits_bytes(s.vocab)
-            + memsim::token_ids_bytes(len)
+        memsim::prefix_entry_bytes(
+            s.n_layers, s.n_heads, s.head_dim, s.ffn_m, s.vocab, len,
+        )
     }
 
     /// Longest cached prefix of `tokens` (a cache entry whose token ids
     /// are a prefix of the query — possibly all of it). On a hit the
     /// entry is pinned (ref-counted) and its LRU tick bumped; the caller
     /// must [`PrefixCache::release`] the returned id. Counts one hit or
-    /// one miss.
+    /// one miss (plus one warm-start hit when the entry came from a
+    /// persisted snapshot).
     pub fn lookup(&mut self, tokens: &[i32]) -> Option<PrefixHit> {
-        let mut best: Option<usize> = None;
-        let mut best_len = 0usize;
-        for (id, e) in self.entries.iter().enumerate() {
-            let Some(e) = e else { continue };
-            let longer = best.is_none() || e.tokens.len() > best_len;
-            if longer && tokens.starts_with(&e.tokens) {
-                best = Some(id);
-                best_len = e.tokens.len();
-            }
-        }
-        match best {
-            Some(id) => {
+        match self.walk_longest(tokens) {
+            Some((id, _)) => {
                 self.tick += 1;
+                let tick = self.tick;
                 let e = self.entries[id].as_mut().unwrap();
-                e.tick = self.tick;
+                e.tick = tick;
                 e.refs += 1;
                 self.telemetry.hits.fetch_add(1, Ordering::Relaxed);
+                if e.warm {
+                    self.telemetry
+                        .warm_start_hits
+                        .fetch_add(1, Ordering::Relaxed);
+                }
                 Some(PrefixHit {
                     id,
                     seed: PrefixSeed {
@@ -331,11 +552,10 @@ impl PrefixCache {
         self.tick += 1;
         // duplicate: refresh recency, keep the existing entry (its
         // contents are a pure function of the prefix, so equal anyway)
-        for e in self.entries.iter_mut().flatten() {
-            if e.tokens == tokens {
-                e.tick = self.tick;
-                return 0;
-            }
+        if let Some(slot_id) = self.walk_exact(tokens) {
+            let tick = self.tick;
+            self.entries[slot_id].as_mut().unwrap().tick = tick;
+            return 0;
         }
         let bytes = self.entry_bytes(tokens.len());
         if bytes > self.budget_bytes {
@@ -348,25 +568,45 @@ impl PrefixCache {
             return evicted;
         }
         let (k_rows, v_rows) = kv.extract_prefix_rows(slot, tokens.len());
-        let entry = Entry {
-            tokens: tokens.to_vec(),
-            k_rows,
-            v_rows,
-            stats: stats.clone(),
-            weight,
-            logits: logits.to_vec(),
-            bytes,
-            refs: 0,
-            tick: self.tick,
-        };
-        self.bytes_resident += bytes;
-        match self.entries.iter().position(|e| e.is_none()) {
-            Some(free) => self.entries[free] = Some(entry),
-            None => self.entries.push(Some(entry)),
-        }
-        self.telemetry.inserts.fetch_add(1, Ordering::Relaxed);
-        self.publish_residency();
+        self.store_entry(
+            Entry {
+                tokens: tokens.to_vec(),
+                k_rows,
+                v_rows,
+                stats: stats.clone(),
+                weight,
+                logits: logits.to_vec(),
+                bytes,
+                refs: 0,
+                tick: self.tick,
+                node: ROOT, // patched by store_entry
+                warm: false,
+            },
+            true,
+        );
         evicted
+    }
+
+    /// Place a fully-built entry into the slot-map and the radix index.
+    fn store_entry(&mut self, mut entry: Entry, count_insert: bool) {
+        let node = self.index_insert(&entry.tokens);
+        entry.node = node;
+        self.bytes_resident += entry.bytes;
+        let slot = match self.entries.iter().position(|e| e.is_none()) {
+            Some(free) => {
+                self.entries[free] = Some(entry);
+                free
+            }
+            None => {
+                self.entries.push(Some(entry));
+                self.entries.len() - 1
+            }
+        };
+        self.nodes[node].entry = Some(slot);
+        if count_insert {
+            self.telemetry.inserts.fetch_add(1, Ordering::Relaxed);
+        }
+        self.publish_residency();
     }
 
     /// Evict least-recently-used unpinned entries until `incoming` more
@@ -387,6 +627,7 @@ impl PrefixCache {
                 .map(|(_, i)| i);
             let Some(i) = victim else { break };
             let e = self.entries[i].take().unwrap();
+            self.index_remove(e.node);
             self.bytes_resident -= e.bytes;
             evicted += 1;
         }
@@ -406,6 +647,101 @@ impl PrefixCache {
         self.telemetry
             .entries
             .store(self.len() as u64, Ordering::Relaxed);
+    }
+
+    // --------------------------------------------- snapshot import/export
+
+    /// Clone every resident entry as `(token key, seed)` pairs, most
+    /// recently used first — the snapshot writer's view. Pinned entries
+    /// are included (their contents are valid regardless of pin state).
+    pub fn export_hot(&self) -> Vec<(Vec<i32>, PrefixSeed)> {
+        let mut live: Vec<&Entry> =
+            self.entries.iter().flatten().collect();
+        live.sort_by(|a, b| b.tick.cmp(&a.tick));
+        live.iter()
+            .map(|e| {
+                (
+                    e.tokens.clone(),
+                    PrefixSeed {
+                        len: e.tokens.len(),
+                        k_rows: e.k_rows.clone(),
+                        v_rows: e.v_rows.clone(),
+                        stats: e.stats.clone(),
+                        weight: e.weight,
+                        logits: e.logits.clone(),
+                    },
+                )
+            })
+            .collect()
+    }
+
+    /// Import one entry from a persisted snapshot (warm-start): the
+    /// entry is validated against this cache's model spec, flagged warm
+    /// for `warm_start_hits` accounting, and NOT counted as an insert
+    /// (it is a restore, so bench floors on organic inserts stay
+    /// meaningful). Returns false (without error) when the entry is a
+    /// duplicate or would exceed the remaining budget — warm load never
+    /// evicts what a newer import already claimed. A malformed seed is
+    /// an error so the store can skip it loudly.
+    pub fn import_seed(
+        &mut self,
+        tokens: &[i32],
+        seed: PrefixSeed,
+    ) -> Result<bool> {
+        if tokens.is_empty() || seed.len != tokens.len() {
+            bail!(
+                "snapshot entry key of {} tokens does not match seed \
+                 length {}",
+                tokens.len(),
+                seed.len
+            );
+        }
+        let s = &self.spec;
+        if seed.logits.len() != s.vocab {
+            bail!(
+                "snapshot logits of {} values do not match vocab {}",
+                seed.logits.len(),
+                s.vocab
+            );
+        }
+        if seed.stats.n_layers() != s.n_layers || seed.stats.m() != s.ffn_m
+        {
+            bail!("snapshot statistics shape mismatch");
+        }
+        let row_n = s.n_layers * s.n_heads * seed.len * s.head_dim;
+        if seed.k_rows.len() != row_n || seed.v_rows.len() != row_n {
+            bail!("snapshot KV rows shape mismatch");
+        }
+        if self.walk_exact(tokens).is_some() {
+            return Ok(false);
+        }
+        let bytes = self.entry_bytes(tokens.len());
+        if self.bytes_resident + bytes > self.budget_bytes {
+            return Ok(false);
+        }
+        self.tick += 1;
+        self.store_entry(
+            Entry {
+                tokens: tokens.to_vec(),
+                k_rows: seed.k_rows,
+                v_rows: seed.v_rows,
+                stats: seed.stats,
+                weight: seed.weight,
+                logits: seed.logits,
+                bytes,
+                refs: 0,
+                tick: self.tick,
+                node: ROOT, // patched by store_entry
+                warm: true,
+            },
+            false,
+        );
+        Ok(true)
+    }
+
+    /// Resident entries imported from a snapshot (test/diagnostics).
+    pub fn warm_len(&self) -> usize {
+        self.entries.iter().flatten().filter(|e| e.warm).count()
     }
 }
 
@@ -445,6 +781,9 @@ pub fn seed_to_prefill_result(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Prng;
+    use crate::util::quickcheck::{forall, UsizeGen};
 
     fn tiny_spec() -> ModelSpec {
         ModelSpec {
@@ -544,6 +883,7 @@ mod tests {
         assert_eq!(snap.misses, 1);
         assert_eq!(snap.inserts, 3);
         assert_eq!(snap.entries, 3);
+        assert_eq!(snap.warm_start_hits, 0, "nothing was imported");
     }
 
     #[test]
@@ -683,5 +1023,331 @@ mod tests {
         let mut bad = hit.seed.clone();
         bad.logits.pop();
         assert!(seed_to_prefill_result(&spec, &bad).is_err());
+    }
+
+    // --------------------------------------------------- radix structure
+
+    #[test]
+    fn edge_split_and_mid_edge_divergence() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        // one long key, then a key diverging mid-edge forces a split
+        c.insert(&[256, 97, 98, 99, 100], &kv, 0, &stats, 5.0, &logits);
+        c.insert(&[256, 97, 98, 120], &kv, 0, &stats, 4.0, &logits);
+        // a query that ends mid-edge (inside the [99, 100] run) must
+        // miss: the only keys there are longer than the query
+        assert!(c.lookup(&[256, 97, 98, 99]).is_none());
+        assert_eq!(c.peek_longest(&[256, 97, 98, 99]), 0);
+        // full keys still resolve on both sides of the split
+        let hit = c.lookup(&[256, 97, 98, 99, 100, 101]).unwrap();
+        assert_eq!(hit.seed.len, 5);
+        c.release(hit.id);
+        let hit = c.lookup(&[256, 97, 98, 120]).unwrap();
+        assert_eq!(hit.seed.len, 4);
+        c.release(hit.id);
+        // a key terminating exactly at the split point is a new entry
+        c.insert(&[256, 97, 98], &kv, 0, &stats, 3.0, &logits);
+        let hit = c.lookup(&[256, 97, 98, 99]).unwrap();
+        assert_eq!(hit.seed.len, 3, "split-point entry now matches");
+        c.release(hit.id);
+    }
+
+    #[test]
+    fn eviction_remerges_pass_through_nodes() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        c.insert(&[256, 97, 98, 99], &kv, 0, &stats, 4.0, &logits);
+        c.insert(&[256, 97, 120], &kv, 0, &stats, 3.0, &logits);
+        let nodes_split = c.nodes.len() - c.free_nodes.len();
+        // evict everything by shrinking the budget to zero
+        c.budget_bytes = 0;
+        c.evict_to_fit(0);
+        assert!(c.is_empty());
+        assert_eq!(c.bytes_resident(), 0);
+        // the tree collapsed back to just the root
+        assert_eq!(c.nodes.len() - c.free_nodes.len(), 1);
+        assert!(nodes_split > 1, "split produced interior nodes");
+        // and the index still works after the collapse
+        c.budget_bytes = usize::MAX;
+        c.insert(&[256, 97, 98, 99], &kv, 0, &stats, 4.0, &logits);
+        assert_eq!(c.peek_longest(&[256, 97, 98, 99, 100]), 4);
+    }
+
+    // ------------------------------------------------- snapshot import
+
+    #[test]
+    fn import_seed_restores_warm_entries_and_counts_hits() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 1.5);
+        c.insert(&[256, 97, 98], &kv, 0, &stats, 3.0, &logits);
+        let exported = c.export_hot();
+        assert_eq!(exported.len(), 1);
+
+        let mut warm = cache(usize::MAX);
+        let (tokens, seed) = exported.into_iter().next().unwrap();
+        assert!(warm.import_seed(&tokens, seed.clone()).unwrap());
+        assert_eq!(warm.len(), 1);
+        assert_eq!(warm.warm_len(), 1);
+        assert_eq!(
+            warm.bytes_resident(),
+            c.bytes_resident(),
+            "import accounts the same bytes as the original insert"
+        );
+        // imports are restores, not organic inserts
+        assert_eq!(warm.telemetry.snapshot().inserts, 0);
+
+        // a hit on the imported entry counts hit AND warm_start_hit,
+        // and the seed round-trips bit-identically
+        let hit = warm.lookup(&[256, 97, 98, 99]).unwrap();
+        assert_eq!(hit.seed.len, 3);
+        assert_eq!(hit.seed.k_rows, seed.k_rows);
+        assert_eq!(hit.seed.v_rows, seed.v_rows);
+        assert_eq!(hit.seed.logits, seed.logits);
+        assert_eq!(hit.seed.weight, seed.weight);
+        warm.release(hit.id);
+        let snap = warm.telemetry.snapshot();
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.warm_start_hits, 1);
+
+        // duplicates and over-budget imports are refused without error
+        assert!(!warm
+            .import_seed(&[256, 97, 98], seed.clone())
+            .unwrap());
+        let mut tiny = cache(1);
+        assert!(!tiny.import_seed(&[256, 97, 98], seed).unwrap());
+        assert!(tiny.is_empty());
+    }
+
+    #[test]
+    fn import_seed_rejects_malformed_snapshots() {
+        let spec = tiny_spec();
+        let mut c = cache(usize::MAX);
+        let (kv, stats, logits) = seed_parts(&spec, 1.0);
+        c.insert(&[256, 97], &kv, 0, &stats, 2.0, &logits);
+        let (tokens, seed) = c.export_hot().into_iter().next().unwrap();
+
+        let mut w = cache(usize::MAX);
+        // key/len mismatch
+        let mut bad = seed.clone();
+        bad.len += 1;
+        assert!(w.import_seed(&tokens, bad).is_err());
+        // truncated KV rows
+        let mut bad = seed.clone();
+        bad.k_rows.pop();
+        assert!(w.import_seed(&tokens, bad).is_err());
+        // wrong vocab
+        let mut bad = seed.clone();
+        bad.logits.pop();
+        assert!(w.import_seed(&tokens, bad).is_err());
+        // empty key
+        assert!(w
+            .import_seed(&[], {
+                let mut s = seed.clone();
+                s.len = 0;
+                s
+            })
+            .is_err());
+        assert!(w.is_empty(), "no malformed entry was admitted");
+    }
+
+    // -------------------------------------- flat-scan reference model
+
+    /// The pre-radix flat-scan cache, reduced to its observable
+    /// behavior: longest-match lookup, unique ticks, LRU eviction of
+    /// unpinned entries, exact byte accounting.
+    struct FlatModel {
+        budget: usize,
+        // (tokens, bytes, refs, tick)
+        entries: Vec<(Vec<i32>, usize, usize, u64)>,
+        bytes: usize,
+        tick: u64,
+    }
+
+    impl FlatModel {
+        fn longest(&self, q: &[i32]) -> Option<usize> {
+            let mut best: Option<usize> = None;
+            for (i, (t, ..)) in self.entries.iter().enumerate() {
+                let longer = best
+                    .map_or(true, |b| t.len() > self.entries[b].0.len());
+                if longer && q.starts_with(t) {
+                    best = Some(i);
+                }
+            }
+            best
+        }
+
+        fn lookup(&mut self, q: &[i32]) -> Option<usize> {
+            let best = self.longest(q)?;
+            self.tick += 1;
+            self.entries[best].3 = self.tick;
+            self.entries[best].2 += 1;
+            Some(best)
+        }
+
+        fn insert(&mut self, t: &[i32], bytes: usize) -> usize {
+            self.tick += 1;
+            if let Some(e) =
+                self.entries.iter_mut().find(|(k, ..)| k == t)
+            {
+                e.3 = self.tick;
+                return 0;
+            }
+            if bytes > self.budget {
+                return 0;
+            }
+            let mut evicted = 0;
+            while self.bytes + bytes > self.budget {
+                let victim = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (.., refs, _))| *refs == 0)
+                    .min_by_key(|(_, (.., tick))| *tick)
+                    .map(|(i, _)| i);
+                let Some(i) = victim else { break };
+                self.bytes -= self.entries[i].1;
+                self.entries.remove(i);
+                evicted += 1;
+            }
+            if self.bytes + bytes > self.budget {
+                return evicted;
+            }
+            self.bytes += bytes;
+            self.entries.push((t.to_vec(), bytes, 0, self.tick));
+            evicted
+        }
+    }
+
+    /// Satellite: the radix cache is behavior-identical to the flat
+    /// scan it replaced, under randomized insert / lookup / release /
+    /// evict sequences — longest-match result, LRU order, pinned never
+    /// freed, and byte accounting exact after every step.
+    #[test]
+    fn radix_matches_flat_scan_reference_model() {
+        let spec = tiny_spec();
+        forall(
+            60,
+            0xCAFE,
+            &UsizeGen { lo: 0, hi: usize::MAX / 2 },
+            |&case_seed| {
+                let mut rng = Prng::new(case_seed as u64);
+                let mut c = cache(0);
+                c.budget_bytes = c.entry_bytes(2) * 3 + 1;
+                let mut model = FlatModel {
+                    budget: c.budget_bytes,
+                    entries: Vec::new(),
+                    bytes: 0,
+                    tick: 0,
+                };
+                let (kv, stats, logits) = seed_parts(&spec, 1.0);
+                // outstanding pins: (radix id, model tokens)
+                let mut pins: Vec<(usize, Vec<i32>)> = Vec::new();
+                let alphabet = [256i32, 97, 98, 99];
+                for step in 0..120 {
+                    let len = 1 + rng.below(5);
+                    let toks: Vec<i32> = (0..len)
+                        .map(|_| *rng.choice(&alphabet))
+                        .collect();
+                    match rng.below(4) {
+                        0 | 1 => {
+                            let got = c.insert(
+                                &toks, &kv, 0, &stats, len as f64,
+                                &logits,
+                            );
+                            let want =
+                                model.insert(&toks, c.entry_bytes(len));
+                            prop_assert!(
+                                got == want,
+                                "step {step}: insert {toks:?} evicted \
+                                 {got}, model {want}"
+                            );
+                        }
+                        2 => {
+                            let hit = c.lookup(&toks);
+                            let want = model.lookup(&toks);
+                            match (&hit, want) {
+                                (Some(h), Some(m)) => {
+                                    let mk = &model.entries[m].0;
+                                    prop_assert!(
+                                        h.seed.len == mk.len(),
+                                        "step {step}: lookup {toks:?} \
+                                         len {} vs model {}",
+                                        h.seed.len,
+                                        mk.len()
+                                    );
+                                    pins.push((h.id, mk.clone()));
+                                }
+                                (None, None) => {}
+                                _ => prop_assert!(
+                                    false,
+                                    "step {step}: lookup {toks:?} hit \
+                                     mismatch: {} vs model {}",
+                                    hit.is_some(),
+                                    want.is_some()
+                                ),
+                            }
+                        }
+                        _ => {
+                            if !pins.is_empty() {
+                                let at = rng.below(pins.len());
+                                let (id, key) = pins.swap_remove(at);
+                                c.release(id);
+                                if let Some(e) = model
+                                    .entries
+                                    .iter_mut()
+                                    .find(|(k, ..)| *k == key)
+                                {
+                                    e.2 -= 1;
+                                }
+                            }
+                        }
+                    }
+                    // exact byte accounting + identical resident set,
+                    // checked after EVERY step
+                    prop_assert!(
+                        c.bytes_resident() == model.bytes,
+                        "step {step}: bytes_resident {} vs model {}",
+                        c.bytes_resident(),
+                        model.bytes
+                    );
+                    prop_assert!(
+                        c.len() == model.entries.len(),
+                        "step {step}: {} entries vs model {}",
+                        c.len(),
+                        model.entries.len()
+                    );
+                    for (k, ..) in &model.entries {
+                        prop_assert!(
+                            c.contains(k),
+                            "step {step}: model key {k:?} missing"
+                        );
+                    }
+                    let probe_len = 1 + rng.below(6);
+                    let probe: Vec<i32> = (0..probe_len)
+                        .map(|_| *rng.choice(&alphabet))
+                        .collect();
+                    let want = model
+                        .longest(&probe)
+                        .map_or(0, |i| model.entries[i].0.len());
+                    prop_assert!(
+                        c.peek_longest(&probe) == want,
+                        "step {step}: peek {probe:?} = {} vs model {}",
+                        c.peek_longest(&probe),
+                        want
+                    );
+                }
+                // every pinned key must still be resident at the end
+                for (_, key) in &pins {
+                    prop_assert!(
+                        c.contains(key),
+                        "pinned key {key:?} was freed"
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -1,0 +1,456 @@
+//! Persistent shared-prefix cache snapshots (`--cache-dir`).
+//!
+//! The prefix cache is a pure function of token prefixes, so its hot
+//! entries survive a process restart losslessly: on graceful shutdown
+//! each shard's batcher serializes its resident entries to
+//! `<cache-dir>/prefix-shard-<i>.gpxs`, and the next startup imports
+//! them back ([`PrefixCache::import_seed`]) before serving — a restart
+//! then answers a previously-cached prompt with zero engine prefill
+//! calls, observable as `warm_start_hits` in the stats command.
+//!
+//! # Format (version 1)
+//!
+//! Little-endian throughout, no external dependencies:
+//!
+//! ```text
+//! magic      4 bytes   "GPXS"
+//! version    u32       SNAPSHOT_VERSION (1)
+//! spec       6 × u32   n_layers, n_heads, head_dim, ffn_m, vocab,
+//!                      max_seq — the model fingerprint; a snapshot
+//!                      from a different bundle is skipped whole
+//! count      u32       entry count
+//! entry*     per entry:
+//!              tokens   u32 len, then len × i32
+//!              weight   f64
+//!              k_rows   u32 len, then len × f32
+//!              v_rows   u32 len, then len × f32
+//!              stats    u32 len (= n_layers · ffn_m), then len × f32
+//!              logits   u32 len (= vocab), then len × f32
+//! checksum   u64       FNV-1a over every preceding byte
+//! ```
+//!
+//! Every length is validated while parsing and the checksum is
+//! verified before any entry is trusted, so a truncated, corrupted, or
+//! mismatched file is reported loudly ([`load`] errors, the caller
+//! logs and serves cold) — **never** a startup failure and never a
+//! partially-imported snapshot with undetected damage. [`save`] writes
+//! to a temp file and renames it into place so a crash mid-snapshot
+//! leaves the previous snapshot intact.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::prefix_cache::PrefixSeed;
+use crate::glass::ImportanceMap;
+use crate::runtime::ModelSpec;
+
+/// On-disk snapshot format version (bump on any layout change; a
+/// version mismatch skips the file, it never aborts startup).
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 4] = b"GPXS";
+
+/// FNV-1a 64-bit — the same hash family `route_shard` uses, so the
+/// whole serving stack needs exactly one hash primitive.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The snapshot file for one serving shard under `cache_dir`. Shards
+/// are stable across restarts (`route_shard` is deterministic), so a
+/// per-shard file always warms the shard that will serve its prefixes.
+pub fn snapshot_path(cache_dir: &Path, shard: usize) -> PathBuf {
+    cache_dir.join(format!("prefix-shard-{shard}.gpxs"))
+}
+
+// ------------------------------------------------------------- writing
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn i32s(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn spec_fingerprint(spec: &ModelSpec) -> [u32; 6] {
+    [
+        spec.n_layers as u32,
+        spec.n_heads as u32,
+        spec.head_dim as u32,
+        spec.ffn_m as u32,
+        spec.vocab as u32,
+        spec.max_seq as u32,
+    ]
+}
+
+/// Serialize `entries` (token key + seed pairs, as produced by
+/// `PrefixCache::export_hot`) to `path` atomically.
+pub fn save(
+    path: &Path,
+    spec: &ModelSpec,
+    entries: &[(Vec<i32>, PrefixSeed)],
+) -> Result<()> {
+    let mut w = Writer { buf: Vec::new() };
+    w.buf.extend_from_slice(MAGIC);
+    w.u32(SNAPSHOT_VERSION);
+    for v in spec_fingerprint(spec) {
+        w.u32(v);
+    }
+    w.u32(entries.len() as u32);
+    for (tokens, seed) in entries {
+        w.i32s(tokens);
+        w.f64(seed.weight);
+        w.f32s(&seed.k_rows);
+        w.f32s(&seed.v_rows);
+        let mut stats = Vec::with_capacity(
+            seed.stats.n_layers() * seed.stats.m(),
+        );
+        for layer in &seed.stats.layers {
+            stats.extend_from_slice(layer);
+        }
+        w.f32s(&stats);
+        w.f32s(&seed.logits);
+    }
+    let sum = fnv1a(&w.buf);
+    w.buf.extend_from_slice(&sum.to_le_bytes());
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &w.buf)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+// ------------------------------------------------------------- reading
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            bail!(
+                "truncated snapshot: need {n} bytes at offset {}, have {}",
+                self.at,
+                self.buf.len() - self.at
+            );
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i32s(&mut self, max: usize) -> Result<Vec<i32>> {
+        let n = self.u32()? as usize;
+        if n > max {
+            bail!("snapshot list of {n} i32s exceeds the {max} sanity cap");
+        }
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f32s(&mut self, max: usize) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if n > max {
+            bail!("snapshot list of {n} f32s exceeds the {max} sanity cap");
+        }
+        Ok(self
+            .take(n * 4)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Parse a snapshot written by [`save`]. Errors (reported with the
+/// offending detail) on ANY damage: bad magic, unknown version, spec
+/// fingerprint mismatch, truncation, oversized lengths, or checksum
+/// failure — the caller logs the error and starts cold. A missing file
+/// is `Ok(vec![])`: a first boot is not a warning.
+pub fn load(
+    path: &Path,
+    spec: &ModelSpec,
+) -> Result<Vec<(Vec<i32>, PrefixSeed)>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    if buf.len() < MAGIC.len() + 4 + 6 * 4 + 4 + 8 {
+        bail!("snapshot of {} bytes is too short to be valid", buf.len());
+    }
+    let (body, sum_bytes) = buf.split_at(buf.len() - 8);
+    let want = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    let got = fnv1a(body);
+    if got != want {
+        bail!("snapshot checksum mismatch ({got:#x} != {want:#x})");
+    }
+    let mut r = Reader { buf: body, at: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("snapshot magic mismatch (not a prefix-cache snapshot)");
+    }
+    let version = r.u32()?;
+    if version != SNAPSHOT_VERSION {
+        bail!(
+            "snapshot version {version} != supported {SNAPSHOT_VERSION}"
+        );
+    }
+    let fp = spec_fingerprint(spec);
+    let mut disk_fp = [0u32; 6];
+    for v in disk_fp.iter_mut() {
+        *v = r.u32()?;
+    }
+    if disk_fp != fp {
+        bail!(
+            "snapshot model fingerprint {disk_fp:?} does not match the \
+             loaded bundle {fp:?}"
+        );
+    }
+    let count = r.u32()? as usize;
+    // sanity caps: a prefix key fits the KV window, rows/logits are
+    // fixed functions of the spec — anything larger is corruption
+    let row_cap =
+        spec.n_layers * spec.n_heads * spec.max_seq * spec.head_dim;
+    let lm = spec.n_layers * spec.ffn_m;
+    let mut out = Vec::with_capacity(count.min(1024));
+    for i in 0..count {
+        let err = |what: &str| format!("snapshot entry {i}: {what}");
+        let tokens = r.i32s(spec.max_seq)?;
+        if tokens.is_empty() {
+            bail!("{}", err("empty token key"));
+        }
+        let weight = r.f64()?;
+        let k_rows = r.f32s(row_cap)?;
+        let v_rows = r.f32s(row_cap)?;
+        let stats_flat = r.f32s(lm)?;
+        if stats_flat.len() != lm {
+            bail!("{}", err("statistics length mismatch"));
+        }
+        let stats = ImportanceMap::from_layers(
+            stats_flat
+                .chunks_exact(spec.ffn_m)
+                .map(|c| c.to_vec())
+                .collect(),
+        )?;
+        let logits = r.f32s(spec.vocab)?;
+        let seed = PrefixSeed {
+            len: tokens.len(),
+            k_rows,
+            v_rows,
+            stats,
+            weight,
+            logits,
+        };
+        out.push((tokens, seed));
+    }
+    if r.at != body.len() {
+        bail!(
+            "snapshot has {} trailing bytes after the last entry",
+            body.len() - r.at
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::prefix_cache::{CacheTelemetry, PrefixCache};
+    use crate::engine::KvState;
+    use std::sync::Arc;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 260,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            head_dim: 4,
+            ffn_m: 8,
+            max_seq: 16,
+            prefill_len: 4,
+            score_len: 6,
+            gen_len: 2,
+            bos_id: 256,
+            pad_id: 257,
+        }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "glass-prefix-store-{}-{name}",
+            std::process::id()
+        ));
+        p
+    }
+
+    fn sample_entries(
+        spec: &ModelSpec,
+    ) -> Vec<(Vec<i32>, PrefixSeed)> {
+        let tele = Arc::new(CacheTelemetry::default());
+        let mut c = PrefixCache::new(spec.clone(), usize::MAX, tele);
+        let mut kv = KvState::zeros(spec, 1);
+        for (i, x) in kv.k.data.iter_mut().enumerate() {
+            *x = i as f32 * 0.5;
+        }
+        for (i, x) in kv.v.data.iter_mut().enumerate() {
+            *x = -(i as f32) * 0.25;
+        }
+        let stats = ImportanceMap::from_layers(vec![
+            (0..spec.ffn_m).map(|i| i as f32).collect();
+            spec.n_layers
+        ])
+        .unwrap();
+        let logits: Vec<f32> =
+            (0..spec.vocab).map(|i| i as f32 * 0.125).collect();
+        c.insert(&[256, 97, 98], &kv, 0, &stats, 3.0, &logits);
+        c.insert(&[256, 120], &kv, 0, &stats, 2.0, &logits);
+        c.export_hot()
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bit_identical() {
+        let spec = tiny_spec();
+        let entries = sample_entries(&spec);
+        let path = tmp_path("roundtrip.gpxs");
+        save(&path, &spec, &entries).unwrap();
+        let back = load(&path, &spec).unwrap();
+        assert_eq!(back.len(), entries.len());
+        for ((tk_a, a), (tk_b, b)) in entries.iter().zip(back.iter()) {
+            assert_eq!(tk_a, tk_b);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.k_rows, b.k_rows);
+            assert_eq!(a.v_rows, b.v_rows);
+            assert_eq!(a.stats.layers, b.stats.layers);
+            assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+            assert_eq!(a.logits, b.logits);
+        }
+        // and the loaded entries import cleanly as warm entries
+        let tele = Arc::new(CacheTelemetry::default());
+        let mut c = PrefixCache::new(spec.clone(), usize::MAX, tele);
+        for (tokens, seed) in back {
+            assert!(c.import_seed(&tokens, seed).unwrap());
+        }
+        assert_eq!(c.warm_len(), entries.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_cold_start() {
+        let spec = tiny_spec();
+        let loaded =
+            load(&tmp_path("never-written.gpxs"), &spec).unwrap();
+        assert!(loaded.is_empty());
+    }
+
+    #[test]
+    fn corruption_is_detected_never_imported() {
+        let spec = tiny_spec();
+        let entries = sample_entries(&spec);
+        let path = tmp_path("corrupt.gpxs");
+        save(&path, &spec, &entries).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // flip one payload byte → checksum mismatch
+        let mut bad = good.clone();
+        bad[good.len() / 2] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path, &spec).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // truncate → too short / truncated
+        std::fs::write(&path, &good[..good.len() / 3]).unwrap();
+        assert!(load(&path, &spec).is_err());
+
+        // bad magic (checksum recomputed so the magic check fires)
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let body_len = bad.len() - 8;
+        let sum = super::fnv1a(&bad[..body_len]);
+        bad[body_len..].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path, &spec).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // future version is skipped, not mis-parsed
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(
+            &(SNAPSHOT_VERSION + 1).to_le_bytes(),
+        );
+        let sum = super::fnv1a(&bad[..body_len]);
+        bad[body_len..].copy_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let err = load(&path, &spec).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spec_mismatch_is_skipped_loudly() {
+        let spec = tiny_spec();
+        let entries = sample_entries(&spec);
+        let path = tmp_path("spec-mismatch.gpxs");
+        save(&path, &spec, &entries).unwrap();
+        let mut other = tiny_spec();
+        other.vocab += 1;
+        let err = load(&path, &other).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shard_paths_are_distinct_and_stable() {
+        let dir = PathBuf::from("/tmp/cache");
+        assert_eq!(
+            snapshot_path(&dir, 0),
+            PathBuf::from("/tmp/cache/prefix-shard-0.gpxs")
+        );
+        assert_ne!(snapshot_path(&dir, 0), snapshot_path(&dir, 1));
+    }
+}

@@ -47,6 +47,9 @@ SUBCOMMANDS:
                               traffic colocates; default 1)
                               [--cache-bytes N]  (total across shards;
                               0 disables the shared-prefix cache)
+                              [--cache-dir DIR]  (persist each shard's
+                              prefix cache across restarts: snapshot on
+                              graceful stop, warm-start at startup)
                               [--max-frame-bytes N] [--conn-buffer-bytes N]
                               (per-connection read / write buffer caps;
                               both protocols are served, auto-detected
@@ -277,6 +280,7 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     opts.shards = cfg.shards.max(1);
     opts.max_frame_bytes = cfg.max_frame_bytes;
     opts.conn_buffer_bytes = cfg.conn_buffer_bytes;
+    opts.cache_dir = cfg.cache_dir.clone();
     let server = Server::start_with(engine, &cfg.bind, opts)?;
     println!(
         "serving on {} ({} shard{} x batch width {batch}, prefix \

@@ -51,6 +51,24 @@ pub fn token_ids_bytes(len: usize) -> usize {
     len * std::mem::size_of::<i32>()
 }
 
+/// Total resident bytes of one shared-prefix cache entry of `len`
+/// tokens: KV rows + merged stats + logits + token-id key. The cache's
+/// byte budget AND the snapshot store's size validation both use this,
+/// so "resident" means the same thing in memory and on disk.
+pub fn prefix_entry_bytes(
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    ffn_m: usize,
+    vocab: usize,
+    len: usize,
+) -> usize {
+    kv_prefix_bytes(n_layers, n_heads, head_dim, len)
+        + stats_map_bytes(n_layers, ffn_m)
+        + logits_bytes(vocab)
+        + token_ids_bytes(len)
+}
+
 /// A simulated model workload (footprint + per-token compute).
 #[derive(Debug, Clone)]
 pub struct SimModel {
@@ -225,6 +243,14 @@ mod tests {
         assert_eq!(
             kv_prefix_bytes(4, 2, 8, 20),
             2 * kv_prefix_bytes(4, 2, 8, 10)
+        );
+        // the entry total is exactly the sum of its four components
+        assert_eq!(
+            prefix_entry_bytes(4, 2, 8, 32, 260, 10),
+            kv_prefix_bytes(4, 2, 8, 10)
+                + stats_map_bytes(4, 32)
+                + logits_bytes(260)
+                + token_ids_bytes(10)
         );
     }
 

@@ -56,7 +56,14 @@
 //! is served bit-identically — and a non-streaming session
 //! (`Pending::stream == false`, the v1 path) skips delta/refresh
 //! emission entirely, so one-shot requests pay no per-token event
-//! cost on the decode hot path.
+//! cost on the decode hot path. A **resumed** session
+//! (`Pending::resume_from > 0`, the v2 `resume` frame) is admitted
+//! exactly like a generate — same cache lookup, same decode — but
+//! deltas the client already received are suppressed at emission, so
+//! the reconnected stream continues with the original indices and the
+//! delta concatenation stays byte-identical to the uninterrupted
+//! stream (greedy decode on deterministic executables regenerates the
+//! same tokens).
 //!
 //! # Cancellation and live knobs
 //!
@@ -77,6 +84,7 @@
 //! reactor before they reach the batcher.)
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -88,6 +96,7 @@ use crate::engine::prefix_cache::{
     seed_to_prefill_result, CacheTelemetry, PrefixCache, PrefixHit,
     DEFAULT_CACHE_BYTES,
 };
+use crate::engine::prefix_store;
 use crate::engine::session::{DecodeSession, FinishReason};
 use crate::engine::{Engine, KvState};
 use crate::glass::{
@@ -299,6 +308,9 @@ pub struct Batcher {
     chunking: bool,
     /// Shared-prefix cache (None = disabled, `cache_bytes: 0`).
     cache: Option<PrefixCache>,
+    /// Persistent snapshot file (`--cache-dir`); see
+    /// [`Batcher::snapshot_hot`].
+    snapshot_path: Option<PathBuf>,
     /// Defer a same-prefix admission while an earlier request is still
     /// streaming (and publishing) that prefix, so a burst of shared
     /// prompts pays the prefill miss once.
@@ -335,6 +347,11 @@ pub struct BatcherOptions {
     pub chunk_budget: usize,
     /// Defer same-prefix admissions behind an in-flight publisher.
     pub group_prefixes: bool,
+    /// Persistent snapshot file for this shard's prefix cache
+    /// (`--cache-dir`): warm-loaded at construction, written by
+    /// [`Batcher::snapshot_hot`] after the run loop drains. None (the
+    /// default) disables persistence.
+    pub snapshot_path: Option<PathBuf>,
 }
 
 impl BatcherOptions {
@@ -344,12 +361,22 @@ impl BatcherOptions {
             cache_bytes: DEFAULT_CACHE_BYTES,
             chunk_budget: 1,
             group_prefixes: true,
+            snapshot_path: None,
         }
     }
 
     /// Disable the shared-prefix cache (and with it, deferral).
     pub fn without_cache(mut self) -> BatcherOptions {
         self.cache_bytes = 0;
+        self
+    }
+
+    /// Persist the prefix cache to (and warm-start it from) this file.
+    pub fn with_snapshot_path(
+        mut self,
+        path: Option<PathBuf>,
+    ) -> BatcherOptions {
+        self.snapshot_path = path;
         self
     }
 }
@@ -464,7 +491,7 @@ impl Batcher {
         let mask_t =
             TensorF::ones(&[width, spec.n_layers, spec.ffn_m]);
         let telemetry = Arc::new(CacheTelemetry::default());
-        let cache = if opts.cache_bytes > 0 {
+        let mut cache = if opts.cache_bytes > 0 {
             Some(PrefixCache::new(
                 spec.clone(),
                 opts.cache_bytes,
@@ -473,6 +500,41 @@ impl Batcher {
         } else {
             None
         };
+        // warm-start: import the previous run's hot entries; a damaged
+        // or mismatched snapshot degrades to a cold cache, never a
+        // startup failure
+        if let (Some(cache), Some(path)) =
+            (cache.as_mut(), opts.snapshot_path.as_deref())
+        {
+            match prefix_store::load(path, spec) {
+                Ok(entries) => {
+                    let total = entries.len();
+                    let mut imported = 0usize;
+                    for (tokens, seed) in entries {
+                        match cache.import_seed(&tokens, seed) {
+                            Ok(true) => imported += 1,
+                            Ok(false) => {} // duplicate or over budget
+                            Err(e) => crate::warn_!(
+                                "cache snapshot {}: skipping entry \
+                                 ({e})",
+                                path.display()
+                            ),
+                        }
+                    }
+                    if total > 0 {
+                        info!(
+                            "prefix cache warm-started: {imported}/\
+                             {total} entries from {}",
+                            path.display()
+                        );
+                    }
+                }
+                Err(e) => crate::warn_!(
+                    "cache snapshot {} unusable, starting cold: {e}",
+                    path.display()
+                ),
+            }
+        }
         Ok(Batcher {
             engine,
             width,
@@ -483,6 +545,7 @@ impl Batcher {
             chunk_budget: opts.chunk_budget.max(1),
             chunking,
             cache,
+            snapshot_path: opts.snapshot_path,
             group_prefixes: opts.group_prefixes,
             telemetry,
             gauges: Arc::new(ShardGauges::default()),
@@ -517,6 +580,32 @@ impl Batcher {
     /// Is the shared-prefix cache enabled?
     pub fn cache_enabled(&self) -> bool {
         self.cache.is_some()
+    }
+
+    /// Write the cache's resident entries to this shard's snapshot
+    /// file (see `--cache-dir`). The engine thread calls this right
+    /// after [`Batcher::run`] returns — i.e. after `Server::stop` has
+    /// drained every in-flight slot, so the snapshot captures the
+    /// final hot set. A write failure is logged, never propagated:
+    /// shutdown must succeed even on a full disk.
+    pub fn snapshot_hot(&self) {
+        let (Some(cache), Some(path)) =
+            (self.cache.as_ref(), self.snapshot_path.as_deref())
+        else {
+            return;
+        };
+        let entries = cache.export_hot();
+        match prefix_store::save(path, self.engine.spec(), &entries) {
+            Ok(()) => info!(
+                "prefix cache snapshot: {} entries -> {}",
+                entries.len(),
+                path.display()
+            ),
+            Err(e) => crate::warn_!(
+                "prefix cache snapshot to {} failed: {e}",
+                path.display()
+            ),
+        }
     }
 
     pub fn free_slots(&self) -> usize {
@@ -1407,6 +1496,13 @@ impl Batcher {
 /// one-shot requests) skip this entirely: their compatibility shim
 /// would discard every delta, so building and sending one per token
 /// would be pure hot-path overhead.
+///
+/// Resumed sessions (`Pending::resume_from > 0`) re-run the
+/// deterministic decode from the start, so the emitter regenerates the
+/// deltas the client already consumed — those (index < `resume_from`)
+/// are suppressed here, AFTER the emitter's counters advance, so the
+/// surviving frames carry their original indices and the client's
+/// concatenation stays byte-identical to the uninterrupted stream.
 fn emit_delta(
     slot: &mut Slot,
     finishing: bool,
@@ -1418,6 +1514,9 @@ fn emit_delta(
     if let Some((index, text)) =
         slot.emitter.chunk(&slot.sess.generated, finishing)
     {
+        if index < slot.pending.resume_from {
+            return;
+        }
         sink(
             slot.pending.conn_id,
             Event::Delta {

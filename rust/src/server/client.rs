@@ -17,6 +17,14 @@
 //! ([`Client::recv`]/[`Client::call_many`]) discard non-terminal
 //! frames they read, so don't interleave them with a
 //! [`Client::generate_stream`] whose deltas you still want.
+//!
+//! For interruption-tolerant streaming there is
+//! [`Client::call_resuming`]: where [`Client::call`] treats every
+//! `error` frame as terminal (even `retryable: true` shutdown drains)
+//! and dies with its socket, `call_resuming` reconnects with bounded
+//! exponential backoff and continues the session via the v2 `resume`
+//! frame ([`Client::resume`]) — the assembled delta text is
+//! byte-identical to an uninterrupted stream.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -35,6 +43,9 @@ use crate::util::json::Json;
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
+    /// Connect target, kept for reconnect-and-resume
+    /// ([`Client::call_resuming`]).
+    addr: String,
     next_id: u64,
     /// Speak framed v2 instead of one-shot v1.
     v2: bool,
@@ -64,10 +75,22 @@ impl Client {
         Ok(Client {
             stream,
             reader,
+            addr: addr.to_string(),
             next_id: 1,
             v2,
             inbox: HashMap::new(),
         })
+    }
+
+    /// Drop the current socket and open a fresh connection to the same
+    /// address with the same protocol. The inbox is cleared — buffered
+    /// events belong to sessions of the dead connection.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let fresh = Client::connect_proto(&self.addr, self.v2)?;
+        self.stream = fresh.stream;
+        self.reader = fresh.reader;
+        self.inbox.clear();
+        Ok(())
     }
 
     /// Is this a v2 (streaming) connection?
@@ -114,6 +137,106 @@ impl Client {
             bail!("generate_stream requires a v2 connection");
         }
         self.send(req)
+    }
+
+    /// Resume an interrupted streaming session (v2 only, typically
+    /// after [`Client::reconnect`]): replays the original request plus
+    /// the number of delta frames already consumed. The server
+    /// re-admits the session (the prefix cache supplies the prompt
+    /// work it already did) and continues the delta stream at index
+    /// `received`, so the concatenation of pre-interruption and
+    /// post-resume deltas is byte-identical to the uninterrupted
+    /// stream. Returns the session id for [`Client::next_event`].
+    pub fn resume(
+        &mut self,
+        mut req: Request,
+        received: u64,
+    ) -> Result<u64> {
+        if !self.v2 {
+            bail!("resume requires a v2 connection");
+        }
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        writeln!(self.stream, "{}", req.to_v2_resume_frame(received))?;
+        Ok(req.id)
+    }
+
+    /// Round-trip one streaming request, surviving interruptions (v2
+    /// only). [`Client::call`] treats EVERY `error` frame as terminal
+    /// — including the `retryable: true` errors a draining server
+    /// sends for not-yet-admitted work — and an io failure kills it
+    /// outright. This collector instead reconnects with exponential
+    /// backoff (10 ms doubling, capped at 500 ms) and sends a `resume`
+    /// frame carrying the delta count already consumed, so the
+    /// assembled text stays byte-identical to an uninterrupted
+    /// stream. At most `max_reconnects` reconnect attempts; a
+    /// non-retryable error frame fails immediately. Returns the
+    /// delta-assembled text (what a streaming consumer displayed)
+    /// alongside the terminal response.
+    pub fn call_resuming(
+        &mut self,
+        mut req: Request,
+        max_reconnects: usize,
+    ) -> Result<(String, Response)> {
+        if !self.v2 {
+            bail!("call_resuming requires a v2 connection");
+        }
+        if req.id == 0 {
+            req.id = self.fresh_id();
+        }
+        let id = req.id;
+        let mut received: u64 = 0;
+        let mut text = String::new();
+        let mut attempts = 0usize;
+        let mut delay = Duration::from_millis(10);
+        self.send(req.clone())?;
+        loop {
+            let failed = match self.next_event(id) {
+                Ok(Event::Delta { index, text: t, .. }) => {
+                    if index != received {
+                        bail!(
+                            "session {id}: delta index {index}, \
+                             expected {received}"
+                        );
+                    }
+                    text.push_str(&t);
+                    received += 1;
+                    continue;
+                }
+                Ok(Event::Done(resp)) => return Ok((text, resp)),
+                Ok(Event::Error {
+                    error,
+                    retryable: false,
+                    ..
+                }) => bail!("session {id} failed: {error}"),
+                // retryable error (shutdown drain, engine hiccup) —
+                // reconnect and resume
+                Ok(Event::Error { error, .. }) => error,
+                // accepted / refresh frames carry no text
+                Ok(_) => continue,
+                // io failure: dropped connection, closed socket
+                Err(e) => e.to_string(),
+            };
+            loop {
+                attempts += 1;
+                if attempts > max_reconnects {
+                    bail!(
+                        "session {id}: gave up after {max_reconnects} \
+                         reconnect attempts (last error: {failed})"
+                    );
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(500));
+                if self.reconnect().is_err() {
+                    continue;
+                }
+                let frame = req.to_v2_resume_frame(received);
+                if writeln!(self.stream, "{frame}").is_ok() {
+                    break;
+                }
+            }
+        }
     }
 
     /// Cancel a live session (v2 only). The session's terminal frame —

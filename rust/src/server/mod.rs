@@ -83,7 +83,35 @@
 //!   adjustable mid-stream via v2 `set`), and the per-shard
 //!   **shared-prefix cache** (total `cache_bytes` split evenly; exact
 //!   hits skip prefill, partial hits resume the chunked stream
-//!   bit-identically; ref-counted, LRU under the byte budget).
+//!   bit-identically; ref-counted, LRU under the byte budget). The
+//!   cache is indexed by an **edge-compressed radix trie** over token
+//!   ids, so `lookup`/`peek_longest`/`insert` walk O(prompt-length)
+//!   edges regardless of how many entries are resident — hundreds of
+//!   cached prefixes cost a lookup no more than one does.
+//! * **Cache persistence** (`--cache-dir`, [`ServerOptions::cache_dir`]):
+//!   when set, [`Server::stop`] snapshots each shard's resident prefix
+//!   entries to `<cache-dir>/prefix-shard-<i>.gpxs` *after* its engine
+//!   loop drains (format documented in
+//!   [`prefix_store`](crate::engine::prefix_store); version
+//!   [`SNAPSHOT_VERSION`](crate::engine::prefix_store::SNAPSHOT_VERSION),
+//!   length-prefixed + FNV-1a-checksummed, written via temp file +
+//!   rename). The next startup warm-starts each shard's cache from its
+//!   file before serving — [`route_shard`] is deterministic, so every
+//!   snapshot lands back on the shard that will serve its prefixes,
+//!   and a previously-cached prompt is answered with **zero** engine
+//!   prefill calls (`warm_start_hits` in `stats` counts these). A
+//!   corrupt, truncated, or model-mismatched snapshot is skipped with
+//!   a warning — startup never fails on cache damage, it just serves
+//!   cold.
+//! * **Resumable sessions** (protocol v2 `resume` frame): a client
+//!   whose connection died mid-stream reconnects and replays its
+//!   prompt plus the number of deltas already received; the server
+//!   re-admits the session like a generate (the prefix cache supplies
+//!   the prompt work it already did), re-runs the deterministic
+//!   decode, and suppresses the deltas the client already has — the
+//!   continued stream carries the original indices and its
+//!   concatenation is byte-identical to the uninterrupted stream. See
+//!   [`protocol`] for the frame grammar and ordering guarantees.
 //! * **Graceful shutdown** ([`Server::stop`]): the acceptor stops
 //!   accepting and late frames are refused; every in-flight session
 //!   drains to its natural `done`; queued-but-unadmitted requests get
@@ -111,6 +139,8 @@
 //!   static mask.
 //! * `cache_bytes` (server) — **total** shared-prefix cache budget,
 //!   split evenly across shards; 0 disables caching entirely.
+//! * `cache_dir` (`--cache-dir`) — directory for persistent prefix
+//!   snapshots (one file per shard); unset disables persistence.
 //! * `cache` (per request) — `on` (read + publish, default),
 //!   `readonly`, `off`.
 //! * `group_prefixes` (server) — same-prefix clustering/deferral so a
@@ -136,6 +166,7 @@ pub mod scheduler;
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -222,6 +253,11 @@ pub struct ServerOptions {
     /// Outbound buffer cap per connection; a consumer that falls this
     /// far behind is disconnected.
     pub conn_buffer_bytes: usize,
+    /// Directory for persistent prefix-cache snapshots (`--cache-dir`):
+    /// each shard warm-starts from `prefix-shard-<i>.gpxs` here and
+    /// [`Server::stop`] rewrites the files after drain. None (default)
+    /// disables persistence.
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl ServerOptions {
@@ -233,6 +269,7 @@ impl ServerOptions {
             shards: 1,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             conn_buffer_bytes: DEFAULT_CONN_BUFFER_BYTES,
+            cache_dir: None,
         }
     }
 
@@ -245,6 +282,15 @@ impl ServerOptions {
     /// Builder-style frame-size cap override.
     pub fn with_max_frame_bytes(mut self, n: usize) -> ServerOptions {
         self.max_frame_bytes = n;
+        self
+    }
+
+    /// Builder-style persistent-cache directory override.
+    pub fn with_cache_dir(
+        mut self,
+        dir: Option<PathBuf>,
+    ) -> ServerOptions {
+        self.cache_dir = dir;
         self
     }
 }
@@ -335,7 +381,15 @@ impl Server {
         // is paid once)
         let mut batchers = Vec::with_capacity(n_shards);
         let mut shards = Vec::with_capacity(n_shards);
-        for _ in 0..n_shards {
+        for shard_id in 0..n_shards {
+            // per-shard persistent snapshot: route_shard is
+            // deterministic across restarts, so shard i's file always
+            // warms the shard that will serve its prefixes
+            let snapshot = opts.cache_dir.as_deref().map(|dir| {
+                crate::engine::prefix_store::snapshot_path(
+                    dir, shard_id,
+                )
+            });
             let engine_loop = Batcher::with_options(
                 engine.clone(),
                 BatcherOptions {
@@ -343,6 +397,7 @@ impl Server {
                     cache_bytes: shard_cache_bytes,
                     chunk_budget: 1,
                     group_prefixes: opts.group_prefixes,
+                    snapshot_path: snapshot,
                 },
             )?;
             let group_bytes =
@@ -411,6 +466,10 @@ impl Server {
                     }
                 };
                 engine_loop.run(&sched, &mut sink);
+                // run() returns only after Server::stop drains every
+                // in-flight slot, so the snapshot captures the final
+                // hot set (no-op unless --cache-dir is configured)
+                engine_loop.snapshot_hot();
             }));
         }
         // reactor threads (one per shard): connection state machines
@@ -808,6 +867,7 @@ impl ConnState {
                     arrived: Instant::now(),
                     conn_id: self.conn_id,
                     stream: false,
+                    resume_from: 0,
                 });
                 if accepted.is_none() {
                     // queue already closed (shutdown won the race)
@@ -834,6 +894,74 @@ impl ConnState {
         }
     }
 
+    /// Admit one v2 session (fresh `generate`, or `resume` with a
+    /// nonzero delta offset): validate the session id, refuse during
+    /// shutdown (retryably), route by prompt prefix, enqueue, and
+    /// answer with `accepted`.
+    fn submit_session(
+        &mut self,
+        ctx: &ReactorCtx,
+        request: protocol::Request,
+        resume_from: u64,
+    ) {
+        let id = request.id;
+        if id == 0 {
+            // id 0 is the correlation id of connection-level
+            // protocol errors; a session using it could read a
+            // reactor-originated error as its terminal frame
+            self.push_error_frame(
+                0,
+                "session id must be >= 1 (0 is reserved for \
+                 connection-level errors)",
+                false,
+            );
+            return;
+        }
+        if self.live.contains_key(&id) {
+            // reactor-originated rejection, reported on the
+            // RESERVED correlation id 0: using the session's
+            // own id would read as the ORIGINAL live session's
+            // terminal error frame
+            self.push_error_frame(
+                0,
+                &format!(
+                    "duplicate session id {id} (still live on \
+                     this connection)"
+                ),
+                false,
+            );
+            return;
+        }
+        if ctx.shutdown.load(Ordering::Relaxed) {
+            self.push_error_frame(id, "server shutting down", true);
+            return;
+        }
+        let si = route_shard(
+            &request.prompt,
+            ctx.shards.len(),
+            ctx.route_window,
+        );
+        let submitted = ctx.shards[si].sched.submit(Pending {
+            request,
+            arrived: Instant::now(),
+            conn_id: self.conn_id,
+            stream: true,
+            resume_from,
+        });
+        let Some(pos) = submitted else {
+            // queue already closed (shutdown won the race):
+            // refuse retryably instead of stranding a session
+            // nothing will ever drain
+            self.push_error_frame(id, "server shutting down", true);
+            return;
+        };
+        self.live.insert(id, si);
+        self.push_event(Event::Accepted {
+            id,
+            queue_pos: pos as u64,
+        });
+    }
+
     fn handle_v2(&mut self, ctx: &ReactorCtx, j: &Json) {
         let frame = match v2_frame_from_json(j) {
             Ok(f) => f,
@@ -854,69 +982,15 @@ impl ConnState {
         };
         match frame {
             V2Frame::Generate(request) => {
-                let id = request.id;
-                if id == 0 {
-                    // id 0 is the correlation id of connection-level
-                    // protocol errors; a session using it could read a
-                    // reactor-originated error as its terminal frame
-                    self.push_error_frame(
-                        0,
-                        "session id must be >= 1 (0 is reserved for \
-                         connection-level errors)",
-                        false,
-                    );
-                    return;
-                }
-                if self.live.contains_key(&id) {
-                    // reactor-originated rejection, reported on the
-                    // RESERVED correlation id 0: using the session's
-                    // own id would read as the ORIGINAL live session's
-                    // terminal error frame
-                    self.push_error_frame(
-                        0,
-                        &format!(
-                            "duplicate session id {id} (still live on \
-                             this connection)"
-                        ),
-                        false,
-                    );
-                    return;
-                }
-                if ctx.shutdown.load(Ordering::Relaxed) {
-                    self.push_error_frame(
-                        id,
-                        "server shutting down",
-                        true,
-                    );
-                    return;
-                }
-                let si = route_shard(
-                    &request.prompt,
-                    ctx.shards.len(),
-                    ctx.route_window,
-                );
-                let submitted = ctx.shards[si].sched.submit(Pending {
-                    request,
-                    arrived: Instant::now(),
-                    conn_id: self.conn_id,
-                    stream: true,
-                });
-                let Some(pos) = submitted else {
-                    // queue already closed (shutdown won the race):
-                    // refuse retryably instead of stranding a session
-                    // nothing will ever drain
-                    self.push_error_frame(
-                        id,
-                        "server shutting down",
-                        true,
-                    );
-                    return;
-                };
-                self.live.insert(id, si);
-                self.push_event(Event::Accepted {
-                    id,
-                    queue_pos: pos as u64,
-                });
+                self.submit_session(ctx, request, 0);
+            }
+            V2Frame::Resume { req, received } => {
+                // a resumed session is admitted exactly like a fresh
+                // generate (same validation, routing, queueing); the
+                // batcher re-runs the deterministic decode and
+                // suppresses the `received` deltas the client already
+                // consumed, so the stream continues byte-identically
+                self.submit_session(ctx, req, received);
             }
             V2Frame::Cancel { id } => match self.live.get(&id).copied() {
                 Some(si) => ctx.shards[si].sched.control(

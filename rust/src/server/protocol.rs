@@ -35,6 +35,8 @@
 //! # v2 client → server frames
 //!
 //!   {"v":2,"cmd":"generate","id":7,"prompt":"...", ...}   start session 7
+//!   {"v":2,"cmd":"resume","id":7,"prompt":"...",
+//!    "received":12, ...}                                  resume session 7
 //!   {"v":2,"cmd":"cancel","id":7}                         cancel session 7
 //!   {"v":2,"cmd":"set","id":7,"refresh_every":4}          live knob adjust
 //!   {"v":2,"cmd":"stats","id":3}                          server counters
@@ -92,6 +94,37 @@
 //! `done` while queued-but-unadmitted sessions receive an `error`
 //! frame with `retryable: true` — a client may resubmit them verbatim
 //! to another server.
+//!
+//! # resume
+//!
+//! A client whose connection died mid-stream (or whose session was
+//! failed with `retryable: true`) reconnects and replays the session:
+//!
+//!   {"v":2,"cmd":"resume","id":7,"prompt":"...","received":12,
+//!    ...every generate field...}
+//!
+//! `resume` carries the ORIGINAL request verbatim (same prompt and
+//! knobs, validated identically to `generate`) plus `received` — the
+//! number of `delta` frames the client has already consumed. The
+//! server re-admits the session like a generate: the prompt re-enters
+//! through the shared-prefix cache, so a prefix published by the
+//! original run (or restored from a `--cache-dir` snapshot) is spliced
+//! instead of re-prefilled, and decode re-runs deterministically from
+//! the prompt. Deltas the client already holds are regenerated but
+//! **suppressed**, not re-sent.
+//!
+//! Ordering guarantees for a resumed session: `accepted` first, then
+//! deltas with `index` contiguous from `received` (NOT from 0 — the
+//! one deliberate exception to the generate ordering rule), then
+//! exactly one terminal frame. The concatenation of the original
+//! stream's deltas `[0, received)` with the resumed stream's deltas
+//! `[received, ...)` is byte-identical to an uninterrupted stream's
+//! concatenation — and therefore to the `done` frame's `text`, which
+//! reports the FULL generation (all tokens, not just the resumed
+//! tail). A `received` beyond the number of deltas the request can
+//! produce simply yields a resumed stream with no deltas before its
+//! terminal. Cancel/set address a resumed session exactly like a
+//! generated one.
 //!
 //! # stats
 //!
@@ -162,6 +195,11 @@ pub enum ClientLine {
 pub enum V2Frame {
     /// `{"v":2,"cmd":"generate",...}` — start a streaming session.
     Generate(Request),
+    /// `{"v":2,"cmd":"resume","received":K,...}` — replay a dropped
+    /// session: the original request plus the count of delta frames
+    /// already consumed (regenerated deltas below `received` are
+    /// suppressed server-side).
+    Resume { req: Request, received: u64 },
     /// `{"v":2,"cmd":"cancel","id":N}` — stop a live session.
     Cancel { id: u64 },
     /// `{"v":2,"cmd":"set","id":N,"refresh_every":R}` — live knob.
@@ -220,6 +258,10 @@ pub fn v2_frame_from_json(j: &Json) -> Result<V2Frame> {
     let cmd = j.req("cmd")?.as_str()?;
     match cmd {
         "generate" => Request::from_json(j).map(V2Frame::Generate),
+        "resume" => Ok(V2Frame::Resume {
+            req: Request::from_json(j)?,
+            received: j.req("received")?.as_usize()? as u64,
+        }),
         "cancel" => Ok(V2Frame::Cancel { id: j.req("id")?.as_usize()? as u64 }),
         "set" => Ok(V2Frame::Set {
             id: j.req("id")?.as_usize()? as u64,
@@ -407,7 +449,11 @@ pub fn stats_to_line(
         .set("cache_inserts", Json::Num(s.inserts as f64))
         .set("cache_evictions", Json::Num(s.evictions as f64))
         .set("cache_bytes_resident", Json::Num(s.bytes_resident as f64))
-        .set("cache_entries", Json::Num(s.entries as f64));
+        .set("cache_entries", Json::Num(s.entries as f64))
+        .set(
+            "cache_warm_start_hits",
+            Json::Num(s.warm_start_hits as f64),
+        );
     let per_shard: Vec<Json> = shards
         .iter()
         .map(|sh| {
@@ -452,6 +498,7 @@ pub fn parse_stats_line(
         evictions: get(s, "cache_evictions")?,
         bytes_resident: get(s, "cache_bytes_resident")?,
         entries: get(s, "cache_entries")?,
+        warm_start_hits: get(s, "cache_warm_start_hits")?,
     };
     let shards = match j.get("shards") {
         Some(arr) => arr
@@ -553,6 +600,17 @@ impl Request {
         let mut o = Json::obj();
         o.set("v", Json::Num(PROTOCOL_V2 as f64))
             .set("cmd", Json::Str("generate".into()));
+        self.fields_into(&mut o);
+        o.to_string()
+    }
+
+    /// v2 `resume` frame: the same request replayed verbatim plus the
+    /// count of delta frames the client already consumed.
+    pub fn to_v2_resume_frame(&self, received: u64) -> String {
+        let mut o = Json::obj();
+        o.set("v", Json::Num(PROTOCOL_V2 as f64))
+            .set("cmd", Json::Str("resume".into()))
+            .set("received", Json::Num(received as f64));
         self.fields_into(&mut o);
         o.to_string()
     }
@@ -817,6 +875,7 @@ mod tests {
             evictions: 1,
             bytes_resident: 4096,
             entries: 3,
+            warm_start_hits: 2,
         };
         let shards = vec![
             ShardSnapshot {
@@ -849,6 +908,7 @@ mod tests {
         assert_eq!(id, 4);
         assert_eq!(snap.hits, 7);
         assert_eq!(snap.misses, 0);
+        assert_eq!(snap.warm_start_hits, 0, "pre-warm-start default");
         assert!(shards.is_empty());
     }
 
@@ -979,6 +1039,40 @@ mod tests {
         .unwrap();
         let err = v2_frame_from_json(&bad).unwrap_err();
         assert!(err.to_string().contains("density"), "{err}");
+    }
+
+    #[test]
+    fn v2_resume_frame_roundtrips_and_validates() {
+        let r = Request {
+            id: 7,
+            prompt: "the blue owl".into(),
+            strategy: "i-glass".into(),
+            lambda: 0.5,
+            density: 0.4,
+            max_tokens: 16,
+            refresh_every: 4,
+            cache: CacheMode::On,
+        };
+        let j = Json::parse(&r.to_v2_resume_frame(12)).unwrap();
+        match v2_frame_from_json(&j).unwrap() {
+            V2Frame::Resume { req, received } => {
+                assert_eq!(req, r);
+                assert_eq!(received, 12);
+            }
+            other => panic!("expected resume, got {other:?}"),
+        }
+        // resume validates like generate, and `received` is mandatory
+        let bad = Json::parse(
+            r#"{"v":2,"cmd":"resume","id":1,"prompt":"x",
+                "received":0,"density":7}"#,
+        )
+        .unwrap();
+        assert!(v2_frame_from_json(&bad).is_err());
+        let missing = Json::parse(
+            r#"{"v":2,"cmd":"resume","id":1,"prompt":"x"}"#,
+        )
+        .unwrap();
+        assert!(v2_frame_from_json(&missing).is_err());
     }
 
     #[test]

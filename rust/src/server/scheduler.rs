@@ -76,6 +76,11 @@ pub struct Pending {
     /// batcher skips the per-token event cost their compatibility shim
     /// would discard anyway; terminals are always emitted.
     pub stream: bool,
+    /// Delta frames the client already received (protocol-v2 `resume`).
+    /// The batcher re-runs the deterministic decode but suppresses
+    /// deltas with index < `resume_from`, so the reconnecting client's
+    /// stream continues exactly where it broke off. 0 = fresh session.
+    pub resume_from: u64,
 }
 
 #[derive(Default)]
@@ -332,6 +337,7 @@ mod tests {
             arrived: Instant::now(),
             conn_id: id,
             stream: true,
+            resume_from: 0,
         }
     }
 

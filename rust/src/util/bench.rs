@@ -178,6 +178,10 @@ const FLOOR_KEYS: &[&str] = &[
     "prefill_tokens_saved_warm",
     "prefill_chunks",
     "decode_steps_during_prefill",
+    // warm-restart row: cache hits served from entries imported out of
+    // a persisted snapshot — losing them means restart persistence
+    // stopped working (snapshot not written, not loaded, or not hit)
+    "warm_start_hits",
 ];
 
 /// Baseline keys holding latency ceilings (milliseconds): the current
@@ -185,7 +189,13 @@ const FLOOR_KEYS: &[&str] = &[
 /// and deliberately generous (the mirror image of the conservative
 /// throughput floors), so only a real blow-up — a stall, an accidental
 /// sleep, a quadratic admission path — trips them on a slow CI host.
-const CEILING_KEYS: &[&str] = &["p95_queue_decode_ms"];
+const CEILING_KEYS: &[&str] = &[
+    "p95_queue_decode_ms",
+    // radix-index scaling row: p95 of one cache lookup (microseconds)
+    // with hundreds of resident entries — a ceiling breach means
+    // lookups regressed toward entry-count scans again
+    "cache_lookup_us_p95",
+];
 
 /// Compare a bench JSON document against a baseline. `tol` is the
 /// allowed fractional throughput drop (0.15 = fail below 85% of
@@ -477,6 +487,59 @@ mod tests {
             ("decode_steps_during_prefill", 12.0),
         ]);
         assert!(check_regression(&better, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_fails_when_warm_start_hits_are_lost() {
+        // the warm-restart floor: a run whose restarted server never
+        // serves a snapshot-imported entry must fail
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("warm_start_hits", 1.0),
+        ]);
+        let cold = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("warm_start_hits", 0.0),
+        ]);
+        let r = check_regression(&cold, &base, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.failures[0].contains("warm_start_hits"),
+            "{:?}",
+            r.failures
+        );
+        let warm = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("warm_start_hits", 6.0),
+        ]);
+        assert!(check_regression(&warm, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_fails_on_cache_lookup_scaling_blowup() {
+        // the radix-scaling ceiling: lookup p95 past the baseline with
+        // hundreds of resident entries fails even with throughput fine
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("cache_lookup_us_p95", 500.0),
+        ]);
+        let slow = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("cache_lookup_us_p95", 2000.0),
+        ]);
+        let r = check_regression(&slow, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("cache_lookup_us_p95"),
+            "{:?}",
+            r.failures
+        );
+        // at the ceiling passes (boundary included)
+        let ok = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("cache_lookup_us_p95", 500.0),
+        ]);
+        assert!(check_regression(&ok, &base, 0.15).passed());
     }
 
     #[test]

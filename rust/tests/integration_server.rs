@@ -97,6 +97,7 @@ fn pending_cached(
         conn_id,
         // component tests assert delta/refresh event streams
         stream: true,
+        resume_from: 0,
     }
 }
 
@@ -451,6 +452,106 @@ fn v2_set_frame_adjusts_refresh_mid_stream() {
         "set frame must enable refreshes mid-stream (got {})",
         done.refreshes
     );
+    server.stop();
+}
+
+/// The resume acceptance proof: kill a v2 stream after K deltas, then
+/// reconnect and `resume` with the replayed request + delta count — the
+/// concatenation of the pre-kill deltas and the resumed stream is
+/// byte-identical to an uninterrupted run, with delta indices
+/// continuing exactly at K.
+#[test]
+fn v2_resume_after_dropped_connection_is_byte_identical() {
+    let server = start_server();
+    let mk = |id: u64| {
+        let mut r = request("once there was a red fox", "i-glass", 0.5);
+        r.id = id;
+        r.max_tokens = 48;
+        r.cache = CacheMode::Off; // determinism independent of cache
+        r
+    };
+
+    // uninterrupted reference stream
+    let mut v2 = Client::connect_v2(&server.addr).unwrap();
+    let full = v2.call(mk(1)).unwrap();
+    assert!(full.error.is_none(), "{:?}", full.error);
+    assert_eq!(full.tokens, 48);
+
+    // interrupted stream: consume K deltas, then drop the connection
+    let mut doomed = Client::connect_v2(&server.addr).unwrap();
+    let id = doomed.generate_stream(mk(2)).unwrap();
+    let mut prefix = String::new();
+    let mut received = 0u64;
+    while received < 3 {
+        match doomed.next_event(id).unwrap() {
+            Event::Delta { index, text, .. } => {
+                assert_eq!(index, received);
+                prefix.push_str(&text);
+                received += 1;
+            }
+            Event::Done(r) => panic!("finished before the kill: {r:?}"),
+            Event::Error { error, .. } => panic!("{error}"),
+            _ => {}
+        }
+    }
+    drop(doomed); // the kill: socket closes mid-stream
+
+    // reconnect and resume: the server re-decodes deterministically and
+    // suppresses the deltas the client already holds
+    let mut revived = Client::connect_v2(&server.addr).unwrap();
+    let rid = revived.resume(mk(3), received).unwrap();
+    let mut tail = String::new();
+    let mut next_index = received;
+    let done = loop {
+        match revived.next_event(rid).unwrap() {
+            Event::Delta { index, text, .. } => {
+                assert_eq!(
+                    index, next_index,
+                    "resumed deltas must continue at the replayed count"
+                );
+                next_index += 1;
+                tail.push_str(&text);
+            }
+            Event::Done(r) => break r,
+            Event::Error { error, .. } => {
+                panic!("resume failed: {error}")
+            }
+            _ => {}
+        }
+    };
+    assert!(next_index > received, "resume must stream the tail");
+    assert_eq!(
+        format!("{prefix}{tail}"),
+        full.text,
+        "kill-and-resume concatenation diverged from the \
+         uninterrupted stream"
+    );
+    assert_eq!(done.text, full.text, "done reports the full generation");
+    assert_eq!(done.tokens, full.tokens);
+    assert_eq!(done.finish, full.finish);
+    server.stop();
+}
+
+#[test]
+fn call_resuming_completes_a_healthy_stream() {
+    // the retryable-error client fix's happy path: with nothing to
+    // survive, call_resuming assembles the same bits call() returns
+    let server = start_server();
+    let mk = |id: u64| {
+        let mut r = request("the grey cat is quiet and", "i-glass", 0.5);
+        r.id = id;
+        r.max_tokens = 24;
+        r
+    };
+    let mut a = Client::connect_v2(&server.addr).unwrap();
+    let blocking = a.call(mk(21)).unwrap();
+    assert!(blocking.error.is_none(), "{:?}", blocking.error);
+    let mut b = Client::connect_v2(&server.addr).unwrap();
+    let (text, resp) = b.call_resuming(mk(22), 3).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(text, blocking.text, "assembled deltas diverged");
+    assert_eq!(resp.text, blocking.text);
+    assert_eq!(resp.tokens, blocking.tokens);
     server.stop();
 }
 
@@ -1416,6 +1517,101 @@ fn stats_occupancy_is_consistent_under_concurrent_load() {
     server.stop();
 }
 
+// ----------------------------------- cache warm-start persistence
+
+/// The warm-start acceptance proof: `stop()` snapshots the hot cache
+/// entries into `--cache-dir`; a server restarted on the same dir
+/// serves the cached prompt as an exact full-prompt hit — zero engine
+/// prefill calls — and the stats line attributes it to
+/// `warm_start_hits`.
+#[test]
+fn restart_with_cache_dir_serves_warm_with_zero_prefill() {
+    let dir = std::env::temp_dir().join(format!(
+        "glass-test-warm-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let prompt = "once there was a red fox";
+    let first = {
+        let opts =
+            ServerOptions::new(4).with_cache_dir(Some(dir.clone()));
+        let server =
+            Server::start_with(common::engine(), "127.0.0.1:0", opts)
+                .unwrap();
+        let mut c = connect(&server.addr);
+        let r = c.call(request(prompt, "i-glass", 0.5)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.cached_prompt_tokens, 0, "first serve is cold");
+        server.stop(); // drains, then snapshots the hot entries
+        r
+    };
+    assert!(
+        dir.join("prefix-shard-0.gpxs").exists(),
+        "stop() must write the shard snapshot into the cache dir"
+    );
+
+    let opts = ServerOptions::new(4).with_cache_dir(Some(dir.clone()));
+    let server =
+        Server::start_with(common::engine(), "127.0.0.1:0", opts)
+            .unwrap();
+    let mut c = connect(&server.addr);
+    let warm = c.call(request(prompt, "i-glass", 0.5)).unwrap();
+    assert!(warm.error.is_none(), "{:?}", warm.error);
+    assert_eq!(
+        warm.cached_prompt_tokens,
+        prompt.len() + 1,
+        "restart must exact-hit the snapshot-imported prompt"
+    );
+    assert_eq!(warm.cache_hits, 1);
+    assert_eq!(
+        warm.prefill_ms, 0.0,
+        "a warm-started exact hit makes no engine prefill call"
+    );
+    assert_eq!(warm.text, first.text, "warm bits identical to cold");
+    let s = c.stats().unwrap();
+    assert!(
+        s.warm_start_hits >= 1,
+        "a hit on an imported entry must count as a warm-start \
+         hit: {s:?}"
+    );
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_snapshot_starts_cold_never_fatal() {
+    // a damaged snapshot degrades to a cold cache — loudly skipped at
+    // startup, never a crash, and never a partial import
+    let dir = std::env::temp_dir().join(format!(
+        "glass-test-corrupt-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("prefix-shard-0.gpxs"), b"not a snapshot")
+        .unwrap();
+    let opts = ServerOptions::new(4).with_cache_dir(Some(dir.clone()));
+    let server =
+        Server::start_with(common::engine(), "127.0.0.1:0", opts)
+            .unwrap(); // startup must survive the bad file
+    let mut c = connect(&server.addr);
+    let prompt = "the blue owl is";
+    let r = c.call(request(prompt, "i-glass", 0.5)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(
+        r.cached_prompt_tokens, 0,
+        "nothing from a corrupt snapshot may be imported"
+    );
+    let s = c.stats().unwrap();
+    assert_eq!(s.warm_start_hits, 0, "no warm entries can exist");
+    // cold degradation, not disablement: the cache still works
+    let rep = c.call(request(prompt, "i-glass", 0.5)).unwrap();
+    assert_eq!(rep.cached_prompt_tokens, prompt.len() + 1);
+    assert_eq!(rep.text, r.text);
+    server.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 // --------------------------------------------------- sharded serving
 
 /// A fixed mixed request set: every strategy over the short prompts,
@@ -1496,6 +1692,56 @@ fn four_shards_serve_bit_identical_outputs_to_one_shard() {
             four.get(id),
             Some(resp),
             "request {id} diverged between --shards 1 and --shards 4"
+        );
+    }
+}
+
+#[test]
+fn radix_cache_serves_fixed_workload_bit_identical_to_cache_off() {
+    // THE radix-index acceptance proof: the trie-indexed prefix cache
+    // serves the fixed mixed workload (every strategy, long prompts,
+    // shared-prefix pair) with the exact bits the cache-off path
+    // produces — splices change cost, never content
+    let serve = |cache_on: bool| -> Digest {
+        let opts = if cache_on {
+            BatcherOptions::new(4)
+        } else {
+            BatcherOptions::new(4).without_cache()
+        };
+        let mut batcher =
+            Batcher::with_options(common::engine(), opts).unwrap();
+        let sched = Scheduler::new(4, Duration::from_millis(1));
+        for r in fixed_workload() {
+            let conn = r.id;
+            let _ = sched.submit(Pending {
+                request: r,
+                arrived: Instant::now(),
+                conn_id: conn,
+                stream: false,
+                resume_from: 0,
+            });
+        }
+        sched.close();
+        let mut done: Vec<(u64, Response)> = Vec::new();
+        batcher.run(&sched, &mut respond(&mut done));
+        done.into_iter()
+            .map(|(_, r)| {
+                assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+                (
+                    r.id,
+                    (r.text, r.tokens, r.prompt_tokens, r.density, r.finish),
+                )
+            })
+            .collect()
+    };
+    let on = serve(true);
+    let off = serve(false);
+    assert_eq!(on.len(), off.len());
+    for (id, resp) in &off {
+        assert_eq!(
+            on.get(id),
+            Some(resp),
+            "request {id} diverged with the radix cache on"
         );
     }
 }
