@@ -33,6 +33,20 @@ use crate::model::Tokenizer;
 use crate::runtime::{ModelSpec, Runtime, Value};
 use crate::tensor::{TensorF, TensorI};
 
+/// Pull the next output of a runtime call, turning a missing output
+/// into an error instead of a panic: an executable returning too few
+/// outputs is a broken artifact, and the serving layer degrades that
+/// request with an error frame rather than killing an engine thread.
+fn next_out(
+    it: &mut impl Iterator<Item = Value>,
+    call: &str,
+) -> Result<Value> {
+    match it.next() {
+        Some(v) => Ok(v),
+        None => bail!("{call}: runtime returned too few outputs"),
+    }
+}
+
 /// Host-side KV cache state for step-mode decode: [L, B, H, T, Dh] pair.
 #[derive(Debug, Clone)]
 pub struct KvState {
@@ -334,10 +348,10 @@ impl Engine {
             &[Value::I32(tokens), Value::I32(lens_t)],
         )?;
         let mut it = out.into_iter();
-        let logits = it.next().unwrap().into_f32()?;
-        let k = it.next().unwrap().into_f32()?;
-        let v = it.next().unwrap().into_f32()?;
-        let stats = it.next().unwrap().into_f32()?;
+        let logits = next_out(&mut it, "prefill")?.into_f32()?;
+        let k = next_out(&mut it, "prefill")?.into_f32()?;
+        let v = next_out(&mut it, "prefill")?.into_f32()?;
+        let stats = next_out(&mut it, "prefill")?.into_f32()?;
         Ok(PrefillResult {
             logits,
             kv: KvState { k, v },
@@ -373,10 +387,10 @@ impl Engine {
             ],
         )?;
         let mut it = out.into_iter();
-        let logits = it.next().unwrap().into_f32()?;
-        kv.k = it.next().unwrap().into_f32()?;
-        kv.v = it.next().unwrap().into_f32()?;
-        let stats = it.next().unwrap().into_f32()?;
+        let logits = next_out(&mut it, "prefill_chunk")?.into_f32()?;
+        kv.k = next_out(&mut it, "prefill_chunk")?.into_f32()?;
+        kv.v = next_out(&mut it, "prefill_chunk")?.into_f32()?;
+        let stats = next_out(&mut it, "prefill_chunk")?.into_f32()?;
         Ok((logits, stats))
     }
 
@@ -402,10 +416,10 @@ impl Engine {
             ],
         )?;
         let mut it = out.into_iter();
-        let logits = it.next().unwrap().into_f32()?;
-        kv.k = it.next().unwrap().into_f32()?;
-        kv.v = it.next().unwrap().into_f32()?;
-        let stats = it.next().unwrap().into_f32()?;
+        let logits = next_out(&mut it, "decode")?.into_f32()?;
+        kv.k = next_out(&mut it, "decode")?.into_f32()?;
+        kv.v = next_out(&mut it, "decode")?.into_f32()?;
+        let stats = next_out(&mut it, "decode")?.into_f32()?;
         Ok((logits, stats))
     }
 
@@ -430,10 +444,10 @@ impl Engine {
             ],
         )?;
         let mut it = out.into_iter();
-        let logits = it.next().unwrap().into_f32()?;
-        kv.k = it.next().unwrap().into_f32()?;
-        kv.v = it.next().unwrap().into_f32()?;
-        let gstats = it.next().unwrap().into_f32()?;
+        let logits = next_out(&mut it, "decode_topk")?.into_f32()?;
+        kv.k = next_out(&mut it, "decode_topk")?.into_f32()?;
+        kv.v = next_out(&mut it, "decode_topk")?.into_f32()?;
+        let gstats = next_out(&mut it, "decode_topk")?.into_f32()?;
         Ok((logits, gstats))
     }
 
@@ -456,8 +470,8 @@ impl Engine {
             ],
         )?;
         let mut it = out.into_iter();
-        let logits = it.next().unwrap().into_f32()?;
-        let stats = it.next().unwrap().into_f32()?;
+        let logits = next_out(&mut it, "score")?.into_f32()?;
+        let stats = next_out(&mut it, "score")?.into_f32()?;
         Ok((logits, stats))
     }
 
@@ -483,9 +497,9 @@ impl Engine {
             ],
         )?;
         let mut it = out.into_iter();
-        let gen_tokens = it.next().unwrap().into_i32()?;
-        let gen_logits = it.next().unwrap().into_f32()?;
-        let gen_stats = it.next().unwrap().into_f32()?;
+        let gen_tokens = next_out(&mut it, "generate")?.into_i32()?;
+        let gen_logits = next_out(&mut it, "generate")?.into_f32()?;
+        let gen_stats = next_out(&mut it, "generate")?.into_f32()?;
         Ok(GenerateResult {
             tokens: gen_tokens,
             logits: gen_logits,

@@ -159,17 +159,21 @@ impl CacheStatsSnapshot {
 }
 
 impl CacheTelemetry {
+    /// Copy every counter at one instant.
     pub fn snapshot(&self) -> CacheStatsSnapshot {
+        // Relaxed loads throughout: each counter is an independent
+        // monotonic statistic, and a snapshot taken mid-decode is
+        // best-effort by definition — no reader derives a
+        // cross-counter invariant from it
         CacheStatsSnapshot {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
+            // (Relaxed: same best-effort rationale as above)
             evictions: self.evictions.load(Ordering::Relaxed),
             bytes_resident: self.bytes_resident.load(Ordering::Relaxed),
             entries: self.entries.load(Ordering::Relaxed),
-            warm_start_hits: self
-                .warm_start_hits
-                .load(Ordering::Relaxed),
+            warm_start_hits: self.warm_start_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -399,11 +403,7 @@ impl PrefixCache {
             let mid = self.alloc_node(mid_label, node);
             self.nodes[child].parent = mid;
             self.nodes[mid].children.push(child);
-            let pos = self.nodes[node]
-                .children
-                .iter()
-                .position(|&c| c == child)
-                .expect("child listed under its parent");
+            let pos = self.child_pos(node, child);
             self.nodes[node].children[pos] = mid;
             depth += common;
             if depth == tokens.len() {
@@ -413,6 +413,19 @@ impl PrefixCache {
             self.nodes[mid].children.push(leaf);
             return leaf;
         }
+    }
+
+    /// Position of `child` in `parent`'s child list — present by the
+    /// tree's structural invariant (every node is listed under its
+    /// parent, maintained by every insert/remove/split above).
+    fn child_pos(&self, parent: usize, child: usize) -> usize {
+        self.nodes[parent]
+            .children
+            .iter()
+            .position(|&c| c == child)
+            // lint: allow(no-unwrap-on-serving-paths) -- structural
+            // invariant: a node is always in its parent's child list
+            .expect("child listed under its parent")
     }
 
     /// Remove the key terminating at `node`, re-merging pass-through
@@ -429,11 +442,7 @@ impl PrefixCache {
                     // leaf without an entry: detach and free, then the
                     // parent may itself have become a pass-through
                     let parent = self.nodes[node].parent;
-                    let pos = self.nodes[parent]
-                        .children
-                        .iter()
-                        .position(|&c| c == node)
-                        .expect("child listed under its parent");
+                    let pos = self.child_pos(parent, node);
                     self.nodes[parent].children.swap_remove(pos);
                     self.free_nodes.push(node);
                     node = parent;
@@ -447,11 +456,7 @@ impl PrefixCache {
                     label.append(&mut self.nodes[child].label);
                     self.nodes[child].label = label;
                     self.nodes[child].parent = parent;
-                    let pos = self.nodes[parent]
-                        .children
-                        .iter()
-                        .position(|&c| c == node)
-                        .expect("child listed under its parent");
+                    let pos = self.child_pos(parent, node);
                     self.nodes[parent].children[pos] = child;
                     self.free_nodes.push(node);
                     return;
@@ -495,11 +500,21 @@ impl PrefixCache {
             Some((id, _)) => {
                 self.tick += 1;
                 let tick = self.tick;
-                let e = self.entries[id].as_mut().unwrap();
+                // the index listed this id, so the slot is occupied;
+                // a torn slot map would mean a corrupt cache — treat
+                // it as a miss instead of panicking an engine thread
+                let Some(e) = self.entries[id].as_mut() else {
+                    self.telemetry
+                        .misses
+                        .fetch_add(1, Ordering::Relaxed);
+                    return None;
+                };
                 e.tick = tick;
                 e.refs += 1;
+                // Relaxed counters: independent stats, see snapshot()
                 self.telemetry.hits.fetch_add(1, Ordering::Relaxed);
                 if e.warm {
+                    // Relaxed: independent counter, see snapshot()
                     self.telemetry
                         .warm_start_hits
                         .fetch_add(1, Ordering::Relaxed);
@@ -517,6 +532,7 @@ impl PrefixCache {
                 })
             }
             None => {
+                // Relaxed: independent counter, see snapshot()
                 self.telemetry.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -554,7 +570,9 @@ impl PrefixCache {
         // contents are a pure function of the prefix, so equal anyway)
         if let Some(slot_id) = self.walk_exact(tokens) {
             let tick = self.tick;
-            self.entries[slot_id].as_mut().unwrap().tick = tick;
+            if let Some(e) = self.entries[slot_id].as_mut() {
+                e.tick = tick;
+            }
             return 0;
         }
         let bytes = self.entry_bytes(tokens.len());
@@ -604,6 +622,7 @@ impl PrefixCache {
         };
         self.nodes[node].entry = Some(slot);
         if count_insert {
+            // Relaxed: independent counter, see snapshot()
             self.telemetry.inserts.fetch_add(1, Ordering::Relaxed);
         }
         self.publish_residency();
@@ -626,12 +645,14 @@ impl PrefixCache {
                 .min()
                 .map(|(_, i)| i);
             let Some(i) = victim else { break };
-            let e = self.entries[i].take().unwrap();
+            // the victim scan just saw this slot occupied
+            let Some(e) = self.entries[i].take() else { break };
             self.index_remove(e.node);
             self.bytes_resident -= e.bytes;
             evicted += 1;
         }
         if evicted > 0 {
+            // Relaxed: independent counter, see snapshot()
             self.telemetry
                 .evictions
                 .fetch_add(evicted as u64, Ordering::Relaxed);
@@ -641,9 +662,12 @@ impl PrefixCache {
     }
 
     fn publish_residency(&self) {
+        // Relaxed stores: gauges read only by stats snapshots; no
+        // reader orders other memory against them
         self.telemetry
             .bytes_resident
             .store(self.bytes_resident as u64, Ordering::Relaxed);
+        // (same Relaxed rationale)
         self.telemetry
             .entries
             .store(self.len() as u64, Ordering::Relaxed);

@@ -174,10 +174,14 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
+        // lint: allow(no-unwrap-on-serving-paths) -- take(4) returned
+        // exactly 4 bytes, so the array conversion cannot fail
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     fn f64(&mut self) -> Result<f64> {
+        // lint: allow(no-unwrap-on-serving-paths) -- take(8) returned
+        // exactly 8 bytes, so the array conversion cannot fail
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -189,6 +193,8 @@ impl<'a> Reader<'a> {
         Ok(self
             .take(n * 4)?
             .chunks_exact(4)
+            // lint: allow(no-unwrap-on-serving-paths) -- chunks_exact
+            // yields 4-byte chunks, the conversion cannot fail
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -201,6 +207,8 @@ impl<'a> Reader<'a> {
         Ok(self
             .take(n * 4)?
             .chunks_exact(4)
+            // lint: allow(no-unwrap-on-serving-paths) -- chunks_exact
+            // yields 4-byte chunks, the conversion cannot fail
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
@@ -224,6 +232,8 @@ pub fn load(
         bail!("snapshot of {} bytes is too short to be valid", buf.len());
     }
     let (body, sum_bytes) = buf.split_at(buf.len() - 8);
+    // lint: allow(no-unwrap-on-serving-paths) -- split_at leaves
+    // exactly 8 checksum bytes, the conversion cannot fail
     let want = u64::from_le_bytes(sum_bytes.try_into().unwrap());
     let got = fnv1a(body);
     if got != want {

@@ -295,6 +295,8 @@ fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
         }
     );
     loop {
+        // lint: allow(no-sleep-outside-reactor) -- the main thread
+        // parks forever while the server threads do all the work
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }

@@ -38,6 +38,9 @@ struct PjrtState {
     exes: HashMap<String, (ExeSpec, xla::PjRtLoadedExecutable)>,
 }
 
+// SAFETY: the `Rc` handles inside are never cloned or dropped outside
+// the owning `Mutex<PjrtState>` (see the struct docs above), so no two
+// threads ever touch the non-atomic refcounts concurrently.
 unsafe impl Send for PjrtState {}
 
 pub struct PjrtBackend {

@@ -139,10 +139,12 @@ impl ShardGauges {
         (v & 0xffff_ffff, v >> 32)
     }
 
+    /// Requests currently holding a batch slot.
     pub fn active(&self) -> u64 {
         self.snapshot().0
     }
 
+    /// Requests currently in chunked prefill.
     pub fn prefilling(&self) -> u64 {
         self.snapshot().1
     }
@@ -355,6 +357,7 @@ pub struct BatcherOptions {
 }
 
 impl BatcherOptions {
+    /// Defaults for everything except the batch width.
     pub fn new(batch_width: usize) -> BatcherOptions {
         BatcherOptions {
             batch_width,
@@ -608,10 +611,12 @@ impl Batcher {
         }
     }
 
+    /// Batch slots currently empty.
     pub fn free_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_empty()).count()
     }
 
+    /// Batch slots currently decoding a request.
     pub fn active(&self) -> usize {
         self.slots
             .iter()
@@ -1667,7 +1672,10 @@ mod tests {
                 }
             })
         };
-        for _ in 0..50_000 {
+        // Miri executes this interleaving-by-interleaving; a few
+        // hundred iterations already cover the race it checks for.
+        let iters = if cfg!(miri) { 500 } else { 50_000 };
+        for _ in 0..iters {
             let (a, p) = g.snapshot();
             assert!(
                 a + p <= width,

@@ -40,6 +40,8 @@ use super::protocol::{
 use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
 use crate::util::json::Json;
 
+/// One wire-protocol connection (v1 one-shot or v2 streaming); see
+/// the module docs for which methods fit which protocol.
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
@@ -226,6 +228,8 @@ impl Client {
                          reconnect attempts (last error: {failed})"
                     );
                 }
+                // lint: allow(no-sleep-outside-reactor) -- client-side
+                // reconnect backoff; no server resource is held
                 std::thread::sleep(delay);
                 delay = (delay * 2).min(Duration::from_millis(500));
                 if self.reconnect().is_err() {
@@ -305,11 +309,11 @@ impl Client {
         // the inbox forever and leak into a later session reusing the
         // same id
         let buffered = self.inbox.iter_mut().find_map(|(&id, q)| {
-            q.iter().position(|ev| ev.is_terminal()).map(|at| {
-                let ev = q.remove(at).unwrap();
-                q.drain(..at);
-                (id, ev)
-            })
+            let at = q.iter().position(|ev| ev.is_terminal())?;
+            // dropping the non-terminals first leaves the terminal at
+            // the front, so no position is ever out of date
+            q.drain(..at);
+            q.pop_front().map(|ev| (id, ev))
         });
         if let Some((id, ev)) = buffered {
             if self.inbox.get(&id).is_some_and(|q| q.is_empty()) {

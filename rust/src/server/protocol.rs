@@ -154,6 +154,27 @@
 //! an explicit "prompt too long" error — prompt tokens are never
 //! silently dropped. `prompt_tokens` in the response reports how many
 //! prompt tokens (incl. BOS) were actually prefilled.
+//!
+//! # Wire-key registry
+//!
+//! Every key this module's serializers write — and every key the
+//! client reads — is registered here. glass-lint's protocol-key-drift
+//! rule fails CI when the serializers, [`super::client`], and this
+//! list disagree, so a new field cannot ship undocumented (or
+//! misspelled on one side of the wire).
+//!
+//! * Envelope and commands: `v`, `cmd`, `id`, `ev`.
+//! * Request knobs: `prompt`, `strategy`, `lambda`, `density`,
+//!   `max_tokens`, `refresh_every`, `cache`, `received`.
+//! * Event and response fields: `index`, `text`, `finish`, `error`,
+//!   `retryable`, `queue_pos`, `changed`, `tokens`, `prompt_tokens`,
+//!   `cached_prompt_tokens`, `refreshes`, `mask_updates`,
+//!   `prefill_ms`, `decode_ms`, `queue_ms`.
+//! * Stats reply: `stats`, `shards`, `cache_hits`, `cache_misses`,
+//!   `cache_inserts`, `cache_evictions`, `cache_bytes_resident`,
+//!   `cache_entries`, `cache_warm_start_hits`, `shard`,
+//!   `queue_depth`, `slots_active`, `slots_prefilling`,
+//!   `batch_width`.
 
 use anyhow::{bail, Result};
 
@@ -167,14 +188,21 @@ pub const PROTOCOL_V2: usize = 2;
 pub const STRATEGIES: &[&str] =
     &["dense", "griffin", "global", "a-glass", "i-glass"];
 
+/// One generation request, as carried by a v1 request line or a v2
+/// `generate`/`resume` frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Correlation id (v1) / session id (v2, must be nonzero).
     pub id: u64,
+    /// The prompt text to prefill.
     pub prompt: String,
     /// One of [`STRATEGIES`].
     pub strategy: String,
+    /// Global/local fusion weight λ ∈ [0, 1].
     pub lambda: f64,
+    /// Kept-neuron fraction ∈ (0, 1].
     pub density: f64,
+    /// Decode budget: generation stops after this many tokens.
     pub max_tokens: usize,
     /// Refresh the GLASS mask every N decoded tokens (0 = never).
     pub refresh_every: usize,
@@ -520,6 +548,7 @@ pub fn parse_stats_line(
 }
 
 impl Request {
+    /// Parse one raw v1 request line.
     pub fn parse(line: &str) -> Result<Request> {
         Request::from_json(&Json::parse(line)?)
     }
@@ -645,9 +674,15 @@ pub fn stats_frame(id: u64) -> String {
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// One completed request: the v1 response line / the payload of a v2
+/// `done` frame.
 pub struct Response {
+    /// Echo of the request's correlation/session id.
     pub id: u64,
+    /// The full generated text (the whole generation, even when the
+    /// session was resumed).
     pub text: String,
+    /// Generated token count.
     pub tokens: usize,
     /// Prompt tokens actually prefilled (incl. BOS). Lets a client
     /// distinguish a full-prompt response from a truncated one — the
@@ -660,20 +695,27 @@ pub struct Response {
     pub cache_hits: usize,
     /// Entries this request's own cache inserts evicted.
     pub cache_evictions: usize,
+    /// Wall-clock prefill time (cache splicing included).
     pub prefill_ms: f64,
+    /// Wall-clock decode time.
     pub decode_ms: f64,
     /// Time spent queued before admission into a batch slot.
     pub queue_ms: f64,
+    /// Effective kept-neuron fraction served.
     pub density: f64,
     /// Mask refreshes applied / refreshes that changed the kept set.
     pub refreshes: usize,
+    /// Refreshes whose recomputed mask changed the kept set.
     pub mask_updates: usize,
     /// "length" | "stop" | "cancel" ("" on errors).
     pub finish: String,
+    /// Failure detail; `None` on success.
     pub error: Option<String>,
 }
 
 impl Response {
+    /// A successful response (finish reason "length"); the optional
+    /// stats fields start zeroed.
     pub fn ok(
         id: u64,
         text: String,
@@ -701,6 +743,7 @@ impl Response {
         }
     }
 
+    /// An error response carrying `msg`; every stat is zeroed.
     pub fn err(id: u64, msg: String) -> Response {
         Response {
             id,
@@ -752,6 +795,7 @@ impl Response {
         o
     }
 
+    /// v1 response line.
     pub fn to_line(&self) -> String {
         self.to_json().to_string()
     }
@@ -797,6 +841,7 @@ impl Response {
         })
     }
 
+    /// Parse one raw v1 response line.
     pub fn parse(line: &str) -> Result<Response> {
         Response::from_json(&Json::parse(line)?)
     }

@@ -67,7 +67,9 @@ impl Control {
 /// Queue entry: the request plus its arrival time and a reply slot key.
 #[derive(Debug)]
 pub struct Pending {
+    /// The parsed request to serve.
     pub request: Request,
+    /// Submission time — the basis of the `queue_ms` stat.
     pub arrived: Instant,
     /// Opaque connection key used by the server to route the response.
     pub conn_id: u64,
@@ -94,7 +96,10 @@ struct QueueState {
 pub struct Scheduler {
     state: Mutex<QueueState>,
     cv: Condvar,
+    /// Most requests a single [`Scheduler::next_batch`] drain returns.
     pub batch_width: usize,
+    /// How long a non-empty partial batch waits to fill before it is
+    /// handed out anyway — the classic latency/throughput knob.
     pub batch_window: Duration,
     /// Cluster drained batches by shared prompt prefix of at least this
     /// many bytes (0 = off, strict FCFS output order).
@@ -102,6 +107,8 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// A scheduler draining up to `batch_width` requests per batch,
+    /// waiting up to `batch_window` for a partial batch to fill.
     pub fn new(batch_width: usize, batch_window: Duration) -> Scheduler {
         Scheduler {
             state: Mutex::new(QueueState::default()),
@@ -119,6 +126,18 @@ impl Scheduler {
         self
     }
 
+    /// Lock the queue state, recovering from poisoning: a batcher
+    /// thread that panicked mid-step must not wedge the reactors that
+    /// submit to this queue (or vice versa). The queue is a plain
+    /// FCFS list whose invariant holds at every panic point, so
+    /// degrade loudly and keep scheduling.
+    fn locked(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|poisoned| {
+            crate::warn_!("scheduler mutex poisoned; recovering");
+            poisoned.into_inner()
+        })
+    }
+
     /// Enqueue a request, returning its position in the queue at
     /// submission (0 = next to be drained) — the v2 `accepted` frame's
     /// `queue_pos`. Returns `None` (refusing the request) once the
@@ -127,7 +146,7 @@ impl Scheduler {
     /// terminal — the caller must fail it itself (retryably).
     #[must_use = "a refused submit must be failed back to the client"]
     pub fn submit(&self, p: Pending) -> Option<usize> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         if st.closed {
             return None;
         }
@@ -140,20 +159,20 @@ impl Scheduler {
     /// Enqueue a control message for the batcher loop (wakes an idle
     /// batcher blocked in [`Scheduler::next_batch`]).
     pub fn control(&self, c: Control) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         st.controls.push(c);
         self.cv.notify_all();
     }
 
     /// Drain every pending control message, FIFO.
     pub fn take_controls(&self) -> Vec<Control> {
-        std::mem::take(&mut self.state.lock().unwrap().controls)
+        std::mem::take(&mut self.locked().controls)
     }
 
     /// Remove a still-queued request by its (conn, session id) key —
     /// cancellation before admission. Returns the plucked request.
     pub fn remove(&self, conn_id: u64, id: u64) -> Option<Pending> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         let at = st
             .queue
             .iter()
@@ -169,7 +188,7 @@ impl Scheduler {
         id: u64,
         refresh_every: usize,
     ) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         match st
             .queue
             .iter_mut()
@@ -183,8 +202,10 @@ impl Scheduler {
         }
     }
 
+    /// Close the queue: pending work still drains, but every later
+    /// [`Scheduler::submit`] is refused.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.locked().closed = true;
         self.cv.notify_all();
     }
 
@@ -192,19 +213,21 @@ impl Scheduler {
     /// shutdown: the server fails these with a retryable error frame
     /// instead of serving them; in-flight slots drain normally).
     pub fn drain_close(&self) -> Vec<Pending> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         st.closed = true;
         let dropped = st.queue.drain(..).collect();
         self.cv.notify_all();
         dropped
     }
 
+    /// Requests currently queued (excludes admitted, in-flight work).
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.locked().queue.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
-        self.state.lock().unwrap().queue.is_empty()
+        self.locked().queue.is_empty()
     }
 
     /// Take the next batch (1..=batch_width requests). Blocks until at
@@ -214,13 +237,14 @@ impl Scheduler {
     /// pending control message also wakes the wait and returns an
     /// EMPTY batch, so the idle batcher loops around and processes it.
     pub fn next_batch(&self) -> Option<Vec<Pending>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         // wait for work (or a control message)
         while st.queue.is_empty() && st.controls.is_empty() {
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            // same poison policy as locked(): recover, don't wedge
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
         }
         if st.queue.is_empty() {
             // woken by a control: hand the (empty) batch back so the
@@ -235,8 +259,11 @@ impl Scheduler {
             if now >= deadline {
                 break;
             }
-            let (lock, timeout) =
-                self.cv.wait_timeout(st, deadline - now).unwrap();
+            // same poison policy as locked(): recover, don't wedge
+            let (lock, timeout) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
             st = lock;
             if timeout.timed_out() {
                 break;
@@ -250,7 +277,7 @@ impl Scheduler {
     /// Non-blocking FCFS drain of up to `max` pending requests — the
     /// continuous batcher's mid-flight admission path.
     pub fn take(&self, max: usize) -> Vec<Pending> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         let n = st.queue.len().min(max);
         let batch: Vec<Pending> = st.queue.drain(..n).collect();
         drop(st);
@@ -266,15 +293,16 @@ impl Scheduler {
         if overflow.is_empty() {
             return;
         }
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         for p in overflow.into_iter().rev() {
             st.queue.push_front(p);
         }
         self.cv.notify_all();
     }
 
+    /// Has [`Scheduler::close`] / [`Scheduler::drain_close`] run?
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        self.locked().closed
     }
 }
 

@@ -34,10 +34,13 @@ pub fn init() {
 }
 
 pub fn set_level(l: Level) {
+    // Relaxed: the level is an isolated knob — a message racing the
+    // store may use the old level once, which is fine for logging
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
 pub fn enabled(l: Level) -> bool {
+    // Relaxed: same isolated-knob rationale as set_level
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 

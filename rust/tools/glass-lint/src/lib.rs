@@ -1,0 +1,115 @@
+//! **glass-lint** — dependency-free, project-invariant static
+//! analysis for the GLASS serving stack.
+//!
+//! The serving layer (continuous batcher, per-shard reactor,
+//! lock-free gauges, radix prefix cache) rests on concurrency and
+//! wire-protocol invariants that module docs describe but `clippy`
+//! cannot check. This crate scans the `glass` crate sources with a
+//! small line-oriented tokenizer ([`scan`]) and enforces those
+//! invariants as lint rules ([`rules`]):
+//!
+//! * `no-unwrap-on-serving-paths` — a panic in a batcher or reactor
+//!   thread kills a whole shard, not one request.
+//! * `justified-atomics` — every non-SeqCst ordering must say why it
+//!   is sound (the packed `ShardGauges` word is the archetype).
+//! * `no-sleep-outside-reactor` — a stray sleep on the engine loop
+//!   stalls every slot in a shard.
+//! * `no-lock-across-blocking-call` — a MutexGuard held across
+//!   socket I/O or a sleep serializes the reactor.
+//! * `safety-comment` — every `unsafe` carries a `// SAFETY:` note.
+//! * `protocol-key-drift` — wire keys must agree between
+//!   `server/protocol.rs`, `server/client.rs`, and the protocol
+//!   module's wire-key registry docs.
+//! * `lint-annotation` — suppressions themselves stay auditable.
+//!
+//! Findings are suppressed per site with
+//! `// lint: allow(<rule>) -- <reason>` (see [`rules`]).
+
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+pub mod rules;
+pub mod scan;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Violation, RULES};
+pub use scan::Scanned;
+
+/// Result of linting a set of paths.
+#[derive(Debug)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, in file-walk order (cross-file checks last).
+    pub violations: Vec<Violation>,
+}
+
+impl Report {
+    /// Violation count for one rule.
+    pub fn count(&self, rule: &str) -> usize {
+        self.violations.iter().filter(|v| v.rule == rule).count()
+    }
+}
+
+/// Lint one in-memory source file (single-file rules only).
+pub fn lint_source(path: &str, text: &str) -> Vec<Violation> {
+    let sc = scan::scan(path, text);
+    let allows = rules::parse_allows(&sc);
+    let mut out = Vec::new();
+    rules::lint_file(&sc, &allows, &mut out);
+    rules::lint_annotations(&sc, &allows, &mut out);
+    out
+}
+
+/// Walk `paths` (files or directories, `vendor/` and `target/`
+/// skipped), lint every `.rs` file, then cross-check each
+/// `server/protocol.rs` + `server/client.rs` sibling pair.
+pub fn lint_paths(paths: &[PathBuf]) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect(p, &mut files)?;
+    }
+    let mut scanned = Vec::new();
+    let mut violations = Vec::new();
+    for f in &files {
+        let text = fs::read_to_string(f)?;
+        let path = f.to_string_lossy().replace('\\', "/");
+        let sc = scan::scan(&path, &text);
+        let allows = rules::parse_allows(&sc);
+        rules::lint_file(&sc, &allows, &mut violations);
+        rules::lint_annotations(&sc, &allows, &mut violations);
+        scanned.push(sc);
+    }
+    rules::lint_protocol_pairs(&scanned, &mut violations);
+    Ok(Report {
+        files_scanned: scanned.len(),
+        violations,
+    })
+}
+
+fn collect(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if p.is_file() {
+        out.push(p.to_path_buf());
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(p)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    entries.sort();
+    for e in entries {
+        if e.is_dir() {
+            let name =
+                e.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name == "target" || name == "vendor" {
+                continue;
+            }
+            collect(&e, out)?;
+        } else if e.extension().is_some_and(|x| x == "rs") {
+            out.push(e);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! `glass-lint` CLI.
+//!
+//! ```text
+//! glass-lint [--check] [--telemetry] [paths...]
+//! ```
+//!
+//! Lints every `.rs` file under the given paths (default:
+//! `rust/src`, i.e. run it from the repository root). Findings go to
+//! stdout as `path:line: [rule] message`. With `--check` the exit
+//! code is nonzero when any finding survives; with `--telemetry` a
+//! one-line JSON summary (rule count, files scanned, per-rule
+//! violation counts) is printed last, for CI to record per commit.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut check = false;
+    let mut telemetry = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--check" => check = true,
+            "--telemetry" => telemetry = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: glass-lint [--check] [--telemetry] \
+                     [paths...] (default path: rust/src)"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with("--") => {
+                eprintln!("glass-lint: unknown flag `{other}`");
+                return ExitCode::from(2);
+            }
+            other => paths.push(PathBuf::from(other)),
+        }
+    }
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+    let report = match glass_lint::lint_paths(&paths) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("glass-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if telemetry {
+        println!("{}", telemetry_json(&report));
+    }
+    if check && !report.violations.is_empty() {
+        eprintln!(
+            "glass-lint: {} violation(s)",
+            report.violations.len()
+        );
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
+/// One-line JSON summary of a lint run; every rule is listed even at
+/// zero violations so the enforcement surface is visible per commit.
+fn telemetry_json(report: &glass_lint::Report) -> String {
+    let mut s = String::from("{\"glass_lint_rules\": ");
+    s.push_str(&glass_lint::RULES.len().to_string());
+    s.push_str(", \"files_scanned\": ");
+    s.push_str(&report.files_scanned.to_string());
+    s.push_str(", \"violations\": {");
+    for (i, rule) in glass_lint::RULES.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push('"');
+        s.push_str(rule);
+        s.push_str("\": ");
+        s.push_str(&report.count(rule).to_string());
+    }
+    s.push_str("}}");
+    s
+}

@@ -1,0 +1,599 @@
+//! The glass-lint rule set: project-specific invariants of the GLASS
+//! serving stack that `clippy` cannot see, each grounded in a real
+//! hazard this codebase has hit (see the "Invariants & enforcement"
+//! section of `rust/src/server/mod.rs` for the rationale per rule).
+//!
+//! A finding is suppressed by an allowlist annotation in a comment on
+//! the same line or up to two lines above:
+//!
+//! ```text
+//! // lint: allow(no-sleep-outside-reactor) -- reactor idle tick
+//! ```
+//!
+//! The reason after `--` is mandatory; an annotation with a missing
+//! reason or an unknown rule name is itself reported (rule
+//! `lint-annotation`), so suppressions stay auditable.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::scan::Scanned;
+
+/// `.unwrap()` / `.expect(` forbidden in non-test serving code.
+pub const NO_UNWRAP: &str = "no-unwrap-on-serving-paths";
+/// Relaxed/Acquire/Release orderings need a justification comment.
+pub const JUSTIFIED_ATOMICS: &str = "justified-atomics";
+/// `thread::sleep` only at explicitly allowlisted sites.
+pub const NO_SLEEP: &str = "no-sleep-outside-reactor";
+/// A MutexGuard binding may not live across a blocking call.
+pub const NO_LOCK_ACROSS_BLOCKING: &str = "no-lock-across-blocking-call";
+/// Every `unsafe` needs an adjacent `// SAFETY:` comment.
+pub const SAFETY_COMMENT: &str = "safety-comment";
+/// Wire keys must match between protocol.rs, client.rs and the docs.
+pub const PROTOCOL_KEY_DRIFT: &str = "protocol-key-drift";
+/// Malformed or unknown allowlist annotations.
+pub const LINT_ANNOTATION: &str = "lint-annotation";
+
+/// Every rule glass-lint enforces, in reporting order.
+pub const RULES: [&str; 7] = [
+    NO_UNWRAP,
+    JUSTIFIED_ATOMICS,
+    NO_SLEEP,
+    NO_LOCK_ACROSS_BLOCKING,
+    SAFETY_COMMENT,
+    PROTOCOL_KEY_DRIFT,
+    LINT_ANNOTATION,
+];
+
+/// Atomic memory orderings that demand justification. `SeqCst` is the
+/// conservative default and exempt; `std::cmp::Ordering` variants
+/// (Less/Equal/Greater) never match these names.
+const ATOMIC_ORDERINGS: [&str; 4] = [
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+];
+
+/// Statements that bind a MutexGuard when nothing else is chained.
+const GUARD_MARKERS: [&str; 3] = [".lock()", ".locked()", "lock_conns("];
+
+/// Chained calls that still yield a guard binding (poison recovery);
+/// any other chained call means the guard is a dropped temporary.
+const GUARD_CHAIN_OK: [&str; 4] =
+    ["unwrap", "expect", "unwrap_or_else", "into_inner"];
+
+/// Calls that can block a thread for an unbounded or scheduled time.
+/// `Condvar::wait` is deliberately absent — it releases the lock.
+const BLOCKING_MARKERS: [&str; 9] = [
+    "thread::sleep",
+    ".write_all(",
+    ".flush(",
+    ".read(",
+    ".read_exact(",
+    ".read_to_end(",
+    ".read_line(",
+    ".accept(",
+    "::connect(",
+];
+
+/// Call-site suffixes that mark a string literal as a wire key.
+const KEY_PREFIXES: [&str; 3] = [".set(", ".get(", ".req("];
+
+/// One finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// File the finding is in (as passed to the scanner).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule name, one of [`RULES`].
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// Allowlist annotations per 0-based line: `(rule name, has reason)`.
+pub type Allows = BTreeMap<usize, Vec<(String, bool)>>;
+
+/// Collect `lint: allow(<rule>) -- <reason>` annotations per line.
+pub fn parse_allows(sc: &Scanned) -> Allows {
+    let mut out = Allows::new();
+    for (idx, ln) in sc.lines.iter().enumerate() {
+        let c = ln.comment.as_str();
+        let mut from = 0;
+        while let Some(p) = c[from..].find("lint:") {
+            from += p + 5;
+            let rest = c[from..].trim_start();
+            let Some(r2) = rest.strip_prefix("allow(") else {
+                continue;
+            };
+            let Some(close) = r2.find(')') else { continue };
+            let name = r2[..close].trim().to_string();
+            let after = r2[close + 1..].trim_start();
+            let has_reason = after
+                .strip_prefix("--")
+                .is_some_and(|r| !r.trim_start().is_empty());
+            out.entry(idx).or_default().push((name, has_reason));
+        }
+    }
+    out
+}
+
+/// Is `rule` allowlisted at `idx` (same line or two lines above)?
+fn allowed(allows: &Allows, idx: usize, rule: &str) -> bool {
+    (0..3).any(|back| {
+        idx.checked_sub(back).is_some_and(|j| {
+            allows.get(&j).is_some_and(|entries| {
+                entries
+                    .iter()
+                    .any(|(name, reason)| name == rule && *reason)
+            })
+        })
+    })
+}
+
+/// Does the normalized path sit under one of `segs` directories?
+fn on_path(sc: &Scanned, segs: &[&str]) -> bool {
+    let p = sc.path.replace('\\', "/");
+    segs.iter().any(|s| {
+        p.contains(&format!("/{s}/")) || p.starts_with(&format!("{s}/"))
+    })
+}
+
+/// Does `code` contain `word` with non-identifier chars around it?
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let start = from + p;
+        let end = start + word.len();
+        let ok_before = start == 0
+            || !(bytes[start - 1].is_ascii_alphanumeric()
+                || bytes[start - 1] == b'_');
+        let ok_after = end == bytes.len()
+            || !(bytes[end].is_ascii_alphanumeric()
+                || bytes[end] == b'_');
+        if ok_before && ok_after {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Any non-empty comment on `idx` or the `back` lines above it?
+fn comment_near(sc: &Scanned, idx: usize, back: usize) -> bool {
+    (0..=back).any(|b| {
+        idx.checked_sub(b)
+            .and_then(|j| sc.lines.get(j))
+            .is_some_and(|l| !l.comment.trim().is_empty())
+    })
+}
+
+/// A `SAFETY:` comment on `idx` or the `back` lines above it?
+fn safety_near(sc: &Scanned, idx: usize, back: usize) -> bool {
+    (0..=back).any(|b| {
+        idx.checked_sub(b)
+            .and_then(|j| sc.lines.get(j))
+            .is_some_and(|l| l.comment.contains("SAFETY:"))
+    })
+}
+
+/// Run every single-file rule over `sc`, appending findings to `out`.
+pub fn lint_file(sc: &Scanned, allows: &Allows, out: &mut Vec<Violation>) {
+    let serving = on_path(sc, &["server", "engine"]);
+    for (idx, ln) in sc.lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let code = ln.code.as_str();
+        let lineno = idx + 1;
+        if serving
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed(allows, idx, NO_UNWRAP)
+        {
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: lineno,
+                rule: NO_UNWRAP,
+                msg: "`.unwrap()`/`.expect(` on a serving path; \
+                      return an error or annotate why it cannot fail"
+                    .to_string(),
+            });
+        }
+        if ATOMIC_ORDERINGS.iter().any(|o| code.contains(o))
+            && !comment_near(sc, idx, 4)
+            && !allowed(allows, idx, JUSTIFIED_ATOMICS)
+        {
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: lineno,
+                rule: JUSTIFIED_ATOMICS,
+                msg: "atomic memory ordering without a nearby \
+                      justification comment"
+                    .to_string(),
+            });
+        }
+        if code.contains("thread::sleep")
+            && !allowed(allows, idx, NO_SLEEP)
+        {
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: lineno,
+                rule: NO_SLEEP,
+                msg: "thread::sleep outside an allowlisted site can \
+                      stall a whole shard"
+                    .to_string(),
+            });
+        }
+        if has_word(code, "unsafe")
+            && !safety_near(sc, idx, 3)
+            && !allowed(allows, idx, SAFETY_COMMENT)
+        {
+            out.push(Violation {
+                path: sc.path.clone(),
+                line: lineno,
+                rule: SAFETY_COMMENT,
+                msg: "`unsafe` without an adjacent `// SAFETY:` \
+                      comment"
+                    .to_string(),
+            });
+        }
+    }
+    if serving {
+        lint_guards(sc, allows, out);
+    }
+}
+
+/// First identifier bound by a `let` statement on this line.
+fn let_binding(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find("let ") {
+        let abs = from + p;
+        from = abs + 4;
+        let boundary = abs == 0
+            || !(bytes[abs - 1].is_ascii_alphanumeric()
+                || bytes[abs - 1] == b'_');
+        if !boundary {
+            continue;
+        }
+        let rest = code[abs + 4..].trim_start();
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        let name: String = rest
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !name.is_empty() {
+            return Some(name);
+        }
+    }
+    None
+}
+
+/// Is every chained `.method(` after the guard marker one that still
+/// yields a guard (poison recovery)? Any other call means the lock is
+/// a temporary dropped at the end of the statement.
+fn chain_is_clean(suffix: &str) -> bool {
+    let b: Vec<char> = suffix.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != '.' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < b.len() && b[j].is_whitespace() {
+            j += 1;
+        }
+        let start = j;
+        while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+            j += 1;
+        }
+        let named = j > start && (b[start].is_alphabetic()
+            || b[start] == '_');
+        if named {
+            let mut k = j;
+            while k < b.len() && b[k].is_whitespace() {
+                k += 1;
+            }
+            if k < b.len() && b[k] == '(' {
+                let name: String = b[start..j].iter().collect();
+                if !GUARD_CHAIN_OK.contains(&name.as_str()) {
+                    return false;
+                }
+            }
+        }
+        i = j.max(i + 1);
+    }
+    true
+}
+
+/// The `no-lock-across-blocking-call` heuristic: find `let` bindings
+/// that hold a MutexGuard, then walk the rest of their block looking
+/// for a blocking call before the guard is dropped.
+fn lint_guards(sc: &Scanned, allows: &Allows, out: &mut Vec<Violation>) {
+    for idx in 0..sc.lines.len() {
+        let ln = &sc.lines[idx];
+        if ln.in_test {
+            continue;
+        }
+        let code = ln.code.as_str();
+        let Some(marker) =
+            GUARD_MARKERS.iter().find(|m| code.contains(*m))
+        else {
+            continue;
+        };
+        if !code.contains("let ") {
+            continue;
+        }
+        let Some(pos) = code.find(marker) else { continue };
+        if !chain_is_clean(&code[pos + marker.len()..]) {
+            continue;
+        }
+        let Some(name) = let_binding(code) else { continue };
+        let base = ln.depth_at_start;
+        let drop_pat = format!("drop({name})");
+        let mut j = idx + 1;
+        while j < sc.lines.len() && sc.lines[j].depth_at_start >= base {
+            let nxt = &sc.lines[j];
+            if nxt.code.contains(&drop_pat) {
+                break;
+            }
+            let hit = BLOCKING_MARKERS
+                .iter()
+                .find(|b| nxt.code.contains(*b));
+            if let Some(hit) = hit {
+                if !nxt.in_test {
+                    if !allowed(allows, j, NO_LOCK_ACROSS_BLOCKING)
+                        && !allowed(allows, idx, NO_LOCK_ACROSS_BLOCKING)
+                    {
+                        out.push(Violation {
+                            path: sc.path.clone(),
+                            line: j + 1,
+                            rule: NO_LOCK_ACROSS_BLOCKING,
+                            msg: format!(
+                                "blocking call `{hit}` while \
+                                 MutexGuard `{name}` (line {}) is held",
+                                idx + 1
+                            ),
+                        });
+                    }
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+}
+
+/// Report malformed allowlist annotations (unknown rule / no reason).
+pub fn lint_annotations(
+    sc: &Scanned,
+    allows: &Allows,
+    out: &mut Vec<Violation>,
+) {
+    for (idx, entries) in allows {
+        for (name, has_reason) in entries {
+            if !RULES.contains(&name.as_str()) {
+                out.push(Violation {
+                    path: sc.path.clone(),
+                    line: idx + 1,
+                    rule: LINT_ANNOTATION,
+                    msg: format!(
+                        "allow() names unknown rule \"{name}\""
+                    ),
+                });
+            } else if !has_reason {
+                out.push(Violation {
+                    path: sc.path.clone(),
+                    line: idx + 1,
+                    rule: LINT_ANNOTATION,
+                    msg: format!(
+                        "allow({name}) is missing a \"-- <reason>\""
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Is `text` shaped like a wire key (`snake_case` identifier)?
+fn is_key(text: &str) -> bool {
+    let mut cs = text.chars();
+    let head_ok = matches!(cs.next(), Some(c) if c.is_ascii_lowercase() || c == '_');
+    head_ok
+        && cs.all(|c| {
+            c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'
+        })
+}
+
+/// Wire keys used in non-test code: string literals at `.set(` /
+/// `.get(` / `.req(` call sites. Returns `(line_idx, key)` pairs.
+fn key_strings(sc: &Scanned) -> Vec<(usize, &str)> {
+    sc.strings
+        .iter()
+        .filter(|s| {
+            sc.lines.get(s.line).is_some_and(|l| !l.in_test)
+        })
+        .filter(|s| {
+            KEY_PREFIXES.iter().any(|p| s.prefix.ends_with(p))
+        })
+        .filter(|s| is_key(&s.text))
+        .map(|s| (s.line, s.text.as_str()))
+        .collect()
+}
+
+/// Cross-check one `server/protocol.rs` + `server/client.rs` pair:
+/// every key the protocol reads or writes must appear backticked in
+/// the protocol module's docs (the wire-key registry), and the client
+/// may only reference keys the protocol knows.
+pub fn lint_protocol_pair(
+    proto: &Scanned,
+    client: &Scanned,
+    out: &mut Vec<Violation>,
+) {
+    let proto_allows = parse_allows(proto);
+    let client_allows = parse_allows(client);
+    let proto_keys = key_strings(proto);
+    let proto_set: HashSet<&str> =
+        proto_keys.iter().map(|(_, k)| *k).collect();
+    let docs: String = proto
+        .lines
+        .iter()
+        .map(|l| l.comment.as_str())
+        .collect::<Vec<_>>()
+        .join(" ");
+    let mut seen = HashSet::new();
+    for (idx, k) in &proto_keys {
+        if !seen.insert(*k) {
+            continue;
+        }
+        if !docs.contains(&format!("`{k}`"))
+            && !allowed(&proto_allows, *idx, PROTOCOL_KEY_DRIFT)
+        {
+            out.push(Violation {
+                path: proto.path.clone(),
+                line: idx + 1,
+                rule: PROTOCOL_KEY_DRIFT,
+                msg: format!(
+                    "wire key \"{k}\" missing from the module docs' \
+                     wire-key registry"
+                ),
+            });
+        }
+    }
+    let mut seen = HashSet::new();
+    for (idx, k) in key_strings(client) {
+        if !seen.insert(k) {
+            continue;
+        }
+        if !proto_set.contains(k)
+            && !allowed(&client_allows, idx, PROTOCOL_KEY_DRIFT)
+        {
+            out.push(Violation {
+                path: client.path.clone(),
+                line: idx + 1,
+                rule: PROTOCOL_KEY_DRIFT,
+                msg: format!(
+                    "wire key \"{k}\" used by the client but never \
+                     read or written by protocol.rs"
+                ),
+            });
+        }
+    }
+}
+
+/// Pair every `server/protocol.rs` with its sibling
+/// `server/client.rs` (same parent directory) and cross-check them.
+pub fn lint_protocol_pairs(
+    scanned: &[Scanned],
+    out: &mut Vec<Violation>,
+) {
+    type Pair<'a> = (Option<&'a Scanned>, Option<&'a Scanned>);
+    let mut pairs: BTreeMap<String, Pair<'_>> = BTreeMap::new();
+    for sc in scanned {
+        let p = sc.path.replace('\\', "/");
+        if let Some(dir) = p.strip_suffix("server/protocol.rs") {
+            pairs.entry(dir.to_string()).or_default().0 = Some(sc);
+        } else if let Some(dir) = p.strip_suffix("server/client.rs") {
+            pairs.entry(dir.to_string()).or_default().1 = Some(sc);
+        }
+    }
+    for (proto, client) in pairs.values() {
+        if let (Some(p), Some(c)) = (proto, client) {
+            lint_protocol_pair(p, c, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::scan;
+
+    fn lint(path: &str, src: &str) -> Vec<Violation> {
+        let sc = scan(path, src);
+        let allows = parse_allows(&sc);
+        let mut out = Vec::new();
+        lint_file(&sc, &allows, &mut out);
+        lint_annotations(&sc, &allows, &mut out);
+        out
+    }
+
+    #[test]
+    fn unsafe_word_boundary() {
+        // `unsafe_op_in_unsafe_fn` is an identifier, not the keyword
+        let vs = lint(
+            "x/lib.rs",
+            "#![deny(unsafe_op_in_unsafe_fn)]\nfn ok() {}\n",
+        );
+        assert!(vs.is_empty(), "{vs:?}");
+        let vs = lint("x/lib.rs", "unsafe impl Send for X {}\n");
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].rule, SAFETY_COMMENT);
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_an_atomic_ordering() {
+        let vs = lint(
+            "x/a.rs",
+            "fn f(a: u32, b: u32) -> bool {\n    \
+             matches!(a.cmp(&b), std::cmp::Ordering::Less)\n}\n",
+        );
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn annotation_requires_reason_and_known_rule() {
+        let src = "fn f() {\n\
+                   // lint: allow(no-sleep-outside-reactor)\n\
+                   std::thread::sleep(d);\n\
+                   // lint: allow(no-naps) -- not a rule\n\
+                   std::thread::sleep(d);\n\
+                   }\n";
+        let vs = lint("x/a.rs", src);
+        let ann = vs
+            .iter()
+            .filter(|v| v.rule == LINT_ANNOTATION)
+            .count();
+        let sleep = vs.iter().filter(|v| v.rule == NO_SLEEP).count();
+        assert_eq!(ann, 2, "{vs:?}");
+        assert_eq!(sleep, 2, "reasonless annotations suppress nothing");
+    }
+
+    #[test]
+    fn guard_temporary_chain_is_not_a_guard() {
+        let src = "fn f() {\n    \
+                   let tx = conns.lock().unwrap().get(&id).cloned();\n    \
+                   s.write_all(b\"x\").ok();\n}\n";
+        let sc = scan("x/server/m.rs", src);
+        let mut out = Vec::new();
+        lint_guards(&sc, &Allows::new(), &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn poison_recovery_still_binds_a_guard() {
+        let src = "fn f() {\n    \
+                   let g = m.lock().unwrap_or_else(|p| p.into_inner());\n    \
+                   s.write_all(b\"x\").ok();\n}\n";
+        let sc = scan("x/server/m.rs", src);
+        let mut out = Vec::new();
+        lint_guards(&sc, &Allows::new(), &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, NO_LOCK_ACROSS_BLOCKING);
+        assert_eq!(out[0].line, 3);
+    }
+}

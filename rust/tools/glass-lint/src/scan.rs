@@ -1,0 +1,423 @@
+//! Line-oriented Rust source scanner.
+//!
+//! A small character-level state machine splits each source line into
+//! a masked **code** channel and a **comment** channel, tracks
+//! `#[cfg(test)]` regions and brace depth, and records every string
+//! literal together with the code context that precedes it.
+//!
+//! The masking is what makes the lint rules cheap and robust: string
+//! and char literal contents are blanked to spaces (the quotes are
+//! kept), comments become a single space in the code channel, and the
+//! comment text is collected per line — so a rule can match
+//! `thread::sleep` in `code` without tripping on a doc-comment
+//! example, and match `SAFETY:` in `comment` without a real parser.
+
+/// One scanned source line.
+#[derive(Debug)]
+pub struct Line {
+    /// Code with literal contents blanked and comments stripped.
+    pub code: String,
+    /// Comment text on this line (line, block and doc comments).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+    /// Brace depth at the start of the line.
+    pub depth_at_start: i32,
+}
+
+/// One string literal plus the call-site context before its quote.
+#[derive(Debug)]
+pub struct StringLit {
+    /// 0-based index of the line holding the opening quote.
+    pub line: usize,
+    /// Literal contents, escapes kept verbatim.
+    pub text: String,
+    /// The last (up to) 16 non-whitespace code characters emitted
+    /// before the opening quote — enough to recognize call sites like
+    /// `.set(` across line breaks.
+    pub prefix: String,
+}
+
+/// A whole scanned file.
+#[derive(Debug)]
+pub struct Scanned {
+    /// Path as handed to [`scan`], used for reports and path scoping.
+    pub path: String,
+    /// Per-line records, index 0 = line 1.
+    pub lines: Vec<Line>,
+    /// Every string literal in the file, in source order.
+    pub strings: Vec<StringLit>,
+}
+
+struct Scanner {
+    out: Scanned,
+    code: String,
+    comment: String,
+    depth: i32,
+    line_depth: i32,
+    recent: Vec<char>,
+    pending_test: bool,
+    test_depth: Option<i32>,
+    line_test: bool,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn tail_matches(buf: &[char], pat: &str) -> bool {
+    let count = pat.chars().count();
+    buf.len() >= count
+        && buf[buf.len() - count..].iter().copied().eq(pat.chars())
+}
+
+impl Scanner {
+    fn push_line(&mut self) {
+        let in_test = self.line_test || self.test_depth.is_some();
+        self.out.lines.push(Line {
+            code: std::mem::take(&mut self.code),
+            comment: std::mem::take(&mut self.comment),
+            in_test,
+            depth_at_start: self.line_depth,
+        });
+        self.line_depth = self.depth;
+        self.line_test = self.test_depth.is_some();
+    }
+
+    /// Emit one code character, maintaining brace depth, the rolling
+    /// context buffer, and `#[cfg(test)]` region tracking.
+    fn emit(&mut self, c: char) {
+        self.code.push(c);
+        if !c.is_whitespace() {
+            self.recent.push(c);
+            if self.recent.len() > 16 {
+                self.recent.remove(0);
+            }
+        }
+        if c == '{' {
+            self.depth += 1;
+            if self.pending_test {
+                self.pending_test = false;
+                if self.test_depth.is_none() {
+                    self.test_depth = Some(self.depth);
+                }
+            }
+        } else if c == '}' {
+            self.depth -= 1;
+            if let Some(d) = self.test_depth {
+                if self.depth < d {
+                    self.test_depth = None;
+                }
+            }
+        }
+        if tail_matches(&self.recent, "#[cfg(test)]") {
+            self.pending_test = true;
+        }
+    }
+
+    fn push_comment(&mut self, text: &str) {
+        self.comment.push_str(text.trim());
+        self.comment.push(' ');
+    }
+
+    /// Scan a string literal whose opening `"` sits at `open`.
+    /// Handles normal, byte, and (byte-)raw strings, escapes, and the
+    /// `\` line continuation. Returns the index after the literal.
+    fn scan_string(&mut self, chars: &[char], open: usize) -> usize {
+        let n = chars.len();
+        // Raw/byte prefix: look back over the masked line tail for
+        // `r`/`br` plus hashes, with a non-identifier char before it.
+        let tail: Vec<char> = self.code.chars().collect();
+        let mut t = tail.len();
+        let mut hashes = 0usize;
+        while t > 0 && tail[t - 1] == '#' {
+            hashes += 1;
+            t -= 1;
+        }
+        let mut raw = false;
+        if t > 0 && tail[t - 1] == 'r' {
+            let mut t2 = t - 1;
+            if t2 > 0 && tail[t2 - 1] == 'b' {
+                t2 -= 1;
+            }
+            if t2 == 0 || !is_ident(tail[t2 - 1]) {
+                raw = true;
+            }
+        }
+        if !raw {
+            hashes = 0;
+        }
+        let prefix: String = self.recent.iter().collect();
+        let line = self.out.lines.len();
+        let mut content = String::new();
+        self.code.push('"');
+        let mut j = open + 1;
+        while j < n {
+            let cj = chars[j];
+            if cj == '\n' {
+                self.push_line();
+                j += 1;
+                continue;
+            }
+            if !raw && cj == '\\' {
+                self.code.push(' ');
+                let nxt = chars.get(j + 1).copied();
+                if nxt == Some('\n') {
+                    self.push_line();
+                } else {
+                    self.code.push(' ');
+                    content.push(cj);
+                    if let Some(x) = nxt {
+                        content.push(x);
+                    }
+                }
+                j += 2;
+                continue;
+            }
+            if cj == '"' {
+                if raw {
+                    let mut have = 0;
+                    while chars.get(j + 1 + have) == Some(&'#') {
+                        have += 1;
+                    }
+                    if have >= hashes {
+                        self.code.push('"');
+                        for _ in 0..hashes {
+                            self.code.push('#');
+                        }
+                        j += 1 + hashes;
+                        break;
+                    }
+                    self.code.push(' ');
+                    content.push(cj);
+                    j += 1;
+                    continue;
+                }
+                self.code.push('"');
+                j += 1;
+                break;
+            }
+            self.code.push(' ');
+            content.push(cj);
+            j += 1;
+        }
+        self.out.strings.push(StringLit {
+            line,
+            text: content,
+            prefix,
+        });
+        j
+    }
+}
+
+/// Scan `text` into per-line code/comment records plus string
+/// literals. `path` is carried through verbatim for reporting.
+pub fn scan(path: &str, text: &str) -> Scanned {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut s = Scanner {
+        out: Scanned {
+            path: path.to_string(),
+            lines: Vec::new(),
+            strings: Vec::new(),
+        },
+        code: String::new(),
+        comment: String::new(),
+        depth: 0,
+        line_depth: 0,
+        recent: Vec::new(),
+        pending_test: false,
+        test_depth: None,
+        line_test: false,
+    };
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            s.push_line();
+            i += 1;
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            // Line comment (incl. `///` and `//!` doc comments).
+            let mut j = i + 2;
+            while matches!(chars.get(j), Some('/') | Some('!')) {
+                j += 1;
+            }
+            let mut k = j;
+            while k < n && chars[k] != '\n' {
+                k += 1;
+            }
+            let text: String = chars[j..k].iter().collect();
+            s.push_comment(&text);
+            s.code.push(' ');
+            i = k;
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            // Block comment, nesting-aware.
+            s.code.push(' ');
+            let mut bd = 1;
+            let mut j = i + 2;
+            let mut buf = String::new();
+            while j < n && bd > 0 {
+                if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    bd += 1;
+                    j += 2;
+                } else if chars[j] == '*'
+                    && chars.get(j + 1) == Some(&'/')
+                {
+                    bd -= 1;
+                    j += 2;
+                } else if chars[j] == '\n' {
+                    let t = std::mem::take(&mut buf);
+                    s.push_comment(&t);
+                    s.push_line();
+                    j += 1;
+                } else {
+                    buf.push(chars[j]);
+                    j += 1;
+                }
+            }
+            s.push_comment(&buf);
+            i = j;
+            continue;
+        }
+        if c == '\'' {
+            // Char literal vs lifetime: `'\...'` and `'x'` are
+            // literals (contents blanked), anything else is a
+            // lifetime tick emitted as plain code.
+            if chars.get(i + 1) == Some(&'\\') {
+                s.code.push('\'');
+                let mut j = i + 1;
+                while j < n {
+                    if chars[j] == '\\' {
+                        s.code.push_str("  ");
+                        j += 2;
+                    } else if chars[j] == '\'' {
+                        s.code.push('\'');
+                        j += 1;
+                        break;
+                    } else {
+                        s.code.push(' ');
+                        j += 1;
+                    }
+                }
+                i = j;
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') {
+                s.code.push_str("' '");
+                i += 3;
+                continue;
+            }
+            s.emit(c);
+            i += 1;
+            continue;
+        }
+        if c == '"' {
+            i = s.scan_string(&chars, i);
+            continue;
+        }
+        s.emit(c);
+        i += 1;
+    }
+    if !s.code.is_empty() || !s.comment.is_empty() {
+        s.push_line();
+    }
+    s.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_masked_quotes_kept() {
+        let sc = scan("t.rs", "let x = \"thread::sleep\";\n");
+        assert_eq!(sc.lines.len(), 1);
+        assert!(!sc.lines[0].code.contains("thread::sleep"));
+        assert!(sc.lines[0].code.contains('"'));
+        assert_eq!(sc.strings.len(), 1);
+        assert_eq!(sc.strings[0].text, "thread::sleep");
+    }
+
+    #[test]
+    fn comments_split_from_code() {
+        let sc = scan("t.rs", "foo(); // SAFETY: checked above\n");
+        assert!(sc.lines[0].code.contains("foo()"));
+        assert!(!sc.lines[0].code.contains("SAFETY"));
+        assert!(sc.lines[0].comment.contains("SAFETY: checked above"));
+    }
+
+    #[test]
+    fn block_comments_keep_line_numbers() {
+        let sc = scan("t.rs", "a();\n/* x\n y */\nb();\n");
+        assert_eq!(sc.lines.len(), 4);
+        assert!(sc.lines[3].code.contains("b()"));
+        assert!(sc.lines[1].comment.contains('x'));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t() { x.unwrap(); }\n\
+                   }\n\
+                   fn live2() {}\n";
+        let sc = scan("t.rs", src);
+        let flags: Vec<bool> =
+            sc.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(
+            flags,
+            [false, false, true, true, true, false]
+        );
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let sc = scan("t.rs", "fn f<'a>(x: &'a str) -> char { '{' }\n");
+        // the brace inside the char literal must not affect depth
+        let sc2 = scan("t.rs", "fn g() {}\n");
+        assert_eq!(
+            sc.lines[0].depth_at_start,
+            sc2.lines[0].depth_at_start
+        );
+        assert!(sc.lines[0].code.contains("'a"));
+        let sc3 = scan("t.rs", "let c = '\\n'; foo();\n");
+        assert!(sc3.lines[0].code.contains("foo()"));
+    }
+
+    #[test]
+    fn raw_strings_consume_hashes() {
+        let sc =
+            scan("t.rs", "let x = r#\"a \"quoted\" b\"#; foo();\n");
+        assert_eq!(sc.strings.len(), 1);
+        assert_eq!(sc.strings[0].text, "a \"quoted\" b");
+        assert!(sc.lines[0].code.contains("foo()"));
+    }
+
+    #[test]
+    fn backslash_continuation_keeps_line_numbers() {
+        let src = "let s = \"first \\\n    second\";\nafter();\n";
+        let sc = scan("t.rs", src);
+        assert_eq!(sc.lines.len(), 3);
+        assert!(sc.lines[2].code.contains("after()"));
+    }
+
+    #[test]
+    fn string_prefix_captures_multiline_call_site() {
+        let src = "o.set(\n    \"warm_hits\",\n    v,\n);\n";
+        let sc = scan("t.rs", src);
+        assert_eq!(sc.strings[0].text, "warm_hits");
+        assert!(sc.strings[0].prefix.ends_with(".set("));
+    }
+
+    #[test]
+    fn second_string_in_call_is_not_key_prefixed() {
+        let sc = scan("t.rs", "o.set(\"k\", Json::Str(\"v\".into()));\n");
+        assert!(sc.strings[0].prefix.ends_with(".set("));
+        assert!(!sc.strings[1].prefix.ends_with(".set("));
+    }
+}

@@ -1,0 +1,9 @@
+fn nap_without_reason() {
+    // lint: allow(no-sleep-outside-reactor)
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}
+
+fn nap_with_bogus_rule() {
+    // lint: allow(no-naps) -- this rule does not exist
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}

@@ -1,0 +1,5 @@
+fn backoff() {
+    // lint: allow(no-sleep-outside-reactor) -- client-side backoff,
+    // no server slot or lock is held while waiting
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}

@@ -1,0 +1,14 @@
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn bump(c: &AtomicU64) {
+    // monotonic counter: readers tolerate stale values
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+fn strict(c: &AtomicU64) -> u64 {
+    c.load(Ordering::SeqCst)
+}
+
+fn is_less(a: u32, b: u32) -> bool {
+    matches!(a.cmp(&b), std::cmp::Ordering::Less)
+}

@@ -1,0 +1,8 @@
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+fn flush(m: &Mutex<Vec<u8>>, s: &mut TcpStream) {
+    let buf = m.lock().unwrap_or_else(|p| p.into_inner());
+    s.write_all(&buf).ok();
+}

@@ -1,0 +1,18 @@
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+fn flush(m: &Mutex<Vec<u8>>, s: &mut TcpStream) {
+    let msg = {
+        let buf = m.lock().unwrap_or_else(|p| p.into_inner());
+        buf.clone()
+    };
+    s.write_all(&msg).ok();
+}
+
+fn flush_explicit_drop(m: &Mutex<Vec<u8>>, s: &mut TcpStream) {
+    let buf = m.lock().unwrap_or_else(|p| p.into_inner());
+    let msg = buf.clone();
+    drop(buf);
+    s.write_all(&msg).ok();
+}

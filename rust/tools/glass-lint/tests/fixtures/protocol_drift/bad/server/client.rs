@@ -1,0 +1,4 @@
+pub fn parse(j: &Json) {
+    j.get("id");
+    j.get("finish");
+}

@@ -1,0 +1,11 @@
+//! Fixture protocol module.
+//!
+//! # Wire-key registry
+//!
+//! `id`, `text`.
+
+pub fn to_frame(o: &mut Json) {
+    o.set("id", 1);
+    o.set("text", "x");
+    o.set("queue_pos", 0);
+}

@@ -1,0 +1,3 @@
+struct Wrapper(*mut u8);
+
+unsafe impl Send for Wrapper {}

@@ -1,0 +1,11 @@
+struct Wrapper(*mut u8);
+
+// SAFETY: the pointer is only ever dereferenced behind the Mutex
+// that owns this wrapper, so cross-thread access is serialized.
+unsafe impl Send for Wrapper {}
+
+fn shifted(x: u64) -> u64 {
+    // an identifier containing the word is not the keyword
+    let unsafe_op_in_unsafe_fn = x;
+    unsafe_op_in_unsafe_fn << 1
+}

@@ -1,0 +1,7 @@
+fn route(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+fn describe(v: Option<u32>) -> u32 {
+    v.expect("value must be routed")
+}

@@ -1,0 +1,16 @@
+fn route(v: Option<u32>) -> Option<u32> {
+    v
+}
+
+fn annotated(v: Option<u32>) -> u32 {
+    // lint: allow(no-unwrap-on-serving-paths) -- caller checked is_some
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        assert_eq!(super::route(Some(2)).unwrap(), 2);
+    }
+}

@@ -1,0 +1,3 @@
+fn spin_wait() {
+    std::thread::sleep(std::time::Duration::from_millis(5));
+}

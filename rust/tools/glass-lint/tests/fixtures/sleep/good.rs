@@ -1,0 +1,12 @@
+fn idle_tick() {
+    // lint: allow(no-sleep-outside-reactor) -- reactor idle tick
+    std::thread::sleep(std::time::Duration::from_micros(500));
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sleeps_are_fine_in_tests() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
