@@ -32,7 +32,11 @@
 //! the sim backend), and the protocol-v2 streaming row: the same
 //! workload over real TCP through the nonblocking reactor with a crowd
 //! of idle connections attached (`idle_conns_toks_per_s` — proof that
-//! idle connections cost table entries, not throughput).
+//! idle connections cost table entries, not throughput;
+//! `idle_cpu_sweeps_per_token` — poller wakeups per generated token,
+//! ceilinged so a regression back to per-connection sweeping fails CI;
+//! and `backpressure_pauses` — park transitions from one deterministic
+//! slow-consumer pass, floored so backpressure keeps engaging).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -46,8 +50,8 @@ use glass::engine::{Engine, KvState};
 use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
 use glass::server::batcher::{Batcher, BatcherOptions};
 use glass::server::client::Client;
-use glass::server::protocol::Request;
-use glass::server::scheduler::{Pending, Scheduler};
+use glass::server::protocol::{Event, Request};
+use glass::server::scheduler::{Control, Pending, Scheduler};
 use glass::server::{route_shard, route_window, Server, ServerOptions};
 use glass::tensor::TensorF;
 use glass::util::bench::{check_regression, Bencher};
@@ -636,6 +640,7 @@ fn main() {
         .collect();
     let mut v2_client =
         Client::connect_v2(&server.addr).expect("v2 client");
+    let io_before = server.io_stats();
     b.bench(
         &format!("v2 streaming serve (b=4, {idle_n} idle conns)"),
         (n_reqs * max_tokens) as f64,
@@ -657,8 +662,108 @@ fn main() {
             out.len()
         },
     );
+    // idle fleet (N=256 conns): poller wakeups per generated token over
+    // the row above — the readiness-CPU observable the gate ceilings.
+    // With a reacting poller this sits near 1 (one sweep drains a whole
+    // batch of events); a reactor that went back to sweeping the fleet
+    // scales with idle_n instead. Warmup iterations land in the sweep
+    // window but not in the token denominator, so the reported rate is
+    // conservative (never flattering).
+    let io_after = server.io_stats();
+    let v2_iters = b
+        .results
+        .iter()
+        .find(|r| r.name.starts_with("v2 streaming serve"))
+        .map(|r| r.iters)
+        .unwrap_or(1)
+        .max(1);
+    let idle_cpu_sweeps_per_token =
+        io_after.sweeps.saturating_sub(io_before.sweeps) as f64
+            / (v2_iters * n_reqs * max_tokens) as f64;
+    println!(
+        "idle fleet (N={idle_n} conns): {idle_cpu_sweeps_per_token:.2} \
+         poller sweeps per generated token ({} poller)",
+        server.poller_kind()
+    );
     drop(idle_conns);
     server.stop();
+
+    // --------------- slow consumer (backpressure park/resume), one
+    // deterministic pass: a streaming session is parked mid-decode
+    // (exactly what the reactor does when a consumer's outbound backlog
+    // crosses the high-water mark), rides along emitting nothing, then
+    // resumes and completes. The park count is the gate's backpressure
+    // floor — cumulative reactor-side counts would depend on kernel
+    // socket buffering and would not be machine-independent.
+    let backpressure_pauses = {
+        let mut bp = Batcher::with_options(
+            engine.clone(),
+            BatcherOptions::new(4).without_cache(),
+        )
+        .expect("backpressure batcher");
+        let base = bp.backpressure_pauses;
+        let sched = Scheduler::new(4, Duration::from_millis(1));
+        let _ = sched.submit(Pending {
+            request: Request {
+                id: 1,
+                prompt: prompts[0].clone(),
+                strategy: "i-glass".into(),
+                lambda: 0.5,
+                density: 0.5,
+                max_tokens,
+                refresh_every: 0,
+                cache: CacheMode::Off,
+            },
+            arrived: Instant::now(),
+            conn_id: 1,
+            stream: true,
+            resume_from: 0,
+        });
+        // Cell counters: the sink closure stays live across the
+        // mid-pass reads below, so plain `&mut` captures won't borrow
+        let events = std::cell::Cell::new(0usize);
+        let done_tokens = std::cell::Cell::new(0usize);
+        let mut sink = |_c: u64, ev: Event| {
+            events.set(events.get() + 1);
+            if let Event::Done(resp) = ev {
+                assert!(resp.error.is_none(), "{:?}", resp.error);
+                done_tokens.set(resp.tokens);
+            }
+        };
+        let over = bp
+            .admit(sched.next_batch().expect("batch"), &mut sink);
+        assert!(over.is_empty());
+        for _ in 0..4 {
+            bp.step(&mut sink).expect("step");
+        }
+        sched.control(Control::Park { conn_id: 1, id: 1 });
+        bp.apply_controls(&sched, &mut sink);
+        assert_eq!(bp.paused(), 1, "park must pause the live slot");
+        let during_park = events.get();
+        for _ in 0..4 {
+            bp.step(&mut sink).expect("parked step");
+        }
+        assert_eq!(
+            events.get(),
+            during_park,
+            "a parked session must emit nothing"
+        );
+        sched.control(Control::Unpark { conn_id: 1, id: 1 });
+        bp.apply_controls(&sched, &mut sink);
+        while bp.runnable_active() > 0 {
+            bp.step(&mut sink).expect("resume step");
+        }
+        assert!(
+            done_tokens.get() > 0,
+            "parked session must still complete after resume"
+        );
+        bp.backpressure_pauses - base
+    };
+    println!(
+        "slow consumer (one deterministic pass): {backpressure_pauses} \
+         park transition(s); stream completed in full after resume"
+    );
+    assert!(backpressure_pauses >= 1);
 
     println!("\n{}", b.report());
     // headline comparisons for EXPERIMENTS.md §Perf — rows looked up by
@@ -728,6 +833,18 @@ fn main() {
     doc.set(
         "idle_conns_toks_per_s",
         Json::Num(row("v2 streaming serve").throughput()),
+    );
+    // readiness observables (see the idle-fleet + slow-consumer passes
+    // above) — the CI gate enforces the first as a ceiling (idle
+    // connections must not cost poller sweeps) and the second as a
+    // floor (backpressure parking must keep engaging)
+    doc.set(
+        "idle_cpu_sweeps_per_token",
+        Json::Num(idle_cpu_sweeps_per_token),
+    );
+    doc.set(
+        "backpressure_pauses",
+        Json::Num(backpressure_pauses as f64),
     );
     doc.set(
         "cache_lookup_us_p95",

@@ -105,6 +105,9 @@ fn main() -> Result<()> {
             Event::Accepted { queue_pos, .. } => {
                 println!("  accepted at queue position {queue_pos}");
             }
+            Event::Queue { position, .. } => {
+                println!("  still queued at position {position}");
+            }
             Event::Delta { .. } => deltas += 1,
             Event::Refresh { changed, .. } => {
                 refreshes += 1;

@@ -4,6 +4,12 @@
 //! (`--config path.toml`) → CLI overrides. The defaults are sized so the
 //! full experiment suite finishes in minutes on one CPU core; the paper's
 //! full-scale settings are noted field-by-field.
+//!
+//! Serving knobs have a second, embeddable face: [`ServerConfig`] is
+//! the unified builder that `glass serve` (and embedders calling
+//! [`crate::server::Server::start_with_config`]) construct — either
+//! field-by-field with `with_*` methods or projected from a loaded
+//! [`RunConfig`] via [`ServerConfig::from_run`].
 
 mod toml;
 
@@ -62,9 +68,19 @@ pub struct RunConfig {
     /// Largest accepted wire frame (`glass serve`); bounds each
     /// connection's read buffer.
     pub max_frame_bytes: usize,
-    /// Outbound buffer cap per connection (`glass serve`); a consumer
-    /// that falls this far behind is disconnected.
+    /// Outbound buffer cap per connection (`glass serve`); also the
+    /// default backpressure high-water mark — a consumer that falls
+    /// this far behind has its sessions parked (not disconnected)
+    /// until the buffer drains below the low-water mark.
     pub conn_buffer_bytes: usize,
+    /// Backpressure high-water mark in bytes (`glass serve`): a
+    /// connection whose outbound backlog crosses this parks its
+    /// decode slots. 0 (default) derives it from `conn_buffer_bytes`.
+    pub high_water_bytes: usize,
+    /// Backpressure low-water mark in bytes (`glass serve`): a parked
+    /// connection resumes once its backlog drains below this. 0
+    /// (default) derives a quarter of the high-water mark.
+    pub low_water_bytes: usize,
     /// Directory for persistent prefix-cache snapshots (`glass serve`).
     /// When set, `Server::stop` writes each shard's hot entries there
     /// and the next startup warm-starts from them; unset (default)
@@ -96,6 +112,8 @@ impl Default for RunConfig {
             protocol: "v2".to_string(),
             max_frame_bytes: crate::server::DEFAULT_MAX_FRAME_BYTES,
             conn_buffer_bytes: crate::server::DEFAULT_CONN_BUFFER_BYTES,
+            high_water_bytes: 0,
+            low_water_bytes: 0,
             cache_dir: None,
         }
     }
@@ -175,6 +193,12 @@ impl RunConfig {
         if let Some(v) = get("conn_buffer_bytes") {
             self.conn_buffer_bytes = v.as_int()? as usize;
         }
+        if let Some(v) = get("high_water_bytes") {
+            self.high_water_bytes = v.as_int()? as usize;
+        }
+        if let Some(v) = get("low_water_bytes") {
+            self.low_water_bytes = v.as_int()? as usize;
+        }
         if let Some(v) = get("cache_dir") {
             self.cache_dir = Some(PathBuf::from(v.as_str()?));
         }
@@ -217,10 +241,204 @@ impl RunConfig {
             args.get_usize("max-frame-bytes", self.max_frame_bytes)?;
         self.conn_buffer_bytes = args
             .get_usize("conn-buffer-bytes", self.conn_buffer_bytes)?;
+        self.high_water_bytes = args
+            .get_usize("high-water-bytes", self.high_water_bytes)?;
+        self.low_water_bytes = args
+            .get_usize("low-water-bytes", self.low_water_bytes)?;
         if let Some(v) = args.get("cache-dir") {
             self.cache_dir = Some(PathBuf::from(v));
         }
         Ok(())
+    }
+}
+
+/// The unified server construction config: every knob the serving
+/// stack reads, in one builder.
+///
+/// This replaces the scattered trio of `Server::start_with` arguments,
+/// [`crate::server::ServerOptions`], and
+/// [`crate::server::batcher::BatcherOptions`] as the construction API:
+/// those two remain as thin compatibility views (`ServerConfig` is
+/// `From<ServerOptions>`, and `start_with_config` derives the batcher
+/// options internally). Build one with [`ServerConfig::new`] plus
+/// `with_*` chaining, or project it from a loaded [`RunConfig`] with
+/// [`ServerConfig::from_run`], then pass it to
+/// [`crate::server::Server::start_with_config`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `"127.0.0.1:7433"` (`:0` picks a free port).
+    pub bind: String,
+    /// Serving shard count (per-shard engine thread, reactor thread,
+    /// scheduler queue, and prefix cache); 1 = the unsharded server.
+    pub shards: usize,
+    /// Decode slot count per shard (must fit a compiled `decode_b{W}`).
+    pub batch_width: usize,
+    /// Total shared-prefix cache byte budget, split evenly across
+    /// shards; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Directory for persistent prefix-cache snapshots: each shard
+    /// warm-starts from `prefix-shard-<i>.gpxs` here and
+    /// [`crate::server::Server::stop`] rewrites the files after drain.
+    /// None (default) disables persistence.
+    pub cache_dir: Option<PathBuf>,
+    /// Cluster same-prefix requests at each shard's scheduler and
+    /// defer same-prefix admissions behind an in-flight publisher.
+    pub group_prefixes: bool,
+    /// Prefill chunks advanced per decode step in each shard's batcher
+    /// (chunked-prefill fairness knob; min 1).
+    pub chunk_budget: usize,
+    /// Largest accepted wire frame; bounds the per-connection read
+    /// buffer. Oversized frames are a protocol error that closes the
+    /// connection.
+    pub max_frame_bytes: usize,
+    /// Outbound buffer cap per connection and the default backpressure
+    /// high-water mark.
+    pub conn_buffer_bytes: usize,
+    /// Backpressure high-water mark: a connection whose outbound
+    /// backlog crosses this has its sessions parked (decode slots ride
+    /// along without emitting) until the socket drains. 0 (default) =
+    /// use `conn_buffer_bytes`; see [`ServerConfig::resolved_high_water`].
+    pub high_water_bytes: usize,
+    /// Backpressure low-water mark: a parked connection resumes once
+    /// its backlog drains below this. 0 (default) = a quarter of the
+    /// high-water mark; see [`ServerConfig::resolved_low_water`].
+    pub low_water_bytes: usize,
+}
+
+impl ServerConfig {
+    /// Defaults for everything except the batch width: localhost bind,
+    /// one shard, cache on, persistence off, derived watermarks.
+    pub fn new(batch_width: usize) -> ServerConfig {
+        ServerConfig {
+            bind: "127.0.0.1:7433".to_string(),
+            shards: 1,
+            batch_width,
+            cache_bytes: crate::engine::prefix_cache::DEFAULT_CACHE_BYTES,
+            cache_dir: None,
+            group_prefixes: true,
+            chunk_budget: 1,
+            max_frame_bytes: crate::server::DEFAULT_MAX_FRAME_BYTES,
+            conn_buffer_bytes: crate::server::DEFAULT_CONN_BUFFER_BYTES,
+            high_water_bytes: 0,
+            low_water_bytes: 0,
+        }
+    }
+
+    /// Project the serving slice of a loaded [`RunConfig`] (file + CLI
+    /// overrides already applied) onto a `ServerConfig`.
+    pub fn from_run(run: &RunConfig, batch_width: usize) -> ServerConfig {
+        ServerConfig {
+            bind: run.bind.clone(),
+            shards: run.shards,
+            batch_width,
+            cache_bytes: run.cache_bytes,
+            cache_dir: run.cache_dir.clone(),
+            group_prefixes: true,
+            chunk_budget: 1,
+            max_frame_bytes: run.max_frame_bytes,
+            conn_buffer_bytes: run.conn_buffer_bytes,
+            high_water_bytes: run.high_water_bytes,
+            low_water_bytes: run.low_water_bytes,
+        }
+    }
+
+    /// Builder-style bind-address override.
+    pub fn with_bind(mut self, bind: &str) -> ServerConfig {
+        self.bind = bind.to_string();
+        self
+    }
+
+    /// Builder-style shard count override.
+    pub fn with_shards(mut self, shards: usize) -> ServerConfig {
+        self.shards = shards;
+        self
+    }
+
+    /// Builder-style cache byte-budget override (0 disables).
+    pub fn with_cache_bytes(mut self, n: usize) -> ServerConfig {
+        self.cache_bytes = n;
+        self
+    }
+
+    /// Builder-style persistent-cache directory override.
+    pub fn with_cache_dir(mut self, dir: Option<PathBuf>) -> ServerConfig {
+        self.cache_dir = dir;
+        self
+    }
+
+    /// Builder-style prefix-grouping toggle.
+    pub fn with_group_prefixes(mut self, on: bool) -> ServerConfig {
+        self.group_prefixes = on;
+        self
+    }
+
+    /// Builder-style chunked-prefill budget override.
+    pub fn with_chunk_budget(mut self, n: usize) -> ServerConfig {
+        self.chunk_budget = n;
+        self
+    }
+
+    /// Builder-style frame-size cap override.
+    pub fn with_max_frame_bytes(mut self, n: usize) -> ServerConfig {
+        self.max_frame_bytes = n;
+        self
+    }
+
+    /// Builder-style outbound buffer cap override.
+    pub fn with_conn_buffer_bytes(mut self, n: usize) -> ServerConfig {
+        self.conn_buffer_bytes = n;
+        self
+    }
+
+    /// Builder-style backpressure watermark override (0 = derive).
+    pub fn with_watermarks(
+        mut self,
+        high: usize,
+        low: usize,
+    ) -> ServerConfig {
+        self.high_water_bytes = high;
+        self.low_water_bytes = low;
+        self
+    }
+
+    /// The effective high-water mark: the explicit setting, or the
+    /// outbound buffer cap when left at 0.
+    pub fn resolved_high_water(&self) -> usize {
+        if self.high_water_bytes > 0 {
+            self.high_water_bytes
+        } else {
+            self.conn_buffer_bytes
+        }
+    }
+
+    /// The effective low-water mark: the explicit setting clamped to
+    /// the high-water mark, or a quarter of it when left at 0 (drain
+    /// deep enough that resume doesn't immediately re-park, shallow
+    /// enough that the socket never idles while slots are parked).
+    pub fn resolved_low_water(&self) -> usize {
+        let high = self.resolved_high_water();
+        if self.low_water_bytes > 0 {
+            self.low_water_bytes.min(high)
+        } else {
+            (high / 4).max(1)
+        }
+    }
+}
+
+impl From<crate::server::ServerOptions> for ServerConfig {
+    /// Lossless upgrade from the legacy options struct: every
+    /// `ServerOptions` field maps to its `ServerConfig` namesake and
+    /// the knobs it never had take their defaults.
+    fn from(o: crate::server::ServerOptions) -> ServerConfig {
+        ServerConfig {
+            shards: o.shards,
+            cache_bytes: o.cache_bytes,
+            cache_dir: o.cache_dir,
+            group_prefixes: o.group_prefixes,
+            max_frame_bytes: o.max_frame_bytes,
+            conn_buffer_bytes: o.conn_buffer_bytes,
+            ..ServerConfig::new(o.batch_width)
+        }
     }
 }
 
@@ -337,5 +555,105 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert_eq!(c.density, 0.3);
         assert_eq!(c.lambda_grid, vec![0.1, 0.9]);
+    }
+
+    #[test]
+    fn watermark_knobs_parse_from_toml_and_cli() {
+        let c = RunConfig::default();
+        assert_eq!(c.high_water_bytes, 0, "default is derive-from-buffer");
+        assert_eq!(c.low_water_bytes, 0);
+        let mut c = RunConfig::default();
+        c.apply_toml("high_water_bytes = 8192\nlow_water_bytes = 1024\n")
+            .unwrap();
+        assert_eq!(c.high_water_bytes, 8192);
+        assert_eq!(c.low_water_bytes, 1024);
+        let args = Args::parse(
+            &["x", "--high-water-bytes", "4096", "--low-water-bytes", "512"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.high_water_bytes, 4096, "CLI overrides the file");
+        assert_eq!(c.low_water_bytes, 512);
+    }
+
+    #[test]
+    fn server_config_defaults_and_builder() {
+        let c = ServerConfig::new(4);
+        assert_eq!(c.batch_width, 4);
+        assert_eq!(c.shards, 1, "default must be the unsharded server");
+        assert_eq!(c.chunk_budget, 1);
+        assert!(c.group_prefixes);
+        assert_eq!(c.cache_dir, None);
+        let c = c
+            .with_bind("0.0.0.0:0")
+            .with_shards(2)
+            .with_cache_bytes(1 << 20)
+            .with_chunk_budget(3)
+            .with_max_frame_bytes(4096)
+            .with_conn_buffer_bytes(1 << 17)
+            .with_cache_dir(Some(PathBuf::from("/tmp/warm")))
+            .with_group_prefixes(false)
+            .with_watermarks(8192, 2048);
+        assert_eq!(c.bind, "0.0.0.0:0");
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.cache_bytes, 1 << 20);
+        assert_eq!(c.chunk_budget, 3);
+        assert_eq!(c.max_frame_bytes, 4096);
+        assert_eq!(c.conn_buffer_bytes, 1 << 17);
+        assert_eq!(c.cache_dir, Some(PathBuf::from("/tmp/warm")));
+        assert!(!c.group_prefixes);
+        assert_eq!(c.high_water_bytes, 8192);
+        assert_eq!(c.low_water_bytes, 2048);
+    }
+
+    #[test]
+    fn watermarks_derive_when_unset() {
+        let c = ServerConfig::new(1).with_conn_buffer_bytes(1 << 20);
+        assert_eq!(c.resolved_high_water(), 1 << 20);
+        assert_eq!(c.resolved_low_water(), 1 << 18, "low = high / 4");
+        let c = c.with_watermarks(4096, 0);
+        assert_eq!(c.resolved_high_water(), 4096);
+        assert_eq!(c.resolved_low_water(), 1024);
+        let c = c.with_watermarks(4096, 1 << 30);
+        assert_eq!(
+            c.resolved_low_water(),
+            4096,
+            "low is clamped to high so resume is always reachable"
+        );
+    }
+
+    #[test]
+    fn server_config_from_run_and_legacy_options() {
+        let run = RunConfig {
+            bind: "0.0.0.0:9".to_string(),
+            shards: 2,
+            cache_bytes: 12345,
+            high_water_bytes: 777,
+            ..RunConfig::default()
+        };
+        let c = ServerConfig::from_run(&run, 4);
+        assert_eq!(c.bind, "0.0.0.0:9");
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.batch_width, 4);
+        assert_eq!(c.cache_bytes, 12345);
+        assert_eq!(c.high_water_bytes, 777);
+
+        let opts = crate::server::ServerOptions::new(4)
+            .with_shards(2)
+            .with_max_frame_bytes(4096)
+            .with_cache_dir(Some(PathBuf::from("/tmp/w")));
+        let c = ServerConfig::from(opts);
+        assert_eq!(c.batch_width, 4);
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.max_frame_bytes, 4096);
+        assert_eq!(c.cache_dir, Some(PathBuf::from("/tmp/w")));
+        assert_eq!(
+            c.high_water_bytes, 0,
+            "legacy options carry no watermark: derived defaults apply"
+        );
     }
 }

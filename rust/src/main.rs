@@ -54,6 +54,10 @@ SUBCOMMANDS:
                               (per-connection read / write buffer caps;
                               both protocols are served, auto-detected
                               per connection)
+                              [--high-water-bytes N] [--low-water-bytes N]
+                              (backpressure watermarks: a backlogged
+                              consumer is parked past high and resumed
+                              below low; 0 = derive from the buffer cap)
     client                    send a request [--bind ADDR] [--prompt STR]
                               [--strategy S] [--density F]
                               [--cache on|off|readonly] [--stats]
@@ -275,13 +279,9 @@ fn nps(args: &Args, cfg: &RunConfig) -> Result<()> {
 fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     let engine = load_engine(cfg)?;
     let batch = args.get_usize("batch", cfg.batch)?;
-    let mut opts = glass::server::ServerOptions::new(batch);
-    opts.cache_bytes = cfg.cache_bytes;
-    opts.shards = cfg.shards.max(1);
-    opts.max_frame_bytes = cfg.max_frame_bytes;
-    opts.conn_buffer_bytes = cfg.conn_buffer_bytes;
-    opts.cache_dir = cfg.cache_dir.clone();
-    let server = Server::start_with(engine, &cfg.bind, opts)?;
+    let mut scfg = glass::config::ServerConfig::from_run(cfg, batch);
+    scfg.shards = cfg.shards.max(1);
+    let server = Server::start_with_config(engine, &scfg)?;
     println!(
         "serving on {} ({} shard{} x batch width {batch}, prefix \
          cache {}, protocols v1+v2 auto-detected); Ctrl-C to stop",
@@ -373,6 +373,9 @@ fn stream_one(
         match c.next_event(id)? {
             Event::Accepted { queue_pos, .. } => {
                 println!("accepted (queue position {queue_pos})");
+            }
+            Event::Queue { position, .. } => {
+                println!("waiting (queue position {position})");
             }
             Event::Delta { text, .. } => {
                 print!("{text}");

@@ -82,8 +82,27 @@
 //! exactly-one-terminal-per-session guarantee. (Controls for ids the
 //! server never saw are answered with a no-op error frame by the
 //! reactor before they reach the batcher.)
+//!
+//! # Backpressure (`Park` / `Unpark`)
+//!
+//! When a client stops reading and its bounded write buffer crosses
+//! the high-water mark, the reactor sends a `Park` per live session on
+//! that connection instead of disconnecting it. A parked **decoding**
+//! slot keeps its KV, emitter state, and FCFS position but takes no
+//! decode progress (its lane rides along in the batched step
+//! idempotently; the logits are discarded), so the `Unpark` that
+//! follows once the buffer drains below the low-water mark resumes a
+//! stream that is **byte-identical** to one that never paused. A
+//! still-**prefilling** parked session keeps streaming its prompt in —
+//! prefill pushes no frames to the stalled client — and starts its
+//! decode paused; a still-**queued** one is marked and admitted
+//! paused. If every occupied slot is parked the run loop blocks on the
+//! scheduler (zero CPU) rather than spinning, and a scheduler close
+//! lifts all parks so shutdown drain cannot deadlock.
+//! `backpressure_pauses` counts the parks that took effect (the
+//! bench's slow-consumer floor).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -252,6 +271,13 @@ struct Slot {
     decode_started: Instant,
     /// Incremental delta-text state (protocol v2 streaming).
     emitter: DeltaEmitter,
+    /// Parked by backpressure ([`Control::Park`]): the slot keeps its
+    /// KV, emitter, and FCFS position, but takes no decode progress
+    /// until [`Control::Unpark`] — the lane still rides along in the
+    /// batched step (same token, same position; the write is
+    /// idempotent and the logits are discarded), so resuming is
+    /// byte-identical to never having paused.
+    paused: bool,
 }
 
 /// A newcomer whose long prompt is still streaming in: it owns its
@@ -322,8 +348,21 @@ pub struct Batcher {
     telemetry: Arc<CacheTelemetry>,
     /// Live slot-occupancy gauges (shared with the `stats` command).
     gauges: Arc<ShardGauges>,
+    /// Sessions parked by backpressure before (or while) they hold a
+    /// decode slot: a [`Control::Park`] for a queued or still-prefilling
+    /// session lands here, and [`Batcher::place`] starts the slot
+    /// paused if its key is present. Cleared by `Unpark`, `Cancel`, or
+    /// shutdown drain.
+    parked: HashSet<(u64, u64)>,
+    /// Last queue position pushed per streaming session (`conn_id`,
+    /// `request id`) — v2 `queue` frames are emitted only when the
+    /// position changes.
+    last_queue_pos: HashMap<(u64, u64), usize>,
     /// Admission sequence counter (FCFS chunk scheduling).
     admit_seq: u64,
+    /// Sessions newly paused by [`Control::Park`] (telemetry; the
+    /// bench's slow-consumer floor).
+    pub backpressure_pauses: u64,
     /// Total decode steps executed (telemetry / tests).
     pub steps: u64,
     /// Total prefill chunks executed for streaming admissions.
@@ -339,6 +378,12 @@ pub struct Batcher {
 }
 
 /// Construction knobs for [`Batcher::with_options`].
+///
+/// **Deprecation note:** when standing up a whole server, build a
+/// [`crate::config::ServerConfig`] instead —
+/// [`crate::server::Server::start_with_config`] derives each shard's
+/// `BatcherOptions` from it. This struct remains the direct-embedding
+/// API for code that drives a [`Batcher`] without the server.
 #[derive(Debug, Clone)]
 pub struct BatcherOptions {
     /// Decode slot count (must fit a compiled `decode_b{W}`).
@@ -552,7 +597,10 @@ impl Batcher {
             group_prefixes: opts.group_prefixes,
             telemetry,
             gauges: Arc::new(ShardGauges::default()),
+            parked: HashSet::new(),
+            last_queue_pos: HashMap::new(),
             admit_seq: 0,
+            backpressure_pauses: 0,
             steps: 0,
             chunks: 0,
             overlap_steps: 0,
@@ -630,6 +678,38 @@ impl Batcher {
             .iter()
             .filter(|s| matches!(s, SlotState::Prefilling(_)))
             .count()
+    }
+
+    /// Decoding slots NOT parked by backpressure — the ones that make
+    /// progress when [`Batcher::step`] runs a decode step.
+    pub fn runnable_active(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(
+                |s| matches!(s, SlotState::Active(slot) if !slot.paused),
+            )
+            .count()
+    }
+
+    /// Decoding slots currently parked by backpressure.
+    pub fn paused(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s, SlotState::Active(slot) if slot.paused))
+            .count()
+    }
+
+    /// Clear every backpressure park — slots and pre-admission marks
+    /// alike. Called when the scheduler closes: a shutdown drain must
+    /// not deadlock waiting for an `Unpark` whose reactor is already
+    /// gone.
+    fn unpark_all(&mut self) {
+        self.parked.clear();
+        for s in &mut self.slots {
+            if let SlotState::Active(slot) = s {
+                slot.paused = false;
+            }
+        }
     }
 
     /// Admit requests into free slots: short prompts batch-prefill and
@@ -1004,6 +1084,11 @@ impl Batcher {
             }
         };
         self.kv.copy_slot_from(si, &pre.kv, pre_slot);
+        // a Park that arrived while this session was queued or
+        // prefilling takes effect the moment it starts decoding
+        let paused = self
+            .parked
+            .contains(&(p.conn_id, p.request.id));
         let mut slot = Slot {
             pending: p,
             sess,
@@ -1012,6 +1097,7 @@ impl Batcher {
             admit,
             decode_started: Instant::now(),
             emitter: DeltaEmitter::default(),
+            paused,
         };
         let done_at_prefill = slot.sess.finished.is_some()
             || slot.sess.generated.len()
@@ -1165,7 +1251,10 @@ impl Batcher {
         }
 
         // ---- decode phase
-        if self.active() == 0 {
+        if self.runnable_active() == 0 {
+            // nothing would make progress: an all-parked batch takes
+            // no decode steps (Batcher::run blocks on the scheduler
+            // instead of spinning here)
             return Ok(());
         }
         let streaming_now = self.prefilling();
@@ -1174,6 +1263,11 @@ impl Batcher {
         {
             for (si, s) in self.slots.iter().enumerate() {
                 if let SlotState::Active(slot) = s {
+                    // parked slots ride along with their CURRENT token
+                    // and position: the engine recomputes the same step
+                    // (KV write at the same position with the same
+                    // values — idempotent) and absorb below skips them,
+                    // so their state is untouched until Unpark
                     tokens[si] = slot.sess.last_tok;
                     pos[si] = slot.sess.pos;
                 }
@@ -1195,6 +1289,9 @@ impl Batcher {
             let mask_t = &mut self.mask_t;
             for (si, s) in self.slots.iter_mut().enumerate() {
                 let SlotState::Active(slot) = s else { continue };
+                if slot.paused {
+                    continue; // parked: discard this lane's logits
+                }
                 let finished = slot.sess.absorb_step(
                     logits.row(si),
                     &stats,
@@ -1357,6 +1454,10 @@ impl Batcher {
         });
         match c {
             Control::Cancel { .. } => {
+                // a cancelled session can never be unparked later —
+                // drop any pre-admission park mark so the set stays
+                // bounded by live parked sessions
+                self.parked.remove(&(conn_id, id));
                 let Some(si) = si else {
                     // not in a slot: maybe still queued — pluck it
                     if let Some(p) = sched.remove(conn_id, id) {
@@ -1446,15 +1547,62 @@ impl Batcher {
                     let _ = sched.set_refresh(conn_id, id, refresh_every);
                 }
             }
+            Control::Park { .. } => {
+                match si.map(|si| &mut self.slots[si]) {
+                    Some(SlotState::Active(slot)) => {
+                        if !slot.paused {
+                            slot.paused = true;
+                            self.backpressure_pauses += 1;
+                        }
+                        // keep the mark too: a consistent picture if
+                        // the slot retires oddly, and Unpark clears
+                        // both unconditionally
+                        self.parked.insert((conn_id, id));
+                    }
+                    Some(SlotState::Prefilling(_)) => {
+                        // prefill keeps streaming (it pushes no frames
+                        // to the stalled client); the pause lands at
+                        // promotion (see Batcher::place)
+                        if self.parked.insert((conn_id, id)) {
+                            self.backpressure_pauses += 1;
+                        }
+                    }
+                    _ => {
+                        // still queued → pause at admission; a session
+                        // that already terminated is ignored (same race
+                        // rule as cancel: the mark would leak forever)
+                        let queued = sched
+                            .queued_sessions()
+                            .iter()
+                            .any(|&(c, i, _)| c == conn_id && i == id);
+                        if queued && self.parked.insert((conn_id, id)) {
+                            self.backpressure_pauses += 1;
+                        }
+                    }
+                }
+            }
+            Control::Unpark { .. } => {
+                self.parked.remove(&(conn_id, id));
+                if let Some(si) = si {
+                    if let SlotState::Active(slot) = &mut self.slots[si] {
+                        slot.paused = false;
+                    }
+                }
+            }
         }
     }
 
     /// Drive the loop against a scheduler until it closes and drains:
     /// block for work only when idle, admit mid-flight otherwise.
-    /// Control messages (cancel / set) are drained at the top of every
-    /// iteration, so a cancel frees its slot within one decode step.
+    /// Control messages (cancel / set / park / unpark) are drained at
+    /// the top of every iteration, so a cancel frees its slot — and a
+    /// park stops a slow consumer's decode — within one decode step.
     /// Admission overflow (more queued work than free slots) is pushed
-    /// back onto the scheduler's queue front, preserving FCFS.
+    /// back onto the scheduler's queue front, preserving FCFS, and
+    /// sessions still waiting get a v2 `queue` frame whenever their
+    /// position changes. Once the scheduler closes, every park is
+    /// lifted so the shutdown drain cannot deadlock on a reactor that
+    /// will never send `Unpark`.
     pub fn run(
         &mut self,
         sched: &Scheduler,
@@ -1463,6 +1611,9 @@ impl Batcher {
         loop {
             self.publish_gauges();
             self.apply_controls(sched, sink);
+            if sched.is_closed() {
+                self.unpark_all();
+            }
             let free = self.free_slots();
             if free > 0 {
                 if self.active() == 0 && self.prefilling() == 0 {
@@ -1484,7 +1635,28 @@ impl Batcher {
                     }
                 }
             }
+            self.emit_queue_positions(sched, sink);
             if self.active() == 0 && self.prefilling() == 0 {
+                continue;
+            }
+            if self.prefilling() == 0 && self.runnable_active() == 0 {
+                // every occupied slot is parked by backpressure: a
+                // decode step would do no useful work, so block
+                // instead of spinning. With a free slot, new work can
+                // still help → wait in next_batch (wakes on submit OR
+                // control); with the width fully parked, only a
+                // control or shutdown can change anything.
+                if self.free_slots() == 0 {
+                    sched.wait_control();
+                } else {
+                    match sched.next_batch() {
+                        Some(batch) => {
+                            let over = self.admit(batch, sink);
+                            sched.requeue_front(over);
+                        }
+                        None => self.unpark_all(),
+                    }
+                }
                 continue;
             }
             if let Err(e) = self.step(sink) {
@@ -1493,6 +1665,40 @@ impl Batcher {
             self.publish_gauges();
         }
         self.publish_gauges();
+    }
+
+    /// Push a v2 `queue` frame to every streaming session whose queue
+    /// position changed since the last look (0 = next to be admitted).
+    /// Admitted / cancelled sessions simply drop out of the tracking
+    /// map; a position never repeats for the same session because FCFS
+    /// positions only decrease.
+    fn emit_queue_positions(
+        &mut self,
+        sched: &Scheduler,
+        sink: &mut dyn FnMut(u64, Event),
+    ) {
+        if self.last_queue_pos.is_empty() && sched.is_empty() {
+            return; // common case: no queue now, none last time
+        }
+        let mut fresh = HashMap::new();
+        for (pos, (conn_id, id, stream)) in
+            sched.queued_sessions().into_iter().enumerate()
+        {
+            if !stream {
+                continue; // v1 sessions have no event channel
+            }
+            if self.last_queue_pos.get(&(conn_id, id)) != Some(&pos) {
+                sink(
+                    conn_id,
+                    Event::Queue {
+                        id,
+                        position: pos as u64,
+                    },
+                );
+            }
+            fresh.insert((conn_id, id), pos);
+        }
+        self.last_queue_pos = fresh;
     }
 }
 

@@ -5,8 +5,11 @@
 //! legacy v1 (one-shot blocking) connection, [`Client::connect_v2`] a
 //! framed multiplexed v2 connection. On v2 the primitive is
 //! [`Client::generate_stream`] — start a session and consume its
-//! `accepted`/`delta`/`refresh` events incrementally with
-//! [`Client::next_event`] — and the old blocking methods
+//! `accepted`/`queue`/`delta`/`refresh` events incrementally with
+//! [`Client::next_event`] (`queue` frames report the session's
+//! admission-queue position while a saturated server holds it; they
+//! carry no text and every blocking collector skips them) — and the
+//! old blocking methods
 //! ([`Client::call`], [`Client::call_many`], [`Client::recv`]) are
 //! reimplemented on top of the event stream: they simply discard
 //! non-terminal events and return the `done` frame's response, so the
@@ -215,7 +218,7 @@ impl Client {
                 // retryable error (shutdown drain, engine hiccup) —
                 // reconnect and resume
                 Ok(Event::Error { error, .. }) => error,
-                // accepted / refresh frames carry no text
+                // accepted / queue / refresh frames carry no text
                 Ok(_) => continue,
                 // io failure: dropped connection, closed socket
                 Err(e) => e.to_string(),

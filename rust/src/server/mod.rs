@@ -1,46 +1,74 @@
-//! Serving layer: a poll-based **nonblocking reactor** front carrying
-//! framed, multiplexed protocol-v2 sessions (and the legacy v1
-//! protocol, auto-detected) over per-shard scheduler/batcher pairs
-//! behind a prefix-affinity router.
+//! Serving layer: a **readiness-driven nonblocking reactor** front
+//! (epoll on Linux, kqueue on macOS, a sleep-tick fallback elsewhere —
+//! see [`poller`]) carrying framed, multiplexed protocol-v2 sessions
+//! (and the legacy v1 protocol, auto-detected) over per-shard
+//! scheduler/batcher pairs behind a prefix-affinity router.
 //!
 //! # Architecture
 //!
 //! ```text
 //!             accept            round-robin handoff
 //!  listener ────────▶ acceptor ─────────────────────┐
-//!                                                   ▼
-//!  ┌─ reactor thread 0 ──────────────┐   ┌─ reactor thread R-1 ─┐
-//!  │ conn table: nonblocking reads,  │   │        ...           │
-//!  │ bounded r/w buffers, per-conn   │   └──────────────────────┘
-//!  │ protocol state machine (v1|v2)  │
-//!  └──────┬───────────────▲──────────┘
-//!   submit│/control       │ per-conn event channels
-//!         ▼               │
+//!  (registered with                                 ▼
+//!   its own poller)   ┌─ reactor thread 0 ──────┐   ┌─ reactor R-1 ─┐
+//!                     │ poller (epoll/kqueue):  │   │      ...      │
+//!                     │ conn fds by readiness + │   └───────────────┘
+//!                     │ engine-event self-wake; │
+//!                     │ bounded r/w buffers,    │
+//!                     │ per-conn protocol state │
+//!                     └───┬──────────────▲──────┘
+//!                  submit │ / control    │ per-conn event channels
+//!                         ▼              │ + dirty-list doorbell
 //!  ┌─▶ Scheduler 0 ──admit──▶ Batcher 0 (engine thread: KV, slots,
 //!  │                              prefix cache, event emission)
 //!  └─▶ Scheduler N-1 ─admit──▶ Batcher N-1
 //!     (route_shard: FNV-1a over the prompt's leading bytes)
 //! ```
 //!
-//! * **Reactor threads** (one per shard) own connection state
-//!   machines instead of parking one thread per connection: every
-//!   socket is `set_nonblocking`, and each reactor's readiness loop
-//!   polls its connections for reads, drains each connection's event
-//!   channel, and flushes pending writes — sleeping only when a full
-//!   pass found no work. An idle connection therefore costs a table
-//!   entry, a buffer, and one nonblocking `read` poll per sweep — not
-//!   a thread or a stack. The sweep is O(connections) per tick (≥
-//!   ~0.5 ms apart when idle), which is cheap into the thousands of
-//!   connections; true readiness registration (epoll/kqueue) that
-//!   makes idle connections cost nothing per tick is the remaining
-//!   ROADMAP item.
-//! * **Per-connection buffers are bounded.** The read buffer rejects
-//!   any frame larger than `max_frame_bytes` (a client that never
-//!   sends a newline, or sends one gigantic line, gets a protocol
-//!   error and a closed connection instead of growing server memory
-//!   without limit). The write buffer is capped at
-//!   `conn_buffer_bytes`: a consumer too slow to drain its own event
-//!   stream is disconnected rather than buffered forever.
+//! # Transport: readiness, backpressure, zero-copy ingestion
+//!
+//! * **Readiness, not sweeps.** Each reactor thread (one per shard)
+//!   owns a [`poller::Poller`]: every connection's nonblocking socket
+//!   is registered under its connection id, with the interest set kept
+//!   in sync with what the connection can actually use (read interest
+//!   while the protocol allows input, write interest only while
+//!   outbound bytes are pending, deregistered entirely once neither
+//!   applies). The loop parks in [`poller::Poller::wait`] and services
+//!   exactly the connections the kernel reports — an **idle connection
+//!   costs a registered fd and a table entry, not a per-tick `read`
+//!   poll**. Engine-side event arrival rides a second path: the
+//!   batcher's sink marks the connection id dirty and fires the
+//!   poller's [`poller::Waker`] (eventfd on Linux, self-pipe on
+//!   macOS), so the reactor drains exactly the dirty connections'
+//!   event channels instead of `try_recv`-polling all of them. On
+//!   targets without epoll/kqueue (or if their syscalls fail at
+//!   startup) the same loop runs unchanged over the honest
+//!   [`poller::SleepPoller`], which restores the old
+//!   O(connections)-per-tick sweep cost (~0.5 ms ticks) — correct
+//!   everywhere, cheap where the real pollers exist.
+//! * **Per-connection buffers are bounded; slow consumers are parked,
+//!   not dropped.** The read buffer rejects any frame larger than
+//!   `max_frame_bytes` (a client that never sends a newline, or sends
+//!   one gigantic line, gets a protocol error and a closed connection
+//!   instead of growing server memory without limit). The write
+//!   buffer is watermarked: when a consumer's backlog crosses the
+//!   **high-water mark** (`high_water_bytes`, default
+//!   `conn_buffer_bytes`), the reactor sends a
+//!   [`scheduler::Control::Park`] for every live session on that
+//!   connection — their decode slots keep KV, emitter state, and FCFS
+//!   position but take no steps — and when the backlog drains below
+//!   the **low-water mark** (default high/4) an `Unpark` resumes them
+//!   **byte-identically** (deterministic decode; see
+//!   [`batcher`]'s backpressure section). Only a connection whose
+//!   backlog still grows past a hard safety valve (8× the cap —
+//!   frames already emitted before the park landed) is disconnected.
+//! * **Zero-copy frame ingestion.** Inbound line splitting — the
+//!   per-token hot path for v2 delta-ack/cancel/control traffic —
+//!   borrows frames straight out of the connection's read buffer via
+//!   [`scanner::FrameScanner`]: no intermediate `String`/`Vec` per
+//!   line, one front-drain per readiness burst, and no byte is
+//!   newline-scanned twice (equivalence with the old allocating
+//!   splitter is pinned by a fuzz test in [`scanner`]).
 //! * **Protocol negotiation** happens on the first parsed line of each
 //!   connection ([`protocol`]): `"v":2` locks the connection to the
 //!   framed multiplexed protocol (interleaved `accepted` / `delta` /
@@ -121,17 +149,28 @@
 //!
 //! # Knobs and trade-offs
 //!
-//! * `shards` ([`ServerOptions`], `glass serve --shards N`) — serving
-//!   shard count (engine threads AND reactor threads); default 1
-//!   preserves the unsharded behavior exactly. More shards = more
-//!   engine threads decoding in parallel and more (smaller) prefix
-//!   caches; the router keeps warm traffic local.
+//! All construction knobs live in one typed builder —
+//! [`crate::config::ServerConfig`] — constructed once from
+//! CLI/TOML/[`crate::config::RunConfig`] and handed down
+//! ([`Server::start_with_config`]). [`ServerOptions`] remains as a
+//! thin compatibility view.
+//!
+//! * `shards` (`glass serve --shards N`) — serving shard count (engine
+//!   threads AND reactor threads); default 1 preserves the unsharded
+//!   behavior exactly. More shards = more engine threads decoding in
+//!   parallel and more (smaller) prefix caches; the router keeps warm
+//!   traffic local.
 //! * `batch_width` — decode slot count **per shard** (must fit a
 //!   compiled `decode_b{W}`).
 //! * `max_frame_bytes` (`--max-frame-bytes`) — largest accepted wire
 //!   frame; the per-connection read-buffer bound. Default 1 MiB.
 //! * `conn_buffer_bytes` (`--conn-buffer-bytes`) — outbound buffer cap
-//!   per connection; a slower consumer is disconnected. Default 8 MiB.
+//!   per connection; crossing it parks the connection's sessions
+//!   (backpressure) rather than disconnecting. Default 8 MiB.
+//! * `high_water_bytes` / `low_water_bytes` (`--high-water-bytes`,
+//!   `--low-water-bytes`) — explicit backpressure watermarks; 0 (the
+//!   default) derives them (`conn_buffer_bytes` and a quarter of the
+//!   high mark respectively).
 //! * `Batcher::chunk_budget` — prefill chunks advanced per decode step
 //!   for streaming (long-prompt) admissions; default 1.
 //! * `refresh_every` (per request, adjustable mid-stream with a v2
@@ -166,9 +205,12 @@
 //!   poison-recovery pattern for the shared connection table.
 //! * **Every non-`SeqCst` atomic ordering carries a justification
 //!   comment** saying why the weaker ordering is sound.
-//! * **`thread::sleep` only at annotated parking sites** (the reactor
-//!   idle tick, the acceptor's accept backoff, client-side reconnect
-//!   backoff) — anywhere else a sleep stalls a whole shard.
+//! * **`thread::sleep` only at annotated parking sites** — after the
+//!   readiness rewrite exactly two remain: the fallback
+//!   [`poller::SleepPoller`]'s sweep tick (the reactor's parking site
+//!   on targets without epoll/kqueue) and the client-side reconnect
+//!   backoff. Anywhere else a sleep stalls a whole shard; the real
+//!   pollers park in the kernel instead.
 //! * **No `MutexGuard` held across socket I/O or sleeps** — lock
 //!   scopes stay small and never span blocking calls.
 //! * **`unsafe` requires an adjacent `// SAFETY:` comment**, and every
@@ -189,7 +231,9 @@
 
 pub mod batcher;
 pub mod client;
+pub mod poller;
 pub mod protocol;
+pub mod scanner;
 pub mod scheduler;
 
 use std::collections::HashMap;
@@ -203,6 +247,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::config::ServerConfig;
 use crate::engine::prefix_cache::{
     CacheStatsSnapshot, CacheTelemetry, DEFAULT_CACHE_BYTES,
 };
@@ -211,25 +256,105 @@ use crate::info;
 use crate::util::json::Json;
 
 use batcher::{Batcher, BatcherOptions, ShardGauges};
+use poller::{
+    listener_fd, new_poller, stream_fd, Interest, PollEvent, Poller,
+    Waker, WAKE_TOKEN,
+};
 use protocol::{
     client_line_from_json, frame_version, stats_to_line,
     v2_frame_from_json, ClientLine, Event, ShardSnapshot, V2Frame,
     PROTOCOL_V2,
 };
+use scanner::FrameScanner;
 use scheduler::{Control, Pending, Scheduler};
 
 /// Default cap on a single wire frame (and the per-connection read
 /// buffer): a client that never terminates a line cannot grow server
 /// memory past this.
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
-/// Default cap on a connection's outbound buffer: a consumer that
-/// cannot keep up with its own event stream is disconnected.
+/// Default cap on a connection's outbound buffer, which doubles as the
+/// derived backpressure high-water mark: a consumer that cannot keep
+/// up with its own event stream is parked, not disconnected.
 pub const DEFAULT_CONN_BUFFER_BYTES: usize = 8 << 20;
+
+/// Engine→reactor doorbell: one per reactor thread, shared with every
+/// engine thread through the connection table. The batcher's sink
+/// pushes the target connection id onto the dirty list and fires the
+/// reactor's [`Waker`], so the reactor drains exactly the connections
+/// that have fresh events — event delivery costs one list push and one
+/// wake, not a `try_recv` poll of every connection per tick.
+struct ReactorNotify {
+    /// Connection ids with undrained events (deduplicated on push; the
+    /// list stays at most table-sized).
+    dirty: Mutex<Vec<u64>>,
+    /// Wakes the owning reactor out of [`Poller::wait`].
+    waker: Waker,
+}
+
+impl ReactorNotify {
+    fn new(waker: Waker) -> ReactorNotify {
+        ReactorNotify {
+            dirty: Mutex::new(Vec::new()),
+            waker,
+        }
+    }
+
+    /// Lock the dirty list, recovering from poisoning (same policy as
+    /// [`lock_conns`]: the list's invariant is re-establishable — a
+    /// torn entry costs one redundant or missed drain pass, and missed
+    /// ones are retried on the next event).
+    fn lock_dirty(&self) -> std::sync::MutexGuard<'_, Vec<u64>> {
+        self.dirty.lock().unwrap_or_else(|poisoned| {
+            crate::warn_!("dirty-list mutex poisoned; recovering");
+            poisoned.into_inner()
+        })
+    }
+
+    /// Mark `conn_id` dirty and wake the reactor. Always wakes, even
+    /// when already marked: the reactor may have taken the list but
+    /// not yet parked, and wakes coalesce at the poller anyway.
+    fn notify(&self, conn_id: u64) {
+        {
+            let mut d = self.lock_dirty();
+            if !d.contains(&conn_id) {
+                d.push(conn_id);
+            }
+        }
+        self.waker.wake();
+    }
+
+    /// Drain the dirty list (reactor side).
+    fn take_dirty(&self) -> Vec<u64> {
+        std::mem::take(&mut *self.lock_dirty())
+    }
+}
+
+/// One connection's entry in the shared table: the sender the batcher
+/// threads push [`Event`]s through, plus the owning reactor's doorbell
+/// so those pushes actually wake it.
+#[derive(Clone)]
+struct ConnHandle {
+    tx: Sender<Event>,
+    notify: Arc<ReactorNotify>,
+}
+
+impl ConnHandle {
+    /// Deliver one event and ring the reactor's doorbell. Returns
+    /// false if the receiving connection was reaped (sender
+    /// disconnected).
+    fn send(&self, conn_id: u64, ev: Event) -> bool {
+        if self.tx.send(ev).is_err() {
+            return false;
+        }
+        self.notify.notify(conn_id);
+        true
+    }
+}
 
 /// Per-connection event channels: the batcher threads push [`Event`]s,
 /// the owning reactor drains and serializes them in the connection's
 /// negotiated protocol.
-type Conns = Arc<Mutex<HashMap<u64, Sender<Event>>>>;
+type Conns = Arc<Mutex<HashMap<u64, ConnHandle>>>;
 
 /// Lock the shared connection table, recovering from poisoning.
 ///
@@ -240,14 +365,60 @@ type Conns = Arc<Mutex<HashMap<u64, Sender<Event>>>>;
 /// re-establishable (a torn entry at worst strands one connection,
 /// which the reaper collects), so degrade loudly and keep serving.
 fn lock_conns(
-    conns: &Mutex<HashMap<u64, Sender<Event>>>,
-) -> std::sync::MutexGuard<'_, HashMap<u64, Sender<Event>>> {
+    conns: &Mutex<HashMap<u64, ConnHandle>>,
+) -> std::sync::MutexGuard<'_, HashMap<u64, ConnHandle>> {
     conns.lock().unwrap_or_else(|poisoned| {
         crate::warn_!(
             "connection-table mutex poisoned; recovering the table"
         );
         poisoned.into_inner()
     })
+}
+
+/// Reactor I/O counters, shared across all reactor threads and read
+/// through [`Server::io_stats`]. The pair of readiness observables the
+/// bench and the idle-fleet tests gate on: `reads` proves idle
+/// connections cost no syscalls between events, `sweeps` counts poller
+/// wakeups, and the backpressure pair counts park/resume transitions.
+#[derive(Default)]
+pub struct IoStats {
+    reads: AtomicU64,
+    sweeps: AtomicU64,
+    backpressure_pauses: AtomicU64,
+    backpressure_resumes: AtomicU64,
+}
+
+impl IoStats {
+    /// Point-in-time copy of every counter. Relaxed loads: the
+    /// counters are independent monotonic telemetry, never used to
+    /// order other memory.
+    pub fn snapshot(&self) -> IoStatsSnapshot {
+        IoStatsSnapshot {
+            reads: self.reads.load(Ordering::Relaxed),
+            sweeps: self.sweeps.load(Ordering::Relaxed),
+            backpressure_pauses: self
+                .backpressure_pauses
+                .load(Ordering::Relaxed),
+            backpressure_resumes: self
+                .backpressure_resumes
+                .load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One consistent-enough copy of [`IoStats`] (each field is exact; the
+/// set is racy across fields, which telemetry tolerates).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStatsSnapshot {
+    /// `read()` syscalls issued across all connections.
+    pub reads: u64,
+    /// Poller wakeups (readiness batches serviced) across reactors.
+    pub sweeps: u64,
+    /// Connections that crossed the high-water mark and parked their
+    /// sessions.
+    pub backpressure_pauses: u64,
+    /// Connections that drained below the low-water mark and resumed.
+    pub backpressure_resumes: u64,
 }
 
 /// Router window for a model: the byte span of the first cacheable
@@ -282,6 +453,12 @@ pub fn route_shard(prompt: &str, n_shards: usize, window: usize) -> usize {
 }
 
 /// Construction knobs for [`Server::start_with`].
+///
+/// **Deprecation note:** new code should build a
+/// [`crate::config::ServerConfig`] (the unified builder covering these
+/// knobs plus chunk budget and backpressure watermarks) and call
+/// [`Server::start_with_config`]; `ServerOptions` remains as a thin
+/// compatibility view and converts losslessly via `From`.
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Decode slot count per shard (must fit a compiled `decode_b{W}`).
@@ -397,6 +574,14 @@ pub struct Server {
     reactor_stop: Arc<AtomicBool>,
     shards: Arc<Vec<Shard>>,
     conns: Conns,
+    /// Shared reactor I/O counters ([`Server::io_stats`]).
+    io: Arc<IoStats>,
+    /// Reactor poller backend ([`Server::poller_kind`]).
+    poller_kind: &'static str,
+    /// Poller wakers for the acceptor and every reactor: shutdown must
+    /// kick threads parked in [`Poller::wait`], not wait out their
+    /// safety-net timeouts.
+    wakers: Vec<Waker>,
     engine_threads: Vec<std::thread::JoinHandle<()>>,
     io_threads: Vec<std::thread::JoinHandle<()>>,
 }
@@ -409,20 +594,37 @@ impl Server {
 
     /// Start serving on `addr` (e.g. "127.0.0.1:7433"). Returns once the
     /// listener is bound; serving continues on background threads.
+    ///
+    /// Compatibility shim over [`Server::start_with_config`] — new
+    /// code should build a [`ServerConfig`] directly.
     pub fn start_with(
         engine: Engine,
         addr: &str,
         opts: ServerOptions,
     ) -> Result<Server> {
+        let mut cfg = ServerConfig::from(opts);
+        cfg.bind = addr.to_string();
+        Server::start_with_config(engine, &cfg)
+    }
+
+    /// Start serving from one unified [`ServerConfig`] (the config
+    /// builder covering shards, batch width, cache, chunk budget,
+    /// frame/buffer caps, and backpressure watermarks). Returns once
+    /// the listener is bound; serving continues on background threads.
+    pub fn start_with_config(
+        engine: Engine,
+        cfg: &ServerConfig,
+    ) -> Result<Server> {
+        let addr = cfg.bind.as_str();
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?.to_string();
 
-        let n_shards = opts.shards.max(1);
+        let n_shards = cfg.shards.max(1);
         // split the cache budget evenly; with one shard this is the
         // whole budget (bit-identical to the unsharded server)
-        let shard_cache_bytes = opts.cache_bytes / n_shards;
+        let shard_cache_bytes = cfg.cache_bytes / n_shards;
         let prefill_len = engine.spec().prefill_len;
 
         // build every shard's batcher up front: loads priors and warms
@@ -435,7 +637,7 @@ impl Server {
             // per-shard persistent snapshot: route_shard is
             // deterministic across restarts, so shard i's file always
             // warms the shard that will serve its prefixes
-            let snapshot = opts.cache_dir.as_deref().map(|dir| {
+            let snapshot = cfg.cache_dir.as_deref().map(|dir| {
                 crate::engine::prefix_store::snapshot_path(
                     dir, shard_id,
                 )
@@ -443,15 +645,15 @@ impl Server {
             let engine_loop = Batcher::with_options(
                 engine.clone(),
                 BatcherOptions {
-                    batch_width: opts.batch_width,
+                    batch_width: cfg.batch_width,
                     cache_bytes: shard_cache_bytes,
-                    chunk_budget: 1,
-                    group_prefixes: opts.group_prefixes,
+                    chunk_budget: cfg.chunk_budget,
+                    group_prefixes: cfg.group_prefixes,
                     snapshot_path: snapshot,
                 },
             )?;
             let group_bytes =
-                if opts.group_prefixes && shard_cache_bytes > 0 {
+                if cfg.group_prefixes && shard_cache_bytes > 0 {
                     // one prefill frame of shared prompt bytes ≈ one
                     // cacheable chunk (byte-level tokenizer)
                     prefill_len
@@ -461,7 +663,7 @@ impl Server {
             shards.push(Shard {
                 sched: Arc::new(
                     Scheduler::new(
-                        opts.batch_width,
+                        cfg.batch_width,
                         Duration::from_millis(4),
                     )
                     .with_prefix_grouping(group_bytes),
@@ -476,6 +678,8 @@ impl Server {
         let conns: Conns = Arc::new(Mutex::new(HashMap::new()));
         let shutdown = Arc::new(AtomicBool::new(false));
         let reactor_stop = Arc::new(AtomicBool::new(false));
+        let io = Arc::new(IoStats::default());
+        let mut wakers = Vec::new();
         let mut engine_threads = Vec::new();
         let mut io_threads = Vec::new();
 
@@ -487,20 +691,19 @@ impl Server {
             let conns = Arc::clone(&conns);
             let sched = Arc::clone(&shards[shard_id].sched);
             engine_threads.push(std::thread::spawn(move || {
-                // per-conn Sender cache: events are emitted per TOKEN,
+                // per-conn handle cache: events are emitted per TOKEN,
                 // so the shared conns map must not be locked on the
                 // per-token hot path — one lock per (conn, shard)
                 // pairing, lock-free sends afterwards. conn ids are
-                // never reused, so a cached Sender whose receiver was
+                // never reused, so a cached handle whose receiver was
                 // reaped just fails its send and is evicted.
-                let mut locals: HashMap<u64, Sender<Event>> =
+                let mut locals: HashMap<u64, ConnHandle> =
                     HashMap::new();
                 let mut sink = move |conn_id: u64, ev: Event| {
-                    if let Some(tx) = locals.get(&conn_id) {
-                        if tx.send(ev).is_ok() {
-                            return;
+                    if let Some(h) = locals.get(&conn_id) {
+                        if !h.send(conn_id, ev) {
+                            locals.remove(&conn_id);
                         }
-                        locals.remove(&conn_id);
                         return;
                     }
                     if locals.len() > 4096 {
@@ -508,10 +711,10 @@ impl Server {
                         // conn churn; re-warms on the next event
                         locals.clear();
                     }
-                    let tx = lock_conns(&conns).get(&conn_id).cloned();
-                    if let Some(tx) = tx {
-                        if tx.send(ev).is_ok() {
-                            locals.insert(conn_id, tx);
+                    let h = lock_conns(&conns).get(&conn_id).cloned();
+                    if let Some(h) = h {
+                        if h.send(conn_id, ev) {
+                            locals.insert(conn_id, h);
                         }
                     }
                 };
@@ -522,62 +725,101 @@ impl Server {
                 engine_loop.snapshot_hot();
             }));
         }
-        // reactor threads (one per shard): connection state machines
-        // over nonblocking sockets
+        // reactor threads (one per shard): readiness loops over
+        // registered nonblocking sockets
+        let high_water = cfg.resolved_high_water();
+        let low_water = cfg.resolved_low_water();
         let mut reactor_txs: Vec<Sender<(u64, TcpStream)>> = Vec::new();
+        let mut reactor_notifies: Vec<Arc<ReactorNotify>> = Vec::new();
+        let mut poller_kind = "";
         for _ in 0..n_shards {
             let (tx, rx) = channel::<(u64, TcpStream)>();
             reactor_txs.push(tx);
+            let poller = new_poller();
+            poller_kind = poller.kind();
+            let notify = Arc::new(ReactorNotify::new(poller.waker()));
+            reactor_notifies.push(Arc::clone(&notify));
+            wakers.push(poller.waker());
             let ctx = ReactorCtx {
                 shards: Arc::clone(&shards),
                 route_window: route_window(prefill_len),
-                max_frame_bytes: opts.max_frame_bytes.max(64),
-                conn_buffer_bytes: opts.conn_buffer_bytes.max(1 << 16),
+                max_frame_bytes: cfg.max_frame_bytes.max(64),
+                conn_buffer_bytes: cfg.conn_buffer_bytes.max(1 << 16),
+                high_water_bytes: high_water.max(1 << 12),
+                low_water_bytes: low_water,
+                io: Arc::clone(&io),
                 shutdown: Arc::clone(&shutdown),
             };
             let conns = Arc::clone(&conns);
             let stop = Arc::clone(&reactor_stop);
             io_threads.push(std::thread::spawn(move || {
-                reactor_loop(rx, conns, ctx, stop)
+                reactor_loop(rx, conns, ctx, stop, notify, poller)
             }));
         }
-        // acceptor: hands fresh sockets to the reactors round-robin
+        // acceptor: its own poller watches the listener fd, so a fresh
+        // connection is accepted on kernel readiness — no accept-backoff
+        // sleep — and handed to a reactor round-robin (with a doorbell
+        // ring so the reactor adopts it promptly)
         {
             let shutdown = Arc::clone(&shutdown);
+            let notifies = reactor_notifies;
+            let mut poller = new_poller();
+            wakers.push(poller.waker());
             io_threads.push(std::thread::spawn(move || {
-                let next_conn = AtomicU64::new(1);
+                // any non-WAKE token works: the listener is the only
+                // registered fd
+                let registered = poller
+                    .register(listener_fd(&listener), 1, Interest::Read)
+                    .is_ok();
+                let mut events: Vec<PollEvent> = Vec::new();
+                let mut next_conn: u64 = 1;
                 loop {
                     // Relaxed: the flag is a pure quit signal checked
                     // every iteration; no data is published under it
                     if shutdown.load(Ordering::Relaxed) {
                         break;
                     }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            // Relaxed: only uniqueness of the id
-                            // matters, never ordering against other
-                            // memory
-                            let conn_id =
-                                next_conn.fetch_add(1, Ordering::Relaxed);
-                            let target =
-                                (conn_id as usize) % reactor_txs.len();
-                            let _ = reactor_txs[target]
-                                .send((conn_id, stream));
+                    // drain the accept queue completely, then park
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                let conn_id = next_conn;
+                                next_conn += 1;
+                                let target = (conn_id as usize)
+                                    % reactor_txs.len();
+                                let _ = reactor_txs[target]
+                                    .send((conn_id, stream));
+                                // ring the reactor so the handoff is
+                                // adopted without waiting for traffic
+                                notifies[target].waker.wake();
+                            }
+                            Err(ref e)
+                                if e.kind() == ErrorKind::WouldBlock =>
+                            {
+                                break;
+                            }
+                            Err(ref e)
+                                if e.kind() == ErrorKind::Interrupted => {}
+                            Err(_) => return,
                         }
-                        Err(ref e)
-                            if e.kind() == ErrorKind::WouldBlock =>
-                        {
-                            // lint: allow(no-sleep-outside-reactor) -- accept
-                            // backoff; nothing is held while parked
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
                     }
+                    // park until the listener is readable or shutdown
+                    // wakes us; the timeout is a safety net against a
+                    // registration that silently stopped reporting
+                    let timeout = if registered {
+                        Duration::from_millis(500)
+                    } else {
+                        // unregistered (register failed): degrade to a
+                        // paced accept poll
+                        Duration::from_millis(5)
+                    };
+                    let _ = poller.wait(&mut events, Some(timeout));
                 }
             }));
         }
         info!(
-            "server listening on {local} ({n_shards} shard{} + reactor{})",
+            "server listening on {local} ({n_shards} shard{} + reactor{}, \
+             {poller_kind} poller)",
             if n_shards == 1 { "" } else { "s" },
             if n_shards == 1 { "" } else { "s" }
         );
@@ -587,9 +829,27 @@ impl Server {
             reactor_stop,
             shards,
             conns,
+            io,
+            poller_kind,
+            wakers,
             engine_threads,
             io_threads,
         })
+    }
+
+    /// Which poller backend the reactors run on: `"epoll"`, `"kqueue"`,
+    /// or `"sleep"` (the portable fallback). Tests that assert
+    /// zero-syscall idling gate on this — the fallback necessarily
+    /// sweeps every registered fd per tick.
+    pub fn poller_kind(&self) -> &'static str {
+        self.poller_kind
+    }
+
+    /// Point-in-time reactor I/O counters (reads, poller sweeps,
+    /// backpressure park/resume transitions) — the observables the
+    /// idle-fleet and slow-consumer tests and the bench gate on.
+    pub fn io_stats(&self) -> IoStatsSnapshot {
+        self.io.snapshot()
     }
 
     /// Graceful shutdown: stop accepting, fail queued-but-unadmitted
@@ -602,16 +862,20 @@ impl Server {
         let fail_queued = |shards: &[Shard], conns: &Conns| {
             for shard in shards {
                 for p in shard.sched.drain_close() {
-                    if let Some(tx) =
-                        lock_conns(conns).get(&p.conn_id)
-                    {
-                        let _ = tx.send(Event::Error {
-                            id: p.request.id,
-                            error: "server shutting down before \
-                                    admission; retry on another server"
-                                .to_string(),
-                            retryable: true,
-                        });
+                    let h =
+                        lock_conns(conns).get(&p.conn_id).cloned();
+                    if let Some(h) = h {
+                        h.send(
+                            p.conn_id,
+                            Event::Error {
+                                id: p.request.id,
+                                error: "server shutting down before \
+                                        admission; retry on another \
+                                        server"
+                                    .to_string(),
+                                retryable: true,
+                            },
+                        );
                     }
                 }
             }
@@ -621,12 +885,22 @@ impl Server {
         // drain_close marks the queue closed under the same mutex
         // Scheduler::submit checks, so any later submit is refused and
         // the reactor fails it retryably itself)
-        // engine loops exit once their slots drain and queues are empty
+        // kick every poller out of its wait so the acceptor sees the
+        // flag now, not at its safety-net timeout
+        for w in &self.wakers {
+            w.wake();
+        }
+        // engine loops exit once their slots drain and queues are
+        // empty (a closed scheduler also lifts every backpressure
+        // park, so a stalled consumer cannot wedge the drain)
         for t in self.engine_threads.drain(..) {
             let _ = t.join();
         }
         // reactors flush remaining events/bytes, then exit
         self.reactor_stop.store(true, Ordering::Relaxed);
+        for w in &self.wakers {
+            w.wake();
+        }
         for t in self.io_threads.drain(..) {
             let _ = t.join();
         }
@@ -641,8 +915,34 @@ struct ReactorCtx {
     route_window: usize,
     max_frame_bytes: usize,
     conn_buffer_bytes: usize,
+    /// Backpressure high-water mark: an outbound backlog above this
+    /// parks the connection's sessions.
+    high_water_bytes: usize,
+    /// Backpressure low-water mark: a parked connection resumes once
+    /// its backlog drains to (or below) this.
+    low_water_bytes: usize,
+    /// Shared I/O counters (reads / sweeps / park transitions).
+    io: Arc<IoStats>,
     /// Set during shutdown: refuse new sessions retryably.
     shutdown: Arc<AtomicBool>,
+}
+
+impl ReactorCtx {
+    /// Hard disconnect threshold: a parked connection's backlog can
+    /// still grow by frames that were already emitted before the park
+    /// landed (plus `queue` updates), so the kill line sits far above
+    /// the high-water mark — reaching it means the consumer is gone,
+    /// not merely slow. The operator's `conn_buffer_bytes` allowance
+    /// is always honored before disconnecting.
+    fn kill_water_bytes(&self) -> usize {
+        kill_water(self.high_water_bytes).max(self.conn_buffer_bytes)
+    }
+}
+
+/// See [`ReactorCtx::kill_water_bytes`]: 8× the high-water mark with a
+/// 1 MiB floor.
+fn kill_water(high_water_bytes: usize) -> usize {
+    high_water_bytes.saturating_mul(8).max(1 << 20)
 }
 
 /// Protocol state of one connection (locked by its first parsed line).
@@ -661,15 +961,22 @@ struct ConnState {
     mode: Mode,
     /// Unparsed inbound bytes (bounded by `max_frame_bytes`).
     rbuf: Vec<u8>,
-    /// Bytes of `rbuf` already scanned for a newline (no rescans: a
-    /// large frame trickling in over many ticks is scanned once).
-    scanned: usize,
-    /// Outbound bytes not yet written (bounded by
-    /// `conn_buffer_bytes`); `wpos` is the flush cursor.
+    /// Zero-copy line scanner over `rbuf` (no byte is newline-scanned
+    /// twice; frames are borrowed, never copied out).
+    scanner: FrameScanner,
+    /// Outbound bytes not yet written (watermarked by the backpressure
+    /// marks); `wpos` is the flush cursor.
     wbuf: Vec<u8>,
     wpos: usize,
     /// v2: live session id → owning shard (for control routing).
     live: HashMap<u64, usize>,
+    /// Backpressure state: true while this connection's sessions are
+    /// parked (backlog crossed the high-water mark and has not yet
+    /// drained below the low-water mark).
+    paused: bool,
+    /// Interest set currently registered with the reactor's poller
+    /// (None = not registered).
+    interest: Option<Interest>,
     read_closed: bool,
     /// Protocol violation: stop reading, flush, then close.
     closing: bool,
@@ -686,10 +993,12 @@ impl ConnState {
             rx,
             mode: Mode::Detect,
             rbuf: Vec::new(),
-            scanned: 0,
+            scanner: FrameScanner::new(),
             wbuf: Vec::new(),
             wpos: 0,
             live: HashMap::new(),
+            paused: false,
+            interest: None,
             read_closed: false,
             closing: false,
             dead: false,
@@ -749,7 +1058,9 @@ impl ConnState {
     }
 
     /// Nonblocking read + line processing. Returns true if any bytes
-    /// or frames moved.
+    /// or frames moved. Called only when the poller reported this
+    /// connection readable (or on adoption), so an idle connection
+    /// issues **zero** read syscalls between events.
     fn tick_read(&mut self, ctx: &ReactorCtx) -> bool {
         if self.read_closed || self.closing || self.dead {
             return false;
@@ -757,6 +1068,9 @@ impl ConnState {
         let mut work = false;
         let mut buf = [0u8; 4096];
         loop {
+            // Relaxed: independent monotonic telemetry counter, never
+            // used to order other memory
+            ctx.io.reads.fetch_add(1, Ordering::Relaxed);
             match self.stream.read(&mut buf) {
                 Ok(0) => {
                     self.read_closed = true;
@@ -784,26 +1098,20 @@ impl ConnState {
                 }
             }
         }
-        // complete lines — resume the newline scan where the last tick
-        // left off (every buffered byte is examined exactly once), and
-        // consume processed lines with ONE front-drain after the loop
-        // instead of one O(remaining) memmove per line, so a pipelined
-        // burst costs O(bytes), not O(lines × bytes)
-        let mut consumed = 0usize;
-        while let Some(at) = self.rbuf[self.scanned..]
-            .iter()
-            .position(|&b| b == b'\n')
-        {
-            let nl = self.scanned + at;
-            let line: Vec<u8> = self.rbuf[consumed..nl].to_vec();
-            self.scanned = nl + 1;
-            consumed = nl + 1;
+        // complete lines, zero-copy: take the buffer so the scanner
+        // can lend out `&[u8]` frames borrowed straight from it while
+        // `handle_line` borrows `self` — no per-line Vec, no rescans,
+        // ONE front-drain after the loop (a pipelined burst costs
+        // O(bytes), not O(lines × bytes))
+        let rbuf = std::mem::take(&mut self.rbuf);
+        while let Some(line) = self.scanner.next_line(&rbuf) {
             if line.len() > ctx.max_frame_bytes {
-                // frame_too_big discards the whole buffer
+                // frame_too_big resets the scan; the taken buffer is
+                // dropped — unprocessed bytes die with the connection
                 self.frame_too_big(ctx, line.len());
                 return true;
             }
-            match std::str::from_utf8(&line) {
+            match std::str::from_utf8(line) {
                 Ok(text) => self.handle_line(ctx, text),
                 Err(_) => {
                     // undecodable input: the pre-reactor server's
@@ -816,8 +1124,7 @@ impl ConnState {
                             "frame is not valid UTF-8",
                         );
                     }
-                    self.rbuf.clear();
-                    self.scanned = 0;
+                    self.scanner.reset();
                     self.closing = true;
                 }
             }
@@ -827,13 +1134,14 @@ impl ConnState {
                 return work;
             }
         }
-        if consumed > 0 {
-            self.rbuf.drain(..consumed);
+        // restore the buffer and drop the fully-processed prefix
+        self.rbuf = rbuf;
+        if self.scanner.consumed() > 0 {
+            self.rbuf.drain(..self.scanner.consumed());
+            self.scanner.on_drain();
         }
-        // everything left was searched and holds no newline
-        self.scanned = self.rbuf.len();
         // a partial line may not outgrow the frame cap
-        if self.rbuf.len() > ctx.max_frame_bytes {
+        if self.scanner.pending(self.rbuf.len()) > ctx.max_frame_bytes {
             self.frame_too_big(ctx, self.rbuf.len());
             work = true;
         }
@@ -850,7 +1158,7 @@ impl ConnState {
             ),
         );
         self.rbuf.clear();
-        self.scanned = 0;
+        self.scanner.reset();
         self.closing = true;
     }
 
@@ -943,6 +1251,15 @@ impl ConnState {
                 // a disconnected client's work instead of letting it
                 // decode to completion for nobody
                 self.live.insert(id, si);
+                if self.paused {
+                    // the connection is already over its high-water
+                    // mark: park the newcomer too, so its output joins
+                    // the backlog only after the client drains
+                    ctx.shards[si].sched.control(Control::Park {
+                        conn_id: self.conn_id,
+                        id,
+                    });
+                }
             }
             Ok(ClientLine::Stats { id }) => {
                 // answered right here from the shared counters — no
@@ -1019,6 +1336,14 @@ impl ConnState {
             return;
         };
         self.live.insert(id, si);
+        if self.paused {
+            // see handle_v1: a submission on an already-parked
+            // connection starts parked
+            ctx.shards[si].sched.control(Control::Park {
+                conn_id: self.conn_id,
+                id,
+            });
+        }
         self.push_event(Event::Accepted {
             id,
             queue_pos: pos as u64,
@@ -1129,9 +1454,41 @@ impl ConnState {
             self.wbuf.drain(..self.wpos);
             self.wpos = 0;
         }
-        // bounded write buffer: a consumer that cannot drain its own
-        // event stream is disconnected, not buffered without limit
-        if self.wbuf.len() - self.wpos > ctx.conn_buffer_bytes {
+        // backpressure watermarks: a consumer that cannot drain its
+        // own event stream gets its sessions PARKED (decode pauses,
+        // nothing more is emitted) instead of being disconnected, and
+        // resumes byte-identically once it drains below the low mark
+        let backlog = self.wbuf.len() - self.wpos;
+        if !self.paused && backlog > ctx.high_water_bytes {
+            self.paused = true;
+            // Relaxed: independent monotonic telemetry counter, never
+            // used to order other memory
+            ctx.io
+                .backpressure_pauses
+                .fetch_add(1, Ordering::Relaxed);
+            for (&id, &si) in &self.live {
+                ctx.shards[si].sched.control(Control::Park {
+                    conn_id: self.conn_id,
+                    id,
+                });
+            }
+        } else if self.paused && backlog <= ctx.low_water_bytes {
+            self.paused = false;
+            // Relaxed: same telemetry-only counter policy as above
+            ctx.io
+                .backpressure_resumes
+                .fetch_add(1, Ordering::Relaxed);
+            for (&id, &si) in &self.live {
+                ctx.shards[si].sched.control(Control::Unpark {
+                    conn_id: self.conn_id,
+                    id,
+                });
+            }
+        }
+        // safety valve far above the watermark: frames already emitted
+        // before the park landed still arrive, but a backlog this deep
+        // means the consumer is gone, not slow
+        if backlog > ctx.kill_water_bytes() {
             self.dead = true;
         }
         work
@@ -1147,51 +1504,152 @@ impl ConnState {
             || (self.closing && self.flushed())
             || (self.read_closed && self.live.is_empty() && self.flushed())
     }
+
+    /// The interest set this connection currently needs from the
+    /// poller: read while the protocol still accepts input, write only
+    /// while outbound bytes are pending, nothing once neither applies
+    /// (events still arrive via the dirty-list doorbell).
+    fn desired_interest(&self) -> Option<Interest> {
+        if self.dead {
+            return None;
+        }
+        let want_read =
+            !(self.read_closed || self.closing);
+        let want_write = !self.flushed();
+        match (want_read, want_write) {
+            (true, true) => Some(Interest::ReadWrite),
+            (true, false) => Some(Interest::Read),
+            (false, true) => Some(Interest::Write),
+            (false, false) => None,
+        }
+    }
+
+    /// Reconcile the poller registration with
+    /// [`ConnState::desired_interest`]. Deregistering when no interest
+    /// remains is what keeps a level-triggered poller from spinning on
+    /// a hung-up fd the connection no longer cares about.
+    fn sync_interest(&mut self, poller: &mut dyn Poller) {
+        let want = self.desired_interest();
+        if want == self.interest {
+            return;
+        }
+        let fd = stream_fd(&self.stream);
+        let r = match (self.interest, want) {
+            (None, Some(i)) => poller.register(fd, self.conn_id, i),
+            (Some(_), Some(i)) => poller.modify(fd, self.conn_id, i),
+            (Some(_), None) => poller.deregister(fd),
+            (None, None) => Ok(()),
+        };
+        match r {
+            Ok(()) => self.interest = want,
+            Err(e) => {
+                // a socket the poller cannot track cannot be served;
+                // treat a failed DEregistration as done (the fd is on
+                // its way out anyway)
+                if want.is_some() {
+                    crate::warn_!(
+                        "conn {}: poller registration failed ({e}); \
+                         dropping connection",
+                        self.conn_id
+                    );
+                    self.dead = true;
+                }
+                self.interest = None;
+            }
+        }
+    }
 }
 
-/// One reactor's readiness loop: poll nonblocking sockets for frames,
-/// drain event channels, flush writes; sleep only when a full pass
-/// found nothing to do. Exits after `stop` is set, once every
+/// Service one connection after a readiness or doorbell signal:
+/// optionally read (only when the poller reported readable — idle
+/// connections must cost zero read syscalls), then drain the event
+/// channel and flush, and finally reconcile the poller registration.
+fn service_conn(
+    c: &mut ConnState,
+    ctx: &ReactorCtx,
+    poller: &mut dyn Poller,
+    readable: bool,
+) {
+    if readable {
+        c.tick_read(ctx);
+    }
+    c.drain_events();
+    c.tick_write(ctx);
+    c.sync_interest(poller);
+}
+
+/// One reactor's readiness loop: park in the poller until a socket is
+/// ready or the engine's doorbell rings, then service exactly the
+/// reported connections. Exits after `stop` is set, once every
 /// connection's pending bytes are flushed (bounded by a deadline).
 fn reactor_loop(
     handoff: Receiver<(u64, TcpStream)>,
     conns: Conns,
     ctx: ReactorCtx,
     stop: Arc<AtomicBool>,
+    notify: Arc<ReactorNotify>,
+    mut poller: Box<dyn Poller>,
 ) {
-    let mut table: Vec<ConnState> = Vec::new();
+    let mut table: HashMap<u64, ConnState> = HashMap::new();
+    let mut events: Vec<PollEvent> = Vec::new();
     let mut stop_deadline: Option<Instant> = None;
     loop {
-        let mut work = false;
-        // adopt freshly accepted connections
+        // adopt freshly accepted connections: service immediately (the
+        // client's first frame may already be queued in the kernel —
+        // readable-edge information from before registration would
+        // otherwise be lost on a level-triggered poller only if the
+        // bytes were already drained, which they are not; reading here
+        // simply avoids one wait round-trip) and register
         while let Ok((conn_id, stream)) = handoff.try_recv() {
             let (tx, rx) = channel::<Event>();
-            lock_conns(&conns).insert(conn_id, tx);
-            table.push(ConnState::new(conn_id, stream, rx));
-            work = true;
+            lock_conns(&conns).insert(
+                conn_id,
+                ConnHandle {
+                    tx,
+                    notify: Arc::clone(&notify),
+                },
+            );
+            let mut c = ConnState::new(conn_id, stream, rx);
+            service_conn(&mut c, &ctx, &mut *poller, true);
+            table.insert(conn_id, c);
         }
-        for c in table.iter_mut() {
-            work |= c.tick_read(&ctx);
-            work |= c.drain_events();
-            work |= c.tick_write(&ctx);
+        // engine doorbell: drain exactly the connections with fresh
+        // events (no per-connection try_recv sweep)
+        for conn_id in notify.take_dirty() {
+            if let Some(c) = table.get_mut(&conn_id) {
+                service_conn(c, &ctx, &mut *poller, false);
+            }
+        }
+        // socket readiness from the previous wait
+        for ev in events.drain(..) {
+            if ev.token == WAKE_TOKEN {
+                continue; // doorbell/handoff wake, handled above
+            }
+            if let Some(c) = table.get_mut(&ev.token) {
+                service_conn(c, &ctx, &mut *poller, ev.readable);
+            }
         }
         // reap finished/dead connections; a dead connection's live
         // sessions are cancelled so their slots free up instead of
         // decoding for nobody
-        let mut i = 0;
-        while i < table.len() {
-            if table[i].reapable() {
-                let c = table.swap_remove(i);
-                lock_conns(&conns).remove(&c.conn_id);
-                for (id, si) in c.live {
+        let reap: Vec<u64> = table
+            .iter()
+            .filter(|(_, c)| c.reapable())
+            .map(|(&id, _)| id)
+            .collect();
+        for conn_id in reap {
+            if let Some(mut c) = table.remove(&conn_id) {
+                c.dead = true;
+                // drop the poller registration BEFORE the fd closes
+                // (the fallback poller has no close-time cleanup)
+                c.sync_interest(&mut *poller);
+                lock_conns(&conns).remove(&conn_id);
+                for (id, si) in c.live.drain() {
                     ctx.shards[si].sched.control(Control::Cancel {
-                        conn_id: c.conn_id,
+                        conn_id,
                         id,
                     });
                 }
-                work = true;
-            } else {
-                i += 1;
             }
         }
         // Relaxed: stop is a latch set once by Server::stop; the
@@ -1200,21 +1658,28 @@ fn reactor_loop(
             let deadline = *stop_deadline.get_or_insert_with(|| {
                 Instant::now() + Duration::from_secs(2)
             });
-            let drained = table.iter().all(|c| c.flushed());
+            let drained = table.values().all(|c| c.flushed());
             if drained || Instant::now() > deadline {
                 break;
             }
         }
-        if !work {
-            // lint: allow(no-sleep-outside-reactor) -- the reactor's
-            // own idle tick: a full pass found no work, no lock held
-            std::thread::sleep(Duration::from_micros(500));
+        // park until readiness, a doorbell, or the safety-net timeout
+        // (bounds how stale a missed wake can get; it is NOT the
+        // service cadence — events and readiness wake immediately)
+        let timeout = Duration::from_millis(500);
+        if poller.wait(&mut events, Some(timeout)).is_err() {
+            // a broken poller cannot drive readiness; keep the server
+            // alive by degrading to the doorbell + timeout path
+            events.clear();
         }
+        // Relaxed: independent monotonic telemetry counter, never
+        // used to order other memory
+        ctx.io.sweeps.fetch_add(1, Ordering::Relaxed);
     }
     // drop the table: sockets close, channels disconnect
     let mut conns = lock_conns(&conns);
-    for c in &table {
-        conns.remove(&c.conn_id);
+    for conn_id in table.keys() {
+        conns.remove(conn_id);
     }
 }
 
@@ -1302,5 +1767,157 @@ mod tests {
         let o = o.with_shards(4).with_max_frame_bytes(4096);
         assert_eq!(o.shards, 4);
         assert_eq!(o.max_frame_bytes, 4096);
+    }
+
+    #[test]
+    fn kill_water_sits_far_above_the_high_mark() {
+        // the safety valve must never fire at backlogs the watermark
+        // logic is meant to handle
+        assert_eq!(kill_water(8 << 20), 64 << 20);
+        // tiny test-sized watermarks still get the 1 MiB floor, so a
+        // park cannot be mistaken for a dead consumer mid-test
+        assert_eq!(kill_water(4096), 1 << 20);
+        assert_eq!(kill_water(0), 1 << 20);
+        // saturation, not overflow, at absurd configs
+        assert_eq!(kill_water(usize::MAX), usize::MAX);
+    }
+
+    /// A ConnState over a real (loopback) socket pair, for unit tests
+    /// that need interest/watermark transitions without a server.
+    fn test_conn() -> (ConnState, TcpStream, Sender<Event>) {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .expect("bind test listener");
+        let addr = listener.local_addr().expect("local addr");
+        let client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        let (tx, rx) = channel::<Event>();
+        (ConnState::new(7, server, rx), client, tx)
+    }
+
+    /// A one-shard ReactorCtx with explicit watermarks and no engine
+    /// behind it (controls land in the scheduler and stay there).
+    fn test_ctx(high: usize, low: usize) -> ReactorCtx {
+        let shard = Shard {
+            sched: Arc::new(Scheduler::new(4, Duration::from_millis(4))),
+            telemetry: Arc::new(CacheTelemetry::default()),
+            gauges: Arc::new(ShardGauges::default()),
+            width: 4,
+        };
+        ReactorCtx {
+            shards: Arc::new(vec![shard]),
+            route_window: 64,
+            max_frame_bytes: 1 << 20,
+            conn_buffer_bytes: 1 << 20,
+            high_water_bytes: high,
+            low_water_bytes: low,
+            io: Arc::new(IoStats::default()),
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    #[test]
+    fn desired_interest_tracks_buffer_and_protocol_state() {
+        let (mut c, _client, _tx) = test_conn();
+        assert_eq!(c.desired_interest(), Some(Interest::Read));
+        c.wbuf.extend_from_slice(b"pending");
+        assert_eq!(c.desired_interest(), Some(Interest::ReadWrite));
+        c.read_closed = true;
+        assert_eq!(c.desired_interest(), Some(Interest::Write));
+        c.wpos = c.wbuf.len(); // flushed
+        assert_eq!(
+            c.desired_interest(),
+            None,
+            "drained half-closed conn needs no registration \
+             (doorbell covers engine events)"
+        );
+        c.dead = true;
+        assert_eq!(c.desired_interest(), None);
+    }
+
+    #[test]
+    fn sync_interest_registers_modifies_and_deregisters() {
+        let (mut c, _client, _tx) = test_conn();
+        let mut poller = new_poller();
+        c.sync_interest(&mut *poller);
+        assert_eq!(c.interest, Some(Interest::Read));
+        c.wbuf.extend_from_slice(b"x");
+        c.sync_interest(&mut *poller);
+        assert_eq!(c.interest, Some(Interest::ReadWrite));
+        // no-op when nothing changed
+        c.sync_interest(&mut *poller);
+        assert_eq!(c.interest, Some(Interest::ReadWrite));
+        c.dead = true;
+        c.sync_interest(&mut *poller);
+        assert_eq!(c.interest, None, "dead conn is deregistered");
+    }
+
+    #[test]
+    fn watermarks_park_then_resume_byte_identical() {
+        let (mut c, mut peer, tx) = test_conn();
+        c.mode = Mode::V2;
+        c.live.insert(7, 0); // session 7 lives on shard 0
+        // high: 256 KiB → kill line 2 MiB; the 1.5 MiB of frames below
+        // beats any loopback kernel buffering (≲ a few hundred KiB with
+        // a stalled peer) without ever reaching the kill line
+        let ctx = test_ctx(256 << 10, 64 << 10);
+        let payload = "x".repeat(2048);
+        let mut expected: Vec<u8> = Vec::new();
+        for i in 0..768u64 {
+            let ev = Event::Delta {
+                id: 7,
+                index: i,
+                text: payload.clone(),
+            };
+            expected.extend_from_slice(ev.to_frame().as_bytes());
+            expected.push(b'\n');
+            tx.send(ev).expect("enqueue event");
+        }
+        c.drain_events();
+        c.tick_write(&ctx);
+        assert!(c.paused, "backlog past the high mark must park");
+        assert!(!c.dead, "a slow consumer is parked, never disconnected");
+        let controls = ctx.shards[0].sched.take_controls();
+        assert!(
+            controls.iter().any(|ctl| matches!(
+                ctl,
+                Control::Park { conn_id: 7, id: 7 }
+            )),
+            "park control for the live session, got {controls:?}"
+        );
+
+        // the stalled peer wakes up and drains: the connection resumes
+        // and the stream is byte-identical to what was emitted
+        peer.set_read_timeout(Some(Duration::from_secs(10)))
+            .expect("read timeout");
+        let mut got: Vec<u8> = Vec::new();
+        let mut buf = [0u8; 1 << 16];
+        while got.len() < expected.len() {
+            match peer.read(&mut buf) {
+                Ok(0) => panic!("peer saw EOF after {} bytes", got.len()),
+                Ok(n) => got.extend_from_slice(&buf[..n]),
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) => panic!("peer read failed: {e}"),
+            }
+            c.tick_write(&ctx);
+        }
+        assert!(
+            got == expected,
+            "resumed stream must be byte-identical ({} vs {} bytes)",
+            got.len(),
+            expected.len()
+        );
+        assert!(!c.paused, "draining below the low mark must resume");
+        assert!(!c.dead);
+        let controls = ctx.shards[0].sched.take_controls();
+        assert!(
+            controls.iter().any(|ctl| matches!(
+                ctl,
+                Control::Unpark { conn_id: 7, id: 7 }
+            )),
+            "unpark control on resume, got {controls:?}"
+        );
+        let io = ctx.io.snapshot();
+        assert_eq!(io.backpressure_pauses, 1, "exactly one park transition");
+        assert_eq!(io.backpressure_resumes, 1, "exactly one resume");
     }
 }

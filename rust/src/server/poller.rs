@@ -1,0 +1,884 @@
+//! Readiness polling for the serving reactor: epoll (Linux) / kqueue
+//! (macOS) behind one thin [`Poller`] trait, with a portable
+//! sleep-loop fallback.
+//!
+//! The reactor registers every connection's fd once and then blocks in
+//! [`Poller::wait`]; an idle connection costs a registered fd, not a
+//! sweep iteration. Engine-side event arrival (deltas produced while
+//! every socket is quiet) is signalled through a [`Waker`] — an
+//! eventfd on Linux, a self-pipe on macOS, an atomic flag on the
+//! fallback — which makes a blocked `wait` return without any socket
+//! becoming ready.
+//!
+//! No external dependencies: the epoll/kqueue/eventfd/pipe bindings
+//! are hand-declared `extern "C"` prototypes against the platform
+//! libc the binary already links. [`SleepPoller`] reproduces the
+//! pre-readiness sweep semantics (report everything ready on a
+//! ~500 µs cadence) and is the single remaining legitimate
+//! `thread::sleep` site in the serving stack.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Raw file descriptor type registered with a [`Poller`].
+#[cfg(unix)]
+pub use std::os::unix::io::RawFd;
+
+/// Raw file descriptor stand-in on non-unix targets, where only the
+/// [`SleepPoller`] (which never dereferences fds) is available.
+#[cfg(not(unix))]
+pub type RawFd = i32;
+
+/// The raw fd of a TCP stream, for poller registration.
+#[cfg(unix)]
+pub fn stream_fd(s: &std::net::TcpStream) -> RawFd {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+/// Non-unix stand-in: the [`SleepPoller`] ignores fd values.
+#[cfg(not(unix))]
+pub fn stream_fd(_s: &std::net::TcpStream) -> RawFd {
+    -1
+}
+
+/// The raw fd of a TCP listener, for poller registration.
+#[cfg(unix)]
+pub fn listener_fd(l: &std::net::TcpListener) -> RawFd {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+/// Non-unix stand-in: the [`SleepPoller`] ignores fd values.
+#[cfg(not(unix))]
+pub fn listener_fd(_l: &std::net::TcpListener) -> RawFd {
+    -1
+}
+
+/// Which readiness directions a registration subscribes to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interest {
+    /// Readable (plus peer-hangup) only.
+    Read,
+    /// Writable only.
+    Write,
+    /// Both directions.
+    ReadWrite,
+}
+
+/// One readiness event returned by [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered under.
+    pub token: u64,
+    /// The fd can be read without blocking (or has hung up / errored —
+    /// attempting the read is how the owner finds out).
+    pub readable: bool,
+    /// The fd can be written without blocking (or has errored).
+    pub writable: bool,
+}
+
+/// Token reserved for the poller's internal wake channel; `register`
+/// rejects it.
+pub const WAKE_TOKEN: u64 = 0;
+
+/// A readiness selector: register fds under tokens, then block in
+/// [`Poller::wait`] until some registered fd is ready, a [`Waker`]
+/// fires, or the timeout lapses. Level-triggered everywhere: an fd
+/// that stays ready is reported again on the next `wait`, so owners
+/// must drain (or drop interest) to avoid spinning.
+pub trait Poller: Send {
+    /// Subscribe `fd` under `token` (must not be [`WAKE_TOKEN`]).
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()>;
+    /// Replace the interest set of an already-registered fd.
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()>;
+    /// Drop a registration. Callers deregister before closing the fd.
+    fn deregister(&mut self, fd: RawFd) -> Result<()>;
+    /// Block until readiness, a wake, or the timeout (`None` = no
+    /// timeout); fills `out` with ready events (possibly none — a
+    /// plain wake or timeout yields an empty set).
+    fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()>;
+    /// A clonable cross-thread handle that makes a blocked (or the
+    /// next) `wait` return promptly.
+    fn waker(&self) -> Waker;
+    /// Implementation name for logs and telemetry.
+    fn kind(&self) -> &'static str;
+}
+
+/// Construct the best poller for this platform: epoll on Linux,
+/// kqueue on macOS, falling back to the portable [`SleepPoller`] if
+/// the readiness syscalls fail (or on targets without either).
+pub fn new_poller() -> Box<dyn Poller> {
+    #[cfg(target_os = "linux")]
+    {
+        match EpollPoller::new() {
+            Ok(p) => return Box::new(p),
+            Err(e) => crate::warn_!(
+                "epoll unavailable ({e}); serving falls back to the sleep poller"
+            ),
+        }
+    }
+    #[cfg(target_os = "macos")]
+    {
+        match KqueuePoller::new() {
+            Ok(p) => return Box::new(p),
+            Err(e) => crate::warn_!(
+                "kqueue unavailable ({e}); serving falls back to the sleep poller"
+            ),
+        }
+    }
+    Box::new(SleepPoller::new())
+}
+
+// ---------------------------------------------------------------- waker
+
+/// Cross-thread wakeup handle for a [`Poller`]; see [`Poller::waker`].
+/// Cheap to clone; wakes coalesce (N wakes before a `wait` produce one
+/// return, which is all the reactor needs).
+#[derive(Clone)]
+pub struct Waker {
+    inner: Arc<WakerInner>,
+}
+
+enum WakerInner {
+    #[cfg(target_os = "linux")]
+    Event(CFd),
+    #[cfg(target_os = "macos")]
+    Pipe { read: CFd, write: CFd },
+    Flag(AtomicBool),
+}
+
+impl Waker {
+    /// Make a blocked (or the next) `wait` on the owning poller return
+    /// promptly. Never blocks, never fails: a full wake channel means
+    /// a wake is already pending, which is all that is needed.
+    pub fn wake(&self) {
+        match &*self.inner {
+            #[cfg(target_os = "linux")]
+            WakerInner::Event(fd) => {
+                let one: u64 = 1;
+                // SAFETY: fd is a live eventfd owned by this waker's
+                // Arc; the buffer is 8 valid bytes. EAGAIN (counter
+                // saturated) just means a wake is already pending.
+                let _ = unsafe { sys::write(fd.0, (&one as *const u64).cast(), 8) };
+            }
+            #[cfg(target_os = "macos")]
+            WakerInner::Pipe { write, .. } => {
+                let b = [1u8];
+                // SAFETY: write.0 is the live nonblocking write end of
+                // the self-pipe owned by this waker's Arc; the buffer
+                // is 1 valid byte. EAGAIN means a wake is pending.
+                let _ = unsafe { sys::write(write.0, b.as_ptr(), 1) };
+            }
+            WakerInner::Flag(flag) => {
+                // Release pairs with the Acquire swap in the fallback
+                // poller's wait: whatever the waking thread wrote
+                // before wake() is visible once the flag is observed.
+                flag.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    /// Consume a pending wake signal (owning poller only).
+    fn drain(&self) {
+        match &*self.inner {
+            #[cfg(target_os = "linux")]
+            WakerInner::Event(fd) => {
+                let mut buf: u64 = 0;
+                // SAFETY: nonblocking 8-byte read from the live eventfd
+                // owned by this waker's Arc into a valid u64 buffer.
+                let _ = unsafe { sys::read(fd.0, (&mut buf as *mut u64).cast(), 8) };
+            }
+            #[cfg(target_os = "macos")]
+            WakerInner::Pipe { read, .. } => {
+                let mut buf = [0u8; 64];
+                loop {
+                    // SAFETY: nonblocking read from the live pipe read
+                    // end owned by this waker's Arc into a valid
+                    // 64-byte buffer.
+                    let n = unsafe { sys::read(read.0, buf.as_mut_ptr(), buf.len()) };
+                    if n < buf.len() as isize {
+                        break;
+                    }
+                }
+            }
+            WakerInner::Flag(flag) => {
+                // Acquire pairs with the Release store in wake(); see
+                // there for the visibility argument.
+                let _ = flag.swap(false, Ordering::Acquire);
+            }
+        }
+    }
+
+    /// The atomic flag, when this is a fallback (flag-based) waker.
+    fn flag(&self) -> Option<&AtomicBool> {
+        match &*self.inner {
+            WakerInner::Flag(f) => Some(f),
+            #[cfg(any(target_os = "linux", target_os = "macos"))]
+            _ => None,
+        }
+    }
+}
+
+/// Closes the wrapped fd on drop (readiness-platform builds only).
+#[cfg(any(target_os = "linux", target_os = "macos"))]
+struct CFd(RawFd);
+
+#[cfg(any(target_os = "linux", target_os = "macos"))]
+impl Drop for CFd {
+    fn drop(&mut self) {
+        // SAFETY: self.0 is an open fd this wrapper exclusively owns;
+        // closing it exactly once on drop is the ownership contract.
+        let _ = unsafe { sys::close(self.0) };
+    }
+}
+
+// ------------------------------------------------------ fallback poller
+
+/// Portable fallback poller: no readiness syscalls. `wait` sleeps a
+/// short tick (≤ 500 µs, further bounded by the caller's timeout)
+/// unless a wake is pending, then reports EVERY registered fd as both
+/// readable and writable. This is exactly the pre-readiness sweep:
+/// correct — the reactor's nonblocking reads/writes tolerate spurious
+/// readiness — but honest about its cost, which is O(registered fds)
+/// per tick, so an idle fleet burns CPU proportional to connections.
+/// The sleep below is the single legitimate `thread::sleep` site in
+/// the serving stack (see the `no-sleep-outside-reactor` lint rule).
+pub struct SleepPoller {
+    registered: Vec<(RawFd, u64)>,
+    wake: Waker,
+}
+
+impl SleepPoller {
+    /// A fallback poller with no registrations.
+    pub fn new() -> SleepPoller {
+        SleepPoller {
+            registered: Vec::new(),
+            wake: Waker {
+                inner: Arc::new(WakerInner::Flag(AtomicBool::new(false))),
+            },
+        }
+    }
+}
+
+impl Default for SleepPoller {
+    fn default() -> Self {
+        SleepPoller::new()
+    }
+}
+
+impl Poller for SleepPoller {
+    fn register(&mut self, fd: RawFd, token: u64, _interest: Interest) -> Result<()> {
+        if token == WAKE_TOKEN {
+            bail!("token {WAKE_TOKEN} is reserved for the poller's waker");
+        }
+        self.registered.retain(|&(f, _)| f != fd);
+        self.registered.push((fd, token));
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        self.register(fd, token, interest)
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        self.registered.retain(|&(f, _)| f != fd);
+        Ok(())
+    }
+
+    fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        let woken = self.wake.flag().is_some_and(|f| {
+            // Acquire pairs with the Release store in Waker::wake so
+            // the event data written before the wake is visible here.
+            f.swap(false, Ordering::Acquire)
+        });
+        if !woken {
+            let tick = Duration::from_micros(500);
+            let nap = timeout.map_or(tick, |t| t.min(tick));
+            if !nap.is_zero() {
+                // lint: allow(no-sleep-outside-reactor) -- the fallback
+                // poller's sweep tick IS the reactor's parking site
+                std::thread::sleep(nap);
+            }
+        }
+        for &(_, token) in &self.registered {
+            out.push(PollEvent {
+                token,
+                readable: true,
+                writable: true,
+            });
+        }
+        Ok(())
+    }
+
+    fn waker(&self) -> Waker {
+        self.wake.clone()
+    }
+
+    fn kind(&self) -> &'static str {
+        "sleep"
+    }
+}
+
+// -------------------------------------------------------- linux / epoll
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Hand-declared libc prototypes (Linux): epoll + eventfd.
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// Kernel ABI `struct epoll_event`; packed on x86-64 only, per the
+    /// uapi headers.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        pub fn eventfd(initval: u32, flags: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// epoll-backed [`Poller`] (Linux): one `epoll_wait` per reactor
+/// wakeup regardless of fleet size, with an eventfd wake channel
+/// registered under [`WAKE_TOKEN`]. Level-triggered.
+#[cfg(target_os = "linux")]
+pub struct EpollPoller {
+    epfd: CFd,
+    wake: Waker,
+    buf: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    /// Create the epoll instance and its eventfd wake channel.
+    pub fn new() -> Result<EpollPoller> {
+        // SAFETY: plain syscall, no pointer arguments.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            bail!("epoll_create1: {}", std::io::Error::last_os_error());
+        }
+        let epfd = CFd(epfd);
+        // SAFETY: plain syscall, no pointer arguments.
+        let efd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if efd < 0 {
+            bail!("eventfd: {}", std::io::Error::last_os_error());
+        }
+        let wake = Waker {
+            inner: Arc::new(WakerInner::Event(CFd(efd))),
+        };
+        let p = EpollPoller {
+            epfd,
+            wake,
+            buf: vec![sys::EpollEvent { events: 0, data: 0 }; 128],
+        };
+        p.ctl(sys::EPOLL_CTL_ADD, efd, sys::EPOLLIN, WAKE_TOKEN)?;
+        Ok(p)
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, events: u32, token: u64) -> Result<()> {
+        let mut ev = sys::EpollEvent {
+            events,
+            data: token,
+        };
+        // SAFETY: epfd is the live epoll fd owned by self; ev is a
+        // valid epoll_event for the duration of the call.
+        let rc = unsafe { sys::epoll_ctl(self.epfd.0, op, fd, &mut ev) };
+        if rc < 0 {
+            bail!(
+                "epoll_ctl(op={op}, fd={fd}): {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_mask(interest: Interest) -> u32 {
+    match interest {
+        Interest::Read => sys::EPOLLIN | sys::EPOLLRDHUP,
+        Interest::Write => sys::EPOLLOUT,
+        Interest::ReadWrite => sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLOUT,
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Poller for EpollPoller {
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        if token == WAKE_TOKEN {
+            bail!("token {WAKE_TOKEN} is reserved for the poller's waker");
+        }
+        self.ctl(sys::EPOLL_CTL_ADD, fd, epoll_mask(interest), token)
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        if token == WAKE_TOKEN {
+            bail!("token {WAKE_TOKEN} is reserved for the poller's waker");
+        }
+        self.ctl(sys::EPOLL_CTL_MOD, fd, epoll_mask(interest), token)
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        // round a sub-millisecond timeout UP so a 500 µs caller tick
+        // does not degenerate into a nonblocking busy spin
+        let ms = match timeout {
+            None => -1,
+            Some(d) => d.as_micros().div_ceil(1000).min(i32::MAX as u128) as i32,
+        };
+        let cap = self.buf.len() as i32;
+        // SAFETY: epfd is the live epoll fd owned by self; buf is a
+        // live allocation of `cap` epoll_event slots the kernel may
+        // fill; the timeout is a plain integer.
+        let n = unsafe { sys::epoll_wait(self.epfd.0, self.buf.as_mut_ptr(), cap, ms) };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            bail!("epoll_wait: {err}");
+        }
+        for ev in self.buf.iter().take(n as usize) {
+            // copy fields out by value: the struct is packed on
+            // x86-64, so references into it would be unaligned
+            let bits = ev.events;
+            let token = ev.data;
+            if token == WAKE_TOKEN {
+                self.wake.drain();
+                continue;
+            }
+            let fail = bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+            out.push(PollEvent {
+                token,
+                readable: fail || bits & (sys::EPOLLIN | sys::EPOLLRDHUP) != 0,
+                writable: fail || bits & sys::EPOLLOUT != 0,
+            });
+        }
+        Ok(())
+    }
+
+    fn waker(&self) -> Waker {
+        self.wake.clone()
+    }
+
+    fn kind(&self) -> &'static str {
+        "epoll"
+    }
+}
+
+// -------------------------------------------------------- macos / kqueue
+
+#[cfg(target_os = "macos")]
+mod sys {
+    //! Hand-declared libc prototypes (macOS): kqueue + self-pipe.
+
+    pub const EVFILT_READ: i16 = -1;
+    pub const EVFILT_WRITE: i16 = -2;
+    pub const EV_ADD: u16 = 0x0001;
+    pub const EV_DELETE: u16 = 0x0002;
+    pub const EV_EOF: u16 = 0x8000;
+    pub const EV_ERROR: u16 = 0x4000;
+    pub const F_SETFL: i32 = 4;
+    pub const O_NONBLOCK: i32 = 0x0004;
+
+    /// ABI `struct kevent`; `udata` declared as `usize` (same layout
+    /// as the C `void *`) so the type stays `Send` without an unsafe
+    /// impl — it is never dereferenced.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct Kevent {
+        pub ident: usize,
+        pub filter: i16,
+        pub flags: u16,
+        pub fflags: u32,
+        pub data: isize,
+        pub udata: usize,
+    }
+
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    extern "C" {
+        pub fn kqueue() -> i32;
+        pub fn kevent(
+            kq: i32,
+            changelist: *const Kevent,
+            nchanges: i32,
+            eventlist: *mut Kevent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        pub fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// kqueue-backed [`Poller`] (macOS) with a nonblocking self-pipe wake
+/// channel. Read and write interest are separate kqueue filters; the
+/// fd → token map lives here rather than in `udata`.
+#[cfg(target_os = "macos")]
+pub struct KqueuePoller {
+    kq: CFd,
+    wake: Waker,
+    tokens: std::collections::HashMap<RawFd, (u64, Interest)>,
+    buf: Vec<sys::Kevent>,
+}
+
+#[cfg(target_os = "macos")]
+impl KqueuePoller {
+    /// Create the kqueue instance and its self-pipe wake channel.
+    pub fn new() -> Result<KqueuePoller> {
+        // SAFETY: plain syscall, no pointer arguments.
+        let kq = unsafe { sys::kqueue() };
+        if kq < 0 {
+            bail!("kqueue: {}", std::io::Error::last_os_error());
+        }
+        let kq = CFd(kq);
+        let mut fds = [0i32; 2];
+        // SAFETY: fds is a valid 2-slot i32 buffer for pipe() to fill.
+        let rc = unsafe { sys::pipe(fds.as_mut_ptr()) };
+        if rc < 0 {
+            bail!("pipe: {}", std::io::Error::last_os_error());
+        }
+        let (r, w) = (CFd(fds[0]), CFd(fds[1]));
+        for fd in [r.0, w.0] {
+            // SAFETY: fd is a live pipe end we just created; F_SETFL
+            // with O_NONBLOCK takes no pointers.
+            let rc = unsafe { sys::fcntl(fd, sys::F_SETFL, sys::O_NONBLOCK) };
+            if rc < 0 {
+                bail!("fcntl(O_NONBLOCK): {}", std::io::Error::last_os_error());
+            }
+        }
+        let wake_read = r.0;
+        let wake = Waker {
+            inner: Arc::new(WakerInner::Pipe { read: r, write: w }),
+        };
+        let mut p = KqueuePoller {
+            kq,
+            wake,
+            tokens: std::collections::HashMap::new(),
+            buf: vec![
+                sys::Kevent {
+                    ident: 0,
+                    filter: 0,
+                    flags: 0,
+                    fflags: 0,
+                    data: 0,
+                    udata: 0,
+                };
+                128
+            ],
+        };
+        p.change(wake_read, sys::EVFILT_READ, sys::EV_ADD)?;
+        Ok(p)
+    }
+
+    fn change(&mut self, fd: RawFd, filter: i16, flags: u16) -> Result<()> {
+        let ch = sys::Kevent {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: 0,
+        };
+        // SAFETY: kq is the live kqueue fd owned by self; ch is one
+        // valid kevent change record; no event list is requested.
+        let rc = unsafe { sys::kevent(self.kq.0, &ch, 1, std::ptr::null_mut(), 0, std::ptr::null()) };
+        if rc < 0 {
+            bail!(
+                "kevent(change fd={fd} filter={filter}): {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, fd: RawFd, old: Option<Interest>, new: Option<Interest>) -> Result<()> {
+        let wants = |i: Option<Interest>, f: i16| match i {
+            Some(Interest::Read) => f == sys::EVFILT_READ,
+            Some(Interest::Write) => f == sys::EVFILT_WRITE,
+            Some(Interest::ReadWrite) => true,
+            None => false,
+        };
+        for filter in [sys::EVFILT_READ, sys::EVFILT_WRITE] {
+            match (wants(old, filter), wants(new, filter)) {
+                (false, true) => self.change(fd, filter, sys::EV_ADD)?,
+                (true, false) => self.change(fd, filter, sys::EV_DELETE)?,
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn wake_read_fd(&self) -> RawFd {
+        match &*self.wake.inner {
+            WakerInner::Pipe { read, .. } => read.0,
+            _ => -1,
+        }
+    }
+}
+
+#[cfg(target_os = "macos")]
+impl Poller for KqueuePoller {
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        if token == WAKE_TOKEN {
+            bail!("token {WAKE_TOKEN} is reserved for the poller's waker");
+        }
+        let old = self.tokens.get(&fd).map(|&(_, i)| i);
+        self.apply(fd, old, Some(interest))?;
+        self.tokens.insert(fd, (token, interest));
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> Result<()> {
+        self.register(fd, token, interest)
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> Result<()> {
+        if let Some((_, old)) = self.tokens.remove(&fd) {
+            self.apply(fd, Some(old), None)?;
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        let ts = timeout.map(|d| sys::Timespec {
+            tv_sec: d.as_secs() as i64,
+            tv_nsec: d.subsec_nanos() as i64,
+        });
+        let ts_ptr = ts
+            .as_ref()
+            .map_or(std::ptr::null(), |t| t as *const sys::Timespec);
+        let cap = self.buf.len() as i32;
+        // SAFETY: kq is the live kqueue fd owned by self; buf is a
+        // live allocation of `cap` kevent slots the kernel may fill;
+        // ts_ptr is null or points at a timespec alive for the call.
+        let n = unsafe {
+            sys::kevent(self.kq.0, std::ptr::null(), 0, self.buf.as_mut_ptr(), cap, ts_ptr)
+        };
+        if n < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            bail!("kevent(wait): {err}");
+        }
+        let wake_fd = self.wake_read_fd();
+        for ev in self.buf.iter().take(n as usize) {
+            let fd = ev.ident as RawFd;
+            if fd == wake_fd {
+                self.wake.drain();
+                continue;
+            }
+            let Some(&(token, _)) = self.tokens.get(&fd) else {
+                continue;
+            };
+            let fail = ev.flags & (sys::EV_EOF | sys::EV_ERROR) != 0;
+            out.push(PollEvent {
+                token,
+                readable: fail || ev.filter == sys::EVFILT_READ,
+                writable: fail || ev.filter == sys::EVFILT_WRITE,
+            });
+        }
+        Ok(())
+    }
+
+    fn waker(&self) -> Waker {
+        self.wake.clone()
+    }
+
+    fn kind(&self) -> &'static str {
+        "kqueue"
+    }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn sleep_poller_reports_every_registration_ready() {
+        let mut p = SleepPoller::new();
+        p.register(41, 7, Interest::Read).unwrap();
+        p.register(42, 9, Interest::ReadWrite).unwrap();
+        let mut out = Vec::new();
+        p.wait(&mut out, Some(Duration::from_millis(5))).unwrap();
+        let mut tokens: Vec<u64> = out.iter().map(|e| e.token).collect();
+        tokens.sort_unstable();
+        assert_eq!(tokens, vec![7, 9]);
+        assert!(out.iter().all(|e| e.readable && e.writable));
+        p.deregister(41).unwrap();
+        p.wait(&mut out, Some(Duration::from_millis(5))).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].token, 9);
+    }
+
+    #[test]
+    fn sleep_poller_wake_skips_the_nap() {
+        let mut p = SleepPoller::new();
+        let w = p.waker();
+        w.wake();
+        let mut out = Vec::new();
+        let t0 = Instant::now();
+        p.wait(&mut out, Some(Duration::from_millis(250))).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "a pending wake must make wait return without napping"
+        );
+    }
+
+    #[test]
+    fn wake_token_is_rejected() {
+        let mut p = SleepPoller::new();
+        assert!(p.register(5, WAKE_TOKEN, Interest::Read).is_err());
+        let mut p = new_poller();
+        assert!(p.register(5, WAKE_TOKEN, Interest::Read).is_err());
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "macos"))]
+    mod readiness {
+        use super::*;
+
+        #[test]
+        fn platform_poller_is_not_the_fallback() {
+            let p = new_poller();
+            assert_ne!(p.kind(), "sleep", "CI platforms must get real readiness");
+        }
+
+        #[test]
+        fn data_arrival_reports_readable_for_the_right_token() {
+            let (mut client, server) = tcp_pair();
+            let mut p = new_poller();
+            p.register(stream_fd(&server), 3, Interest::Read).unwrap();
+            let mut out = Vec::new();
+            // idle socket: nothing ready before the timeout
+            p.wait(&mut out, Some(Duration::from_millis(20))).unwrap();
+            assert!(out.is_empty(), "no events expected on an idle socket");
+            client.write_all(b"hello\n").unwrap();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(
+                out.iter().any(|e| e.token == 3 && e.readable),
+                "got {out:?}"
+            );
+            let mut buf = [0u8; 16];
+            let n = server.try_clone().unwrap().read(&mut buf).unwrap();
+            assert_eq!(&buf[..n], b"hello\n");
+        }
+
+        #[test]
+        fn modify_adds_writable_and_deregister_silences() {
+            let (mut client, server) = tcp_pair();
+            let mut p = new_poller();
+            let fd = stream_fd(&server);
+            p.register(fd, 4, Interest::Read).unwrap();
+            p.modify(fd, 4, Interest::ReadWrite).unwrap();
+            let mut out = Vec::new();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(
+                out.iter().any(|e| e.token == 4 && e.writable),
+                "an open socket with write interest is writable: {out:?}"
+            );
+            p.deregister(fd).unwrap();
+            client.write_all(b"x\n").unwrap();
+            p.wait(&mut out, Some(Duration::from_millis(50))).unwrap();
+            assert!(
+                out.iter().all(|e| e.token != 4),
+                "deregistered fd must stay silent: {out:?}"
+            );
+        }
+
+        #[test]
+        fn waker_interrupts_a_blocked_wait() {
+            let mut p = new_poller();
+            // park on a quiet socket so the wait would otherwise block
+            let (_client, server) = tcp_pair();
+            p.register(stream_fd(&server), 8, Interest::Read).unwrap();
+            let w = p.waker();
+            let handle = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                w.wake();
+            });
+            let mut out = Vec::new();
+            let t0 = Instant::now();
+            p.wait(&mut out, Some(Duration::from_secs(10))).unwrap();
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "wake must interrupt the wait well before the timeout"
+            );
+            assert!(out.iter().all(|e| e.token != WAKE_TOKEN));
+            handle.join().unwrap();
+        }
+
+        #[test]
+        fn wakes_coalesce_and_drain() {
+            let mut p = new_poller();
+            let w = p.waker();
+            for _ in 0..100 {
+                w.wake();
+            }
+            let mut out = Vec::new();
+            p.wait(&mut out, Some(Duration::from_secs(5))).unwrap();
+            assert!(out.is_empty());
+            // drained: the next wait times out instead of spinning
+            let t0 = Instant::now();
+            p.wait(&mut out, Some(Duration::from_millis(30))).unwrap();
+            assert!(out.is_empty());
+            assert!(t0.elapsed() >= Duration::from_millis(20));
+        }
+    }
+}

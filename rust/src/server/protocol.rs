@@ -66,6 +66,7 @@
 //! # v2 server → client event frames
 //!
 //!   {"v":2,"ev":"accepted","id":7,"queue_pos":0}
+//!   {"v":2,"ev":"queue","id":7,"position":3}
 //!   {"v":2,"ev":"delta","id":7,"index":0,"text":"the "}
 //!   {"v":2,"ev":"refresh","id":7,"refreshes":1,"mask_updates":1,
 //!    "changed":true}
@@ -77,6 +78,16 @@
 //! Per session id: `accepted` first (with the position in the target
 //! shard's queue at submission), then zero or more `delta` / `refresh`
 //! frames, then exactly ONE terminal frame (`done` or `error`).
+//!
+//! While a session waits for admission the server pushes
+//! server-initiated `queue` frames: one whenever the session's queue
+//! position CHANGES (0 = next to be admitted), never twice for the
+//! same position, and always strictly between `accepted` and the
+//! session's first `delta` (a session admitted straight into a slot
+//! emits none). `queue` frames are non-terminal progress telemetry —
+//! blocking collectors ([`Event::into_response`], the v1 shim) ignore
+//! them bit-compatibly, so a v2 client that predates them keeps
+//! working unchanged.
 //! `delta.index` is contiguous from 0; every delta carries a valid
 //! UTF-8 chunk and the concatenation of all delta texts is
 //! byte-identical to the `done` frame's `text` — which is itself
@@ -167,9 +178,9 @@
 //! * Request knobs: `prompt`, `strategy`, `lambda`, `density`,
 //!   `max_tokens`, `refresh_every`, `cache`, `received`.
 //! * Event and response fields: `index`, `text`, `finish`, `error`,
-//!   `retryable`, `queue_pos`, `changed`, `tokens`, `prompt_tokens`,
-//!   `cached_prompt_tokens`, `refreshes`, `mask_updates`,
-//!   `prefill_ms`, `decode_ms`, `queue_ms`.
+//!   `retryable`, `queue_pos`, `position`, `changed`, `tokens`,
+//!   `prompt_tokens`, `cached_prompt_tokens`, `refreshes`,
+//!   `mask_updates`, `prefill_ms`, `decode_ms`, `queue_ms`.
 //! * Stats reply: `stats`, `shards`, `cache_hits`, `cache_misses`,
 //!   `cache_inserts`, `cache_evictions`, `cache_bytes_resident`,
 //!   `cache_entries`, `cache_warm_start_hits`, `shard`,
@@ -310,6 +321,12 @@ pub fn v2_frame_from_json(j: &Json) -> Result<V2Frame> {
 pub enum Event {
     /// Session admitted to a shard's queue (position at submission).
     Accepted { id: u64, queue_pos: u64 },
+    /// Server-initiated queue progress: the session's position in its
+    /// shard's admission queue changed (0 = next to be admitted).
+    /// Emitted only on change, only between `accepted` and the first
+    /// `delta`; non-terminal and ignored bit-compatibly by blocking
+    /// collectors.
+    Queue { id: u64, position: u64 },
     /// Incremental generation text. `index` is contiguous from 0; the
     /// concatenation of all delta texts equals the final `done` text.
     Delta { id: u64, index: u64, text: String },
@@ -338,6 +355,7 @@ impl Event {
     pub fn id(&self) -> u64 {
         match self {
             Event::Accepted { id, .. }
+            | Event::Queue { id, .. }
             | Event::Delta { id, .. }
             | Event::Refresh { id, .. }
             | Event::Error { id, .. } => *id,
@@ -370,6 +388,11 @@ impl Event {
                 o.set("ev", Json::Str("accepted".into()))
                     .set("id", Json::Num(*id as f64))
                     .set("queue_pos", Json::Num(*queue_pos as f64));
+            }
+            Event::Queue { id, position } => {
+                o.set("ev", Json::Str("queue".into()))
+                    .set("id", Json::Num(*id as f64))
+                    .set("position", Json::Num(*position as f64));
             }
             Event::Delta { id, index, text } => {
                 o.set("ev", Json::Str("delta".into()))
@@ -419,6 +442,10 @@ impl Event {
             "accepted" => Event::Accepted {
                 id,
                 queue_pos: j.req("queue_pos")?.as_usize()? as u64,
+            },
+            "queue" => Event::Queue {
+                id,
+                position: j.req("position")?.as_usize()? as u64,
             },
             "delta" => Event::Delta {
                 id,
@@ -1156,6 +1183,7 @@ mod tests {
                 id: 7,
                 queue_pos: 3,
             },
+            Event::Queue { id: 7, position: 2 },
             Event::Delta {
                 id: 7,
                 index: 0,
@@ -1205,6 +1233,10 @@ mod tests {
         assert!(Event::Accepted { id: 1, queue_pos: 0 }
             .into_response()
             .is_none());
+        // a pre-queue-frame v2 client's blocking call sees no change
+        assert!(Event::Queue { id: 1, position: 4 }
+            .into_response()
+            .is_none());
         assert!(Event::Delta {
             id: 1,
             index: 0,
@@ -1232,6 +1264,7 @@ mod tests {
         }
         .is_terminal());
         assert!(!Event::Accepted { id: 1, queue_pos: 0 }.is_terminal());
+        assert!(!Event::Queue { id: 1, position: 0 }.is_terminal());
         assert!(!Event::Delta {
             id: 1,
             index: 0,

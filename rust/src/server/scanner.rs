@@ -1,0 +1,266 @@
+//! Zero-copy newline-frame scanning for the reactor's read path.
+//!
+//! Every v2 delta acknowledgement, cancel, resume, and stats command
+//! arrives as one newline-terminated frame, so line splitting sits on
+//! the per-token hot path. The old reactor copied each line out of
+//! the connection's read buffer (`rbuf[..nl].to_vec()`) before
+//! parsing; [`FrameScanner`] instead yields `&[u8]` slices that
+//! borrow directly from the read buffer — no intermediate `String` or
+//! `Vec` per frame — and tracks two cursors across calls:
+//!
+//! * `scanned` — how far the newline search has progressed, so bytes
+//!   of a partial frame are never re-scanned when more data arrives;
+//! * `consumed` — how many bytes belong to fully-yielded frames and
+//!   can be drained from the FRONT of the buffer.
+//!
+//! Contract: between refills the buffer may only grow at the tail.
+//! After draining exactly [`FrameScanner::consumed`] bytes from the
+//! front, call [`FrameScanner::on_drain`] so the cursors shift with
+//! the bytes. Equivalence with the previous allocating splitter is
+//! pinned by a fuzz-style test below (random byte streams × random
+//! chunk partitions).
+
+/// Incremental zero-copy line scanner over an append-only buffer; see
+/// the module docs for the cursor contract.
+#[derive(Debug, Default, Clone)]
+pub struct FrameScanner {
+    scanned: usize,
+    consumed: usize,
+}
+
+impl FrameScanner {
+    /// A scanner with both cursors at the buffer start.
+    pub fn new() -> FrameScanner {
+        FrameScanner::default()
+    }
+
+    /// The next complete line in `buf` (newline stripped, borrowed
+    /// from `buf`), or `None` once no full line remains — at which
+    /// point the scan frontier has advanced to `buf.len()`, so the
+    /// bytes of the trailing partial line are never re-scanned.
+    pub fn next_line<'a>(&mut self, buf: &'a [u8]) -> Option<&'a [u8]> {
+        match buf[self.scanned..].iter().position(|&b| b == b'\n') {
+            Some(at) => {
+                let nl = self.scanned + at;
+                let line = &buf[self.consumed..nl];
+                self.scanned = nl + 1;
+                self.consumed = nl + 1;
+                Some(line)
+            }
+            None => {
+                self.scanned = buf.len();
+                None
+            }
+        }
+    }
+
+    /// Bytes of fully-yielded lines, ready to be drained from the
+    /// front of the buffer.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    /// Length of the trailing partial (not yet newline-terminated)
+    /// frame, given the current buffer length — what the frame-size
+    /// cap applies to.
+    pub fn pending(&self, buf_len: usize) -> usize {
+        buf_len.saturating_sub(self.consumed)
+    }
+
+    /// Account for `consumed()` bytes having been drained from the
+    /// front of the buffer: both cursors shift down so they keep
+    /// pointing at the same bytes.
+    pub fn on_drain(&mut self) {
+        self.scanned -= self.consumed;
+        self.consumed = 0;
+    }
+
+    /// Forget everything (used when the connection abandons its read
+    /// buffer after a protocol error).
+    pub fn reset(&mut self) {
+        self.scanned = 0;
+        self.consumed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The previous allocating splitter, kept verbatim as the
+    /// reference model: scan for '\n' from a persistent frontier,
+    /// copy each line out, drain consumed bytes from the front.
+    struct AllocSplitter {
+        rbuf: Vec<u8>,
+        scanned: usize,
+    }
+
+    impl AllocSplitter {
+        fn new() -> AllocSplitter {
+            AllocSplitter {
+                rbuf: Vec::new(),
+                scanned: 0,
+            }
+        }
+
+        fn feed(&mut self, chunk: &[u8]) -> Vec<Vec<u8>> {
+            self.rbuf.extend_from_slice(chunk);
+            let mut out = Vec::new();
+            let mut consumed = 0usize;
+            while let Some(at) =
+                self.rbuf[self.scanned..].iter().position(|&b| b == b'\n')
+            {
+                let nl = self.scanned + at;
+                out.push(self.rbuf[consumed..nl].to_vec());
+                self.scanned = nl + 1;
+                consumed = nl + 1;
+            }
+            if consumed > 0 {
+                self.rbuf.drain(..consumed);
+            }
+            self.scanned = self.rbuf.len();
+            out
+        }
+    }
+
+    /// The new zero-copy path, driven exactly like the reactor drives
+    /// it: take the buffer, yield borrowed lines, restore, drain.
+    struct ZeroCopy {
+        rbuf: Vec<u8>,
+        scanner: FrameScanner,
+    }
+
+    impl ZeroCopy {
+        fn new() -> ZeroCopy {
+            ZeroCopy {
+                rbuf: Vec::new(),
+                scanner: FrameScanner::new(),
+            }
+        }
+
+        fn feed(&mut self, chunk: &[u8]) -> Vec<Vec<u8>> {
+            self.rbuf.extend_from_slice(chunk);
+            let rbuf = std::mem::take(&mut self.rbuf);
+            let mut out = Vec::new();
+            while let Some(line) = self.scanner.next_line(&rbuf) {
+                out.push(line.to_vec()); // copy only to compare
+            }
+            self.rbuf = rbuf;
+            self.rbuf.drain(..self.scanner.consumed());
+            self.scanner.on_drain();
+            out
+        }
+    }
+
+    /// xorshift64* — deterministic, dependency-free fuzz source.
+    struct Prng(u64);
+
+    impl Prng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            self.0 = x;
+            x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+        }
+
+        fn below(&mut self, n: usize) -> usize {
+            (self.next() % n.max(1) as u64) as usize
+        }
+    }
+
+    #[test]
+    fn yields_lines_and_tracks_partial_frames() {
+        let mut s = FrameScanner::new();
+        let mut buf: Vec<u8> = b"alpha\nbe".to_vec();
+        assert_eq!(s.next_line(&buf), Some(&b"alpha"[..]));
+        assert_eq!(s.next_line(&buf), None);
+        assert_eq!(s.consumed(), 6);
+        assert_eq!(s.pending(buf.len()), 2);
+        buf.drain(..s.consumed());
+        s.on_drain();
+        buf.extend_from_slice(b"ta\n\ngamma");
+        assert_eq!(s.next_line(&buf), Some(&b"beta"[..]));
+        assert_eq!(s.next_line(&buf), Some(&b""[..]));
+        assert_eq!(s.next_line(&buf), None);
+        assert_eq!(s.pending(buf.len()), 5);
+        buf.drain(..s.consumed());
+        s.on_drain();
+        assert_eq!(buf, b"gamma");
+    }
+
+    #[test]
+    fn never_rescans_partial_bytes() {
+        // the frontier must sit at buf.len() after a miss, so feeding
+        // one byte at a time costs O(1) per byte, not O(len²)
+        let mut s = FrameScanner::new();
+        let mut buf = Vec::new();
+        for _ in 0..100 {
+            buf.push(b'x');
+            assert_eq!(s.next_line(&buf), None);
+        }
+        buf.push(b'\n');
+        assert_eq!(s.next_line(&buf), Some(&buf.clone()[..100]));
+    }
+
+    #[test]
+    fn fuzz_equivalence_with_allocating_splitter() {
+        let mut rng = Prng(0x9e37_79b9_7f4a_7c15);
+        for round in 0..200 {
+            // random stream: frames of random length (some empty, some
+            // long, occasional embedded '\r' and UTF-8 bytes), with a
+            // random trailing partial frame
+            let mut stream = Vec::new();
+            for _ in 0..rng.below(12) {
+                let len = rng.below(40);
+                for _ in 0..len {
+                    let b = match rng.below(8) {
+                        0 => b'\r',
+                        1 => 0xC3, // multi-byte UTF-8 lead
+                        _ => b'a' + (rng.below(26) as u8),
+                    };
+                    stream.push(b);
+                }
+                stream.push(b'\n');
+            }
+            for _ in 0..rng.below(10) {
+                stream.push(b'z');
+            }
+            // random partition into feed() chunks
+            let mut old = AllocSplitter::new();
+            let mut new = ZeroCopy::new();
+            let mut at = 0usize;
+            while at < stream.len() {
+                let take = (1 + rng.below(16)).min(stream.len() - at);
+                let chunk = &stream[at..at + take];
+                assert_eq!(
+                    old.feed(chunk),
+                    new.feed(chunk),
+                    "round {round}: divergence at offset {at}"
+                );
+                assert_eq!(old.rbuf, new.rbuf, "round {round}: leftovers differ");
+                assert_eq!(
+                    new.scanner.pending(new.rbuf.len()),
+                    new.rbuf.len(),
+                    "after a full drain the whole leftover is one partial frame"
+                );
+                at += take;
+            }
+            // an empty refill yields nothing and disturbs nothing
+            assert_eq!(old.feed(&[]), new.feed(&[]), "round {round}");
+            assert_eq!(old.rbuf, new.rbuf, "round {round}");
+        }
+    }
+
+    #[test]
+    fn reset_forgets_everything() {
+        let mut s = FrameScanner::new();
+        let buf = b"abc\ndef".to_vec();
+        assert!(s.next_line(&buf).is_some());
+        s.reset();
+        assert_eq!(s.consumed(), 0);
+        let fresh = b"xyz\n".to_vec();
+        assert_eq!(s.next_line(&fresh), Some(&b"xyz"[..]));
+    }
+}

@@ -52,6 +52,17 @@ pub enum Control {
         id: u64,
         refresh_every: usize,
     },
+    /// Backpressure: the session's client stopped draining its socket
+    /// (write buffer crossed the high-water mark). Pause the session's
+    /// decode slot — keep the slot, KV state, and emitter intact, emit
+    /// nothing, burn no engine steps on it — instead of disconnecting
+    /// the slow consumer. A session not yet admitted is remembered and
+    /// placed paused.
+    Park { conn_id: u64, id: u64 },
+    /// Backpressure released: the client's write buffer drained below
+    /// the low-water mark; resume the paused slot exactly where it
+    /// stopped (byte-identical continuation).
+    Unpark { conn_id: u64, id: u64 },
 }
 
 impl Control {
@@ -59,7 +70,9 @@ impl Control {
     pub fn key(&self) -> (u64, u64) {
         match *self {
             Control::Cancel { conn_id, id }
-            | Control::SetRefresh { conn_id, id, .. } => (conn_id, id),
+            | Control::SetRefresh { conn_id, id, .. }
+            | Control::Park { conn_id, id }
+            | Control::Unpark { conn_id, id } => (conn_id, id),
         }
     }
 }
@@ -225,6 +238,19 @@ impl Scheduler {
         self.locked().queue.len()
     }
 
+    /// Snapshot of the queued sessions in queue order:
+    /// `(conn_id, session id, streaming?)` per entry, index = current
+    /// queue position (0 = next to be drained). The batcher diffs
+    /// consecutive snapshots to emit v2 `queue` position-update frames
+    /// while a session waits for admission.
+    pub fn queued_sessions(&self) -> Vec<(u64, u64, bool)> {
+        self.locked()
+            .queue
+            .iter()
+            .map(|p| (p.conn_id, p.request.id, p.stream))
+            .collect()
+    }
+
     /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.locked().queue.is_empty()
@@ -303,6 +329,20 @@ impl Scheduler {
     /// Has [`Scheduler::close`] / [`Scheduler::drain_close`] run?
     pub fn is_closed(&self) -> bool {
         self.locked().closed
+    }
+
+    /// Block until a control message is pending or the queue closes.
+    /// The batcher parks here when every decode slot is occupied AND
+    /// paused by backpressure: new submissions cannot help (no free
+    /// slot), so only a control (`Unpark` / `Cancel`) or shutdown can
+    /// change anything — sleeping on the condvar instead of re-polling
+    /// keeps an all-parked shard at zero CPU.
+    pub fn wait_control(&self) {
+        let mut st = self.locked();
+        while !st.closed && st.controls.is_empty() {
+            // same poison policy as locked(): recover, don't wedge
+            st = self.cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
     }
 }
 
@@ -451,6 +491,40 @@ mod tests {
             vec![2, 3, 4]
         );
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn park_controls_share_the_session_key() {
+        let park = Control::Park { conn_id: 7, id: 3 };
+        let unpark = Control::Unpark { conn_id: 7, id: 3 };
+        assert_eq!(park.key(), (7, 3));
+        assert_eq!(unpark.key(), (7, 3));
+        let s = Scheduler::new(2, Duration::from_millis(1));
+        s.control(park);
+        s.control(unpark);
+        assert_eq!(s.take_controls(), vec![park, unpark], "FIFO drain");
+    }
+
+    #[test]
+    fn queued_sessions_snapshot_tracks_positions() {
+        let s = Scheduler::new(2, Duration::from_millis(1));
+        assert!(s.queued_sessions().is_empty());
+        for i in 1..=3 {
+            let _ = s.submit(req(i));
+        }
+        assert_eq!(
+            s.queued_sessions(),
+            vec![(1, 1, true), (2, 2, true), (3, 3, true)],
+            "queue order, conn/session keys, stream flags"
+        );
+        let _ = s.take(1);
+        assert_eq!(
+            s.queued_sessions(),
+            vec![(2, 2, true), (3, 3, true)],
+            "positions shift down as the head drains"
+        );
+        let _ = s.remove(2, 2);
+        assert_eq!(s.queued_sessions(), vec![(3, 3, true)]);
     }
 
     #[test]
@@ -616,6 +690,30 @@ mod tests {
                 .key(),
             (3, 4)
         );
+    }
+
+    #[test]
+    fn wait_control_blocks_until_control_or_close() {
+        // a control wakes the wait; queued work alone does NOT (the
+        // batcher only calls this when no free slot could accept it)
+        let s = Arc::new(Scheduler::new(2, Duration::from_millis(1)));
+        let _ = s.submit(req(0));
+        let s2 = Arc::clone(&s);
+        let h = std::thread::spawn(move || {
+            s2.wait_control();
+            s2.take_controls()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        s.control(Control::Unpark { conn_id: 0, id: 0 });
+        let drained = h.join().unwrap();
+        assert_eq!(drained, vec![Control::Unpark { conn_id: 0, id: 0 }]);
+        assert_eq!(s.len(), 1, "queued work untouched by the wait");
+        // and close() alone also releases the wait
+        let s2 = Arc::clone(&s);
+        let h = std::thread::spawn(move || s2.wait_control());
+        std::thread::sleep(Duration::from_millis(20));
+        s.close();
+        h.join().unwrap();
     }
 
     #[test]

@@ -178,6 +178,11 @@ const FLOOR_KEYS: &[&str] = &[
     "prefill_tokens_saved_warm",
     "prefill_chunks",
     "decode_steps_during_prefill",
+    // slow-consumer row: park transitions observed while a stalled
+    // reader is throttled — losing them means backpressure stopped
+    // engaging (the consumer is either disconnected or buffered
+    // without bound instead of parked)
+    "backpressure_pauses",
     // warm-restart row: cache hits served from entries imported out of
     // a persisted snapshot — losing them means restart persistence
     // stopped working (snapshot not written, not loaded, or not hit)
@@ -191,6 +196,11 @@ const FLOOR_KEYS: &[&str] = &[
 /// sleep, a quadratic admission path — trips them on a slow CI host.
 const CEILING_KEYS: &[&str] = &[
     "p95_queue_decode_ms",
+    // idle-fleet row: poller sweeps per generated token with 256 idle
+    // connections attached — a breach means the reactor went back to
+    // per-connection polling (wakeups scaling with fleet size instead
+    // of with actual events)
+    "idle_cpu_sweeps_per_token",
     // radix-index scaling row: p95 of one cache lookup (microseconds)
     // with hundreds of resident entries — a ceiling breach means
     // lookups regressed toward entry-count scans again
@@ -442,6 +452,48 @@ mod tests {
             ("p95_queue_decode_ms", 2000.0),
         ]);
         assert!(check_regression(&ok, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_enforces_idle_sweep_ceiling_and_backpressure_floor() {
+        // the reactor rows: sweeps-per-token is a CEILING (wakeups must
+        // not scale with idle fleet size), park transitions a FLOOR
+        // (the slow-consumer run must actually engage backpressure)
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_cpu_sweeps_per_token", 25.0),
+            ("backpressure_pauses", 1.0),
+        ]);
+        let sweeping = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_cpu_sweeps_per_token", 260.0),
+            ("backpressure_pauses", 1.0),
+        ]);
+        let r = check_regression(&sweeping, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("idle_cpu_sweeps_per_token"),
+            "{:?}",
+            r.failures
+        );
+        let never_parks = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_cpu_sweeps_per_token", 10.0),
+            ("backpressure_pauses", 0.0),
+        ]);
+        let r = check_regression(&never_parks, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("backpressure_pauses"),
+            "{:?}",
+            r.failures
+        );
+        let fine = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("idle_cpu_sweeps_per_token", 10.0),
+            ("backpressure_pauses", 3.0),
+        ]);
+        assert!(check_regression(&fine, &base, 0.15).passed());
     }
 
     #[test]

@@ -271,6 +271,7 @@ fn v2_stream_deltas_concat_bit_identical_to_v1_blocking() {
                 concat.push_str(&text);
             }
             Event::Refresh { .. } => refreshes_seen += 1,
+            Event::Queue { .. } => {}
             Event::Done(resp) => break resp,
             Event::Error { error, .. } => panic!("stream failed: {error}"),
         }
@@ -1910,4 +1911,190 @@ fn burst_wider_than_free_slots_is_requeued_not_failed() {
         assert!(r.error.is_none(), "conn {c}: {:?}", r.error);
         assert_eq!(r.tokens, 3);
     }
+}
+
+// ------------------------------- readiness reactor + backpressure
+
+/// The readiness acceptance proof: a fleet of idle connections costs
+/// ZERO read syscalls while another connection streams — the reactor
+/// reads only on poller-reported readability, never by sweeping the
+/// connection table. Skipped on the portable sleep-tick poller, which
+/// by design reports every registered fd each tick.
+#[test]
+fn idle_fleet_costs_zero_reads_between_events() {
+    let server = start_server_sharded(1);
+    if server.poller_kind() == "sleep" {
+        eprintln!("skipping: sleep-tick fallback poller sweeps by design");
+        server.stop();
+        return;
+    }
+    // 64 connections that never send a byte after connecting
+    let idle: Vec<std::net::TcpStream> = (0..64)
+        .map(|_| {
+            std::net::TcpStream::connect(&server.addr)
+                .expect("idle connect")
+        })
+        .collect();
+    let mut c = connect(&server.addr);
+    // a warm-up call (plus settle time) guarantees every idle
+    // connection's one-time adoption read happened before the baseline
+    let warm = c.call(request("the blue owl is", "dense", 0.5)).unwrap();
+    assert!(warm.error.is_none(), "{:?}", warm.error);
+    std::thread::sleep(Duration::from_millis(150));
+    let base = server.io_stats().reads;
+    let mut r = request("once there was a red fox", "i-glass", 0.5);
+    r.max_tokens = 16;
+    let resp = c.call(r).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let delta = server.io_stats().reads - base;
+    // the active connection costs a few reads (its request frames +
+    // the trailing WouldBlock per readiness event); 64 swept idle
+    // connections would add ≥ 64
+    assert!(
+        delta <= 16,
+        "one active stream among 64 idle conns cost {delta} reads — \
+         the reactor is sweeping instead of reacting"
+    );
+    drop(idle);
+    server.stop();
+}
+
+/// Queue-position frames: sessions waiting behind a full batch get v2
+/// `queue` events whose positions shrink as the queue drains, before
+/// their `accepted` frame arrives.
+#[test]
+fn v2_queued_session_receives_queue_position_frames() {
+    let server = start_server_sharded(1);
+    let mut c = Client::connect_v2(&server.addr).unwrap();
+    // fill all 4 decode slots with long streams...
+    let mut fillers = Vec::new();
+    for i in 0..4 {
+        let mut r = request(
+            &format!("stress prompt number {i} says"),
+            "i-glass",
+            0.5,
+        );
+        r.max_tokens = 128;
+        fillers.push(c.generate_stream(r).unwrap());
+    }
+    // ...then two more that must wait for a slot
+    let mk_waiter = |c: &mut Client, prompt: &str| {
+        let mut r = request(prompt, "dense", 0.5);
+        r.max_tokens = 4;
+        c.generate_stream(r).unwrap()
+    };
+    let w1 = mk_waiter(&mut c, "the blue owl is");
+    let w2 = mk_waiter(&mut c, "every morning the wolf");
+    for (which, id) in [("first", w1), ("second", w2)] {
+        let mut positions: Vec<u64> = Vec::new();
+        let mut accepted = false;
+        let mut saw_delta = false;
+        loop {
+            match c.next_event(id).unwrap() {
+                Event::Queue { position, .. } => {
+                    // queue frames live strictly between `accepted`
+                    // (pushed at submission) and the first delta
+                    // (admission happened)
+                    assert!(
+                        accepted,
+                        "{which} waiter: queue frame before accepted"
+                    );
+                    assert!(
+                        !saw_delta,
+                        "{which} waiter: queue frame after admission"
+                    );
+                    positions.push(position);
+                }
+                Event::Accepted { .. } => accepted = true,
+                Event::Delta { .. } => saw_delta = true,
+                Event::Done(resp) => {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    break;
+                }
+                Event::Error { error, .. } => {
+                    panic!("{which} waiter failed: {error}")
+                }
+                _ => {}
+            }
+        }
+        assert!(accepted, "{which} waiter never accepted");
+        assert!(
+            !positions.is_empty(),
+            "{which} waiter saw no queue frames while slots were full"
+        );
+        assert!(
+            positions.windows(2).all(|w| w[1] < w[0]),
+            "{which} waiter: positions must strictly shrink, got \
+             {positions:?}"
+        );
+    }
+    // drain the fillers so stop() is quick and every stream completed
+    for id in fillers {
+        loop {
+            match c.next_event(id).unwrap() {
+                Event::Done(resp) => {
+                    assert!(resp.error.is_none(), "{:?}", resp.error);
+                    break;
+                }
+                Event::Error { error, .. } => panic!("filler: {error}"),
+                _ => {}
+            }
+        }
+    }
+    server.stop();
+}
+
+/// A consumer that stalls mid-stream is parked, never disconnected,
+/// and the stream it eventually drains is byte-identical to an
+/// unstalled run. Also the end-to-end exercise of the ServerConfig
+/// construction path with explicit watermarks.
+#[test]
+fn stalled_consumer_is_parked_not_dropped_and_stream_is_identical() {
+    let cfg = glass::config::ServerConfig::new(4)
+        .with_bind("127.0.0.1:0")
+        // the floor values: park as early as the server allows so the
+        // stall below plausibly crosses the mark on any kernel
+        .with_watermarks(1 << 12, 1 << 10);
+    let server =
+        Server::start_with_config(common::engine(), &cfg).unwrap();
+    let mk = || {
+        let mut r = request("once there was a red fox", "i-glass", 0.5);
+        r.max_tokens = 96;
+        r.refresh_every = 8;
+        r.cache = CacheMode::Off;
+        r
+    };
+    // reference: an unstalled blocking run
+    let mut fast = Client::connect(&server.addr).unwrap();
+    let reference = fast.call(mk()).unwrap();
+    assert!(reference.error.is_none(), "{:?}", reference.error);
+
+    // stalled consumer: start the stream, then refuse to read while
+    // the server generates (kernel buffers + wbuf absorb the backlog;
+    // crossing the watermark parks the session rather than killing it)
+    let mut slow = Client::connect_v2(&server.addr).unwrap();
+    let id = slow.generate_stream(mk()).unwrap();
+    std::thread::sleep(Duration::from_millis(400));
+    let mut concat = String::new();
+    let done = loop {
+        match slow.next_event(id).unwrap() {
+            Event::Delta { text, .. } => concat.push_str(&text),
+            Event::Done(resp) => break resp,
+            Event::Error { error, .. } => {
+                panic!("stalled consumer must not be failed: {error}")
+            }
+            _ => {}
+        }
+    };
+    assert_eq!(
+        concat, reference.text,
+        "post-stall delta concatenation diverged"
+    );
+    assert_eq!(done.text, reference.text);
+    assert_eq!(done.tokens, reference.tokens);
+    // the connection survived the stall and keeps serving
+    let again = slow.call(mk()).unwrap();
+    assert!(again.error.is_none(), "{:?}", again.error);
+    assert_eq!(again.text, reference.text);
+    server.stop();
 }
