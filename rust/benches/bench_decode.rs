@@ -36,23 +36,31 @@
 //! `idle_cpu_sweeps_per_token` — poller wakeups per generated token,
 //! ceilinged so a regression back to per-connection sweeping fails CI;
 //! and `backpressure_pauses` — park transitions from one deterministic
-//! slow-consumer pass, floored so backpressure keeps engaging).
+//! slow-consumer pass, floored so backpressure keeps engaging), plus
+//! the quantized-kernel rows: the cpu-q8 masked FFN GEMV at densities
+//! {1.0, 0.5, 0.3} over one shared int8 weight set (`q8_toks_per_s`
+//! floors the dense throughput; `q8_sparse_speedup_x` floors the
+//! density-0.3 speedup — the machine-independent proof that a GLASS
+//! mask skips real row traffic, not just mask bookkeeping).
+//! `--backend sim|cpu-q8|pjrt` selects the engine's execution backend
+//! through the registry ("auto" when omitted).
 
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use glass::config::ServerConfig;
 use glass::engine::prefix_cache::{
     CacheMode, CacheTelemetry, PrefixCache,
 };
-use glass::engine::prefix_store;
 use glass::engine::{Engine, KvState};
 use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
-use glass::server::batcher::{Batcher, BatcherOptions};
+use glass::runtime::quant;
+use glass::server::batcher::Batcher;
 use glass::server::client::Client;
 use glass::server::protocol::{Event, Request};
 use glass::server::scheduler::{Control, Pending, Scheduler};
-use glass::server::{route_shard, route_window, Server, ServerOptions};
+use glass::server::{route_shard, route_window, Server};
 use glass::tensor::TensorF;
 use glass::util::bench::{check_regression, Bencher};
 use glass::util::json::Json;
@@ -72,8 +80,15 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let check_against = arg_value("--check-against");
     let write_baseline = arg_value("--write-baseline");
-    let engine = Engine::load_or_synthetic(Path::new("artifacts"))
-        .expect("load engine");
+    // --backend sim|cpu-q8|pjrt picks an ExecBackend from the registry;
+    // "auto" keeps the default resolution (pjrt when compiled in)
+    let backend =
+        arg_value("--backend").unwrap_or_else(|| "auto".into());
+    let engine = Engine::load_or_synthetic_with_backend(
+        Path::new("artifacts"),
+        &backend,
+    )
+    .expect("load engine");
     let spec = engine.spec().clone();
     let mut b = Bencher::default();
     b.budget_s = 2.0;
@@ -197,9 +212,10 @@ fn main() {
     // cache is DISABLED here so these rows keep measuring the cold
     // prefill + decode path (the shared-prefix rows below measure the
     // cache).
-    let mut batcher = Batcher::with_options(
+    let mut batcher = Batcher::from_config(
         engine.clone(),
-        BatcherOptions::new(4).without_cache(),
+        &ServerConfig::new(4).with_cache_bytes(0),
+        0,
     )
     .expect("batcher");
     // per-request queue+prefill+decode latency, collected across every
@@ -391,9 +407,10 @@ fn main() {
             longest + max_tokens <= spec.max_seq + 1
         );
     } else {
-        let mut cold = Batcher::with_options(
+        let mut cold = Batcher::from_config(
             engine.clone(),
-            BatcherOptions::new(4).without_cache(),
+            &ServerConfig::new(4).with_cache_bytes(0),
+            0,
         )
         .expect("batcher");
         b.bench(
@@ -504,20 +521,18 @@ fn main() {
             "glass-bench-warm-{}",
             std::process::id()
         ));
-        let snap = prefix_store::snapshot_path(&dir, 0);
-        let mut first = Batcher::with_options(
-            engine.clone(),
-            BatcherOptions::new(4)
-                .with_snapshot_path(Some(snap.clone())),
-        )
-        .expect("batcher");
+        // cache_dir on the config indexes the shard-0 snapshot path,
+        // exactly as the server's per-shard lowering would
+        let cfg_snap =
+            ServerConfig::new(4).with_cache_dir(Some(dir.clone()));
+        let mut first =
+            Batcher::from_config(engine.clone(), &cfg_snap, 0)
+                .expect("batcher");
         serve_shared(&mut first); // populate the cache, then persist
         first.snapshot_hot();
-        let mut restarted = Batcher::with_options(
-            engine.clone(),
-            BatcherOptions::new(4).with_snapshot_path(Some(snap)),
-        )
-        .expect("batcher");
+        let mut restarted =
+            Batcher::from_config(engine.clone(), &cfg_snap, 0)
+                .expect("batcher");
         b.bench(
             "warm-restart serve (snapshot-started cache)",
             (n_reqs * max_tokens) as f64,
@@ -583,9 +598,10 @@ fn main() {
                 let engine = engine.clone();
                 let sched = Arc::clone(sched);
                 std::thread::spawn(move || {
-                    let mut shard = Batcher::with_options(
+                    let mut shard = Batcher::from_config(
                         engine,
-                        BatcherOptions::new(4).without_cache(),
+                        &ServerConfig::new(4).with_cache_bytes(0),
+                        0,
                     )
                     .expect("shard batcher");
                     let mut served = 0usize;
@@ -626,10 +642,9 @@ fn main() {
     // TCP while `idle_n` connected-but-silent sockets sit in the same
     // reactor; tokens/s lands in the CI gate as idle_conns_toks_per_s.
     let idle_n = if smoke { 32 } else { 256 };
-    let server = Server::start_with(
+    let server = Server::start_with_config(
         engine.clone(),
-        "127.0.0.1:0",
-        ServerOptions::new(4),
+        &ServerConfig::new(4).with_bind("127.0.0.1:0"),
     )
     .expect("bench server");
     let idle_conns: Vec<std::net::TcpStream> = (0..idle_n)
@@ -696,9 +711,10 @@ fn main() {
     // floor — cumulative reactor-side counts would depend on kernel
     // socket buffering and would not be machine-independent.
     let backpressure_pauses = {
-        let mut bp = Batcher::with_options(
+        let mut bp = Batcher::from_config(
             engine.clone(),
-            BatcherOptions::new(4).without_cache(),
+            &ServerConfig::new(4).with_cache_bytes(0),
+            0,
         )
         .expect("backpressure batcher");
         let base = bp.backpressure_pauses;
@@ -765,6 +781,82 @@ fn main() {
     );
     assert!(backpressure_pauses >= 1);
 
+    // -------------- int8 masked FFN GEMV (the cpu-q8 kernel directly)
+    // The cpu-q8 backend's quantized FFN kernel timed at
+    // LLM-representative dims — the synthetic spec's 16×32 FFN is far
+    // too small for row skipping to show up against loop overhead, so
+    // these rows use d=512, m=2048 (3·m·d ≈ 3.1M MACs per token, the
+    // same shape class as a small transformer block). All three density
+    // rows share ONE quantized weight set and ONE input token, so the
+    // density-0.3 row against the density-1.0 row isolates pure
+    // row-traffic savings: the measured proof that a GLASS mask buys
+    // skipped memory traffic and FLOPs, not just a smaller mask tensor.
+    // `q8_toks_per_s` (dense-row throughput, a conservative floor) and
+    // `q8_sparse_speedup_x` (dense mean over density-0.3 mean — machine
+    // independent, both sides of the ratio run on this host) land in
+    // the CI gate.
+    let (q8_d, q8_m) = (512usize, 2048usize);
+    let q8_simd = quant::detect();
+    let lcg_mat = |seed: u32, rows: usize, cols: usize| {
+        let mut v = Vec::with_capacity(rows * cols);
+        let mut s = seed;
+        for _ in 0..rows * cols {
+            s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+            v.push((s >> 16) as i16 as f32 / 32768.0);
+        }
+        quant::QuantMatrix::from_rows(rows, cols, &v)
+            .expect("quantize bench matrix")
+    };
+    let q8_up = lcg_mat(1, q8_m, q8_d);
+    let q8_gate = lcg_mat(2, q8_m, q8_d);
+    let q8_down = lcg_mat(3, q8_m, q8_d);
+    let q8_x: Vec<f32> = (0..q8_d)
+        .map(|i| (i * 37 % 97) as f32 / 48.0 - 1.0)
+        .collect();
+    let (q8_xq, q8_xs) = quant::quantize_row(&q8_x);
+    let mut q8_y = vec![0.0f32; q8_d];
+    let mut q8_acts = vec![0.0f32; q8_m];
+    let mut q8_means_s: Vec<f64> = Vec::new();
+    for &density in &[1.0f64, 0.5, 0.3] {
+        let keep = (q8_m as f64 * density).round() as usize;
+        // evenly strided keep-list — the shape a GLASS mask produces
+        // (scattered unit indices, not one contiguous block)
+        let rows: Vec<usize> =
+            (0..keep).map(|i| i * q8_m / keep).collect();
+        b.bench(
+            &format!(
+                "q8 ffn gemv d={q8_d} m={q8_m} density={density:.1} \
+                 ({})",
+                q8_simd.label()
+            ),
+            1.0,
+            || {
+                q8_y.iter_mut().for_each(|v| *v = 0.0);
+                quant::ffn_forward_masked(
+                    q8_simd,
+                    &q8_up,
+                    &q8_gate,
+                    &q8_down,
+                    &q8_xq,
+                    q8_xs,
+                    &rows,
+                    &mut q8_y,
+                    Some(&mut q8_acts),
+                )
+            },
+        );
+        let r = b.results.last().expect("q8 row just pushed");
+        q8_means_s.push(r.mean_s);
+    }
+    let q8_toks_per_s = 1.0 / q8_means_s[0];
+    let q8_sparse_speedup_x = q8_means_s[0] / q8_means_s[2];
+    println!(
+        "q8 masked FFN ({}): {q8_toks_per_s:.0} tok/s dense, \
+         {q8_sparse_speedup_x:.2}x faster at density 0.3 \
+         (row skipping turns the mask into real FLOP savings)",
+        q8_simd.label()
+    );
+
     println!("\n{}", b.report());
     // headline comparisons for EXPERIMENTS.md §Perf — rows looked up by
     // name so reordering the bench list cannot silently misreport
@@ -801,10 +893,9 @@ fn main() {
     doc.set("bench", Json::Str("decode".into()));
     doc.set(
         "backend",
-        Json::Str(
-            if engine.rt.is_simulated() { "sim" } else { "pjrt" }.into(),
-        ),
+        Json::Str(engine.rt.backend_name().into()),
     );
+    doc.set("q8_simd", Json::Str(q8_simd.label().into()));
     let mut rows = Vec::new();
     for r in &b.results {
         let mut o = Json::obj();
@@ -849,6 +940,15 @@ fn main() {
     doc.set(
         "cache_lookup_us_p95",
         Json::Num(cache_lookup_us_p95),
+    );
+    // quantized-kernel observables (see the q8 masked-FFN rows above) —
+    // the gate floors the dense throughput like any counter and floors
+    // the density-0.3 speedup ratio, the machine-independent proof
+    // that masked-out rows keep skipping memory traffic
+    doc.set("q8_toks_per_s", Json::Num(q8_toks_per_s));
+    doc.set(
+        "q8_sparse_speedup_x",
+        Json::Num(q8_sparse_speedup_x),
     );
     doc.set("sharded_1_toks_per_s", Json::Num(sharded_1));
     doc.set("sharded_4_toks_per_s", Json::Num(sharded_4));

@@ -1,0 +1,257 @@
+//! Legacy construction structs, kept as thin compatibility views over
+//! [`ServerConfig`](super::ServerConfig).
+//!
+//! [`ServerOptions`] and [`BatcherOptions`] predate the unified
+//! [`ServerConfig`](super::ServerConfig) builder (they were the
+//! construction APIs for `Server::start_with` and
+//! `Batcher::with_options`). They now live here, in one place, and are
+//! re-exported at their historical paths (`crate::server::ServerOptions`,
+//! `crate::server::batcher::BatcherOptions`) so downstream embedders
+//! keep compiling. All in-tree call sites have moved to `ServerConfig`;
+//! new code should too. Conversions are lossless in both directions for
+//! the fields the legacy structs carry — knobs they never had
+//! (chunk budget, watermarks, backend) take `ServerConfig` defaults.
+
+use std::path::PathBuf;
+
+use super::ServerConfig;
+use crate::engine::prefix_cache::DEFAULT_CACHE_BYTES;
+use crate::server::{DEFAULT_CONN_BUFFER_BYTES, DEFAULT_MAX_FRAME_BYTES};
+
+/// Construction knobs for [`crate::server::Server::start_with`].
+///
+/// **Deprecation note:** new code should build a
+/// [`ServerConfig`] (the unified builder covering these knobs plus
+/// chunk budget, backpressure watermarks, and the execution backend)
+/// and call [`crate::server::Server::start_with_config`];
+/// `ServerOptions` remains as a thin compatibility view and converts
+/// losslessly via `From` in both directions.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Decode slot count per shard (must fit a compiled `decode_b{W}`).
+    pub batch_width: usize,
+    /// Total shared-prefix cache byte budget, split evenly across
+    /// shards; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Cluster same-prefix requests at each shard's scheduler and defer
+    /// same-prefix admissions behind an in-flight publisher.
+    pub group_prefixes: bool,
+    /// Serving shard count (engine + reactor threads); 1 = unsharded.
+    pub shards: usize,
+    /// Largest accepted wire frame; bounds the per-connection read
+    /// buffer. Oversized frames are a protocol error that closes the
+    /// connection.
+    pub max_frame_bytes: usize,
+    /// Outbound buffer cap per connection; a consumer that falls this
+    /// far behind is disconnected.
+    pub conn_buffer_bytes: usize,
+    /// Directory for persistent prefix-cache snapshots (`--cache-dir`):
+    /// each shard warm-starts from `prefix-shard-<i>.gpxs` here and
+    /// [`crate::server::Server::stop`] rewrites the files after drain.
+    /// None (default) disables persistence.
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl ServerOptions {
+    /// Defaults for everything except the batch width.
+    pub fn new(batch_width: usize) -> ServerOptions {
+        ServerOptions {
+            batch_width,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            group_prefixes: true,
+            shards: 1,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            conn_buffer_bytes: DEFAULT_CONN_BUFFER_BYTES,
+            cache_dir: None,
+        }
+    }
+
+    /// Builder-style shard count override.
+    pub fn with_shards(mut self, shards: usize) -> ServerOptions {
+        self.shards = shards;
+        self
+    }
+
+    /// Builder-style frame-size cap override.
+    pub fn with_max_frame_bytes(mut self, n: usize) -> ServerOptions {
+        self.max_frame_bytes = n;
+        self
+    }
+
+    /// Builder-style persistent-cache directory override.
+    pub fn with_cache_dir(
+        mut self,
+        dir: Option<PathBuf>,
+    ) -> ServerOptions {
+        self.cache_dir = dir;
+        self
+    }
+}
+
+impl From<ServerOptions> for ServerConfig {
+    /// Lossless upgrade from the legacy options struct: every
+    /// `ServerOptions` field maps to its `ServerConfig` namesake and
+    /// the knobs it never had take their defaults.
+    fn from(o: ServerOptions) -> ServerConfig {
+        ServerConfig {
+            shards: o.shards,
+            cache_bytes: o.cache_bytes,
+            cache_dir: o.cache_dir,
+            group_prefixes: o.group_prefixes,
+            max_frame_bytes: o.max_frame_bytes,
+            conn_buffer_bytes: o.conn_buffer_bytes,
+            ..ServerConfig::new(o.batch_width)
+        }
+    }
+}
+
+impl From<&ServerConfig> for ServerOptions {
+    /// Downgrade for embedders still holding the legacy type: the
+    /// shared fields copy over; `ServerConfig`-only knobs (bind, chunk
+    /// budget, watermarks, backend) are dropped.
+    fn from(c: &ServerConfig) -> ServerOptions {
+        ServerOptions {
+            batch_width: c.batch_width,
+            cache_bytes: c.cache_bytes,
+            group_prefixes: c.group_prefixes,
+            shards: c.shards,
+            max_frame_bytes: c.max_frame_bytes,
+            conn_buffer_bytes: c.conn_buffer_bytes,
+            cache_dir: c.cache_dir.clone(),
+        }
+    }
+}
+
+/// Construction knobs for
+/// [`crate::server::batcher::Batcher::with_options`].
+///
+/// **Deprecation note:** when standing up a whole server, build a
+/// [`ServerConfig`] instead —
+/// [`crate::server::Server::start_with_config`] derives each shard's
+/// `BatcherOptions` from it via [`BatcherOptions::for_shard`]. This
+/// struct remains the direct-embedding API for code that drives a
+/// [`crate::server::batcher::Batcher`] without the server.
+#[derive(Debug, Clone)]
+pub struct BatcherOptions {
+    /// Decode slot count (must fit a compiled `decode_b{W}`).
+    pub batch_width: usize,
+    /// Shared-prefix cache byte budget; 0 disables the cache.
+    pub cache_bytes: usize,
+    /// Prefill chunks advanced per decode step (clamped to ≥ 1).
+    pub chunk_budget: usize,
+    /// Defer same-prefix admissions behind an in-flight publisher.
+    pub group_prefixes: bool,
+    /// Persistent snapshot file for this shard's prefix cache
+    /// (`--cache-dir`): warm-loaded at construction, written by
+    /// [`crate::server::batcher::Batcher::snapshot_hot`] after the run
+    /// loop drains. None (the default) disables persistence.
+    pub snapshot_path: Option<PathBuf>,
+}
+
+impl BatcherOptions {
+    /// Defaults for everything except the batch width.
+    pub fn new(batch_width: usize) -> BatcherOptions {
+        BatcherOptions {
+            batch_width,
+            cache_bytes: DEFAULT_CACHE_BYTES,
+            chunk_budget: 1,
+            group_prefixes: true,
+            snapshot_path: None,
+        }
+    }
+
+    /// Disable the shared-prefix cache (and with it, deferral).
+    pub fn without_cache(mut self) -> BatcherOptions {
+        self.cache_bytes = 0;
+        self
+    }
+
+    /// Persist the prefix cache to (and warm-start it from) this file.
+    pub fn with_snapshot_path(
+        mut self,
+        path: Option<PathBuf>,
+    ) -> BatcherOptions {
+        self.snapshot_path = path;
+        self
+    }
+
+    /// One shard's slice of a [`ServerConfig`]: the cache budget is
+    /// split evenly across shards and the snapshot file (when
+    /// persistence is on) is the shard-indexed `.gpxs` under
+    /// `cache_dir`. This is the single place the server-level config
+    /// is lowered to per-shard batcher knobs.
+    pub fn for_shard(cfg: &ServerConfig, shard_id: usize) -> BatcherOptions {
+        BatcherOptions {
+            batch_width: cfg.batch_width,
+            cache_bytes: cfg.cache_bytes / cfg.shards.max(1),
+            chunk_budget: cfg.chunk_budget,
+            group_prefixes: cfg.group_prefixes,
+            snapshot_path: cfg.cache_dir.as_deref().map(|dir| {
+                crate::engine::prefix_store::snapshot_path(dir, shard_id)
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_default_to_one_shard_with_bounded_buffers() {
+        let o = ServerOptions::new(4);
+        assert_eq!(o.shards, 1, "default must preserve the unsharded server");
+        assert_eq!(o.max_frame_bytes, DEFAULT_MAX_FRAME_BYTES);
+        assert_eq!(o.conn_buffer_bytes, DEFAULT_CONN_BUFFER_BYTES);
+        let o = o.with_shards(4).with_max_frame_bytes(4096);
+        assert_eq!(o.shards, 4);
+        assert_eq!(o.max_frame_bytes, 4096);
+    }
+
+    #[test]
+    fn server_options_round_trip_through_server_config() {
+        let opts = ServerOptions::new(4)
+            .with_shards(3)
+            .with_max_frame_bytes(4096)
+            .with_cache_dir(Some(PathBuf::from("/tmp/w")));
+        let cfg = ServerConfig::from(opts.clone());
+        assert_eq!(cfg.batch_width, 4);
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.max_frame_bytes, 4096);
+        assert_eq!(cfg.cache_dir, Some(PathBuf::from("/tmp/w")));
+        assert_eq!(cfg.backend, "auto", "new knobs take defaults");
+        let back = ServerOptions::from(&cfg);
+        assert_eq!(back.batch_width, opts.batch_width);
+        assert_eq!(back.cache_bytes, opts.cache_bytes);
+        assert_eq!(back.group_prefixes, opts.group_prefixes);
+        assert_eq!(back.shards, opts.shards);
+        assert_eq!(back.max_frame_bytes, opts.max_frame_bytes);
+        assert_eq!(back.conn_buffer_bytes, opts.conn_buffer_bytes);
+        assert_eq!(back.cache_dir, opts.cache_dir);
+    }
+
+    #[test]
+    fn batcher_options_for_shard_splits_cache_and_indexes_snapshot() {
+        let cfg = ServerConfig::new(2)
+            .with_shards(4)
+            .with_cache_bytes(1 << 20)
+            .with_chunk_budget(3)
+            .with_cache_dir(Some(PathBuf::from("/tmp/warm")));
+        let b = BatcherOptions::for_shard(&cfg, 2);
+        assert_eq!(b.batch_width, 2);
+        assert_eq!(b.cache_bytes, (1 << 20) / 4, "budget splits evenly");
+        assert_eq!(b.chunk_budget, 3);
+        assert!(b.group_prefixes);
+        let snap = b.snapshot_path.expect("persistence is on");
+        assert!(
+            snap.to_string_lossy().contains("2"),
+            "snapshot file is shard-indexed: {}",
+            snap.display()
+        );
+        assert!(snap.starts_with("/tmp/warm"));
+
+        let cfg = ServerConfig::new(2).with_cache_dir(None);
+        let b = BatcherOptions::for_shard(&cfg, 0);
+        assert_eq!(b.snapshot_path, None, "no dir, no persistence");
+    }
+}

@@ -11,6 +11,7 @@
 //! field-by-field with `with_*` methods or projected from a loaded
 //! [`RunConfig`] via [`ServerConfig::from_run`].
 
+pub mod compat;
 mod toml;
 
 pub use toml::{parse_toml, TomlValue};
@@ -86,6 +87,12 @@ pub struct RunConfig {
     /// and the next startup warm-starts from them; unset (default)
     /// disables persistence entirely.
     pub cache_dir: Option<PathBuf>,
+    /// Execution backend by registry name: `"auto"` (default — PJRT
+    /// when compiled in, otherwise the simulator), `"sim"`,
+    /// `"cpu-q8"` (int8 weight-quantized CPU GEMV with native masked
+    /// FFN), or `"pjrt"`. Unknown names are rejected at parse time;
+    /// see [`crate::runtime::BACKEND_NAMES`].
+    pub backend: String,
 }
 
 impl Default for RunConfig {
@@ -115,6 +122,7 @@ impl Default for RunConfig {
             high_water_bytes: 0,
             low_water_bytes: 0,
             cache_dir: None,
+            backend: "auto".to_string(),
         }
     }
 }
@@ -202,6 +210,10 @@ impl RunConfig {
         if let Some(v) = get("cache_dir") {
             self.cache_dir = Some(PathBuf::from(v.as_str()?));
         }
+        if let Some(v) = get("backend") {
+            self.backend = v.as_str()?.to_string();
+            crate::runtime::validate_backend_name(&self.backend)?;
+        }
         Ok(())
     }
 
@@ -248,6 +260,10 @@ impl RunConfig {
         if let Some(v) = args.get("cache-dir") {
             self.cache_dir = Some(PathBuf::from(v));
         }
+        if let Some(v) = args.get("backend") {
+            self.backend = v.to_string();
+            crate::runtime::validate_backend_name(&self.backend)?;
+        }
         Ok(())
     }
 }
@@ -256,14 +272,13 @@ impl RunConfig {
 /// stack reads, in one builder.
 ///
 /// This replaces the scattered trio of `Server::start_with` arguments,
-/// [`crate::server::ServerOptions`], and
-/// [`crate::server::batcher::BatcherOptions`] as the construction API:
-/// those two remain as thin compatibility views (`ServerConfig` is
-/// `From<ServerOptions>`, and `start_with_config` derives the batcher
-/// options internally). Build one with [`ServerConfig::new`] plus
-/// `with_*` chaining, or project it from a loaded [`RunConfig`] with
-/// [`ServerConfig::from_run`], then pass it to
-/// [`crate::server::Server::start_with_config`].
+/// [`compat::ServerOptions`], and [`compat::BatcherOptions`] as the
+/// construction API: those two live on only as thin compatibility
+/// views in [`compat`] (`ServerConfig` is `From<ServerOptions>`, and
+/// `start_with_config` derives the batcher options internally). Build
+/// one with [`ServerConfig::new`] plus `with_*` chaining, or project
+/// it from a loaded [`RunConfig`] with [`ServerConfig::from_run`],
+/// then pass it to [`crate::server::Server::start_with_config`].
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Bind address, e.g. `"127.0.0.1:7433"` (`:0` picks a free port).
@@ -303,6 +318,12 @@ pub struct ServerConfig {
     /// its backlog drains below this. 0 (default) = a quarter of the
     /// high-water mark; see [`ServerConfig::resolved_low_water`].
     pub low_water_bytes: usize,
+    /// Execution backend the serving engine is expected to run on, by
+    /// registry name (see [`crate::runtime::BACKEND_NAMES`]). `"auto"`
+    /// (default) accepts whatever backend the engine was loaded with;
+    /// a concrete name makes `start_with_config` fail fast when the
+    /// engine's backend doesn't match.
+    pub backend: String,
 }
 
 impl ServerConfig {
@@ -321,6 +342,7 @@ impl ServerConfig {
             conn_buffer_bytes: crate::server::DEFAULT_CONN_BUFFER_BYTES,
             high_water_bytes: 0,
             low_water_bytes: 0,
+            backend: "auto".to_string(),
         }
     }
 
@@ -339,6 +361,7 @@ impl ServerConfig {
             conn_buffer_bytes: run.conn_buffer_bytes,
             high_water_bytes: run.high_water_bytes,
             low_water_bytes: run.low_water_bytes,
+            backend: run.backend.clone(),
         }
     }
 
@@ -390,6 +413,14 @@ impl ServerConfig {
         self
     }
 
+    /// Builder-style backend-name override (see
+    /// [`crate::runtime::BACKEND_NAMES`]). Unknown names are rejected
+    /// when the server starts.
+    pub fn with_backend(mut self, backend: &str) -> ServerConfig {
+        self.backend = backend.to_string();
+        self
+    }
+
     /// Builder-style backpressure watermark override (0 = derive).
     pub fn with_watermarks(
         mut self,
@@ -421,23 +452,6 @@ impl ServerConfig {
             self.low_water_bytes.min(high)
         } else {
             (high / 4).max(1)
-        }
-    }
-}
-
-impl From<crate::server::ServerOptions> for ServerConfig {
-    /// Lossless upgrade from the legacy options struct: every
-    /// `ServerOptions` field maps to its `ServerConfig` namesake and
-    /// the knobs it never had take their defaults.
-    fn from(o: crate::server::ServerOptions) -> ServerConfig {
-        ServerConfig {
-            shards: o.shards,
-            cache_bytes: o.cache_bytes,
-            cache_dir: o.cache_dir,
-            group_prefixes: o.group_prefixes,
-            max_frame_bytes: o.max_frame_bytes,
-            conn_buffer_bytes: o.conn_buffer_bytes,
-            ..ServerConfig::new(o.batch_width)
         }
     }
 }
@@ -581,6 +595,44 @@ mod tests {
     }
 
     #[test]
+    fn backend_knob_parses_and_rejects_unknown_names() {
+        let c = RunConfig::default();
+        assert_eq!(c.backend, "auto", "default defers to the registry");
+        let mut c = RunConfig::default();
+        c.apply_toml("backend = \"cpu-q8\"\n").unwrap();
+        assert_eq!(c.backend, "cpu-q8");
+        let err = c.apply_toml("backend = \"cuda\"\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cuda"), "error names the bad value: {msg}");
+        assert!(
+            msg.contains("cpu-q8"),
+            "error lists the registry: {msg}"
+        );
+        let args = Args::parse(
+            &["x", "--backend", "sim"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.backend, "sim", "CLI overrides the config file");
+        let args = Args::parse(
+            &["x", "--backend", "tpu"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        assert!(
+            c.apply_args(&args).is_err(),
+            "unknown CLI backend is rejected at parse time"
+        );
+    }
+
+    #[test]
     fn server_config_defaults_and_builder() {
         let c = ServerConfig::new(4);
         assert_eq!(c.batch_width, 4);
@@ -588,6 +640,7 @@ mod tests {
         assert_eq!(c.chunk_budget, 1);
         assert!(c.group_prefixes);
         assert_eq!(c.cache_dir, None);
+        assert_eq!(c.backend, "auto");
         let c = c
             .with_bind("0.0.0.0:0")
             .with_shards(2)
@@ -597,8 +650,10 @@ mod tests {
             .with_conn_buffer_bytes(1 << 17)
             .with_cache_dir(Some(PathBuf::from("/tmp/warm")))
             .with_group_prefixes(false)
+            .with_backend("cpu-q8")
             .with_watermarks(8192, 2048);
         assert_eq!(c.bind, "0.0.0.0:0");
+        assert_eq!(c.backend, "cpu-q8");
         assert_eq!(c.shards, 2);
         assert_eq!(c.cache_bytes, 1 << 20);
         assert_eq!(c.chunk_budget, 3);
@@ -633,6 +688,7 @@ mod tests {
             shards: 2,
             cache_bytes: 12345,
             high_water_bytes: 777,
+            backend: "cpu-q8".to_string(),
             ..RunConfig::default()
         };
         let c = ServerConfig::from_run(&run, 4);
@@ -641,6 +697,7 @@ mod tests {
         assert_eq!(c.batch_width, 4);
         assert_eq!(c.cache_bytes, 12345);
         assert_eq!(c.high_water_bytes, 777);
+        assert_eq!(c.backend, "cpu-q8", "backend rides along from_run");
 
         let opts = crate::server::ServerOptions::new(4)
             .with_shards(2)

@@ -199,7 +199,17 @@ pub struct Engine {
 
 impl Engine {
     pub fn load(artifacts_dir: &Path) -> Result<Engine> {
-        let rt = Arc::new(Runtime::load(artifacts_dir)?);
+        Engine::load_with_backend(artifacts_dir, "auto")
+    }
+
+    /// Load the artifact bundle on a named execution backend (see
+    /// [`crate::runtime::BACKEND_NAMES`]).
+    pub fn load_with_backend(
+        artifacts_dir: &Path,
+        backend: &str,
+    ) -> Result<Engine> {
+        let rt =
+            Arc::new(Runtime::load_with_backend(artifacts_dir, backend)?);
         let tok = Tokenizer::from_spec(&rt.manifest.model);
         Ok(Engine { rt, tok })
     }
@@ -215,18 +225,35 @@ impl Engine {
         Engine::from_runtime(Arc::new(Runtime::synthetic()))
     }
 
+    /// Fully in-memory engine on a named backend (`"sim"`/`"cpu-q8"`).
+    pub fn synthetic_with_backend(backend: &str) -> Result<Engine> {
+        Ok(Engine::from_runtime(Arc::new(
+            Runtime::synthetic_with_backend(backend)?,
+        )))
+    }
+
     /// Load the artifact bundle if present, else fall back to the
     /// synthetic simulator engine.
     pub fn load_or_synthetic(artifacts_dir: &Path) -> Result<Engine> {
+        Engine::load_or_synthetic_with_backend(artifacts_dir, "auto")
+    }
+
+    /// [`Engine::load_or_synthetic`] with an explicit backend name; the
+    /// synthetic fallback honors the requested backend too.
+    pub fn load_or_synthetic_with_backend(
+        artifacts_dir: &Path,
+        backend: &str,
+    ) -> Result<Engine> {
         if artifacts_dir.join("manifest.json").exists() {
-            Engine::load(artifacts_dir)
+            Engine::load_with_backend(artifacts_dir, backend)
         } else {
             crate::info!(
-                "no artifact bundle at {:?} — using the synthetic \
-                 simulator engine",
-                artifacts_dir
+                "no artifact bundle at {:?} — using the synthetic '{}' \
+                 engine",
+                artifacts_dir,
+                backend
             );
-            Ok(Engine::synthetic())
+            Engine::synthetic_with_backend(backend)
         }
     }
 

@@ -70,6 +70,10 @@ COMMON OPTIONS:
     --artifacts DIR           artifact bundle (default: artifacts)
     --results DIR             report output (default: results)
     --config FILE             TOML run config
+    --backend NAME            execution backend: auto (default), sim,
+                              cpu-q8 (int8 weight-quantized CPU GEMV
+                              with native masked FFN), or pjrt
+                              (requires --features pjrt)
     --lg-samples N --sweep-samples N --cls-samples N --sg-samples N
     --oracle-samples N --density F --lambda F --batch N --seed N
 ";
@@ -109,10 +113,13 @@ fn run(args: &Args) -> Result<()> {
 }
 
 fn load_engine(cfg: &RunConfig) -> Result<Engine> {
-    // falls back to the deterministic simulator engine when the AOT
-    // bundle is absent, so `glass serve` / `glass generate` work out of
-    // the box in offline environments
-    Engine::load_or_synthetic(Path::new(&cfg.artifacts_dir))
+    // falls back to a synthetic engine on the configured backend when
+    // the AOT bundle is absent, so `glass serve` / `glass generate`
+    // work out of the box in offline environments
+    Engine::load_or_synthetic_with_backend(
+        Path::new(&cfg.artifacts_dir),
+        &cfg.backend,
+    )
 }
 
 fn info(cfg: &RunConfig) -> Result<()> {
@@ -278,13 +285,15 @@ fn nps(args: &Args, cfg: &RunConfig) -> Result<()> {
 
 fn serve(args: &Args, cfg: &RunConfig) -> Result<()> {
     let engine = load_engine(cfg)?;
+    let backend = engine.rt.backend_name();
     let batch = args.get_usize("batch", cfg.batch)?;
     let mut scfg = glass::config::ServerConfig::from_run(cfg, batch);
     scfg.shards = cfg.shards.max(1);
     let server = Server::start_with_config(engine, &scfg)?;
     println!(
-        "serving on {} ({} shard{} x batch width {batch}, prefix \
-         cache {}, protocols v1+v2 auto-detected); Ctrl-C to stop",
+        "serving on {} ({} shard{} x batch width {batch}, backend \
+         {backend}, prefix cache {}, protocols v1+v2 auto-detected); \
+         Ctrl-C to stop",
         server.addr,
         cfg.shards.max(1),
         if cfg.shards.max(1) == 1 { "" } else { "s" },

@@ -1,0 +1,828 @@
+//! `cpu-q8`: the int8 weight-quantized CPU backend.
+//!
+//! This is the second *real* execution backend behind the
+//! [`super::ExecBackend`] trait. It keeps the repo's analytically
+//! controlled toy-model **head** (grammar logits, closed-form KV rows —
+//! shared with [`super::sim`] so the whole cross-executable test corpus
+//! pins both backends to one semantic contract) while replacing the
+//! compute that GLASS actually accelerates with real quantized kernels:
+//!
+//! * **FFN data path.** Every logits-emitting token runs a real masked
+//!   FFN over the manifest's `w_up`/`w_gate`/`w_down` weights,
+//!   quantized per-row to int8 at load time ([`quant::QuantMatrix`]).
+//!   The GLASS mask arrives as a kept-row list and masked-out unit
+//!   rows are NEVER loaded or multiplied — density 0.3 means ~0.3× the
+//!   FFN memory traffic (`ffn_rows_visited`/`ffn_rows_skipped`
+//!   counters; poisoned-weight canary below). The FFN output is folded
+//!   into the returned logits as a uniform (softmax-invariant) tap, so
+//!   the quantized path is load-bearing: a poisoned row read anywhere
+//!   surfaces as NaN in the output.
+//! * **Importance statistics.** The toy model's neuron-importance head
+//!   is materialized as real int8 projection matrices (geometric gain
+//!   profile × hash jitter, decode rows carrying the ±Δ drift), so the
+//!   `[b, L, m]` f32 statistics tensor is collected from *dequantized
+//!   activations of a real quantized GEMV* — same shape, same dtype,
+//!   same ℓ2 normalization as the sim backend, which is what lets
+//!   `ImportanceMap::merge` and mask refresh run unchanged on both
+//!   backends (the quantization seam stays below the GLASS boundary).
+//!
+//! Everything is integer-accumulated or a pure function of
+//! (token, position, layer), so the backend reports
+//! `deterministic: true`: fused/step decode agree bitwise, chunked
+//! prefill is partition-invariant, and runs reproduce exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ExeSpec, Manifest, ModelSpec};
+use super::quant::{self, QuantMatrix, Simd};
+use super::sim::{self, SimBackend};
+use super::Value;
+use crate::tensor::TensorF;
+use crate::util::threadpool::ThreadPool;
+use crate::util::timer;
+
+/// Input width of the importance-projection GEMVs.
+const STAT_D: usize = 32;
+/// Jitter amplitude in the importance projections. 0.0625·127 ≈ 8
+/// int8 levels, so the jitter survives quantization; bounded so it can
+/// never reorder adjacent units of the geometric gain profile.
+const STAT_JIT: f32 = 0.0625;
+/// Amplitude of the uniform FFN logit tap. Softmax-invariant by
+/// construction (same value added to every logit of a row) and far
+/// below the cross-program comparison tolerance, but NaN-transparent.
+const DELTA_SCALE: f32 = 1e-4;
+
+const SALT_STAT_W: u64 = 0x9101;
+const SALT_STAT_X: u64 = 0x9102;
+const KIND_PROMPT: u64 = 0;
+const KIND_DEC: u64 = 1;
+
+/// One transformer layer's quantized FFN projections. `up`/`gate` are
+/// stored transposed (`[m, d]`) so each FFN unit is one contiguous,
+/// individually skippable row; `down` is `[m, d]` natively.
+struct FfnLayerQ8 {
+    up: QuantMatrix,
+    gate: QuantMatrix,
+    down: QuantMatrix,
+}
+
+/// The int8 CPU backend. Immutable after construction (canary helpers
+/// aside) and `Send + Sync`; safe to share across shard threads.
+pub struct CpuQ8Backend {
+    sim: SimBackend,
+    spec: ModelSpec,
+    simd: Simd,
+    embed: QuantMatrix,
+    layers: Vec<FfnLayerQ8>,
+    /// Importance projections: per layer, `[m, STAT_D]`.
+    stat_prompt: Vec<QuantMatrix>,
+    stat_dec: Vec<QuantMatrix>,
+    /// Every unit id, reused for maskless (dense) executables.
+    dense_rows: Vec<usize>,
+    /// Lazily created worker pool for large masked GEMVs. `None` both
+    /// before first use and while a call has it checked out — a
+    /// concurrent caller just runs the sequential kernel (identical
+    /// result, see `quant`).
+    pool: Mutex<Option<ThreadPool>>,
+    rows_visited: AtomicU64,
+    rows_skipped: AtomicU64,
+}
+
+impl CpuQ8Backend {
+    /// Quantize the host weights into the int8 store. `param_host`
+    /// must be in manifest order (as produced by `Runtime` loading).
+    pub fn new(
+        manifest: &Manifest,
+        param_host: &[Vec<f32>],
+    ) -> Result<CpuQ8Backend> {
+        if param_host.len() != manifest.params.len() {
+            bail!(
+                "cpu-q8: {} host params for {} manifest entries",
+                param_host.len(),
+                manifest.params.len()
+            );
+        }
+        let spec = manifest.model.clone();
+        let find = |name: &str| -> Result<&[f32]> {
+            manifest
+                .params
+                .iter()
+                .position(|p| p.name == name)
+                .map(|i| param_host[i].as_slice())
+                .ok_or_else(|| {
+                    anyhow!("cpu-q8: param '{name}' missing from manifest")
+                })
+        };
+        let embed =
+            QuantMatrix::from_rows(spec.vocab, spec.d_model, find("embed")?)?;
+        let mut layers = Vec::with_capacity(spec.n_layers);
+        for l in 0..spec.n_layers {
+            layers.push(FfnLayerQ8 {
+                up: QuantMatrix::from_columns(
+                    spec.d_model,
+                    spec.ffn_m,
+                    find(&format!("layer{l}.w_up"))?,
+                )?,
+                gate: QuantMatrix::from_columns(
+                    spec.d_model,
+                    spec.ffn_m,
+                    find(&format!("layer{l}.w_gate"))?,
+                )?,
+                down: QuantMatrix::from_rows(
+                    spec.ffn_m,
+                    spec.d_model,
+                    find(&format!("layer{l}.w_down"))?,
+                )?,
+            });
+        }
+        let sim = SimBackend::new(spec.clone());
+        let stat_prompt =
+            build_stat_mats(&sim.gain, KIND_PROMPT, spec.n_layers)?;
+        let stat_dec = build_stat_mats(&sim.w_dec, KIND_DEC, spec.n_layers)?;
+        let dense_rows: Vec<usize> = (0..spec.ffn_m).collect();
+        Ok(CpuQ8Backend {
+            sim,
+            spec,
+            simd: quant::detect(),
+            embed,
+            layers,
+            stat_prompt,
+            stat_dec,
+            dense_rows,
+            pool: Mutex::new(None),
+            rows_visited: AtomicU64::new(0),
+            rows_skipped: AtomicU64::new(0),
+        })
+    }
+
+    /// FFN unit rows actually loaded since construction.
+    pub fn ffn_rows_visited(&self) -> u64 {
+        self.rows_visited.load(Ordering::Relaxed)
+    }
+
+    /// FFN unit rows skipped (masked out, never loaded).
+    pub fn ffn_rows_skipped(&self) -> u64 {
+        self.rows_skipped.load(Ordering::Relaxed)
+    }
+
+    /// The SIMD kernel this host selected.
+    pub fn simd(&self) -> Simd {
+        self.simd
+    }
+
+    /// Quantized FFN + embed weight bytes resident in this backend.
+    pub fn quantized_bytes(&self) -> usize {
+        self.embed.weight_bytes()
+            + self
+                .layers
+                .iter()
+                .map(|l| {
+                    l.up.weight_bytes()
+                        + l.gate.weight_bytes()
+                        + l.down.weight_bytes()
+                })
+                .sum::<usize>()
+    }
+
+    /// Canary helper: poison FFN unit rows of one layer across all
+    /// three projections, so any read of them propagates NaN into the
+    /// call output. Used by the poisoned-weight canary test to prove
+    /// masked-out rows are never touched.
+    pub fn poison_ffn_rows(&mut self, layer: usize, rows: &[usize]) {
+        let l = &mut self.layers[layer];
+        for &j in rows {
+            l.up.poison_row(j);
+            l.gate.poison_row(j);
+            l.down.poison_row(j);
+        }
+    }
+
+    // ---------------------------------------------------- real compute
+
+    /// One importance-statistics vector: |dequantized GEMV output| of
+    /// the layer's int8 projection, ℓ2-normalized (the sim contract).
+    fn stat_vec(
+        &self,
+        kind: u64,
+        t: i32,
+        p: i32,
+        l: usize,
+    ) -> Vec<f64> {
+        let mut x = [0.0f32; STAT_D];
+        x[0] = 1.0;
+        for (c, xc) in x.iter_mut().enumerate().skip(1) {
+            let h = sim::h01(&[
+                SALT_STAT_X,
+                kind,
+                t as u64,
+                p as u64,
+                l as u64,
+                c as u64,
+            ]);
+            *xc = if h < 0.5 { -STAT_JIT } else { STAT_JIT };
+        }
+        let (xq, xs) = quant::quantize_row(&x);
+        let w = if kind == KIND_PROMPT {
+            &self.stat_prompt[l]
+        } else {
+            &self.stat_dec[l]
+        };
+        let mut out = vec![0.0f32; self.spec.ffn_m];
+        quant::dense_gemv(self.simd, w, &xq, xs, &mut out);
+        let mut v: Vec<f64> = out.iter().map(|a| a.abs() as f64).collect();
+        sim::l2_normalize(&mut v);
+        v
+    }
+
+    /// Prompt-time statistics for one (token, layer) — position-free so
+    /// chunked prefill stays partition-invariant.
+    fn prompt_stats(&self, t: i32, l: usize) -> Vec<f64> {
+        self.stat_vec(KIND_PROMPT, t, 0, l)
+    }
+
+    /// Decode-time statistics (carrying the ±Δ drift profile).
+    fn dec_stats(&self, t: i32, p: i32, l: usize) -> Vec<f64> {
+        self.stat_vec(KIND_DEC, t, p, l)
+    }
+
+    /// Run the masked FFN stack for token `t` with the GLASS kept-row
+    /// lists and fold the output into a single softmax-invariant logit
+    /// tap. Masked-out rows are never loaded (counted in
+    /// `ffn_rows_skipped`).
+    fn ffn_delta(&self, t: i32, kept: &[Vec<usize>]) -> f32 {
+        let tok = (t.max(0) as usize).min(self.spec.vocab - 1);
+        let x = self.embed.dequantize_row(tok);
+        let (xq, xs) = quant::quantize_row(&x);
+        let d = self.spec.d_model;
+        let mut y = vec![0.0f32; d];
+        let mut visited = 0u64;
+        let mut skipped = 0u64;
+        for (l, layer) in self.layers.iter().enumerate() {
+            let rows = kept.get(l).map(|v| v.as_slice()).unwrap_or(&[]);
+            if rows.len() * d >= quant::POOL_MIN_MACS {
+                self.ffn_layer_pooled(layer, &xq, xs, rows, &mut y);
+            } else {
+                quant::ffn_forward_masked(
+                    self.simd, &layer.up, &layer.gate, &layer.down, &xq, xs,
+                    rows, &mut y, None,
+                );
+            }
+            visited += rows.len() as u64;
+            skipped += (self.spec.ffn_m - rows.len()) as u64;
+        }
+        // Relaxed: monotonic telemetry counters — readers only ever
+        // compare totals after the calls that bumped them returned, so
+        // no ordering with other memory is required
+        self.rows_visited.fetch_add(visited, Ordering::Relaxed);
+        self.rows_skipped.fetch_add(skipped, Ordering::Relaxed);
+        let mean = y.iter().map(|&v| v as f64).sum::<f64>()
+            / (d as f64 * self.layers.len().max(1) as f64);
+        DELTA_SCALE * mean.tanh() as f32
+    }
+
+    /// Large-model path: up/gate GEMVs on the worker pool (bit-identical
+    /// to the sequential kernel), down-projection accumulated inline.
+    fn ffn_layer_pooled(
+        &self,
+        layer: &FfnLayerQ8,
+        xq: &[i8],
+        xs: f32,
+        rows: &[usize],
+        y: &mut [f32],
+    ) {
+        // check the pool out of the slot; a concurrent call (or a
+        // poisoned lock) just runs sequentially — same bits either way
+        let pool = self.pool.lock().ok().and_then(|mut g| g.take());
+        let pool = match pool {
+            Some(p) => p,
+            None => {
+                let n = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .clamp(1, 8);
+                ThreadPool::new(n)
+            }
+        };
+        let m = self.spec.ffn_m;
+        let mut up_out = vec![0.0f32; m];
+        let mut gate_out = vec![0.0f32; m];
+        quant::masked_gemv_pooled(
+            self.simd, &layer.up, xq, xs, rows, &mut up_out, &pool, 8,
+        );
+        quant::masked_gemv_pooled(
+            self.simd, &layer.gate, xq, xs, rows, &mut gate_out, &pool, 8,
+        );
+        if let Ok(mut g) = self.pool.lock() {
+            // put the pool back; if a racing call created another one,
+            // the extra pool drops (joining its idle workers)
+            g.get_or_insert(pool);
+        }
+        for &j in rows {
+            let a = quant::silu(gate_out[j]) * up_out[j];
+            let ds = layer.down.scale(j);
+            let drow = layer.down.row(j);
+            let n = y.len().min(drow.len());
+            for c in 0..n {
+                y[c] += a * (drow[c] as f32 * ds);
+            }
+        }
+    }
+
+    // ------------------------------------------------- post-processing
+    //
+    // The closed-form head (logits strengths, KV rows, trajectories)
+    // comes from the shared sim model; these passes then (a) fold the
+    // real masked-FFN tap into the logits and (b) REPLACE the
+    // statistics outputs with the quantized importance activations.
+
+    fn post_prefill(
+        &self,
+        b: usize,
+        operands: &[Value],
+        out: &mut [Value],
+        chunked: bool,
+    ) -> Result<()> {
+        let spec = &self.spec;
+        let tokens = operands[0].as_i32()?;
+        let lens = operands[1].as_i32()?;
+        let s_pre = spec.prefill_len;
+        let kept_dense: Vec<Vec<usize>> =
+            vec![self.dense_rows.clone(); spec.n_layers];
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        let mut deltas = vec![0.0f32; b];
+        for slot in 0..b {
+            let len = if chunked {
+                (lens.data[slot].max(0) as usize).min(s_pre)
+            } else {
+                (lens.data[slot].max(1) as usize).min(s_pre)
+            };
+            if len == 0 {
+                continue; // idle chunk slot: zero logits, zero stats
+            }
+            let toks = &tokens.data[slot * s_pre..slot * s_pre + len];
+            deltas[slot] = self.ffn_delta(toks[len - 1], &kept_dense);
+            for l in 0..spec.n_layers {
+                let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                for &t in toks {
+                    let st = self.prompt_stats(t, l);
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] += (st[j] / len as f64) as f32;
+                    }
+                }
+            }
+        }
+        add_logit_tap(&mut out[0], spec.vocab, &deltas)?;
+        out[3] = Value::F32(TensorF::new(
+            vec![b, spec.n_layers, spec.ffn_m],
+            stats,
+        )?);
+        Ok(())
+    }
+
+    fn post_decode(
+        &self,
+        b: usize,
+        operands: &[Value],
+        out: &mut [Value],
+        gathered: bool,
+    ) -> Result<()> {
+        let spec = &self.spec;
+        let tokens = operands[0].as_i32()?;
+        let pos = operands[1].as_i32()?;
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        let mut deltas = vec![0.0f32; b];
+        for slot in 0..b {
+            let kept = if gathered {
+                self.sim.kept_from_idx(operands[4].as_i32()?, slot)
+            } else {
+                self.sim.kept_from_mask(operands[4].as_f32()?, slot)
+            };
+            let t = tokens.data[slot];
+            let p = pos.data[slot];
+            deltas[slot] = self.ffn_delta(t, &kept);
+            for l in 0..spec.n_layers {
+                let st = self.dec_stats(t, p, l);
+                let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                for j in 0..spec.ffn_m {
+                    stats[base + j] = st[j] as f32;
+                }
+            }
+        }
+        add_logit_tap(&mut out[0], spec.vocab, &deltas)?;
+        out[3] = Value::F32(TensorF::new(
+            vec![b, spec.n_layers, spec.ffn_m],
+            stats,
+        )?);
+        Ok(())
+    }
+
+    fn post_score(
+        &self,
+        b: usize,
+        operands: &[Value],
+        out: &mut [Value],
+    ) -> Result<()> {
+        let spec = &self.spec;
+        let tokens = operands[0].as_i32()?;
+        let weights = operands[1].as_f32()?;
+        let s_len = spec.score_len;
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        for slot in 0..b {
+            let mut w_total = 0.0f64;
+            let mut acc = vec![vec![0.0f64; spec.ffn_m]; spec.n_layers];
+            for p in 0..s_len {
+                let t = tokens.data[slot * s_len + p];
+                let w = weights.data[slot * s_len + p] as f64;
+                if w > 0.0 {
+                    w_total += w;
+                    for l in 0..spec.n_layers {
+                        let st = self.dec_stats(t, p as i32, l);
+                        for j in 0..spec.ffn_m {
+                            acc[l][j] += w * st[j];
+                        }
+                    }
+                }
+            }
+            if w_total > 0.0 {
+                for l in 0..spec.n_layers {
+                    let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] = (acc[l][j] / w_total) as f32;
+                    }
+                }
+            }
+        }
+        out[1] = Value::F32(TensorF::new(
+            vec![b, spec.n_layers, spec.ffn_m],
+            stats,
+        )?);
+        Ok(())
+    }
+
+    fn post_generate(
+        &self,
+        b: usize,
+        operands: &[Value],
+        out: &mut [Value],
+    ) -> Result<()> {
+        let spec = &self.spec;
+        let lens = operands[1].as_i32()?;
+        let gen_toks = out[0].as_i32()?.clone();
+        let n = spec.gen_len;
+        let mut stats = vec![0.0f32; b * spec.n_layers * spec.ffn_m];
+        for slot in 0..b {
+            let len =
+                (lens.data[slot].max(1) as usize).min(spec.prefill_len);
+            for i in 0..n {
+                let tok = gen_toks.data[slot * n + i];
+                let p = (len + i) as i32;
+                for l in 0..spec.n_layers {
+                    let st = self.dec_stats(tok, p, l);
+                    let base = (slot * spec.n_layers + l) * spec.ffn_m;
+                    for j in 0..spec.ffn_m {
+                        stats[base + j] += (st[j] / n as f64) as f32;
+                    }
+                }
+            }
+        }
+        out[2] = Value::F32(TensorF::new(
+            vec![b, spec.n_layers, spec.ffn_m],
+            stats,
+        )?);
+        Ok(())
+    }
+}
+
+/// Add each slot's FFN tap uniformly to its logits row (softmax- and
+/// argmax-invariant; NaN-transparent for the canary).
+fn add_logit_tap(
+    logits: &mut Value,
+    vocab: usize,
+    deltas: &[f32],
+) -> Result<()> {
+    match logits {
+        Value::F32(t) => {
+            for (slot, &d) in deltas.iter().enumerate() {
+                if d == 0.0 {
+                    continue; // idle chunk slots keep their zero rows
+                }
+                for v in &mut t.data[slot * vocab..(slot + 1) * vocab] {
+                    *v += d;
+                }
+            }
+            Ok(())
+        }
+        Value::I32(_) => bail!("logits output must be f32"),
+    }
+}
+
+/// Build the per-layer importance projections: row `j` is the unit's
+/// base weight (geometric gain, or the drifted decode profile) times
+/// `[1, ±JIT, ±JIT, ...]` — after the GEMV the |activation| profile is
+/// `base[j]·(1 + bounded jitter)`, the same family the sim model uses.
+/// The jitter bound (≈ ±12% after quantization) is strictly below the
+/// 30% gap between adjacent gain-profile units, so quantization can
+/// never reorder importance ranks.
+fn build_stat_mats(
+    base: &[f64],
+    kind: u64,
+    n_layers: usize,
+) -> Result<Vec<QuantMatrix>> {
+    let m = base.len();
+    let mut mats = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let mut rows = vec![0.0f32; m * STAT_D];
+        for j in 0..m {
+            let w = base[j] as f32;
+            rows[j * STAT_D] = w;
+            for c in 1..STAT_D {
+                let h = sim::h01(&[
+                    SALT_STAT_W,
+                    kind,
+                    l as u64,
+                    j as u64,
+                    c as u64,
+                ]);
+                let s = if h < 0.5 { -1.0 } else { 1.0 };
+                rows[j * STAT_D + c] = w * STAT_JIT * s;
+            }
+        }
+        mats.push(QuantMatrix::from_rows(m, STAT_D, &rows)?);
+    }
+    Ok(mats)
+}
+
+impl super::ExecBackend for CpuQ8Backend {
+    fn name(&self) -> &'static str {
+        "cpu-q8"
+    }
+
+    fn capabilities(&self) -> super::Capabilities {
+        super::Capabilities {
+            native_masked_ffn: true,
+            chunked_prefill: true,
+            needs_warmup: false,
+            deterministic: true,
+        }
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        manifest.exe(name).map(|_| ())
+    }
+
+    fn call(
+        &self,
+        _manifest: &Manifest,
+        spec: &ExeSpec,
+        operands: &[Value],
+    ) -> Result<Vec<Value>> {
+        let _t = timer::global().start("runtime.execute");
+        let (kind, b) = sim::parse_exe_name(&spec.name).ok_or_else(|| {
+            anyhow!("cpu-q8 backend: bad exe name '{}'", spec.name)
+        })?;
+        let mut out = SimBackend::call(&self.sim, &spec.name, operands)?;
+        match kind {
+            "prefill" => self.post_prefill(b, operands, &mut out, false)?,
+            "prefill_chunk" => {
+                self.post_prefill(b, operands, &mut out, true)?
+            }
+            "decode" => self.post_decode(b, operands, &mut out, false)?,
+            "decode_topk" => {
+                self.post_decode(b, operands, &mut out, true)?
+            }
+            "score" => self.post_score(b, operands, &mut out)?,
+            "generate" => self.post_generate(b, operands, &mut out)?,
+            _ => {}
+        }
+        Ok(out)
+    }
+
+    fn prior(&self, name: &str) -> Option<Result<Vec<Vec<f32>>>> {
+        // the global priors describe the same toy model; sharing the
+        // sim's closed-form priors keeps λ rank fusion backend-agnostic
+        Some(self.sim.prior(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ExecBackend;
+    use super::*;
+    use crate::tensor::TensorI;
+
+    fn backend() -> CpuQ8Backend {
+        let manifest = sim::synthetic_manifest();
+        let params: Vec<Vec<f32>> = manifest
+            .params
+            .iter()
+            .map(|p| SimBackend::param_values(&p.name, p.numel))
+            .collect();
+        CpuQ8Backend::new(&manifest, &params).unwrap()
+    }
+
+    fn decode_operands(
+        spec: &ModelSpec,
+        kept: &[usize],
+    ) -> Vec<Value> {
+        let kv_shape = [
+            spec.n_layers,
+            1,
+            spec.n_heads,
+            spec.max_seq,
+            spec.head_dim,
+        ];
+        let mut mask = vec![0.0f32; spec.n_layers * spec.ffn_m];
+        for l in 0..spec.n_layers {
+            for &j in kept {
+                mask[l * spec.ffn_m + j] = 1.0;
+            }
+        }
+        vec![
+            Value::I32(TensorI::new(vec![1], vec![101]).unwrap()),
+            Value::I32(TensorI::new(vec![1], vec![9]).unwrap()),
+            Value::F32(TensorF::zeros(&kv_shape)),
+            Value::F32(TensorF::zeros(&kv_shape)),
+            Value::F32(
+                TensorF::new(
+                    vec![1, spec.n_layers, spec.ffn_m],
+                    mask,
+                )
+                .unwrap(),
+            ),
+        ]
+    }
+
+    fn call(
+        be: &CpuQ8Backend,
+        name: &str,
+        operands: &[Value],
+    ) -> Vec<Value> {
+        let manifest = sim::synthetic_manifest();
+        let spec = manifest.exe(name).unwrap().clone();
+        ExecBackend::call(be, &manifest, &spec, operands).unwrap()
+    }
+
+    #[test]
+    fn poisoned_weight_canary_masked_rows_never_read() {
+        // THE acceptance-criteria canary: poison every masked-out FFN
+        // row; if the backend ever loaded one, NaN would reach the
+        // logits. Output must be bit-identical to the clean backend.
+        let clean = backend();
+        let spec = clean.spec.clone();
+        let density_03 = (spec.ffn_m as f64 * 0.3).round() as usize;
+        let kept: Vec<usize> = (0..density_03).collect();
+        let masked_out: Vec<usize> =
+            (density_03..spec.ffn_m).collect();
+        let mut poisoned = backend();
+        for l in 0..spec.n_layers {
+            poisoned.poison_ffn_rows(l, &masked_out);
+        }
+        let ops = decode_operands(&spec, &kept);
+        let a = call(&clean, "decode_b1", &ops);
+        let b = call(&poisoned, "decode_b1", &ops);
+        let logits_a = a[0].as_f32().unwrap();
+        let logits_b = b[0].as_f32().unwrap();
+        assert!(
+            logits_b.data.iter().all(|v| v.is_finite()),
+            "poisoned masked-out rows leaked into the logits"
+        );
+        assert_eq!(
+            logits_a.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            logits_b.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "masked decode must not depend on masked-out row contents"
+        );
+        // control: a DENSE decode on the poisoned backend must read the
+        // poisoned rows and surface NaN — proving the canary has teeth
+        let dense: Vec<usize> = (0..spec.ffn_m).collect();
+        let dense_ops = decode_operands(&spec, &dense);
+        let c = call(&poisoned, "decode_b1", &dense_ops);
+        assert!(
+            c[0].as_f32().unwrap().data.iter().any(|v| v.is_nan()),
+            "canary is dead: dense decode ignored poisoned rows"
+        );
+    }
+
+    #[test]
+    fn density_translates_into_row_traffic() {
+        let be = backend();
+        let spec = be.spec.clone();
+        let kept: Vec<usize> =
+            (0..(spec.ffn_m as f64 * 0.3).round() as usize).collect();
+        let ops = decode_operands(&spec, &kept);
+        let before = (be.ffn_rows_visited(), be.ffn_rows_skipped());
+        call(&be, "decode_b1", &ops);
+        let visited = be.ffn_rows_visited() - before.0;
+        let skipped = be.ffn_rows_skipped() - before.1;
+        let total = (visited + skipped) as f64;
+        let ratio = visited as f64 / total;
+        assert!(
+            (ratio - 0.3).abs() < 0.05,
+            "density 0.3 should mean ~0.3x row traffic, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn decode_is_deterministic_across_backend_instances() {
+        let a = backend();
+        let b = backend();
+        let spec = a.spec.clone();
+        let kept: Vec<usize> = (0..spec.ffn_m / 2).collect();
+        let ops = decode_operands(&spec, &kept);
+        let ra = call(&a, "decode_b1", &ops);
+        let rb = call(&b, "decode_b1", &ops);
+        for (va, vb) in ra.iter().zip(&rb) {
+            if let (Ok(ta), Ok(tb)) = (va.as_f32(), vb.as_f32()) {
+                assert_eq!(
+                    ta.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    tb.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_frame_chunk_matches_monolithic_prefill_bitwise() {
+        let be = backend();
+        let spec = be.spec.clone();
+        let s = spec.prefill_len;
+        let toks = [97i32, 98, 99, 100, 101, 32, 97];
+        let mut frame = vec![spec.pad_id; s];
+        frame[..toks.len()].copy_from_slice(&toks);
+        let tokens = TensorI::new(vec![1, s], frame).unwrap();
+        let lens =
+            TensorI::new(vec![1], vec![toks.len() as i32]).unwrap();
+        let mono = call(
+            &be,
+            "prefill_b1",
+            &[Value::I32(tokens.clone()), Value::I32(lens.clone())],
+        );
+        let kv_shape = [
+            spec.n_layers,
+            1,
+            spec.n_heads,
+            spec.max_seq,
+            spec.head_dim,
+        ];
+        let chunk = call(
+            &be,
+            "prefill_chunk_b1",
+            &[
+                Value::I32(tokens),
+                Value::I32(lens),
+                Value::I32(TensorI::new(vec![1], vec![0]).unwrap()),
+                Value::F32(TensorF::zeros(&kv_shape)),
+                Value::F32(TensorF::zeros(&kv_shape)),
+            ],
+        );
+        let bits = |v: &Value| -> Vec<u32> {
+            v.as_f32()
+                .unwrap()
+                .data
+                .iter()
+                .map(|x| x.to_bits())
+                .collect()
+        };
+        assert_eq!(bits(&mono[0]), bits(&chunk[0]), "logits");
+        assert_eq!(bits(&mono[3]), bits(&chunk[3]), "stats");
+    }
+
+    #[test]
+    fn stats_have_sim_shape_and_geometric_ordering() {
+        // the quantization seam: statistics come from real dequantized
+        // GEMV activations but keep the sim tensor contract — same
+        // shape/dtype, ℓ2-normalized, importance ordered by the
+        // geometric gain profile (so GLASS top-k picks the same units)
+        let be = backend();
+        let spec = be.spec.clone();
+        let s = spec.prefill_len;
+        let mut frame = vec![spec.pad_id; s];
+        frame[0] = 105;
+        let ops = [
+            Value::I32(TensorI::new(vec![1, s], frame).unwrap()),
+            Value::I32(TensorI::new(vec![1], vec![1]).unwrap()),
+        ];
+        let out = call(&be, "prefill_b1", &ops);
+        let stats = out[3].as_f32().unwrap();
+        assert_eq!(
+            stats.shape,
+            vec![1, spec.n_layers, spec.ffn_m]
+        );
+        for l in 0..spec.n_layers {
+            let row =
+                &stats.data[l * spec.ffn_m..(l + 1) * spec.ffn_m];
+            let norm: f32 =
+                row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3, "layer {l} norm {norm}");
+            for j in 1..spec.ffn_m {
+                assert!(
+                    row[j - 1] > row[j],
+                    "layer {l}: unit {} not above unit {j}",
+                    j - 1
+                );
+            }
+        }
+    }
+}

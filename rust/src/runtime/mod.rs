@@ -1,20 +1,63 @@
 //! Runtime: the manifest-driven executable layer behind the engine.
 //!
-//! Two interchangeable backends sit behind [`Runtime::call`]:
+//! # The `ExecBackend` trait
 //!
-//! * **PJRT** (`--features pjrt`): loads AOT-compiled HLO text through
-//!   the `xla` crate's PJRT CPU client — see [`pjrt`]. Model parameters
-//!   are uploaded once; per-call traffic is operands only.
-//! * **Simulator** (default): a deterministic pure-Rust model with the
-//!   same executable contract — see [`sim`]. Used whenever the real
-//!   XLA toolchain or the artifact bundle is unavailable (offline CI,
-//!   tests, benches), via [`Runtime::synthetic`] or as the execution
-//!   backend for an on-disk manifest.
+//! Execution is pluggable. Every backend implements the object-safe
+//! [`ExecBackend`] trait — `compile` (warm/cache a program by manifest
+//! name), `call` (execute with operands already validated against the
+//! manifest), `capabilities` (what the engine may rely on), and an
+//! optional `prior` hook for backends that synthesize their global
+//! priors instead of reading bundle files. [`Runtime`] owns one
+//! `Box<dyn ExecBackend>` selected **by name** at load time
+//! ([`Runtime::load_with_backend`], [`BACKEND_NAMES`]); everything
+//! above the runtime — engine, GLASS mask plumbing, server, benches —
+//! talks to the trait and probes [`Capabilities`], never a concrete
+//! backend type.
+//!
+//! # Capability matrix
+//!
+//! | backend  | native_masked_ffn | chunked_prefill | needs_warmup | deterministic |
+//! |----------|-------------------|-----------------|--------------|---------------|
+//! | `sim`    | no                | yes             | no           | yes           |
+//! | `cpu-q8` | **yes**           | yes             | no           | yes           |
+//! | `pjrt`   | no                | yes             | yes          | no            |
+//!
+//! * **`sim`** ([`sim`]): deterministic pure-Rust toy model; the
+//!   offline default and the semantic oracle for the test corpus.
+//! * **`cpu-q8`** ([`cpu_q8`]): int8 weight-quantized CPU kernels
+//!   ([`quant`]) that consume the GLASS mask as a kept-row list and
+//!   never load masked-out FFN rows — density 0.3 is ~0.3× real FFN
+//!   memory traffic.
+//! * **`pjrt`** ([`pjrt`], `--features pjrt`): AOT-compiled HLO through
+//!   the `xla` crate's PJRT CPU client; weights upload once, per-call
+//!   traffic is operands only. Needs explicit warm-up (`compile`) and
+//!   is not bitwise-reproducible across program boundaries.
+//!
+//! `capabilities().deterministic` is the replacement for the old
+//! `Runtime::is_simulated()` special-casing: tests gate bitwise
+//! assertions on it, and the engine uses `native_masked_ffn` /
+//! `needs_warmup` instead of asking *which* backend it has.
+//!
+//! # Adding a backend
+//!
+//! 1. Create `runtime/<name>.rs` with a struct implementing
+//!    [`ExecBackend`] over the manifest's executable contract
+//!    (`{prefill,prefill_chunk,decode,decode_topk,score,generate}_b{b}`
+//!    — operands arrive pre-validated in manifest order).
+//! 2. Report honest [`Capabilities`]; claim `deterministic` only if
+//!    repeated calls and fused/step paths agree **bitwise**.
+//! 3. Register the name in [`BACKEND_NAMES`] and construct it in
+//!    `make_backend`; config/CLI validation picks the name up from the
+//!    registry automatically.
+//! 4. Run the tier-1 suite with `GLASS_TEST_BACKEND=<name>` — the
+//!    integration corpus is backend-parameterized and is the contract.
 //!
 //! Operand count/shape/dtype validation against the manifest happens
-//! here, identically for both backends.
+//! in [`Runtime::call`], identically for every backend.
 
+pub mod cpu_q8;
 pub mod manifest;
+pub mod quant;
 pub mod sim;
 
 #[cfg(feature = "pjrt")]
@@ -80,44 +123,125 @@ impl Value {
     }
 }
 
-enum Backend {
-    Sim(sim::SimBackend),
-    #[cfg(feature = "pjrt")]
-    Pjrt(pjrt::PjrtBackend),
+/// What the engine/server may rely on from a backend. Probed through
+/// [`Runtime::capabilities`]; this is the public replacement for
+/// `is_sim()`-style downcasts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    /// The backend consumes the GLASS mask inside its own kernels and
+    /// skips masked-out FFN rows entirely (density ⇒ real FLOP/traffic
+    /// savings). When false, masking only shapes statistics/quality.
+    pub native_masked_ffn: bool,
+    /// `prefill_chunk_b*` executables are implemented (chunked prefill
+    /// and prefix-cache resume are available).
+    pub chunked_prefill: bool,
+    /// Programs must be compiled/warmed before serving traffic
+    /// (first-call latency would otherwise hit a request).
+    pub needs_warmup: bool,
+    /// Repeated calls, fused vs. step paths, and chunk partitions agree
+    /// **bitwise**. Tests gate exact-equality assertions on this.
+    pub deterministic: bool,
+}
+
+/// An execution backend behind [`Runtime`]. Object-safe; implementors
+/// must be shareable across shard threads (`Send + Sync`).
+pub trait ExecBackend: Send + Sync {
+    /// Stable registry name (`"sim"`, `"cpu-q8"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// What the layers above may rely on. Must be constant for the
+    /// lifetime of the backend.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Compile (or otherwise warm) an executable by manifest name; a
+    /// validating no-op for backends with nothing to compile.
+    fn compile(&self, manifest: &Manifest, name: &str) -> Result<()>;
+
+    /// Execute. Operands are already validated against the `ExeSpec`
+    /// (count, shape, dtype) in manifest order.
+    fn call(
+        &self,
+        manifest: &Manifest,
+        spec: &ExeSpec,
+        operands: &[Value],
+    ) -> Result<Vec<Value>>;
+
+    /// Backend-synthesized global prior, or `None` to read the prior
+    /// from the artifact bundle ([L, m] f32 row-major file).
+    fn prior(&self, _name: &str) -> Option<Result<Vec<Vec<f32>>>> {
+        None
+    }
+}
+
+/// Every selectable backend name. `"auto"` resolves to `pjrt` when the
+/// feature is compiled in and an artifact bundle is loaded, else `sim`.
+pub const BACKEND_NAMES: [&str; 4] = ["auto", "sim", "cpu-q8", "pjrt"];
+
+/// Reject unknown backend names with the full registry in the error —
+/// used by config/CLI parsing so typos fail at parse time, not at
+/// first request.
+pub fn validate_backend_name(name: &str) -> Result<()> {
+    if BACKEND_NAMES.contains(&name) {
+        Ok(())
+    } else {
+        bail!(
+            "unknown backend '{name}' (expected one of: {})",
+            BACKEND_NAMES.join(", ")
+        )
+    }
+}
+
+/// Resolve `"auto"` to the concrete default for this build.
+fn resolve_backend_name(name: &str) -> Result<&'static str> {
+    validate_backend_name(name)?;
+    Ok(match name {
+        "auto" => {
+            if cfg!(feature = "pjrt") {
+                "pjrt"
+            } else {
+                "sim"
+            }
+        }
+        "sim" => "sim",
+        "cpu-q8" => "cpu-q8",
+        "pjrt" => "pjrt",
+        _ => unreachable!("validated above"),
+    })
 }
 
 /// The runtime: the manifest, the selected backend, and host copies of
 /// the weights (for the memory simulator and diagnostics).
 pub struct Runtime {
     pub manifest: Manifest,
-    backend: Backend,
+    backend: Box<dyn ExecBackend>,
     /// Raw host copy of the weights (memsim + weight inspection need it).
     pub param_host: Vec<Vec<f32>>,
 }
 
 impl Runtime {
-    /// Load the artifact bundle at `dir`. With the `pjrt` feature the
-    /// HLO programs are compiled and executed through PJRT; without it,
-    /// the manifest drives the simulator backend.
+    /// Load the artifact bundle at `dir` on the default (`"auto"`)
+    /// backend: PJRT when compiled in, else the simulator.
     pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let param_host = load_params(&manifest)?;
+        Runtime::load_with_backend(dir, "auto")
+    }
 
-        #[cfg(feature = "pjrt")]
-        let backend = Backend::Pjrt(pjrt::PjrtBackend::load(
-            &manifest.params,
-            &param_host,
-        )?);
-        #[cfg(not(feature = "pjrt"))]
-        let backend = {
+    /// Load the artifact bundle at `dir` on the backend selected by
+    /// registry name (see [`BACKEND_NAMES`]).
+    pub fn load_with_backend(dir: &Path, backend: &str) -> Result<Runtime> {
+        let resolved = resolve_backend_name(backend)?;
+        let manifest = Manifest::load(dir)?;
+        // only PJRT uploads weights to a device; the other backends can
+        // fall back to deterministic synthetic weights when params.bin
+        // is absent (weight-dependent tooling keeps working)
+        let param_host = load_params(&manifest, resolved == "pjrt")?;
+        if backend == "auto" && resolved == "sim" {
             crate::info!(
                 "pjrt feature disabled — executing '{}' on the simulator \
                  backend",
                 dir.display()
             );
-            Backend::Sim(sim::SimBackend::new(manifest.model.clone()))
-        };
-
+        }
+        let backend = make_backend(resolved, &manifest, &param_host)?;
         Ok(Runtime {
             manifest,
             backend,
@@ -129,23 +253,41 @@ impl Runtime {
     /// synthetic manifest, deterministic weights, and hash-derived
     /// priors. Works with zero files on disk.
     pub fn synthetic() -> Runtime {
+        Runtime::synthetic_with_backend("sim")
+            .expect("sim backend construction is infallible")
+    }
+
+    /// In-memory synthetic runtime on a named backend (`"sim"` or
+    /// `"cpu-q8"`; `"auto"` resolves to `"sim"` — there is no artifact
+    /// bundle for PJRT to load).
+    pub fn synthetic_with_backend(backend: &str) -> Result<Runtime> {
+        validate_backend_name(backend)?;
+        let name = if backend == "auto" { "sim" } else { backend };
+        if name == "pjrt" {
+            bail!("backend 'pjrt' needs an artifact bundle (use `load`)");
+        }
         let manifest = sim::synthetic_manifest();
-        let param_host = manifest
+        let param_host: Vec<Vec<f32>> = manifest
             .params
             .iter()
             .map(|p| sim::SimBackend::param_values(&p.name, p.numel))
             .collect();
-        let backend = Backend::Sim(sim::SimBackend::new(manifest.model.clone()));
-        Runtime {
+        let backend = make_backend(name, &manifest, &param_host)?;
+        Ok(Runtime {
             manifest,
             backend,
             param_host,
-        }
+        })
     }
 
-    /// True when calls execute on the simulator backend.
-    pub fn is_simulated(&self) -> bool {
-        matches!(self.backend, Backend::Sim(_))
+    /// The resolved registry name of the executing backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// What the executing backend guarantees (see [`Capabilities`]).
+    pub fn capabilities(&self) -> Capabilities {
+        self.backend.capabilities()
     }
 
     /// Total model weight bytes (for the memory simulator).
@@ -154,15 +296,10 @@ impl Runtime {
     }
 
     /// Compile (and cache) an executable by manifest name. Also used to
-    /// warm programs before serving; a no-op on the simulator beyond
-    /// validating the name.
+    /// warm programs before serving; backends without a compile step
+    /// just validate the name.
     pub fn executable(&self, name: &str) -> Result<()> {
-        self.manifest.exe(name)?;
-        match &self.backend {
-            Backend::Sim(_) => Ok(()),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.compile(&self.manifest, name),
-        }
+        self.backend.compile(&self.manifest, name)
     }
 
     /// Execute by name with operands in manifest order.
@@ -195,21 +332,14 @@ impl Runtime {
                 );
             }
         }
-        match &self.backend {
-            Backend::Sim(s) => {
-                let _t = timer::global().start("runtime.execute");
-                s.call(name, operands)
-            }
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.call(&self.manifest, spec, operands),
-        }
+        self.backend.call(&self.manifest, spec, operands)
     }
 
-    /// Load a prior by name: from the simulator when simulated, else
-    /// from the bundle ([L, m] f32 row-major file).
+    /// Load a prior by name: from the backend when it synthesizes its
+    /// own, else from the bundle ([L, m] f32 row-major file).
     pub fn load_prior(&self, name: &str) -> Result<Vec<Vec<f32>>> {
-        if let Backend::Sim(s) = &self.backend {
-            return s.prior(name);
+        if let Some(r) = self.backend.prior(name) {
+            return r;
         }
         let path = self.manifest.prior_path(name)?;
         let raw = std::fs::read(&path)
@@ -231,11 +361,37 @@ impl Runtime {
     }
 }
 
+/// Construct a backend by resolved registry name.
+fn make_backend(
+    name: &str,
+    manifest: &Manifest,
+    param_host: &[Vec<f32>],
+) -> Result<Box<dyn ExecBackend>> {
+    match name {
+        "sim" => Ok(Box::new(sim::SimBackend::new(manifest.model.clone()))),
+        "cpu-q8" => Ok(Box::new(cpu_q8::CpuQ8Backend::new(
+            manifest, param_host,
+        )?)),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(pjrt::PjrtBackend::load(
+            &manifest.params,
+            param_host,
+        )?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "backend 'pjrt' is not compiled into this binary \
+             (rebuild with --features pjrt)"
+        ),
+        other => bail!("unknown backend '{other}'"),
+    }
+}
+
 /// Read params.bin per the manifest inventory. When the file is absent
-/// and we are not going to upload to PJRT (simulator execution), fall
-/// back to deterministic synthetic weights so weight-dependent tooling
-/// (memsim, `glass info`) still works.
-fn load_params(manifest: &Manifest) -> Result<Vec<Vec<f32>>> {
+/// and the backend does not strictly need real weights (`require_file`
+/// is false), fall back to deterministic synthetic weights so
+/// weight-dependent tooling (memsim, `glass info`, cpu-q8 quantization)
+/// still works.
+fn load_params(manifest: &Manifest, require_file: bool) -> Result<Vec<Vec<f32>>> {
     match std::fs::read(&manifest.params_file) {
         Ok(raw) => {
             let mut param_host = Vec::with_capacity(manifest.params.len());
@@ -254,7 +410,7 @@ fn load_params(manifest: &Manifest) -> Result<Vec<Vec<f32>>> {
             Ok(param_host)
         }
         Err(e) => {
-            if cfg!(feature = "pjrt") {
+            if require_file {
                 Err(e).with_context(|| {
                     format!("reading {:?}", manifest.params_file)
                 })
@@ -288,15 +444,55 @@ mod tests {
     #[test]
     fn synthetic_runtime_round_trips() {
         let rt = Runtime::synthetic();
-        assert!(rt.is_simulated());
+        assert_eq!(rt.backend_name(), "sim");
+        assert!(rt.capabilities().deterministic);
+        assert!(!rt.capabilities().native_masked_ffn);
         assert!(rt.weight_bytes() > 0);
         assert_eq!(rt.param_host.len(), rt.manifest.params.len());
         // operand validation is backend-independent
         assert!(rt.call("decode_b1", &[]).is_err());
         assert!(rt.executable("prefill_b4").is_ok());
         assert!(rt.executable("nope_b4").is_err());
-        // priors resolve through the simulator
+        // priors resolve through the backend hook
         let p = rt.load_prior("a_nps").unwrap();
         assert_eq!(p.len(), rt.manifest.model.n_layers);
+    }
+
+    #[test]
+    fn cpu_q8_synthetic_runtime_round_trips() {
+        let rt = Runtime::synthetic_with_backend("cpu-q8").unwrap();
+        assert_eq!(rt.backend_name(), "cpu-q8");
+        let caps = rt.capabilities();
+        assert!(caps.native_masked_ffn);
+        assert!(caps.chunked_prefill);
+        assert!(caps.deterministic);
+        assert!(!caps.needs_warmup);
+        assert!(rt.executable("prefill_b4").is_ok());
+        // priors are shared with the sim oracle, so λ fusion and the
+        // GLASS boundary see identical inputs on both backends
+        let sim_rt = Runtime::synthetic();
+        assert_eq!(
+            rt.load_prior("a_nps").unwrap(),
+            sim_rt.load_prior("a_nps").unwrap()
+        );
+    }
+
+    #[test]
+    fn unknown_backend_names_are_rejected() {
+        assert!(validate_backend_name("sim").is_ok());
+        assert!(validate_backend_name("cpu-q8").is_ok());
+        assert!(validate_backend_name("auto").is_ok());
+        let err = validate_backend_name("cuda")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cuda") && err.contains("cpu-q8"), "{err}");
+        assert!(Runtime::synthetic_with_backend("cuda").is_err());
+        assert!(Runtime::synthetic_with_backend("pjrt").is_err());
+    }
+
+    #[test]
+    fn auto_resolves_to_sim_for_synthetic() {
+        let rt = Runtime::synthetic_with_backend("auto").unwrap();
+        assert_eq!(rt.backend_name(), "sim");
     }
 }

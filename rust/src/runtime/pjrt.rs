@@ -163,6 +163,36 @@ impl PjrtBackend {
     }
 }
 
+impl super::ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> super::Capabilities {
+        super::Capabilities {
+            native_masked_ffn: false,
+            chunked_prefill: true,
+            // distinct XLA programs reorder float math: fused vs step
+            // paths agree only to tolerance, never bitwise
+            deterministic: false,
+            needs_warmup: true,
+        }
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        PjrtBackend::compile(self, manifest, name)
+    }
+
+    fn call(
+        &self,
+        manifest: &Manifest,
+        spec: &ExeSpec,
+        operands: &[Value],
+    ) -> Result<Vec<Value>> {
+        PjrtBackend::call(self, manifest, spec, operands)
+    }
+}
+
 fn compile_locked(
     st: &mut PjrtState,
     manifest: &Manifest,

@@ -1,0 +1,668 @@
+//! Per-row symmetric int8 quantization and blocked GEMV kernels for the
+//! [`super::cpu_q8`] backend.
+//!
+//! Design constraints (all load-bearing for the test suite):
+//!
+//! * **Integer accumulation.** Weights and activations are quantized to
+//!   int8 and dot products accumulate in i32. Integer addition is
+//!   associative, so the scalar, AVX2, and NEON paths produce the SAME
+//!   i32 no matter how lanes are grouped — the float result
+//!   (`i32 as f32 * w_scale * x_scale`) is therefore bit-identical
+//!   across every SIMD path by construction, not by tolerance.
+//! * **Masked row skipping.** [`masked_gemv`] takes the GLASS kept-row
+//!   list and touches ONLY those rows: a masked-out row's int8 data and
+//!   scale are never loaded, so density d means ~d× the FFN memory
+//!   traffic (measured by `bench_decode`'s `cpu-q8 GEMV` rows and
+//!   proven by the poisoned-row canary in `cpu_q8`).
+//! * **Blocked inner loops.** The scalar path accumulates into a fixed
+//!   8-lane block so LLVM can autovectorize it even without the
+//!   `std::arch` fast paths; the AVX2/NEON paths are selected at
+//!   runtime ([`detect`]) with the scalar loop as universal fallback.
+//!
+//! Overflow bound: each i8×i8 product is ≤ 127·127 = 16129, so an i32
+//! accumulator is safe for any row length below ~2^17 elements — far
+//! above any model dimension this crate handles (asserted in
+//! [`QuantMatrix::from_rows`]).
+
+use std::sync::mpsc;
+
+use anyhow::{bail, Result};
+
+use crate::util::threadpool::ThreadPool;
+
+/// Symmetric quantization range: [-127, 127] (−128 unused so the
+/// representable grid is symmetric around zero).
+pub const Q_MAX: f32 = 127.0;
+
+/// Row lengths are capped so i32 GEMV accumulators cannot overflow.
+pub const MAX_COLS: usize = 1 << 17;
+
+// ------------------------------------------------------ SIMD dispatch
+
+/// Which inner-loop implementation a GEMV call uses. All variants
+/// return bit-identical results (integer accumulation, see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Simd {
+    /// Blocked scalar loop (autovectorizable; the universal fallback).
+    Scalar,
+    /// `std::arch::x86_64` AVX2 path (`_mm256_madd_epi16`).
+    Avx2,
+    /// `std::arch::aarch64` NEON path (`vmull_s8` + pairwise widen).
+    Neon,
+}
+
+impl Simd {
+    /// Short label for telemetry and bench rows.
+    pub fn label(self) -> &'static str {
+        match self {
+            Simd::Scalar => "scalar",
+            Simd::Avx2 => "avx2",
+            Simd::Neon => "neon",
+        }
+    }
+}
+
+/// Runtime feature detection: the best kernel available on this host.
+pub fn detect() -> Simd {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Simd::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON (asimd) is a baseline aarch64 feature.
+        return Simd::Neon;
+    }
+    #[allow(unreachable_code)]
+    Simd::Scalar
+}
+
+/// Every kernel runnable on this host (scalar always; used by the
+/// bit-for-bit agreement tests).
+pub fn available() -> Vec<Simd> {
+    let mut v = vec![Simd::Scalar];
+    let best = detect();
+    if best != Simd::Scalar {
+        v.push(best);
+    }
+    v
+}
+
+// ------------------------------------------------------- quantization
+
+/// Per-row symmetric int8 quantization: `scale = max|x| / 127`,
+/// `q = round(x / scale)` clamped to [-127, 127]. An all-zero row gets
+/// scale 1.0 (and all-zero codes) so dequantization never divides by 0.
+pub fn quantize_row(src: &[f32]) -> (Vec<i8>, f32) {
+    let mut q = Vec::with_capacity(src.len());
+    let scale = quantize_into(src, &mut q);
+    (q, scale)
+}
+
+/// In-place variant of [`quantize_row`] reusing the output buffer (the
+/// per-token activation path); returns the scale.
+pub fn quantize_into(src: &[f32], out: &mut Vec<i8>) -> f32 {
+    out.clear();
+    let maxabs = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = if maxabs > 0.0 { maxabs / Q_MAX } else { 1.0 };
+    let inv = 1.0 / scale;
+    out.extend(src.iter().map(|&x| {
+        (x * inv).round().clamp(-Q_MAX, Q_MAX) as i8
+    }));
+    scale
+}
+
+/// A row-major int8 matrix with one symmetric scale per row. Rows are
+/// the GEMV output units, so the GLASS mask maps 1:1 onto row skips.
+#[derive(Debug, Clone)]
+pub struct QuantMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantMatrix {
+    /// Quantize a row-major f32 matrix (`src.len() == rows*cols`).
+    pub fn from_rows(rows: usize, cols: usize, src: &[f32]) -> Result<QuantMatrix> {
+        if src.len() != rows * cols {
+            bail!(
+                "QuantMatrix::from_rows: {} values for {rows}x{cols}",
+                src.len()
+            );
+        }
+        if cols > MAX_COLS {
+            bail!("QuantMatrix: {cols} cols exceeds i32-safe bound {MAX_COLS}");
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let (q, s) = quantize_row(&src[r * cols..(r + 1) * cols]);
+            data.extend_from_slice(&q);
+            scales.push(s);
+        }
+        Ok(QuantMatrix {
+            rows,
+            cols,
+            data,
+            scales,
+        })
+    }
+
+    /// Quantize the TRANSPOSE of a row-major `src_rows x src_cols` f32
+    /// matrix: output row `j` is `src[:, j]`. Used to store the
+    /// manifest's `[d, m]` up/gate projections as `[m, d]` so each FFN
+    /// unit is one contiguous, individually skippable row.
+    pub fn from_columns(
+        src_rows: usize,
+        src_cols: usize,
+        src: &[f32],
+    ) -> Result<QuantMatrix> {
+        if src.len() != src_rows * src_cols {
+            bail!(
+                "QuantMatrix::from_columns: {} values for {src_rows}x{src_cols}",
+                src.len()
+            );
+        }
+        let mut t = vec![0.0f32; src.len()];
+        for r in 0..src_rows {
+            for c in 0..src_cols {
+                t[c * src_rows + r] = src[r * src_cols + c];
+            }
+        }
+        QuantMatrix::from_rows(src_cols, src_rows, &t)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The int8 codes of row `r`.
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// The symmetric scale of row `r`.
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+
+    /// Dequantize row `r` to f32 (`q * scale`).
+    pub fn dequantize_row(&self, r: usize) -> Vec<f32> {
+        let s = self.scales[r];
+        self.row(r).iter().map(|&q| q as f32 * s).collect()
+    }
+
+    /// Quantized storage footprint in bytes (codes + scales).
+    pub fn weight_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    /// Canary helper: poison row `r` so ANY read of it propagates NaN
+    /// into downstream float math. Proves masked-out rows are never
+    /// loaded (see the `cpu_q8` poisoned-weight canary test).
+    pub fn poison_row(&mut self, r: usize) {
+        self.scales[r] = f32::NAN;
+        for q in &mut self.data[r * self.cols..(r + 1) * self.cols] {
+            *q = i8::MAX;
+        }
+    }
+}
+
+// ------------------------------------------------------- dot kernels
+
+/// Integer dot product of two int8 slices via the selected kernel.
+/// Slices longer than the shorter operand are truncated to match.
+pub fn dot_q8(simd: Simd, a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    match simd {
+        Simd::Scalar => dot_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Simd::Avx2 is only ever produced by `detect()` after
+        // `is_x86_feature_detected!("avx2")` returned true on this host.
+        Simd::Avx2 => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => dot_neon(a, b),
+        #[allow(unreachable_patterns)]
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Blocked scalar kernel: a fixed 8-lane accumulator block mirrors the
+/// SIMD lane structure and lets LLVM autovectorize the inner loop.
+fn dot_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0i32; 8];
+    for c in 0..chunks {
+        let o = c * 8;
+        for lane in 0..8 {
+            acc[lane] += a[o + lane] as i32 * b[o + lane] as i32;
+        }
+    }
+    let mut s: i32 = acc.iter().sum();
+    for i in chunks * 8..n {
+        s += a[i] as i32 * b[i] as i32;
+    }
+    s
+}
+
+/// AVX2 kernel: 16 int8 lanes per step, widened to i16 and pair-summed
+/// into 8 i32 lanes by `_mm256_madd_epi16`. No float math → the result
+/// equals the scalar kernel's bit for bit.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: `unsafe fn` only because of `#[target_feature]` — the sole
+// caller is `dot_q8`, which dispatches here after runtime detection.
+unsafe fn dot_avx2(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut i = 0usize;
+    // SAFETY: all loads below read 16 bytes at `ptr + i` with
+    // `i + 16 <= n`, inside the slice bounds; alignment is not required
+    // by the unaligned load intrinsics.
+    let mut acc = unsafe { _mm256_setzero_si256() };
+    while i + 16 <= n {
+        // SAFETY: bounds checked by the loop condition (see above).
+        unsafe {
+            let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+            let wa = _mm256_cvtepi8_epi16(va);
+            let wb = _mm256_cvtepi8_epi16(vb);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+        }
+        i += 16;
+    }
+    let mut lanes = [0i32; 8];
+    // SAFETY: `lanes` is exactly 32 bytes, the store width.
+    unsafe {
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    }
+    let mut s: i32 = lanes.iter().sum();
+    while i < n {
+        s += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    s
+}
+
+/// NEON kernel: 16 int8 lanes per step via `vmull_s8` (i8×i8→i16) and
+/// `vpadalq_s16` (pairwise widen-accumulate into i32). Integer-only,
+/// so bit-identical to the scalar kernel.
+#[cfg(target_arch = "aarch64")]
+fn dot_neon(a: &[i8], b: &[i8]) -> i32 {
+    use std::arch::aarch64::*;
+    let n = a.len();
+    let mut i = 0usize;
+    // SAFETY: NEON (asimd) is a baseline aarch64 target feature, and
+    // every load reads 16 bytes at `ptr + i` with `i + 16 <= n`.
+    let mut s = unsafe {
+        let mut acc = vdupq_n_s32(0);
+        while i + 16 <= n {
+            let va = vld1q_s8(a.as_ptr().add(i));
+            let vb = vld1q_s8(b.as_ptr().add(i));
+            let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+            let hi = vmull_s8(vget_high_s8(va), vget_high_s8(vb));
+            acc = vpadalq_s16(acc, lo);
+            acc = vpadalq_s16(acc, hi);
+            i += 16;
+        }
+        vaddvq_s32(acc)
+    };
+    while i < n {
+        s += a[i] as i32 * b[i] as i32;
+        i += 1;
+    }
+    s
+}
+
+// ------------------------------------------------------------- GEMV
+
+/// Masked GEMV: for each `j` in `rows`,
+/// `out[j] = dot(w.row(j), x_q) * w.scale(j) * x_scale`.
+/// Rows NOT listed are never loaded and their `out` slots are left
+/// untouched (the caller pre-fills them — typically with zeros).
+pub fn masked_gemv(
+    simd: Simd,
+    w: &QuantMatrix,
+    x_q: &[i8],
+    x_scale: f32,
+    rows: &[usize],
+    out: &mut [f32],
+) {
+    for &j in rows {
+        out[j] = dot_q8(simd, w.row(j), x_q) as f32 * w.scale(j) * x_scale;
+    }
+}
+
+/// Dense GEMV over every row (equivalent to `masked_gemv` with the
+/// full row list, without materializing it).
+pub fn dense_gemv(
+    simd: Simd,
+    w: &QuantMatrix,
+    x_q: &[i8],
+    x_scale: f32,
+    out: &mut [f32],
+) {
+    for j in 0..w.rows() {
+        out[j] = dot_q8(simd, w.row(j), x_q) as f32 * w.scale(j) * x_scale;
+    }
+}
+
+/// Below this many row·col MACs a parallel dispatch costs more than it
+/// saves; callers fall back to the sequential kernel.
+pub const POOL_MIN_MACS: usize = 1 << 16;
+
+/// Worker-pool masked GEMV: the kept-row list is split into contiguous
+/// chunks, each computed on a pool worker; results return over a
+/// channel and are scattered by the caller thread. Every `out[j]` is
+/// computed by exactly one worker with the same arithmetic as
+/// [`masked_gemv`], so the result is bit-identical to the sequential
+/// path regardless of scheduling.
+pub fn masked_gemv_pooled(
+    simd: Simd,
+    w: &QuantMatrix,
+    x_q: &[i8],
+    x_scale: f32,
+    rows: &[usize],
+    out: &mut [f32],
+    pool: &ThreadPool,
+    jobs: usize,
+) {
+    let jobs = jobs.max(1).min(rows.len());
+    if jobs <= 1 || rows.len() * w.cols() < POOL_MIN_MACS {
+        return masked_gemv(simd, w, x_q, x_scale, rows, out);
+    }
+
+    /// Read-only views shared with pool workers. Workers only READ
+    /// through these pointers and return results over the channel.
+    struct RawView {
+        w: *const QuantMatrix,
+        x: *const i8,
+        x_len: usize,
+        rows: *const usize,
+        rows_len: usize,
+    }
+    // SAFETY: the dispatching call blocks on the result channel until
+    // every job has replied (or dropped its sender), so the borrows
+    // behind these pointers outlive all reads; workers never write.
+    unsafe impl Send for RawView {}
+
+    let chunk = rows.len().div_ceil(jobs);
+    let n_jobs = rows.len().div_ceil(chunk);
+    let (tx, rx) = mpsc::channel::<(usize, Vec<f32>)>();
+    for ji in 0..n_jobs {
+        let start = ji * chunk;
+        let end = (start + chunk).min(rows.len());
+        let view = RawView {
+            w,
+            x: x_q.as_ptr(),
+            x_len: x_q.len(),
+            rows: rows.as_ptr(),
+            rows_len: rows.len(),
+        };
+        let tx = tx.clone();
+        pool.execute(move || {
+            // SAFETY: see the `unsafe impl Send for RawView` above —
+            // the dispatching call blocks until this job replies, so
+            // the views are live, and this job only reads them.
+            let (w, x, rows) = unsafe {
+                (
+                    &*view.w,
+                    std::slice::from_raw_parts(view.x, view.x_len),
+                    std::slice::from_raw_parts(view.rows, view.rows_len),
+                )
+            };
+            let mut vals = Vec::with_capacity(end - start);
+            for &j in &rows[start..end] {
+                vals.push(
+                    dot_q8(simd, w.row(j), x) as f32 * w.scale(j) * x_scale,
+                );
+            }
+            let _ = tx.send((start, vals));
+        });
+    }
+    drop(tx);
+    let mut received = 0usize;
+    while received < n_jobs {
+        match rx.recv() {
+            Ok((start, vals)) => {
+                for (i, v) in vals.into_iter().enumerate() {
+                    out[rows[start + i]] = v;
+                }
+                received += 1;
+            }
+            Err(_) => {
+                // a worker died mid-call (poisoned pool): recompute the
+                // whole call sequentially — correctness over speed
+                masked_gemv(simd, w, x_q, x_scale, rows, out);
+                return;
+            }
+        }
+    }
+}
+
+/// Numerically stable SiLU (x · sigmoid(x)); plain f32 scalar math so
+/// every path computes activations identically.
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// One masked FFN block over quantized weights:
+/// `y += Σ_{j ∈ rows} silu(gate_j)·up_j · down[j, :]`, where
+/// `up_j = dot(up.row(j), x)·scales` and likewise for `gate_j`.
+/// Only the listed unit rows of `up`, `gate`, AND `down` are loaded.
+/// When `acts` is provided, the dequantized per-unit activation
+/// `silu(gate_j)·up_j` is written to `acts[j]` (the GLASS importance
+/// tap). Returns the number of unit rows visited.
+#[allow(clippy::too_many_arguments)]
+pub fn ffn_forward_masked(
+    simd: Simd,
+    up: &QuantMatrix,
+    gate: &QuantMatrix,
+    down: &QuantMatrix,
+    x_q: &[i8],
+    x_scale: f32,
+    rows: &[usize],
+    y: &mut [f32],
+    mut acts: Option<&mut [f32]>,
+) -> usize {
+    for &j in rows {
+        let up_j = dot_q8(simd, up.row(j), x_q) as f32 * up.scale(j) * x_scale;
+        let gate_j =
+            dot_q8(simd, gate.row(j), x_q) as f32 * gate.scale(j) * x_scale;
+        let a = silu(gate_j) * up_j;
+        if let Some(acts) = acts.as_deref_mut() {
+            acts[j] = a;
+        }
+        let ds = down.scale(j);
+        let drow = down.row(j);
+        let n = y.len().min(drow.len());
+        for c in 0..n {
+            y[c] += a * (drow[c] as f32 * ds);
+        }
+    }
+    rows.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic generator (SplitMix64) for test matrices.
+    struct Gen(u64);
+    impl Gen {
+        fn next_u64(&mut self) -> u64 {
+            self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = self.0;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+        fn f32(&mut self) -> f32 {
+            (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32 * 2.0 - 1.0
+        }
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_row_scale() {
+        // Property: per-row symmetric quantization reconstructs every
+        // element to within half a quantization step (scale/2).
+        let mut g = Gen(7);
+        for case in 0..50 {
+            let cols = 1 + (g.next_u64() as usize % 96);
+            let amp = 0.01 + (case as f32) * 0.37;
+            let src: Vec<f32> =
+                (0..cols).map(|_| g.f32() * amp).collect();
+            let (q, scale) = quantize_row(&src);
+            assert!(scale > 0.0);
+            for (i, &x) in src.iter().enumerate() {
+                let deq = q[i] as f32 * scale;
+                assert!(
+                    (deq - x).abs() <= scale * 0.5 + 1e-9,
+                    "case {case} col {i}: |{deq} - {x}| > {}",
+                    scale * 0.5
+                );
+            }
+        }
+        // all-zero rows stay representable (scale 1.0, zero codes)
+        let (q, s) = quantize_row(&[0.0; 8]);
+        assert_eq!(s, 1.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn masked_equals_dense_then_zero_on_every_simd_path() {
+        // masked GEMV == dense GEMV with non-kept rows zeroed, and all
+        // runnable SIMD paths agree with the scalar one bit for bit.
+        let mut g = Gen(11);
+        for trial in 0..8 {
+            let rows = 8 + (g.next_u64() as usize % 120);
+            let cols = 1 + (g.next_u64() as usize % 200);
+            let src: Vec<f32> =
+                (0..rows * cols).map(|_| g.f32()).collect();
+            let w = QuantMatrix::from_rows(rows, cols, &src).unwrap();
+            let x: Vec<f32> = (0..cols).map(|_| g.f32()).collect();
+            let (xq, xs) = quantize_row(&x);
+            let kept: Vec<usize> =
+                (0..rows).filter(|j| j % 3 != trial % 3).collect();
+
+            let mut dense_ref = vec![0.0f32; rows];
+            dense_gemv(Simd::Scalar, &w, &xq, xs, &mut dense_ref);
+            let mut expect = dense_ref.clone();
+            for j in 0..rows {
+                if !kept.contains(&j) {
+                    expect[j] = 0.0;
+                }
+            }
+            for simd in available() {
+                let mut out = vec![0.0f32; rows];
+                masked_gemv(simd, &w, &xq, xs, &kept, &mut out);
+                assert_eq!(
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "path {} diverged (trial {trial})",
+                    simd.label()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_gemv_bit_identical_to_sequential() {
+        let mut g = Gen(23);
+        let (rows, cols) = (512, 256); // above POOL_MIN_MACS
+        let src: Vec<f32> = (0..rows * cols).map(|_| g.f32()).collect();
+        let w = QuantMatrix::from_rows(rows, cols, &src).unwrap();
+        let x: Vec<f32> = (0..cols).map(|_| g.f32()).collect();
+        let (xq, xs) = quantize_row(&x);
+        let kept: Vec<usize> = (0..rows).filter(|j| j % 2 == 0).collect();
+        let simd = detect();
+        let mut seq = vec![0.0f32; rows];
+        masked_gemv(simd, &w, &xq, xs, &kept, &mut seq);
+        let pool = ThreadPool::new(4);
+        let mut par = vec![0.0f32; rows];
+        masked_gemv_pooled(simd, &w, &xq, xs, &kept, &mut par, &pool, 4);
+        assert_eq!(
+            seq.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            par.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn transpose_construction_matches_direct() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let t = QuantMatrix::from_columns(2, 3, &src).unwrap(); // 3x2
+        let direct =
+            QuantMatrix::from_rows(3, 2, &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0])
+                .unwrap();
+        for r in 0..3 {
+            assert_eq!(t.row(r), direct.row(r));
+            assert_eq!(t.scale(r).to_bits(), direct.scale(r).to_bits());
+        }
+    }
+
+    #[test]
+    fn poisoned_row_propagates_nan_only_when_read() {
+        let src = [0.5f32, -0.25, 0.125, 1.0, 0.75, -0.5];
+        let mut w = QuantMatrix::from_rows(3, 2, &src).unwrap();
+        w.poison_row(1);
+        let (xq, xs) = quantize_row(&[1.0, 1.0]);
+        let simd = detect();
+        let mut out = vec![0.0f32; 3];
+        masked_gemv(simd, &w, &xq, xs, &[0, 2], &mut out);
+        assert!(out.iter().all(|v| v.is_finite()), "skipped row was read");
+        masked_gemv(simd, &w, &xq, xs, &[0, 1, 2], &mut out);
+        assert!(out[1].is_nan(), "poisoned row read must surface NaN");
+    }
+
+    #[test]
+    fn ffn_forward_skips_unlisted_units() {
+        let mut g = Gen(41);
+        let (m, d) = (16, 8);
+        let mk = |g: &mut Gen| {
+            let v: Vec<f32> = (0..m * d).map(|_| g.f32()).collect();
+            QuantMatrix::from_rows(m, d, &v).unwrap()
+        };
+        let (up, gate, down) = (mk(&mut g), mk(&mut g), mk(&mut g));
+        let x: Vec<f32> = (0..d).map(|_| g.f32()).collect();
+        let (xq, xs) = quantize_row(&x);
+        let kept: Vec<usize> = (0..m / 2).collect();
+        // poison every non-kept unit in all three projections
+        let mut up_p = up.clone();
+        let mut gate_p = gate.clone();
+        let mut down_p = down.clone();
+        for j in m / 2..m {
+            up_p.poison_row(j);
+            gate_p.poison_row(j);
+            down_p.poison_row(j);
+        }
+        let simd = detect();
+        let mut y_clean = vec![0.0f32; d];
+        let mut acts = vec![0.0f32; m];
+        ffn_forward_masked(
+            simd, &up, &gate, &down, &xq, xs, &kept, &mut y_clean,
+            Some(&mut acts),
+        );
+        let mut y_poison = vec![0.0f32; d];
+        let visited = ffn_forward_masked(
+            simd, &up_p, &gate_p, &down_p, &xq, xs, &kept, &mut y_poison,
+            None,
+        );
+        assert_eq!(visited, kept.len());
+        assert_eq!(
+            y_clean.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y_poison.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "poisoned masked-out units leaked into the FFN output"
+        );
+        assert!(acts[..m / 2].iter().any(|&a| a != 0.0));
+        assert!(acts[m / 2..].iter().all(|&a| a == 0.0));
+    }
+}

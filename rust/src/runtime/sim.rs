@@ -74,8 +74,9 @@ fn hmix(vals: &[u64]) -> u64 {
     h
 }
 
-/// Deterministic uniform value in [0, 1).
-fn h01(vals: &[u64]) -> f64 {
+/// Deterministic uniform value in [0, 1). Shared with the `cpu_q8`
+/// backend so both derive jitter from the same hash family.
+pub(crate) fn h01(vals: &[u64]) -> f64 {
     (hmix(vals) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
 }
 
@@ -103,7 +104,7 @@ fn drift_sign(j: usize) -> f64 {
     }
 }
 
-fn l2_normalize(v: &mut [f64]) {
+pub(crate) fn l2_normalize(v: &mut [f64]) {
     let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
     if n > 0.0 {
         for x in v.iter_mut() {
@@ -112,13 +113,16 @@ fn l2_normalize(v: &mut [f64]) {
     }
 }
 
-/// The simulator backend; cheap, immutable, thread-safe.
+/// The simulator backend; cheap, immutable, thread-safe. Fields are
+/// crate-visible because the `cpu_q8` backend reuses the closed-form
+/// head (logits strength, KV rows) while replacing the FFN/importance
+/// compute with real quantized GEMVs.
 pub struct SimBackend {
-    spec: ModelSpec,
+    pub(crate) spec: ModelSpec,
     /// gain[j] = GAIN·RATIO^j.
-    gain: Vec<f64>,
+    pub(crate) gain: Vec<f64>,
     /// Decode-time unit weights gain[j]·(1 + Δ·sign(j)) and their sum.
-    w_dec: Vec<f64>,
+    pub(crate) w_dec: Vec<f64>,
     w_dec_sum: f64,
 }
 
@@ -142,7 +146,7 @@ impl SimBackend {
 
     /// FFN strength of a mask: product over layers of kept decode-weight
     /// mass fraction. 1.0 for dense, → 0 as important units are dropped.
-    fn strength(&self, kept: &[Vec<usize>]) -> f64 {
+    pub(crate) fn strength(&self, kept: &[Vec<usize>]) -> f64 {
         let mut s = 1.0;
         for layer in kept {
             let mass: f64 = layer.iter().map(|&j| self.w_dec[j]).sum();
@@ -154,7 +158,7 @@ impl SimBackend {
     /// Next-token logits after consuming `t` under FFN strength `s`.
     /// Shared by prefill, step decode, fused generate and score, so all
     /// paths agree bitwise.
-    fn step_logits(&self, t: i32, s: f64) -> Vec<f32> {
+    pub(crate) fn step_logits(&self, t: i32, s: f64) -> Vec<f32> {
         let v = self.spec.vocab;
         let mut row: Vec<f64> = (0..v)
             .map(|tok| NOISE * h01(&[SALT_NOISE, t as u64, tok as u64]))
@@ -200,7 +204,7 @@ impl SimBackend {
     }
 
     /// Write the KV row for (token t, position p) into [L,B,H,T,Dh] data.
-    fn write_kv_row(
+    pub(crate) fn write_kv_row(
         &self,
         k: &mut [f32],
         v: &mut [f32],
@@ -226,7 +230,11 @@ impl SimBackend {
     }
 
     /// Kept unit ids per layer from one slot's [L, m] mask values.
-    fn kept_from_mask(&self, mask: &TensorF, slot: usize) -> Vec<Vec<usize>> {
+    pub(crate) fn kept_from_mask(
+        &self,
+        mask: &TensorF,
+        slot: usize,
+    ) -> Vec<Vec<usize>> {
         let (l_n, m) = (self.spec.n_layers, self.spec.ffn_m);
         (0..l_n)
             .map(|l| {
@@ -238,7 +246,11 @@ impl SimBackend {
             .collect()
     }
 
-    fn kept_from_idx(&self, idx: &TensorI, slot: usize) -> Vec<Vec<usize>> {
+    pub(crate) fn kept_from_idx(
+        &self,
+        idx: &TensorI,
+        slot: usize,
+    ) -> Vec<Vec<usize>> {
         let l_n = self.spec.n_layers;
         let k = idx.shape[2];
         (0..l_n)
@@ -569,7 +581,41 @@ impl SimBackend {
     }
 }
 
-fn parse_exe_name(name: &str) -> Option<(&str, usize)> {
+impl super::ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn capabilities(&self) -> super::Capabilities {
+        super::Capabilities {
+            native_masked_ffn: false,
+            chunked_prefill: true,
+            needs_warmup: false,
+            deterministic: true,
+        }
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str) -> Result<()> {
+        // nothing to compile; validating the name is the whole warm-up
+        manifest.exe(name).map(|_| ())
+    }
+
+    fn call(
+        &self,
+        _manifest: &Manifest,
+        spec: &ExeSpec,
+        operands: &[Value],
+    ) -> Result<Vec<Value>> {
+        let _t = crate::util::timer::global().start("runtime.execute");
+        SimBackend::call(self, &spec.name, operands)
+    }
+
+    fn prior(&self, name: &str) -> Option<Result<Vec<Vec<f32>>>> {
+        Some(SimBackend::prior(self, name))
+    }
+}
+
+pub(crate) fn parse_exe_name(name: &str) -> Option<(&str, usize)> {
     let (kind, b) = name.rsplit_once("_b")?;
     Some((kind, b.parse().ok()?))
 }

@@ -113,7 +113,6 @@ use anyhow::{bail, Result};
 use crate::engine::chunked::ChunkedPrefill;
 use crate::engine::prefix_cache::{
     seed_to_prefill_result, CacheTelemetry, PrefixCache, PrefixHit,
-    DEFAULT_CACHE_BYTES,
 };
 use crate::engine::prefix_store;
 use crate::engine::session::{DecodeSession, FinishReason};
@@ -377,57 +376,7 @@ pub struct Batcher {
     pub prefill_tokens_saved: u64,
 }
 
-/// Construction knobs for [`Batcher::with_options`].
-///
-/// **Deprecation note:** when standing up a whole server, build a
-/// [`crate::config::ServerConfig`] instead —
-/// [`crate::server::Server::start_with_config`] derives each shard's
-/// `BatcherOptions` from it. This struct remains the direct-embedding
-/// API for code that drives a [`Batcher`] without the server.
-#[derive(Debug, Clone)]
-pub struct BatcherOptions {
-    /// Decode slot count (must fit a compiled `decode_b{W}`).
-    pub batch_width: usize,
-    /// Shared-prefix cache byte budget; 0 disables the cache.
-    pub cache_bytes: usize,
-    /// Prefill chunks advanced per decode step (clamped to ≥ 1).
-    pub chunk_budget: usize,
-    /// Defer same-prefix admissions behind an in-flight publisher.
-    pub group_prefixes: bool,
-    /// Persistent snapshot file for this shard's prefix cache
-    /// (`--cache-dir`): warm-loaded at construction, written by
-    /// [`Batcher::snapshot_hot`] after the run loop drains. None (the
-    /// default) disables persistence.
-    pub snapshot_path: Option<PathBuf>,
-}
-
-impl BatcherOptions {
-    /// Defaults for everything except the batch width.
-    pub fn new(batch_width: usize) -> BatcherOptions {
-        BatcherOptions {
-            batch_width,
-            cache_bytes: DEFAULT_CACHE_BYTES,
-            chunk_budget: 1,
-            group_prefixes: true,
-            snapshot_path: None,
-        }
-    }
-
-    /// Disable the shared-prefix cache (and with it, deferral).
-    pub fn without_cache(mut self) -> BatcherOptions {
-        self.cache_bytes = 0;
-        self
-    }
-
-    /// Persist the prefix cache to (and warm-start it from) this file.
-    pub fn with_snapshot_path(
-        mut self,
-        path: Option<PathBuf>,
-    ) -> BatcherOptions {
-        self.snapshot_path = path;
-        self
-    }
-}
+pub use crate::config::compat::BatcherOptions;
 
 /// One screened admission: the request plus its resolved strategy,
 /// prior key, and (single) tokenization.
@@ -486,9 +435,27 @@ pub fn resolve_strategy(
 
 impl Batcher {
     /// Build the batcher with default options (shared-prefix cache on
-    /// at [`DEFAULT_CACHE_BYTES`], prefix grouping on, chunk budget 1).
+    /// at [`crate::engine::prefix_cache::DEFAULT_CACHE_BYTES`], prefix
+    /// grouping on, chunk budget 1).
     pub fn new(engine: Engine, batch_width: usize) -> Result<Batcher> {
         Batcher::with_options(engine, BatcherOptions::new(batch_width))
+    }
+
+    /// Build one shard's batcher from a
+    /// [`crate::config::ServerConfig`]: the total cache budget is
+    /// split evenly across shards and, when persistence is on, the
+    /// snapshot file is the shard-indexed `.gpxs` under `cache_dir`
+    /// (route_shard is deterministic across restarts, so shard i's
+    /// file always warms the shard that will serve its prefixes).
+    pub fn from_config(
+        engine: Engine,
+        cfg: &crate::config::ServerConfig,
+        shard_id: usize,
+    ) -> Result<Batcher> {
+        Batcher::with_options(
+            engine,
+            BatcherOptions::for_shard(cfg, shard_id),
+        )
     }
 
     /// Build the batcher: pick the decode width, load the priors, and

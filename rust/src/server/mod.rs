@@ -116,7 +116,7 @@
 //!   ids, so `lookup`/`peek_longest`/`insert` walk O(prompt-length)
 //!   edges regardless of how many entries are resident — hundreds of
 //!   cached prefixes cost a lookup no more than one does.
-//! * **Cache persistence** (`--cache-dir`, [`ServerOptions::cache_dir`]):
+//! * **Cache persistence** (`--cache-dir`, [`ServerConfig::cache_dir`]):
 //!   when set, [`Server::stop`] snapshots each shard's resident prefix
 //!   entries to `<cache-dir>/prefix-shard-<i>.gpxs` *after* its engine
 //!   loop drains (format documented in
@@ -152,8 +152,10 @@
 //! All construction knobs live in one typed builder —
 //! [`crate::config::ServerConfig`] — constructed once from
 //! CLI/TOML/[`crate::config::RunConfig`] and handed down
-//! ([`Server::start_with_config`]). [`ServerOptions`] remains as a
-//! thin compatibility view.
+//! ([`Server::start_with_config`]). The legacy [`ServerOptions`] /
+//! [`batcher::BatcherOptions`] structs survive only as thin
+//! compatibility views in [`crate::config::compat`], re-exported at
+//! their historical paths.
 //!
 //! * `shards` (`glass serve --shards N`) — serving shard count (engine
 //!   threads AND reactor threads); default 1 preserves the unsharded
@@ -239,23 +241,20 @@ pub mod scheduler;
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::config::ServerConfig;
-use crate::engine::prefix_cache::{
-    CacheStatsSnapshot, CacheTelemetry, DEFAULT_CACHE_BYTES,
-};
+use crate::engine::prefix_cache::{CacheStatsSnapshot, CacheTelemetry};
 use crate::engine::Engine;
 use crate::info;
 use crate::util::json::Json;
 
-use batcher::{Batcher, BatcherOptions, ShardGauges};
+use batcher::{Batcher, ShardGauges};
 use poller::{
     listener_fd, new_poller, stream_fd, Interest, PollEvent, Poller,
     Waker, WAKE_TOKEN,
@@ -452,74 +451,7 @@ pub fn route_shard(prompt: &str, n_shards: usize, window: usize) -> usize {
     (h % n_shards as u64) as usize
 }
 
-/// Construction knobs for [`Server::start_with`].
-///
-/// **Deprecation note:** new code should build a
-/// [`crate::config::ServerConfig`] (the unified builder covering these
-/// knobs plus chunk budget and backpressure watermarks) and call
-/// [`Server::start_with_config`]; `ServerOptions` remains as a thin
-/// compatibility view and converts losslessly via `From`.
-#[derive(Debug, Clone)]
-pub struct ServerOptions {
-    /// Decode slot count per shard (must fit a compiled `decode_b{W}`).
-    pub batch_width: usize,
-    /// Total shared-prefix cache byte budget, split evenly across
-    /// shards; 0 disables the cache.
-    pub cache_bytes: usize,
-    /// Cluster same-prefix requests at each shard's scheduler and defer
-    /// same-prefix admissions behind an in-flight publisher.
-    pub group_prefixes: bool,
-    /// Serving shard count (engine + reactor threads); 1 = unsharded.
-    pub shards: usize,
-    /// Largest accepted wire frame; bounds the per-connection read
-    /// buffer. Oversized frames are a protocol error that closes the
-    /// connection.
-    pub max_frame_bytes: usize,
-    /// Outbound buffer cap per connection; a consumer that falls this
-    /// far behind is disconnected.
-    pub conn_buffer_bytes: usize,
-    /// Directory for persistent prefix-cache snapshots (`--cache-dir`):
-    /// each shard warm-starts from `prefix-shard-<i>.gpxs` here and
-    /// [`Server::stop`] rewrites the files after drain. None (default)
-    /// disables persistence.
-    pub cache_dir: Option<PathBuf>,
-}
-
-impl ServerOptions {
-    /// Defaults for everything except the batch width.
-    pub fn new(batch_width: usize) -> ServerOptions {
-        ServerOptions {
-            batch_width,
-            cache_bytes: DEFAULT_CACHE_BYTES,
-            group_prefixes: true,
-            shards: 1,
-            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
-            conn_buffer_bytes: DEFAULT_CONN_BUFFER_BYTES,
-            cache_dir: None,
-        }
-    }
-
-    /// Builder-style shard count override.
-    pub fn with_shards(mut self, shards: usize) -> ServerOptions {
-        self.shards = shards;
-        self
-    }
-
-    /// Builder-style frame-size cap override.
-    pub fn with_max_frame_bytes(mut self, n: usize) -> ServerOptions {
-        self.max_frame_bytes = n;
-        self
-    }
-
-    /// Builder-style persistent-cache directory override.
-    pub fn with_cache_dir(
-        mut self,
-        dir: Option<PathBuf>,
-    ) -> ServerOptions {
-        self.cache_dir = dir;
-        self
-    }
-}
+pub use crate::config::compat::ServerOptions;
 
 /// One serving shard's handles, shared between the engine thread that
 /// owns the batcher and the reactor threads that submit work, push
@@ -609,12 +541,27 @@ impl Server {
 
     /// Start serving from one unified [`ServerConfig`] (the config
     /// builder covering shards, batch width, cache, chunk budget,
-    /// frame/buffer caps, and backpressure watermarks). Returns once
-    /// the listener is bound; serving continues on background threads.
+    /// frame/buffer caps, backpressure watermarks, and the expected
+    /// execution backend). Returns once the listener is bound; serving
+    /// continues on background threads.
     pub fn start_with_config(
         engine: Engine,
         cfg: &ServerConfig,
     ) -> Result<Server> {
+        // fail fast on a backend mismatch: the engine is built before
+        // the server, so a concrete `cfg.backend` is an expectation to
+        // check, not a knob to apply
+        crate::runtime::validate_backend_name(&cfg.backend)?;
+        if cfg.backend != "auto"
+            && cfg.backend != engine.rt.backend_name()
+        {
+            bail!(
+                "server config requests backend '{}' but the engine \
+                 was loaded with '{}'",
+                cfg.backend,
+                engine.rt.backend_name()
+            );
+        }
         let addr = cfg.bind.as_str();
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
@@ -622,8 +569,8 @@ impl Server {
         let local = listener.local_addr()?.to_string();
 
         let n_shards = cfg.shards.max(1);
-        // split the cache budget evenly; with one shard this is the
-        // whole budget (bit-identical to the unsharded server)
+        // the per-shard cache split lives in BatcherOptions::for_shard;
+        // recompute it here only for the prefix-grouping byte window
         let shard_cache_bytes = cfg.cache_bytes / n_shards;
         let prefill_len = engine.spec().prefill_len;
 
@@ -634,24 +581,8 @@ impl Server {
         let mut batchers = Vec::with_capacity(n_shards);
         let mut shards = Vec::with_capacity(n_shards);
         for shard_id in 0..n_shards {
-            // per-shard persistent snapshot: route_shard is
-            // deterministic across restarts, so shard i's file always
-            // warms the shard that will serve its prefixes
-            let snapshot = cfg.cache_dir.as_deref().map(|dir| {
-                crate::engine::prefix_store::snapshot_path(
-                    dir, shard_id,
-                )
-            });
-            let engine_loop = Batcher::with_options(
-                engine.clone(),
-                BatcherOptions {
-                    batch_width: cfg.batch_width,
-                    cache_bytes: shard_cache_bytes,
-                    chunk_budget: cfg.chunk_budget,
-                    group_prefixes: cfg.group_prefixes,
-                    snapshot_path: snapshot,
-                },
-            )?;
+            let engine_loop =
+                Batcher::from_config(engine.clone(), cfg, shard_id)?;
             let group_bytes =
                 if cfg.group_prefixes && shard_cache_bytes > 0 {
                     // one prefill frame of shared prompt bytes ≈ one
@@ -1756,17 +1687,6 @@ mod tests {
             route_shard(&((b'a' + i) as char).to_string(), 4, 32) == a
         });
         assert!(!same, "window-clamped hash ignored short-prompt bytes");
-    }
-
-    #[test]
-    fn options_default_to_one_shard_with_bounded_buffers() {
-        let o = ServerOptions::new(4);
-        assert_eq!(o.shards, 1, "default must preserve the unsharded server");
-        assert_eq!(o.max_frame_bytes, DEFAULT_MAX_FRAME_BYTES);
-        assert_eq!(o.conn_buffer_bytes, DEFAULT_CONN_BUFFER_BYTES);
-        let o = o.with_shards(4).with_max_frame_bytes(4096);
-        assert_eq!(o.shards, 4);
-        assert_eq!(o.max_frame_bytes, 4096);
     }
 
     #[test]

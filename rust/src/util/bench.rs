@@ -187,6 +187,15 @@ const FLOOR_KEYS: &[&str] = &[
     // a persisted snapshot — losing them means restart persistence
     // stopped working (snapshot not written, not loaded, or not hit)
     "warm_start_hits",
+    // quantized-GEMV rows: dense cpu-q8 FFN decode throughput at
+    // LLM-ish dims (conservative floor — machine-dependent but the
+    // baseline sits far below any real host), and the measured
+    // density-0.3 speedup ratio (machine-INDEPENDENT: both sides of
+    // the ratio run on the same host, so a shrinking ratio means the
+    // masked GEMV stopped skipping row traffic — THE acceptance
+    // observable for GLASS masks turning into real FLOP savings)
+    "q8_toks_per_s",
+    "q8_sparse_speedup_x",
 ];
 
 /// Baseline keys holding latency ceilings (milliseconds): the current
@@ -565,6 +574,49 @@ mod tests {
             ("warm_start_hits", 6.0),
         ]);
         assert!(check_regression(&warm, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_enforces_q8_sparse_speedup_floor() {
+        // the quantized-backend rows: dense throughput floors like any
+        // counter, and the density-0.3 speedup ratio is the machine-
+        // independent proof that masked rows actually skip work — a
+        // run where sparsity stops paying must fail
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("q8_toks_per_s", 50.0),
+            ("q8_sparse_speedup_x", 1.8),
+        ]);
+        let no_speedup = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("q8_toks_per_s", 120.0),
+            ("q8_sparse_speedup_x", 1.05),
+        ]);
+        let r = check_regression(&no_speedup, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("q8_sparse_speedup_x"),
+            "{:?}",
+            r.failures
+        );
+        let slow_dense = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("q8_toks_per_s", 10.0),
+            ("q8_sparse_speedup_x", 2.5),
+        ]);
+        let r = check_regression(&slow_dense, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("q8_toks_per_s"),
+            "{:?}",
+            r.failures
+        );
+        let fine = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("q8_toks_per_s", 80.0),
+            ("q8_sparse_speedup_x", 2.4),
+        ]);
+        assert!(check_regression(&fine, &base, 0.15).passed());
     }
 
     #[test]

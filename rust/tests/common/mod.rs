@@ -2,9 +2,11 @@
 //!
 //! When an artifact bundle is available (GLASS_ARTIFACTS env var, or an
 //! `artifacts/` directory with a manifest), the tests exercise the real
-//! AOT executables. Otherwise they run on the deterministic simulator
-//! backend (`Engine::synthetic`), which implements the same executable
-//! contract — so the suite is green offline and in CI.
+//! AOT executables. Otherwise they run on a synthetic engine — by
+//! default the deterministic simulator backend, or whatever
+//! GLASS_TEST_BACKEND names (`sim`, `cpu-q8`, ...) — every backend
+//! implements the same executable contract, so the suite is green
+//! offline and in CI, and the CI matrix re-runs it per backend.
 
 use std::path::PathBuf;
 use std::sync::{Mutex, OnceLock};
@@ -22,17 +24,25 @@ pub fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+/// Backend the suite runs on, from GLASS_TEST_BACKEND ("auto" when
+/// unset — the registry's default resolution).
+pub fn test_backend() -> String {
+    std::env::var("GLASS_TEST_BACKEND")
+        .unwrap_or_else(|_| "auto".to_string())
+}
+
 /// One engine per test binary (client setup + weight upload is ~100 ms;
 /// executables compile lazily and are cached inside).
 pub fn engine() -> Engine {
     static ENGINE: OnceLock<Mutex<Engine>> = OnceLock::new();
     ENGINE
         .get_or_init(|| {
+            let backend = test_backend();
             let engine = match artifacts_dir() {
-                Some(dir) => {
-                    Engine::load(&dir).expect("load engine from artifacts")
-                }
-                None => Engine::synthetic(),
+                Some(dir) => Engine::load_with_backend(&dir, &backend)
+                    .expect("load engine from artifacts"),
+                None => Engine::synthetic_with_backend(&backend)
+                    .expect("synthetic engine"),
             };
             Mutex::new(engine)
         })

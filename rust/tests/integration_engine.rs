@@ -224,7 +224,7 @@ fn chunked_prefill_single_frame_matches_monolithic_bitwise() {
     let chunked = engine.prefill_chunked(&prompts, 1).unwrap();
     assert_eq!(mono.lens, chunked.lens);
     let len = mono.lens[0];
-    if engine.rt.is_simulated() {
+    if engine.rt.capabilities().deterministic {
         // one backend, one arithmetic path → bit-identical
         assert_eq!(
             bits(&mono.logits.data),
@@ -280,10 +280,13 @@ fn chunk_partition_never_changes_kv_logits_or_glass_mask() {
         eprintln!("artifact bundle lacks prefill_chunk — skipping");
         return;
     }
-    if !engine.rt.is_simulated() {
+    if !engine.rt.capabilities().deterministic {
         // distinct XLA programs per partition need not be bitwise
-        // reproducible; the bit-exact property is a simulator contract
-        eprintln!("real backend — skipping bit-exact partition property");
+        // reproducible; bit-exactness is a deterministic-backend contract
+        eprintln!(
+            "nondeterministic backend — skipping bit-exact partition \
+             property"
+        );
         return;
     }
     let spec = engine.spec().clone();
@@ -385,8 +388,10 @@ fn cached_prefix_resume_is_bitwise_equal_and_mask_invariant() {
         eprintln!("artifact bundle lacks prefill_chunk — skipping");
         return;
     }
-    if !engine.rt.is_simulated() {
-        eprintln!("real backend — skipping bit-exact cache property");
+    if !engine.rt.capabilities().deterministic {
+        eprintln!(
+            "nondeterministic backend — skipping bit-exact cache property"
+        );
         return;
     }
     let spec = engine.spec().clone();

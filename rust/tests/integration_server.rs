@@ -13,12 +13,13 @@ mod common;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+use glass::config::ServerConfig;
 use glass::engine::prefix_cache::CacheMode;
-use glass::server::batcher::{Batcher, BatcherOptions};
+use glass::server::batcher::Batcher;
 use glass::server::client::{request, Client};
 use glass::server::protocol::{Event, Request, Response};
 use glass::server::scheduler::{Control, Pending, Scheduler};
-use glass::server::{Server, ServerOptions};
+use glass::server::Server;
 
 /// Shard count for the generic TCP tests (the CI matrix sets this).
 fn test_shards() -> usize {
@@ -52,9 +53,10 @@ fn start_server() -> Server {
 
 fn start_server_sharded(shards: usize) -> Server {
     let engine = common::engine();
-    let opts = ServerOptions::new(4).with_shards(shards);
-    Server::start_with(engine, "127.0.0.1:0", opts)
-        .expect("start server")
+    let cfg = ServerConfig::new(4)
+        .with_bind("127.0.0.1:0")
+        .with_shards(shards);
+    Server::start_with_config(engine, &cfg).expect("start server")
 }
 
 fn pending(
@@ -563,9 +565,8 @@ fn v2_graceful_shutdown_drains_in_flight_and_fails_queued_retryably() {
     // in-flight session to its natural done and fail the queued ones
     // with RETRYABLE error frames (they were never admitted).
     let engine = common::engine();
-    let opts = ServerOptions::new(1);
-    let server =
-        Server::start_with(engine, "127.0.0.1:0", opts).unwrap();
+    let cfg = ServerConfig::new(1).with_bind("127.0.0.1:0");
+    let server = Server::start_with_config(engine, &cfg).unwrap();
     let mut c = Client::connect_v2(&server.addr).unwrap();
     for (id, prompt) in [
         (1u64, "once there was a red fox"),
@@ -644,9 +645,10 @@ fn oversized_frame_is_rejected_and_connection_closed() {
     // memory without limit
     use std::io::{BufRead, BufReader, Write};
     let engine = common::engine();
-    let opts = ServerOptions::new(4).with_max_frame_bytes(1024);
-    let server =
-        Server::start_with(engine, "127.0.0.1:0", opts).unwrap();
+    let cfg = ServerConfig::new(4)
+        .with_bind("127.0.0.1:0")
+        .with_max_frame_bytes(1024);
+    let server = Server::start_with_config(engine, &cfg).unwrap();
 
     // case 1: a complete line over the cap
     let mut stream =
@@ -1282,9 +1284,10 @@ fn shared_prefix_hit_is_bit_identical_to_cold_and_reports_savings() {
     let warm = serve_one(&mut on, pending(2, &p2, "i-glass", 8, 0));
 
     // cache OFF: p2 served cold by a fresh batcher
-    let mut off = Batcher::with_options(
+    let mut off = Batcher::from_config(
         engine.clone(),
-        BatcherOptions::new(4).without_cache(),
+        &ServerConfig::new(4).with_cache_bytes(0),
+        0,
     )
     .unwrap();
     assert!(!off.cache_enabled());
@@ -1534,11 +1537,11 @@ fn restart_with_cache_dir_serves_warm_with_zero_prefill() {
     let _ = std::fs::remove_dir_all(&dir);
     let prompt = "once there was a red fox";
     let first = {
-        let opts =
-            ServerOptions::new(4).with_cache_dir(Some(dir.clone()));
+        let cfg = ServerConfig::new(4)
+            .with_bind("127.0.0.1:0")
+            .with_cache_dir(Some(dir.clone()));
         let server =
-            Server::start_with(common::engine(), "127.0.0.1:0", opts)
-                .unwrap();
+            Server::start_with_config(common::engine(), &cfg).unwrap();
         let mut c = connect(&server.addr);
         let r = c.call(request(prompt, "i-glass", 0.5)).unwrap();
         assert!(r.error.is_none(), "{:?}", r.error);
@@ -1551,10 +1554,11 @@ fn restart_with_cache_dir_serves_warm_with_zero_prefill() {
         "stop() must write the shard snapshot into the cache dir"
     );
 
-    let opts = ServerOptions::new(4).with_cache_dir(Some(dir.clone()));
+    let cfg = ServerConfig::new(4)
+        .with_bind("127.0.0.1:0")
+        .with_cache_dir(Some(dir.clone()));
     let server =
-        Server::start_with(common::engine(), "127.0.0.1:0", opts)
-            .unwrap();
+        Server::start_with_config(common::engine(), &cfg).unwrap();
     let mut c = connect(&server.addr);
     let warm = c.call(request(prompt, "i-glass", 0.5)).unwrap();
     assert!(warm.error.is_none(), "{:?}", warm.error);
@@ -1591,10 +1595,11 @@ fn corrupt_snapshot_starts_cold_never_fatal() {
     std::fs::create_dir_all(&dir).unwrap();
     std::fs::write(dir.join("prefix-shard-0.gpxs"), b"not a snapshot")
         .unwrap();
-    let opts = ServerOptions::new(4).with_cache_dir(Some(dir.clone()));
-    let server =
-        Server::start_with(common::engine(), "127.0.0.1:0", opts)
-            .unwrap(); // startup must survive the bad file
+    let cfg = ServerConfig::new(4)
+        .with_bind("127.0.0.1:0")
+        .with_cache_dir(Some(dir.clone()));
+    let server = Server::start_with_config(common::engine(), &cfg)
+        .unwrap(); // startup must survive the bad file
     let mut c = connect(&server.addr);
     let prompt = "the blue owl is";
     let r = c.call(request(prompt, "i-glass", 0.5)).unwrap();
@@ -1704,13 +1709,13 @@ fn radix_cache_serves_fixed_workload_bit_identical_to_cache_off() {
     // shared-prefix pair) with the exact bits the cache-off path
     // produces — splices change cost, never content
     let serve = |cache_on: bool| -> Digest {
-        let opts = if cache_on {
-            BatcherOptions::new(4)
+        let cfg = if cache_on {
+            ServerConfig::new(4)
         } else {
-            BatcherOptions::new(4).without_cache()
+            ServerConfig::new(4).with_cache_bytes(0)
         };
         let mut batcher =
-            Batcher::with_options(common::engine(), opts).unwrap();
+            Batcher::from_config(common::engine(), &cfg, 0).unwrap();
         let sched = Scheduler::new(4, Duration::from_millis(1));
         for r in fixed_workload() {
             let conn = r.id;
@@ -2097,4 +2102,86 @@ fn stalled_consumer_is_parked_not_dropped_and_stream_is_identical() {
     assert!(again.error.is_none(), "{:?}", again.error);
     assert_eq!(again.text, reference.text);
     server.stop();
+}
+
+// --------------------------------------- cpu-q8 backend end-to-end
+
+/// A fresh engine pinned to the cpu-q8 backend (independent of
+/// GLASS_TEST_BACKEND, so these tests cover the quantized backend on
+/// every CI leg).
+fn cpu_q8_engine() -> glass::engine::Engine {
+    match common::artifacts_dir() {
+        Some(dir) => {
+            glass::engine::Engine::load_with_backend(&dir, "cpu-q8")
+                .expect("load cpu-q8 engine")
+        }
+        None => glass::engine::Engine::synthetic_with_backend("cpu-q8")
+            .expect("synthetic cpu-q8 engine"),
+    }
+}
+
+/// The quantized backend behind the full TCP serving stack: a mixed
+/// strategy workload completes without errors, and two independent
+/// server runs produce identical text/token/density outputs (the
+/// capability matrix says cpu-q8 is deterministic — hold it to that
+/// over the wire, not just at the runtime layer).
+#[test]
+fn cpu_q8_backend_serves_tcp_workload_deterministically() {
+    let serve_once = || -> Vec<(u64, String, usize, f64)> {
+        let engine = cpu_q8_engine();
+        assert_eq!(engine.rt.backend_name(), "cpu-q8");
+        let cfg = ServerConfig::new(4)
+            .with_bind("127.0.0.1:0")
+            .with_backend("cpu-q8");
+        let server = Server::start_with_config(engine, &cfg).unwrap();
+        let mut c = connect(&server.addr);
+        let mut out = Vec::new();
+        for (i, (prompt, strategy)) in [
+            ("once there was a red fox", "i-glass"),
+            ("the blue owl is", "dense"),
+            ("every morning the wolf", "a-glass"),
+            ("the grey cat is quiet and", "griffin"),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut r = request(prompt, strategy, 0.5);
+            r.id = i as u64 + 1;
+            r.max_tokens = 8;
+            let resp = c.call(r).unwrap();
+            assert!(
+                resp.error.is_none(),
+                "id {}: {:?}",
+                resp.id,
+                resp.error
+            );
+            assert!(resp.tokens >= 1, "id {} emitted nothing", resp.id);
+            out.push((resp.id, resp.text, resp.tokens, resp.density));
+        }
+        server.stop();
+        out
+    };
+    let first = serve_once();
+    let second = serve_once();
+    assert_eq!(
+        first, second,
+        "cpu-q8 serving must be deterministic across server restarts"
+    );
+}
+
+/// `ServerConfig::with_backend` is an expectation, not a knob: naming
+/// a backend the engine wasn't loaded with fails fast at startup with
+/// an error that names both sides.
+#[test]
+fn server_config_backend_mismatch_fails_fast() {
+    let engine = cpu_q8_engine();
+    let cfg = ServerConfig::new(4)
+        .with_bind("127.0.0.1:0")
+        .with_backend("sim");
+    let err = Server::start_with_config(engine, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("sim") && msg.contains("cpu-q8"),
+        "mismatch error must name both backends: {msg}"
+    );
 }
