@@ -41,7 +41,13 @@
 //! {1.0, 0.5, 0.3} over one shared int8 weight set (`q8_toks_per_s`
 //! floors the dense throughput; `q8_sparse_speedup_x` floors the
 //! density-0.3 speedup — the machine-independent proof that a GLASS
-//! mask skips real row traffic, not just mask bookkeeping).
+//! mask skips real row traffic, not just mask bookkeeping), and the
+//! overload-governor rows: three SLO-tiered burst shapes (bursty
+//! chat, shared-prefix RAG, long-form generation) against a
+//! width-limited 2-shard server with the governor off vs on
+//! (`governed_completed_requests` floors governed completions inside
+//! the ungoverned wall windows; `governed_p95_queue_ms` ceilings the
+//! interactive tier's queue wait under governance).
 //! `--backend sim|cpu-q8|pjrt` selects the engine's execution backend
 //! through the registry ("auto" when omitted).
 
@@ -58,7 +64,7 @@ use glass::glass::{build_mask, pack_indices, ImportanceMap, Strategy};
 use glass::runtime::quant;
 use glass::server::batcher::Batcher;
 use glass::server::client::Client;
-use glass::server::protocol::{Event, Request};
+use glass::server::protocol::{Event, Request, Tier};
 use glass::server::scheduler::{Control, Pending, Scheduler};
 use glass::server::{route_shard, route_window, Server};
 use glass::tensor::TensorF;
@@ -197,11 +203,14 @@ fn main() {
                     max_tokens,
                     refresh_every,
                     cache: CacheMode::On,
+                    tier: Tier::Standard,
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
                 resume_from: 0,
+                degraded: false,
+                reported_floor: usize::MAX,
             });
         }
         sched.close();
@@ -302,11 +311,14 @@ fn main() {
                     max_tokens,
                     refresh_every: 0,
                     cache: CacheMode::On,
+                    tier: Tier::Standard,
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
                 resume_from: 0,
+                degraded: false,
+                reported_floor: usize::MAX,
             });
         }
         sched.close();
@@ -377,11 +389,14 @@ fn main() {
                     max_tokens,
                     refresh_every: 0,
                     cache: CacheMode::On,
+                    tier: Tier::Standard,
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
                 resume_from: 0,
+                degraded: false,
+                reported_floor: usize::MAX,
             });
         }
         sched.close();
@@ -582,11 +597,14 @@ fn main() {
                     max_tokens,
                     refresh_every: 0,
                     cache: CacheMode::On,
+                    tier: Tier::Standard,
                 },
                 arrived: Instant::now(),
                 conn_id: i as u64,
                 stream: false,
                 resume_from: 0,
+                degraded: false,
+                reported_floor: usize::MAX,
             });
         }
         for s in &scheds {
@@ -670,6 +688,7 @@ fn main() {
                     max_tokens,
                     refresh_every: 0,
                     cache: CacheMode::On,
+                    tier: Tier::Standard,
                 })
                 .collect();
             let out = v2_client.call_many(reqs).expect("v2 workload");
@@ -729,11 +748,14 @@ fn main() {
                 max_tokens,
                 refresh_every: 0,
                 cache: CacheMode::Off,
+                tier: Tier::Standard,
             },
             arrived: Instant::now(),
             conn_id: 1,
             stream: true,
             resume_from: 0,
+            degraded: false,
+            reported_floor: usize::MAX,
         });
         // Cell counters: the sink closure stays live across the
         // mid-pass reads below, so plain `&mut` captures won't borrow
@@ -780,6 +802,148 @@ fn main() {
          park transition(s); stream completed in full after resume"
     );
     assert!(backpressure_pauses >= 1);
+
+    // -------------------- overload governor (SLO-tiered burst rows)
+    // three governed traffic shapes — a bursty chat fan-out, a
+    // shared-prefix RAG burst whose common leading bytes route every
+    // request onto ONE home shard (the work-stealing case), and
+    // batch-heavy long-form generation — each fired at a deliberately
+    // width-limited 2-shard server twice: governor off, then governor
+    // on. Every burst is ~3x the server's decode capacity with tiers
+    // cycling interactive/standard/batch. Two observables land in the
+    // CI gate: `governed_completed_requests` (FLOOR: governed
+    // completions inside the ungoverned run's own wall window, summed
+    // across scenarios — tier degradation plus hot-prefix stealing
+    // must keep buying completions under overload) and
+    // `governed_p95_queue_ms` (CEILING: p95 queue wait of the
+    // interactive tier under governance — degradation must keep
+    // shielding the latency-sensitive tier from the batch backlog).
+    let gov_burst = 12usize;
+    let long_tokens = if 64 + 2 * max_tokens <= spec.max_seq {
+        2 * max_tokens
+    } else {
+        max_tokens
+    };
+    let rag_ctx =
+        "retrieved context: the red fox keeps a den beneath the oak. ";
+    let scenarios: Vec<(&str, Vec<String>, usize)> = vec![
+        (
+            "bursty chat",
+            (0..gov_burst)
+                .map(|i| format!("chat user {i} asks about topic {i}"))
+                .collect(),
+            max_tokens,
+        ),
+        (
+            "shared-prefix RAG",
+            (0..gov_burst)
+                .map(|i| format!("{rag_ctx}question {i}"))
+                .collect(),
+            max_tokens,
+        ),
+        (
+            "long-form generation",
+            (0..gov_burst)
+                .map(|i| format!("write a long essay {}", i % 4))
+                .collect(),
+            long_tokens,
+        ),
+    ];
+    let tier_of = |i: usize| match i % 3 {
+        0 => Tier::Interactive,
+        1 => Tier::Standard,
+        _ => Tier::Batch,
+    };
+    let mut governed_completed = 0u64;
+    let mut interactive_queue_ms: Vec<f64> = Vec::new();
+    for (name, gov_prompts, toks) in &scenarios {
+        let gov_reqs = || -> Vec<Request> {
+            gov_prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Request {
+                    id: i as u64 + 1,
+                    prompt: p.clone(),
+                    strategy: "i-glass".into(),
+                    lambda: 0.5,
+                    density: 0.8,
+                    max_tokens: *toks,
+                    refresh_every: 8,
+                    cache: CacheMode::On,
+                    tier: tier_of(i),
+                })
+                .collect()
+        };
+        // per-setting: one bench row over a persistent server, then one
+        // deterministic pass recording per-request completion offsets
+        // (send-to-done latency) and queue waits
+        let mut run_setting =
+            |governor: bool| -> Vec<(u64, f64, f64)> {
+                let mut scfg = ServerConfig::new(2)
+                    .with_bind("127.0.0.1:0")
+                    .with_governor(governor);
+                scfg.shards = 2;
+                let server =
+                    Server::start_with_config(engine.clone(), &scfg)
+                        .expect("governor bench server");
+                let mut c = Client::connect_v2(&server.addr)
+                    .expect("governor bench client");
+                b.bench(
+                    &format!(
+                        "governed {name} (governor {})",
+                        if governor { "on" } else { "off" }
+                    ),
+                    (gov_burst * toks) as f64,
+                    || {
+                        let out = c
+                            .call_many(gov_reqs())
+                            .expect("governed burst");
+                        assert!(
+                            out.iter().all(|(r, _)| r.error.is_none())
+                        );
+                        out.len()
+                    },
+                );
+                let out =
+                    c.call_many(gov_reqs()).expect("governed pass");
+                let rows = out
+                    .iter()
+                    .map(|(r, d)| {
+                        (r.id, d.as_secs_f64() * 1e3, r.queue_ms)
+                    })
+                    .collect();
+                server.stop();
+                rows
+            };
+        let off = run_setting(false);
+        let t_off_ms =
+            off.iter().map(|&(_, ms, _)| ms).fold(0.0, f64::max);
+        let on = run_setting(true);
+        let within = on
+            .iter()
+            .filter(|&&(_, ms, _)| ms <= t_off_ms)
+            .count();
+        governed_completed += within as u64;
+        for &(id, _, queue_ms) in &on {
+            if matches!(
+                tier_of((id - 1) as usize),
+                Tier::Interactive
+            ) {
+                interactive_queue_ms.push(queue_ms);
+            }
+        }
+        println!(
+            "governed {name}: {within} of {gov_burst} governed \
+             completions inside the ungoverned {t_off_ms:.0} ms window"
+        );
+    }
+    let governed_p95_queue_ms = percentile(&interactive_queue_ms, 0.95);
+    println!(
+        "governor rows: {governed_completed} governed completions \
+         inside the ungoverned windows (of {}), interactive queue p95 \
+         {governed_p95_queue_ms:.1} ms",
+        gov_burst * scenarios.len()
+    );
 
     // -------------- int8 masked FFN GEMV (the cpu-q8 kernel directly)
     // The cpu-q8 backend's quantized FFN kernel timed at
@@ -940,6 +1104,18 @@ fn main() {
     doc.set(
         "cache_lookup_us_p95",
         Json::Num(cache_lookup_us_p95),
+    );
+    // overload-governor observables (see the governed scenario rows
+    // above) — the gate floors governed completions inside the
+    // ungoverned wall windows and ceilings the interactive tier's p95
+    // queue wait under governance
+    doc.set(
+        "governed_completed_requests",
+        Json::Num(governed_completed as f64),
+    );
+    doc.set(
+        "governed_p95_queue_ms",
+        Json::Num(governed_p95_queue_ms),
     );
     // quantized-kernel observables (see the q8 masked-FFN rows above) —
     // the gate floors the dense throughput like any counter and floors

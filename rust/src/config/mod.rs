@@ -93,10 +93,23 @@ pub struct RunConfig {
     /// FFN), or `"pjrt"`. Unknown names are rejected at parse time;
     /// see [`crate::runtime::BACKEND_NAMES`].
     pub backend: String,
+    /// Overload governor for `glass serve`: SLO-tiered degradation of
+    /// GLASS knobs under load plus hot-prefix work-stealing (see the
+    /// server's "Load governance" docs). Default off — disabled, the
+    /// serving stack behaves knob-for-knob like the ungoverned server.
+    pub governor: bool,
+    /// Per-tier effective-density floors `[interactive, standard,
+    /// batch]` the governor never degrades past.
+    pub governor_floors: [f64; 3],
+    /// Home-shard pressure (outstanding work / batch width) at or past
+    /// which an idle sibling shard may steal an admission.
+    pub steal_threshold: f64,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
+        // one source of truth for the governor's defaults
+        let gov = crate::server::governor::GovernorConfig::default();
         RunConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
@@ -123,6 +136,9 @@ impl Default for RunConfig {
             low_water_bytes: 0,
             cache_dir: None,
             backend: "auto".to_string(),
+            governor: gov.enabled,
+            governor_floors: gov.floors,
+            steal_threshold: gov.steal_threshold,
         }
     }
 }
@@ -214,6 +230,21 @@ impl RunConfig {
             self.backend = v.as_str()?.to_string();
             crate::runtime::validate_backend_name(&self.backend)?;
         }
+        if let Some(v) = get("governor") {
+            self.governor = v.as_bool()?;
+        }
+        if let Some(v) = get("governor_floor_interactive") {
+            self.governor_floors[0] = v.as_float()?;
+        }
+        if let Some(v) = get("governor_floor_standard") {
+            self.governor_floors[1] = v.as_float()?;
+        }
+        if let Some(v) = get("governor_floor_batch") {
+            self.governor_floors[2] = v.as_float()?;
+        }
+        if let Some(v) = get("steal_threshold") {
+            self.steal_threshold = v.as_float()?;
+        }
         Ok(())
     }
 
@@ -264,6 +295,27 @@ impl RunConfig {
             self.backend = v.to_string();
             crate::runtime::validate_backend_name(&self.backend)?;
         }
+        if let Some(v) = args.get("governor") {
+            self.governor = match v {
+                "on" => true,
+                "off" => false,
+                other => anyhow::bail!(
+                    "--governor expects on|off, got '{other}'"
+                ),
+            };
+        }
+        self.governor_floors[0] = args.get_f64(
+            "governor-floor-interactive",
+            self.governor_floors[0],
+        )?;
+        self.governor_floors[1] = args.get_f64(
+            "governor-floor-standard",
+            self.governor_floors[1],
+        )?;
+        self.governor_floors[2] = args
+            .get_f64("governor-floor-batch", self.governor_floors[2])?;
+        self.steal_threshold =
+            args.get_f64("steal-threshold", self.steal_threshold)?;
         Ok(())
     }
 }
@@ -324,12 +376,23 @@ pub struct ServerConfig {
     /// a concrete name makes `start_with_config` fail fast when the
     /// engine's backend doesn't match.
     pub backend: String,
+    /// Overload governor (SLO-tiered degradation + hot-prefix
+    /// work-stealing; see the server's "Load governance" docs).
+    /// Default off.
+    pub governor: bool,
+    /// Per-tier effective-density floors `[interactive, standard,
+    /// batch]` the governor never degrades past.
+    pub governor_floors: [f64; 3],
+    /// Home-shard pressure at or past which an idle sibling shard may
+    /// steal an admission.
+    pub steal_threshold: f64,
 }
 
 impl ServerConfig {
     /// Defaults for everything except the batch width: localhost bind,
     /// one shard, cache on, persistence off, derived watermarks.
     pub fn new(batch_width: usize) -> ServerConfig {
+        let gov = crate::server::governor::GovernorConfig::default();
         ServerConfig {
             bind: "127.0.0.1:7433".to_string(),
             shards: 1,
@@ -343,6 +406,9 @@ impl ServerConfig {
             high_water_bytes: 0,
             low_water_bytes: 0,
             backend: "auto".to_string(),
+            governor: gov.enabled,
+            governor_floors: gov.floors,
+            steal_threshold: gov.steal_threshold,
         }
     }
 
@@ -362,6 +428,9 @@ impl ServerConfig {
             high_water_bytes: run.high_water_bytes,
             low_water_bytes: run.low_water_bytes,
             backend: run.backend.clone(),
+            governor: run.governor,
+            governor_floors: run.governor_floors,
+            steal_threshold: run.steal_threshold,
         }
     }
 
@@ -418,6 +487,29 @@ impl ServerConfig {
     /// when the server starts.
     pub fn with_backend(mut self, backend: &str) -> ServerConfig {
         self.backend = backend.to_string();
+        self
+    }
+
+    /// Builder-style overload-governor toggle (default off).
+    pub fn with_governor(mut self, on: bool) -> ServerConfig {
+        self.governor = on;
+        self
+    }
+
+    /// Builder-style per-tier density-floor override
+    /// (`[interactive, standard, batch]`).
+    pub fn with_governor_floors(
+        mut self,
+        floors: [f64; 3],
+    ) -> ServerConfig {
+        self.governor_floors = floors;
+        self
+    }
+
+    /// Builder-style steal-threshold override (home-shard pressure at
+    /// which an idle sibling may steal an admission).
+    pub fn with_steal_threshold(mut self, t: f64) -> ServerConfig {
+        self.steal_threshold = t;
         self
     }
 
@@ -630,6 +722,73 @@ mod tests {
             c.apply_args(&args).is_err(),
             "unknown CLI backend is rejected at parse time"
         );
+    }
+
+    #[test]
+    fn governor_knobs_default_off_and_override() {
+        let c = RunConfig::default();
+        assert!(!c.governor, "governor is opt-in");
+        assert_eq!(c.governor_floors, [0.8, 0.5, 0.3]);
+        assert_eq!(c.steal_threshold, 2.0);
+        let mut c = RunConfig::default();
+        c.apply_toml(
+            "governor = true\ngovernor_floor_batch = 0.2\n\
+             steal_threshold = 1.5\n",
+        )
+        .unwrap();
+        assert!(c.governor);
+        assert_eq!(c.governor_floors[2], 0.2);
+        assert_eq!(c.steal_threshold, 1.5);
+        let args = Args::parse(
+            &[
+                "x",
+                "--governor",
+                "off",
+                "--governor-floor-interactive",
+                "0.9",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert!(!c.governor, "CLI overrides the config file");
+        assert_eq!(c.governor_floors[0], 0.9);
+        let args = Args::parse(
+            &["x", "--governor", "maybe"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>(),
+            &[],
+        )
+        .unwrap();
+        assert!(
+            c.apply_args(&args).is_err(),
+            "--governor takes only on|off"
+        );
+    }
+
+    #[test]
+    fn server_config_governor_builders_and_from_run() {
+        let c = ServerConfig::new(4);
+        assert!(!c.governor, "governor is opt-in");
+        let c = c
+            .with_governor(true)
+            .with_governor_floors([0.9, 0.6, 0.2])
+            .with_steal_threshold(1.25);
+        assert!(c.governor);
+        assert_eq!(c.governor_floors, [0.9, 0.6, 0.2]);
+        assert_eq!(c.steal_threshold, 1.25);
+        let run = RunConfig {
+            governor: true,
+            steal_threshold: 3.0,
+            ..RunConfig::default()
+        };
+        let c = ServerConfig::from_run(&run, 4);
+        assert!(c.governor, "governor rides along from_run");
+        assert_eq!(c.steal_threshold, 3.0);
     }
 
     #[test]

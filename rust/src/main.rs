@@ -58,8 +58,22 @@ SUBCOMMANDS:
                               (backpressure watermarks: a backlogged
                               consumer is parked past high and resumed
                               below low; 0 = derive from the buffer cap)
+                              [--governor on|off]  (overload governor:
+                              SLO-tiered GLASS degradation + hot-prefix
+                              work-stealing under load; default off)
+                              [--governor-floor-interactive F]
+                              [--governor-floor-standard F]
+                              [--governor-floor-batch F]
+                              (per-tier effective-density floors the
+                              governor never degrades below)
+                              [--steal-threshold F]  (home-shard
+                              pressure at which an idle sibling may
+                              steal an admission)
     client                    send a request [--bind ADDR] [--prompt STR]
                               [--strategy S] [--density F]
+                              [--tier interactive|standard|batch]
+                              (SLO tier for governor admission;
+                              default standard)
                               [--cache on|off|readonly] [--stats]
                               [--protocol v1|v2] (default v2)
                               [--stream]  (v2: print deltas as they
@@ -334,12 +348,20 @@ fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
                 sh.slots_prefilling,
                 sh.batch_width
             );
+            println!(
+                "         governor level {}: {} degraded admissions, \
+                 {} stolen from saturated siblings",
+                sh.governor_level, sh.degraded_requests, sh.stolen_requests
+            );
         }
         return Ok(());
     }
     let prompt = args.get_str("prompt", "once there was a red fox");
     let strategy = args.get_str("strategy", "i-glass");
     let mut req = request(&prompt, &strategy, cfg.density);
+    req.tier = glass::server::protocol::Tier::parse(
+        &args.get_str("tier", "standard"),
+    )?;
     req.cache = glass::engine::prefix_cache::CacheMode::parse(
         &args.get_str("cache", "on"),
     )?;
@@ -358,6 +380,13 @@ fn client(args: &Args, cfg: &RunConfig) -> Result<()> {
                 "tokens:  {}  prefill {:.1} ms  decode {:.1} ms  density {:.2}",
                 resp.tokens, resp.prefill_ms, resp.decode_ms, resp.density
             );
+            if resp.degraded {
+                println!(
+                    "governor: degraded under load to effective density \
+                     {:.2}",
+                    resp.effective_density
+                );
+            }
             if resp.cached_prompt_tokens > 0 {
                 println!(
                     "cache:   {} of {} prompt tokens spliced from the \
@@ -400,13 +429,21 @@ fn stream_one(
                 println!();
                 println!(
                     "tokens:  {}  prefill {:.1} ms  decode {:.1} ms  \
-                     density {:.2}  refreshes {}  finish {}",
+                     density {:.2}  refreshes {}  finish {}{}",
                     resp.tokens,
                     resp.prefill_ms,
                     resp.decode_ms,
                     resp.density,
                     resp.refreshes,
-                    resp.finish
+                    resp.finish,
+                    if resp.degraded {
+                        format!(
+                            "  (degraded to effective density {:.2})",
+                            resp.effective_density
+                        )
+                    } else {
+                        String::new()
+                    }
                 );
                 return Ok(());
             }

@@ -101,11 +101,25 @@
 //! lifts all parks so shutdown drain cannot deadlock.
 //! `backpressure_pauses` counts the parks that took effect (the
 //! bench's slow-consumer floor).
+//!
+//! # Load governance (admission-time knob rewrite)
+//!
+//! When a [`Governor`](super::governor::Governor) is attached
+//! ([`Batcher::attach_governor`]), the run loop feeds it one pressure
+//! observation per iteration (queue depth, occupancy, oldest queue
+//! age) and every admission maps its requested `density` /
+//! `refresh_every` through [`Governor::plan`](
+//! super::governor::Governor::plan) for its SLO tier **before any
+//! engine work** — the governor changes *which* knob values a request
+//! runs with, never the decode math, so a degraded request is
+//! bit-identical to the same request sent explicitly with the degraded
+//! values. The applied values surface in the terminal `done` frame as
+//! `degraded` + `effective_density`.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -124,8 +138,23 @@ use crate::glass::{
 use crate::info;
 use crate::tensor::TensorF;
 
+use super::governor::Governor;
 use super::protocol::{Event, Response};
 use super::scheduler::{Control, Pending, Scheduler};
+
+/// Poison-recovering lock on a shared prefix cache: a thread that
+/// panicked mid-operation must not wedge the shard (the cache's
+/// invariants hold at every panic point — worst case an entry's pin
+/// leaks, which only exempts it from eviction). Shared with the
+/// cross-shard steal path ([`super::steal::replicate_prefix`]).
+pub(crate) fn lock_cache(
+    cache: &Mutex<PrefixCache>,
+) -> MutexGuard<'_, PrefixCache> {
+    cache.lock().unwrap_or_else(|poisoned| {
+        crate::warn_!("prefix cache mutex poisoned; recovering");
+        poisoned.into_inner()
+    })
+}
 
 /// Live occupancy gauges for one batcher (= one serving shard),
 /// published by the [`Batcher::run`] loop and read lock-free by the
@@ -259,6 +288,8 @@ struct AdmitInfo {
     cache_hits: usize,
     /// Entries this request's own publishes evicted.
     cache_evictions: usize,
+    /// The governor rewrote this request's knobs at admission.
+    degraded: bool,
 }
 
 struct Slot {
@@ -333,8 +364,18 @@ pub struct Batcher {
     /// (old artifact bundles may not; long prompts are then rejected
     /// at admission instead of failing server startup).
     chunking: bool,
-    /// Shared-prefix cache (None = disabled, `cache_bytes: 0`).
-    cache: Option<PrefixCache>,
+    /// Shared-prefix cache (None = disabled, `cache_bytes: 0`). Behind
+    /// a mutex ONLY for the admission-time cross-shard steal path
+    /// ([`super::steal::replicate_prefix`] imports a sibling's hot
+    /// prefix through [`Batcher::cache_handle`]); the engine loop is
+    /// still the only per-token user, and every lock here is scoped to
+    /// one cache call — never held across engine or I/O work.
+    cache: Option<Arc<Mutex<PrefixCache>>>,
+    /// Overload governor (None = ungoverned) + this batcher's shard
+    /// index into it. See [`Batcher::attach_governor`].
+    governor: Option<Arc<Governor>>,
+    /// This shard's index (governor observations and counters).
+    shard_id: usize,
     /// Persistent snapshot file (`--cache-dir`); see
     /// [`Batcher::snapshot_hot`].
     snapshot_path: Option<PathBuf>,
@@ -559,7 +600,9 @@ impl Batcher {
             mask_t,
             chunk_budget: opts.chunk_budget.max(1),
             chunking,
-            cache,
+            cache: cache.map(|c| Arc::new(Mutex::new(c))),
+            governor: None,
+            shard_id: 0,
             snapshot_path: opts.snapshot_path,
             group_prefixes: opts.group_prefixes,
             telemetry,
@@ -588,6 +631,45 @@ impl Batcher {
         Arc::clone(&self.gauges)
     }
 
+    /// Handle on this shard's shared-prefix cache, for the reactor's
+    /// cross-shard steal path (`None` when the cache is disabled). Any
+    /// holder must keep each lock scoped to single cache calls.
+    pub fn cache_handle(&self) -> Option<Arc<Mutex<PrefixCache>>> {
+        self.cache.as_ref().map(Arc::clone)
+    }
+
+    /// Attach the server's overload governor: the run loop then feeds
+    /// it per-iteration pressure observations for `shard_id`, and every
+    /// admission maps its knobs through [`Governor::plan`] for its SLO
+    /// tier (see the "Load governance" module-doc section).
+    pub fn attach_governor(
+        &mut self,
+        governor: Arc<Governor>,
+        shard_id: usize,
+    ) {
+        self.governor = Some(governor);
+        self.shard_id = shard_id;
+    }
+
+    /// Feed the governor one pressure observation (no-op when
+    /// ungoverned or disabled — a switched-off governor stays a frozen
+    /// level-0 identity). Called once per run-loop iteration, so the
+    /// degradation level tracks load at decode-step granularity.
+    fn observe_governor(&self, sched: &Scheduler) {
+        if let Some(gov) =
+            self.governor.as_ref().filter(|g| g.enabled())
+        {
+            gov.observe(
+                self.shard_id,
+                sched.len(),
+                self.active(),
+                self.prefilling(),
+                self.width,
+                sched.oldest_queue_ms(),
+            );
+        }
+    }
+
     /// Publish the current slot occupancy to the shared gauges (one
     /// atomic store, so readers always see a consistent pair).
     fn publish_gauges(&self) {
@@ -598,6 +680,13 @@ impl Batcher {
     /// Is the shared-prefix cache enabled?
     pub fn cache_enabled(&self) -> bool {
         self.cache.is_some()
+    }
+
+    /// Release a pinned cache entry (no-op without a pin or a cache).
+    fn release_pin(&self, pin: Option<usize>) {
+        if let (Some(pin), Some(cache)) = (pin, self.cache.as_ref()) {
+            lock_cache(cache).release(pin);
+        }
     }
 
     /// Write the cache's resident entries to this shard's snapshot
@@ -612,7 +701,8 @@ impl Batcher {
         else {
             return;
         };
-        let entries = cache.export_hot();
+        // the guard is a temporary: dropped before the (blocking) save
+        let entries = lock_cache(cache).export_hot();
         match prefix_store::save(path, self.engine.spec(), &entries) {
             Ok(()) => info!(
                 "prefix cache snapshot: {} entries -> {}",
@@ -779,10 +869,9 @@ impl Batcher {
                 // least one frame gains nothing from waiting — only
                 // defer when the shared prefix is still UNcached (a
                 // warm burst must admit at full width, not serialize)
-                let already_cached = self
-                    .cache
-                    .as_ref()
-                    .is_some_and(|c| c.peek_longest(&item.3) >= min_share);
+                let already_cached = self.cache.as_ref().is_some_and(
+                    |c| lock_cache(c).peek_longest(&item.3) >= min_share,
+                );
                 let live_publisher = !already_cached
                     && self.slots.iter().any(|s| match s {
                         SlotState::Prefilling(st) => {
@@ -833,19 +922,45 @@ impl Batcher {
         )> = Vec::new();
         let mut short_encoded: Vec<Vec<i32>> = Vec::new();
         for (si, (p, strategy, prior_key, encoded)) in claimed {
+            let mut p = p;
+            // admission-time governance: map the requested knobs
+            // through the shard's degradation level for this request's
+            // SLO tier, ONCE (sticky across requeues, so degradation
+            // never compounds). Rewriting the request here — before
+            // any engine work — is what makes a degraded request
+            // bit-identical to one sent explicitly with these values.
+            if let Some(gov) = &self.governor {
+                if !p.degraded {
+                    let plan = gov.plan(
+                        self.shard_id,
+                        p.request.tier,
+                        p.request.density,
+                        p.request.refresh_every,
+                    );
+                    if plan.degraded {
+                        p.request.density = plan.density;
+                        p.request.refresh_every = plan.refresh_every;
+                        p.degraded = true;
+                        gov.note_degraded(self.shard_id);
+                    }
+                }
+            }
             let queue_ms =
                 admit_start.duration_since(p.arrived).as_secs_f64() * 1e3;
             let mode = p.request.cache;
-            let mut hit: Option<PrefixHit> = match &mut self.cache {
-                Some(cache) if mode.reads() => cache.lookup(&encoded),
+            let degraded = p.degraded;
+            let mut hit: Option<PrefixHit> = match &self.cache {
+                Some(cache) if mode.reads() => {
+                    lock_cache(cache).lookup(&encoded)
+                }
                 _ => None,
             };
             // finishing a partial prefix needs the chunked executable
             if let Some(h) = &hit {
                 if h.seed.len < encoded.len() && !self.chunking {
                     let id = h.id;
-                    if let Some(cache) = self.cache.as_mut() {
-                        cache.release(id);
+                    if let Some(cache) = self.cache.as_ref() {
+                        lock_cache(cache).release(id);
                     }
                     hit = None;
                 }
@@ -856,8 +971,8 @@ impl Batcher {
                     // engine calls
                     let cached = h.seed.len;
                     let built = seed_to_prefill_result(&spec, &h.seed);
-                    if let Some(cache) = self.cache.as_mut() {
-                        cache.release(h.id);
+                    if let Some(cache) = self.cache.as_ref() {
+                        lock_cache(cache).release(h.id);
                     }
                     match built {
                         Ok(pre) => {
@@ -868,6 +983,7 @@ impl Batcher {
                                 cached_prompt_tokens: cached,
                                 cache_hits: 1,
                                 cache_evictions: 0,
+                                degraded: p.degraded,
                             };
                             self.place(
                                 si, p, strategy, prior_key, &pre, 0,
@@ -933,6 +1049,7 @@ impl Batcher {
                                             cached > 0,
                                         ),
                                         cache_evictions: 0,
+                                        degraded,
                                     },
                                     publish,
                                     pin,
@@ -940,11 +1057,7 @@ impl Batcher {
                                 });
                         }
                         Err(e) => {
-                            if let (Some(pin), Some(cache)) =
-                                (pin, self.cache.as_mut())
-                            {
-                                cache.release(pin);
-                            }
+                            self.release_pin(pin);
                             sink(
                                 p.conn_id,
                                 err_event(p.request.id, e.to_string()),
@@ -984,11 +1097,11 @@ impl Batcher {
             // identical prompts exact-hit, longer ones resume from it
             let mut evictions = 0usize;
             if p.request.cache.writes() {
-                if let Some(cache) = self.cache.as_mut() {
+                if let Some(cache) = self.cache.as_ref() {
                     if let Ok(stats) =
                         ImportanceMap::from_stats(&pre.stats, i)
                     {
-                        evictions = cache.insert(
+                        evictions = lock_cache(cache).insert(
                             &short_encoded[i],
                             &pre.kv,
                             i,
@@ -1005,6 +1118,7 @@ impl Batcher {
                 cached_prompt_tokens: 0,
                 cache_hits: 0,
                 cache_evictions: evictions,
+                degraded: p.degraded,
             };
             self.place(si, p, strategy, prior_key, &pre, i, admit, sink);
         }
@@ -1121,11 +1235,7 @@ impl Batcher {
                 else {
                     unreachable!("checked Prefilling above");
                 };
-                if let (Some(pin), Some(cache)) =
-                    (st.pin, self.cache.as_mut())
-                {
-                    cache.release(pin);
-                }
+                self.release_pin(st.pin);
                 sink(
                     st.pending.conn_id,
                     err_event(st.pending.request.id, e.to_string()),
@@ -1138,9 +1248,9 @@ impl Batcher {
         // instead of recomputing — including the final full prompt
         if let SlotState::Prefilling(st) = &mut self.slots[si] {
             if st.publish {
-                if let Some(cache) = self.cache.as_mut() {
+                if let Some(cache) = self.cache.as_ref() {
                     let consumed = st.chunks.consumed();
-                    let evicted = cache.insert(
+                    let evicted = lock_cache(cache).insert(
                         &st.chunks.tokens()[..consumed],
                         &st.chunks.kv,
                         0,
@@ -1170,9 +1280,7 @@ impl Batcher {
             pin,
             seq: _,
         } = st;
-        if let (Some(pin), Some(cache)) = (pin, self.cache.as_mut()) {
-            cache.release(pin);
-        }
+        self.release_pin(pin);
         // consuming conversion: moves the stream's KV out instead of
         // cloning a full cache per admission
         let pre = match chunks.into_result() {
@@ -1357,9 +1465,9 @@ impl Batcher {
                 SlotState::Empty => continue,
                 SlotState::Prefilling(st) => {
                     if let (Some(pin), Some(cache)) =
-                        (st.pin, self.cache.as_mut())
+                        (st.pin, self.cache.as_ref())
                     {
-                        cache.release(pin);
+                        lock_cache(cache).release(pin);
                     }
                     st.pending
                 }
@@ -1441,6 +1549,7 @@ impl Batcher {
                             .elapsed()
                             .as_secs_f64()
                             * 1e3;
+                        resp.degraded = p.degraded;
                         resp.finish = "cancel".to_string();
                         sink(p.conn_id, Event::Done(resp));
                     }
@@ -1466,11 +1575,7 @@ impl Batcher {
                         sink(slot.pending.conn_id, Event::Done(resp));
                     }
                     SlotState::Prefilling(st) => {
-                        if let (Some(pin), Some(cache)) =
-                            (st.pin, self.cache.as_mut())
-                        {
-                            cache.release(pin);
-                        }
+                        self.release_pin(st.pin);
                         let mut resp = Response::ok(
                             id,
                             String::new(),
@@ -1481,6 +1586,7 @@ impl Batcher {
                         );
                         resp.queue_ms = st.admit.queue_ms;
                         resp.prompt_tokens = st.chunks.consumed();
+                        resp.degraded = st.admit.degraded;
                         resp.finish = "cancel".to_string();
                         sink(st.pending.conn_id, Event::Done(resp));
                     }
@@ -1541,7 +1647,7 @@ impl Batcher {
                         let queued = sched
                             .queued_sessions()
                             .iter()
-                            .any(|&(c, i, _)| c == conn_id && i == id);
+                            .any(|&(c, i, _, _)| c == conn_id && i == id);
                         if queued && self.parked.insert((conn_id, id)) {
                             self.backpressure_pauses += 1;
                         }
@@ -1577,6 +1683,7 @@ impl Batcher {
     ) {
         loop {
             self.publish_gauges();
+            self.observe_governor(sched);
             self.apply_controls(sched, sink);
             if sched.is_closed() {
                 self.unpark_all();
@@ -1637,8 +1744,11 @@ impl Batcher {
     /// Push a v2 `queue` frame to every streaming session whose queue
     /// position changed since the last look (0 = next to be admitted).
     /// Admitted / cancelled sessions simply drop out of the tracking
-    /// map; a position never repeats for the same session because FCFS
-    /// positions only decrease.
+    /// map. Positions come from [`Scheduler::queued_sessions`], which
+    /// clamps each session's reported position to its historical floor
+    /// — so even under tier-aware reordering (a later interactive
+    /// arrival draining ahead of a queued batch request) a session's
+    /// position never grows, and a changed position always shrinks.
     fn emit_queue_positions(
         &mut self,
         sched: &Scheduler,
@@ -1648,9 +1758,7 @@ impl Batcher {
             return; // common case: no queue now, none last time
         }
         let mut fresh = HashMap::new();
-        for (pos, (conn_id, id, stream)) in
-            sched.queued_sessions().into_iter().enumerate()
-        {
+        for (conn_id, id, stream, pos) in sched.queued_sessions() {
             if !stream {
                 continue; // v1 sessions have no event channel
             }
@@ -1723,6 +1831,8 @@ fn finish_response(engine: &Engine, slot: &Slot) -> Response {
     resp.cache_evictions = slot.admit.cache_evictions;
     resp.refreshes = sess.refreshes;
     resp.mask_updates = sess.mask_updates;
+    resp.degraded = slot.admit.degraded;
+    resp.effective_density = slot.pending.request.density;
     resp.finish = sess
         .finished
         .unwrap_or(FinishReason::Length)

@@ -38,7 +38,7 @@ use anyhow::{bail, Context, Result};
 
 use super::protocol::{
     cancel_frame, parse_stats_line, set_frame, stats_frame, Event,
-    Request, Response, ShardSnapshot,
+    Request, Response, ShardSnapshot, Tier,
 };
 use crate::engine::prefix_cache::{CacheMode, CacheStatsSnapshot};
 use crate::util::json::Json;
@@ -417,8 +417,20 @@ impl Client {
     }
 }
 
-/// Convenience request builder.
+/// Convenience request builder. Defaults to the `standard` SLO tier;
+/// use [`request_tiered`] to pick one explicitly.
 pub fn request(prompt: &str, strategy: &str, density: f64) -> Request {
+    request_tiered(prompt, strategy, density, Tier::Standard)
+}
+
+/// [`request`] with an explicit SLO tier (see
+/// [`super::protocol::Tier`] for the governor semantics).
+pub fn request_tiered(
+    prompt: &str,
+    strategy: &str,
+    density: f64,
+    tier: Tier,
+) -> Request {
     Request {
         id: 0,
         prompt: prompt.to_string(),
@@ -428,5 +440,6 @@ pub fn request(prompt: &str, strategy: &str, density: f64) -> Request {
         max_tokens: 64,
         refresh_every: 0,
         cache: CacheMode::On,
+        tier,
     }
 }

@@ -1,0 +1,456 @@
+//! Overload governor: SLO-tiered graceful degradation under load.
+//!
+//! GLASS's core promise is a *tunable* quality/compute dial with zero
+//! inference-time overhead. The governor turns that dial automatically:
+//! instead of the classic queue-then-shed overload response, a loaded
+//! shard serves *more* users slightly sparser — lowering the effective
+//! GLASS density and stretching the mask-refresh interval per request
+//! class — and restores full quality as pressure drains.
+//!
+//! # Tiers, levels, and the knob map
+//!
+//! Every admission carries an SLO tier
+//! ([`Tier`](super::protocol::Tier): `interactive` / `standard` /
+//! `batch`, default `standard`). Each shard's engine loop feeds the
+//! governor a pressure observation per iteration
+//! ([`Governor::observe`]): queue depth, slot occupancy, and the age of
+//! the oldest queued request, normalized to *load per slot of
+//! capacity*. The observation drives a per-shard **degradation level**
+//! (0 = healthy .. [`MAX_LEVEL`] = saturated) that steps up and down
+//! **with hysteresis** — the up-threshold into a level sits strictly
+//! above the down-threshold out of it ([`LEVEL_UP`] / [`LEVEL_DOWN`]),
+//! and each observation moves the level at most one step, so a steady
+//! load plateau holds one level instead of thrashing masks.
+//!
+//! The level maps to concrete GLASS knobs at admission time
+//! ([`Governor::plan`]): a per-tier effective-density multiplier
+//! ([`DENSITY_MULT`]) and a `refresh_every` stretch
+//! ([`REFRESH_STRETCH`]). **Batch degrades first, interactive last**:
+//! level 1 touches only batch, level 2 adds standard, and only level 3
+//! (saturated) mildly degrades interactive. Effective density never
+//! drops below the operator's per-tier floor
+//! ([`GovernorConfig::floors`]) and never *rises* above what the
+//! request asked for. The governor changes *which* knob values a
+//! request runs with — never the math: a degraded request is
+//! bit-identical to the same request sent explicitly with the degraded
+//! values.
+//!
+//! # Telemetry
+//!
+//! `degraded_requests` / `stolen_requests` counters and the live
+//! `governor_level` gauge are exported per shard through the `stats`
+//! protocol command; every degraded response also carries
+//! `degraded: true` + its `effective_density`, so the quality trade is
+//! observable end to end.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::protocol::Tier;
+
+/// Highest degradation level (saturated).
+pub const MAX_LEVEL: u64 = 3;
+
+/// Pressure (load per slot of capacity) at or above which the governor
+/// steps **up** into level `i`. `LEVEL_UP[0]` is unused (level 0 is the
+/// resting state).
+pub const LEVEL_UP: [f64; 4] = [0.0, 1.5, 2.5, 4.0];
+
+/// Pressure **below** which the governor steps **down** out of level
+/// `i`. Strictly below the matching [`LEVEL_UP`] entry: the gap is the
+/// hysteresis band where the current level holds.
+pub const LEVEL_DOWN: [f64; 4] = [0.0, 1.0, 2.0, 3.0];
+
+/// Effective-density multiplier per `[level][Tier::rank()]`. Batch
+/// (rank 2) degrades first, interactive (rank 0) last and mildly.
+pub const DENSITY_MULT: [[f64; 3]; 4] = [
+    [1.0, 1.0, 1.0],
+    [1.0, 1.0, 0.7],
+    [1.0, 0.7, 0.5],
+    [0.8, 0.5, 0.4],
+];
+
+/// `refresh_every` multiplier per level (applied only to tiers whose
+/// density multiplier is below 1.0 at that level; `refresh_every == 0`
+/// — refresh disabled — is never touched).
+pub const REFRESH_STRETCH: [usize; 4] = [1, 2, 3, 4];
+
+/// Operator-facing governor knobs (see `--governor`,
+/// `--governor-floor-*`, `--steal-threshold`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GovernorConfig {
+    /// Master switch: off = every [`Governor::plan`] is the identity
+    /// and the server never steals.
+    pub enabled: bool,
+    /// Per-tier effective-density floors, indexed by
+    /// [`Tier::rank`] (`[interactive, standard, batch]`). Degradation
+    /// never pushes a request's density below its tier's floor.
+    pub floors: [f64; 3],
+    /// Home-shard pressure (load per slot) at or above which an
+    /// admission may be stolen by an idle sibling shard.
+    pub steal_threshold: f64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> GovernorConfig {
+        GovernorConfig {
+            enabled: false,
+            floors: [0.8, 0.5, 0.3],
+            steal_threshold: 2.0,
+        }
+    }
+}
+
+/// The admission-time outcome of [`Governor::plan`]: the knob values
+/// the request will actually run with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plan {
+    /// Effective GLASS density (== requested when not degraded).
+    pub density: f64,
+    /// Effective mask-refresh interval (== requested when not degraded).
+    pub refresh_every: usize,
+    /// True when either knob differs from what the request asked for.
+    pub degraded: bool,
+}
+
+#[derive(Debug, Default)]
+struct ShardState {
+    /// Current degradation level (0..=[`MAX_LEVEL`]).
+    level: AtomicU64,
+    /// Requests admitted with degraded knobs.
+    degraded: AtomicU64,
+    /// Requests this shard stole from a saturated sibling.
+    stolen: AtomicU64,
+    /// Last observed pressure ×1000 (diagnostics).
+    pressure_milli: AtomicU64,
+}
+
+/// The per-server governor, shared (via `Arc`) between every shard's
+/// engine loop (writer of its own shard's level, at most one thread
+/// per shard) and the reactor threads (readers, plus the steal
+/// counters).
+#[derive(Debug)]
+pub struct Governor {
+    cfg: GovernorConfig,
+    shards: Vec<ShardState>,
+}
+
+impl Governor {
+    /// Build a governor for `n_shards` shards, all at level 0.
+    pub fn new(cfg: GovernorConfig, n_shards: usize) -> Governor {
+        let shards =
+            (0..n_shards.max(1)).map(|_| ShardState::default()).collect();
+        Governor { cfg, shards }
+    }
+
+    /// Is governance (degradation + stealing) switched on?
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The governor's configuration (floors, steal threshold).
+    pub fn config(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    fn shard(&self, shard: usize) -> &ShardState {
+        // clamp instead of panicking: a shard index is always produced
+        // by route_shard/plan_steal over the same shard count, so this
+        // only guards hand-built test setups
+        &self.shards[shard.min(self.shards.len() - 1)]
+    }
+
+    /// Fold one load observation into the shard's degradation level and
+    /// return the (possibly stepped) level. Pressure is
+    /// `(queued + active + prefilling) / width` plus up to one extra
+    /// unit for queue age (1.0 at ≥ 1 s oldest-wait), so a stale queue
+    /// escalates even at moderate depth. The level steps **up at most
+    /// one level per observation** (re-escalation is gradual) but
+    /// **drains as far as the pressure warrants in one step** — the
+    /// engine loop may block for work right after observing an empty
+    /// queue, and the next admission must not be served at a stale
+    /// elevated level. Both directions respect the hysteresis band
+    /// ([`LEVEL_UP`] / [`LEVEL_DOWN`]), so a steady plateau holds its
+    /// level. Called from the owning shard's engine loop only (single
+    /// writer per shard).
+    pub fn observe(
+        &self,
+        shard: usize,
+        queued: usize,
+        active: usize,
+        prefilling: usize,
+        width: usize,
+        oldest_queue_ms: f64,
+    ) -> u64 {
+        let outstanding = (queued + active + prefilling) as f64;
+        let load = outstanding / width.max(1) as f64;
+        let age_boost = (oldest_queue_ms / 1000.0).clamp(0.0, 1.0);
+        let pressure = load + age_boost;
+        let st = self.shard(shard);
+        // Relaxed: the level is a single-writer gauge (this shard's
+        // engine thread); readers only need an eventually-current
+        // value, no ordering against other memory.
+        let level = st.level.load(Ordering::Relaxed);
+        let mut next = level;
+        if level < MAX_LEVEL && pressure >= LEVEL_UP[(level + 1) as usize]
+        {
+            next = level + 1;
+        } else {
+            while next > 0 && pressure < LEVEL_DOWN[next as usize] {
+                next -= 1;
+            }
+        }
+        if next != level {
+            // Relaxed: same single-writer gauge as the load above.
+            st.level.store(next, Ordering::Relaxed);
+        }
+        // Relaxed: diagnostics-only gauge, no cross-variable ordering.
+        st.pressure_milli
+            .store((pressure * 1000.0) as u64, Ordering::Relaxed);
+        next
+    }
+
+    /// The shard's current degradation level.
+    pub fn level(&self, shard: usize) -> u64 {
+        // Relaxed: gauge read, see observe()
+        self.shard(shard).level.load(Ordering::Relaxed)
+    }
+
+    /// The shard's last observed pressure (load per slot of capacity).
+    pub fn pressure(&self, shard: usize) -> f64 {
+        // Relaxed: diagnostics gauge, see observe()
+        self.shard(shard).pressure_milli.load(Ordering::Relaxed) as f64
+            / 1000.0
+    }
+
+    /// Map a request's tier + requested knobs through the shard's
+    /// current level. Identity when disabled, at level 0, or when the
+    /// level's multiplier leaves this tier alone. Effective density is
+    /// clamped to `[tier floor, requested]` — degradation never raises
+    /// density and never sinks below the operator's floor; a non-zero
+    /// `refresh_every` is stretched by the level's factor.
+    pub fn plan(
+        &self,
+        shard: usize,
+        tier: Tier,
+        density: f64,
+        refresh_every: usize,
+    ) -> Plan {
+        let identity = Plan {
+            density,
+            refresh_every,
+            degraded: false,
+        };
+        if !self.cfg.enabled {
+            return identity;
+        }
+        let level = self.level(shard) as usize;
+        let mult = DENSITY_MULT[level.min(3)][tier.rank() as usize];
+        if mult >= 1.0 {
+            return identity;
+        }
+        let floor = self.cfg.floors[tier.rank() as usize];
+        let eff_density = (density * mult).max(floor).min(density);
+        let eff_refresh = if refresh_every == 0 {
+            0
+        } else {
+            refresh_every.saturating_mul(REFRESH_STRETCH[level.min(3)])
+        };
+        let degraded = eff_density < density - 1e-12
+            || eff_refresh != refresh_every;
+        Plan {
+            density: eff_density,
+            refresh_every: eff_refresh,
+            degraded,
+        }
+    }
+
+    /// Count one admission that ran with degraded knobs.
+    pub fn note_degraded(&self, shard: usize) {
+        // Relaxed: monotonic telemetry counter, no ordering needed
+        self.shard(shard).degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one admission stolen BY `shard` from a saturated sibling.
+    pub fn note_stolen(&self, shard: usize) {
+        // Relaxed: monotonic telemetry counter, no ordering needed
+        self.shard(shard).stolen.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests this shard admitted with degraded knobs.
+    pub fn degraded_requests(&self, shard: usize) -> u64 {
+        // Relaxed: telemetry counter read
+        self.shard(shard).degraded.load(Ordering::Relaxed)
+    }
+
+    /// Requests this shard stole from saturated siblings.
+    pub fn stolen_requests(&self, shard: usize) -> u64 {
+        // Relaxed: telemetry counter read
+        self.shard(shard).stolen.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn on() -> GovernorConfig {
+        GovernorConfig {
+            enabled: true,
+            ..GovernorConfig::default()
+        }
+    }
+
+    /// observe() with an explicit pressure value (no queue-age boost).
+    fn feed(g: &Governor, load_x1000: usize) -> u64 {
+        // width 1000 → pressure == load_x1000 / 1000
+        g.observe(0, load_x1000, 0, 0, 1000, 0.0)
+    }
+
+    #[test]
+    fn level_steps_up_one_at_a_time_and_saturates() {
+        let g = Governor::new(on(), 1);
+        assert_eq!(feed(&g, 9000), 1, "one step per observation");
+        assert_eq!(feed(&g, 9000), 2);
+        assert_eq!(feed(&g, 9000), 3);
+        assert_eq!(feed(&g, 9000), 3, "saturates at MAX_LEVEL");
+    }
+
+    #[test]
+    fn steady_plateau_holds_one_level_no_oscillation() {
+        // the hysteresis satellite: a pressure sitting INSIDE the band
+        // (above the down-threshold of the current level, below the
+        // up-threshold of the next) must hold the level indefinitely
+        let g = Governor::new(on(), 1);
+        assert_eq!(feed(&g, 1800), 1, "1.8 ≥ UP[1]=1.5 → level 1");
+        for _ in 0..100 {
+            assert_eq!(
+                feed(&g, 1800),
+                1,
+                "1.0 ≤ 1.8 < 2.5: plateau holds level 1"
+            );
+        }
+        // and a plateau just under an up-threshold never flickers up
+        let g = Governor::new(on(), 1);
+        for _ in 0..100 {
+            assert_eq!(feed(&g, 1400), 0, "1.4 < UP[1]=1.5 stays level 0");
+        }
+    }
+
+    #[test]
+    fn level_drains_as_far_as_pressure_warrants() {
+        let g = Governor::new(on(), 1);
+        for _ in 0..3 {
+            feed(&g, 9000);
+        }
+        assert_eq!(g.level(0), 3);
+        // partial drain stops inside the first satisfied band:
+        // 2.2 < DOWN[3]=3.0 but 2.2 ≥ DOWN[2]=2.0 → level 2
+        assert_eq!(feed(&g, 2200), 2);
+        // an idle shard resets to 0 in ONE observation — the engine
+        // loop blocks for work right after seeing an empty queue, so
+        // the post-burst admission must not catch a stale level
+        feed(&g, 9000);
+        assert_eq!(g.level(0), 3);
+        assert_eq!(feed(&g, 0), 0, "full drain in one step");
+        assert_eq!(feed(&g, 0), 0, "rests at 0");
+    }
+
+    #[test]
+    fn hysteresis_band_is_sticky_in_both_directions() {
+        // 1.2 lies between DOWN[1]=1.0 and UP[1]=1.5: a shard at level
+        // 0 must stay at 0, a shard at level 1 must stay at 1
+        let g = Governor::new(on(), 1);
+        assert_eq!(feed(&g, 1200), 0);
+        feed(&g, 2000); // → level 1
+        assert_eq!(g.level(0), 1);
+        for _ in 0..50 {
+            assert_eq!(feed(&g, 1200), 1);
+        }
+    }
+
+    #[test]
+    fn queue_age_escalates_pressure() {
+        let g = Governor::new(on(), 1);
+        // load 1.0 alone is below UP[1], but a 1 s oldest-wait adds
+        // a full unit of pressure → 2.0 ≥ 1.5
+        assert_eq!(g.observe(0, 4, 0, 0, 4, 1000.0), 1);
+        // the boost is capped at 1.0 (a 10 s queue is not 10 units)
+        let g = Governor::new(on(), 1);
+        assert_eq!(g.observe(0, 0, 0, 0, 4, 60_000.0), 0);
+    }
+
+    #[test]
+    fn plan_degrades_batch_first_interactive_last() {
+        let g = Governor::new(on(), 1);
+        feed(&g, 9000); // level 1
+        let b = g.plan(0, Tier::Batch, 1.0, 8);
+        assert!(b.degraded);
+        assert!((b.density - 0.7).abs() < 1e-12);
+        assert_eq!(b.refresh_every, 16, "stretch ×2 at level 1");
+        for tier in [Tier::Interactive, Tier::Standard] {
+            let p = g.plan(0, tier, 1.0, 8);
+            assert_eq!(
+                p,
+                Plan { density: 1.0, refresh_every: 8, degraded: false },
+                "{tier:?} untouched at level 1"
+            );
+        }
+        feed(&g, 9000); // level 2: standard joins
+        assert!(g.plan(0, Tier::Standard, 1.0, 8).degraded);
+        assert!(!g.plan(0, Tier::Interactive, 1.0, 8).degraded);
+        feed(&g, 9000); // level 3: interactive mildly degraded
+        let i = g.plan(0, Tier::Interactive, 1.0, 8);
+        assert!(i.degraded);
+        assert!(
+            i.density >= 0.8 - 1e-12,
+            "interactive floor respected: {}",
+            i.density
+        );
+    }
+
+    #[test]
+    fn plan_respects_floors_and_never_raises_density() {
+        let g = Governor::new(on(), 1);
+        for _ in 0..3 {
+            feed(&g, 9000); // level 3
+        }
+        // floor above the multiplied value: clamped up to the floor
+        let b = g.plan(0, Tier::Batch, 0.9, 0);
+        assert!((b.density - 0.36).abs() < 1e-12, "0.9 × 0.4 above floor");
+        let low = g.plan(0, Tier::Batch, 0.2, 0);
+        assert!(
+            (low.density - 0.2).abs() < 1e-12,
+            "a request already below the floor is never raised"
+        );
+        assert_eq!(low.refresh_every, 0, "refresh 0 (disabled) untouched");
+        assert!(
+            !low.degraded,
+            "nothing changed → not degraded (refresh 0, density kept)"
+        );
+    }
+
+    #[test]
+    fn disabled_governor_is_the_identity() {
+        let g = Governor::new(GovernorConfig::default(), 2);
+        for _ in 0..5 {
+            g.observe(1, 100, 4, 0, 4, 5000.0);
+        }
+        let p = g.plan(1, Tier::Batch, 0.9, 4);
+        assert_eq!(
+            p,
+            Plan { density: 0.9, refresh_every: 4, degraded: false }
+        );
+    }
+
+    #[test]
+    fn counters_accumulate_per_shard() {
+        let g = Governor::new(on(), 2);
+        g.note_degraded(0);
+        g.note_degraded(0);
+        g.note_stolen(1);
+        assert_eq!(g.degraded_requests(0), 2);
+        assert_eq!(g.degraded_requests(1), 0);
+        assert_eq!(g.stolen_requests(1), 1);
+        assert_eq!(g.stolen_requests(0), 0);
+    }
+}

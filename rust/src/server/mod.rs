@@ -186,6 +186,48 @@
 //!   `readonly`, `off`.
 //! * `group_prefixes` (server) — same-prefix clustering/deferral so a
 //!   burst of shared-prompt requests pays one miss.
+//! * `governor` (`--governor on|off`) — the overload governor +
+//!   work-stealing (see "Load governance" below); default off.
+//! * `governor_floors` (`--governor-floor-interactive/-standard/
+//!   -batch`) — per-tier effective-density floors the governor never
+//!   degrades past.
+//! * `steal_threshold` (`--steal-threshold`) — home-shard pressure
+//!   (outstanding work / width) at which an idle sibling may steal an
+//!   admission.
+//!
+//! # Load governance
+//!
+//! GLASS gives every request a quality/compute dial (`density`,
+//! `refresh_every`); the overload governor ([`governor`]) turns that
+//! dial under pressure instead of letting the queue grow until
+//! requests shed. Each request carries an SLO **tier** (`interactive`
+//! / `standard` / `batch`, wire key `tier`, default `standard`). Each
+//! shard's engine loop feeds its queue depth, occupancy, and oldest
+//! queue age into the shared [`Governor`], which maintains a per-shard
+//! **degradation level** (0–3, hysteresis in both directions so a
+//! steady plateau never oscillates). At admission the batcher maps the
+//! request's knobs through the level for its tier — batch degrades
+//! first and deepest, interactive last and least, never below the
+//! configured per-tier density floor — and marks the request
+//! `degraded`. The rewrite happens once, before any engine work, so a
+//! degraded request is **bit-identical** to the same request sent
+//! explicitly with the degraded values, and it is fully reversible:
+//! when pressure drains the level returns to 0 in one observation and
+//! new admissions serve at full requested density. `done` frames
+//! report `degraded` + `effective_density`; `stats` reports
+//! `governor_level`, `degraded_requests`, and `stolen_requests` per
+//! shard.
+//!
+//! The governor also unlocks **hot-prefix work-stealing** ([`steal`]):
+//! when the router's target shard is past the steal threshold and a
+//! sibling could start the request immediately, the sibling steals the
+//! admission, and the home shard's longest matching cached prefix is
+//! replicated into the thief's cache first so the stolen request still
+//! warm-hits. This is the one deliberate, bounded exception to the
+//! shards-never-share invariant above — admission-time only, copy-only,
+//! locks taken sequentially and never nested (see [`steal`]'s module
+//! docs). Everything is off by default (`--governor on` enables it);
+//! disabled, the governor is an identity and routing is untouched.
 //!
 //! # Request limits
 //!
@@ -233,10 +275,12 @@
 
 pub mod batcher;
 pub mod client;
+pub mod governor;
 pub mod poller;
 pub mod protocol;
 pub mod scanner;
 pub mod scheduler;
+pub mod steal;
 
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
@@ -249,12 +293,16 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::ServerConfig;
-use crate::engine::prefix_cache::{CacheStatsSnapshot, CacheTelemetry};
+use crate::engine::prefix_cache::{
+    CacheStatsSnapshot, CacheTelemetry, PrefixCache,
+};
 use crate::engine::Engine;
 use crate::info;
+use crate::model::Tokenizer;
 use crate::util::json::Json;
 
 use batcher::{Batcher, ShardGauges};
+use governor::{Governor, GovernorConfig};
 use poller::{
     listener_fd, new_poller, stream_fd, Interest, PollEvent, Poller,
     Waker, WAKE_TOKEN,
@@ -266,6 +314,7 @@ use protocol::{
 };
 use scanner::FrameScanner;
 use scheduler::{Control, Pending, Scheduler};
+use steal::ShardLoad;
 
 /// Default cap on a single wire frame (and the per-connection read
 /// buffer): a client that never terminates a line cannot grow server
@@ -461,6 +510,11 @@ struct Shard {
     telemetry: Arc<CacheTelemetry>,
     gauges: Arc<ShardGauges>,
     width: usize,
+    /// The shard's prefix cache, shared with its engine loop solely so
+    /// the admission-time steal path can replicate a hot prefix into a
+    /// sibling ([`steal::replicate_prefix`]); `None` when caching is
+    /// disabled.
+    cache: Option<Arc<Mutex<PrefixCache>>>,
 }
 
 impl Shard {
@@ -468,14 +522,29 @@ impl Shard {
     /// single atomic load ([`ShardGauges::snapshot`]), so a stats call
     /// racing heavy admission can never report `slots_active +
     /// slots_prefilling` above the batch width.
-    fn snapshot_row(&self, shard: u64) -> ShardSnapshot {
+    fn snapshot_row(&self, shard: u64, gov: &Governor) -> ShardSnapshot {
         let (slots_active, slots_prefilling) = self.gauges.snapshot();
+        let si = shard as usize;
         ShardSnapshot {
             shard,
             queue_depth: self.sched.len() as u64,
             slots_active,
             slots_prefilling,
             batch_width: self.width as u64,
+            governor_level: gov.level(si) as u64,
+            degraded_requests: gov.degraded_requests(si),
+            stolen_requests: gov.stolen_requests(si),
+        }
+    }
+
+    /// The reactor-side load sample the steal planner consumes.
+    fn load(&self) -> ShardLoad {
+        let (active, prefilling) = self.gauges.snapshot();
+        ShardLoad {
+            queued: self.sched.len(),
+            active: active as usize,
+            prefilling: prefilling as usize,
+            width: self.width,
         }
     }
 }
@@ -483,7 +552,7 @@ impl Shard {
 /// The `stats` response line: aggregate cache counters plus one
 /// consistent per-shard row, assembled through one snapshot path for
 /// both protocol versions.
-fn stats_line(shards: &[Shard], id: u64) -> String {
+fn stats_line(shards: &[Shard], gov: &Governor, id: u64) -> String {
     let agg = shards.iter().fold(
         CacheStatsSnapshot::default(),
         |acc, s| acc.merge(&s.telemetry.snapshot()),
@@ -491,7 +560,7 @@ fn stats_line(shards: &[Shard], id: u64) -> String {
     let per: Vec<ShardSnapshot> = shards
         .iter()
         .enumerate()
-        .map(|(i, s)| s.snapshot_row(i as u64))
+        .map(|(i, s)| s.snapshot_row(i as u64, gov))
         .collect();
     stats_to_line(id, &agg, &per)
 }
@@ -573,6 +642,16 @@ impl Server {
         // recompute it here only for the prefix-grouping byte window
         let shard_cache_bytes = cfg.cache_bytes / n_shards;
         let prefill_len = engine.spec().prefill_len;
+        // always constructed (disabled it is a frozen level-0 identity)
+        // so stats rows and the steal gate read one object either way
+        let governor = Arc::new(Governor::new(
+            GovernorConfig {
+                enabled: cfg.governor,
+                floors: cfg.governor_floors,
+                steal_threshold: cfg.steal_threshold,
+            },
+            n_shards,
+        ));
 
         // build every shard's batcher up front: loads priors and warms
         // every executable an engine loop can hit (the compiled-
@@ -581,8 +660,9 @@ impl Server {
         let mut batchers = Vec::with_capacity(n_shards);
         let mut shards = Vec::with_capacity(n_shards);
         for shard_id in 0..n_shards {
-            let engine_loop =
+            let mut engine_loop =
                 Batcher::from_config(engine.clone(), cfg, shard_id)?;
+            engine_loop.attach_governor(Arc::clone(&governor), shard_id);
             let group_bytes =
                 if cfg.group_prefixes && shard_cache_bytes > 0 {
                     // one prefill frame of shared prompt bytes ≈ one
@@ -602,6 +682,7 @@ impl Server {
                 telemetry: engine_loop.telemetry(),
                 gauges: engine_loop.gauges(),
                 width: engine_loop.width,
+                cache: engine_loop.cache_handle(),
             });
             batchers.push(engine_loop);
         }
@@ -673,6 +754,8 @@ impl Server {
             wakers.push(poller.waker());
             let ctx = ReactorCtx {
                 shards: Arc::clone(&shards),
+                governor: Arc::clone(&governor),
+                tok: engine.tok.clone(),
                 route_window: route_window(prefill_len),
                 max_frame_bytes: cfg.max_frame_bytes.max(64),
                 conn_buffer_bytes: cfg.conn_buffer_bytes.max(1 << 16),
@@ -843,6 +926,13 @@ impl Server {
 /// Immutable per-reactor context.
 struct ReactorCtx {
     shards: Arc<Vec<Shard>>,
+    /// Shared overload governor (level/counter source for stats, steal
+    /// gate for routing); a frozen identity when `--governor off`.
+    governor: Arc<Governor>,
+    /// Tokenizer clone for the steal path: replicating a prefix needs
+    /// the prompt's token encoding, computed reactor-side (cheap:
+    /// byte-level) so no engine round-trip happens at admission.
+    tok: Tokenizer,
     route_window: usize,
     max_frame_bytes: usize,
     conn_buffer_bytes: usize,
@@ -874,6 +964,36 @@ impl ReactorCtx {
 /// 1 MiB floor.
 fn kill_water(high_water_bytes: usize) -> usize {
     high_water_bytes.saturating_mul(8).max(1 << 20)
+}
+
+/// Pick the shard for one admission: prefix-affinity routing first
+/// ([`route_shard`]), then — governor enabled, multiple shards — the
+/// work-stealing override: if the home shard is past the steal
+/// threshold and a sibling could start the request immediately, the
+/// sibling takes it, after the home shard's longest cached prefix of
+/// the prompt is replicated into its cache ([`steal::replicate_prefix`])
+/// so the stolen request still warm-hits. A failed or empty
+/// replication still steals: the thief serving the prompt cold beats
+/// the home shard queueing it.
+fn pick_shard(ctx: &ReactorCtx, prompt: &str) -> usize {
+    let home = route_shard(prompt, ctx.shards.len(), ctx.route_window);
+    if !ctx.governor.enabled() || ctx.shards.len() < 2 {
+        return home;
+    }
+    let loads: Vec<ShardLoad> =
+        ctx.shards.iter().map(Shard::load).collect();
+    let threshold = ctx.governor.config().steal_threshold;
+    let Some(thief) = steal::plan_steal(home, &loads, threshold) else {
+        return home;
+    };
+    if let (Some(hc), Some(tc)) =
+        (&ctx.shards[home].cache, &ctx.shards[thief].cache)
+    {
+        let tokens = ctx.tok.encode_with_bos(prompt);
+        steal::replicate_prefix(hc, tc, &tokens);
+    }
+    ctx.governor.note_stolen(thief);
+    thief
 }
 
 /// Protocol state of one connection (locked by its first parsed line).
@@ -1152,14 +1272,11 @@ impl ConnState {
                     );
                     return;
                 }
-                // prefix-affinity routing: a pure function of the
+                // prefix-affinity routing (a pure function of the
                 // prompt text, so same-prefix traffic colocates on the
-                // shard whose cache holds (or will hold) its prefix
-                let si = route_shard(
-                    &request.prompt,
-                    ctx.shards.len(),
-                    ctx.route_window,
-                );
+                // shard whose cache holds its prefix), with the
+                // governor's work-stealing override under overload
+                let si = pick_shard(ctx, &request.prompt);
                 let id = request.id;
                 let accepted = ctx.shards[si].sched.submit(Pending {
                     request,
@@ -1167,6 +1284,8 @@ impl ConnState {
                     conn_id: self.conn_id,
                     stream: false,
                     resume_from: 0,
+                    degraded: false,
+                    reported_floor: usize::MAX,
                 });
                 if accepted.is_none() {
                     // queue already closed (shutdown won the race)
@@ -1195,7 +1314,7 @@ impl ConnState {
             Ok(ClientLine::Stats { id }) => {
                 // answered right here from the shared counters — no
                 // round trip through any engine loop
-                let line = stats_line(&ctx.shards, id);
+                let line = stats_line(&ctx.shards, &ctx.governor, id);
                 self.push_line(&line);
             }
             Err(e) => self.protocol_error(0, &e.to_string()),
@@ -1247,17 +1366,15 @@ impl ConnState {
             self.push_error_frame(id, "server shutting down", true);
             return;
         }
-        let si = route_shard(
-            &request.prompt,
-            ctx.shards.len(),
-            ctx.route_window,
-        );
+        let si = pick_shard(ctx, &request.prompt);
         let submitted = ctx.shards[si].sched.submit(Pending {
             request,
             arrived: Instant::now(),
             conn_id: self.conn_id,
             stream: true,
             resume_from,
+            degraded: false,
+            reported_floor: usize::MAX,
         });
         let Some(pos) = submitted else {
             // queue already closed (shutdown won the race):
@@ -1341,7 +1458,7 @@ impl ConnState {
                 }
             }
             V2Frame::Stats { id } => {
-                let line = stats_line(&ctx.shards, id);
+                let line = stats_line(&ctx.shards, &ctx.governor, id);
                 self.push_line(&line);
             }
         }
@@ -1714,17 +1831,34 @@ mod tests {
         (ConnState::new(7, server, rx), client, tx)
     }
 
-    /// A one-shard ReactorCtx with explicit watermarks and no engine
-    /// behind it (controls land in the scheduler and stay there).
-    fn test_ctx(high: usize, low: usize) -> ReactorCtx {
-        let shard = Shard {
+    fn test_shard() -> Shard {
+        Shard {
             sched: Arc::new(Scheduler::new(4, Duration::from_millis(4))),
             telemetry: Arc::new(CacheTelemetry::default()),
             gauges: Arc::new(ShardGauges::default()),
             width: 4,
-        };
+            cache: None,
+        }
+    }
+
+    fn test_tok() -> Tokenizer {
+        Tokenizer {
+            vocab: 260,
+            bos_id: 256,
+            pad_id: 257,
+        }
+    }
+
+    /// A one-shard ReactorCtx with explicit watermarks and no engine
+    /// behind it (controls land in the scheduler and stay there).
+    fn test_ctx(high: usize, low: usize) -> ReactorCtx {
         ReactorCtx {
-            shards: Arc::new(vec![shard]),
+            shards: Arc::new(vec![test_shard()]),
+            governor: Arc::new(Governor::new(
+                GovernorConfig::default(),
+                1,
+            )),
+            tok: test_tok(),
             route_window: 64,
             max_frame_bytes: 1 << 20,
             conn_buffer_bytes: 1 << 20,
@@ -1733,6 +1867,72 @@ mod tests {
             io: Arc::new(IoStats::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
         }
+    }
+
+    #[test]
+    fn pick_shard_steals_only_under_an_enabled_governor() {
+        // two shards; make shard 0 (everyone's home here is computed
+        // by route_shard, so find a prompt homing on the loaded shard)
+        let mk_ctx = |enabled: bool| {
+            let shards = vec![test_shard(), test_shard()];
+            ReactorCtx {
+                shards: Arc::new(shards),
+                governor: Arc::new(Governor::new(
+                    GovernorConfig {
+                        enabled,
+                        ..GovernorConfig::default()
+                    },
+                    2,
+                )),
+                tok: test_tok(),
+                route_window: 64,
+                max_frame_bytes: 1 << 20,
+                conn_buffer_bytes: 1 << 20,
+                high_water_bytes: 1 << 20,
+                low_water_bytes: 1 << 18,
+                io: Arc::new(IoStats::default()),
+                shutdown: Arc::new(AtomicBool::new(false)),
+            }
+        };
+        let filler = |id: u64| Pending {
+            request: protocol::Request {
+                id,
+                prompt: "filler".to_string(),
+                strategy: "dense".into(),
+                lambda: 0.5,
+                density: 0.5,
+                max_tokens: 4,
+                refresh_every: 0,
+                cache: crate::engine::prefix_cache::CacheMode::On,
+                tier: protocol::Tier::Standard,
+            },
+            arrived: Instant::now(),
+            conn_id: 1,
+            stream: false,
+            resume_from: 0,
+            degraded: false,
+            reported_floor: usize::MAX,
+        };
+        let ctx = mk_ctx(true);
+        let prompt = "steal me a shard please";
+        let home = route_shard(prompt, 2, ctx.route_window);
+        // saturate the home shard's queue well past the default
+        // threshold (pressure = 12/4 = 3.0 ≥ 2.0)
+        for i in 0..12u64 {
+            let _ = ctx.shards[home].sched.submit(filler(i + 1));
+        }
+        let picked = pick_shard(&ctx, prompt);
+        assert_eq!(picked, 1 - home, "idle sibling steals the request");
+        assert_eq!(ctx.governor.stolen_requests(1 - home), 1);
+        assert_eq!(ctx.governor.stolen_requests(home), 0);
+
+        // disabled governor: the router's choice stands no matter what
+        let ctx = mk_ctx(false);
+        for i in 0..12u64 {
+            let _ = ctx.shards[home].sched.submit(filler(i + 1));
+        }
+        assert_eq!(pick_shard(&ctx, prompt), home);
+        assert_eq!(ctx.governor.stolen_requests(1 - home), 0);
     }
 
     #[test]

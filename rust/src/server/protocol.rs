@@ -176,16 +176,34 @@
 //!
 //! * Envelope and commands: `v`, `cmd`, `id`, `ev`.
 //! * Request knobs: `prompt`, `strategy`, `lambda`, `density`,
-//!   `max_tokens`, `refresh_every`, `cache`, `received`.
+//!   `max_tokens`, `refresh_every`, `cache`, `received`, `tier`.
 //! * Event and response fields: `index`, `text`, `finish`, `error`,
 //!   `retryable`, `queue_pos`, `position`, `changed`, `tokens`,
 //!   `prompt_tokens`, `cached_prompt_tokens`, `refreshes`,
-//!   `mask_updates`, `prefill_ms`, `decode_ms`, `queue_ms`.
+//!   `mask_updates`, `prefill_ms`, `decode_ms`, `queue_ms`,
+//!   `degraded`, `effective_density`.
 //! * Stats reply: `stats`, `shards`, `cache_hits`, `cache_misses`,
 //!   `cache_inserts`, `cache_evictions`, `cache_bytes_resident`,
 //!   `cache_entries`, `cache_warm_start_hits`, `shard`,
 //!   `queue_depth`, `slots_active`, `slots_prefilling`,
-//!   `batch_width`.
+//!   `batch_width`, `governor_level`, `degraded_requests`,
+//!   `stolen_requests`.
+//!
+//! # SLO tiers and load governance
+//!
+//! `tier` classifies a request's latency expectation for the overload
+//! governor (see the "Load governance" section of [`super`]): one of
+//! `interactive` | `standard` | `batch`, default `standard`, validated
+//! at parse time like every other knob. Under pressure the governor
+//! may serve a request sparser than asked; the `done` frame then
+//! carries `degraded: true` and `effective_density` — the density the
+//! request was actually served at (equal to the requested `density`
+//! when `degraded` is false). Both fields are always present on
+//! success frames; clients reading pre-governor servers default them
+//! to `false` / the reported `density`. The `stats` reply grows three
+//! per-shard counters: `governor_level` (the shard's current
+//! degradation level, 0 = none), `degraded_requests`, and
+//! `stolen_requests` (admissions re-routed off a saturated shard).
 
 use anyhow::{bail, Result};
 
@@ -198,6 +216,55 @@ pub const PROTOCOL_V2: usize = 2;
 /// Strategy names the serving layer accepts.
 pub const STRATEGIES: &[&str] =
     &["dense", "griffin", "global", "a-glass", "i-glass"];
+
+/// A request's SLO tier: how latency-sensitive the caller is, and
+/// therefore how early the overload governor may degrade it (batch
+/// first, interactive last). Carried on the wire as the request knob
+/// `tier`; unknown names are rejected at parse time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default, Hash)]
+pub enum Tier {
+    /// A human is waiting on every token: degraded last, queued first.
+    Interactive,
+    /// The default tier for unclassified traffic.
+    #[default]
+    Standard,
+    /// Latency-tolerant bulk work: degraded first, queued last.
+    Batch,
+}
+
+impl Tier {
+    /// Parse a wire tier name (`interactive` | `standard` | `batch`).
+    pub fn parse(s: &str) -> Result<Tier> {
+        Ok(match s {
+            "interactive" => Tier::Interactive,
+            "standard" => Tier::Standard,
+            "batch" => Tier::Batch,
+            other => bail!(
+                "unknown tier '{other}' (expected interactive|standard|batch)"
+            ),
+        })
+    }
+
+    /// The wire name of this tier.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Tier::Interactive => "interactive",
+            Tier::Standard => "standard",
+            Tier::Batch => "batch",
+        }
+    }
+
+    /// Scheduling rank: lower drains first (interactive < standard <
+    /// batch). The scheduler uses this with age-based anti-starvation;
+    /// see [`super::scheduler`].
+    pub fn rank(&self) -> u8 {
+        match self {
+            Tier::Interactive => 0,
+            Tier::Standard => 1,
+            Tier::Batch => 2,
+        }
+    }
+}
 
 /// One generation request, as carried by a v1 request line or a v2
 /// `generate`/`resume` frame.
@@ -219,6 +286,8 @@ pub struct Request {
     pub refresh_every: usize,
     /// Shared-prefix cache behavior for this request.
     pub cache: CacheMode,
+    /// SLO tier for the overload governor (default [`Tier::Standard`]).
+    pub tier: Tier,
 }
 
 /// One parsed v1 client line: a generation request or a server command.
@@ -488,6 +557,13 @@ pub struct ShardSnapshot {
     pub slots_prefilling: u64,
     /// Slot capacity (occupancy denominator).
     pub batch_width: u64,
+    /// The overload governor's current degradation level for this
+    /// shard (0 = serving everything at requested density).
+    pub governor_level: u64,
+    /// Admissions this shard served sparser than requested.
+    pub degraded_requests: u64,
+    /// Admissions re-routed to this shard off a saturated home shard.
+    pub stolen_requests: u64,
 }
 
 /// Serialize the `stats` command response line: aggregate cache
@@ -520,7 +596,19 @@ pub fn stats_to_line(
                     "slots_prefilling",
                     Json::Num(sh.slots_prefilling as f64),
                 )
-                .set("batch_width", Json::Num(sh.batch_width as f64));
+                .set("batch_width", Json::Num(sh.batch_width as f64))
+                .set(
+                    "governor_level",
+                    Json::Num(sh.governor_level as f64),
+                )
+                .set(
+                    "degraded_requests",
+                    Json::Num(sh.degraded_requests as f64),
+                )
+                .set(
+                    "stolen_requests",
+                    Json::Num(sh.stolen_requests as f64),
+                );
             o
         })
         .collect();
@@ -566,6 +654,9 @@ pub fn parse_stats_line(
                     slots_active: get(sh, "slots_active")?,
                     slots_prefilling: get(sh, "slots_prefilling")?,
                     batch_width: get(sh, "batch_width")?,
+                    governor_level: get(sh, "governor_level")?,
+                    degraded_requests: get(sh, "degraded_requests")?,
+                    stolen_requests: get(sh, "stolen_requests")?,
                 })
             })
             .collect::<Result<Vec<ShardSnapshot>>>()?,
@@ -621,6 +712,10 @@ impl Request {
             Some(v) => CacheMode::parse(v.as_str()?)?,
             None => CacheMode::On,
         };
+        let tier = match j.get("tier") {
+            Some(v) => Tier::parse(v.as_str()?)?,
+            None => Tier::Standard,
+        };
         Ok(Request {
             id: j.req("id")?.as_usize()? as u64,
             prompt: j.req("prompt")?.as_str()?.to_string(),
@@ -630,6 +725,7 @@ impl Request {
             max_tokens,
             refresh_every: get_u("refresh_every", 0)?,
             cache,
+            tier,
         })
     }
 
@@ -641,7 +737,8 @@ impl Request {
             .set("density", Json::Num(self.density))
             .set("max_tokens", Json::Num(self.max_tokens as f64))
             .set("refresh_every", Json::Num(self.refresh_every as f64))
-            .set("cache", Json::Str(self.cache.as_str().to_string()));
+            .set("cache", Json::Str(self.cache.as_str().to_string()))
+            .set("tier", Json::Str(self.tier.as_str().to_string()));
     }
 
     /// v1 request line.
@@ -730,6 +827,12 @@ pub struct Response {
     pub queue_ms: f64,
     /// Effective kept-neuron fraction served.
     pub density: f64,
+    /// Whether the overload governor served this request sparser (or
+    /// with a longer refresh interval) than requested.
+    pub degraded: bool,
+    /// The density the request was actually served at — equal to the
+    /// requested density unless `degraded` is true.
+    pub effective_density: f64,
     /// Mask refreshes applied / refreshes that changed the kept set.
     pub refreshes: usize,
     /// Refreshes whose recomputed mask changed the kept set.
@@ -763,6 +866,8 @@ impl Response {
             decode_ms,
             queue_ms: 0.0,
             density,
+            degraded: false,
+            effective_density: density,
             refreshes: 0,
             mask_updates: 0,
             finish: "length".to_string(),
@@ -784,6 +889,8 @@ impl Response {
             decode_ms: 0.0,
             queue_ms: 0.0,
             density: 1.0,
+            degraded: false,
+            effective_density: 1.0,
             refreshes: 0,
             mask_updates: 0,
             finish: String::new(),
@@ -815,6 +922,11 @@ impl Response {
                 .set("decode_ms", Json::Num(self.decode_ms))
                 .set("queue_ms", Json::Num(self.queue_ms))
                 .set("density", Json::Num(self.density))
+                .set("degraded", Json::Bool(self.degraded))
+                .set(
+                    "effective_density",
+                    Json::Num(self.effective_density),
+                )
                 .set("refreshes", Json::Num(self.refreshes as f64))
                 .set("mask_updates", Json::Num(self.mask_updates as f64))
                 .set("finish", Json::Str(self.finish.clone()));
@@ -858,6 +970,16 @@ impl Response {
             decode_ms: j.req("decode_ms")?.as_f64()?,
             queue_ms: get_f("queue_ms", 0.0)?,
             density: j.req("density")?.as_f64()?,
+            // pre-governor servers emit neither field: an un-degraded
+            // response served exactly at its reported density
+            degraded: match j.get("degraded") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
+            effective_density: get_f(
+                "effective_density",
+                j.req("density")?.as_f64()?,
+            )?,
             refreshes: get_u("refreshes", 0)?,
             mask_updates: get_u("mask_updates", 0)?,
             finish: match j.get("finish") {
@@ -889,6 +1011,7 @@ mod tests {
             max_tokens: 32,
             refresh_every: 8,
             cache: CacheMode::ReadOnly,
+            tier: Tier::Interactive,
         };
         let r2 = Request::parse(&r.to_line()).unwrap();
         assert_eq!(r, r2);
@@ -902,6 +1025,28 @@ mod tests {
         assert_eq!(r.density, 0.5);
         assert_eq!(r.refresh_every, 0, "refresh defaults to off");
         assert_eq!(r.cache, CacheMode::On, "cache defaults to on");
+        assert_eq!(r.tier, Tier::Standard, "tier defaults to standard");
+    }
+
+    #[test]
+    fn tier_parsed_and_validated() {
+        for (s, t) in [
+            ("interactive", Tier::Interactive),
+            ("standard", Tier::Standard),
+            ("batch", Tier::Batch),
+        ] {
+            let line =
+                format!(r#"{{"id":1,"prompt":"x","tier":"{s}"}}"#);
+            assert_eq!(Request::parse(&line).unwrap().tier, t);
+            assert_eq!(Tier::parse(t.as_str()).unwrap(), t);
+        }
+        let err =
+            Request::parse(r#"{"id":1,"prompt":"x","tier":"vip"}"#)
+                .unwrap_err();
+        assert!(err.to_string().contains("tier"), "{err}");
+        // tiers drain interactive-first
+        assert!(Tier::Interactive.rank() < Tier::Standard.rank());
+        assert!(Tier::Standard.rank() < Tier::Batch.rank());
     }
 
     #[test]
@@ -956,6 +1101,9 @@ mod tests {
                 slots_active: 3,
                 slots_prefilling: 1,
                 batch_width: 4,
+                governor_level: 2,
+                degraded_requests: 5,
+                stolen_requests: 0,
             },
             ShardSnapshot {
                 shard: 1,
@@ -963,6 +1111,9 @@ mod tests {
                 slots_active: 0,
                 slots_prefilling: 0,
                 batch_width: 4,
+                governor_level: 0,
+                degraded_requests: 0,
+                stolen_requests: 3,
             },
         ];
         let (id, back, back_shards) =
@@ -1043,6 +1194,8 @@ mod tests {
         ok.cache_hits = 1;
         ok.cache_evictions = 2;
         ok.queue_ms = 0.25;
+        ok.degraded = true;
+        ok.effective_density = 0.35;
         ok.refreshes = 3;
         ok.mask_updates = 1;
         ok.finish = "stop".into();
@@ -1067,6 +1220,11 @@ mod tests {
         assert_eq!(r.cache_evictions, 0);
         assert_eq!(r.refreshes, 0);
         assert_eq!(r.finish, "length");
+        assert!(!r.degraded, "pre-governor lines are never degraded");
+        assert_eq!(
+            r.effective_density, 0.5,
+            "effective density defaults to the reported density"
+        );
     }
 
     // -------------------------------------------------- v2 frames
@@ -1098,6 +1256,7 @@ mod tests {
             max_tokens: 16,
             refresh_every: 4,
             cache: CacheMode::On,
+            tier: Tier::Batch,
         };
         let j = Json::parse(&r.to_v2_frame()).unwrap();
         match v2_frame_from_json(&j).unwrap() {
@@ -1124,6 +1283,7 @@ mod tests {
             max_tokens: 16,
             refresh_every: 4,
             cache: CacheMode::On,
+            tier: Tier::Standard,
         };
         let j = Json::parse(&r.to_v2_resume_frame(12)).unwrap();
         match v2_frame_from_json(&j).unwrap() {

@@ -1,4 +1,5 @@
-//! Request scheduler: FCFS queue feeding the continuous batcher.
+//! Request scheduler: SLO-tier-aware queue feeding the continuous
+//! batcher.
 //!
 //! Two consumption modes:
 //!  * [`Scheduler::next_batch`] — blocking greedy batch formation
@@ -11,6 +12,19 @@
 //!
 //! Slots in the same decode call carry per-slot masks (the [B, L, m]
 //! mask tensor), so heterogeneous strategies batch together.
+//!
+//! **Tier-aware drain order**: both drains hand requests out ordered by
+//! (age-promoted [`Tier`](super::protocol::Tier) rank, arrival index)
+//! — `interactive` ahead of
+//! `standard` ahead of `batch`, strict FCFS *within* a tier. To keep a
+//! sustained interactive burst from starving lower tiers, a queued
+//! request is promoted one rank toward the front for every
+//! [`STARVATION_PROMOTE_MS`] it has waited, so batch work ages into the
+//! interactive rank and then drains FCFS. Reported queue positions
+//! ([`Scheduler::submit`]'s return, [`Scheduler::queued_sessions`]) are
+//! clamped per session to be **monotone non-increasing**: a later
+//! higher-tier arrival may push a session back in *actual* drain order,
+//! but the position it reports never grows.
 //!
 //! **Prefix grouping** (optional): when `prefix_group_bytes > 0`, each
 //! drained batch is stable-reordered so requests sharing at least that
@@ -37,6 +51,13 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::protocol::Request;
+
+/// Milliseconds of queue wait per one-rank promotion toward the front
+/// of the drain order — the anti-starvation clock: a `batch` request
+/// that has waited 2× this is ranked like an `interactive` one (and
+/// then drains FCFS among them), so no tier starves behind a sustained
+/// higher-tier burst.
+pub const STARVATION_PROMOTE_MS: u64 = 250;
 
 /// One control-plane message for a shard's batcher loop, keyed by the
 /// (connection, session id) pair that uniquely names a live session.
@@ -96,6 +117,53 @@ pub struct Pending {
     /// deltas with index < `resume_from`, so the reconnecting client's
     /// stream continues exactly where it broke off. 0 = fresh session.
     pub resume_from: u64,
+    /// The governor already rewrote this request's knobs (degraded
+    /// admission). Sticky across requeues so a re-admission never
+    /// compounds the degradation. Initialize to `false`.
+    pub degraded: bool,
+    /// Lowest queue position ever reported for this session (submit
+    /// `accepted` frame or a `queue` update). Maintained by the
+    /// scheduler so reported positions are monotone non-increasing
+    /// even when tier ordering moves the session back. Initialize to
+    /// `usize::MAX`.
+    pub reported_floor: usize,
+}
+
+/// Drain rank of one queued request right now: its tier rank, promoted
+/// one step toward the front per [`STARVATION_PROMOTE_MS`] waited.
+fn effective_rank(p: &Pending, now: Instant) -> u8 {
+    let waited_ms =
+        now.saturating_duration_since(p.arrived).as_millis() as u64;
+    let promoted = (waited_ms / STARVATION_PROMOTE_MS).min(u64::from(u8::MAX));
+    p.request.tier.rank().saturating_sub(promoted as u8)
+}
+
+/// Queue indices in drain order: ascending (effective rank, arrival
+/// index) — FCFS within a rank, `interactive` first.
+fn drain_order(queue: &VecDeque<Pending>, now: Instant) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..queue.len()).collect();
+    order.sort_by_key(|&i| (effective_rank(&queue[i], now), i));
+    order
+}
+
+/// Remove the first `n` entries of the drain order from the queue,
+/// returning them in drain order; the remainder keeps arrival order
+/// (so FCFS-within-tier is preserved for the next drain).
+fn drain_ordered(st: &mut QueueState, n: usize) -> Vec<Pending> {
+    let n = st.queue.len().min(n);
+    if n == 0 {
+        return Vec::new();
+    }
+    let order = drain_order(&st.queue, Instant::now());
+    let mut items: Vec<Option<Pending>> =
+        st.queue.drain(..).map(Some).collect();
+    let batch: Vec<Pending> = order
+        .iter()
+        .take(n)
+        .filter_map(|&i| items[i].take())
+        .collect();
+    st.queue.extend(items.into_iter().flatten());
+    batch
 }
 
 #[derive(Default)]
@@ -151,20 +219,28 @@ impl Scheduler {
         })
     }
 
-    /// Enqueue a request, returning its position in the queue at
-    /// submission (0 = next to be drained) — the v2 `accepted` frame's
-    /// `queue_pos`. Returns `None` (refusing the request) once the
-    /// queue is closed: after shutdown's drain, nothing will ever
-    /// dequeue again, so enqueueing would strand the session without a
-    /// terminal — the caller must fail it itself (retryably).
+    /// Enqueue a request, returning its position in the tier-aware
+    /// drain order at submission (0 = next to be drained) — the v2
+    /// `accepted` frame's `queue_pos`. An `interactive` request lands
+    /// ahead of queued `batch` work, so its reported position reflects
+    /// what it will actually wait behind. Returns `None` (refusing the
+    /// request) once the queue is closed: after shutdown's drain,
+    /// nothing will ever dequeue again, so enqueueing would strand the
+    /// session without a terminal — the caller must fail it itself
+    /// (retryably).
     #[must_use = "a refused submit must be failed back to the client"]
     pub fn submit(&self, p: Pending) -> Option<usize> {
         let mut st = self.locked();
         if st.closed {
             return None;
         }
-        let pos = st.queue.len();
         st.queue.push_back(p);
+        let idx = st.queue.len() - 1;
+        let order = drain_order(&st.queue, Instant::now());
+        let pos =
+            order.iter().position(|&i| i == idx).unwrap_or(idx);
+        st.queue[idx].reported_floor =
+            st.queue[idx].reported_floor.min(pos);
         self.cv.notify_all();
         Some(pos)
     }
@@ -238,17 +314,40 @@ impl Scheduler {
         self.locked().queue.len()
     }
 
-    /// Snapshot of the queued sessions in queue order:
-    /// `(conn_id, session id, streaming?)` per entry, index = current
-    /// queue position (0 = next to be drained). The batcher diffs
+    /// Snapshot of the queued sessions in tier-aware drain order:
+    /// `(conn_id, session id, streaming?, reported position)` per
+    /// entry. The reported position is the session's drain position
+    /// clamped to never exceed any position previously reported for it
+    /// (`accepted` frame included) — a later higher-tier arrival can
+    /// push a session back in *actual* order, but the position the
+    /// client sees is monotone non-increasing. The batcher diffs
     /// consecutive snapshots to emit v2 `queue` position-update frames
     /// while a session waits for admission.
-    pub fn queued_sessions(&self) -> Vec<(u64, u64, bool)> {
-        self.locked()
-            .queue
-            .iter()
-            .map(|p| (p.conn_id, p.request.id, p.stream))
+    pub fn queued_sessions(&self) -> Vec<(u64, u64, bool, usize)> {
+        let mut st = self.locked();
+        let order = drain_order(&st.queue, Instant::now());
+        order
+            .into_iter()
+            .enumerate()
+            .map(|(pos, i)| {
+                let p = &mut st.queue[i];
+                p.reported_floor = p.reported_floor.min(pos);
+                (p.conn_id, p.request.id, p.stream, p.reported_floor)
+            })
             .collect()
+    }
+
+    /// Age in milliseconds of the oldest queued request (0 when the
+    /// queue is empty) — the governor's queue-age pressure signal (the
+    /// queue maximum is a conservative stand-in for the p95 wait).
+    pub fn oldest_queue_ms(&self) -> f64 {
+        let st = self.locked();
+        let now = Instant::now();
+        st.queue
+            .iter()
+            .map(|p| now.saturating_duration_since(p.arrived))
+            .max()
+            .map_or(0.0, |d| d.as_secs_f64() * 1e3)
     }
 
     /// True when nothing is queued.
@@ -295,17 +394,15 @@ impl Scheduler {
                 break;
             }
         }
-        let n = st.queue.len().min(self.batch_width);
-        let batch = st.queue.drain(..n).collect();
+        let batch = drain_ordered(&mut st, self.batch_width);
         Some(group_by_prefix(batch, self.prefix_group_bytes))
     }
 
-    /// Non-blocking FCFS drain of up to `max` pending requests — the
-    /// continuous batcher's mid-flight admission path.
+    /// Non-blocking tier-aware drain of up to `max` pending requests —
+    /// the continuous batcher's mid-flight admission path.
     pub fn take(&self, max: usize) -> Vec<Pending> {
         let mut st = self.locked();
-        let n = st.queue.len().min(max);
-        let batch: Vec<Pending> = st.queue.drain(..n).collect();
+        let batch = drain_ordered(&mut st, max);
         drop(st);
         group_by_prefix(batch, self.prefix_group_bytes)
     }
@@ -391,6 +488,14 @@ mod tests {
     }
 
     fn req_with_prompt(id: u64, prompt: &str) -> Pending {
+        req_tiered(id, prompt, super::super::protocol::Tier::Standard)
+    }
+
+    fn req_tiered(
+        id: u64,
+        prompt: &str,
+        tier: super::super::protocol::Tier,
+    ) -> Pending {
         Pending {
             request: Request {
                 id,
@@ -401,11 +506,14 @@ mod tests {
                 max_tokens: 4,
                 refresh_every: 0,
                 cache: crate::engine::prefix_cache::CacheMode::On,
+                tier,
             },
             arrived: Instant::now(),
             conn_id: id,
             stream: true,
             resume_from: 0,
+            degraded: false,
+            reported_floor: usize::MAX,
         }
     }
 
@@ -514,17 +622,17 @@ mod tests {
         }
         assert_eq!(
             s.queued_sessions(),
-            vec![(1, 1, true), (2, 2, true), (3, 3, true)],
-            "queue order, conn/session keys, stream flags"
+            vec![(1, 1, true, 0), (2, 2, true, 1), (3, 3, true, 2)],
+            "queue order, conn/session keys, stream flags, positions"
         );
         let _ = s.take(1);
         assert_eq!(
             s.queued_sessions(),
-            vec![(2, 2, true), (3, 3, true)],
+            vec![(2, 2, true, 0), (3, 3, true, 1)],
             "positions shift down as the head drains"
         );
         let _ = s.remove(2, 2);
-        assert_eq!(s.queued_sessions(), vec![(3, 3, true)]);
+        assert_eq!(s.queued_sessions(), vec![(3, 3, true, 0)]);
     }
 
     #[test]
@@ -714,6 +822,117 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         s.close();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn drain_order_is_tier_then_fcfs() {
+        use super::super::protocol::Tier;
+        let s = Scheduler::new(8, Duration::from_millis(1));
+        let subs = [
+            (0, Tier::Batch),
+            (1, Tier::Interactive),
+            (2, Tier::Standard),
+            (3, Tier::Interactive),
+            (4, Tier::Batch),
+        ];
+        for (id, tier) in subs {
+            let _ = s.submit(req_tiered(id, "p", tier));
+        }
+        let ids: Vec<u64> =
+            s.take(10).iter().map(|p| p.request.id).collect();
+        assert_eq!(
+            ids,
+            vec![1, 3, 2, 0, 4],
+            "interactive first, FCFS within each tier"
+        );
+    }
+
+    #[test]
+    fn submit_position_reflects_tier_aware_drain_order() {
+        use super::super::protocol::Tier;
+        let s = Scheduler::new(8, Duration::from_millis(1));
+        assert_eq!(s.submit(req_tiered(0, "p", Tier::Batch)), Some(0));
+        assert_eq!(
+            s.submit(req_tiered(1, "p", Tier::Interactive)),
+            Some(0),
+            "interactive jumps ahead of queued batch work"
+        );
+        assert_eq!(
+            s.submit(req_tiered(2, "p", Tier::Batch)),
+            Some(2),
+            "batch queues behind both"
+        );
+    }
+
+    #[test]
+    fn reported_positions_never_grow_when_higher_tier_arrives() {
+        use super::super::protocol::Tier;
+        let s = Scheduler::new(8, Duration::from_millis(1));
+        let _ = s.submit(req_tiered(1, "p", Tier::Standard));
+        let _ = s.submit(req_tiered(2, "p", Tier::Standard));
+        assert_eq!(
+            s.queued_sessions(),
+            vec![(1, 1, true, 0), (2, 2, true, 1)]
+        );
+        // an interactive arrival reorders the ACTUAL drain, but the
+        // standard sessions' reported positions must not grow
+        let _ = s.submit(req_tiered(3, "p", Tier::Interactive));
+        assert_eq!(
+            s.queued_sessions(),
+            vec![(3, 3, true, 0), (1, 1, true, 0), (2, 2, true, 1)],
+            "clamped: session 1 reports 0 (not 1), session 2 reports 1 \
+             (not 2)"
+        );
+        // draining the interactive one restores truthful positions
+        let ids: Vec<u64> =
+            s.take(1).iter().map(|p| p.request.id).collect();
+        assert_eq!(ids, vec![3]);
+        assert_eq!(
+            s.queued_sessions(),
+            vec![(1, 1, true, 0), (2, 2, true, 1)]
+        );
+    }
+
+    #[test]
+    fn aged_batch_request_is_promoted_past_interactive() {
+        use super::super::protocol::Tier;
+        let s = Scheduler::new(8, Duration::from_millis(1));
+        let mut old = req_tiered(0, "p", Tier::Batch);
+        let Some(back) = Instant::now().checked_sub(
+            Duration::from_millis(2 * STARVATION_PROMOTE_MS + 50),
+        ) else {
+            return; // cannot back-date Instant on this platform
+        };
+        old.arrived = back;
+        let _ = s.submit(old);
+        let _ = s.submit(req_tiered(1, "p", Tier::Interactive));
+        let ids: Vec<u64> =
+            s.take(10).iter().map(|p| p.request.id).collect();
+        assert_eq!(
+            ids,
+            vec![0, 1],
+            "a 2×-promoted batch request ranks interactive and wins \
+             FCFS — no starvation"
+        );
+    }
+
+    #[test]
+    fn oldest_queue_ms_tracks_the_stalest_entry() {
+        let s = Scheduler::new(8, Duration::from_millis(1));
+        assert_eq!(s.oldest_queue_ms(), 0.0, "empty queue → 0");
+        let mut p = req(0);
+        if let Some(back) =
+            Instant::now().checked_sub(Duration::from_millis(300))
+        {
+            p.arrived = back;
+        }
+        let _ = s.submit(p);
+        let _ = s.submit(req(1));
+        assert!(
+            s.oldest_queue_ms() >= 290.0,
+            "max age over the queue: {}",
+            s.oldest_queue_ms()
+        );
     }
 
     #[test]

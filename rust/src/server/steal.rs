@@ -1,0 +1,185 @@
+//! Hot-prefix work-stealing: the bounded cross-shard escape hatch.
+//!
+//! Prefix-affinity routing (`route_shard`) colocates warm cache hits —
+//! and therefore also concentrates a viral prompt on one shard while
+//! its siblings idle. When the governor is enabled, the reactor may
+//! override the router at admission time: if the home shard's pressure
+//! is at or past the steal threshold and a sibling has idle capacity,
+//! the sibling **steals** the request ([`plan_steal`]), and the home
+//! shard's longest matching cached prefix is replicated into the
+//! thief's cache first ([`replicate_prefix`]) so the stolen request
+//! still warm-hits.
+//!
+//! # The bounded crack in "shards never talk"
+//!
+//! This is the first deliberate exception to the shards-never-share
+//! invariant, and it is bounded by construction:
+//!
+//!  * it runs **only at admission time** on a reactor thread — never
+//!    on the per-token decode path;
+//!  * the only shared state is each shard's `Arc<Mutex<PrefixCache>>`
+//!    handle, and the two locks involved are taken **sequentially,
+//!    never nested** (export under the home lock, import under the
+//!    thief lock), so no lock-order cycle exists;
+//!  * replication is copy-only: the home shard's cache is read, never
+//!    mutated, and a failed or skipped import just means the thief
+//!    serves the prompt cold — correctness never depends on the copy.
+
+use std::sync::{Arc, Mutex};
+
+use crate::engine::prefix_cache::PrefixCache;
+
+use super::batcher::lock_cache;
+
+/// One shard's live load as sampled by the reactor at admission time
+/// (queue depth from the scheduler, occupancy from [`ShardGauges`]).
+///
+/// [`ShardGauges`]: super::batcher::ShardGauges
+#[derive(Debug, Clone, Copy)]
+pub struct ShardLoad {
+    /// Requests waiting in the shard's scheduler queue.
+    pub queued: usize,
+    /// Slots currently decoding.
+    pub active: usize,
+    /// Slots streaming a chunked prefill in.
+    pub prefilling: usize,
+    /// The shard's batch width (slot capacity).
+    pub width: usize,
+}
+
+impl ShardLoad {
+    /// Outstanding work per slot of capacity — the same normalization
+    /// the governor's level thresholds use.
+    pub fn pressure(&self) -> f64 {
+        (self.queued + self.active + self.prefilling) as f64
+            / self.width.max(1) as f64
+    }
+
+    /// Can this shard start a newcomer immediately? (empty queue and at
+    /// least one free slot)
+    pub fn has_idle_capacity(&self) -> bool {
+        self.queued == 0 && self.active + self.prefilling < self.width
+    }
+}
+
+/// Decide whether an admission routed to `home` should be stolen:
+/// `Some(thief)` when the home shard's pressure is at or past
+/// `threshold` AND some sibling can start the request immediately —
+/// the least-loaded such sibling (lowest index on ties). `None` keeps
+/// the router's choice (including every single-shard deployment).
+pub fn plan_steal(
+    home: usize,
+    loads: &[ShardLoad],
+    threshold: f64,
+) -> Option<usize> {
+    if loads.len() < 2 {
+        return None;
+    }
+    if loads.get(home)?.pressure() < threshold {
+        return None;
+    }
+    loads
+        .iter()
+        .enumerate()
+        .filter(|&(i, l)| i != home && l.has_idle_capacity())
+        .min_by(|(_, a), (_, b)| a.pressure().total_cmp(&b.pressure()))
+        .map(|(i, _)| i)
+}
+
+/// Replicate the home shard's longest cached prefix of `tokens` into
+/// the thief's cache, so the stolen request warm-hits there. Returns
+/// the replicated prefix length in tokens (0 = home had nothing to
+/// copy, or the copy failed — the thief then serves cold, which is
+/// always correct). Locks are taken one at a time, never nested.
+pub fn replicate_prefix(
+    home: &Arc<Mutex<PrefixCache>>,
+    thief: &Arc<Mutex<PrefixCache>>,
+    tokens: &[i32],
+) -> usize {
+    let best = {
+        let guard = lock_cache(home);
+        if guard.peek_longest(tokens) == 0 {
+            return 0;
+        }
+        // export_hot clones entries, but this path runs only on a
+        // saturated-shard admission (rare by construction), never per
+        // token
+        guard
+            .export_hot()
+            .into_iter()
+            .filter(|(key, _)| tokens.starts_with(key))
+            .max_by_key(|(key, _)| key.len())
+    };
+    let Some((key, seed)) = best else {
+        return 0;
+    };
+    let len = key.len();
+    match lock_cache(thief).import_seed(&key, seed) {
+        // Ok(false) = duplicate (already replicated earlier) or the
+        // thief's budget is full — either way the steal proceeds
+        Ok(_) => len,
+        Err(e) => {
+            crate::warn_!(
+                "hot-prefix replication skipped ({len} tokens): {e}"
+            );
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(queued: usize, active: usize, width: usize) -> ShardLoad {
+        ShardLoad { queued, active, prefilling: 0, width }
+    }
+
+    #[test]
+    fn no_steal_on_single_shard_or_calm_home() {
+        assert_eq!(plan_steal(0, &[load(100, 4, 4)], 2.0), None);
+        let loads = [load(1, 2, 4), load(0, 0, 4)];
+        assert_eq!(
+            plan_steal(0, &loads, 2.0),
+            None,
+            "home pressure 0.75 below threshold"
+        );
+    }
+
+    #[test]
+    fn saturated_home_steals_to_least_loaded_idle_sibling() {
+        let loads = [
+            load(8, 4, 4),  // home: pressure 3.0
+            load(0, 2, 4),  // idle capacity, pressure 0.5
+            load(0, 1, 4),  // idle capacity, pressure 0.25 — least
+            load(3, 4, 4),  // busy: queued → not idle
+        ];
+        assert_eq!(plan_steal(0, &loads, 2.0), Some(2));
+    }
+
+    #[test]
+    fn no_idle_sibling_means_no_steal() {
+        let loads = [
+            load(8, 4, 4), // home saturated
+            load(1, 4, 4), // queued
+            load(0, 4, 4), // full width
+        ];
+        assert_eq!(plan_steal(0, &loads, 2.0), None);
+    }
+
+    #[test]
+    fn ties_break_toward_the_lowest_index() {
+        let loads = [load(9, 4, 4), load(0, 1, 4), load(0, 1, 4)];
+        assert_eq!(plan_steal(0, &loads, 2.0), Some(1));
+    }
+
+    #[test]
+    fn threshold_is_inclusive() {
+        let loads = [load(4, 4, 4), load(0, 0, 4)];
+        assert_eq!(
+            plan_steal(0, &loads, 2.0),
+            Some(1),
+            "pressure exactly at the threshold steals"
+        );
+    }
+}

@@ -196,6 +196,11 @@ const FLOOR_KEYS: &[&str] = &[
     // observable for GLASS masks turning into real FLOP savings)
     "q8_toks_per_s",
     "q8_sparse_speedup_x",
+    // overload-governor row: requests completed inside the fixed wall
+    // window of the synthetic 3x-capacity burst WITH the governor on —
+    // falling below the floor means tiered degradation / work-stealing
+    // stopped buying extra completions under load
+    "governed_completed_requests",
 ];
 
 /// Baseline keys holding latency ceilings (milliseconds): the current
@@ -214,6 +219,10 @@ const CEILING_KEYS: &[&str] = &[
     // with hundreds of resident entries — a ceiling breach means
     // lookups regressed toward entry-count scans again
     "cache_lookup_us_p95",
+    // overload-governor row: p95 queue wait of interactive requests in
+    // the governed burst — a breach means degradation stopped shielding
+    // the latency-sensitive tier from the batch backlog
+    "governed_p95_queue_ms",
 ];
 
 /// Compare a bench JSON document against a baseline. `tol` is the
@@ -644,6 +653,48 @@ mod tests {
             ("cache_lookup_us_p95", 500.0),
         ]);
         assert!(check_regression(&ok, &base, 0.15).passed());
+    }
+
+    #[test]
+    fn gate_enforces_governor_completion_floor_and_queue_ceiling() {
+        // the overload-governor rows: governed completions in the burst
+        // window are a FLOOR (degradation + stealing must keep buying
+        // throughput under load), interactive p95 queue wait a CEILING
+        let base = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("governed_completed_requests", 24.0),
+            ("governed_p95_queue_ms", 4000.0),
+        ]);
+        let fewer_done = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("governed_completed_requests", 12.0),
+            ("governed_p95_queue_ms", 3000.0),
+        ]);
+        let r = check_regression(&fewer_done, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("governed_completed_requests"),
+            "{:?}",
+            r.failures
+        );
+        let slow_interactive = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("governed_completed_requests", 30.0),
+            ("governed_p95_queue_ms", 9000.0),
+        ]);
+        let r = check_regression(&slow_interactive, &base, 0.15);
+        assert!(!r.passed(), "{:?}", r.checked);
+        assert!(
+            r.failures[0].contains("governed_p95_queue_ms"),
+            "{:?}",
+            r.failures
+        );
+        let fine = doc(&[
+            ("continuous_toks_per_s", 1000.0),
+            ("governed_completed_requests", 30.0),
+            ("governed_p95_queue_ms", 2500.0),
+        ]);
+        assert!(check_regression(&fine, &base, 0.15).passed());
     }
 
     #[test]
